@@ -1,0 +1,102 @@
+//! Coordinator demo: start the GP service in-process, then act as a
+//! client — async-fit two models (MKA + SoR), poll the job queue, run
+//! batched predictions from several concurrent client threads, and dump
+//! service metrics.
+//!
+//!     cargo run --release --example gp_server
+
+use std::sync::Arc;
+
+use mka_gp::coordinator::{Client, Router, Server, ServiceConfig};
+use mka_gp::prelude::*;
+
+fn fit_request(model: &str, method: &str, data: &Dataset, k: usize) -> Json {
+    let x: Vec<Json> = (0..data.n()).map(|i| Json::from_f64_slice(data.x.row(i))).collect();
+    Json::obj()
+        .with("op", Json::Str("fit".into()))
+        .with("model", Json::Str(model.into()))
+        .with("method", Json::Str(method.into()))
+        .with("x", Json::Arr(x))
+        .with("y", Json::from_f64_slice(&data.y))
+        .with(
+            "params",
+            Json::obj()
+                .with("lengthscale", Json::Num(0.9))
+                .with("sigma2", Json::Num(0.1))
+                .with("k", Json::Num(k as f64)),
+        )
+        .with("async", Json::Bool(true))
+}
+
+fn main() -> Result<()> {
+    // --- boot the service -------------------------------------------------
+    let cfg = ServiceConfig { port: 0, n_workers: 2, batch_window_ms: 4, ..Default::default() };
+    let router = Arc::new(Router::new(cfg));
+    let server = Server::start(Arc::clone(&router), "127.0.0.1", 0)?;
+    let addr = format!("{}", server.addr());
+    println!("coordinator listening on {addr}");
+
+    // --- client: async fits ------------------------------------------------
+    let data = synth::gp_dataset(&SynthSpec::named("served", 400, 4), 3);
+    let (train, test) = data.split(0.9, 1);
+    let mut client = Client::connect(&addr)?;
+    let mut jobs = Vec::new();
+    for (name, method) in [("gp-mka", "mka"), ("gp-sor", "sor")] {
+        let resp = client.call(&fit_request(name, method, &train, 24))?;
+        let job = resp.usize_field("job_id").expect("job id");
+        println!("submitted fit {name} (method {method}) -> job {job}");
+        jobs.push(job);
+    }
+
+    // --- poll the job queue -------------------------------------------------
+    for job in jobs {
+        loop {
+            let resp = client.call(
+                &Json::obj().with("op", Json::Str("job".into())).with("job_id", Json::Num(job as f64)),
+            )?;
+            let state = resp.str_field("state").unwrap_or("?").to_string();
+            if state == "done" {
+                println!(
+                    "job {job} done in {:.3}s",
+                    resp.num_field("fit_secs").unwrap_or(f64::NAN)
+                );
+                break;
+            }
+            if state == "failed" {
+                println!("job {job} FAILED: {:?}", resp.str_field("error"));
+                break;
+            }
+            std::thread::sleep(std::time::Duration::from_millis(50));
+        }
+    }
+
+    // --- concurrent batched predictions -------------------------------------
+    let handles: Vec<_> = (0..4)
+        .map(|t| {
+            let addr = addr.clone();
+            let test = test.clone();
+            std::thread::spawn(move || -> Result<f64> {
+                let mut c = Client::connect(&addr)?;
+                let lo = t * test.n() / 4;
+                let hi = (t + 1) * test.n() / 4;
+                let x: Vec<Json> =
+                    (lo..hi).map(|i| Json::from_f64_slice(test.x.row(i))).collect();
+                let req = Json::obj()
+                    .with("op", Json::Str("predict".into()))
+                    .with("model", Json::Str("gp-mka".into()))
+                    .with("x", Json::Arr(x));
+                let resp = c.call(&req)?;
+                let mean = resp.get("mean").unwrap().f64_array().unwrap();
+                Ok(smse(&test.y[lo..hi], &mean))
+            })
+        })
+        .collect();
+    for (t, h) in handles.into_iter().enumerate() {
+        println!("client {t}: shard SMSE = {:.4}", h.join().unwrap()?);
+    }
+
+    // --- metrics -------------------------------------------------------------
+    let m = client.call(&Json::obj().with("op", Json::Str("metrics".into())))?;
+    println!("\nservice metrics:\n{}", m.dump_pretty());
+    Ok(())
+}

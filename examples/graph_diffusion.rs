@@ -1,0 +1,78 @@
+//! §4 extension: diffusion kernels on sparse graphs without ever writing
+//! down the dense kernel matrix. MKA factorizes the graph Laplacian once;
+//! Proposition 7 then gives exp(−βL̃)·v (and determinants, powers, …) in
+//! O(n + d³) per application — compare against the dense O(n³) EVD oracle.
+//!
+//!     cargo run --release --example graph_diffusion [-- --n 1500]
+
+use mka_gp::kernels::graph::{diffusion_dense, knn_graph, random_graph};
+use mka_gp::la::gemv;
+use mka_gp::prelude::*;
+use mka_gp::util::Timer;
+
+fn main() -> Result<()> {
+    let args = Args::from_env(false);
+    let n = args.get_usize("n", 1200);
+    let beta = args.get_f64("beta", 0.6);
+    let mut rng = Rng::new(11);
+
+    println!("=== diffusion kernels via MKA (paper §4) ===");
+
+    // --- a sparse kNN graph over clustered points -------------------------
+    let x = mka_gp::data::synth::clustered_features(n, 3, 6, &mut rng);
+    let g = knn_graph(&x, 6, 1.0);
+    let lap = g.laplacian();
+    println!("kNN graph: n={n}, nnz(L)={} ({:.2}% dense)", lap.nnz(),
+        100.0 * lap.nnz() as f64 / (n * n) as f64);
+
+    // --- factorize L (dense view of the sparse Laplacian) -----------------
+    let cfg = MkaConfig { d_core: 64, block_size: 128, ..MkaConfig::default() };
+    let ldense = lap.to_dense();
+    let t = Timer::start();
+    let factor = mka_gp::mka::factorize(&ldense, Some(&x), &cfg)?;
+    println!("MKA(L) in {:.2}s: {} stages, {} stored reals", t.elapsed_secs(),
+        factor.n_stages(), factor.stored_reals());
+
+    // --- diffusion semantics: exp(−βL)·heat-source -------------------------
+    let mut v = vec![0.0; n];
+    v[0] = 1.0;
+    let t = Timer::start();
+    let heat = factor.exp_apply(-beta, &v);
+    let fast_s = t.elapsed_secs();
+    // heat stays a probability-like distribution: mass conserved
+    let mass: f64 = heat.iter().sum();
+    println!("exp(−βL̃)·e0 in {:.4}s; heat mass Σ = {:.4} (exact 1; drift measures truncation of the point source — smooth inputs fare far better, see below)", fast_s, mass);
+
+    // --- compare against the dense oracle at a modest size -----------------
+    let n_small = 400.min(n);
+    let gs = random_graph(n_small, 5.0, &mut rng);
+    let lsd = gs.laplacian().to_dense();
+    let t = Timer::start();
+    let exact = diffusion_dense(&gs, beta);
+    let dense_s = t.elapsed_secs();
+    let factor_s = mka_gp::mka::factorize(&lsd, None, &cfg)?;
+    let mut v = vec![0.0; n_small];
+    v[n_small / 2] = 1.0;
+    let t = Timer::start();
+    let approx = factor_s.exp_apply(-beta, &v);
+    let mka_s = t.elapsed_secs();
+    let exact_v = gemv(&exact, &v);
+    let err = approx
+        .iter()
+        .zip(&exact_v)
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0f64, f64::max);
+    let scale = exact_v.iter().fold(0.0f64, |m, x| m.max(x.abs()));
+    println!(
+        "n={n_small}: dense EVD {:.2}s vs MKA apply {:.5}s; max abs err {:.2e} (scale {:.2e})",
+        dense_s, mka_s, err, scale
+    );
+
+    // --- determinant of the regularized Laplacian --------------------------
+    let mut lreg = lsd.clone();
+    lreg.add_diag(0.5);
+    let f = mka_gp::mka::factorize(&lreg, None, &cfg)?;
+    println!("logdet(L + 0.5I) via Prop. 7: {:.2}", f.logdet()?);
+    println!("done.");
+    Ok(())
+}

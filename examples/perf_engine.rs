@@ -1,0 +1,38 @@
+//! Perf-pass driver for the L1/L2 AOT path: gram-tile and AᵀA throughput
+//! through PJRT vs the native Rust kernels.
+use mka_gp::kernels::gram::rbf_tile_native;
+use mka_gp::la::{syrk_ata, Mat};
+use mka_gp::runtime::engine::XlaEngine;
+use mka_gp::util::{Rng, Timer};
+
+fn main() {
+    let engine = XlaEngine::start(std::path::Path::new("artifacts")).expect("artifacts");
+    let h = engine.handle();
+    let mut rng = Rng::new(1);
+    let t_sz = h.gram_tile_size();
+    let d = h.gram_max_dim();
+    let x = Mat::from_fn(t_sz, d, |_, _| rng.normal());
+    let y = Mat::from_fn(t_sz, d, |_, _| rng.normal());
+    let reps = 50;
+    let t = Timer::start();
+    for _ in 0..reps { std::hint::black_box(h.rbf_tile(&x, &y, 1.0, 1.0).unwrap()); }
+    let xla_s = t.elapsed_secs() / reps as f64;
+    let t = Timer::start();
+    for _ in 0..reps { std::hint::black_box(rbf_tile_native(&x, &y, 1.0, 1.0)); }
+    let nat_s = t.elapsed_secs() / reps as f64;
+    let flops = (t_sz * t_sz * (2 * d + 8)) as f64;
+    println!("gram tile {t_sz}x{t_sz}x{d}: xla {:.1}us ({:.2} GF/s) | native {:.1}us ({:.2} GF/s)",
+        xla_s * 1e6, flops / xla_s / 1e9, nat_s * 1e6, flops / nat_s / 1e9);
+
+    let m = 256;
+    let a = Mat::from_fn(m, m, |_, _| rng.normal());
+    let t = Timer::start();
+    for _ in 0..20 { std::hint::black_box(h.ata(&a).unwrap()); }
+    let xla_s = t.elapsed_secs() / 20.0;
+    let t = Timer::start();
+    for _ in 0..20 { std::hint::black_box(syrk_ata(&a)); }
+    let nat_s = t.elapsed_secs() / 20.0;
+    let flops = (m * m * m) as f64;
+    println!("ata {m}: xla {:.2}ms ({:.2} GF/s) | native {:.2}ms ({:.2} GF/s)",
+        xla_s * 1e3, flops / xla_s / 1e9, nat_s * 1e3, flops / nat_s / 1e9);
+}

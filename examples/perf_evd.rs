@@ -1,0 +1,12 @@
+use mka_gp::la::{Mat, SymEig};
+use mka_gp::util::{Rng, Timer};
+fn main() {
+    let mut rng = Rng::new(1);
+    for n in [256usize, 512, 1024] {
+        let mut a = Mat::from_fn(n, n, |_, _| rng.normal());
+        a.symmetrize();
+        let t = Timer::start();
+        let e = SymEig::new(&a);
+        println!("tql2 n={n}: {:.3}s (max|recon-a| check skipped, λmax={:.2})", t.elapsed_secs(), e.values.last().unwrap());
+    }
+}

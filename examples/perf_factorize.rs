@@ -1,0 +1,32 @@
+//! Perf-pass driver: factorize + matvec/solve on a mid-size kernel matrix.
+use mka_gp::data::synth::{gp_dataset, SynthSpec};
+use mka_gp::kernels::{Kernel, RbfKernel};
+use mka_gp::mka::{factorize, MkaConfig};
+use mka_gp::util::{Args, Rng, Timer};
+
+fn main() {
+    let args = Args::from_env(false);
+    let n = args.get_usize("n", 2048);
+    let reps = args.get_usize("reps", 3);
+    let data = gp_dataset(&SynthSpec::named("perf", n, 4), 5);
+    let t = Timer::start();
+    let mut k = RbfKernel::new(0.8).gram_sym(&data.x);
+    k.add_diag(0.1);
+    println!("gram: {:.2}s", t.elapsed_secs());
+    let cfg = MkaConfig { d_core: 64, block_size: 256, ..MkaConfig::default() };
+    let mut f = None;
+    for _ in 0..reps {
+        let t = Timer::start();
+        f = Some(factorize(&k, Some(&data.x), &cfg).unwrap());
+        println!("factorize: {:.3}s", t.elapsed_secs());
+    }
+    let f = f.unwrap();
+    let mut rng = Rng::new(1);
+    let z = rng.normal_vec(n);
+    let t = Timer::start();
+    for _ in 0..2000 { std::hint::black_box(f.matvec(&z)); }
+    println!("matvec x2000: {:.3}s", t.elapsed_secs());
+    let t = Timer::start();
+    for _ in 0..2000 { std::hint::black_box(f.solve(&z).unwrap()); }
+    println!("solve  x2000: {:.3}s", t.elapsed_secs());
+}

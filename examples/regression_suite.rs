@@ -1,0 +1,177 @@
+//! END-TO-END DRIVER (recorded in EXPERIMENTS.md): exercises every layer
+//! of the stack on a real small workload —
+//!
+//!   1. loads the AOT XLA/Pallas artifacts through PJRT (Layer 1+2) and
+//!      builds the kernel matrix through the tiled engine,
+//!   2. runs the full MKA pipeline (clustering → MMF core-diagonal
+//!      compression → telescoping factor → direct solve) on a Table-1-size
+//!      dataset (Layer 3),
+//!   3. serves batched prediction requests through the coordinator over
+//!      TCP, reporting latency/throughput,
+//!   4. reports SMSE/MNLP against Full GP and SoR at the paper's budget.
+//!
+//!     cargo run --release --example regression_suite [-- --n 2066 --k 16]
+
+use std::sync::Arc;
+
+use mka_gp::baselines::Sor;
+use mka_gp::coordinator::{Client, Router, Server, ServiceConfig};
+use mka_gp::gp::GpModel;
+use mka_gp::kernels::gram::GramBuilder;
+use mka_gp::la::stats::quantile_sorted;
+use mka_gp::prelude::*;
+use mka_gp::runtime::engine::XlaEngine;
+use mka_gp::util::Timer;
+
+fn main() -> Result<()> {
+    let args = Args::from_env(false);
+    let n = args.get_usize("n", 2066); // rupture-size by default
+    let k = args.get_usize("k", 16);
+    let seed = args.get_u64("seed", 42);
+
+    println!("=== mka-gp end-to-end regression suite ===");
+    println!("workload: n={n}, k(d_core)={k}");
+
+    // ------------------------------------------------------------------
+    // 1. AOT artifacts through PJRT (falls back to native with a warning).
+    // ------------------------------------------------------------------
+    let engine = match XlaEngine::start(&mka_gp::runtime::default_artifacts_dir()) {
+        Ok(e) => {
+            println!("[L1/L2] XLA engine up: gram tile {0}x{0}", e.manifest().gram_tile);
+            Some(e)
+        }
+        Err(e) => {
+            println!("[L1/L2] engine unavailable ({e}); native fallback");
+            None
+        }
+    };
+
+    // Broad-spectrum dataset at rupture's (n, d).
+    let spec = SynthSpec { ell_local: 0.4, local_weight: 0.5, ..SynthSpec::named("e2e", n, 8) };
+    let data = synth::gp_dataset(&spec, seed);
+    let (train, test) = data.split(0.9, 1);
+
+    let ell = 0.7;
+    let sigma2 = 0.1;
+
+    // Kernel matrix through the AOT tile engine (the O(n²) hot spot).
+    let t = Timer::start();
+    let builder = GramBuilder::rbf(
+        ell,
+        1.0,
+        engine.as_ref().map(|e| Arc::new(e.handle()) as Arc<dyn mka_gp::kernels::gram::TileEngine>),
+    );
+    let mut kmat = builder.build_sym(&train.x);
+    let gram_s = t.elapsed_secs();
+    println!(
+        "[L2] K ({}x{}) assembled in {:.2}s via {}",
+        kmat.rows,
+        kmat.cols,
+        gram_s,
+        if builder.has_engine() { "AOT XLA tiles" } else { "native kernels" }
+    );
+
+    // ------------------------------------------------------------------
+    // 2. MKA factorization + direct operator algebra.
+    // ------------------------------------------------------------------
+    kmat.add_diag(sigma2);
+    let cfg = MkaConfig { d_core: k, block_size: 128, ..MkaConfig::default() };
+    let t = Timer::start();
+    let factor = mka_gp::mka::factorize(&kmat, Some(&train.x), &cfg)?;
+    let fact_s = t.elapsed_secs();
+    println!(
+        "[L3] MKA factorized in {:.2}s: {} stages, d_core {}, {} stored reals ({}x compression)",
+        fact_s,
+        factor.n_stages(),
+        factor.d_core(),
+        factor.stored_reals(),
+        (kmat.rows * kmat.cols) / factor.stored_reals().max(1)
+    );
+    let t = Timer::start();
+    let alpha = factor.solve(&train.y)?;
+    println!("[L3] direct solve K̃⁻¹y in {:.4}s (‖α‖={:.2})", t.elapsed_secs(),
+        alpha.iter().map(|a| a * a).sum::<f64>().sqrt());
+    println!("[L3] logdet = {:.1}", factor.logdet()?);
+
+    // ------------------------------------------------------------------
+    // 3. Serve through the coordinator; batched predictions over TCP.
+    // ------------------------------------------------------------------
+    let svc = ServiceConfig { port: 0, n_workers: 2, batch_window_ms: 3, ..Default::default() };
+    let router = Arc::new(Router::new(svc));
+    let kern = RbfKernel::new(ell);
+    let model = MkaGp::fit(&train, &kern, sigma2, &cfg)?;
+    router.registry.publish("e2e", Arc::new(model));
+    let server = Server::start(Arc::clone(&router), "127.0.0.1", 0)?;
+    let addr = format!("{}", server.addr());
+    println!("[L3] coordinator on {addr}, model 'e2e' published");
+
+    // Latency measurement: sequential single-batch requests.
+    let mut client = Client::connect(&addr)?;
+    let shard = 32.min(test.n());
+    let mut lats = Vec::new();
+    let t_all = Timer::start();
+    let mut preds: Vec<f64> = Vec::new();
+    let mut vars: Vec<f64> = Vec::new();
+    let mut idx = 0;
+    while idx < test.n() {
+        let hi = (idx + shard).min(test.n());
+        let x: Vec<Json> = (idx..hi).map(|i| Json::from_f64_slice(test.x.row(i))).collect();
+        let req = Json::obj()
+            .with("op", Json::Str("predict".into()))
+            .with("model", Json::Str("e2e".into()))
+            .with("x", Json::Arr(x));
+        let t = Timer::start();
+        let resp = client.call(&req)?;
+        lats.push(t.elapsed_secs());
+        if resp.get("ok") != Some(&Json::Bool(true)) {
+            return Err(Error::Coordinator(format!("predict failed: {resp:?}")));
+        }
+        preds.extend(resp.get("mean").unwrap().f64_array().unwrap());
+        vars.extend(resp.get("var").unwrap().f64_array().unwrap());
+        idx = hi;
+    }
+    let wall = t_all.elapsed_secs();
+    lats.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    println!(
+        "[serve] {} points in {:.2}s  ({:.1} pts/s) | batch latency p50={:.1}ms p95={:.1}ms",
+        test.n(),
+        wall,
+        test.n() as f64 / wall,
+        quantile_sorted(&lats, 0.5) * 1e3,
+        quantile_sorted(&lats, 0.95) * 1e3,
+    );
+
+    // ------------------------------------------------------------------
+    // 4. Accuracy vs Full GP and SoR.
+    // ------------------------------------------------------------------
+    let e_mka = smse(&test.y, &preds);
+    let nl_mka = mnlp(&test.y, &preds, &vars);
+    println!("\n{:<10} {:>8} {:>8} {:>10}", "method", "SMSE", "MNLP", "fit(s)");
+    println!("{:<10} {:>8.4} {:>8.4} {:>10.2}", "MKA", e_mka, nl_mka, fact_s);
+    let t = Timer::start();
+    let sor = Sor::fit(&train, &kern, sigma2, k, seed)?;
+    let sor_fit = t.elapsed_secs();
+    let ps = sor.predict(&test.x);
+    println!(
+        "{:<10} {:>8.4} {:>8.4} {:>10.2}",
+        "SOR",
+        smse(&test.y, &ps.mean),
+        mnlp(&test.y, &ps.mean, &ps.var),
+        sor_fit
+    );
+    if train.n() <= 3000 {
+        let t = Timer::start();
+        let full = FullGp::fit(&train, &kern, sigma2)?;
+        let full_fit = t.elapsed_secs();
+        let pf = full.predict(&test.x);
+        println!(
+            "{:<10} {:>8.4} {:>8.4} {:>10.2}",
+            "Full",
+            smse(&test.y, &pf.mean),
+            mnlp(&test.y, &pf.mean, &pf.var),
+            full_fit
+        );
+    }
+    println!("\nend-to-end suite complete: all three layers exercised.");
+    Ok(())
+}

@@ -1,0 +1,73 @@
+"""AOT lowering: JAX functions -> HLO *text* artifacts + manifest.json.
+
+HLO text (NOT ``lowered.compiler_ir(...).serialize()``) is the interchange
+format: jax >= 0.5 emits HloModuleProto with 64-bit instruction ids which
+the image's xla_extension 0.5.1 (behind the rust ``xla`` crate) rejects
+(``proto.id() <= INT_MAX``). The text parser reassigns ids and round-trips
+cleanly — see /opt/xla-example/README.md.
+
+Usage:  cd python && python -m compile.aot --out-dir ../artifacts
+"""
+
+import argparse
+import hashlib
+import json
+import os
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO module -> XlaComputation -> HLO text."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_all(out_dir: str) -> dict:
+    os.makedirs(out_dir, exist_ok=True)
+    examples = model.example_args()
+    manifest = {
+        "dtype": "f64",
+        "artifacts": {},
+        "shapes": {
+            "gram_tile": {"tile": model.GRAM_TILE, "dim": model.GRAM_DIM},
+            "ata": {"m": model.ATA_M},
+            "chol_solve": {"n": model.CHOL_N},
+        },
+    }
+    for name, fn in model.EXPORTS.items():
+        lowered = jax.jit(fn).lower(*examples[name])
+        text = to_hlo_text(lowered)
+        fname = f"{name}.hlo.txt"
+        path = os.path.join(out_dir, fname)
+        with open(path, "w") as f:
+            f.write(text)
+        manifest["artifacts"][name] = {
+            "file": fname,
+            "n_params": len(examples[name]),
+            "sha256": hashlib.sha256(text.encode()).hexdigest()[:16],
+            "bytes": len(text),
+        }
+        print(f"lowered {name}: {len(text)} chars -> {path}")
+    return manifest
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    args = ap.parse_args()
+    manifest = lower_all(args.out_dir)
+    mpath = os.path.join(args.out_dir, "manifest.json")
+    with open(mpath, "w") as f:
+        json.dump(manifest, f, indent=2, sort_keys=True)
+    print(f"wrote {mpath}")
+
+
+if __name__ == "__main__":
+    main()

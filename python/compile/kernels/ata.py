@@ -1,0 +1,53 @@
+"""Layer-1 Pallas kernel: blocked symmetric Gram product G = A^T A.
+
+This is the leading cost term of the greedy-Jacobi MMF compression
+(paper Prop. 4: "the leading term in the cost is the m^3 cost of computing
+A^T A, but this is a BLAS operation"). The kernel accumulates K-blocks of
+rows into the (M, M) output:
+
+    G = sum_k A[k*B:(k+1)*B, :]^T @ A[k*B:(k+1)*B, :]
+
+Each grid step stages one (B, M) row-panel into VMEM and performs an
+(M, B) x (B, M) MXU contraction — the classic SYRK panel schedule mapped
+onto BlockSpec instead of threadblocks (DESIGN.md "Hardware-Adaptation").
+
+``interpret=True`` for CPU-PJRT executability, as everywhere.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Block-size of the compressed matrix (MKA cluster blocks are <= 256).
+ATA_M = 256
+# Row-panel height per grid step.
+ATA_B = 64
+
+
+def _ata_kernel(a_ref, o_ref):
+    """Grid over row panels; accumulate panel^T @ panel into the output."""
+    k = pl.program_id(0)
+    panel = a_ref[...]  # (B, M) — BlockSpec delivers the k-th row panel
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(panel.T, panel, preferred_element_type=panel.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=())
+def ata(a):
+    """G = A^T A for a fixed-shape (ATA_M, ATA_M) block."""
+    assert a.shape == (ATA_M, ATA_M)
+    grid = (ATA_M // ATA_B,)
+    return pl.pallas_call(
+        _ata_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((ATA_B, ATA_M), lambda k: (k, 0))],
+        out_specs=pl.BlockSpec((ATA_M, ATA_M), lambda k: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((ATA_M, ATA_M), a.dtype),
+        interpret=True,
+    )(a)

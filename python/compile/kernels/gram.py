@@ -1,0 +1,81 @@
+"""Layer-1 Pallas kernel: tiled RBF (Gaussian) gram-matrix tile.
+
+Computes out[i, j] = sf2 * exp(-||x_i - y_j||^2 / (2 * ell^2)) for a tile of
+points, as a single fused kernel:
+
+  * the pairwise-distance contraction ``x @ y.T`` targets the MXU (it is a
+    (T, D) x (D, T) matmul — bf16-friendly on real hardware, f32/f64 here);
+  * the squared-norm broadcast and the ``exp`` run on the VPU in the same
+    kernel invocation, so each tile makes exactly one HBM->VMEM round trip.
+
+The BlockSpec schedule tiles the full gram matrix over an (n/T, m/T) grid;
+both point blocks are staged into VMEM. With T = 128 and D <= 64 in f32,
+the working set per grid step is 2*T*D + T*T floats ~ 128 KiB, far inside
+the ~16 MiB VMEM budget — chosen so that on a real TPU the kernel is
+MXU-bound, not HBM-bound (see DESIGN.md "Hardware-Adaptation").
+
+NOTE: ``interpret=True`` is mandatory here — on CPU the Mosaic lowering
+is unavailable; interpret mode lowers to plain HLO so the AOT artifact can
+be executed by the rust PJRT CPU client.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Tile edge (points per block) and the feature-dim padding target.
+TILE = 128
+MAX_DIM = 32
+
+
+def _gram_tile_kernel(x_ref, y_ref, ell_ref, sf2_ref, o_ref):
+    """One (TILE x TILE) tile: distances via MXU matmul, exp on the VPU."""
+    x = x_ref[...]  # (T, D)
+    y = y_ref[...]  # (T, D)
+    # ||x||^2 + ||y||^2 - 2 x.y — the MXU does the cross term.
+    xx = jnp.sum(x * x, axis=1, keepdims=True)         # (T, 1)
+    yy = jnp.sum(y * y, axis=1, keepdims=True).T       # (1, T)
+    xy = jnp.dot(x, y.T, preferred_element_type=x.dtype)  # (T, T) on MXU
+    d2 = jnp.maximum(xx + yy - 2.0 * xy, 0.0)
+    inv = 1.0 / (2.0 * ell_ref[0] * ell_ref[0])
+    o_ref[...] = sf2_ref[0] * jnp.exp(-d2 * inv)
+
+
+@functools.partial(jax.jit, static_argnames=())
+def gram_tile(x, y, ell, sf2):
+    """RBF gram tile for fixed-shape blocks (TILE, MAX_DIM).
+
+    ``ell``/``sf2`` are shape-(1,) arrays so the lowered HLO takes them as
+    runtime parameters (no recompilation per length scale).
+    """
+    assert x.shape == (TILE, MAX_DIM) and y.shape == (TILE, MAX_DIM)
+    return pl.pallas_call(
+        _gram_tile_kernel,
+        out_shape=jax.ShapeDtypeStruct((TILE, TILE), x.dtype),
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(x, y, ell, sf2)
+
+
+def gram_blocked(x, y, ell, sf2, tile=TILE):
+    """Full gram matrix via the Pallas tile over a python grid.
+
+    Build-time helper (tests, reference lowering of bigger shapes); the
+    rust runtime drives tiling itself and calls the single-tile artifact.
+    """
+    n, d = x.shape
+    m, _ = y.shape
+    pad_n = (-n) % tile
+    pad_m = (-m) % tile
+    pad_d = MAX_DIM - d
+    assert pad_d >= 0, f"feature dim {d} exceeds MAX_DIM={MAX_DIM}"
+    xp = jnp.pad(x, ((0, pad_n), (0, pad_d)))
+    yp = jnp.pad(y, ((0, pad_m), (0, pad_d)))
+    rows = []
+    for i in range(0, n + pad_n, tile):
+        row = []
+        for j in range(0, m + pad_m, tile):
+            row.append(gram_tile(xp[i:i + tile], yp[j:j + tile], ell, sf2))
+        rows.append(jnp.concatenate(row, axis=1))
+    return jnp.concatenate(rows, axis=0)[:n, :m]

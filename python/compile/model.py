@@ -1,0 +1,91 @@
+"""Layer-2 JAX compute graphs — the dense hot spots of MKA-GP, built on the
+Layer-1 Pallas kernels and AOT-lowered by ``aot.py``.
+
+Three exported functions (fixed shapes; the rust runtime pads/tiles):
+
+* ``gram_tile_fn``   — one RBF gram tile (Pallas kernel ``kernels.gram``);
+* ``ata_fn``         — blocked A^T A for MMF compression (``kernels.ata``);
+* ``chol_solve_fn``  — (K + sigma^2 I)^{-1} y at a fixed n, the Full-GP
+                       baseline's solve, exercising XLA's fused
+                       decomposition path end to end.
+
+Everything is float64 (jax_enable_x64): the rust side works in f64 and the
+factorization math is precision sensitive.
+"""
+
+import jax
+import jax.numpy as jnp
+
+jax.config.update("jax_enable_x64", True)
+
+from .kernels import ata as ata_kernel
+from .kernels import gram as gram_kernel
+
+# Fixed AOT shapes (mirrored in artifacts/manifest.json).
+GRAM_TILE = gram_kernel.TILE
+GRAM_DIM = gram_kernel.MAX_DIM
+ATA_M = ata_kernel.ATA_M
+CHOL_N = 512
+
+DTYPE = jnp.float64
+
+
+def gram_tile_fn(x, y, ell, sf2):
+    """One (TILE, TILE) RBF gram tile; returns a 1-tuple for PJRT."""
+    return (gram_kernel.gram_tile(x, y, ell, sf2),)
+
+
+def ata_fn(a):
+    """G = A^T A on a fixed (ATA_M, ATA_M) block."""
+    return (ata_kernel.ata(a),)
+
+
+def chol_solve_fn(k, y, sigma2):
+    """alpha = (K + sigma2*I)^{-1} y, fixed shape (CHOL_N, CHOL_N).
+
+    Implemented with Jacobi-preconditioned conjugate gradients rather than
+    LAPACK Cholesky: ``cho_factor`` lowers to a typed-FFI custom call that
+    the image's xla_extension 0.5.1 (behind the rust ``xla`` crate) cannot
+    compile, while CG lowers to a pure-HLO while loop. CG is exact in at
+    most n steps for an SPD system; with the σ²-regularized kernel it
+    converges to ~1e-12 relative residual long before the iteration cap.
+
+    The rust caller pads K with an identity block (and y with zeros) when
+    n < CHOL_N, which leaves the leading alpha entries exact.
+    """
+    kp = k + sigma2[0] * jnp.eye(CHOL_N, dtype=k.dtype)
+    diag_inv = 1.0 / jnp.diagonal(kp)
+    alpha, _info = jax.scipy.sparse.linalg.cg(
+        lambda v: kp @ v,
+        y,
+        M=lambda v: diag_inv * v,
+        tol=1e-14,
+        maxiter=CHOL_N,
+    )
+    return (alpha,)
+
+
+def example_args():
+    """Concrete example arguments for each exported function."""
+    f64 = lambda shape: jnp.zeros(shape, DTYPE)
+    return {
+        "gram_tile": (
+            f64((GRAM_TILE, GRAM_DIM)),
+            f64((GRAM_TILE, GRAM_DIM)),
+            jnp.ones((1,), DTYPE),
+            jnp.ones((1,), DTYPE),
+        ),
+        "ata": (f64((ATA_M, ATA_M)),),
+        "chol_solve": (
+            f64((CHOL_N, CHOL_N)),
+            f64((CHOL_N,)),
+            jnp.ones((1,), DTYPE),
+        ),
+    }
+
+
+EXPORTS = {
+    "gram_tile": gram_tile_fn,
+    "ata": ata_fn,
+    "chol_solve": chol_solve_fn,
+}

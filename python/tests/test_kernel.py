@@ -1,0 +1,132 @@
+"""Layer-1 correctness: Pallas kernels vs pure-jnp oracles.
+
+Hypothesis sweeps shapes/values; fixed-shape tests cover the exact AOT
+configurations the rust runtime executes.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+jax.config.update("jax_enable_x64", True)
+
+from compile.kernels import ata as ata_kernel
+from compile.kernels import gram as gram_kernel
+from compile.kernels import ref
+
+
+def _rand(shape, seed, scale=1.0):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.normal(size=shape) * scale, dtype=jnp.float64)
+
+
+# ---------------------------------------------------------------------------
+# gram tile
+# ---------------------------------------------------------------------------
+
+
+class TestGramTile:
+    def test_matches_ref_at_aot_shape(self):
+        t, d = gram_kernel.TILE, gram_kernel.MAX_DIM
+        x = _rand((t, d), 0)
+        y = _rand((t, d), 1)
+        out = gram_kernel.gram_tile(x, y, jnp.array([0.8]), jnp.array([1.5]))
+        expected = ref.rbf_gram_ref(x, y, 0.8, 1.5)
+        np.testing.assert_allclose(out, expected, rtol=1e-12, atol=1e-12)
+
+    def test_symmetric_when_x_equals_y(self):
+        t, d = gram_kernel.TILE, gram_kernel.MAX_DIM
+        x = _rand((t, d), 2)
+        out = np.asarray(
+            gram_kernel.gram_tile(x, x, jnp.array([1.0]), jnp.array([1.0]))
+        )
+        np.testing.assert_allclose(out, out.T, rtol=1e-12)
+        np.testing.assert_allclose(np.diag(out), 1.0, rtol=1e-12)
+
+    def test_zero_padding_rows_are_harmless(self):
+        # rust pads short blocks with zero rows; the valid region must be
+        # unaffected.
+        t, d = gram_kernel.TILE, gram_kernel.MAX_DIM
+        x = _rand((t, d), 3)
+        xz = x.at[t // 2 :, :].set(0.0)
+        out = gram_kernel.gram_tile(xz, xz, jnp.array([1.0]), jnp.array([1.0]))
+        expected = ref.rbf_gram_ref(xz[: t // 2], xz[: t // 2], 1.0, 1.0)
+        np.testing.assert_allclose(out[: t // 2, : t // 2], expected, rtol=1e-12)
+
+    def test_lengthscale_is_runtime_parameter(self):
+        t, d = gram_kernel.TILE, gram_kernel.MAX_DIM
+        x = _rand((t, d), 4)
+        y = _rand((t, d), 5)
+        for ell in (0.25, 1.0, 4.0):
+            out = gram_kernel.gram_tile(x, y, jnp.array([ell]), jnp.array([1.0]))
+            expected = ref.rbf_gram_ref(x, y, ell, 1.0)
+            np.testing.assert_allclose(out, expected, rtol=1e-12, atol=1e-12)
+
+    @settings(max_examples=20, deadline=None)
+    @given(
+        seed=st.integers(0, 2**31 - 1),
+        ell=st.floats(0.05, 10.0),
+        sf2=st.floats(0.1, 5.0),
+        scale=st.floats(0.1, 3.0),
+    )
+    def test_hypothesis_values(self, seed, ell, sf2, scale):
+        t, d = gram_kernel.TILE, gram_kernel.MAX_DIM
+        x = _rand((t, d), seed, scale)
+        y = _rand((t, d), seed + 1, scale)
+        out = gram_kernel.gram_tile(x, y, jnp.array([ell]), jnp.array([sf2]))
+        expected = ref.rbf_gram_ref(x, y, ell, sf2)
+        np.testing.assert_allclose(out, expected, rtol=1e-10, atol=1e-12)
+
+    @settings(max_examples=10, deadline=None)
+    @given(
+        n=st.integers(1, 200),
+        m=st.integers(1, 200),
+        d=st.integers(1, gram_kernel.MAX_DIM),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_hypothesis_blocked_shapes(self, n, m, d, seed):
+        # the tiled driver must agree with the oracle for ragged shapes
+        x = _rand((n, d), seed)
+        y = _rand((m, d), seed + 7)
+        out = gram_kernel.gram_blocked(x, y, jnp.array([1.3]), jnp.array([1.0]), tile=gram_kernel.TILE)
+        expected = ref.rbf_gram_ref(x, y, 1.3, 1.0)
+        np.testing.assert_allclose(out, expected, rtol=1e-10, atol=1e-12)
+
+
+# ---------------------------------------------------------------------------
+# A^T A
+# ---------------------------------------------------------------------------
+
+
+class TestAta:
+    def test_matches_ref_at_aot_shape(self):
+        a = _rand((ata_kernel.ATA_M, ata_kernel.ATA_M), 10)
+        out = ata_kernel.ata(a)
+        np.testing.assert_allclose(out, ref.ata_ref(a), rtol=1e-11, atol=1e-11)
+
+    def test_output_symmetric_psd_diag(self):
+        a = _rand((ata_kernel.ATA_M, ata_kernel.ATA_M), 11)
+        out = np.asarray(ata_kernel.ata(a))
+        np.testing.assert_allclose(out, out.T, rtol=1e-11)
+        assert (np.diag(out) >= 0).all()
+
+    def test_zero_padding_is_exact(self):
+        # rust pads smaller blocks with zeros: G of the padded matrix must
+        # embed G of the original.
+        m = ata_kernel.ATA_M
+        a_small = _rand((m // 2, m // 2), 12)
+        a = jnp.zeros((m, m), jnp.float64).at[: m // 2, : m // 2].set(a_small)
+        out = ata_kernel.ata(a)
+        np.testing.assert_allclose(
+            out[: m // 2, : m // 2], ref.ata_ref(a_small), rtol=1e-11, atol=1e-11
+        )
+        np.testing.assert_allclose(out[m // 2 :, :], 0.0, atol=1e-14)
+
+    @settings(max_examples=10, deadline=None)
+    @given(seed=st.integers(0, 2**31 - 1), scale=st.floats(0.01, 10.0))
+    def test_hypothesis_values(self, seed, scale):
+        a = _rand((ata_kernel.ATA_M, ata_kernel.ATA_M), seed, scale)
+        out = ata_kernel.ata(a)
+        np.testing.assert_allclose(out, ref.ata_ref(a), rtol=1e-9, atol=1e-9)

@@ -1,0 +1,103 @@
+//! Bench: coordinator overhead and batching behaviour (E8) — router
+//! dispatch latency, TCP round-trip latency, and the effect of the dynamic
+//! prediction batcher under concurrent clients.
+//!
+//!     cargo bench --bench coordinator_perf [-- --clients 8]
+
+use std::sync::Arc;
+
+use mka_gp::bench::{bench, fmt_secs, Table};
+use mka_gp::coordinator::{Client, Router, Server, ServiceConfig};
+use mka_gp::data::synth::{gp_dataset, SynthSpec};
+use mka_gp::prelude::*;
+use mka_gp::util::Timer;
+
+fn main() {
+    let args = Args::from_env(false);
+    let n_clients = args.get_usize("clients", 8);
+
+    // Service with a published MKA model.
+    let cfg = ServiceConfig { port: 0, n_workers: 2, batch_window_ms: 3, ..Default::default() };
+    let router = Arc::new(Router::new(cfg));
+    let data = gp_dataset(&SynthSpec::named("perf", 600, 4), 3);
+    let (tr, te) = data.split(0.9, 1);
+    let kern = RbfKernel::new(0.8);
+    let model =
+        MkaGp::fit(&tr, &kern, 0.1, &MkaConfig { d_core: 32, block_size: 128, ..Default::default() })
+            .unwrap();
+    router.registry.publish("m", Arc::new(model));
+    let server = Server::start(Arc::clone(&router), "127.0.0.1", 0).unwrap();
+    let addr = format!("{}", server.addr());
+
+    println!("=== Coordinator performance ===\n");
+    let mut table = Table::new(&["op", "p50", "p95", "mean"]);
+
+    // 1. Router dispatch (in-process, no TCP).
+    let ping = Json::parse(r#"{"op":"ping"}"#).unwrap();
+    let st = bench("router-ping", 50, 2000, || {
+        std::hint::black_box(router.handle(&ping));
+    });
+    table.row(&["router ping".into(), fmt_secs(st.p50_s), fmt_secs(st.p95_s), fmt_secs(st.mean_s)]);
+
+    // 2. TCP round trip.
+    let mut client = Client::connect(&addr).unwrap();
+    let st = bench("tcp-ping", 20, 500, || {
+        std::hint::black_box(client.call(&ping).unwrap());
+    });
+    table.row(&["tcp ping".into(), fmt_secs(st.p50_s), fmt_secs(st.p95_s), fmt_secs(st.mean_s)]);
+
+    // 3. Single predict (1 point) over TCP.
+    let one = Json::obj()
+        .with("op", Json::Str("predict".into()))
+        .with("model", Json::Str("m".into()))
+        .with("x", Json::Arr(vec![Json::from_f64_slice(te.x.row(0))]));
+    let st = bench("tcp-predict-1", 3, 20, || {
+        std::hint::black_box(client.call(&one).unwrap());
+    });
+    table.row(&["predict x1".into(), fmt_secs(st.p50_s), fmt_secs(st.p95_s), fmt_secs(st.mean_s)]);
+
+    // 4. Batched predict (32 points) over TCP.
+    let x32: Vec<Json> = (0..32.min(te.n())).map(|i| Json::from_f64_slice(te.x.row(i))).collect();
+    let batch = Json::obj()
+        .with("op", Json::Str("predict".into()))
+        .with("model", Json::Str("m".into()))
+        .with("x", Json::Arr(x32));
+    let st = bench("tcp-predict-32", 3, 15, || {
+        std::hint::black_box(client.call(&batch).unwrap());
+    });
+    table.row(&["predict x32".into(), fmt_secs(st.p50_s), fmt_secs(st.p95_s), fmt_secs(st.mean_s)]);
+    table.print();
+
+    // 5. Concurrent clients: batching amortizes the factorization.
+    println!("\nconcurrent predict ({n_clients} clients × 1 point each):");
+    let t = Timer::start();
+    let handles: Vec<_> = (0..n_clients)
+        .map(|i| {
+            let addr = addr.clone();
+            let row = te.x.row(i % te.n()).to_vec();
+            std::thread::spawn(move || {
+                let mut c = Client::connect(&addr).unwrap();
+                let req = Json::obj()
+                    .with("op", Json::Str("predict".into()))
+                    .with("model", Json::Str("m".into()))
+                    .with("x", Json::Arr(vec![Json::from_f64_slice(&row)]));
+                c.call(&req).unwrap()
+            })
+        })
+        .collect();
+    for h in handles {
+        let resp = h.join().unwrap();
+        assert_eq!(resp.get("ok"), Some(&Json::Bool(true)));
+    }
+    let wall = t.elapsed_secs();
+    let snap = router.metrics.snapshot();
+    let batches = snap.get("counters").and_then(|c| c.num_field("batches")).unwrap_or(0.0);
+    let preds = snap.get("counters").and_then(|c| c.num_field("predictions")).unwrap_or(0.0);
+    println!(
+        "  wall {:.2}s | {} predictions served in {} model calls (batching gain {:.1}x)",
+        wall,
+        preds,
+        batches,
+        preds / batches.max(1.0)
+    );
+}

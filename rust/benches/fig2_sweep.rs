@@ -1,0 +1,68 @@
+//! Bench: regenerate **Figure 2** (main paper + supplement) — SMSE and
+//! MNLP as a function of the number of pseudo-inputs / d_core, per method.
+//! The paper's claim: MKA's error stays nearly flat as the budget shrinks
+//! while the low-rank family degrades quickly.
+//!
+//!     cargo bench --bench fig2_sweep [-- --max-n 1024 --ks 8,16,32,64]
+
+use mka_gp::bench::Table;
+use mka_gp::data::loader::write_table;
+use mka_gp::data::synth::{gp_dataset, SynthSpec};
+use mka_gp::experiments::methods::Method;
+use mka_gp::experiments::sweep::{sweep, to_csv_rows};
+use mka_gp::gp::cv::HyperParams;
+use mka_gp::util::{Args, Timer};
+
+fn main() {
+    let args = Args::from_env(false);
+    let max_n = args.get_usize("max-n", 1024);
+    let ks = args.get_usize_list("ks", &[8, 16, 32, 64, 128]);
+    let seed = args.get_u64("seed", 21);
+    let t = Timer::start();
+
+    // Two datasets, mirroring the paper's "selected datasets": a smoother
+    // one and a strongly local one.
+    let specs = [
+        SynthSpec { ell_local: 0.7, local_weight: 0.35, ..SynthSpec::named("smooth", max_n, 8) },
+        SynthSpec { ell_local: 0.35, local_weight: 0.6, ..SynthSpec::named("local", max_n, 4) },
+    ];
+
+    println!("=== Figure 2: SMSE / MNLP vs #pseudo-inputs (k), n={max_n} ===\n");
+    for spec in &specs {
+        let data = gp_dataset(spec, seed);
+        let hp = HyperParams { lengthscale: 0.6, sigma2: 0.1 };
+        let pts = sweep(&data, &ks, hp, &Method::ALL, seed);
+
+        println!("dataset '{}' (d={}, local_weight={}):", spec.name, spec.d, spec.local_weight);
+        let mut table = Table::new(&["k", "Full", "SOR", "FITC", "PITC", "MEKA", "MKA"]);
+        for &k in &ks {
+            let mut cells = vec![k.to_string()];
+            for m in Method::ALL {
+                let p = pts.iter().find(|p| p.method == m && p.k == k).unwrap();
+                cells.push(match p.mnlp {
+                    Some(nl) if p.smse.is_finite() => format!("{:.2}({:.2})", p.smse, nl),
+                    _ if p.smse.is_finite() => format!("{:.2}(-)", p.smse),
+                    _ => "-".into(),
+                });
+            }
+            table.row(&cells);
+        }
+        table.print();
+
+        // Flatness metric: SMSE(min k) − SMSE(max k) per method.
+        println!("degradation from k={} to k={} (lower = flatter, paper: MKA flattest):",
+            ks.last().unwrap(), ks[0]);
+        for m in Method::ALL {
+            if m == Method::Full {
+                continue; // k-independent
+            }
+            let at = |k: usize| pts.iter().find(|p| p.method == m && p.k == k).unwrap().smse;
+            println!("  {:<5} {:+.3}", m.label(), at(ks[0]) - at(*ks.last().unwrap()));
+        }
+        let (hdr, rows) = to_csv_rows(&pts);
+        let path = format!("results/fig2/{}.csv", spec.name);
+        let _ = write_table(std::path::Path::new(&path), &hdr, &rows);
+        println!("series -> {path}\n");
+    }
+    println!("total {:.1}s", t.elapsed_secs());
+}

@@ -1,0 +1,83 @@
+//! Bench: §4's sparse-kernel claim — diffusion kernels exp(−βL) from a
+//! sparse graph Laplacian. MKA factorizes L once, then exp/logdet are
+//! O(n + d³) (Prop. 7); the dense oracle needs an O(n³) EVD.
+//!
+//!     cargo bench --bench graph_diffusion [-- --sizes 256,512,1024,2048]
+
+use mka_gp::bench::{bench_budget, fmt_secs, Table};
+use mka_gp::data::synth::clustered_features;
+use mka_gp::kernels::graph::{diffusion_dense, knn_graph};
+use mka_gp::la::gemv;
+use mka_gp::mka::{factorize, MkaConfig};
+use mka_gp::util::{Args, Rng, Timer};
+
+fn main() {
+    let args = Args::from_env(false);
+    let sizes = args.get_usize_list("sizes", &[256, 512, 1024, 2048]);
+    let beta = args.get_f64("beta", 0.5);
+
+    println!("=== §4: diffusion kernel exp(−βL) — MKA direct vs dense EVD ===\n");
+    let mut table =
+        Table::new(&["n", "nnz(L)", "factorize", "exp-apply", "dense-EVD", "rel-err", "logdet"]);
+    let mut rng = Rng::new(9);
+    for &n in &sizes {
+        // structured kNN graph over clustered points — the regime where the
+        // "distant clusters interact in a low-rank way" assumption holds
+        // (a uniformly random expander has no multiscale structure and is
+        // MKA's worst case; see the ablation notes in EXPERIMENTS.md)
+        let x = clustered_features(n, 2, 12, &mut rng);
+        let g = knn_graph(&x, 4, 1.0);
+        let lap = g.laplacian();
+        let ld = lap.to_dense();
+        let cfg = MkaConfig { d_core: args.get_usize("d-core", 128), block_size: 64, gamma: 0.6, ..MkaConfig::default() };
+        let t = Timer::start();
+        let f = factorize(&ld, None, &cfg).expect("factorize");
+        let fact_s = t.elapsed_secs();
+
+        // smooth probe vector (diffusion of a smooth field)
+        let v: Vec<f64> = (0..n).map(|i| ((i as f64) * 0.01).sin()).collect();
+        let ap = bench_budget("exp", 0.3, 50, || {
+            std::hint::black_box(f.exp_apply(-beta, &v));
+        });
+
+        // dense oracle (skip at large n; extrapolate cubically)
+        let (dense_s, rel) = if n <= 1024 {
+            let t = Timer::start();
+            let exact = diffusion_dense(&g, beta);
+            let dense_s = t.elapsed_secs();
+            let ev = gemv(&exact, &v);
+            let av = f.exp_apply(-beta, &v);
+            let num: f64 = av.iter().zip(&ev).map(|(a, b)| (a - b) * (a - b)).sum();
+            let den: f64 = ev.iter().map(|x| x * x).sum();
+            (fmt_secs(dense_s), format!("{:.2e}", (num / den.max(1e-300)).sqrt()))
+        } else {
+            ("-".into(), "-".into())
+        };
+
+        let mut lreg = ld.clone();
+        lreg.add_diag(0.1);
+        let freg = factorize(&lreg, None, &cfg).unwrap();
+        let t = Timer::start();
+        let logdet = freg.logdet().unwrap();
+        let ld_s = t.elapsed_secs();
+
+        table.row(&[
+            n.to_string(),
+            lap.nnz().to_string(),
+            fmt_secs(fact_s),
+            fmt_secs(ap.mean_s),
+            dense_s,
+            rel,
+            format!("{logdet:.0} ({})", fmt_secs(ld_s)),
+        ]);
+    }
+    table.print();
+    println!("\nexpected shape: factorize + exp-apply stay near-linear in n while the");
+    println!("dense EVD oracle grows cubically — §4's claim is about *time* (\"can be");
+    println!("approximated in about O(n log n) time\"), which this reproduces.");
+    println!("accuracy note: rel-err is reported for transparency — diffusion weights");
+    println!("the *bottom* of the Laplacian spectrum, whose smooth eigenvectors spread");
+    println!("across blocks; core-diagonal truncation (any compressor) cannot represent");
+    println!("them as independent wavelet diagonals, so pointwise accuracy is limited.");
+    println!("(GP kernels are the opposite regime: the σ² floor protects the inverse.)");
+}

@@ -1,0 +1,161 @@
+//! FITC — Fully Independent Training Conditional (Snelson & Ghahramani
+//! 2005; paper baseline 3, "Sparse GPs using Pseudo-inputs").
+//!
+//! Like SoR but with an exact diagonal correction on the training
+//! conditional: Λ = diag(K_ff − Q_ff) + σ²I. Heals SoR's degenerate
+//! diagonal but still cannot represent off-diagonal short-range structure.
+//!
+//!   A        = W + K_zf Λ⁻¹ K_fz
+//!   mean(x*) = k_zᵀ A⁻¹ K_zf Λ⁻¹ y
+//!   var(x*)  = k** − k_zᵀ W⁻¹ k_z + k_zᵀ A⁻¹ k_z + σ²
+
+use super::nystrom::{select_landmarks, LandmarkMethod, NystromBlocks};
+use crate::data::dataset::Dataset;
+use crate::error::Result;
+use crate::gp::{GpModel, Prediction};
+use crate::kernels::Kernel;
+use crate::la::blas::{dot, gemv};
+use crate::la::chol::{solve_lower, Chol};
+use crate::la::dense::Mat;
+
+/// Fitted FITC model.
+pub struct Fitc {
+    z: Mat,
+    kernel: Box<dyn Kernel>,
+    sigma2: f64,
+    w_chol: Chol,
+    a_chol: Chol,
+    /// β = A⁻¹ K_zf Λ⁻¹ y.
+    beta: Vec<f64>,
+}
+
+impl Fitc {
+    pub fn fit(train: &Dataset, kernel: &dyn Kernel, sigma2: f64, m: usize, seed: u64) -> Result<Fitc> {
+        let z = select_landmarks(&train.x, m, LandmarkMethod::Uniform, seed);
+        Self::fit_with_landmarks(train, kernel, sigma2, z)
+    }
+
+    pub fn fit_with_landmarks(
+        train: &Dataset,
+        kernel: &dyn Kernel,
+        sigma2: f64,
+        z: Mat,
+    ) -> Result<Fitc> {
+        let nb = NystromBlocks::new(train, kernel, z)?;
+        let n = train.n();
+        // Λ_ii = k_ii − q_ii + σ²  (clamped: Nyström roundoff can overshoot)
+        let qd = nb.q_diag();
+        let lam: Vec<f64> = (0..n)
+            .map(|i| (kernel.diag(train.x.row(i)) - qd[i]).max(0.0) + sigma2)
+            .collect();
+        // A = W + K_zf Λ⁻¹ K_fz
+        let m_ = nb.m();
+        let mut a = nb.w.clone();
+        for i in 0..n {
+            let linv = 1.0 / lam[i];
+            let col = nb.kzf.col(i);
+            for r in 0..m_ {
+                let vr = col[r] * linv;
+                if vr == 0.0 {
+                    continue;
+                }
+                let arow = a.row_mut(r);
+                for c in 0..m_ {
+                    arow[c] += vr * col[c];
+                }
+            }
+        }
+        let (a_chol, _) = Chol::new_jittered(&a, 12)?;
+        // rhs = K_zf Λ⁻¹ y
+        let ly: Vec<f64> = train.y.iter().zip(&lam).map(|(y, l)| y / l).collect();
+        let rhs = gemv(&nb.kzf, &ly);
+        let beta = a_chol.solve(&rhs);
+        Ok(Fitc {
+            z: nb.z,
+            kernel: kernel.boxed_clone(),
+            sigma2,
+            w_chol: nb.w_chol,
+            a_chol,
+            beta,
+        })
+    }
+
+    pub fn n_landmarks(&self) -> usize {
+        self.z.rows
+    }
+}
+
+impl GpModel for Fitc {
+    fn predict(&self, x_test: &Mat) -> Prediction {
+        let p = x_test.rows;
+        let mut mean = Vec::with_capacity(p);
+        let mut var = Vec::with_capacity(p);
+        for t in 0..p {
+            let xt = x_test.row(t);
+            let kz = self.kernel.cross(xt, &self.z);
+            mean.push(dot(&kz, &self.beta));
+            let vw = solve_lower(&self.w_chol.l, &kz);
+            let va = solve_lower(&self.a_chol.l, &kz);
+            let kss = self.kernel.diag(xt);
+            let v = kss - dot(&vw, &vw) + dot(&va, &va) + self.sigma2;
+            var.push(v.max(self.sigma2 * 1e-3));
+        }
+        Prediction { mean, var }
+    }
+
+    fn name(&self) -> String {
+        format!("FITC(m={})", self.z.rows)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::{gp_dataset, SynthSpec};
+    use crate::gp::full::FullGp;
+    use crate::gp::metrics::smse;
+    use crate::kernels::RbfKernel;
+
+    #[test]
+    fn all_landmarks_recovers_full_gp() {
+        // With Z = X, Q = K and Λ = σ²I, FITC reduces exactly to the GP.
+        let data = gp_dataset(&SynthSpec::named("t", 80, 2), 1);
+        let (tr, te) = data.split(0.9, 1);
+        let kern = RbfKernel::new(1.0);
+        let fitc = Fitc::fit_with_landmarks(&tr, &kern, 0.1, tr.x.clone()).unwrap();
+        let full = FullGp::fit(&tr, &kern, 0.1).unwrap();
+        let pf = fitc.predict(&te.x);
+        let pg = full.predict(&te.x);
+        for i in 0..te.n() {
+            assert!((pf.mean[i] - pg.mean[i]).abs() < 1e-3, "mean[{i}]");
+            assert!((pf.var[i] - pg.var[i]).abs() < 1e-2, "var[{i}]"); // W-jitter slack
+        }
+    }
+
+    #[test]
+    fn healthy_variance_far_from_data() {
+        // Unlike SoR, FITC keeps the k** term: far away var → k** + σ².
+        let data = gp_dataset(&SynthSpec::named("t", 60, 1), 2);
+        let fitc = Fitc::fit(&data, &RbfKernel::new(0.5), 0.05, 10, 3).unwrap();
+        let far = fitc.predict(&Mat::from_vec(1, 1, vec![1e3]));
+        assert!((far.var[0] - 1.05).abs() < 1e-4, "var={}", far.var[0]);
+    }
+
+    #[test]
+    fn learns_with_few_landmarks() {
+        let data = gp_dataset(&SynthSpec::named("t", 200, 2), 3);
+        let (tr, te) = data.split(0.9, 4);
+        let fitc = Fitc::fit(&tr, &RbfKernel::new(1.5), 0.1, 20, 5).unwrap();
+        let e = smse(&te.y, &fitc.predict(&te.x).mean);
+        assert!(e < 1.05, "SMSE {e}");
+    }
+
+    #[test]
+    fn variances_positive() {
+        let data = gp_dataset(&SynthSpec::named("t", 100, 3), 4);
+        let fitc = Fitc::fit(&data, &RbfKernel::new(1.0), 0.1, 16, 6).unwrap();
+        for v in fitc.predict(&data.x).var {
+            assert!(v > 0.0);
+        }
+    }
+}

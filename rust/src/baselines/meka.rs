@@ -1,0 +1,388 @@
+//! MEKA — Memory Efficient Kernel Approximation (Si, Hsieh & Dhillon,
+//! ICML 2014; paper baseline 5).
+//!
+//! Cluster the points, take a rank-r_i eigenbasis U_i of each diagonal
+//! block, and approximate every off-diagonal block as U_i L_ij U_jᵀ where
+//! the link matrix L_ij is estimated from a *subsample* of the block's
+//! rows/columns (that subsampling is MEKA's memory win — and the reason
+//! K̃ can lose positive semi-definiteness, which the paper's supplement
+//! reports as MEKA failing on some datasets; we reproduce exactly that
+//! failure mode and surface it via [`Meka::is_spsd`]).
+//!
+//! GP algebra: with U orthonormal (block-diagonal eigenvector matrix),
+//! (K̃ + σ²I)⁻¹ = U (σ²I + L)⁻¹ Uᵀ + σ⁻² (I − U Uᵀ) exactly.
+
+use crate::cluster::{cluster_rows, ClusterMethod};
+use crate::data::dataset::Dataset;
+use crate::error::{Error, Result};
+use crate::gp::{GpModel, Prediction};
+use crate::kernels::Kernel;
+use crate::la::blas::{dot, gemm, gemm_tn, gemv, gemv_t};
+use crate::la::dense::Mat;
+use crate::la::evd::SymEig;
+use crate::la::lu::Lu;
+use crate::util::Rng;
+
+/// MEKA configuration.
+#[derive(Clone, Debug)]
+pub struct MekaConfig {
+    /// Total rank budget (the paper compares at rank = #pseudo-inputs).
+    pub rank: usize,
+    /// Number of clusters.
+    pub n_clusters: usize,
+    /// Fraction of each block's rows sampled when estimating link matrices
+    /// (ν in Si et al.) — smaller is cheaper but risks losing spsd-ness.
+    pub sample_frac: f64,
+    pub seed: u64,
+}
+
+impl MekaConfig {
+    pub fn new(rank: usize) -> MekaConfig {
+        MekaConfig { rank, n_clusters: 4, sample_frac: 0.5, seed: 42 }
+    }
+}
+
+/// Fitted MEKA GP model.
+pub struct Meka {
+    train_x: Mat,
+    kernel: Box<dyn Kernel>,
+    sigma2: f64,
+    /// Cluster membership (global row indices per cluster).
+    clusters: Vec<Vec<usize>>,
+    /// Per-cluster orthonormal bases U_i (m_i × r_i).
+    bases: Vec<Mat>,
+    /// Dense link matrix L (q×q, q = Σ r_i) in block layout.
+    link: Mat,
+    /// LU of (σ²I + L).
+    inner_lu: Option<Lu>,
+    /// α = (K̃ + σ²I)⁻¹ y (Woodbury form; kept for diagnostics/fallback).
+    alpha: Vec<f64>,
+    /// (σ²I + L)⁻¹ Uᵀ y — the consistent-predictor weights.
+    uty_inner: Vec<f64>,
+    /// Whether K̃ + σ²I is positive definite (MEKA can lose this).
+    spsd_ok: bool,
+}
+
+impl Meka {
+    pub fn fit(train: &Dataset, kernel: &dyn Kernel, sigma2: f64, cfg: &MekaConfig) -> Result<Meka> {
+        let n = train.n();
+        let mut rng = Rng::new(cfg.seed ^ 0x4d45_4b41);
+        let c = cfg.n_clusters.clamp(1, cfg.rank.max(1));
+        let clustering = cluster_rows(
+            ClusterMethod::KMeans,
+            Some(&train.x),
+            None,
+            n,
+            n.div_ceil(c).max(1),
+            &mut rng,
+        );
+        let clusters = clustering.clusters.clone();
+        let nc = clusters.len();
+
+        // ---- rank split proportional to cluster size ----------------------
+        let ranks: Vec<usize> = clusters
+            .iter()
+            .map(|cl| {
+                (((cfg.rank as f64) * (cl.len() as f64) / (n as f64)).round() as usize)
+                    .clamp(1, cl.len())
+            })
+            .collect();
+        let q: usize = ranks.iter().sum();
+
+        // ---- per-cluster eigenbases ---------------------------------------
+        let mut bases = Vec::with_capacity(nc);
+        for (cl, &r) in clusters.iter().zip(&ranks) {
+            let kb = kernel.gram_sym(&train.x.gather_rows(cl));
+            let eig = SymEig::new(&kb);
+            let m = cl.len();
+            // top-r eigenvectors (largest eigenvalues are at the end)
+            let mut u = Mat::zeros(m, r);
+            for k in 0..r {
+                let col = m - 1 - k;
+                for i in 0..m {
+                    u.set(i, k, eig.vectors.at(i, col));
+                }
+            }
+            bases.push(u);
+        }
+
+        // ---- link matrices --------------------------------------------------
+        // offsets of each cluster's columns inside L
+        let mut offs = vec![0usize; nc + 1];
+        for i in 0..nc {
+            offs[i + 1] = offs[i] + ranks[i];
+        }
+        let mut link = Mat::zeros(q, q);
+        for i in 0..nc {
+            for j in i..nc {
+                let lij = if i == j {
+                    // Λ_i = U_iᵀ K_ii U_i (diagonal of top eigenvalues)
+                    let kb = kernel.gram_sym(&train.x.gather_rows(&clusters[i]));
+                    gemm_tn(&bases[i], &gemm(&kb, &bases[i]))
+                } else {
+                    // Subsampled estimation:
+                    //   L_ij = pinv(U_i[S_i]) K[S_i, S_j] pinv(U_j[S_j])ᵀ
+                    let si = sample_rows(&clusters[i], ranks[i], cfg.sample_frac, &mut rng);
+                    let sj = sample_rows(&clusters[j], ranks[j], cfg.sample_frac, &mut rng);
+                    let ui_s = gather_local(&bases[i], &clusters[i], &si);
+                    let uj_s = gather_local(&bases[j], &clusters[j], &sj);
+                    let kss = kernel.gram(&train.x.gather_rows(&si), &train.x.gather_rows(&sj));
+                    // pinv via regularized normal equations
+                    let pi = pinv_apply(&ui_s, &kss); // r_i × |sj|
+                    pinv_apply(&uj_s, &pi.transpose()).transpose()
+                };
+                // write block (and mirror)
+                for a in 0..ranks[i] {
+                    for b in 0..ranks[j] {
+                        link.set(offs[i] + a, offs[j] + b, lij.at(a, b));
+                        link.set(offs[j] + b, offs[i] + a, lij.at(a, b));
+                    }
+                }
+            }
+        }
+        link.symmetrize();
+
+        // ---- inner system (σ²I + L) ---------------------------------------
+        let mut inner = link.clone();
+        inner.add_diag(sigma2);
+        let spsd_ok = SymEig::new(&inner).values[0] > 0.0;
+        let inner_lu = Lu::new(&inner).ok();
+
+        // ---- α = (K̃+σ²I)⁻¹ y = U(σ²I+L)⁻¹Uᵀy + σ⁻²(y − UUᵀy) -------------
+        let uty = apply_ut(&bases, &clusters, offs[nc], &train.y);
+        let (alpha, uty_inner) = match &inner_lu {
+            Some(lu) => {
+                let inner_sol = lu.solve(&uty);
+                let u_inner = apply_u(&bases, &clusters, n, &inner_sol);
+                let u_uty = apply_u(&bases, &clusters, n, &uty);
+                let alpha = (0..n)
+                    .map(|i| u_inner[i] + (train.y[i] - u_uty[i]) / sigma2)
+                    .collect();
+                (alpha, inner_sol)
+            }
+            None => {
+                return Err(Error::Linalg(
+                    "MEKA inner system singular — approximation unusable".into(),
+                ))
+            }
+        };
+
+        Ok(Meka {
+            train_x: train.x.clone(),
+            kernel: kernel.boxed_clone(),
+            sigma2,
+            clusters,
+            bases,
+            link,
+            inner_lu,
+            alpha,
+            uty_inner,
+            spsd_ok,
+        })
+    }
+
+    /// Did the approximation stay positive definite? (The paper's
+    /// supplement drops MEKA results exactly when this fails.)
+    pub fn is_spsd(&self) -> bool {
+        self.spsd_ok
+    }
+
+    /// Dense K̃ reconstruction (tests / small n).
+    pub fn dense_approx(&self) -> Mat {
+        let n = self.train_x.rows;
+        let q = self.link.rows;
+        let mut out = Mat::zeros(n, n);
+        // K̃ = U L Uᵀ
+        for j in 0..n {
+            let mut e = vec![0.0; n];
+            e[j] = 1.0;
+            let ut_e = apply_ut(&self.bases, &self.clusters, q, &e);
+            let l_ut = gemv(&self.link, &ut_e);
+            let col = apply_u(&self.bases, &self.clusters, n, &l_ut);
+            for i in 0..n {
+                out.set(i, j, col[i]);
+            }
+        }
+        out.symmetrize();
+        out
+    }
+}
+
+/// Uᵀ v with block-diagonal U.
+fn apply_ut(bases: &[Mat], clusters: &[Vec<usize>], q: usize, v: &[f64]) -> Vec<f64> {
+    let mut out = Vec::with_capacity(q);
+    for (u, cl) in bases.iter().zip(clusters) {
+        let sub: Vec<f64> = cl.iter().map(|&i| v[i]).collect();
+        out.extend(gemv_t(u, &sub));
+    }
+    out
+}
+
+/// U w with block-diagonal U.
+fn apply_u(bases: &[Mat], clusters: &[Vec<usize>], n: usize, w: &[f64]) -> Vec<f64> {
+    let mut out = vec![0.0; n];
+    let mut off = 0;
+    for (u, cl) in bases.iter().zip(clusters) {
+        let r = u.cols;
+        let sub = gemv(u, &w[off..off + r]);
+        for (&i, &s) in cl.iter().zip(sub.iter()) {
+            out[i] = s;
+        }
+        off += r;
+    }
+    out
+}
+
+/// Sample ≥ rank+2 (or frac·m) member rows of a cluster.
+fn sample_rows(cluster: &[usize], rank: usize, frac: f64, rng: &mut Rng) -> Vec<usize> {
+    let m = cluster.len();
+    let want = (((m as f64) * frac).ceil() as usize).clamp((rank + 2).min(m), m);
+    let picks = rng.sample_indices(m, want);
+    picks.into_iter().map(|p| cluster[p]).collect()
+}
+
+/// Rows of a cluster basis corresponding to globally sampled indices.
+fn gather_local(u: &Mat, cluster: &[usize], sampled: &[usize]) -> Mat {
+    let pos: std::collections::HashMap<usize, usize> =
+        cluster.iter().enumerate().map(|(a, &g)| (g, a)).collect();
+    let local: Vec<usize> = sampled.iter().map(|g| pos[g]).collect();
+    u.gather_rows(&local)
+}
+
+/// pinv(A)·B with ridge-regularized normal equations:
+/// (AᵀA + εI)⁻¹ Aᵀ B, A is s×r with s ≥ r.
+fn pinv_apply(a: &Mat, b: &Mat) -> Mat {
+    let mut ata = gemm_tn(a, a);
+    let eps = 1e-8 * ata.diagonal().iter().fold(1e-12f64, |m, &v| m.max(v));
+    ata.add_diag(eps);
+    let atb = gemm_tn(a, b);
+    match crate::la::chol::Chol::new(&ata) {
+        Ok(ch) => ch.solve_mat(&atb),
+        Err(_) => atb, // degenerate; fall back to projection
+    }
+}
+
+impl GpModel for Meka {
+    fn predict(&self, x_test: &Mat) -> Prediction {
+        let p = x_test.rows;
+        let n = self.train_x.rows;
+        let q = self.link.rows;
+        let mut mean = Vec::with_capacity(p);
+        let mut var = Vec::with_capacity(p);
+        for t in 0..p {
+            let xt = x_test.row(t);
+            let kx = self.kernel.cross(xt, &self.train_x);
+            // Consistent (projected) estimator: the cross-covariance is
+            // approximated with the same projection as K̃ = UUᵀK UUᵀ, so
+            //   mean = k̃*ᵀ(K̃+σ²I)⁻¹y = (Uᵀk*)ᵀ(σ²I+L)⁻¹ Uᵀy.
+            // Using exact k* against the approximate inverse amplifies the
+            // projection residual by 1/σ² — same inconsistency the paper
+            // fixes for MKA in §4.1, applied here in its Nyström-style form.
+            let ut_k = apply_ut(&self.bases, &self.clusters, q, &kx);
+            let v = match &self.inner_lu {
+                Some(lu) => {
+                    let inner = lu.solve(&ut_k);
+                    mean.push(dot(&self.uty_inner, &ut_k));
+                    // var = k** − k̃*ᵀ(K̃+σ²I)⁻¹k̃* + σ²
+                    let term_u = dot(&ut_k, &inner);
+                    self.kernel.diag(xt) - term_u + self.sigma2
+                }
+                None => {
+                    mean.push(dot(&kx, &self.alpha));
+                    f64::NAN
+                }
+            };
+            // When spsd is lost the quadratic form can exceed k**: the
+            // "negative variance" signature. Keep it visible (NaN) rather
+            // than silently clamping — the Table-1 harness reports a dash,
+            // mirroring the paper's supplement.
+            var.push(if self.spsd_ok { v.max(self.sigma2 * 1e-3) } else { f64::NAN });
+            let _ = n;
+        }
+        Prediction { mean, var }
+    }
+
+    fn name(&self) -> String {
+        format!("MEKA(r={})", self.link.rows)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::{gp_dataset, SynthSpec};
+    use crate::gp::metrics::smse;
+    use crate::kernels::RbfKernel;
+
+    fn cfg(rank: usize, clusters: usize, frac: f64) -> MekaConfig {
+        MekaConfig { rank, n_clusters: clusters, sample_frac: frac, seed: 11 }
+    }
+
+    #[test]
+    fn approximates_kernel_matrix() {
+        let data = gp_dataset(&SynthSpec::named("t", 80, 2), 1);
+        let kern = RbfKernel::new(2.0);
+        let meka = Meka::fit(&data, &kern, 0.1, &cfg(24, 3, 1.0)).unwrap();
+        let k = kern.gram_sym(&data.x);
+        let ka = meka.dense_approx();
+        let rel = ka.sub(&k).frob_norm() / k.frob_norm();
+        assert!(rel < 0.5, "rel={rel}");
+    }
+
+    #[test]
+    fn full_rank_single_cluster_is_near_exact() {
+        let data = gp_dataset(&SynthSpec::named("t", 40, 2), 2);
+        let kern = RbfKernel::new(1.0);
+        let meka = Meka::fit(&data, &kern, 0.1, &cfg(40, 1, 1.0)).unwrap();
+        let k = kern.gram_sym(&data.x);
+        let rel = meka.dense_approx().sub(&k).frob_norm() / k.frob_norm();
+        assert!(rel < 1e-6, "rel={rel}");
+        assert!(meka.is_spsd());
+    }
+
+    #[test]
+    fn learns_regression() {
+        let data = gp_dataset(&SynthSpec::named("t", 200, 2), 3);
+        let (tr, te) = data.split(0.9, 4);
+        let meka = Meka::fit(&tr, &RbfKernel::new(1.5), 0.1, &cfg(24, 3, 1.0)).unwrap();
+        let e = smse(&te.y, &meka.predict(&te.x).mean);
+        assert!(e < 1.05, "SMSE {e}");
+    }
+
+    #[test]
+    fn aggressive_subsampling_can_lose_spsd_but_flags_it() {
+        // With harsh subsampling the link estimation noise can push
+        // σ²I + L indefinite; whether it does is data dependent — what we
+        // require is that the flag and the NaN-variance contract hold.
+        let data = gp_dataset(&SynthSpec::named("t", 150, 4), 5);
+        let meka = Meka::fit(&data, &RbfKernel::new(0.4), 0.01, &cfg(40, 5, 0.15));
+        if let Ok(m) = meka {
+            let pred = m.predict(&data.x.block(0, 5, 0, 4));
+            if m.is_spsd() {
+                assert!(pred.var.iter().all(|v| v.is_finite()));
+            } else {
+                assert!(pred.var.iter().all(|v| v.is_nan()));
+            }
+        } // an Err is also an acceptable signature of the failure mode
+    }
+
+    #[test]
+    fn woodbury_identity_against_dense() {
+        // α from the orthonormal-U Woodbury form must equal the dense solve.
+        let data = gp_dataset(&SynthSpec::named("t", 50, 2), 6);
+        let kern = RbfKernel::new(1.0);
+        let meka = Meka::fit(&data, &kern, 0.2, &cfg(20, 2, 1.0)).unwrap();
+        let mut kt = meka.dense_approx();
+        kt.add_diag(0.2);
+        let chol = crate::la::chol::Chol::new_jittered(&kt, 10).unwrap().0;
+        let alpha_dense = chol.solve(&data.y);
+        for i in 0..50 {
+            assert!(
+                (alpha_dense[i] - meka.alpha[i]).abs() < 1e-5,
+                "i={i}: {} vs {}",
+                alpha_dense[i],
+                meka.alpha[i]
+            );
+        }
+    }
+}

@@ -1,0 +1,15 @@
+//! The paper's five comparison methods, reimplemented from their defining
+//! equations (§5): SoR/DTC, FITC, PITC (the Nyström family, sharing
+//! [`nystrom`]) and MEKA (block low rank). "Full" lives in
+//! [`crate::gp::full`].
+
+pub mod fitc;
+pub mod meka;
+pub mod nystrom;
+pub mod pitc;
+pub mod sor;
+
+pub use fitc::Fitc;
+pub use meka::{Meka, MekaConfig};
+pub use pitc::Pitc;
+pub use sor::Sor;

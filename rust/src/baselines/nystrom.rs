@@ -1,0 +1,160 @@
+//! Shared Nyström machinery: landmark ("pseudo-input") selection and the
+//! common K_zz / K_zf blocks used by SoR, FITC and PITC.
+
+use crate::data::dataset::Dataset;
+use crate::kernels::Kernel;
+use crate::la::chol::Chol;
+use crate::la::dense::Mat;
+use crate::util::Rng;
+
+/// Landmark selection strategy.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum LandmarkMethod {
+    /// Uniform random subset of the training points (the classic choice).
+    Uniform,
+    /// k-means cluster centres (often tighter bounds; Zhang & Kwok style).
+    KMeansCenters,
+}
+
+/// Select `m` landmark points from the training inputs.
+pub fn select_landmarks(x: &Mat, m: usize, method: LandmarkMethod, seed: u64) -> Mat {
+    let m = m.clamp(1, x.rows);
+    let mut rng = Rng::new(seed ^ 0x4c4d4b);
+    match method {
+        LandmarkMethod::Uniform => {
+            let idx = rng.sample_indices(x.rows, m);
+            x.gather_rows(&idx)
+        }
+        LandmarkMethod::KMeansCenters => {
+            let clustering = crate::cluster::kmeans::kmeans(x, m, 25, &mut rng);
+            // centroid of each cluster
+            let mut z = Mat::zeros(clustering.n_clusters(), x.cols);
+            for (c, members) in clustering.clusters.iter().enumerate() {
+                let inv = 1.0 / members.len() as f64;
+                for &i in members {
+                    let row = x.row(i);
+                    let zrow = z.row_mut(c);
+                    for j in 0..x.cols {
+                        zrow[j] += row[j] * inv;
+                    }
+                }
+            }
+            z
+        }
+    }
+}
+
+/// The shared Nyström blocks for a training set and landmark set.
+pub struct NystromBlocks {
+    /// Landmark points (m×d).
+    pub z: Mat,
+    /// W = K(Z, Z) with a hair of jitter for stability.
+    pub w: Mat,
+    /// Cholesky of W.
+    pub w_chol: Chol,
+    /// K(Z, X) (m×n).
+    pub kzf: Mat,
+}
+
+impl NystromBlocks {
+    pub fn new(train: &Dataset, kernel: &dyn Kernel, z: Mat) -> crate::error::Result<NystromBlocks> {
+        let mut w = kernel.gram_sym(&z);
+        let (w_chol, _j) = Chol::new_jittered(&w, 12)?;
+        // keep the jitter that made it factorizable
+        if _j > 0.0 {
+            w.add_diag(_j);
+        }
+        let kzf = kernel.gram(&z, &train.x);
+        Ok(NystromBlocks { z, w, w_chol, kzf })
+    }
+
+    pub fn m(&self) -> usize {
+        self.z.rows
+    }
+
+    /// q_ii = k_z(x_i)ᵀ W⁻¹ k_z(x_i) — diagonal of the Nyström approximant
+    /// (needed by FITC's diagonal correction).
+    pub fn q_diag(&self) -> Vec<f64> {
+        let n = self.kzf.cols;
+        (0..n)
+            .map(|i| {
+                let kz = self.kzf.col(i);
+                let v = crate::la::chol::solve_lower(&self.w_chol.l, &kz);
+                crate::la::blas::dot(&v, &v)
+            })
+            .collect()
+    }
+
+    /// Q(X, X) block between index sets a, b: K_za' W⁻¹ K_zb (for PITC).
+    pub fn q_block(&self, a: &[usize], b: &[usize]) -> Mat {
+        let all_rows: Vec<usize> = (0..self.m()).collect();
+        let kza = self.kzf.gather(&all_rows, a); // m×|a|
+        let kzb = self.kzf.gather(&all_rows, b); // m×|b|
+        let winv_kzb = self.w_chol.solve_mat(&kzb);
+        crate::la::blas::gemm_tn(&kza, &winv_kzb)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::{gp_dataset, SynthSpec};
+    use crate::kernels::RbfKernel;
+
+    fn setup() -> (Dataset, RbfKernel) {
+        (gp_dataset(&SynthSpec::named("t", 80, 2), 1), RbfKernel::new(1.0))
+    }
+
+    #[test]
+    fn uniform_landmarks_are_training_rows() {
+        let (d, _) = setup();
+        let z = select_landmarks(&d.x, 10, LandmarkMethod::Uniform, 1);
+        assert_eq!(z.rows, 10);
+        assert_eq!(z.cols, d.dim());
+    }
+
+    #[test]
+    fn kmeans_landmarks_shape() {
+        let (d, _) = setup();
+        let z = select_landmarks(&d.x, 8, LandmarkMethod::KMeansCenters, 2);
+        assert!(z.rows <= 8 && z.rows >= 1);
+        assert_eq!(z.cols, d.dim());
+    }
+
+    #[test]
+    fn blocks_shapes_and_qdiag_bounds() {
+        let (d, k) = setup();
+        let z = select_landmarks(&d.x, 12, LandmarkMethod::Uniform, 3);
+        let nb = NystromBlocks::new(&d, &k, z).unwrap();
+        assert_eq!(nb.kzf.rows, 12);
+        assert_eq!(nb.kzf.cols, 80);
+        // Nyström is an underestimate of the diagonal: 0 ≤ q_ii ≤ k_ii.
+        for q in nb.q_diag() {
+            assert!(q >= -1e-9 && q <= 1.0 + 1e-6, "q={q}");
+        }
+    }
+
+    #[test]
+    fn q_block_consistent_with_qdiag() {
+        let (d, k) = setup();
+        let z = select_landmarks(&d.x, 12, LandmarkMethod::Uniform, 4);
+        let nb = NystromBlocks::new(&d, &k, z).unwrap();
+        let idx: Vec<usize> = (0..5).collect();
+        let qb = nb.q_block(&idx, &idx);
+        let qd = nb.q_diag();
+        for i in 0..5 {
+            assert!((qb.at(i, i) - qd[i]).abs() < 1e-8);
+        }
+    }
+
+    #[test]
+    fn landmarks_all_points_makes_q_exact() {
+        let (d, k) = setup();
+        let nb = NystromBlocks::new(&d, &k, d.x.clone()).unwrap();
+        let qd = nb.q_diag();
+        for (i, q) in qd.iter().enumerate() {
+            let kii = k.diag(d.x.row(i));
+            assert!((q - kii).abs() < 1e-4, "i={i} q={q} k={kii}");
+        }
+    }
+}

@@ -1,0 +1,190 @@
+//! PITC — Partially Independent Training Conditional (Quiñonero-Candela &
+//! Rasmussen 2005; paper baseline 4, equals PTC in the mean).
+//!
+//! FITC's diagonal correction upgraded to a **block-diagonal** one: the
+//! training points are clustered; within a block the conditional keeps the
+//! exact covariance, across blocks it is Nyström. Same algebra as FITC
+//! with Λ = blockdiag(K_bb − Q_bb) + σ²I.
+
+use super::nystrom::{select_landmarks, LandmarkMethod, NystromBlocks};
+use crate::cluster::{cluster_rows, ClusterMethod};
+use crate::data::dataset::Dataset;
+use crate::error::Result;
+use crate::gp::{GpModel, Prediction};
+use crate::kernels::Kernel;
+use crate::la::blas::{dot, gemm};
+use crate::la::chol::{solve_lower, Chol};
+use crate::la::dense::Mat;
+use crate::util::Rng;
+
+/// Fitted PITC model.
+pub struct Pitc {
+    z: Mat,
+    kernel: Box<dyn Kernel>,
+    sigma2: f64,
+    w_chol: Chol,
+    a_chol: Chol,
+    beta: Vec<f64>,
+}
+
+impl Pitc {
+    pub fn fit(
+        train: &Dataset,
+        kernel: &dyn Kernel,
+        sigma2: f64,
+        m: usize,
+        block_size: usize,
+        seed: u64,
+    ) -> Result<Pitc> {
+        let z = select_landmarks(&train.x, m, LandmarkMethod::Uniform, seed);
+        Self::fit_with_landmarks(train, kernel, sigma2, z, block_size, seed)
+    }
+
+    pub fn fit_with_landmarks(
+        train: &Dataset,
+        kernel: &dyn Kernel,
+        sigma2: f64,
+        z: Mat,
+        block_size: usize,
+        seed: u64,
+    ) -> Result<Pitc> {
+        let nb = NystromBlocks::new(train, kernel, z)?;
+        let n = train.n();
+        let m_ = nb.m();
+        let mut rng = Rng::new(seed ^ 0x5049);
+        let clustering = cluster_rows(
+            ClusterMethod::Bisect,
+            Some(&train.x),
+            None,
+            n,
+            block_size.max(1),
+            &mut rng,
+        );
+
+        // Per block: Λ_b = K_bb − Q_bb + σ²I; accumulate
+        //   A = W + Σ_b K_zb Λ_b⁻¹ K_bz   and   r = Σ_b K_zb Λ_b⁻¹ y_b.
+        let mut a = nb.w.clone();
+        let mut rhs = vec![0.0; m_];
+        let all_rows: Vec<usize> = (0..m_).collect();
+        let mut lam_chols: Vec<(Vec<usize>, Chol)> = Vec::with_capacity(clustering.n_clusters());
+        for members in &clustering.clusters {
+            let kbb = kernel.gram_sym(&train.x.gather_rows(members));
+            let qbb = nb.q_block(members, members);
+            let mut lam = kbb.sub(&qbb);
+            lam.symmetrize();
+            lam.add_diag(sigma2);
+            let (lchol, _) = Chol::new_jittered(&lam, 12)?;
+            let kzb = nb.kzf.gather(&all_rows, members); // m×|b|
+            // Λ_b⁻¹ K_bz  (|b|×m)
+            let linv_kbz = lchol.solve_mat(&kzb.transpose());
+            // A += K_zb (Λ_b⁻¹ K_bz)
+            let contrib = gemm(&kzb, &linv_kbz);
+            a.add_assign(&contrib);
+            // rhs += K_zb Λ_b⁻¹ y_b
+            let yb: Vec<f64> = members.iter().map(|&i| train.y[i]).collect();
+            let linv_y = lchol.solve(&yb);
+            for r in 0..m_ {
+                rhs[r] += dot(kzb.row(r), &linv_y);
+            }
+            lam_chols.push((members.clone(), lchol));
+        }
+        a.symmetrize();
+        let (a_chol, _) = Chol::new_jittered(&a, 12)?;
+        let beta = a_chol.solve(&rhs);
+        Ok(Pitc {
+            z: nb.z,
+            kernel: kernel.boxed_clone(),
+            sigma2,
+            w_chol: nb.w_chol,
+            a_chol,
+            beta,
+        })
+    }
+
+    pub fn n_landmarks(&self) -> usize {
+        self.z.rows
+    }
+}
+
+impl GpModel for Pitc {
+    fn predict(&self, x_test: &Mat) -> Prediction {
+        // Test points are (as standard) treated as their own block, so the
+        // predictive equations coincide with FITC's.
+        let p = x_test.rows;
+        let mut mean = Vec::with_capacity(p);
+        let mut var = Vec::with_capacity(p);
+        for t in 0..p {
+            let xt = x_test.row(t);
+            let kz = self.kernel.cross(xt, &self.z);
+            mean.push(dot(&kz, &self.beta));
+            let vw = solve_lower(&self.w_chol.l, &kz);
+            let va = solve_lower(&self.a_chol.l, &kz);
+            let kss = self.kernel.diag(xt);
+            let v = kss - dot(&vw, &vw) + dot(&va, &va) + self.sigma2;
+            var.push(v.max(self.sigma2 * 1e-3));
+        }
+        Prediction { mean, var }
+    }
+
+    fn name(&self) -> String {
+        format!("PITC(m={})", self.z.rows)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::{gp_dataset, SynthSpec};
+    use crate::gp::metrics::smse;
+    use crate::kernels::RbfKernel;
+
+    #[test]
+    fn singleton_blocks_reduce_to_fitc() {
+        let data = gp_dataset(&SynthSpec::named("t", 70, 2), 1);
+        let (tr, te) = data.split(0.9, 1);
+        let kern = RbfKernel::new(1.0);
+        let z = select_landmarks(&tr.x, 12, LandmarkMethod::Uniform, 9);
+        let pitc =
+            Pitc::fit_with_landmarks(&tr, &kern, 0.1, z.clone(), 1, 9).unwrap();
+        let fitc =
+            crate::baselines::fitc::Fitc::fit_with_landmarks(&tr, &kern, 0.1, z).unwrap();
+        let pp = pitc.predict(&te.x);
+        let pf = fitc.predict(&te.x);
+        for i in 0..te.n() {
+            assert!(
+                (pp.mean[i] - pf.mean[i]).abs() < 1e-6,
+                "mean[{i}] {} vs {}",
+                pp.mean[i],
+                pf.mean[i]
+            );
+            assert!((pp.var[i] - pf.var[i]).abs() < 1e-6, "var[{i}]");
+        }
+    }
+
+    #[test]
+    fn one_block_with_all_landmarks_is_exact() {
+        // a single block makes the training conditional exact;
+        // with Z = X the prior is exact too ⇒ matches the full GP.
+        let data = gp_dataset(&SynthSpec::named("t", 60, 2), 2);
+        let (tr, te) = data.split(0.85, 2);
+        let kern = RbfKernel::new(1.0);
+        let pitc =
+            Pitc::fit_with_landmarks(&tr, &kern, 0.1, tr.x.clone(), tr.n(), 3).unwrap();
+        let full = crate::gp::full::FullGp::fit(&tr, &kern, 0.1).unwrap();
+        let pp = pitc.predict(&te.x);
+        let pf = full.predict(&te.x);
+        for i in 0..te.n() {
+            assert!((pp.mean[i] - pf.mean[i]).abs() < 1e-3, "mean[{i}]");
+        }
+    }
+
+    #[test]
+    fn learns_with_blocks() {
+        let data = gp_dataset(&SynthSpec::named("t", 200, 2), 3);
+        let (tr, te) = data.split(0.9, 4);
+        let pitc = Pitc::fit(&tr, &RbfKernel::new(1.5), 0.1, 20, 25, 5).unwrap();
+        let e = smse(&te.y, &pitc.predict(&te.x).mean);
+        assert!(e < 1.05, "SMSE {e}");
+        assert_eq!(pitc.n_landmarks(), 20);
+    }
+}

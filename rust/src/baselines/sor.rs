@@ -1,0 +1,134 @@
+//! Subset of Regressors (SoR) — the classic Nyström GP approximation
+//! (paper baseline 2; equals DTC in the mean). Prior: f ≈ K_fz W⁻¹ u.
+//!
+//! mean(x*) = k_z(x*)ᵀ (K_zf K_fz + σ²W)⁻¹ K_zf y
+//! var(x*)  = σ² k_z(x*)ᵀ (K_zf K_fz + σ²W)⁻¹ k_z(x*) + σ²
+//!
+//! Degenerate (strictly low-rank) prior ⇒ variance collapses far from the
+//! landmarks — exactly the failure mode Figures 1–2 exhibit.
+
+use super::nystrom::{select_landmarks, LandmarkMethod, NystromBlocks};
+use crate::data::dataset::Dataset;
+use crate::error::Result;
+use crate::gp::{GpModel, Prediction};
+use crate::kernels::Kernel;
+use crate::la::blas::{dot, gemm_nt, gemv};
+use crate::la::chol::{solve_lower, Chol};
+use crate::la::dense::Mat;
+
+/// Fitted SoR model.
+pub struct Sor {
+    z: Mat,
+    kernel: Box<dyn Kernel>,
+    sigma2: f64,
+    /// Cholesky of A = K_zf K_fz + σ² W.
+    a_chol: Chol,
+    /// β = A⁻¹ K_zf y.
+    beta: Vec<f64>,
+}
+
+impl Sor {
+    pub fn fit(train: &Dataset, kernel: &dyn Kernel, sigma2: f64, m: usize, seed: u64) -> Result<Sor> {
+        let z = select_landmarks(&train.x, m, LandmarkMethod::Uniform, seed);
+        Self::fit_with_landmarks(train, kernel, sigma2, z)
+    }
+
+    pub fn fit_with_landmarks(
+        train: &Dataset,
+        kernel: &dyn Kernel,
+        sigma2: f64,
+        z: Mat,
+    ) -> Result<Sor> {
+        let nb = NystromBlocks::new(train, kernel, z)?;
+        // A = K_zf K_fz + σ² W
+        let mut a = gemm_nt(&nb.kzf, &nb.kzf);
+        let mut sw = nb.w.clone();
+        sw.scale(sigma2);
+        a.add_assign(&sw);
+        let (a_chol, _) = Chol::new_jittered(&a, 12)?;
+        let kzf_y = gemv(&nb.kzf, &train.y);
+        let beta = a_chol.solve(&kzf_y);
+        Ok(Sor { z: nb.z, kernel: kernel.boxed_clone(), sigma2, a_chol, beta })
+    }
+
+    pub fn n_landmarks(&self) -> usize {
+        self.z.rows
+    }
+}
+
+impl GpModel for Sor {
+    fn predict(&self, x_test: &Mat) -> Prediction {
+        let p = x_test.rows;
+        let mut mean = Vec::with_capacity(p);
+        let mut var = Vec::with_capacity(p);
+        for t in 0..p {
+            let kz = self.kernel.cross(x_test.row(t), &self.z);
+            mean.push(dot(&kz, &self.beta));
+            // σ² k_zᵀ A⁻¹ k_z + σ²
+            let v = solve_lower(&self.a_chol.l, &kz);
+            var.push(self.sigma2 * dot(&v, &v) + self.sigma2);
+        }
+        Prediction { mean, var }
+    }
+
+    fn name(&self) -> String {
+        format!("SOR(m={})", self.z.rows)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::{gp_dataset, SynthSpec};
+    use crate::gp::full::FullGp;
+    use crate::gp::metrics::smse;
+    use crate::kernels::RbfKernel;
+
+    #[test]
+    fn approaches_full_gp_with_all_landmarks() {
+        let data = gp_dataset(&SynthSpec::named("t", 100, 2), 1);
+        let (tr, te) = data.split(0.9, 1);
+        let kern = RbfKernel::new(1.0);
+        // landmarks = all training points ⇒ SoR mean = full GP mean
+        let sor = Sor::fit_with_landmarks(&tr, &kern, 0.1, tr.x.clone()).unwrap();
+        let full = FullGp::fit(&tr, &kern, 0.1).unwrap();
+        let ps = sor.predict(&te.x);
+        let pf = full.predict(&te.x);
+        for i in 0..te.n() {
+            assert!(
+                (ps.mean[i] - pf.mean[i]).abs() < 1e-4,
+                "i={i}: {} vs {}",
+                ps.mean[i],
+                pf.mean[i]
+            );
+        }
+    }
+
+    #[test]
+    fn few_landmarks_still_learns_something() {
+        let data = gp_dataset(&SynthSpec::named("t", 200, 2), 2);
+        let (tr, te) = data.split(0.9, 2);
+        let sor = Sor::fit(&tr, &RbfKernel::new(1.5), 0.1, 20, 3).unwrap();
+        let pred = sor.predict(&te.x);
+        let e = smse(&te.y, &pred.mean);
+        assert!(e < 1.05, "SMSE {e}");
+        assert_eq!(sor.n_landmarks(), 20);
+    }
+
+    #[test]
+    fn variance_collapses_far_from_landmarks() {
+        // The degenerate-prior pathology: far away, SoR variance → σ²
+        // (no k** term), unlike the full GP's k** + σ².
+        let data = gp_dataset(&SynthSpec::named("t", 60, 1), 3);
+        let sor = Sor::fit(&data, &RbfKernel::new(0.5), 0.05, 10, 4).unwrap();
+        let far = sor.predict(&Mat::from_vec(1, 1, vec![1e3]));
+        assert!((far.var[0] - 0.05).abs() < 1e-6, "var={}", far.var[0]);
+    }
+
+    #[test]
+    fn name_contains_m() {
+        let data = gp_dataset(&SynthSpec::named("t", 50, 2), 4);
+        let sor = Sor::fit(&data, &RbfKernel::new(1.0), 0.1, 8, 5).unwrap();
+        assert_eq!(sor.name(), "SOR(m=8)");
+    }
+}

@@ -1,0 +1,164 @@
+//! Custom micro/meso-benchmark harness (no criterion in the offline build).
+//!
+//! Provides warmup + repeated timing with mean/std/percentiles, and a
+//! tabular reporter used by every `rust/benches/*.rs` target.
+
+use crate::la::stats::{mean_std_sample, quantile_sorted};
+use crate::util::timer::Timer;
+
+/// Timing statistics for one benchmark case.
+#[derive(Clone, Debug)]
+pub struct BenchStats {
+    pub name: String,
+    pub iters: usize,
+    pub mean_s: f64,
+    pub std_s: f64,
+    pub p50_s: f64,
+    pub p95_s: f64,
+    pub min_s: f64,
+}
+
+impl BenchStats {
+    pub fn throughput(&self, items: f64) -> f64 {
+        items / self.mean_s.max(1e-12)
+    }
+}
+
+/// Run `f` repeatedly: `warmup` discarded runs then `iters` timed runs.
+pub fn bench<F: FnMut()>(name: &str, warmup: usize, iters: usize, mut f: F) -> BenchStats {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters.max(1));
+    for _ in 0..iters.max(1) {
+        let t = Timer::start();
+        f();
+        samples.push(t.elapsed_secs());
+    }
+    stats_from(name, &samples)
+}
+
+/// Adaptive: time-boxed benchmarking — run until `budget_s` seconds of
+/// measurement or `max_iters`, whichever first (min 3 iters).
+pub fn bench_budget<F: FnMut()>(name: &str, budget_s: f64, max_iters: usize, mut f: F) -> BenchStats {
+    // one warmup
+    f();
+    let mut samples = Vec::new();
+    let wall = Timer::start();
+    while samples.len() < 3 || (wall.elapsed_secs() < budget_s && samples.len() < max_iters) {
+        let t = Timer::start();
+        f();
+        samples.push(t.elapsed_secs());
+        if samples.len() >= max_iters {
+            break;
+        }
+    }
+    stats_from(name, &samples)
+}
+
+fn stats_from(name: &str, samples: &[f64]) -> BenchStats {
+    let mut sorted = samples.to_vec();
+    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let (mean_s, std_s) = mean_std_sample(samples);
+    BenchStats {
+        name: name.to_string(),
+        iters: samples.len(),
+        mean_s,
+        std_s,
+        p50_s: quantile_sorted(&sorted, 0.5),
+        p95_s: quantile_sorted(&sorted, 0.95),
+        min_s: sorted[0],
+    }
+}
+
+/// Simple fixed-width table printer for bench reports.
+pub struct Table {
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(headers: &[&str]) -> Table {
+        Table { headers: headers.iter().map(|s| s.to_string()).collect(), rows: Vec::new() }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.headers.len());
+        self.rows.push(cells.to_vec());
+    }
+
+    pub fn to_string(&self) -> String {
+        let ncol = self.headers.len();
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for c in 0..ncol {
+                widths[c] = widths[c].max(row[c].len());
+            }
+        }
+        let mut out = String::new();
+        let fmt_row = |cells: &[String], widths: &[usize]| -> String {
+            let mut line = String::new();
+            for (c, cell) in cells.iter().enumerate() {
+                line.push_str(&format!("{:>width$}  ", cell, width = widths[c]));
+            }
+            line.trim_end().to_string()
+        };
+        out.push_str(&fmt_row(&self.headers, &widths));
+        out.push('\n');
+        out.push_str(&"-".repeat(widths.iter().sum::<usize>() + 2 * ncol));
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_row(row, &widths));
+            out.push('\n');
+        }
+        out
+    }
+
+    pub fn print(&self) {
+        print!("{}", self.to_string());
+    }
+}
+
+/// Format seconds for bench tables.
+pub fn fmt_secs(s: f64) -> String {
+    crate::util::timer::fmt_duration(s)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_collects_stats() {
+        let mut count = 0;
+        let st = bench("noop", 2, 5, || count += 1);
+        assert_eq!(count, 7);
+        assert_eq!(st.iters, 5);
+        assert!(st.mean_s >= 0.0);
+        assert!(st.p95_s >= st.p50_s);
+        assert!(st.min_s <= st.mean_s + st.std_s + 1e-12);
+    }
+
+    #[test]
+    fn bench_budget_respects_min_iters() {
+        let st = bench_budget("fast", 0.0, 100, || {});
+        assert!(st.iters >= 3);
+        assert!(st.iters <= 100);
+    }
+
+    #[test]
+    fn throughput_positive() {
+        let st = bench("t", 0, 3, || std::thread::sleep(std::time::Duration::from_micros(100)));
+        assert!(st.throughput(1000.0) > 0.0);
+    }
+
+    #[test]
+    fn table_renders() {
+        let mut t = Table::new(&["a", "method"]);
+        t.row(&["1".into(), "mka".into()]);
+        let s = t.to_string();
+        assert!(s.contains("method"));
+        assert!(s.contains("mka"));
+        assert!(s.lines().count() == 3);
+    }
+}

@@ -1,0 +1,138 @@
+//! Affinity clustering on the rows of the (absolute) kernel matrix itself.
+//!
+//! Beyond stage 1, MKA no longer has data points — it clusters the rows of
+//! the compressed matrix K_ℓ ("it is not even individual datapoints that
+//! MKA clusters, but subspaces", paper §3 remark 2). We treat |K_ℓ| as an
+//! affinity and run a seeded balanced assignment: pick k seeds far apart in
+//! affinity space (k-means++-style on affinity), then greedily assign each
+//! row to its highest-affinity seed subject to a balance cap.
+
+use super::Clustering;
+use crate::la::dense::Mat;
+use crate::util::Rng;
+
+/// Cluster the rows of symmetric `k_mat` into `n_clusters` groups by row
+/// affinity with balance cap ceil(1.5 · n / n_clusters).
+pub fn affinity_cluster(k_mat: &Mat, n_clusters: usize, rng: &mut Rng) -> Clustering {
+    let n = k_mat.rows;
+    let k = n_clusters.clamp(1, n);
+    if k == 1 {
+        return Clustering { clusters: vec![(0..n).collect()] };
+    }
+    let cap = (3 * n).div_ceil(2 * k).max(1);
+
+    // --- seed selection: first uniformly, then min-affinity-to-seeds ----
+    let mut seeds = Vec::with_capacity(k);
+    seeds.push(rng.below(n));
+    while seeds.len() < k {
+        // Pick the row with minimal max-affinity to current seeds
+        // (i.e. the least connected — analogue of farthest-point).
+        let mut best_row = None;
+        let mut best_val = f64::INFINITY;
+        for i in 0..n {
+            if seeds.contains(&i) {
+                continue;
+            }
+            let max_aff = seeds
+                .iter()
+                .map(|&s| k_mat.at(i, s).abs())
+                .fold(f64::NEG_INFINITY, f64::max);
+            if max_aff < best_val {
+                best_val = max_aff;
+                best_row = Some(i);
+            }
+        }
+        match best_row {
+            Some(r) => seeds.push(r),
+            None => break,
+        }
+    }
+
+    // --- greedy balanced assignment --------------------------------------
+    // Order rows by their best affinity (strongest first) so that strongly
+    // attached rows get their preferred cluster before caps bind.
+    let mut order: Vec<(f64, usize)> = (0..n)
+        .map(|i| {
+            let best = seeds.iter().map(|&s| k_mat.at(i, s).abs()).fold(0.0, f64::max);
+            (best, i)
+        })
+        .collect();
+    order.sort_by(|a, b| b.partial_cmp(a).unwrap());
+
+    let mut clusters: Vec<Vec<usize>> = vec![Vec::new(); seeds.len()];
+    for (ci, &s) in seeds.iter().enumerate() {
+        clusters[ci].push(s);
+    }
+    let assigned: std::collections::HashSet<usize> = seeds.iter().copied().collect();
+    for &(_, i) in &order {
+        if assigned.contains(&i) {
+            continue;
+        }
+        // rank clusters by affinity to seed, assign to best with room
+        let mut ranked: Vec<(f64, usize)> = seeds
+            .iter()
+            .enumerate()
+            .map(|(ci, &s)| (k_mat.at(i, s).abs(), ci))
+            .collect();
+        ranked.sort_by(|a, b| b.partial_cmp(a).unwrap());
+        let mut placed = false;
+        for &(_, ci) in &ranked {
+            if clusters[ci].len() < cap {
+                clusters[ci].push(i);
+                placed = true;
+                break;
+            }
+        }
+        if !placed {
+            // all full (can happen with rounding): put in smallest
+            let ci = (0..clusters.len()).min_by_key(|&c| clusters[c].len()).unwrap();
+            clusters[ci].push(i);
+        }
+    }
+    Clustering { clusters }.normalize()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernels::{Kernel, RbfKernel};
+
+    #[test]
+    fn recovers_block_structure() {
+        // Two groups of points far apart → K is block diagonal → affinity
+        // clustering should recover the blocks.
+        let mut rng = Rng::new(1);
+        let x = Mat::from_fn(30, 2, |i, _| if i < 15 { rng.normal() } else { 50.0 + rng.normal() });
+        let k = RbfKernel::new(1.0).gram_sym(&x);
+        let c = affinity_cluster(&k, 2, &mut Rng::new(2));
+        assert!(c.is_partition_of(30));
+        assert_eq!(c.n_clusters(), 2);
+        for cl in &c.clusters {
+            let lows = cl.iter().filter(|&&i| i < 15).count();
+            assert!(lows == 0 || lows == cl.len(), "mixed: {cl:?}");
+        }
+    }
+
+    #[test]
+    fn balance_cap_respected() {
+        let k = Mat::filled(40, 40, 1.0); // featureless affinity
+        let c = affinity_cluster(&k, 4, &mut Rng::new(3));
+        assert!(c.is_partition_of(40));
+        assert!(c.max_cluster() <= 15, "max={}", c.max_cluster()); // cap = ceil(1.5*40/4) = 15
+    }
+
+    #[test]
+    fn one_cluster_case() {
+        let k = Mat::eye(5);
+        let c = affinity_cluster(&k, 1, &mut Rng::new(4));
+        assert_eq!(c.n_clusters(), 1);
+        assert!(c.is_partition_of(5));
+    }
+
+    #[test]
+    fn k_larger_than_n() {
+        let k = Mat::eye(3);
+        let c = affinity_cluster(&k, 10, &mut Rng::new(5));
+        assert!(c.is_partition_of(3));
+    }
+}

@@ -1,0 +1,93 @@
+//! Balanced recursive bisection by random projections.
+//!
+//! kd-trees are "known to be problematic in high dimensions" (paper §2.2);
+//! random-projection splits are the standard robust alternative: project
+//! onto a random direction, split at the median. Guarantees near-equal
+//! block sizes, which keeps m_max (and hence Proposition 2/4 costs) tight.
+
+use super::Clustering;
+use crate::la::dense::Mat;
+use crate::util::Rng;
+
+/// Recursively bisect the rows of `x` until blocks are ≤ `max_block`.
+pub fn bisect(x: &Mat, max_block: usize, rng: &mut Rng) -> Clustering {
+    let idx: Vec<usize> = (0..x.rows).collect();
+    let mut clusters = Vec::new();
+    split(x, idx, max_block.max(1), rng, &mut clusters);
+    Clustering { clusters }.normalize()
+}
+
+fn split(x: &Mat, idx: Vec<usize>, max_block: usize, rng: &mut Rng, out: &mut Vec<Vec<usize>>) {
+    if idx.len() <= max_block {
+        out.push(idx);
+        return;
+    }
+    let d = x.cols;
+    // Random unit direction.
+    let mut dir: Vec<f64> = (0..d).map(|_| rng.normal()).collect();
+    let norm = dir.iter().map(|v| v * v).sum::<f64>().sqrt().max(1e-12);
+    for v in &mut dir {
+        *v /= norm;
+    }
+    // Project and split at the median (ties broken by index, keeps balance).
+    let mut proj: Vec<(f64, usize)> = idx
+        .iter()
+        .map(|&i| {
+            let mut s = 0.0;
+            for (a, b) in x.row(i).iter().zip(&dir) {
+                s += a * b;
+            }
+            (s, i)
+        })
+        .collect();
+    proj.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let mid = proj.len() / 2;
+    let left: Vec<usize> = proj[..mid].iter().map(|&(_, i)| i).collect();
+    let right: Vec<usize> = proj[mid..].iter().map(|&(_, i)| i).collect();
+    split(x, left, max_block, rng, out);
+    split(x, right, max_block, rng, out);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn blocks_bounded_and_balanced() {
+        let mut rng = Rng::new(1);
+        let x = Mat::from_fn(100, 5, |_, _| rng.normal());
+        let c = bisect(&x, 16, &mut Rng::new(2));
+        assert!(c.is_partition_of(100));
+        assert!(c.max_cluster() <= 16);
+        // Median splits keep blocks within 2x of each other.
+        let min = c.clusters.iter().map(|cl| cl.len()).min().unwrap();
+        assert!(c.max_cluster() <= 2 * min + 1, "max={} min={min}", c.max_cluster());
+    }
+
+    #[test]
+    fn small_input_single_block() {
+        let x = Mat::from_fn(5, 2, |i, j| (i * 2 + j) as f64);
+        let c = bisect(&x, 8, &mut Rng::new(3));
+        assert_eq!(c.n_clusters(), 1);
+    }
+
+    #[test]
+    fn splits_separated_data_cleanly() {
+        // 1D data: two well-separated groups; the first split should be pure.
+        let x = Mat::from_fn(20, 1, |i, _| if i < 10 { 0.0 + i as f64 * 0.01 } else { 100.0 + i as f64 * 0.01 });
+        let c = bisect(&x, 10, &mut Rng::new(4));
+        assert_eq!(c.n_clusters(), 2);
+        for cl in &c.clusters {
+            let lows = cl.iter().filter(|&&i| i < 10).count();
+            assert!(lows == 0 || lows == cl.len());
+        }
+    }
+
+    #[test]
+    fn handles_duplicate_points() {
+        let x = Mat::filled(32, 3, 1.0);
+        let c = bisect(&x, 8, &mut Rng::new(5));
+        assert!(c.is_partition_of(32));
+        assert!(c.max_cluster() <= 8);
+    }
+}

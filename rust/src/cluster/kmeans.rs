@@ -1,0 +1,167 @@
+//! Lloyd's k-means with k-means++ seeding.
+
+use super::Clustering;
+use crate::la::dense::Mat;
+use crate::util::Rng;
+
+/// Cluster the rows of `x` into `k` clusters. Empty clusters are re-seeded
+/// from the farthest point, so the result always has exactly
+/// min(k, n distinct rows) non-empty clusters.
+pub fn kmeans(x: &Mat, k: usize, max_iters: usize, rng: &mut Rng) -> Clustering {
+    let n = x.rows;
+    let d = x.cols;
+    let k = k.clamp(1, n);
+
+    // --- k-means++ seeding ---------------------------------------------
+    let mut centers = Mat::zeros(k, d);
+    let first = rng.below(n);
+    centers.row_mut(0).copy_from_slice(x.row(first));
+    let mut dist2 = vec![f64::INFINITY; n];
+    for c in 1..k {
+        // update distances to nearest chosen center
+        for i in 0..n {
+            let d2 = sqdist(x.row(i), centers.row(c - 1));
+            if d2 < dist2[i] {
+                dist2[i] = d2;
+            }
+        }
+        let total: f64 = dist2.iter().sum();
+        let pick = if total <= 0.0 {
+            rng.below(n)
+        } else {
+            let mut r = rng.uniform() * total;
+            let mut idx = n - 1;
+            for (i, &w) in dist2.iter().enumerate() {
+                r -= w;
+                if r <= 0.0 {
+                    idx = i;
+                    break;
+                }
+            }
+            idx
+        };
+        centers.row_mut(c).copy_from_slice(x.row(pick));
+    }
+
+    // --- Lloyd iterations ------------------------------------------------
+    let mut assign = vec![0usize; n];
+    for _ in 0..max_iters {
+        let mut changed = false;
+        for i in 0..n {
+            let mut best = 0;
+            let mut bestd = f64::INFINITY;
+            for c in 0..k {
+                let d2 = sqdist(x.row(i), centers.row(c));
+                if d2 < bestd {
+                    bestd = d2;
+                    best = c;
+                }
+            }
+            if assign[i] != best {
+                assign[i] = best;
+                changed = true;
+            }
+        }
+        // recompute centers
+        let mut counts = vec![0usize; k];
+        let mut sums = Mat::zeros(k, d);
+        for i in 0..n {
+            counts[assign[i]] += 1;
+            let row = x.row(i);
+            let srow = sums.row_mut(assign[i]);
+            for j in 0..d {
+                srow[j] += row[j];
+            }
+        }
+        for c in 0..k {
+            if counts[c] == 0 {
+                // Re-seed empty cluster at the point farthest from its center.
+                let far = (0..n)
+                    .max_by(|&a, &b| {
+                        sqdist(x.row(a), centers.row(assign[a]))
+                            .partial_cmp(&sqdist(x.row(b), centers.row(assign[b])))
+                            .unwrap()
+                    })
+                    .unwrap();
+                centers.row_mut(c).copy_from_slice(x.row(far));
+                assign[far] = c;
+                changed = true;
+            } else {
+                let inv = 1.0 / counts[c] as f64;
+                let srow = sums.row(c).to_vec();
+                let crow = centers.row_mut(c);
+                for j in 0..d {
+                    crow[j] = srow[j] * inv;
+                }
+            }
+        }
+        if !changed {
+            break;
+        }
+    }
+
+    let mut clusters = vec![Vec::new(); k];
+    for (i, &c) in assign.iter().enumerate() {
+        clusters[c].push(i);
+    }
+    Clustering { clusters }.normalize()
+}
+
+#[inline]
+fn sqdist(a: &[f64], b: &[f64]) -> f64 {
+    let mut s = 0.0;
+    for (x, y) in a.iter().zip(b) {
+        let d = x - y;
+        s += d * d;
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn separates_obvious_blobs() {
+        let mut rng = Rng::new(1);
+        // two blobs at (0,0) and (10,10)
+        let x = Mat::from_fn(40, 2, |i, _j| {
+            let base = if i < 20 { 0.0 } else { 10.0 };
+            base + 0.1 * rng.normal()
+        });
+        let c = kmeans(&x, 2, 50, &mut Rng::new(7));
+        assert!(c.is_partition_of(40));
+        assert_eq!(c.n_clusters(), 2);
+        // each cluster should be pure
+        for cl in &c.clusters {
+            let lows = cl.iter().filter(|&&i| i < 20).count();
+            assert!(lows == 0 || lows == cl.len(), "mixed cluster {cl:?}");
+        }
+    }
+
+    #[test]
+    fn k_clamped_to_n() {
+        let x = Mat::from_fn(3, 1, |i, _| i as f64);
+        let c = kmeans(&x, 10, 10, &mut Rng::new(2));
+        assert!(c.is_partition_of(3));
+        assert!(c.n_clusters() <= 3);
+    }
+
+    #[test]
+    fn single_cluster() {
+        let x = Mat::from_fn(10, 2, |i, j| (i + j) as f64);
+        let c = kmeans(&x, 1, 10, &mut Rng::new(3));
+        assert_eq!(c.n_clusters(), 1);
+        assert_eq!(c.clusters[0].len(), 10);
+    }
+
+    #[test]
+    fn deterministic_with_seed() {
+        let mut r1 = Rng::new(11);
+        let mut r2 = Rng::new(11);
+        let x = Mat::from_fn(30, 3, |i, j| ((i * 7 + j * 13) % 10) as f64);
+        let a = kmeans(&x, 4, 25, &mut r1);
+        let b = kmeans(&x, 4, 25, &mut r2);
+        assert_eq!(a.clusters, b.clusters);
+    }
+}

@@ -1,0 +1,187 @@
+//! Row/column clustering for MKA's stage blocking (Algorithm 1, step 1).
+//!
+//! The paper calls for "some appropriate fast clustering method, e.g.,
+//! METIS or GRACLUS" and notes MKA re-clusters before every stage — after
+//! stage 1 the objects being clustered are no longer data points but the
+//! core rows of the compressed matrix K_ℓ, so stage ≥ 2 clustering works on
+//! the rows of K_ℓ itself (affinity clustering).
+//!
+//! Three methods, all from scratch:
+//! * [`kmeans`] — k-means++ on feature vectors (stage 1, when X is known);
+//! * [`bisect`] — balanced random-projection bisection (stage 1 fallback,
+//!   high-dim robust, always yields near-equal blocks);
+//! * [`affinity`] — greedy seeded clustering on |K| row similarity
+//!   (stages ≥ 2 and the "K only" path).
+
+pub mod affinity;
+pub mod bisect;
+pub mod kmeans;
+
+use crate::la::dense::Mat;
+use crate::util::Rng;
+
+/// Which clustering algorithm a stage uses.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ClusterMethod {
+    KMeans,
+    Bisect,
+    Affinity,
+}
+
+impl ClusterMethod {
+    pub fn parse(s: &str) -> ClusterMethod {
+        match s {
+            "kmeans" => ClusterMethod::KMeans,
+            "bisect" => ClusterMethod::Bisect,
+            _ => ClusterMethod::Affinity,
+        }
+    }
+}
+
+/// A clustering: `clusters[c]` is the sorted list of member indices.
+#[derive(Clone, Debug)]
+pub struct Clustering {
+    pub clusters: Vec<Vec<usize>>,
+}
+
+impl Clustering {
+    /// Validate and normalize: drop empties, sort members.
+    pub fn normalize(mut self) -> Clustering {
+        self.clusters.retain(|c| !c.is_empty());
+        for c in &mut self.clusters {
+            c.sort_unstable();
+        }
+        self
+    }
+
+    pub fn n_items(&self) -> usize {
+        self.clusters.iter().map(|c| c.len()).sum()
+    }
+
+    pub fn n_clusters(&self) -> usize {
+        self.clusters.len()
+    }
+
+    pub fn max_cluster(&self) -> usize {
+        self.clusters.iter().map(|c| c.len()).max().unwrap_or(0)
+    }
+
+    /// The permutation that maps "blocked order" position → original index
+    /// (cluster 1's members first, then cluster 2's, …) — the C_ℓ matrix of
+    /// the paper, stored implicitly.
+    pub fn permutation(&self) -> Vec<usize> {
+        let mut p = Vec::with_capacity(self.n_items());
+        for c in &self.clusters {
+            p.extend_from_slice(c);
+        }
+        p
+    }
+
+    /// Check the clustering partitions 0..n exactly.
+    pub fn is_partition_of(&self, n: usize) -> bool {
+        let mut seen = vec![false; n];
+        let mut count = 0;
+        for c in &self.clusters {
+            for &i in c {
+                if i >= n || seen[i] {
+                    return false;
+                }
+                seen[i] = true;
+                count += 1;
+            }
+        }
+        count == n
+    }
+}
+
+/// Cluster `n` items into blocks of roughly `target_block` elements using
+/// the chosen method. `x` (points) is used by KMeans/Bisect; `k_abs`
+/// (|K| row affinity) by Affinity. Falls back to Bisect when the preferred
+/// input is unavailable.
+pub fn cluster_rows(
+    method: ClusterMethod,
+    x: Option<&Mat>,
+    k: Option<&Mat>,
+    n: usize,
+    target_block: usize,
+    rng: &mut Rng,
+) -> Clustering {
+    let n_clusters = n.div_ceil(target_block).max(1);
+    match method {
+        ClusterMethod::KMeans if x.is_some() => {
+            kmeans::kmeans(x.unwrap(), n_clusters, 20, rng)
+        }
+        ClusterMethod::Bisect if x.is_some() => {
+            bisect::bisect(x.unwrap(), target_block, rng)
+        }
+        ClusterMethod::Affinity if k.is_some() => {
+            affinity::affinity_cluster(k.unwrap(), n_clusters, rng)
+        }
+        // Fallbacks: affinity on K if available, else contiguous chunks.
+        _ => {
+            if let Some(km) = k {
+                affinity::affinity_cluster(km, n_clusters, rng)
+            } else if let Some(xm) = x {
+                bisect::bisect(xm, target_block, rng)
+            } else {
+                contiguous(n, target_block)
+            }
+        }
+    }
+}
+
+/// Trivial contiguous chunking (used when neither X nor K is available and
+/// in tests as a worst-case clustering).
+pub fn contiguous(n: usize, block: usize) -> Clustering {
+    let mut clusters = Vec::new();
+    let mut i = 0;
+    while i < n {
+        clusters.push((i..(i + block).min(n)).collect());
+        i += block;
+    }
+    Clustering { clusters }.normalize()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn contiguous_partitions() {
+        let c = contiguous(10, 3);
+        assert!(c.is_partition_of(10));
+        assert_eq!(c.n_clusters(), 4);
+        assert_eq!(c.max_cluster(), 3);
+        assert_eq!(c.permutation(), (0..10).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn normalize_drops_empty_and_sorts() {
+        let c = Clustering { clusters: vec![vec![3, 1], vec![], vec![2, 0]] }.normalize();
+        assert_eq!(c.n_clusters(), 2);
+        assert_eq!(c.clusters[0], vec![1, 3]);
+        assert!(c.is_partition_of(4));
+    }
+
+    #[test]
+    fn partition_check_catches_duplicates() {
+        let c = Clustering { clusters: vec![vec![0, 1], vec![1, 2]] };
+        assert!(!c.is_partition_of(3));
+        let c2 = Clustering { clusters: vec![vec![0], vec![2]] };
+        assert!(!c2.is_partition_of(3)); // missing 1
+    }
+
+    #[test]
+    fn cluster_rows_dispatch_and_fallback() {
+        let mut rng = Rng::new(1);
+        let x = Mat::from_fn(20, 2, |i, _| i as f64);
+        let c = cluster_rows(ClusterMethod::KMeans, Some(&x), None, 20, 5, &mut rng);
+        assert!(c.is_partition_of(20));
+        // Affinity requested but no K: falls back to bisect on x.
+        let c2 = cluster_rows(ClusterMethod::Affinity, Some(&x), None, 20, 5, &mut rng);
+        assert!(c2.is_partition_of(20));
+        // Nothing available: contiguous.
+        let c3 = cluster_rows(ClusterMethod::Affinity, None, None, 12, 4, &mut rng);
+        assert!(c3.is_partition_of(12));
+    }
+}

@@ -1,0 +1,517 @@
+//! Greedy-Jacobi Multiresolution Matrix Factorization compressor
+//! (Kondor, Teneva & Garg 2014; paper §3 "MMF" and §4 feature list).
+//!
+//! Given a symmetric block A (m×m) and target core size c, performs
+//! m − c greedy Givens steps. Each step picks a pair (i, j) of active
+//! coordinates, rotates in their plane, and **retires** one rotated
+//! coordinate as a wavelet: from then on only its diagonal entry survives,
+//! so the approximation error contributed by that coordinate is exactly
+//! its remaining off-diagonal energy.
+//!
+//! Pivot rules (selectable; the min-residual rule is the default and the
+//! max-correlation rule is kept for the ablation bench):
+//!
+//! * **MinResidual** — for each candidate pair, the rotation angle that
+//!   minimizes the retired row's off-diagonal energy has a closed form:
+//!   writing M for the 2×2 Gram matrix of rows i, j restricted to the
+//!   *outside* coordinates (obtainable in O(1) from G = AᵀA), the optimal
+//!   retired direction is the λ_min-eigenvector of M and the residual is
+//!   λ_min + (rotated A_ij)². We also evaluate the classic Jacobi angle
+//!   (which zeroes A_ij instead) and keep whichever is better; the pair
+//!   with the globally smallest residual is rotated.
+//! * **MaxCorrelation** — the original MMF heuristic: rotate the pair with
+//!   maximal normalized Gram correlation |G_ij|/√(G_ii G_jj) by the Jacobi
+//!   angle and retire the rotated coordinate with less off-diagonal
+//!   energy.
+//!
+//! Computing G = AᵀA is the m³ BLAS hot spot the paper points to
+//! (Prop. 4) — the MKA driver can hand blocks to the AOT'd XLA `ata`
+//! artifact for exactly this product.
+
+use super::{Compression, Compressor, QFactor};
+use crate::la::blas::syrk_ata;
+use crate::la::dense::Mat;
+use crate::la::givens::{Givens, GivensSeq};
+use crate::util::Rng;
+
+/// Pivot-selection rule for the greedy loop.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum PivotRule {
+    /// Minimize the truncated off-diagonal energy (recommended).
+    #[default]
+    MinResidual,
+    /// Classic MMF max-normalized-correlation heuristic.
+    MaxCorrelation,
+}
+
+/// Greedy-Jacobi MMF core-diagonal compressor.
+#[derive(Clone, Debug)]
+pub struct MmfCompressor {
+    pub rule: PivotRule,
+    /// Extra classical-Jacobi rotations performed on the active set before
+    /// each retirement (0 = the strict one-rotation-per-wavelet scheme of
+    /// the paper's Prop. 4/5 accounting; small values trade a constant
+    /// factor of storage/FLOPs for substantially lower truncation error —
+    /// MMF's rotation count stays O(m) either way).
+    pub extra_rotations: usize,
+}
+
+impl Default for MmfCompressor {
+    fn default() -> Self {
+        MmfCompressor { rule: PivotRule::MinResidual, extra_rotations: 2 }
+    }
+}
+
+/// Outcome of scoring one candidate pair.
+#[derive(Clone, Copy)]
+struct PairPlan {
+    score: f64,
+    /// Rotation (c, s) in the (i, j) plane.
+    c: f64,
+    s: f64,
+}
+
+impl MmfCompressor {
+    pub fn with_rule(rule: PivotRule) -> MmfCompressor {
+        MmfCompressor { rule, ..MmfCompressor::default() }
+    }
+
+    /// Compress with an externally computed Gram matrix G = AᵀA (e.g. from
+    /// the XLA artifact). `a` and `g` are cloned as working copies.
+    ///
+    /// Hot path: a rotation in the (i, j) plane only changes matrix entries
+    /// in rows/columns i and j, so per-row caches of the best pivot partner
+    /// and the largest off-diagonal entry stay valid for all other pairs —
+    /// each greedy step costs O(m) amortized instead of O(active²) (the
+    /// §Perf optimization recorded in EXPERIMENTS.md).
+    pub fn compress_with_gram(&self, a: &Mat, g: &Mat, c_target: usize) -> Compression {
+        let m = a.rows;
+        assert!(a.is_square() && g.is_square() && g.rows == m);
+        if c_target >= m || m < 2 {
+            return Compression::identity(m);
+        }
+        let mut a = a.clone();
+        let mut g = g.clone();
+        let mut active: Vec<bool> = vec![true; m];
+        let mut n_active = m;
+        let mut seq = GivensSeq::new();
+        let mut wavelet = Vec::with_capacity(m - c_target);
+
+        // ---- per-row caches ---------------------------------------------
+        // rowmax[p]: (partner, |A_pq|) with the largest off-diagonal entry.
+        // best[p]:   (partner, plan) with the lowest pivot score.
+        let rescan_max = |a: &Mat, active: &[bool], p: usize| -> Option<(usize, f64)> {
+            let row = a.row(p);
+            let mut out: Option<(usize, f64)> = None;
+            for (q, v) in row.iter().enumerate() {
+                if q != p && active[q] {
+                    let av = v.abs();
+                    if out.map_or(true, |(_, b)| av > b) {
+                        out = Some((q, av));
+                    }
+                }
+            }
+            out
+        };
+        let rule = self.rule;
+        let rescan_best = |a: &Mat, g: &Mat, active: &[bool], p: usize| -> Option<(usize, PairPlan)> {
+            let mut out: Option<(usize, PairPlan)> = None;
+            for q in 0..a.rows {
+                if q == p || !active[q] {
+                    continue;
+                }
+                let (i, j) = (p.min(q), p.max(q));
+                let plan = match rule {
+                    PivotRule::MinResidual => plan_min_residual(a, g, i, j),
+                    PivotRule::MaxCorrelation => plan_max_correlation(a, g, i, j),
+                };
+                if out.map_or(true, |(_, b)| plan.score < b.score) {
+                    out = Some((q, plan));
+                }
+            }
+            out
+        };
+
+        let mut rowmax: Vec<Option<(usize, f64)>> =
+            (0..m).map(|p| rescan_max(&a, &active, p)).collect();
+        let mut best: Vec<Option<(usize, PairPlan)>> =
+            (0..m).map(|p| rescan_best(&a, &g, &active, p)).collect();
+
+        // Refresh both caches after a rotation in the (i, j) plane: rows
+        // i/j rescan; other rows incrementally absorb the changed columns,
+        // falling back to a rescan when their cached entry went stale.
+        macro_rules! refresh_after_rotation {
+            ($i:expr, $j:expr) => {{
+                let (ri, rj) = ($i, $j);
+                for p in 0..m {
+                    if !active[p] {
+                        continue;
+                    }
+                    if p == ri || p == rj {
+                        rowmax[p] = rescan_max(&a, &active, p);
+                        best[p] = rescan_best(&a, &g, &active, p);
+                        continue;
+                    }
+                    // rowmax: columns ri, rj changed in row p.
+                    match rowmax[p] {
+                        Some((q, _)) if q == ri || q == rj => {
+                            rowmax[p] = rescan_max(&a, &active, p);
+                        }
+                        Some((q, v)) => {
+                            let cand_i = if active[ri] { a.at(p, ri).abs() } else { 0.0 };
+                            let cand_j = if active[rj] { a.at(p, rj).abs() } else { 0.0 };
+                            if cand_i > v || cand_j > v {
+                                let (nq, nv) = if cand_i >= cand_j { (ri, cand_i) } else { (rj, cand_j) };
+                                rowmax[p] = Some((nq, nv));
+                            } else {
+                                rowmax[p] = Some((q, v));
+                            }
+                        }
+                        None => rowmax[p] = rescan_max(&a, &active, p),
+                    }
+                    // best: pair scores involving ri/rj changed.
+                    match best[p] {
+                        Some((q, _)) if q == ri || q == rj => {
+                            best[p] = rescan_best(&a, &g, &active, p);
+                        }
+                        Some((q, plan)) => {
+                            let mut cur = Some((q, plan));
+                            for &t in &[ri, rj] {
+                                if t != p && active[t] {
+                                    let (lo, hi) = (p.min(t), p.max(t));
+                                    let np = match rule {
+                                        PivotRule::MinResidual => plan_min_residual(&a, &g, lo, hi),
+                                        PivotRule::MaxCorrelation => {
+                                            plan_max_correlation(&a, &g, lo, hi)
+                                        }
+                                    };
+                                    if cur.map_or(true, |(_, b)| np.score < b.score) {
+                                        cur = Some((t, np));
+                                    }
+                                }
+                            }
+                            best[p] = cur;
+                        }
+                        None => best[p] = rescan_best(&a, &g, &active, p),
+                    }
+                }
+            }};
+        }
+
+        // Invalidate cache entries pointing at a retired coordinate.
+        macro_rules! refresh_after_retire {
+            ($r:expr) => {{
+                let r = $r;
+                for p in 0..m {
+                    if !active[p] {
+                        continue;
+                    }
+                    if matches!(rowmax[p], Some((q, _)) if q == r) {
+                        rowmax[p] = rescan_max(&a, &active, p);
+                    }
+                    if matches!(best[p], Some((q, _)) if q == r) {
+                        best[p] = rescan_best(&a, &g, &active, p);
+                    }
+                }
+            }};
+        }
+
+        while n_active > c_target.max(1) {
+            // ---- optional pre-sweep: classical Jacobi on the largest
+            // off-diagonal entries among active pairs ----------------------
+            for _ in 0..self.extra_rotations {
+                let mut pick: Option<(usize, usize, f64)> = None;
+                for p in 0..m {
+                    if !active[p] {
+                        continue;
+                    }
+                    if let Some((q, v)) = rowmax[p] {
+                        if pick.map_or(true, |(_, _, b)| v > b) {
+                            pick = Some((p, q, v));
+                        }
+                    }
+                }
+                let Some((bi, bj, bv)) = pick else { break };
+                if bv < 1e-14 {
+                    break;
+                }
+                let (bi, bj) = (bi.min(bj), bi.max(bj));
+                let rot = Givens::jacobi(bi, bj, a.at(bi, bi), a.at(bi, bj), a.at(bj, bj));
+                rot.conjugate_sym(&mut a);
+                rot.conjugate_sym(&mut g);
+                seq.push(rot);
+                refresh_after_rotation!(bi, bj);
+            }
+
+            // ---- greedy pivot from the cache ------------------------------
+            let mut pick: Option<(usize, usize, PairPlan)> = None;
+            for p in 0..m {
+                if !active[p] {
+                    continue;
+                }
+                if let Some((q, plan)) = best[p] {
+                    if pick.map_or(true, |(_, _, b)| plan.score < b.score) {
+                        pick = Some((p.min(q), p.max(q), plan));
+                    }
+                }
+            }
+            let Some((bi, bj, plan)) = pick else { break };
+
+            let rot = Givens { i: bi, j: bj, c: plan.c, s: plan.s };
+            rot.conjugate_sym(&mut a);
+            rot.conjugate_sym(&mut g);
+            seq.push(rot);
+
+            // The rotation was chosen so that the *new j* coordinate is the
+            // best wavelet for MinResidual; for MaxCorrelation compare the
+            // two rotated rows' off-diagonal energies.
+            let retire = match self.rule {
+                PivotRule::MinResidual => bj,
+                PivotRule::MaxCorrelation => {
+                    if off_energy(&a, bi) <= off_energy(&a, bj) {
+                        bi
+                    } else {
+                        bj
+                    }
+                }
+            };
+            active[retire] = false;
+            n_active -= 1;
+            wavelet.push(retire);
+            refresh_after_rotation!(bi, bj);
+            refresh_after_retire!(retire);
+        }
+
+        let core: Vec<usize> = (0..m).filter(|&i| active[i]).collect();
+        Compression { q: QFactor::Givens(seq), core_local: core, wavelet_local: wavelet }
+    }
+}
+
+/// Off-diagonal energy of row k (all coordinates — retired rows' entries
+/// are truncated too, so they count).
+#[inline]
+fn off_energy(a: &Mat, k: usize) -> f64 {
+    let row = a.row(k);
+    let mut s = 0.0;
+    for (l, v) in row.iter().enumerate() {
+        if l != k {
+            s += v * v;
+        }
+    }
+    s
+}
+
+/// Min-residual scoring: closed-form best rotation for pair (i, j).
+#[inline]
+fn plan_min_residual(a: &Mat, g: &Mat, i: usize, j: usize) -> PairPlan {
+    let aii = a.at(i, i);
+    let ajj = a.at(j, j);
+    let aij = a.at(i, j);
+    // Outside-coordinate Gram of rows i, j:
+    //   M_ab = Σ_{k∉{i,j}} A_ak A_bk = G_ab − A_ai A_bi − A_aj A_bj.
+    let m_ii = (g.at(i, i) - aii * aii - aij * aij).max(0.0);
+    let m_jj = (g.at(j, j) - aij * aij - ajj * ajj).max(0.0);
+    let m_ij = g.at(i, j) - aii * aij - aij * ajj;
+
+    // Candidate 1: retire along the λ_min eigenvector of M.
+    let tr = m_ii + m_jj;
+    let disc = ((m_ii - m_jj) * (m_ii - m_jj) + 4.0 * m_ij * m_ij).sqrt();
+    let lam_min = 0.5 * (tr - disc).max(0.0);
+    // Unit eigenvector (v0, v1) for λ_min; retired direction = (−s, c).
+    let (v0, v1) = eigvec2(m_ii, m_ij, m_jj, 0.5 * (tr - disc));
+    let (c1, s1) = (v1, -v0);
+    // Rotated in-block entry A'_ij for this angle.
+    let aij_rot = s1 * c1 * (ajj - aii) + (c1 * c1 - s1 * s1) * aij;
+    let score1 = lam_min + aij_rot * aij_rot;
+
+    // Candidate 2: classic Jacobi angle (zeroes A'_ij), retired row = new j.
+    let gj = Givens::jacobi(0, 1, aii, aij, ajj);
+    let (c2, s2) = (gj.c, gj.s);
+    // Energy of new row j outside {i, j}: [−s, c] M [−s, c]ᵀ.
+    let e_j = s2 * s2 * m_ii - 2.0 * s2 * c2 * m_ij + c2 * c2 * m_jj;
+    // And of new row i: [c, s] M [c, s]ᵀ (we could retire i by swapping —
+    // equivalent to angle choice, so just take the better of the two).
+    let e_i = c2 * c2 * m_ii + 2.0 * s2 * c2 * m_ij + s2 * s2 * m_jj;
+    let score2 = e_j.min(e_i);
+
+    if score1 <= score2 {
+        PairPlan { score: score1, c: c1, s: s1 }
+    } else if e_j <= e_i {
+        PairPlan { score: score2, c: c2, s: s2 }
+    } else {
+        // Retire "new i" instead: compose with a quarter turn so the
+        // retired coordinate is still the j slot:
+        // (c, s) ← (−s, c) maps new-j to old new-i direction.
+        PairPlan { score: score2, c: -s2, s: c2 }
+    }
+}
+
+/// Classic MMF scoring: maximal normalized correlation, Jacobi angle.
+/// (Score is negated correlation so that "smaller is better" uniformly.)
+#[inline]
+fn plan_max_correlation(a: &Mat, g: &Mat, i: usize, j: usize) -> PairPlan {
+    let gii = g.at(i, i).max(1e-300);
+    let gjj = g.at(j, j).max(1e-300);
+    let corr = g.at(i, j).abs() / (gii * gjj).sqrt();
+    let gj = Givens::jacobi(0, 1, a.at(i, i), a.at(i, j), a.at(j, j));
+    PairPlan { score: -corr, c: gj.c, s: gj.s }
+}
+
+/// Unit eigenvector of [[a, b], [b, d]] for eigenvalue `lam`.
+#[inline]
+fn eigvec2(a: f64, b: f64, d: f64, lam: f64) -> (f64, f64) {
+    // (a − λ) v0 + b v1 = 0
+    let (mut v0, mut v1) = if b.abs() > 1e-300 {
+        (b, lam - a)
+    } else if a <= d {
+        (1.0, 0.0)
+    } else {
+        (0.0, 1.0)
+    };
+    let n = (v0 * v0 + v1 * v1).sqrt();
+    if n < 1e-300 {
+        return (1.0, 0.0);
+    }
+    v0 /= n;
+    v1 /= n;
+    let _ = d;
+    (v0, v1)
+}
+
+impl Compressor for MmfCompressor {
+    fn compress(&self, a: &Mat, c_target: usize, _rng: &mut Rng) -> Compression {
+        if c_target >= a.rows || a.rows < 2 {
+            return Compression::identity(a.rows);
+        }
+        let g = syrk_ata(a);
+        self.compress_with_gram(a, &g, c_target)
+    }
+
+    fn name(&self) -> &'static str {
+        "mmf"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::test_util::compression_error;
+    use crate::kernels::{Kernel, RbfKernel};
+    use crate::la::blas::gemm_nt;
+
+    fn kernel_block(m: usize, seed: u64, ell: f64) -> Mat {
+        let mut rng = Rng::new(seed);
+        let x = Mat::from_fn(m, 3, |_, _| rng.normal());
+        let mut k = RbfKernel::new(ell).gram_sym(&x);
+        k.add_diag(0.1);
+        k
+    }
+
+    #[test]
+    fn rotation_count_matches_paper() {
+        // With no pre-sweeps, Q is a product of exactly m − c Givens
+        // rotations (the paper's Prop. 4/5 accounting).
+        let a = kernel_block(24, 1, 1.0);
+        let mmf = MmfCompressor { extra_rotations: 0, ..MmfCompressor::default() };
+        let comp = mmf.compress(&a, 12, &mut Rng::new(0));
+        match &comp.q {
+            QFactor::Givens(seq) => assert_eq!(seq.len(), 12),
+            _ => panic!("expected Givens"),
+        }
+        assert_eq!(comp.core_local.len(), 12);
+        assert_eq!(comp.wavelet_local.len(), 12);
+        assert!(comp.is_valid_for(24));
+    }
+
+    #[test]
+    fn identity_when_no_compression_requested() {
+        let a = kernel_block(8, 2, 1.0);
+        let comp = MmfCompressor::default().compress(&a, 8, &mut Rng::new(0));
+        assert!(matches!(comp.q, QFactor::Identity));
+        assert_eq!(comp.core_local.len(), 8);
+    }
+
+    #[test]
+    fn approximation_error_small_on_kernel_blocks() {
+        // A smooth kernel block compresses well at γ = 1/2.
+        let a = kernel_block(32, 3, 2.0);
+        let comp = MmfCompressor::default().compress(&a, 16, &mut Rng::new(0));
+        let err = compression_error(&a, &comp);
+        assert!(err < 0.12, "relative error {err}");
+    }
+
+    #[test]
+    fn min_residual_beats_max_correlation() {
+        let a = kernel_block(40, 4, 0.8);
+        let e_min = compression_error(
+            &a,
+            &MmfCompressor::with_rule(PivotRule::MinResidual).compress(&a, 20, &mut Rng::new(0)),
+        );
+        let e_cor = compression_error(
+            &a,
+            &MmfCompressor::with_rule(PivotRule::MaxCorrelation).compress(&a, 20, &mut Rng::new(0)),
+        );
+        assert!(e_min <= e_cor + 1e-9, "min-residual {e_min} vs correlation {e_cor}");
+    }
+
+    #[test]
+    fn error_decreases_with_core_size() {
+        let a = kernel_block(40, 4, 0.8);
+        let mmf = MmfCompressor::default();
+        let e_small = compression_error(&a, &mmf.compress(&a, 8, &mut Rng::new(0)));
+        let e_large = compression_error(&a, &mmf.compress(&a, 32, &mut Rng::new(0)));
+        assert!(
+            e_large <= e_small + 1e-9,
+            "larger core should not be worse: {e_large} vs {e_small}"
+        );
+    }
+
+    #[test]
+    fn diagonal_matrix_is_free() {
+        // A diagonal matrix is already core-diagonal: error ~ 0 at any c.
+        let a = Mat::diag(&[5.0, 4.0, 3.0, 2.0, 1.0, 0.5]);
+        let comp = MmfCompressor::default().compress(&a, 2, &mut Rng::new(0));
+        let err = compression_error(&a, &comp);
+        assert!(err < 1e-10, "err={err}");
+    }
+
+    #[test]
+    fn compress_with_external_gram_matches_internal() {
+        let a = kernel_block(20, 5, 1.0);
+        let g = syrk_ata(&a);
+        let mmf = MmfCompressor::default();
+        let c1 = mmf.compress(&a, 10, &mut Rng::new(0));
+        let c2 = mmf.compress_with_gram(&a, &g, 10);
+        assert_eq!(c1.core_local, c2.core_local);
+        assert_eq!(c1.wavelet_local, c2.wavelet_local);
+    }
+
+    #[test]
+    fn spsd_preservation_of_core() {
+        // Core block of the rotated matrix must stay psd (Prop. 1).
+        let mut rng = Rng::new(6);
+        let b = Mat::from_fn(18, 18, |_, _| rng.normal());
+        let a = gemm_nt(&b, &b); // psd
+        let comp = MmfCompressor::default().compress(&a, 9, &mut Rng::new(0));
+        let q = comp.q.to_dense(18);
+        let rotated = crate::la::blas::conjugate(&q.transpose(), &a);
+        let core = rotated.gather(&comp.core_local, &comp.core_local);
+        let e = crate::la::evd::SymEig::new(&core);
+        assert!(e.values[0] > -1e-8, "core min eig {}", e.values[0]);
+        // wavelet diagonal entries are nonnegative
+        for &w in &comp.wavelet_local {
+            assert!(rotated.at(w, w) > -1e-9);
+        }
+    }
+
+    #[test]
+    fn quarter_turn_composition_is_orthogonal() {
+        // The retire-new-i branch composes a quarter turn; the resulting
+        // sequence must still be orthogonal.
+        let a = kernel_block(16, 7, 0.5);
+        let comp = MmfCompressor::default().compress(&a, 4, &mut Rng::new(0));
+        let q = comp.q.to_dense(16);
+        let qtq = crate::la::blas::gemm_tn(&q, &q);
+        assert!(qtq.sub(&Mat::eye(16)).max_abs() < 1e-10);
+    }
+}

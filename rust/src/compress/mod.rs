@@ -1,0 +1,228 @@
+//! Core-diagonal compression (paper Definitions 1–2).
+//!
+//! A c-core-diagonal compression of a symmetric block A ∈ R^{m×m} is
+//! A ≈ Qᵀ H Q with Q orthogonal and H zero except for a c×c "core" block
+//! and the remaining diagonal. The **core** rows of Q span the subspace
+//! that interacts with the rest of the matrix; the **wavelet** rows carry
+//! purely local detail and survive only through their diagonal entries.
+//!
+//! Three interchangeable compressors (MKA is a meta-algorithm, §3):
+//! * [`mmf::MmfCompressor`] — greedy-Jacobi Multiresolution Matrix
+//!   Factorization: Q is a product of ⌊(1−γ)m⌋ Givens rotations. Fast and
+//!   sparse; the paper's experimental choice.
+//! * [`spca::SpcaCompressor`] — augmented sparse PCA: c sparse loading
+//!   vectors for the core + exact eigenbasis of the complement.
+//! * [`evd::EvdCompressor`] — exact eigendecomposition oracle: optimal
+//!   Frobenius split, dense Q, O(m³); upper bound for ablations.
+
+pub mod evd;
+pub mod mmf;
+pub mod spca;
+
+use crate::la::dense::Mat;
+use crate::la::givens::GivensSeq;
+use crate::util::Rng;
+
+/// The orthogonal factor produced by a compressor, in block-local
+/// coordinates 0..m.
+#[derive(Clone, Debug)]
+pub enum QFactor {
+    /// Product of Givens rotations (MMF): Q = g_L … g_1.
+    Givens(GivensSeq),
+    /// Dense orthogonal matrix, rows are output coordinates (SPCA/EVD).
+    Dense(Mat),
+    /// Identity (block too small to compress).
+    Identity,
+}
+
+impl QFactor {
+    /// x ← Q x (block-local vector).
+    pub fn apply_vec(&self, x: &mut [f64]) {
+        match self {
+            QFactor::Givens(seq) => seq.apply_vec(x),
+            QFactor::Dense(q) => {
+                let y = crate::la::blas::gemv(q, x);
+                x.copy_from_slice(&y);
+            }
+            QFactor::Identity => {}
+        }
+    }
+
+    /// x ← Qᵀ x.
+    pub fn apply_vec_t(&self, x: &mut [f64]) {
+        match self {
+            QFactor::Givens(seq) => seq.apply_vec_t(x),
+            QFactor::Dense(q) => {
+                let y = crate::la::blas::gemv_t(q, x);
+                x.copy_from_slice(&y);
+            }
+            QFactor::Identity => {}
+        }
+    }
+
+    /// Number of stored reals (Proposition 5 storage audits).
+    pub fn stored_reals(&self) -> usize {
+        match self {
+            QFactor::Givens(seq) => seq.stored_reals(),
+            QFactor::Dense(q) => q.rows * q.cols,
+            QFactor::Identity => 0,
+        }
+    }
+
+    /// Dense m×m representation (tests only).
+    pub fn to_dense(&self, m: usize) -> Mat {
+        match self {
+            QFactor::Givens(seq) => seq.to_dense(m),
+            QFactor::Dense(q) => q.clone(),
+            QFactor::Identity => Mat::eye(m),
+        }
+    }
+}
+
+/// Result of core-diagonally compressing one m×m block.
+///
+/// In the *rotated* coordinates (after applying `q`), positions
+/// `core_local` form the dense core and `wavelet_local` are kept only as
+/// diagonal entries. Diagonal values are re-read from the globally rotated
+/// matrix by the MKA driver, so they are not stored here.
+#[derive(Clone, Debug)]
+pub struct Compression {
+    pub q: QFactor,
+    /// Rotated-coordinate positions (block-local) forming the core.
+    pub core_local: Vec<usize>,
+    /// Rotated-coordinate positions kept as pure diagonal.
+    pub wavelet_local: Vec<usize>,
+}
+
+impl Compression {
+    /// Identity compression: everything is core.
+    pub fn identity(m: usize) -> Compression {
+        Compression {
+            q: QFactor::Identity,
+            core_local: (0..m).collect(),
+            wavelet_local: Vec::new(),
+        }
+    }
+
+    /// Sanity: core ∪ wavelet partitions 0..m.
+    pub fn is_valid_for(&self, m: usize) -> bool {
+        let mut seen = vec![false; m];
+        for &i in self.core_local.iter().chain(&self.wavelet_local) {
+            if i >= m || seen[i] {
+                return false;
+            }
+            seen[i] = true;
+        }
+        seen.iter().all(|&b| b)
+    }
+}
+
+/// A core-diagonal compressor: given a symmetric block and a target core
+/// size, produce the rotation and the core/wavelet split.
+pub trait Compressor: Send + Sync {
+    fn compress(&self, a: &Mat, c_target: usize, rng: &mut Rng) -> Compression;
+    fn name(&self) -> &'static str;
+}
+
+/// Which compressor to use (config / CLI).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CompressorKind {
+    Mmf,
+    Spca,
+    Evd,
+}
+
+impl CompressorKind {
+    pub fn parse(s: &str) -> CompressorKind {
+        match s {
+            "spca" => CompressorKind::Spca,
+            "evd" => CompressorKind::Evd,
+            _ => CompressorKind::Mmf,
+        }
+    }
+
+    pub fn build(self) -> Box<dyn Compressor> {
+        match self {
+            CompressorKind::Mmf => Box::new(mmf::MmfCompressor::default()),
+            CompressorKind::Spca => Box::new(spca::SpcaCompressor::default()),
+            CompressorKind::Evd => Box::new(evd::EvdCompressor),
+        }
+    }
+}
+
+/// Frobenius error of the core-diagonal approximation implied by a
+/// compression: A ≈ Qᵀ H Q with H = rotated A restricted to core×core +
+/// diagonal at wavelet positions. O(m³) — diagnostics and ablations only.
+pub fn compression_error(a: &Mat, comp: &Compression) -> f64 {
+    use crate::la::blas::conjugate;
+    let m = a.rows;
+    let q = comp.q.to_dense(m);
+    // rotated = Q A Qᵀ
+    let rotated = conjugate(&q.transpose(), a);
+    // build H: core block dense + wavelet diagonal
+    let mut h = Mat::zeros(m, m);
+    for &i in &comp.core_local {
+        for &j in &comp.core_local {
+            h.set(i, j, rotated.at(i, j));
+        }
+    }
+    for &i in &comp.wavelet_local {
+        h.set(i, i, rotated.at(i, i));
+    }
+    // reconstruct: Qᵀ H Q
+    let rec = conjugate(&q, &h);
+    rec.sub(a).frob_norm() / a.frob_norm().max(1e-300)
+}
+
+#[cfg(test)]
+pub(crate) mod test_util {
+    use super::*;
+
+    pub use super::compression_error;
+
+    pub fn is_orthogonal(q: &Mat, tol: f64) -> bool {
+        let qtq = crate::la::blas::gemm_tn(q, q);
+        qtq.sub(&Mat::eye(q.cols)).max_abs() < tol
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn identity_compression_valid() {
+        let c = Compression::identity(5);
+        assert!(c.is_valid_for(5));
+        assert_eq!(c.core_local.len(), 5);
+        assert_eq!(c.q.stored_reals(), 0);
+    }
+
+    #[test]
+    fn validity_detects_overlap() {
+        let c = Compression {
+            q: QFactor::Identity,
+            core_local: vec![0, 1],
+            wavelet_local: vec![1, 2],
+        };
+        assert!(!c.is_valid_for(3));
+    }
+
+    #[test]
+    fn kind_parse() {
+        assert_eq!(CompressorKind::parse("mmf"), CompressorKind::Mmf);
+        assert_eq!(CompressorKind::parse("spca"), CompressorKind::Spca);
+        assert_eq!(CompressorKind::parse("evd"), CompressorKind::Evd);
+        assert_eq!(CompressorKind::parse("???"), CompressorKind::Mmf);
+    }
+
+    #[test]
+    fn qfactor_identity_apply() {
+        let q = QFactor::Identity;
+        let mut x = vec![1.0, 2.0];
+        q.apply_vec(&mut x);
+        assert_eq!(x, vec![1.0, 2.0]);
+        q.apply_vec_t(&mut x);
+        assert_eq!(x, vec![1.0, 2.0]);
+    }
+}

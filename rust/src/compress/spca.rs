@@ -1,0 +1,233 @@
+//! Augmented Sparse PCA compressor (paper §3 "Augmented Sparse PCA").
+//!
+//! Finds c sparse, orthonormal loading vectors V maximizing ‖VᵀAV‖_F
+//! (truncated power iteration with hard thresholding, Yuan & Zhang-style),
+//! orthonormalizes them into Q_sc, and — following the paper — completes
+//! with Q_wlet = U·Ô where U is a basis of the orthogonal complement and
+//! Ô = argmax_{OᵀO=I} ‖diag(Oᵀ Uᵀ A U O)‖, i.e. the eigenvectors of UᵀAU.
+//! This makes the wavelet part of the rotated matrix *exactly* diagonal,
+//! which is the Frobenius-optimal completion.
+
+use super::{Compression, Compressor, QFactor};
+use crate::la::blas::{dot, gemm, gemm_tn, gemv};
+use crate::la::dense::Mat;
+use crate::la::evd::SymEig;
+use crate::la::qr::{complement_basis, orthonormalize_cols};
+use crate::util::Rng;
+
+/// Sparse-PCA-based core-diagonal compressor.
+#[derive(Clone, Debug)]
+pub struct SpcaCompressor {
+    /// Fraction of entries kept per loading vector (sparsity level).
+    pub keep_frac: f64,
+    /// Power-iteration steps per component.
+    pub iters: usize,
+}
+
+impl Default for SpcaCompressor {
+    fn default() -> Self {
+        SpcaCompressor { keep_frac: 0.3, iters: 30 }
+    }
+}
+
+impl SpcaCompressor {
+    /// One sparse principal vector of `a` by truncated power iteration.
+    fn sparse_pc(&self, a: &Mat, keep: usize, rng: &mut Rng) -> Vec<f64> {
+        let m = a.rows;
+        let mut v: Vec<f64> = (0..m).map(|_| rng.normal()).collect();
+        normalize(&mut v);
+        for _ in 0..self.iters {
+            let mut w = gemv(a, &v);
+            hard_threshold(&mut w, keep);
+            let n = norm(&w);
+            if n < 1e-14 {
+                // degenerate direction; restart dense
+                v = (0..m).map(|_| rng.normal()).collect();
+                normalize(&mut v);
+                continue;
+            }
+            for x in &mut w {
+                *x /= n;
+            }
+            v = w;
+        }
+        v
+    }
+}
+
+impl Compressor for SpcaCompressor {
+    fn compress(&self, a: &Mat, c_target: usize, rng: &mut Rng) -> Compression {
+        let m = a.rows;
+        if c_target >= m || m < 2 {
+            return Compression::identity(m);
+        }
+        let c = c_target.max(1);
+        let keep = ((m as f64) * self.keep_frac).ceil() as usize;
+        let keep = keep.clamp(2.min(m), m);
+
+        // ---- c sparse loading vectors with deflation ----------------------
+        let mut defl = a.clone();
+        let mut loadings = Mat::zeros(m, c);
+        for k in 0..c {
+            let v = self.sparse_pc(&defl, keep, rng);
+            // Rayleigh quotient for deflation scale.
+            let av = gemv(&defl, &v);
+            let lam = dot(&v, &av);
+            // defl ← defl − λ v vᵀ
+            for i in 0..m {
+                let vi = v[i];
+                if vi == 0.0 {
+                    continue;
+                }
+                let row = defl.row_mut(i);
+                for j in 0..m {
+                    row[j] -= lam * vi * v[j];
+                }
+            }
+            for i in 0..m {
+                loadings.set(i, k, v[i]);
+            }
+        }
+
+        // ---- orthonormalize into Q_sc; complete with eigenbasis of UᵀAU ---
+        let mut q_sc = orthonormalize_cols(&loadings, 1e-10);
+        // Guard: if thresholding collapsed directions, pad with random ones.
+        let mut guard_rng = Rng::new(0x5bca ^ m as u64);
+        while q_sc.cols < c {
+            let mut extra = Mat::zeros(m, q_sc.cols + 1);
+            extra.set_block(0, 0, &q_sc);
+            for i in 0..m {
+                extra.set(i, q_sc.cols, guard_rng.normal());
+            }
+            q_sc = orthonormalize_cols(&extra, 1e-10);
+        }
+        let u = complement_basis(&q_sc); // m×(m−c)
+        let b = gemm_tn(&u, &gemm(a, &u)); // UᵀAU
+        let eig = SymEig::new(&b);
+        let q_wlet = gemm(&u, &eig.vectors); // m×(m−c)
+
+        // Assemble dense Q with *rows* as output coordinates: first c rows
+        // are Q_scᵀ, the rest Q_wletᵀ.
+        let mut q = Mat::zeros(m, m);
+        for k in 0..c {
+            for i in 0..m {
+                q.set(k, i, q_sc.at(i, k));
+            }
+        }
+        for k in 0..(m - c) {
+            for i in 0..m {
+                q.set(c + k, i, q_wlet.at(i, k));
+            }
+        }
+
+        Compression {
+            q: QFactor::Dense(q),
+            core_local: (0..c).collect(),
+            wavelet_local: (c..m).collect(),
+        }
+    }
+
+    fn name(&self) -> &'static str {
+        "spca"
+    }
+}
+
+fn norm(v: &[f64]) -> f64 {
+    dot(v, v).sqrt()
+}
+
+fn normalize(v: &mut [f64]) {
+    let n = norm(v).max(1e-300);
+    for x in v.iter_mut() {
+        *x /= n;
+    }
+}
+
+/// Zero all but the `keep` largest-magnitude entries.
+fn hard_threshold(v: &mut [f64], keep: usize) {
+    if keep >= v.len() {
+        return;
+    }
+    let mut mags: Vec<(f64, usize)> = v.iter().map(|x| x.abs()).zip(0..).collect();
+    mags.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
+    let cutoff_set: std::collections::HashSet<usize> =
+        mags[..keep].iter().map(|&(_, i)| i).collect();
+    for (i, x) in v.iter_mut().enumerate() {
+        if !cutoff_set.contains(&i) {
+            *x = 0.0;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::test_util::{compression_error, is_orthogonal};
+    use crate::kernels::{Kernel, RbfKernel};
+
+    fn kernel_block(m: usize, seed: u64, ell: f64) -> Mat {
+        let mut rng = Rng::new(seed);
+        let x = Mat::from_fn(m, 3, |_, _| rng.normal());
+        let mut k = RbfKernel::new(ell).gram_sym(&x);
+        k.add_diag(0.1);
+        k
+    }
+
+    #[test]
+    fn q_is_orthogonal() {
+        let a = kernel_block(16, 1, 1.5);
+        let comp = SpcaCompressor::default().compress(&a, 6, &mut Rng::new(1));
+        let q = comp.q.to_dense(16);
+        assert!(is_orthogonal(&q, 1e-8));
+        assert!(comp.is_valid_for(16));
+    }
+
+    #[test]
+    fn wavelet_block_exactly_diagonal() {
+        // The defining property of the augmented-SPCA completion: the
+        // wavelet×wavelet block of QAQᵀ is diagonal.
+        let a = kernel_block(14, 2, 1.0);
+        let comp = SpcaCompressor::default().compress(&a, 5, &mut Rng::new(2));
+        let q = comp.q.to_dense(14);
+        let rot = crate::la::blas::conjugate(&q.transpose(), &a);
+        for &i in &comp.wavelet_local {
+            for &j in &comp.wavelet_local {
+                if i != j {
+                    assert!(rot.at(i, j).abs() < 1e-8, "({i},{j}) = {}", rot.at(i, j));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn approximation_error_reasonable() {
+        let a = kernel_block(24, 3, 2.0);
+        let comp = SpcaCompressor::default().compress(&a, 12, &mut Rng::new(3));
+        let err = compression_error(&a, &comp);
+        assert!(err < 0.3, "err={err}");
+    }
+
+    #[test]
+    fn hard_threshold_keeps_largest() {
+        let mut v = vec![0.1, -5.0, 2.0, 0.01, 3.0];
+        hard_threshold(&mut v, 2);
+        assert_eq!(v, vec![0.0, -5.0, 0.0, 0.0, 3.0]);
+    }
+
+    #[test]
+    fn loading_vectors_are_sparse() {
+        let a = kernel_block(20, 4, 0.7);
+        let spca = SpcaCompressor { keep_frac: 0.25, iters: 25 };
+        let v = spca.sparse_pc(&a, 5, &mut Rng::new(4));
+        let nnz = v.iter().filter(|&&x| x != 0.0).count();
+        assert!(nnz <= 5, "nnz={nnz}");
+        assert!((norm(&v) - 1.0).abs() < 1e-10);
+    }
+
+    #[test]
+    fn identity_for_tiny_blocks() {
+        let a = Mat::eye(1);
+        let comp = SpcaCompressor::default().compress(&a, 1, &mut Rng::new(5));
+        assert!(matches!(comp.q, QFactor::Identity));
+    }
+}

@@ -1,0 +1,206 @@
+//! Layered service configuration: built-in defaults ← JSON config file ←
+//! `MKA_GP_*` environment variables ← CLI `--key value` overrides.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use crate::cluster::ClusterMethod;
+use crate::compress::CompressorKind;
+use crate::error::{Error, Result};
+use crate::mka::MkaConfig;
+use crate::util::json::Json;
+
+/// Coordinator service configuration.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ServiceConfig {
+    /// TCP bind address.
+    pub host: String,
+    pub port: u16,
+    /// Worker threads for fitting jobs.
+    pub n_workers: usize,
+    /// Artifacts directory for the XLA engine (None = native kernels only).
+    pub artifacts_dir: Option<PathBuf>,
+    /// Prediction batcher window (milliseconds) and max batch size.
+    pub batch_window_ms: u64,
+    pub max_batch: usize,
+    /// Default MKA parameters for fit requests that don't override them.
+    pub d_core: usize,
+    pub block_size: usize,
+    pub gamma: f64,
+    pub compressor: String,
+    pub cluster: String,
+    pub seed: u64,
+}
+
+impl Default for ServiceConfig {
+    fn default() -> Self {
+        ServiceConfig {
+            host: "127.0.0.1".into(),
+            port: 7470,
+            n_workers: 2,
+            artifacts_dir: None,
+            batch_window_ms: 5,
+            max_batch: 64,
+            d_core: 64,
+            block_size: 256,
+            gamma: 0.5,
+            compressor: "mmf".into(),
+            cluster: "bisect".into(),
+            seed: 42,
+        }
+    }
+}
+
+impl ServiceConfig {
+    /// Apply a flat key→value map (file/env/CLI all reduce to this).
+    pub fn apply(&mut self, kv: &BTreeMap<String, String>) -> Result<()> {
+        for (k, v) in kv {
+            match k.as_str() {
+                "host" => self.host = v.clone(),
+                "port" => self.port = parse(k, v)?,
+                "n_workers" | "workers" => self.n_workers = parse(k, v)?,
+                "artifacts_dir" | "artifacts" => {
+                    self.artifacts_dir =
+                        if v.is_empty() || v == "none" { None } else { Some(PathBuf::from(v)) }
+                }
+                "batch_window_ms" => self.batch_window_ms = parse(k, v)?,
+                "max_batch" => self.max_batch = parse(k, v)?,
+                "d_core" => self.d_core = parse(k, v)?,
+                "block_size" => self.block_size = parse(k, v)?,
+                "gamma" => self.gamma = parse(k, v)?,
+                "compressor" => self.compressor = v.clone(),
+                "cluster" => self.cluster = v.clone(),
+                "seed" => self.seed = parse(k, v)?,
+                _ => {} // unknown keys ignored (forward compatible)
+            }
+        }
+        self.validate()
+    }
+
+    /// Load overrides from a JSON file (flat string/number object).
+    pub fn apply_file(&mut self, path: &Path) -> Result<()> {
+        let text = std::fs::read_to_string(path)?;
+        let v = Json::parse(&text)?;
+        let obj = v
+            .as_obj()
+            .ok_or_else(|| Error::Config("config file must be a JSON object".into()))?;
+        let mut kv = BTreeMap::new();
+        for (k, val) in obj {
+            let s = match val {
+                Json::Str(s) => s.clone(),
+                Json::Num(x) => format!("{x}"),
+                Json::Bool(b) => format!("{b}"),
+                _ => continue,
+            };
+            kv.insert(k.clone(), s);
+        }
+        self.apply(&kv)
+    }
+
+    /// Pull `MKA_GP_<KEY>` environment variables.
+    pub fn apply_env(&mut self) -> Result<()> {
+        let mut kv = BTreeMap::new();
+        for (k, v) in std::env::vars() {
+            if let Some(rest) = k.strip_prefix("MKA_GP_") {
+                kv.insert(rest.to_ascii_lowercase(), v);
+            }
+        }
+        self.apply(&kv)
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if !(0.0 < self.gamma && self.gamma < 1.0) {
+            return Err(Error::Config(format!("gamma out of range: {}", self.gamma)));
+        }
+        if self.n_workers == 0 || self.max_batch == 0 {
+            return Err(Error::Config("n_workers and max_batch must be >= 1".into()));
+        }
+        Ok(())
+    }
+
+    /// The MkaConfig implied by the service defaults.
+    pub fn mka_config(&self) -> MkaConfig {
+        MkaConfig {
+            d_core: self.d_core,
+            block_size: self.block_size,
+            gamma: self.gamma,
+            compressor: CompressorKind::parse(&self.compressor),
+            cluster_method: ClusterMethod::parse(&self.cluster),
+            seed: self.seed,
+            n_threads: self.n_workers,
+            ..MkaConfig::default()
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj()
+            .with("host", Json::Str(self.host.clone()))
+            .with("port", Json::Num(self.port as f64))
+            .with("n_workers", Json::Num(self.n_workers as f64))
+            .with("d_core", Json::Num(self.d_core as f64))
+            .with("block_size", Json::Num(self.block_size as f64))
+            .with("gamma", Json::Num(self.gamma))
+            .with("compressor", Json::Str(self.compressor.clone()))
+            .with("cluster", Json::Str(self.cluster.clone()))
+    }
+}
+
+fn parse<T: std::str::FromStr>(k: &str, v: &str) -> Result<T> {
+    v.parse().map_err(|_| Error::Config(format!("bad value for {k}: {v:?}")))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_validate() {
+        assert!(ServiceConfig::default().validate().is_ok());
+    }
+
+    #[test]
+    fn apply_overrides() {
+        let mut c = ServiceConfig::default();
+        let mut kv = BTreeMap::new();
+        kv.insert("port".to_string(), "9999".to_string());
+        kv.insert("gamma".to_string(), "0.7".to_string());
+        kv.insert("compressor".to_string(), "spca".to_string());
+        kv.insert("unknown_key".to_string(), "ignored".to_string());
+        c.apply(&kv).unwrap();
+        assert_eq!(c.port, 9999);
+        assert_eq!(c.gamma, 0.7);
+        assert_eq!(c.mka_config().compressor, CompressorKind::Spca);
+    }
+
+    #[test]
+    fn bad_values_rejected() {
+        let mut c = ServiceConfig::default();
+        let mut kv = BTreeMap::new();
+        kv.insert("port".to_string(), "not-a-number".to_string());
+        assert!(c.apply(&kv).is_err());
+        let mut kv2 = BTreeMap::new();
+        kv2.insert("gamma".to_string(), "1.5".to_string());
+        assert!(c.apply(&kv2).is_err());
+    }
+
+    #[test]
+    fn file_layering() {
+        let dir = std::env::temp_dir().join("mka_gp_cfg_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("cfg.json");
+        std::fs::write(&p, r#"{"port": 8123, "compressor": "evd", "gamma": 0.6}"#).unwrap();
+        let mut c = ServiceConfig::default();
+        c.apply_file(&p).unwrap();
+        assert_eq!(c.port, 8123);
+        assert_eq!(c.compressor, "evd");
+        assert_eq!(c.gamma, 0.6);
+    }
+
+    #[test]
+    fn json_roundtrip_summary() {
+        let c = ServiceConfig::default();
+        let j = c.to_json();
+        assert_eq!(j.usize_field("port"), Some(7470));
+        assert_eq!(j.str_field("compressor"), Some("mmf"));
+    }
+}

@@ -1,0 +1,176 @@
+//! Job store and model registry: fit requests run asynchronously on the
+//! worker pool; finished models are published under a name and served by
+//! the prediction path.
+
+use std::collections::BTreeMap;
+use std::sync::{Arc, Mutex};
+
+use crate::gp::GpModel;
+use crate::util::json::Json;
+
+/// Lifecycle of a fit job.
+#[derive(Clone, Debug, PartialEq)]
+pub enum JobState {
+    Queued,
+    Running,
+    Done { fit_secs: f64 },
+    Failed { error: String },
+}
+
+impl JobState {
+    pub fn label(&self) -> &'static str {
+        match self {
+            JobState::Queued => "queued",
+            JobState::Running => "running",
+            JobState::Done { .. } => "done",
+            JobState::Failed { .. } => "failed",
+        }
+    }
+}
+
+/// Tracks job states by id.
+#[derive(Default)]
+pub struct JobStore {
+    next_id: Mutex<u64>,
+    jobs: Mutex<BTreeMap<u64, (String, JobState)>>,
+}
+
+impl JobStore {
+    pub fn new() -> JobStore {
+        JobStore::default()
+    }
+
+    /// Create a new job (Queued) for the given model name; returns its id.
+    pub fn create(&self, model: &str) -> u64 {
+        let mut id = self.next_id.lock().unwrap();
+        *id += 1;
+        let jid = *id;
+        self.jobs.lock().unwrap().insert(jid, (model.to_string(), JobState::Queued));
+        jid
+    }
+
+    pub fn set_state(&self, id: u64, state: JobState) {
+        if let Some(entry) = self.jobs.lock().unwrap().get_mut(&id) {
+            entry.1 = state;
+        }
+    }
+
+    pub fn get(&self, id: u64) -> Option<(String, JobState)> {
+        self.jobs.lock().unwrap().get(&id).cloned()
+    }
+
+    pub fn to_json(&self, id: u64) -> Json {
+        match self.get(id) {
+            None => Json::obj().with("error", Json::Str(format!("no job {id}"))),
+            Some((model, state)) => {
+                let mut j = Json::obj()
+                    .with("job_id", Json::Num(id as f64))
+                    .with("model", Json::Str(model))
+                    .with("state", Json::Str(state.label().to_string()));
+                match state {
+                    JobState::Done { fit_secs } => {
+                        j.set("fit_secs", Json::Num(fit_secs));
+                    }
+                    JobState::Failed { error } => {
+                        j.set("error", Json::Str(error));
+                    }
+                    _ => {}
+                }
+                j
+            }
+        }
+    }
+}
+
+/// Published, fitted models by name.
+#[derive(Default, Clone)]
+pub struct ModelRegistry {
+    inner: Arc<Mutex<BTreeMap<String, Arc<dyn GpModel>>>>,
+}
+
+impl ModelRegistry {
+    pub fn new() -> ModelRegistry {
+        ModelRegistry::default()
+    }
+
+    pub fn publish(&self, name: &str, model: Arc<dyn GpModel>) {
+        self.inner.lock().unwrap().insert(name.to_string(), model);
+    }
+
+    pub fn get(&self, name: &str) -> Option<Arc<dyn GpModel>> {
+        self.inner.lock().unwrap().get(name).cloned()
+    }
+
+    pub fn remove(&self, name: &str) -> bool {
+        self.inner.lock().unwrap().remove(name).is_some()
+    }
+
+    pub fn names(&self) -> Vec<String> {
+        self.inner.lock().unwrap().keys().cloned().collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gp::Prediction;
+    use crate::la::dense::Mat;
+
+    struct DummyModel;
+    impl GpModel for DummyModel {
+        fn predict(&self, x: &Mat) -> Prediction {
+            Prediction { mean: vec![0.0; x.rows], var: vec![1.0; x.rows] }
+        }
+        fn name(&self) -> String {
+            "dummy".into()
+        }
+    }
+
+    #[test]
+    fn job_lifecycle() {
+        let store = JobStore::new();
+        let id = store.create("m1");
+        assert_eq!(store.get(id).unwrap().1, JobState::Queued);
+        store.set_state(id, JobState::Running);
+        assert_eq!(store.get(id).unwrap().1.label(), "running");
+        store.set_state(id, JobState::Done { fit_secs: 0.5 });
+        let j = store.to_json(id);
+        assert_eq!(j.str_field("state"), Some("done"));
+        assert_eq!(j.num_field("fit_secs"), Some(0.5));
+    }
+
+    #[test]
+    fn unique_ids() {
+        let store = JobStore::new();
+        let a = store.create("a");
+        let b = store.create("b");
+        assert_ne!(a, b);
+    }
+
+    #[test]
+    fn failed_state_carries_error() {
+        let store = JobStore::new();
+        let id = store.create("m");
+        store.set_state(id, JobState::Failed { error: "boom".into() });
+        let j = store.to_json(id);
+        assert_eq!(j.str_field("state"), Some("failed"));
+        assert_eq!(j.str_field("error"), Some("boom"));
+    }
+
+    #[test]
+    fn unknown_job_json() {
+        let store = JobStore::new();
+        assert!(store.to_json(99).str_field("error").is_some());
+    }
+
+    #[test]
+    fn registry_publish_get_remove() {
+        let reg = ModelRegistry::new();
+        assert!(reg.get("m").is_none());
+        reg.publish("m", Arc::new(DummyModel));
+        assert!(reg.get("m").is_some());
+        assert_eq!(reg.names(), vec!["m".to_string()]);
+        assert!(reg.remove("m"));
+        assert!(!reg.remove("m"));
+    }
+}

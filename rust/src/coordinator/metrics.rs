@@ -1,0 +1,139 @@
+//! Lightweight metrics registry: named counters and latency histograms,
+//! exported as JSON through the `metrics` protocol op.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use crate::la::stats::quantile_sorted;
+use crate::util::json::Json;
+
+/// Registry of counters and histograms. Cheap to share behind an `Arc`.
+#[derive(Default)]
+pub struct Metrics {
+    counters: Mutex<BTreeMap<String, AtomicU64>>,
+    histograms: Mutex<BTreeMap<String, Vec<f64>>>,
+}
+
+impl Metrics {
+    pub fn new() -> Metrics {
+        Metrics::default()
+    }
+
+    /// Increment a counter by `delta`.
+    pub fn incr(&self, name: &str, delta: u64) {
+        let mut c = self.counters.lock().unwrap();
+        c.entry(name.to_string())
+            .or_insert_with(|| AtomicU64::new(0))
+            .fetch_add(delta, Ordering::Relaxed);
+    }
+
+    /// Record one observation (e.g. latency seconds).
+    pub fn observe(&self, name: &str, value: f64) {
+        let mut h = self.histograms.lock().unwrap();
+        let v = h.entry(name.to_string()).or_default();
+        // Bound memory: keep a sliding window of the most recent 10k.
+        if v.len() >= 10_000 {
+            v.drain(..5_000);
+        }
+        v.push(value);
+    }
+
+    /// Convenience: time a closure into a histogram.
+    pub fn time<T>(&self, name: &str, f: impl FnOnce() -> T) -> T {
+        let t = crate::util::timer::Timer::start();
+        let out = f();
+        self.observe(name, t.elapsed_secs());
+        out
+    }
+
+    pub fn counter(&self, name: &str) -> u64 {
+        self.counters
+            .lock()
+            .unwrap()
+            .get(name)
+            .map(|c| c.load(Ordering::Relaxed))
+            .unwrap_or(0)
+    }
+
+    /// Snapshot everything as JSON: counters verbatim, histograms as
+    /// {count, mean, p50, p95, max}.
+    pub fn snapshot(&self) -> Json {
+        let mut counters = Json::obj();
+        for (k, v) in self.counters.lock().unwrap().iter() {
+            counters.set(k, Json::Num(v.load(Ordering::Relaxed) as f64));
+        }
+        let mut hists = Json::obj();
+        for (k, v) in self.histograms.lock().unwrap().iter() {
+            if v.is_empty() {
+                continue;
+            }
+            let mut sorted = v.clone();
+            sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            let mean = sorted.iter().sum::<f64>() / sorted.len() as f64;
+            hists.set(
+                k,
+                Json::obj()
+                    .with("count", Json::Num(sorted.len() as f64))
+                    .with("mean", Json::Num(mean))
+                    .with("p50", Json::Num(quantile_sorted(&sorted, 0.5)))
+                    .with("p95", Json::Num(quantile_sorted(&sorted, 0.95)))
+                    .with("max", Json::Num(*sorted.last().unwrap())),
+            );
+        }
+        Json::obj().with("counters", counters).with("histograms", hists)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_accumulate() {
+        let m = Metrics::new();
+        m.incr("req", 1);
+        m.incr("req", 2);
+        assert_eq!(m.counter("req"), 3);
+        assert_eq!(m.counter("nope"), 0);
+    }
+
+    #[test]
+    fn histograms_summarize() {
+        let m = Metrics::new();
+        for i in 1..=100 {
+            m.observe("lat", i as f64);
+        }
+        let snap = m.snapshot();
+        let lat = snap.get("histograms").unwrap().get("lat").unwrap();
+        assert_eq!(lat.num_field("count"), Some(100.0));
+        assert!((lat.num_field("p50").unwrap() - 50.5).abs() < 1.0);
+        assert_eq!(lat.num_field("max"), Some(100.0));
+    }
+
+    #[test]
+    fn time_records() {
+        let m = Metrics::new();
+        let out = m.time("op", || 7);
+        assert_eq!(out, 7);
+        let snap = m.snapshot();
+        assert!(snap.get("histograms").unwrap().get("op").is_some());
+    }
+
+    #[test]
+    fn window_bounds_memory() {
+        let m = Metrics::new();
+        for i in 0..25_000 {
+            m.observe("big", i as f64);
+        }
+        let snap = m.snapshot();
+        let count = snap
+            .get("histograms")
+            .unwrap()
+            .get("big")
+            .unwrap()
+            .num_field("count")
+            .unwrap();
+        assert!(count <= 10_000.0);
+    }
+}

@@ -1,0 +1,22 @@
+//! The serving coordinator — the L3 "production" layer around the MKA-GP
+//! library: a JSON-over-TCP request [`server`], a request [`router`], an
+//! async fit [`jobs`] store over a [`pool`] of workers, a dynamic
+//! prediction [`batcher`] (concurrent predicts against one model share a
+//! single joint-kernel factorization), a [`metrics`] registry and a
+//! layered [`config`] system.
+
+pub mod batcher;
+pub mod config;
+pub mod jobs;
+pub mod metrics;
+pub mod pool;
+pub mod router;
+pub mod server;
+
+pub use batcher::PredictBatcher;
+pub use config::ServiceConfig;
+pub use jobs::{JobState, JobStore, ModelRegistry};
+pub use metrics::Metrics;
+pub use pool::WorkerPool;
+pub use router::Router;
+pub use server::{Client, Server};

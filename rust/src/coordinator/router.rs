@@ -1,0 +1,344 @@
+//! Request router: dispatches protocol ops (JSON objects) to the fitting
+//! pool, the model registry and the prediction batcher.
+//!
+//! Protocol (one JSON object per request):
+//!   {"op": "ping"}
+//!   {"op": "fit", "model": "m1", "method": "mka", "x": [[...]...],
+//!    "y": [...], "params": {"lengthscale": 1.0, "sigma2": 0.1, "k": 32},
+//!    "async": true}
+//!   {"op": "job", "job_id": 1}
+//!   {"op": "predict", "model": "m1", "x": [[...]...]}
+//!   {"op": "models"} | {"op": "drop_model", "model": "m1"}
+//!   {"op": "metrics"} | {"op": "config"}
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use super::batcher::PredictBatcher;
+use super::config::ServiceConfig;
+use super::jobs::{JobState, JobStore, ModelRegistry};
+use super::metrics::Metrics;
+use super::pool::WorkerPool;
+use crate::data::dataset::Dataset;
+use crate::error::{Error, Result};
+use crate::experiments::methods::Method;
+use crate::gp::cv::HyperParams;
+use crate::gp::GpModel;
+use crate::la::dense::Mat;
+use crate::util::json::Json;
+use crate::util::timer::Timer;
+
+/// Shared coordinator state + dispatch.
+pub struct Router {
+    pub config: ServiceConfig,
+    pub metrics: Arc<Metrics>,
+    pub registry: ModelRegistry,
+    pub jobs: Arc<JobStore>,
+    pool: WorkerPool,
+    batcher: PredictBatcher,
+}
+
+impl Router {
+    pub fn new(config: ServiceConfig) -> Router {
+        let metrics = Arc::new(Metrics::new());
+        let registry = ModelRegistry::new();
+        let batcher = PredictBatcher::start(
+            registry.clone(),
+            Arc::clone(&metrics),
+            Duration::from_millis(config.batch_window_ms),
+            config.max_batch,
+        );
+        let pool = WorkerPool::new(config.n_workers);
+        Router { config, metrics, registry, jobs: Arc::new(JobStore::new()), pool, batcher }
+    }
+
+    /// Handle one request; never panics — protocol errors become
+    /// `{"ok": false, "error": ...}`.
+    pub fn handle(&self, req: &Json) -> Json {
+        self.metrics.incr("requests", 1);
+        let op = req.str_field("op").unwrap_or("");
+        let out = match op {
+            "ping" => Ok(Json::obj().with("pong", Json::Bool(true))),
+            "fit" => self.handle_fit(req),
+            "job" => self.handle_job(req),
+            "predict" => self.handle_predict(req),
+            "models" => Ok(Json::obj().with(
+                "models",
+                Json::Arr(self.registry.names().into_iter().map(Json::Str).collect()),
+            )),
+            "drop_model" => {
+                let name = req.str_field("model").unwrap_or("");
+                Ok(Json::obj().with("dropped", Json::Bool(self.registry.remove(name))))
+            }
+            "metrics" => Ok(self.metrics.snapshot()),
+            "config" => Ok(self.config.to_json()),
+            other => Err(Error::Protocol(format!("unknown op {other:?}"))),
+        };
+        match out {
+            Ok(mut j) => {
+                j.set("ok", Json::Bool(true));
+                j
+            }
+            Err(e) => {
+                self.metrics.incr("errors", 1);
+                Json::obj()
+                    .with("ok", Json::Bool(false))
+                    .with("error", Json::Str(format!("{e}")))
+            }
+        }
+    }
+
+    fn handle_fit(&self, req: &Json) -> Result<Json> {
+        let name = req
+            .str_field("model")
+            .ok_or_else(|| Error::Protocol("fit: missing model".into()))?
+            .to_string();
+        let method = Method::parse(req.str_field("method").unwrap_or("mka"))
+            .ok_or_else(|| Error::Protocol("fit: unknown method".into()))?;
+        let x = parse_matrix(req.get("x").ok_or_else(|| Error::Protocol("fit: missing x".into()))?)?;
+        let y = req
+            .get("y")
+            .and_then(|v| v.f64_array())
+            .ok_or_else(|| Error::Protocol("fit: missing y".into()))?;
+        if x.rows != y.len() || x.rows == 0 {
+            return Err(Error::Protocol("fit: x/y shape mismatch".into()));
+        }
+        let data = Dataset::new(name.clone(), x, y);
+        let params = req.get("params");
+        let hp = HyperParams {
+            lengthscale: params.and_then(|p| p.num_field("lengthscale")).unwrap_or(1.0),
+            sigma2: params.and_then(|p| p.num_field("sigma2")).unwrap_or(0.1),
+        };
+        let k = params.and_then(|p| p.usize_field("k")).unwrap_or(self.config.d_core);
+        let seed = self.config.seed;
+        let is_async = req.get("async").and_then(|v| v.as_bool()).unwrap_or(false);
+
+        if is_async {
+            let job_id = self.jobs.create(&name);
+            let jobs = Arc::clone(&self.jobs);
+            let registry = self.registry.clone();
+            let metrics = Arc::clone(&self.metrics);
+            let submitted = self.pool.submit(move || {
+                jobs.set_state(job_id, JobState::Running);
+                let t = Timer::start();
+                match fit_model(method, &data, hp, k, seed) {
+                    Ok(model) => {
+                        registry.publish(&name, model.into());
+                        metrics.incr("fits", 1);
+                        jobs.set_state(job_id, JobState::Done { fit_secs: t.elapsed_secs() });
+                    }
+                    Err(e) => {
+                        metrics.incr("fit_errors", 1);
+                        jobs.set_state(job_id, JobState::Failed { error: format!("{e}") });
+                    }
+                }
+            });
+            if !submitted {
+                return Err(Error::Coordinator("worker pool unavailable".into()));
+            }
+            Ok(Json::obj().with("job_id", Json::Num(job_id as f64)))
+        } else {
+            let t = Timer::start();
+            let model = fit_model(method, &data, hp, k, seed)?;
+            self.registry.publish(&name, model.into());
+            self.metrics.incr("fits", 1);
+            Ok(Json::obj()
+                .with("model", Json::Str(name))
+                .with("fit_secs", Json::Num(t.elapsed_secs())))
+        }
+    }
+
+    fn handle_job(&self, req: &Json) -> Result<Json> {
+        let id = req
+            .get("job_id")
+            .and_then(|v| v.as_usize())
+            .ok_or_else(|| Error::Protocol("job: missing job_id".into()))? as u64;
+        Ok(self.jobs.to_json(id))
+    }
+
+    fn handle_predict(&self, req: &Json) -> Result<Json> {
+        let name = req
+            .str_field("model")
+            .ok_or_else(|| Error::Protocol("predict: missing model".into()))?;
+        let x =
+            parse_matrix(req.get("x").ok_or_else(|| Error::Protocol("predict: missing x".into()))?)?;
+        let pred = self.batcher.predict(name, x)?;
+        Ok(Json::obj()
+            .with("mean", Json::from_f64_slice(&pred.mean))
+            .with("var", Json::from_f64_slice(&pred.var)))
+    }
+}
+
+/// Fit a model of the requested kind (shared with the CLI).
+pub fn fit_model(
+    method: Method,
+    data: &Dataset,
+    hp: HyperParams,
+    k: usize,
+    seed: u64,
+) -> Result<Box<dyn GpModel>> {
+    use crate::baselines::{Fitc, Meka, MekaConfig, Pitc, Sor};
+    use crate::gp::full::FullGp;
+    use crate::gp::mka_gp::MkaGp;
+    use crate::kernels::RbfKernel;
+    let kern = RbfKernel::new(hp.lengthscale);
+    let s2 = hp.sigma2;
+    Ok(match method {
+        Method::Full => Box::new(FullGp::fit(data, &kern, s2)?),
+        Method::Sor => Box::new(Sor::fit(data, &kern, s2, k, seed)?),
+        Method::Fitc => Box::new(Fitc::fit(data, &kern, s2, k, seed)?),
+        Method::Pitc => {
+            let block = (data.n() / 10).clamp(k.max(8), 200);
+            Box::new(Pitc::fit(data, &kern, s2, k, block, seed)?)
+        }
+        Method::Meka => {
+            let cfg = MekaConfig { rank: k, n_clusters: (k / 8).clamp(2, 8), sample_frac: 0.7, seed };
+            Box::new(Meka::fit(data, &kern, s2, &cfg)?)
+        }
+        Method::Mka => {
+            let cfg = crate::experiments::methods::mka_config_for(k, data.n(), seed);
+            Box::new(MkaGp::fit(data, &kern, s2, &cfg)?)
+        }
+    })
+}
+
+/// Parse [[f64...]...] into a Mat.
+pub fn parse_matrix(v: &Json) -> Result<Mat> {
+    let rows = v.as_arr().ok_or_else(|| Error::Protocol("matrix must be an array".into()))?;
+    if rows.is_empty() {
+        return Err(Error::Protocol("matrix is empty".into()));
+    }
+    let parsed: Option<Vec<Vec<f64>>> = rows.iter().map(|r| r.f64_array()).collect();
+    let parsed = parsed.ok_or_else(|| Error::Protocol("matrix rows must be numeric".into()))?;
+    let cols = parsed[0].len();
+    if cols == 0 || parsed.iter().any(|r| r.len() != cols) {
+        return Err(Error::Protocol("ragged matrix".into()));
+    }
+    let mut m = Mat::zeros(parsed.len(), cols);
+    for (i, row) in parsed.iter().enumerate() {
+        m.row_mut(i).copy_from_slice(row);
+    }
+    Ok(m)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::{gp_dataset, SynthSpec};
+
+    fn router() -> Router {
+        let cfg = ServiceConfig { batch_window_ms: 0, n_workers: 2, ..Default::default() };
+        Router::new(cfg)
+    }
+
+    fn fit_req(model: &str, method: &str, n: usize, is_async: bool) -> Json {
+        let data = gp_dataset(&SynthSpec::named("t", n, 2), 1);
+        let x: Vec<Json> =
+            (0..n).map(|i| Json::from_f64_slice(data.x.row(i))).collect();
+        Json::obj()
+            .with("op", Json::Str("fit".into()))
+            .with("model", Json::Str(model.into()))
+            .with("method", Json::Str(method.into()))
+            .with("x", Json::Arr(x))
+            .with("y", Json::from_f64_slice(&data.y))
+            .with(
+                "params",
+                Json::obj()
+                    .with("lengthscale", Json::Num(1.0))
+                    .with("sigma2", Json::Num(0.1))
+                    .with("k", Json::Num(8.0)),
+            )
+            .with("async", Json::Bool(is_async))
+    }
+
+    #[test]
+    fn ping() {
+        let r = router();
+        let out = r.handle(&Json::parse(r#"{"op":"ping"}"#).unwrap());
+        assert_eq!(out.get("ok"), Some(&Json::Bool(true)));
+        assert_eq!(out.get("pong"), Some(&Json::Bool(true)));
+    }
+
+    #[test]
+    fn unknown_op_is_error() {
+        let r = router();
+        let out = r.handle(&Json::parse(r#"{"op":"nope"}"#).unwrap());
+        assert_eq!(out.get("ok"), Some(&Json::Bool(false)));
+        assert!(r.metrics.counter("errors") >= 1);
+    }
+
+    #[test]
+    fn sync_fit_then_predict() {
+        let r = router();
+        let out = r.handle(&fit_req("m1", "sor", 60, false));
+        assert_eq!(out.get("ok"), Some(&Json::Bool(true)), "{out:?}");
+        assert_eq!(r.registry.names(), vec!["m1".to_string()]);
+
+        let pred_req = Json::obj()
+            .with("op", Json::Str("predict".into()))
+            .with("model", Json::Str("m1".into()))
+            .with(
+                "x",
+                Json::Arr(vec![Json::from_f64_slice(&[0.1, -0.2]), Json::from_f64_slice(&[1.0, 1.0])]),
+            );
+        let out = r.handle(&pred_req);
+        assert_eq!(out.get("ok"), Some(&Json::Bool(true)), "{out:?}");
+        assert_eq!(out.get("mean").unwrap().f64_array().unwrap().len(), 2);
+        assert_eq!(out.get("var").unwrap().f64_array().unwrap().len(), 2);
+    }
+
+    #[test]
+    fn async_fit_completes() {
+        let r = router();
+        let out = r.handle(&fit_req("m2", "mka", 80, true));
+        assert_eq!(out.get("ok"), Some(&Json::Bool(true)), "{out:?}");
+        let job_id = out.usize_field("job_id").unwrap() as u64;
+        // Poll until done (bounded).
+        for _ in 0..200 {
+            if let Some((_, state)) = r.jobs.get(job_id) {
+                match state {
+                    JobState::Done { .. } => break,
+                    JobState::Failed { error } => panic!("fit failed: {error}"),
+                    _ => {}
+                }
+            }
+            std::thread::sleep(std::time::Duration::from_millis(20));
+        }
+        assert!(matches!(r.jobs.get(job_id).unwrap().1, JobState::Done { .. }));
+        assert!(r.registry.get("m2").is_some());
+    }
+
+    #[test]
+    fn fit_validation_errors() {
+        let r = router();
+        let bad = Json::parse(r#"{"op":"fit","model":"m","method":"mka","x":[[1,2]],"y":[1,2]}"#)
+            .unwrap();
+        let out = r.handle(&bad);
+        assert_eq!(out.get("ok"), Some(&Json::Bool(false)));
+    }
+
+    #[test]
+    fn parse_matrix_validation() {
+        assert!(parse_matrix(&Json::parse("[[1,2],[3,4]]").unwrap()).is_ok());
+        assert!(parse_matrix(&Json::parse("[]").unwrap()).is_err());
+        assert!(parse_matrix(&Json::parse("[[1,2],[3]]").unwrap()).is_err());
+        assert!(parse_matrix(&Json::parse(r#"[["a"]]"#).unwrap()).is_err());
+    }
+
+    #[test]
+    fn predict_unknown_model() {
+        let r = router();
+        let req = Json::parse(r#"{"op":"predict","model":"ghost","x":[[1.0]]}"#).unwrap();
+        let out = r.handle(&req);
+        assert_eq!(out.get("ok"), Some(&Json::Bool(false)));
+    }
+
+    #[test]
+    fn metrics_and_config_ops() {
+        let r = router();
+        let m = r.handle(&Json::parse(r#"{"op":"metrics"}"#).unwrap());
+        assert!(m.get("counters").is_some());
+        let c = r.handle(&Json::parse(r#"{"op":"config"}"#).unwrap());
+        assert_eq!(c.usize_field("port"), Some(7470));
+    }
+}

@@ -1,0 +1,202 @@
+//! TCP server + client: newline-delimited JSON over a socket, one thread
+//! per connection (request volume here is model-ops, not packet-ops).
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+use super::router::Router;
+use crate::error::{Error, Result};
+use crate::util::json::Json;
+
+/// Running server handle.
+pub struct Server {
+    addr: std::net::SocketAddr,
+    stop: Arc<AtomicBool>,
+    accept_thread: Option<std::thread::JoinHandle<()>>,
+}
+
+impl Server {
+    /// Bind and start serving in background threads. Port 0 picks a free
+    /// port (the bound address is available via [`Server::addr`]).
+    pub fn start(router: Arc<Router>, host: &str, port: u16) -> Result<Server> {
+        let listener = TcpListener::bind((host, port))?;
+        let addr = listener.local_addr()?;
+        listener.set_nonblocking(true)?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop2 = Arc::clone(&stop);
+        let accept_thread = std::thread::Builder::new()
+            .name("mka-accept".into())
+            .spawn(move || {
+                while !stop2.load(Ordering::Relaxed) {
+                    match listener.accept() {
+                        Ok((stream, _peer)) => {
+                            let router = Arc::clone(&router);
+                            let _ = std::thread::Builder::new()
+                                .name("mka-conn".into())
+                                .spawn(move || serve_conn(stream, router));
+                        }
+                        Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                            std::thread::sleep(std::time::Duration::from_millis(5));
+                        }
+                        Err(_) => break,
+                    }
+                }
+            })
+            .map_err(|e| Error::Coordinator(format!("spawn acceptor: {e}")))?;
+        Ok(Server { addr, stop, accept_thread: Some(accept_thread) })
+    }
+
+    pub fn addr(&self) -> std::net::SocketAddr {
+        self.addr
+    }
+
+    pub fn shutdown(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(t) = self.accept_thread.take() {
+            let _ = t.join();
+        }
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+fn serve_conn(stream: TcpStream, router: Arc<Router>) {
+    let peer = stream.peer_addr().ok();
+    let mut reader = BufReader::new(match stream.try_clone() {
+        Ok(s) => s,
+        Err(_) => return,
+    });
+    let mut writer = stream;
+    let mut line = String::new();
+    loop {
+        line.clear();
+        match reader.read_line(&mut line) {
+            Ok(0) | Err(_) => break, // connection closed
+            Ok(_) => {}
+        }
+        let trimmed = line.trim();
+        if trimmed.is_empty() {
+            continue;
+        }
+        let response = match Json::parse(trimmed) {
+            Ok(req) => router.handle(&req),
+            Err(e) => Json::obj()
+                .with("ok", Json::Bool(false))
+                .with("error", Json::Str(format!("bad json: {e}"))),
+        };
+        let mut out = response.dump();
+        out.push('\n');
+        if writer.write_all(out.as_bytes()).is_err() {
+            break;
+        }
+    }
+    let _ = peer;
+}
+
+/// Minimal blocking client for tests, examples and the CLI.
+pub struct Client {
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+}
+
+impl Client {
+    pub fn connect(addr: &str) -> Result<Client> {
+        let stream = TcpStream::connect(addr)?;
+        let reader = BufReader::new(stream.try_clone()?);
+        Ok(Client { reader, writer: stream })
+    }
+
+    /// Send one request, wait for one response.
+    pub fn call(&mut self, req: &Json) -> Result<Json> {
+        let mut line = req.dump();
+        line.push('\n');
+        self.writer.write_all(line.as_bytes())?;
+        let mut resp = String::new();
+        self.reader.read_line(&mut resp)?;
+        if resp.is_empty() {
+            return Err(Error::Protocol("server closed connection".into()));
+        }
+        Ok(Json::parse(resp.trim())?)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::config::ServiceConfig;
+
+    fn start_server() -> (Server, String) {
+        let cfg = ServiceConfig { batch_window_ms: 0, n_workers: 1, ..Default::default() };
+        let router = Arc::new(Router::new(cfg));
+        let server = Server::start(router, "127.0.0.1", 0).unwrap();
+        let addr = format!("{}", server.addr());
+        (server, addr)
+    }
+
+    #[test]
+    fn ping_over_tcp() {
+        let (_server, addr) = start_server();
+        let mut client = Client::connect(&addr).unwrap();
+        let resp = client.call(&Json::parse(r#"{"op":"ping"}"#).unwrap()).unwrap();
+        assert_eq!(resp.get("pong"), Some(&Json::Bool(true)));
+    }
+
+    #[test]
+    fn bad_json_reported() {
+        let (_server, addr) = start_server();
+        let stream = TcpStream::connect(&addr).unwrap();
+        let mut reader = BufReader::new(stream.try_clone().unwrap());
+        let mut writer = stream;
+        writer.write_all(b"this is not json\n").unwrap();
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        let resp = Json::parse(line.trim()).unwrap();
+        assert_eq!(resp.get("ok"), Some(&Json::Bool(false)));
+    }
+
+    #[test]
+    fn multiple_requests_one_connection() {
+        let (_server, addr) = start_server();
+        let mut client = Client::connect(&addr).unwrap();
+        for _ in 0..5 {
+            let resp = client.call(&Json::parse(r#"{"op":"models"}"#).unwrap()).unwrap();
+            assert_eq!(resp.get("ok"), Some(&Json::Bool(true)));
+        }
+    }
+
+    #[test]
+    fn concurrent_clients() {
+        let (_server, addr) = start_server();
+        let handles: Vec<_> = (0..4)
+            .map(|_| {
+                let addr = addr.clone();
+                std::thread::spawn(move || {
+                    let mut c = Client::connect(&addr).unwrap();
+                    let r = c.call(&Json::parse(r#"{"op":"ping"}"#).unwrap()).unwrap();
+                    assert_eq!(r.get("pong"), Some(&Json::Bool(true)));
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+    }
+
+    #[test]
+    fn shutdown_stops_accepting() {
+        let (mut server, addr) = start_server();
+        server.shutdown();
+        std::thread::sleep(std::time::Duration::from_millis(30));
+        // New connections may connect (OS backlog) but must not be served.
+        if let Ok(mut c) = Client::connect(&addr) {
+            let r = c.call(&Json::parse(r#"{"op":"ping"}"#).unwrap());
+            assert!(r.is_err() || r.is_ok()); // just must not hang
+        }
+    }
+}

@@ -1,0 +1,159 @@
+//! Regression dataset container: features + targets, normalization, splits.
+//!
+//! Experimental protocol follows the paper (§5 "Real data"): normalize to
+//! mean 0 / variance 1, random 90/10 train/test split, 5-fold CV on the
+//! train portion for hyperparameters, repeated over seeds.
+
+use crate::la::dense::Mat;
+use crate::la::stats::standardize;
+use crate::util::Rng;
+
+/// A regression dataset (rows of `x` are points).
+#[derive(Clone, Debug)]
+pub struct Dataset {
+    pub name: String,
+    pub x: Mat,
+    pub y: Vec<f64>,
+}
+
+impl Dataset {
+    pub fn new(name: impl Into<String>, x: Mat, y: Vec<f64>) -> Dataset {
+        assert_eq!(x.rows, y.len(), "x/y length mismatch");
+        Dataset { name: name.into(), x, y }
+    }
+
+    pub fn n(&self) -> usize {
+        self.x.rows
+    }
+
+    pub fn dim(&self) -> usize {
+        self.x.cols
+    }
+
+    /// Standardize every feature column and the target to mean 0 / std 1
+    /// (paper: "The data are normalized to mean zero and variance 1").
+    pub fn normalize(&mut self) {
+        let (n, d) = (self.x.rows, self.x.cols);
+        for j in 0..d {
+            let mut col: Vec<f64> = (0..n).map(|i| self.x.at(i, j)).collect();
+            standardize(&mut col);
+            for i in 0..n {
+                self.x.set(i, j, col[i]);
+            }
+        }
+        standardize(&mut self.y);
+    }
+
+    /// Subset by row indices.
+    pub fn subset(&self, idx: &[usize]) -> Dataset {
+        Dataset {
+            name: self.name.clone(),
+            x: self.x.gather_rows(idx),
+            y: idx.iter().map(|&i| self.y[i]).collect(),
+        }
+    }
+
+    /// Random (train, test) split with `train_frac` of rows in train.
+    pub fn split(&self, train_frac: f64, seed: u64) -> (Dataset, Dataset) {
+        let n = self.n();
+        let mut rng = Rng::new(seed);
+        let perm = rng.permutation(n);
+        let ntr = ((n as f64) * train_frac).round() as usize;
+        let ntr = ntr.clamp(1, n - 1);
+        (self.subset(&perm[..ntr]), self.subset(&perm[ntr..]))
+    }
+
+    /// k-fold CV index sets: returns (train_idx, val_idx) pairs.
+    pub fn kfold(&self, k: usize, seed: u64) -> Vec<(Vec<usize>, Vec<usize>)> {
+        let n = self.n();
+        let k = k.clamp(2, n);
+        let mut rng = Rng::new(seed);
+        let perm = rng.permutation(n);
+        let mut folds = Vec::with_capacity(k);
+        for f in 0..k {
+            let lo = f * n / k;
+            let hi = (f + 1) * n / k;
+            let val: Vec<usize> = perm[lo..hi].to_vec();
+            let train: Vec<usize> =
+                perm[..lo].iter().chain(perm[hi..].iter()).copied().collect();
+            folds.push((train, val));
+        }
+        folds
+    }
+
+    /// Cap the dataset at `max_n` rows (random subsample, seeded).
+    pub fn subsample(&self, max_n: usize, seed: u64) -> Dataset {
+        if self.n() <= max_n {
+            return self.clone();
+        }
+        let mut rng = Rng::new(seed);
+        let idx = rng.sample_indices(self.n(), max_n);
+        self.subset(&idx)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::la::stats::{mean, std_dev};
+
+    fn toy(n: usize) -> Dataset {
+        let x = Mat::from_fn(n, 2, |i, j| (i * 2 + j) as f64);
+        let y = (0..n).map(|i| i as f64 * 3.0 + 1.0).collect();
+        Dataset::new("toy", x, y)
+    }
+
+    #[test]
+    fn normalize_standardizes() {
+        let mut d = toy(50);
+        d.normalize();
+        assert!(mean(&d.y).abs() < 1e-12);
+        assert!((std_dev(&d.y) - 1.0).abs() < 1e-12);
+        let col0 = d.x.col(0);
+        assert!(mean(&col0).abs() < 1e-12);
+        assert!((std_dev(&col0) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn split_sizes_and_disjoint() {
+        let d = toy(100);
+        let (tr, te) = d.split(0.9, 1);
+        assert_eq!(tr.n(), 90);
+        assert_eq!(te.n(), 10);
+        // disjoint: y values unique in toy, so compare as sets
+        let trs: std::collections::HashSet<u64> = tr.y.iter().map(|v| v.to_bits()).collect();
+        for v in &te.y {
+            assert!(!trs.contains(&v.to_bits()));
+        }
+    }
+
+    #[test]
+    fn split_deterministic() {
+        let d = toy(40);
+        let (a, _) = d.split(0.8, 7);
+        let (b, _) = d.split(0.8, 7);
+        assert_eq!(a.y, b.y);
+    }
+
+    #[test]
+    fn kfold_covers_everything() {
+        let d = toy(23);
+        let folds = d.kfold(5, 3);
+        assert_eq!(folds.len(), 5);
+        let mut all_val: Vec<usize> = folds.iter().flat_map(|(_, v)| v.clone()).collect();
+        all_val.sort_unstable();
+        assert_eq!(all_val, (0..23).collect::<Vec<_>>());
+        for (tr, va) in &folds {
+            assert_eq!(tr.len() + va.len(), 23);
+        }
+    }
+
+    #[test]
+    fn subsample_caps() {
+        let d = toy(100);
+        let s = d.subsample(30, 1);
+        assert_eq!(s.n(), 30);
+        let s2 = d.subsample(200, 1);
+        assert_eq!(s2.n(), 100);
+    }
+}

@@ -1,0 +1,155 @@
+//! CSV loading / saving for datasets and experiment outputs.
+//!
+//! If a user drops real UCI CSVs into `data/` the loaders here pick them up
+//! (last column = target); otherwise the synthetic catalog in
+//! [`super::synth`] is used. Writers produce the CSV series behind the
+//! paper's figures.
+
+use std::io::Write;
+use std::path::Path;
+
+use super::dataset::Dataset;
+use crate::error::{Error, Result};
+use crate::la::dense::Mat;
+
+/// Load a numeric CSV where the last column is the regression target.
+/// Lines starting with '#' and a non-numeric header row are skipped.
+pub fn load_csv(path: &Path, name: &str) -> Result<Dataset> {
+    let text = std::fs::read_to_string(path)?;
+    let mut rows: Vec<Vec<f64>> = Vec::new();
+    for (lineno, line) in text.lines().enumerate() {
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let parsed: Option<Vec<f64>> =
+            line.split(',').map(|t| t.trim().parse::<f64>().ok()).collect();
+        match parsed {
+            Some(vals) if !vals.is_empty() => {
+                if let Some(first) = rows.first() {
+                    if vals.len() != first.len() {
+                        return Err(Error::Data(format!(
+                            "{}: ragged row at line {}",
+                            path.display(),
+                            lineno + 1
+                        )));
+                    }
+                }
+                rows.push(vals);
+            }
+            // header or junk row: only acceptable as the first content line
+            _ if rows.is_empty() => continue,
+            _ => {
+                return Err(Error::Data(format!(
+                    "{}: non-numeric row at line {}",
+                    path.display(),
+                    lineno + 1
+                )))
+            }
+        }
+    }
+    if rows.is_empty() {
+        return Err(Error::Data(format!("{}: no data rows", path.display())));
+    }
+    let d = rows[0].len();
+    if d < 2 {
+        return Err(Error::Data("need at least one feature and one target column".into()));
+    }
+    let n = rows.len();
+    let mut x = Mat::zeros(n, d - 1);
+    let mut y = Vec::with_capacity(n);
+    for (i, row) in rows.iter().enumerate() {
+        x.row_mut(i).copy_from_slice(&row[..d - 1]);
+        y.push(row[d - 1]);
+    }
+    Ok(Dataset::new(name, x, y))
+}
+
+/// Save (x, y) as CSV.
+pub fn save_csv(path: &Path, ds: &Dataset) -> Result<()> {
+    if let Some(parent) = path.parent() {
+        std::fs::create_dir_all(parent)?;
+    }
+    let mut f = std::fs::File::create(path)?;
+    for i in 0..ds.n() {
+        let mut line = String::new();
+        for v in ds.x.row(i) {
+            line.push_str(&format!("{v},"));
+        }
+        line.push_str(&format!("{}\n", ds.y[i]));
+        f.write_all(line.as_bytes())?;
+    }
+    Ok(())
+}
+
+/// Write a generic CSV table with a header (figure/bench series output).
+pub fn write_table(path: &Path, header: &[&str], rows: &[Vec<f64>]) -> Result<()> {
+    if let Some(parent) = path.parent() {
+        std::fs::create_dir_all(parent)?;
+    }
+    let mut f = std::fs::File::create(path)?;
+    writeln!(f, "{}", header.join(","))?;
+    for row in rows {
+        let line: Vec<String> = row.iter().map(|v| format!("{v}")).collect();
+        writeln!(f, "{}", line.join(","))?;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmpfile(name: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join("mka_gp_tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(name)
+    }
+
+    #[test]
+    fn csv_roundtrip() {
+        let ds = Dataset::new(
+            "t",
+            Mat::from_rows(&[&[1.0, 2.0], &[3.0, 4.0]]),
+            vec![10.0, 20.0],
+        );
+        let p = tmpfile("roundtrip.csv");
+        save_csv(&p, &ds).unwrap();
+        let back = load_csv(&p, "t").unwrap();
+        assert_eq!(back.n(), 2);
+        assert_eq!(back.dim(), 2);
+        assert_eq!(back.y, vec![10.0, 20.0]);
+        assert_eq!(back.x.row(1), &[3.0, 4.0]);
+    }
+
+    #[test]
+    fn skips_header_and_comments() {
+        let p = tmpfile("header.csv");
+        std::fs::write(&p, "# comment\nf1,f2,target\n1,2,3\n4,5,6\n").unwrap();
+        let ds = load_csv(&p, "h").unwrap();
+        assert_eq!(ds.n(), 2);
+        assert_eq!(ds.y, vec![3.0, 6.0]);
+    }
+
+    #[test]
+    fn rejects_ragged() {
+        let p = tmpfile("ragged.csv");
+        std::fs::write(&p, "1,2,3\n4,5\n").unwrap();
+        assert!(load_csv(&p, "r").is_err());
+    }
+
+    #[test]
+    fn rejects_empty() {
+        let p = tmpfile("empty.csv");
+        std::fs::write(&p, "# nothing\n").unwrap();
+        assert!(load_csv(&p, "e").is_err());
+    }
+
+    #[test]
+    fn write_table_format() {
+        let p = tmpfile("table.csv");
+        write_table(&p, &["a", "b"], &[vec![1.0, 2.0], vec![3.5, 4.0]]).unwrap();
+        let text = std::fs::read_to_string(&p).unwrap();
+        assert!(text.starts_with("a,b\n1,2\n3.5,4\n"));
+    }
+}

@@ -1,0 +1,9 @@
+//! Dataset substrate: container/splits ([`dataset`]), synthetic generators
+//! matching the paper's evaluation suite ([`synth`]), CSV IO ([`loader`]).
+
+pub mod dataset;
+pub mod loader;
+pub mod synth;
+
+pub use dataset::Dataset;
+pub use synth::SynthSpec;

@@ -1,0 +1,52 @@
+//! Crate-wide error type.
+
+use thiserror::Error;
+
+/// All fallible operations in the crate return this error.
+#[derive(Error, Debug)]
+pub enum Error {
+    #[error("linear algebra error: {0}")]
+    Linalg(String),
+
+    #[error("configuration error: {0}")]
+    Config(String),
+
+    #[error("data error: {0}")]
+    Data(String),
+
+    #[error("runtime (PJRT/XLA) error: {0}")]
+    Runtime(String),
+
+    #[error("coordinator error: {0}")]
+    Coordinator(String),
+
+    #[error("protocol error: {0}")]
+    Protocol(String),
+
+    #[error("io error: {0}")]
+    Io(#[from] std::io::Error),
+
+    #[error("json error: {0}")]
+    Json(#[from] crate::util::json::JsonError),
+}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+impl From<anyhow::Error> for Error {
+    fn from(e: anyhow::Error) -> Self {
+        Error::Runtime(format!("{e:#}"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_variants() {
+        let e = Error::Linalg("bad pivot".into());
+        assert!(format!("{e}").contains("bad pivot"));
+        let e: Error = std::io::Error::new(std::io::ErrorKind::NotFound, "nope").into();
+        assert!(matches!(e, Error::Io(_)));
+    }
+}

@@ -1,0 +1,10 @@
+//! Experiment runners shared between the bench binaries, the examples and
+//! the CLI: per-paper-artifact modules (Table 1, Figure 1, Figure 2) plus
+//! the uniform method dispatcher.
+
+pub mod methods;
+pub mod snelson;
+pub mod sweep;
+pub mod table1;
+
+pub use methods::{Method, MethodResult};

@@ -1,0 +1,136 @@
+//! Figure 1 experiment: qualitative fits on the Snelson-style 1D toy —
+//! predictive mean ± 1σ for all six methods on a dense input grid.
+
+use crate::data::dataset::Dataset;
+use crate::data::synth::snelson1d;
+use crate::experiments::methods::{Method};
+use crate::gp::cv::HyperParams;
+use crate::gp::GpModel;
+use crate::la::dense::Mat;
+
+/// Curves for one method on the evaluation grid.
+#[derive(Clone, Debug)]
+pub struct Curves {
+    pub method: Method,
+    pub grid: Vec<f64>,
+    pub mean: Vec<f64>,
+    pub std: Vec<f64>,
+}
+
+/// Fit every requested method on the toy data and evaluate on a uniform
+/// grid over the input range. Returns (data, per-method curves).
+pub fn run(
+    n: usize,
+    k: usize,
+    grid_points: usize,
+    hp: HyperParams,
+    methods: &[Method],
+    seed: u64,
+) -> (Dataset, Vec<Curves>) {
+    let data = snelson1d(n, seed);
+    let lo = data.x.at(0, 0) - 0.3;
+    let hi = data.x.at(n - 1, 0) + 0.3;
+    let grid: Vec<f64> = (0..grid_points)
+        .map(|i| lo + (hi - lo) * (i as f64) / (grid_points - 1) as f64)
+        .collect();
+    let gx = Mat::from_vec(grid_points, 1, grid.clone());
+
+    let mut curves = Vec::new();
+    for &m in methods {
+        let model: Option<Box<dyn GpModel>> = build(m, &data, hp, k, seed);
+        if let Some(model) = model {
+            let pred = model.predict(&gx);
+            curves.push(Curves {
+                method: m,
+                grid: grid.clone(),
+                mean: pred.mean,
+                std: pred.var.iter().map(|v| v.max(0.0).sqrt()).collect(),
+            });
+        }
+    }
+    (data, curves)
+}
+
+fn build(
+    m: Method,
+    data: &Dataset,
+    hp: HyperParams,
+    k: usize,
+    seed: u64,
+) -> Option<Box<dyn GpModel>> {
+    use crate::baselines::{Fitc, Meka, MekaConfig, Pitc, Sor};
+    use crate::gp::full::FullGp;
+    use crate::gp::mka_gp::MkaGp;
+    use crate::kernels::RbfKernel;
+    let kern = RbfKernel::new(hp.lengthscale);
+    let s2 = hp.sigma2;
+    Some(match m {
+        Method::Full => Box::new(FullGp::fit(data, &kern, s2).ok()?),
+        Method::Sor => Box::new(Sor::fit(data, &kern, s2, k, seed).ok()?),
+        Method::Fitc => Box::new(Fitc::fit(data, &kern, s2, k, seed).ok()?),
+        Method::Pitc => Box::new(Pitc::fit(data, &kern, s2, k, 25, seed).ok()?),
+        Method::Meka => {
+            let cfg = MekaConfig { rank: k, n_clusters: 3, sample_frac: 0.7, seed };
+            Box::new(Meka::fit(data, &kern, s2, &cfg).ok()?)
+        }
+        Method::Mka => {
+            let cfg = crate::experiments::methods::mka_config_for(k, data.n(), seed);
+            Box::new(MkaGp::fit(data, &kern, s2, &cfg).ok()?)
+        }
+    })
+}
+
+/// Mean absolute deviation between a method's curve and the Full GP's —
+/// the quantitative readout of "MKA fits almost as well as Full" (Fig. 1).
+pub fn deviation_from_full(curves: &[Curves]) -> Vec<(Method, f64)> {
+    let full = curves.iter().find(|c| c.method == Method::Full);
+    let Some(full) = full else {
+        return Vec::new();
+    };
+    curves
+        .iter()
+        .filter(|c| c.method != Method::Full)
+        .map(|c| {
+            let d = c
+                .mean
+                .iter()
+                .zip(&full.mean)
+                .map(|(a, b)| (a - b).abs())
+                .sum::<f64>()
+                / c.mean.len() as f64;
+            (c.method, d)
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn produces_curves_for_all_methods() {
+        let hp = HyperParams { lengthscale: 0.5, sigma2: 0.01 };
+        let (data, curves) = run(120, 10, 50, hp, &Method::ALL, 1);
+        assert_eq!(data.n(), 120);
+        assert!(curves.len() >= 5, "got {} curves", curves.len());
+        for c in &curves {
+            assert_eq!(c.mean.len(), 50);
+            assert!(c.std.iter().all(|s| s.is_finite() || c.method == Method::Meka));
+        }
+    }
+
+    #[test]
+    fn mka_closer_to_full_than_sor() {
+        // The headline qualitative claim of Figure 1.
+        let hp = HyperParams { lengthscale: 0.5, sigma2: 0.01 };
+        let (_, curves) = run(150, 10, 80, hp, &[Method::Full, Method::Sor, Method::Mka], 2);
+        let dev = deviation_from_full(&curves);
+        let get = |m: Method| dev.iter().find(|(mm, _)| *mm == m).unwrap().1;
+        assert!(
+            get(Method::Mka) < get(Method::Sor) * 1.5 + 0.05,
+            "mka={} sor={}",
+            get(Method::Mka),
+            get(Method::Sor)
+        );
+    }
+}

@@ -1,0 +1,99 @@
+//! Figure 2 experiment: SMSE and MNLP as a function of the number of
+//! pseudo-inputs / d_core. The paper's claim: MKA stays flat as the budget
+//! shrinks while the low-rank family degrades quickly.
+
+use crate::data::dataset::Dataset;
+use crate::experiments::methods::{run_method, Method};
+use crate::gp::cv::HyperParams;
+
+/// One (method, k) point of the sweep.
+#[derive(Clone, Debug)]
+pub struct SweepPoint {
+    pub method: Method,
+    pub k: usize,
+    pub smse: f64,
+    pub mnlp: Option<f64>,
+}
+
+/// Sweep all methods over a list of budgets on one dataset split.
+pub fn sweep(
+    data: &Dataset,
+    ks: &[usize],
+    hp: HyperParams,
+    methods: &[Method],
+    seed: u64,
+) -> Vec<SweepPoint> {
+    let (tr, te) = data.split(0.9, seed);
+    let mut out = Vec::new();
+    for &k in ks {
+        for &m in methods {
+            // Full is k-independent; evaluate it once (at the first k) and
+            // reuse by emitting the same value for every k in the caller.
+            match run_method(m, &tr, &te, hp, k, seed) {
+                Ok(r) => out.push(SweepPoint { method: m, k, smse: r.smse, mnlp: r.mnlp }),
+                Err(_) => out.push(SweepPoint { method: m, k, smse: f64::NAN, mnlp: None }),
+            }
+        }
+    }
+    out
+}
+
+/// CSV rows for plotting: method,k,smse,mnlp.
+pub fn to_csv_rows(points: &[SweepPoint]) -> (Vec<&'static str>, Vec<Vec<f64>>) {
+    let header = vec!["method_idx", "k", "smse", "mnlp"];
+    let rows = points
+        .iter()
+        .map(|p| {
+            vec![
+                Method::ALL.iter().position(|&m| m == p.method).unwrap() as f64,
+                p.k as f64,
+                p.smse,
+                p.mnlp.unwrap_or(f64::NAN),
+            ]
+        })
+        .collect();
+    (header, rows)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::{gp_dataset, SynthSpec};
+
+    #[test]
+    fn sweep_covers_grid() {
+        let data = gp_dataset(&SynthSpec::named("t", 140, 2), 1);
+        let hp = HyperParams { lengthscale: 1.4, sigma2: 0.1 };
+        let pts = sweep(&data, &[4, 8], hp, &[Method::Sor, Method::Mka], 3);
+        assert_eq!(pts.len(), 4);
+        for p in &pts {
+            assert!(p.smse.is_finite(), "{:?} k={}", p.method, p.k);
+        }
+    }
+
+    #[test]
+    fn mka_flatter_than_sor_in_k() {
+        // The qualitative Figure-2 shape: MKA's degradation from large k to
+        // small k should be no worse than SoR's (broad-spectrum data).
+        let data = gp_dataset(&SynthSpec::named("t", 240, 3), 2);
+        let hp = HyperParams { lengthscale: 1.7, sigma2: 0.1 };
+        let pts = sweep(&data, &[8, 48], hp, &[Method::Sor, Method::Mka], 4);
+        let get = |m: Method, k: usize| {
+            pts.iter().find(|p| p.method == m && p.k == k).unwrap().smse
+        };
+        let sor_gap = get(Method::Sor, 8) - get(Method::Sor, 48);
+        let mka_gap = get(Method::Mka, 8) - get(Method::Mka, 48);
+        assert!(
+            mka_gap <= sor_gap + 0.3,
+            "MKA gap {mka_gap} vs SoR gap {sor_gap}"
+        );
+    }
+
+    #[test]
+    fn csv_rows_shape() {
+        let pts = vec![SweepPoint { method: Method::Mka, k: 8, smse: 0.5, mnlp: Some(1.0) }];
+        let (h, rows) = to_csv_rows(&pts);
+        assert_eq!(h.len(), 4);
+        assert_eq!(rows[0][1], 8.0);
+    }
+}

@@ -1,0 +1,134 @@
+//! Hyperparameter selection by k-fold cross-validation (paper §5: "On the
+//! other 90% we did five-fold cross validation to learn the length scale
+//! and noise parameter for each method").
+
+use crate::data::dataset::Dataset;
+use crate::gp::metrics::smse;
+
+/// A candidate hyperparameter pair.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct HyperParams {
+    pub lengthscale: f64,
+    pub sigma2: f64,
+}
+
+/// Default search grid: length scales around the √d heuristic of
+/// standardized data, noise levels spanning three decades.
+pub fn default_grid(dim: usize) -> Vec<HyperParams> {
+    let base = (dim as f64).sqrt().max(1.0);
+    let ells = [0.1 * base, 0.2 * base, 0.4 * base, 0.8 * base, 1.6 * base, 3.2 * base];
+    let sig2s = [0.01, 0.1, 0.5];
+    let mut grid = Vec::with_capacity(ells.len() * sig2s.len());
+    for &l in &ells {
+        for &s in &sig2s {
+            grid.push(HyperParams { lengthscale: l, sigma2: s });
+        }
+    }
+    grid
+}
+
+/// Result of a CV sweep.
+#[derive(Clone, Debug)]
+pub struct CvOutcome {
+    pub best: HyperParams,
+    pub best_score: f64,
+    /// (params, mean validation SMSE) for every grid point that evaluated
+    /// successfully.
+    pub table: Vec<(HyperParams, f64)>,
+}
+
+/// Run k-fold CV over a grid. `fit_predict` fits on a training subset with
+/// the given hyperparameters and returns mean predictions on a validation
+/// matrix; errors (e.g. a Cholesky failure at an aggressive setting) simply
+/// disqualify that grid point. Score is validation SMSE (lower = better).
+pub fn grid_search<F>(
+    data: &Dataset,
+    folds: usize,
+    grid: &[HyperParams],
+    seed: u64,
+    mut fit_predict: F,
+) -> CvOutcome
+where
+    F: FnMut(&Dataset, &crate::la::dense::Mat, HyperParams) -> Option<Vec<f64>>,
+{
+    assert!(!grid.is_empty());
+    let splits = data.kfold(folds, seed);
+    let mut table = Vec::new();
+    let mut best = grid[0];
+    let mut best_score = f64::INFINITY;
+    for &hp in grid {
+        let mut scores = Vec::with_capacity(splits.len());
+        let mut failed = false;
+        for (tr_idx, va_idx) in &splits {
+            let tr = data.subset(tr_idx);
+            let va = data.subset(va_idx);
+            match fit_predict(&tr, &va.x, hp) {
+                Some(mean) if mean.len() == va.n() => scores.push(smse(&va.y, &mean)),
+                _ => {
+                    failed = true;
+                    break;
+                }
+            }
+        }
+        if failed || scores.is_empty() {
+            continue;
+        }
+        let avg = scores.iter().sum::<f64>() / scores.len() as f64;
+        table.push((hp, avg));
+        if avg < best_score {
+            best_score = avg;
+            best = hp;
+        }
+    }
+    CvOutcome { best, best_score, table }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::{gp_dataset, SynthSpec};
+    use crate::gp::full::FullGp;
+    use crate::gp::GpModel;
+    use crate::kernels::RbfKernel;
+
+    #[test]
+    fn grid_has_expected_size() {
+        let g = default_grid(4);
+        assert_eq!(g.len(), 18);
+        assert!(g.iter().all(|h| h.lengthscale > 0.0 && h.sigma2 > 0.0));
+    }
+
+    #[test]
+    fn cv_picks_sane_lengthscale() {
+        let data = gp_dataset(&SynthSpec::named("t", 150, 2), 1);
+        let grid = vec![
+            HyperParams { lengthscale: 0.01, sigma2: 0.1 }, // absurdly short
+            HyperParams { lengthscale: 1.5, sigma2: 0.1 },  // about right
+        ];
+        let out = grid_search(&data, 3, &grid, 7, |tr, vx, hp| {
+            let gp = FullGp::fit(tr, &RbfKernel::new(hp.lengthscale), hp.sigma2).ok()?;
+            Some(gp.predict(vx).mean)
+        });
+        assert_eq!(out.best.lengthscale, 1.5);
+        assert!(out.best_score < 1.0);
+        assert_eq!(out.table.len(), 2);
+    }
+
+    #[test]
+    fn failing_grid_points_skipped() {
+        let data = gp_dataset(&SynthSpec::named("t", 60, 2), 2);
+        let grid = vec![
+            HyperParams { lengthscale: 1.0, sigma2: 0.1 },
+            HyperParams { lengthscale: -1.0, sigma2: 0.1 }, // "fails"
+        ];
+        let out = grid_search(&data, 3, &grid, 3, |tr, vx, hp| {
+            if hp.lengthscale < 0.0 {
+                return None;
+            }
+            let gp = FullGp::fit(tr, &RbfKernel::new(hp.lengthscale), hp.sigma2).ok()?;
+            Some(gp.predict(vx).mean)
+        });
+        assert_eq!(out.table.len(), 1);
+        assert_eq!(out.best.lengthscale, 1.0);
+    }
+}

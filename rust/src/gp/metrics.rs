@@ -1,0 +1,100 @@
+//! Error measures from the paper (§5):
+//!
+//! * **SMSE** — standardized mean squared error:
+//!   (1/n) Σ (ŷ_t − y_t)² / σ̂²_⋆ with σ̂²_⋆ the variance of the test
+//!   outputs. A constant mean predictor scores ≈ 1.
+//! * **MNLP** — mean negative log probability:
+//!   (1/n) Σ ((ŷ_t − y_t)²/σ̂²_t + log σ̂²_t + log 2π), using each method's
+//!   own predictive variance σ̂²_t (we follow the paper's printed formula,
+//!   i.e. without the usual ½ factor — comparisons between methods are
+//!   unaffected).
+
+use crate::la::stats::variance;
+
+/// Standardized mean squared error.
+pub fn smse(y_true: &[f64], y_pred: &[f64]) -> f64 {
+    assert_eq!(y_true.len(), y_pred.len());
+    assert!(!y_true.is_empty());
+    let var_star = variance(y_true).max(1e-12);
+    let mse = y_true
+        .iter()
+        .zip(y_pred)
+        .map(|(t, p)| (t - p) * (t - p))
+        .sum::<f64>()
+        / y_true.len() as f64;
+    mse / var_star
+}
+
+/// Mean negative log probability with per-point predictive variances.
+pub fn mnlp(y_true: &[f64], y_pred: &[f64], var_pred: &[f64]) -> f64 {
+    assert_eq!(y_true.len(), y_pred.len());
+    assert_eq!(y_true.len(), var_pred.len());
+    assert!(!y_true.is_empty());
+    let ln2pi = (2.0 * std::f64::consts::PI).ln();
+    y_true
+        .iter()
+        .zip(y_pred)
+        .zip(var_pred)
+        .map(|((t, p), v)| {
+            let v = v.max(1e-12);
+            (t - p) * (t - p) / v + v.ln() + ln2pi
+        })
+        .sum::<f64>()
+        / y_true.len() as f64
+}
+
+/// Plain MSE (diagnostics).
+pub fn mse(y_true: &[f64], y_pred: &[f64]) -> f64 {
+    y_true
+        .iter()
+        .zip(y_pred)
+        .map(|(t, p)| (t - p) * (t - p))
+        .sum::<f64>()
+        / y_true.len() as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn perfect_prediction_zero_smse() {
+        let y = [1.0, 2.0, 3.0, -1.0];
+        assert_eq!(smse(&y, &y), 0.0);
+    }
+
+    #[test]
+    fn mean_predictor_smse_near_one() {
+        let y = [1.0, 2.0, 3.0, 4.0];
+        let mean = [2.5; 4];
+        assert!((smse(&y, &mean) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn mnlp_penalizes_overconfidence() {
+        let y = [0.0];
+        let pred = [1.0]; // error of 1
+        let confident = mnlp(&y, &pred, &[0.01]);
+        let calibrated = mnlp(&y, &pred, &[1.0]);
+        assert!(confident > calibrated);
+    }
+
+    #[test]
+    fn mnlp_of_exact_standard_normal() {
+        // error 0, var 1 → ln 2π per point (paper formula, no ½).
+        let v = mnlp(&[0.0], &[0.0], &[1.0]);
+        assert!((v - (2.0 * std::f64::consts::PI).ln()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn mnlp_variance_floor() {
+        // zero variance must not produce NaN/inf
+        let v = mnlp(&[0.0], &[0.0], &[0.0]);
+        assert!(v.is_finite());
+    }
+
+    #[test]
+    fn mse_simple() {
+        assert_eq!(mse(&[0.0, 0.0], &[1.0, -1.0]), 1.0);
+    }
+}

@@ -1,0 +1,59 @@
+//! Gaussian process regression models.
+//!
+//! * [`full::FullGp`] — exact GP via Cholesky (the paper's "Full" column);
+//! * [`mka_gp::MkaGp`] — the paper's method (§4.1): MKA of the joint
+//!   train/test kernel + Schur complement;
+//! * [`ridge::MkaRidge`] — kernel ridge regression through an MKA solve
+//!   (the frequentist cousin, mean only);
+//! * [`cv`] — k-fold cross-validation for hyperparameters (§5 protocol);
+//! * [`metrics`] — SMSE / MNLP.
+//!
+//! The five sparse baselines live in [`crate::baselines`] and implement the
+//! same [`GpModel`] trait.
+
+pub mod cv;
+pub mod full;
+pub mod metrics;
+pub mod mka_gp;
+pub mod ridge;
+
+use crate::la::dense::Mat;
+
+/// Posterior prediction: mean and (predictive, noise-inclusive) variance
+/// per test point.
+#[derive(Clone, Debug)]
+pub struct Prediction {
+    pub mean: Vec<f64>,
+    pub var: Vec<f64>,
+}
+
+impl Prediction {
+    pub fn len(&self) -> usize {
+        self.mean.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.mean.is_empty()
+    }
+}
+
+/// A fitted GP regression model.
+pub trait GpModel: Send + Sync {
+    /// Predict mean and variance at the rows of `x_test`.
+    fn predict(&self, x_test: &Mat) -> Prediction;
+
+    /// Model name for tables/logs.
+    fn name(&self) -> String;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn prediction_len() {
+        let p = Prediction { mean: vec![1.0, 2.0], var: vec![0.1, 0.2] };
+        assert_eq!(p.len(), 2);
+        assert!(!p.is_empty());
+    }
+}

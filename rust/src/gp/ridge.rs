@@ -1,0 +1,105 @@
+//! Kernel ridge regression via an MKA solve — "MKA Ridge Regression"
+//! (paper §4.1 title). The frequentist twin of the GP mean: the most
+//! direct use of MKA, approximating K′ = K + λI itself and solving
+//! α̃ = K̃′⁻¹ y (mean only, no predictive variance).
+//!
+//! As the paper notes, mixing the approximate inverse with exact k_x
+//! introduces a small systematic bias relative to [`super::mka_gp::MkaGp`];
+//! we keep both so the bias is measurable (see the ablation bench).
+
+use super::{GpModel, Prediction};
+use crate::data::dataset::Dataset;
+use crate::error::Result;
+use crate::kernels::Kernel;
+use crate::la::blas::dot;
+use crate::la::dense::Mat;
+use crate::mka::{factorize, MkaConfig};
+
+/// Ridge regressor with an MKA-approximated kernel solve.
+pub struct MkaRidge {
+    x_train: Mat,
+    kernel: Box<dyn Kernel>,
+    lambda: f64,
+    /// α̃ = K̃′⁻¹ y, computed once at fit time ("direct method").
+    alpha: Vec<f64>,
+}
+
+impl MkaRidge {
+    pub fn fit(
+        train: &Dataset,
+        kernel: &dyn Kernel,
+        lambda: f64,
+        config: &MkaConfig,
+    ) -> Result<MkaRidge> {
+        let mut k = kernel.gram_sym(&train.x);
+        k.add_diag(lambda);
+        let f = factorize(&k, Some(&train.x), config)?;
+        let alpha = f.solve(&train.y)?;
+        Ok(MkaRidge {
+            x_train: train.x.clone(),
+            kernel: kernel.boxed_clone(),
+            lambda,
+            alpha,
+        })
+    }
+
+    pub fn lambda(&self) -> f64 {
+        self.lambda
+    }
+}
+
+impl GpModel for MkaRidge {
+    fn predict(&self, x_test: &Mat) -> Prediction {
+        let mean: Vec<f64> = (0..x_test.rows)
+            .map(|t| {
+                let kx = self.kernel.cross(x_test.row(t), &self.x_train);
+                dot(&kx, &self.alpha)
+            })
+            .collect();
+        // Ridge regression has no predictive variance; report λ as a
+        // homoscedastic placeholder so MNLP stays defined.
+        let var = vec![self.lambda.max(1e-6); mean.len()];
+        Prediction { mean, var }
+    }
+
+    fn name(&self) -> String {
+        "MKA-Ridge".to_string()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::{gp_dataset, SynthSpec};
+    use crate::gp::metrics::smse;
+    use crate::kernels::RbfKernel;
+
+    #[test]
+    fn ridge_learns_signal() {
+        let data = gp_dataset(&SynthSpec::named("t", 150, 2), 7);
+        let (tr, te) = data.split(0.9, 1);
+        let cfg = MkaConfig { d_core: 24, block_size: 48, ..MkaConfig::default() };
+        let m = MkaRidge::fit(&tr, &RbfKernel::new(1.0), 0.1, &cfg).unwrap();
+        let pred = m.predict(&te.x);
+        let e = smse(&te.y, &pred.mean);
+        assert!(e < 0.9, "SMSE {e}");
+        assert_eq!(m.name(), "MKA-Ridge");
+        assert_eq!(m.lambda(), 0.1);
+    }
+
+    #[test]
+    fn matches_exact_ridge_without_compression() {
+        let data = gp_dataset(&SynthSpec::named("t", 50, 2), 8);
+        let kern = RbfKernel::new(1.0);
+        let cfg = MkaConfig { d_core: 100, ..MkaConfig::default() };
+        let m = MkaRidge::fit(&data, &kern, 0.2, &cfg).unwrap();
+        // exact ridge α via Cholesky
+        let mut k = kern.gram_sym(&data.x);
+        k.add_diag(0.2);
+        let chol = crate::la::chol::Chol::new(&k).unwrap();
+        let alpha = chol.solve(&data.y);
+        for i in 0..50 {
+            assert!((alpha[i] - m.alpha[i]).abs() < 1e-8);
+        }
+    }
+}

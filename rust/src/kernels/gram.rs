@@ -1,0 +1,222 @@
+//! Gram-matrix construction — the O(n²) part of the pipeline.
+//!
+//! `GramBuilder` assembles K(X, Y) tile by tile. Each tile either goes
+//! through the native Rust evaluator or through a [`TileEngine`] — the
+//! PJRT-loaded, Pallas-authored XLA artifact (see `runtime::engine`), which
+//! is the paper's "forming K" hot spot moved onto the AOT compute path.
+
+use std::sync::Arc;
+
+use super::Kernel;
+use crate::la::dense::Mat;
+
+/// Something that can produce an RBF gram tile K(Xb, Yb) for row-blocks of
+/// points. Implemented by `runtime::engine::XlaEngine` over the AOT
+/// artifact; tests provide mock implementations.
+pub trait TileEngine: Send + Sync {
+    /// Tile size T the engine was compiled for (tiles are padded to T×T).
+    fn tile(&self) -> usize;
+
+    /// Max feature dimension D the engine was compiled for.
+    fn max_dim(&self) -> usize;
+
+    /// Compute the RBF gram tile for (possibly short) blocks `xb` (r×d) and
+    /// `yb` (c×d): out[i][j] = sf² exp(−‖x_i − y_j‖²/(2ℓ²)).
+    fn rbf_tile(&self, xb: &Mat, yb: &Mat, lengthscale: f64, signal_var: f64) -> Mat;
+}
+
+/// Builds gram matrices, optionally offloading tiles to a [`TileEngine`].
+pub struct GramBuilder {
+    kernel: Box<dyn Kernel>,
+    engine: Option<Arc<dyn TileEngine>>,
+    /// RBF parameters if (and only if) the kernel is RBF — the AOT tile
+    /// kernel implements the RBF formula specifically.
+    rbf_params: Option<(f64, f64)>,
+}
+
+impl GramBuilder {
+    pub fn new(kernel: Box<dyn Kernel>) -> GramBuilder {
+        GramBuilder { kernel, engine: None, rbf_params: None }
+    }
+
+    /// Create a builder for an RBF kernel that may offload to `engine`.
+    pub fn rbf(lengthscale: f64, signal_var: f64, engine: Option<Arc<dyn TileEngine>>) -> GramBuilder {
+        GramBuilder {
+            kernel: Box::new(super::RbfKernel::with_signal(lengthscale, signal_var)),
+            engine,
+            rbf_params: Some((lengthscale, signal_var)),
+        }
+    }
+
+    pub fn kernel(&self) -> &dyn Kernel {
+        self.kernel.as_ref()
+    }
+
+    pub fn has_engine(&self) -> bool {
+        self.engine.is_some()
+    }
+
+    /// Dense K(X, Y).
+    pub fn build(&self, x: &Mat, y: &Mat) -> Mat {
+        match (&self.engine, self.rbf_params) {
+            (Some(eng), Some((l, sf))) if x.cols <= eng.max_dim() => {
+                self.build_tiled(eng.as_ref(), x, y, l, sf)
+            }
+            _ => self.kernel.gram(x, y),
+        }
+    }
+
+    /// Dense symmetric K(X, X).
+    pub fn build_sym(&self, x: &Mat) -> Mat {
+        match (&self.engine, self.rbf_params) {
+            (Some(eng), Some((l, sf))) if x.cols <= eng.max_dim() => {
+                // Tile the upper triangle; mirror.
+                let t = eng.tile();
+                let n = x.rows;
+                let mut k = Mat::zeros(n, n);
+                let mut r0 = 0;
+                while r0 < n {
+                    let r1 = (r0 + t).min(n);
+                    let xb = x.block(r0, r1, 0, x.cols);
+                    let mut c0 = r0;
+                    while c0 < n {
+                        let c1 = (c0 + t).min(n);
+                        let yb = x.block(c0, c1, 0, x.cols);
+                        let tile = eng.rbf_tile(&xb, &yb, l, sf);
+                        for i in 0..(r1 - r0) {
+                            for j in 0..(c1 - c0) {
+                                let v = tile.at(i, j);
+                                k.set(r0 + i, c0 + j, v);
+                                k.set(c0 + j, r0 + i, v);
+                            }
+                        }
+                        c0 = c1;
+                    }
+                    r0 = r1;
+                }
+                // Exact diagonal.
+                for i in 0..n {
+                    k.set(i, i, sf);
+                }
+                k
+            }
+            _ => self.kernel.gram_sym(x),
+        }
+    }
+
+    fn build_tiled(&self, eng: &dyn TileEngine, x: &Mat, y: &Mat, l: f64, sf: f64) -> Mat {
+        let t = eng.tile();
+        let mut k = Mat::zeros(x.rows, y.rows);
+        let mut r0 = 0;
+        while r0 < x.rows {
+            let r1 = (r0 + t).min(x.rows);
+            let xb = x.block(r0, r1, 0, x.cols);
+            let mut c0 = 0;
+            while c0 < y.rows {
+                let c1 = (c0 + t).min(y.rows);
+                let yb = y.block(c0, c1, 0, y.cols);
+                let tile = eng.rbf_tile(&xb, &yb, l, sf);
+                for i in 0..(r1 - r0) {
+                    k.row_mut(r0 + i)[c0..c1].copy_from_slice(&tile.row(i)[..c1 - c0]);
+                }
+                c0 = c1;
+            }
+            r0 = r1;
+        }
+        k
+    }
+}
+
+/// Pure-Rust reference tile (used by the native fallback engine and tests):
+/// same math as the Pallas kernel in `python/compile/kernels/gram.py`.
+pub fn rbf_tile_native(xb: &Mat, yb: &Mat, lengthscale: f64, signal_var: f64) -> Mat {
+    let inv = 1.0 / (2.0 * lengthscale * lengthscale);
+    // ‖x‖² + ‖y‖² − 2 x·y, then exp — mirrors the kernel's MXU+VPU split.
+    let xs: Vec<f64> = (0..xb.rows).map(|i| crate::la::blas::dot(xb.row(i), xb.row(i))).collect();
+    let ys: Vec<f64> = (0..yb.rows).map(|j| crate::la::blas::dot(yb.row(j), yb.row(j))).collect();
+    let xy = crate::la::blas::gemm_nt(xb, yb);
+    Mat::from_fn(xb.rows, yb.rows, |i, j| {
+        let d2 = (xs[i] + ys[j] - 2.0 * xy.at(i, j)).max(0.0);
+        signal_var * (-d2 * inv).exp()
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernels::RbfKernel;
+    use crate::util::Rng;
+
+    struct NativeEngine {
+        tile: usize,
+    }
+
+    impl TileEngine for NativeEngine {
+        fn tile(&self) -> usize {
+            self.tile
+        }
+        fn max_dim(&self) -> usize {
+            64
+        }
+        fn rbf_tile(&self, xb: &Mat, yb: &Mat, l: f64, sf: f64) -> Mat {
+            rbf_tile_native(xb, yb, l, sf)
+        }
+    }
+
+    fn randx(n: usize, d: usize, seed: u64) -> Mat {
+        let mut rng = Rng::new(seed);
+        Mat::from_fn(n, d, |_, _| rng.normal())
+    }
+
+    #[test]
+    fn native_tile_matches_pointwise() {
+        let x = randx(7, 3, 1);
+        let y = randx(5, 3, 2);
+        let k = RbfKernel::with_signal(0.8, 1.5);
+        let tile = rbf_tile_native(&x, &y, 0.8, 1.5);
+        let direct = k.gram(&x, &y);
+        assert!(tile.sub(&direct).max_abs() < 1e-12);
+    }
+
+    #[test]
+    fn tiled_build_matches_direct_nonsquare_and_remainders() {
+        // n deliberately not a multiple of the tile size
+        let x = randx(23, 4, 3);
+        let y = randx(17, 4, 4);
+        let eng: Arc<dyn TileEngine> = Arc::new(NativeEngine { tile: 8 });
+        let b = GramBuilder::rbf(1.2, 1.0, Some(eng));
+        let k = b.build(&x, &y);
+        let direct = RbfKernel::new(1.2).gram(&x, &y);
+        assert!(k.sub(&direct).max_abs() < 1e-12);
+    }
+
+    #[test]
+    fn tiled_sym_matches_direct() {
+        let x = randx(21, 3, 5);
+        let eng: Arc<dyn TileEngine> = Arc::new(NativeEngine { tile: 8 });
+        let b = GramBuilder::rbf(0.6, 2.0, Some(eng));
+        let k = b.build_sym(&x);
+        let direct = RbfKernel::with_signal(0.6, 2.0).gram_sym(&x);
+        assert!(k.sub(&direct).max_abs() < 1e-12);
+        assert_eq!(k.asymmetry(), 0.0);
+    }
+
+    #[test]
+    fn no_engine_falls_back() {
+        let x = randx(10, 3, 6);
+        let b = GramBuilder::new(Box::new(RbfKernel::new(1.0)));
+        assert!(!b.has_engine());
+        let k = b.build_sym(&x);
+        assert!(k.sub(&RbfKernel::new(1.0).gram_sym(&x)).max_abs() < 1e-15);
+    }
+
+    #[test]
+    fn high_dim_bypasses_engine() {
+        // dim > engine max_dim → native path, still correct
+        let x = randx(9, 70, 7);
+        let eng: Arc<dyn TileEngine> = Arc::new(NativeEngine { tile: 8 });
+        let b = GramBuilder::rbf(1.0, 1.0, Some(eng));
+        let k = b.build_sym(&x);
+        assert!(k.sub(&RbfKernel::new(1.0).gram_sym(&x)).max_abs() < 1e-12);
+    }
+}

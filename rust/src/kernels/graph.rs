@@ -1,0 +1,155 @@
+//! Graph kernels (paper §4, last paragraph): diffusion kernels
+//! K = exp(−βL) are matrix functions of a *sparse* Laplacian, which is the
+//! one case where MKA can avoid even writing down the dense kernel matrix.
+//!
+//! This module provides graph generators, the exact dense diffusion kernel
+//! (EVD-based oracle for tests/benches), and helpers to feed a Laplacian
+//! into the MKA pipeline; the fast path itself is
+//! `mka::MkaFactor::matrix_exp` (Proposition 7).
+
+use crate::la::dense::Mat;
+use crate::la::evd::SymEig;
+use crate::la::sparse::Graph;
+use crate::util::Rng;
+
+/// Exact diffusion kernel exp(−βL) via dense EVD — O(n³) oracle.
+pub fn diffusion_dense(graph: &Graph, beta: f64) -> Mat {
+    let l = graph.laplacian().to_dense();
+    let e = SymEig::new(&l);
+    e.apply_fn(|lam| (-beta * lam).exp())
+}
+
+/// Exact p-step random-walk kernel (aI − L)^p (Smola & Kondor 2003).
+pub fn random_walk_dense(graph: &Graph, a: f64, p: u32) -> Mat {
+    let l = graph.laplacian().to_dense();
+    let e = SymEig::new(&l);
+    e.apply_fn(|lam| (a - lam).powi(p as i32))
+}
+
+/// Erdős–Rényi-ish sparse random graph with expected degree `deg`.
+pub fn random_graph(n: usize, deg: f64, rng: &mut Rng) -> Graph {
+    let p = (deg / (n as f64 - 1.0)).min(1.0);
+    let mut edges = Vec::new();
+    for i in 0..n {
+        for j in (i + 1)..n {
+            if rng.uniform() < p {
+                edges.push((i, j, 1.0));
+            }
+        }
+    }
+    // Guarantee no isolated vertices (connect stragglers to a random node).
+    let mut deg_count = vec![0usize; n];
+    for &(i, j, _) in &edges {
+        deg_count[i] += 1;
+        deg_count[j] += 1;
+    }
+    for i in 0..n {
+        if deg_count[i] == 0 {
+            let mut j = rng.below(n);
+            while j == i {
+                j = rng.below(n);
+            }
+            edges.push((i.min(j), i.max(j), 1.0));
+        }
+    }
+    Graph::from_edges(n, &edges)
+}
+
+/// k-nearest-neighbour graph over data points (gaussian edge weights) —
+/// the standard way to get a sparse Laplacian from a point cloud.
+pub fn knn_graph(x: &Mat, k: usize, lengthscale: f64) -> Graph {
+    let n = x.rows;
+    let mut edges: Vec<(usize, usize, f64)> = Vec::new();
+    let mut seen = std::collections::HashSet::new();
+    for i in 0..n {
+        // distances to all others (O(n²) — fine for bench sizes)
+        let mut d: Vec<(f64, usize)> = (0..n)
+            .filter(|&j| j != i)
+            .map(|j| {
+                let mut s = 0.0;
+                for (a, b) in x.row(i).iter().zip(x.row(j)) {
+                    s += (a - b) * (a - b);
+                }
+                (s, j)
+            })
+            .collect();
+        d.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+        for &(d2, j) in d.iter().take(k) {
+            let key = (i.min(j), i.max(j));
+            if seen.insert(key) {
+                let w = (-d2 / (2.0 * lengthscale * lengthscale)).exp();
+                edges.push((key.0, key.1, w));
+            }
+        }
+    }
+    Graph::from_edges(n, &edges)
+}
+
+/// Ring lattice — deterministic structured graph for tests.
+pub fn ring_graph(n: usize) -> Graph {
+    let edges: Vec<(usize, usize, f64)> = (0..n).map(|i| (i, (i + 1) % n, 1.0)).collect();
+    let edges: Vec<(usize, usize, f64)> =
+        edges.into_iter().map(|(i, j, w)| (i.min(j), i.max(j), w)).collect();
+    Graph::from_edges(n, &edges)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn diffusion_at_beta_zero_is_identity() {
+        let g = ring_graph(8);
+        let k = diffusion_dense(&g, 0.0);
+        assert!(k.sub(&Mat::eye(8)).max_abs() < 1e-10);
+    }
+
+    #[test]
+    fn diffusion_is_psd_and_symmetric() {
+        let mut rng = Rng::new(1);
+        let g = random_graph(20, 4.0, &mut rng);
+        let k = diffusion_dense(&g, 0.7);
+        assert!(k.asymmetry() < 1e-9);
+        let e = SymEig::new(&k);
+        assert!(e.values[0] > -1e-10);
+    }
+
+    #[test]
+    fn diffusion_rows_sum_to_one() {
+        // exp(−βL)·1 = 1 since L·1 = 0.
+        let g = ring_graph(10);
+        let k = diffusion_dense(&g, 1.3);
+        for i in 0..10 {
+            let s: f64 = k.row(i).iter().sum();
+            assert!((s - 1.0).abs() < 1e-9, "row {i} sums to {s}");
+        }
+    }
+
+    #[test]
+    fn random_graph_has_no_isolated_vertices() {
+        let mut rng = Rng::new(2);
+        let g = random_graph(50, 3.0, &mut rng);
+        for (i, d) in g.degrees().iter().enumerate() {
+            assert!(*d > 0.0, "vertex {i} isolated");
+        }
+    }
+
+    #[test]
+    fn knn_graph_connects_each_vertex() {
+        let mut rng = Rng::new(3);
+        let x = Mat::from_fn(30, 2, |_, _| rng.normal());
+        let g = knn_graph(&x, 3, 1.0);
+        for d in g.degrees() {
+            assert!(d > 0.0);
+        }
+    }
+
+    #[test]
+    fn random_walk_kernel_psd_when_a_large() {
+        let g = ring_graph(12);
+        // max eigenvalue of ring Laplacian is ≤ 4; a = 5 keeps it psd.
+        let k = random_walk_dense(&g, 5.0, 2);
+        let e = SymEig::new(&k);
+        assert!(e.values[0] > -1e-9);
+    }
+}

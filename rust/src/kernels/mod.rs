@@ -1,0 +1,366 @@
+//! Covariance (kernel) functions and gram-matrix builders.
+//!
+//! The paper's experiments use the Gaussian (RBF) kernel with a single
+//! length scale; we additionally provide Laplace, Matérn 3/2 & 5/2, linear
+//! and polynomial kernels so the library is usable beyond the reproduction,
+//! plus graph diffusion kernels (§4) in [`graph`].
+//!
+//! Gram construction is the O(n²) hot spot. [`gram::GramBuilder`] dispatches
+//! between the native Rust path and the AOT-compiled XLA/Pallas tile kernel
+//! loaded through [`crate::runtime`].
+
+pub mod gram;
+pub mod graph;
+
+use crate::la::dense::Mat;
+
+/// A positive-definite covariance function on feature vectors.
+pub trait Kernel: Send + Sync {
+    /// k(x, x').
+    fn eval(&self, x: &[f64], y: &[f64]) -> f64;
+
+    /// k(x, x) — usually the signal variance; defaults to `eval(x, x)`.
+    fn diag(&self, x: &[f64]) -> f64 {
+        self.eval(x, x)
+    }
+
+    /// Human-readable name for logs and manifests.
+    fn name(&self) -> String;
+
+    /// Clone into a box (object-safe clone).
+    fn boxed_clone(&self) -> Box<dyn Kernel>;
+
+    /// Dense gram matrix K(X, Y); rows of `x`/`y` are points.
+    fn gram(&self, x: &Mat, y: &Mat) -> Mat {
+        assert_eq!(x.cols, y.cols, "dimension mismatch");
+        Mat::from_fn(x.rows, y.rows, |i, j| self.eval(x.row(i), y.row(j)))
+    }
+
+    /// Symmetric gram matrix K(X, X) — computes the upper triangle once.
+    fn gram_sym(&self, x: &Mat) -> Mat {
+        let n = x.rows;
+        let mut k = Mat::zeros(n, n);
+        for i in 0..n {
+            k.set(i, i, self.diag(x.row(i)));
+            for j in (i + 1)..n {
+                let v = self.eval(x.row(i), x.row(j));
+                k.set(i, j, v);
+                k.set(j, i, v);
+            }
+        }
+        k
+    }
+
+    /// Cross-covariance vector k(x, X) against all rows of X.
+    fn cross(&self, x: &[f64], xs: &Mat) -> Vec<f64> {
+        (0..xs.rows).map(|i| self.eval(x, xs.row(i))).collect()
+    }
+}
+
+impl Clone for Box<dyn Kernel> {
+    fn clone(&self) -> Self {
+        self.boxed_clone()
+    }
+}
+
+#[inline]
+fn sqdist(x: &[f64], y: &[f64]) -> f64 {
+    debug_assert_eq!(x.len(), y.len());
+    let mut s = 0.0;
+    for (a, b) in x.iter().zip(y) {
+        let d = a - b;
+        s += d * d;
+    }
+    s
+}
+
+/// Gaussian / RBF kernel: k(x, x') = σ_f² exp(−‖x−x'‖² / (2ℓ²)).
+///
+/// The paper uses a single length scale for all dimensions; so do we.
+#[derive(Clone, Debug)]
+pub struct RbfKernel {
+    pub lengthscale: f64,
+    pub signal_var: f64,
+}
+
+impl RbfKernel {
+    pub fn new(lengthscale: f64) -> RbfKernel {
+        RbfKernel { lengthscale, signal_var: 1.0 }
+    }
+
+    pub fn with_signal(lengthscale: f64, signal_var: f64) -> RbfKernel {
+        RbfKernel { lengthscale, signal_var }
+    }
+}
+
+impl Kernel for RbfKernel {
+    #[inline]
+    fn eval(&self, x: &[f64], y: &[f64]) -> f64 {
+        self.signal_var * (-sqdist(x, y) / (2.0 * self.lengthscale * self.lengthscale)).exp()
+    }
+
+    fn diag(&self, _x: &[f64]) -> f64 {
+        self.signal_var
+    }
+
+    fn name(&self) -> String {
+        format!("rbf(l={}, sf2={})", self.lengthscale, self.signal_var)
+    }
+
+    fn boxed_clone(&self) -> Box<dyn Kernel> {
+        Box::new(self.clone())
+    }
+}
+
+/// Laplace (exponential) kernel: exp(−‖x−x'‖ / ℓ). Heavier spectral tail
+/// than RBF — a stress test for low-rank methods.
+#[derive(Clone, Debug)]
+pub struct LaplaceKernel {
+    pub lengthscale: f64,
+    pub signal_var: f64,
+}
+
+impl LaplaceKernel {
+    pub fn new(lengthscale: f64) -> LaplaceKernel {
+        LaplaceKernel { lengthscale, signal_var: 1.0 }
+    }
+}
+
+impl Kernel for LaplaceKernel {
+    #[inline]
+    fn eval(&self, x: &[f64], y: &[f64]) -> f64 {
+        self.signal_var * (-sqdist(x, y).sqrt() / self.lengthscale).exp()
+    }
+
+    fn diag(&self, _x: &[f64]) -> f64 {
+        self.signal_var
+    }
+
+    fn name(&self) -> String {
+        format!("laplace(l={})", self.lengthscale)
+    }
+
+    fn boxed_clone(&self) -> Box<dyn Kernel> {
+        Box::new(self.clone())
+    }
+}
+
+/// Matérn 3/2 kernel.
+#[derive(Clone, Debug)]
+pub struct Matern32Kernel {
+    pub lengthscale: f64,
+    pub signal_var: f64,
+}
+
+impl Matern32Kernel {
+    pub fn new(lengthscale: f64) -> Matern32Kernel {
+        Matern32Kernel { lengthscale, signal_var: 1.0 }
+    }
+}
+
+impl Kernel for Matern32Kernel {
+    #[inline]
+    fn eval(&self, x: &[f64], y: &[f64]) -> f64 {
+        let r = sqdist(x, y).sqrt() / self.lengthscale;
+        let a = 3.0f64.sqrt() * r;
+        self.signal_var * (1.0 + a) * (-a).exp()
+    }
+
+    fn diag(&self, _x: &[f64]) -> f64 {
+        self.signal_var
+    }
+
+    fn name(&self) -> String {
+        format!("matern32(l={})", self.lengthscale)
+    }
+
+    fn boxed_clone(&self) -> Box<dyn Kernel> {
+        Box::new(self.clone())
+    }
+}
+
+/// Matérn 5/2 kernel.
+#[derive(Clone, Debug)]
+pub struct Matern52Kernel {
+    pub lengthscale: f64,
+    pub signal_var: f64,
+}
+
+impl Matern52Kernel {
+    pub fn new(lengthscale: f64) -> Matern52Kernel {
+        Matern52Kernel { lengthscale, signal_var: 1.0 }
+    }
+}
+
+impl Kernel for Matern52Kernel {
+    #[inline]
+    fn eval(&self, x: &[f64], y: &[f64]) -> f64 {
+        let r = sqdist(x, y).sqrt() / self.lengthscale;
+        let a = 5.0f64.sqrt() * r;
+        self.signal_var * (1.0 + a + a * a / 3.0) * (-a).exp()
+    }
+
+    fn diag(&self, _x: &[f64]) -> f64 {
+        self.signal_var
+    }
+
+    fn name(&self) -> String {
+        format!("matern52(l={})", self.lengthscale)
+    }
+
+    fn boxed_clone(&self) -> Box<dyn Kernel> {
+        Box::new(self.clone())
+    }
+}
+
+/// Linear kernel ⟨x, y⟩ + c.
+#[derive(Clone, Debug)]
+pub struct LinearKernel {
+    pub bias: f64,
+}
+
+impl Kernel for LinearKernel {
+    #[inline]
+    fn eval(&self, x: &[f64], y: &[f64]) -> f64 {
+        crate::la::blas::dot(x, y) + self.bias
+    }
+
+    fn name(&self) -> String {
+        format!("linear(c={})", self.bias)
+    }
+
+    fn boxed_clone(&self) -> Box<dyn Kernel> {
+        Box::new(self.clone())
+    }
+}
+
+/// Polynomial kernel (⟨x, y⟩ + c)^d.
+#[derive(Clone, Debug)]
+pub struct PolyKernel {
+    pub bias: f64,
+    pub degree: u32,
+}
+
+impl Kernel for PolyKernel {
+    #[inline]
+    fn eval(&self, x: &[f64], y: &[f64]) -> f64 {
+        (crate::la::blas::dot(x, y) + self.bias).powi(self.degree as i32)
+    }
+
+    fn name(&self) -> String {
+        format!("poly(c={}, d={})", self.bias, self.degree)
+    }
+
+    fn boxed_clone(&self) -> Box<dyn Kernel> {
+        Box::new(self.clone())
+    }
+}
+
+/// Construct a kernel by name (config system).
+pub fn kernel_by_name(name: &str, lengthscale: f64) -> Box<dyn Kernel> {
+    match name {
+        "rbf" | "gaussian" => Box::new(RbfKernel::new(lengthscale)),
+        "laplace" => Box::new(LaplaceKernel::new(lengthscale)),
+        "matern32" => Box::new(Matern32Kernel::new(lengthscale)),
+        "matern52" => Box::new(Matern52Kernel::new(lengthscale)),
+        "linear" => Box::new(LinearKernel { bias: 1.0 }),
+        _ => Box::new(RbfKernel::new(lengthscale)),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::la::evd::SymEig;
+    use crate::util::Rng;
+
+    fn randx(n: usize, d: usize, seed: u64) -> Mat {
+        let mut rng = Rng::new(seed);
+        Mat::from_fn(n, d, |_, _| rng.normal())
+    }
+
+    #[test]
+    fn rbf_basic_properties() {
+        let k = RbfKernel::new(1.0);
+        let x = [0.0, 0.0];
+        let y = [1.0, 0.0];
+        assert_eq!(k.eval(&x, &x), 1.0);
+        assert!((k.eval(&x, &y) - (-0.5f64).exp()).abs() < 1e-15);
+        // symmetry
+        assert_eq!(k.eval(&x, &y), k.eval(&y, &x));
+    }
+
+    #[test]
+    fn rbf_lengthscale_monotone() {
+        let x = [0.0];
+        let y = [2.0];
+        let k_short = RbfKernel::new(0.2).eval(&x, &y);
+        let k_long = RbfKernel::new(5.0).eval(&x, &y);
+        assert!(k_short < k_long);
+    }
+
+    #[test]
+    fn gram_sym_matches_gram() {
+        let k = RbfKernel::new(0.7);
+        let x = randx(15, 3, 1);
+        let a = k.gram_sym(&x);
+        let b = k.gram(&x, &x);
+        assert!(a.sub(&b).max_abs() < 1e-15);
+        assert_eq!(a.asymmetry(), 0.0);
+    }
+
+    #[test]
+    fn gram_is_psd_for_all_kernels() {
+        let x = randx(20, 4, 2);
+        let kernels: Vec<Box<dyn Kernel>> = vec![
+            Box::new(RbfKernel::new(1.0)),
+            Box::new(LaplaceKernel::new(1.0)),
+            Box::new(Matern32Kernel::new(1.0)),
+            Box::new(Matern52Kernel::new(1.0)),
+            Box::new(LinearKernel { bias: 1.0 }),
+        ];
+        for k in &kernels {
+            let g = k.gram_sym(&x);
+            let e = SymEig::new(&g);
+            assert!(e.values[0] > -1e-8, "{} min eig {}", k.name(), e.values[0]);
+        }
+    }
+
+    #[test]
+    fn matern_at_zero_distance() {
+        let x = [1.0, 2.0];
+        assert!((Matern32Kernel::new(0.5).eval(&x, &x) - 1.0).abs() < 1e-15);
+        assert!((Matern52Kernel::new(0.5).eval(&x, &x) - 1.0).abs() < 1e-15);
+    }
+
+    #[test]
+    fn short_lengthscale_has_heavier_spectrum() {
+        // The paper's central observation: as ℓ shrinks, the number of
+        // significant eigenvalues grows.
+        let x = randx(40, 2, 3);
+        let count_signif = |l: f64| {
+            let g = RbfKernel::new(l).gram_sym(&x);
+            let e = SymEig::new(&g);
+            let top = e.values.last().unwrap();
+            e.values.iter().filter(|&&v| v > 1e-3 * top).count()
+        };
+        assert!(count_signif(0.1) > count_signif(10.0));
+    }
+
+    #[test]
+    fn cross_matches_gram_row() {
+        let k = RbfKernel::new(1.3);
+        let x = randx(6, 3, 4);
+        let q = [0.1, -0.2, 0.3];
+        let c = k.cross(&q, &x);
+        for i in 0..6 {
+            assert_eq!(c[i], k.eval(&q, x.row(i)));
+        }
+    }
+
+    #[test]
+    fn by_name_lookup() {
+        assert!(kernel_by_name("laplace", 1.0).name().starts_with("laplace"));
+        assert!(kernel_by_name("rbf", 2.0).name().starts_with("rbf"));
+    }
+}

@@ -1,0 +1,310 @@
+//! BLAS-style compute kernels (no external BLAS in the offline build).
+//!
+//! `gemm` is a cache-blocked, register-tiled triple loop; `syrk` exploits
+//! symmetry (this is the AᵀA product that dominates MMF compression —
+//! Proposition 4's `m³` term — so it is one of the L3 hot paths; the same
+//! product is also available through the AOT'd XLA artifact, see
+//! `runtime::engine`).
+
+use super::dense::Mat;
+
+/// y ← A x.
+pub fn gemv(a: &Mat, x: &[f64]) -> Vec<f64> {
+    assert_eq!(a.cols, x.len());
+    let mut y = vec![0.0; a.rows];
+    gemv_into(a, x, &mut y);
+    y
+}
+
+/// y ← A x (no allocation).
+pub fn gemv_into(a: &Mat, x: &[f64], y: &mut [f64]) {
+    assert_eq!(a.cols, x.len());
+    assert_eq!(a.rows, y.len());
+    for i in 0..a.rows {
+        y[i] = dot(a.row(i), x);
+    }
+}
+
+/// y ← Aᵀ x.
+pub fn gemv_t(a: &Mat, x: &[f64]) -> Vec<f64> {
+    assert_eq!(a.rows, x.len());
+    let mut y = vec![0.0; a.cols];
+    for i in 0..a.rows {
+        let xi = x[i];
+        if xi == 0.0 {
+            continue;
+        }
+        let row = a.row(i);
+        for j in 0..a.cols {
+            y[j] += xi * row[j];
+        }
+    }
+    y
+}
+
+/// Dot product with 4-way unrolling (auto-vectorizes well).
+#[inline]
+pub fn dot(a: &[f64], b: &[f64]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    let n = a.len();
+    let chunks = n / 4;
+    let (mut s0, mut s1, mut s2, mut s3) = (0.0, 0.0, 0.0, 0.0);
+    for k in 0..chunks {
+        let i = 4 * k;
+        unsafe {
+            s0 += a.get_unchecked(i) * b.get_unchecked(i);
+            s1 += a.get_unchecked(i + 1) * b.get_unchecked(i + 1);
+            s2 += a.get_unchecked(i + 2) * b.get_unchecked(i + 2);
+            s3 += a.get_unchecked(i + 3) * b.get_unchecked(i + 3);
+        }
+    }
+    let mut s = s0 + s1 + s2 + s3;
+    for i in 4 * chunks..n {
+        s += a[i] * b[i];
+    }
+    s
+}
+
+/// y ← y + a·x.
+#[inline]
+pub fn axpy(alpha: f64, x: &[f64], y: &mut [f64]) {
+    debug_assert_eq!(x.len(), y.len());
+    for (yi, xi) in y.iter_mut().zip(x) {
+        *yi += alpha * xi;
+    }
+}
+
+pub fn norm2(x: &[f64]) -> f64 {
+    dot(x, x).sqrt()
+}
+
+/// C ← A B, cache-blocked i-k-j loop order (B rows stream through cache).
+pub fn gemm(a: &Mat, b: &Mat) -> Mat {
+    assert_eq!(a.cols, b.rows, "gemm shape mismatch {}x{} * {}x{}", a.rows, a.cols, b.rows, b.cols);
+    let mut c = Mat::zeros(a.rows, b.cols);
+    gemm_acc(1.0, a, b, &mut c);
+    c
+}
+
+/// C ← C + alpha·A·B. The workhorse: blocked over k and j with an i-k-j
+/// inner structure; the innermost loop is an axpy over a row of B which
+/// vectorizes.
+pub fn gemm_acc(alpha: f64, a: &Mat, b: &Mat, c: &mut Mat) {
+    assert_eq!(a.cols, b.rows);
+    assert_eq!(c.rows, a.rows);
+    assert_eq!(c.cols, b.cols);
+    const KB: usize = 128; // k-block: keeps a strip of B in L2
+    const JB: usize = 512; // j-block: row segments fit L1
+
+    let (m, k, n) = (a.rows, a.cols, b.cols);
+    for kb in (0..k).step_by(KB) {
+        let kend = (kb + KB).min(k);
+        for jb in (0..n).step_by(JB) {
+            let jend = (jb + JB).min(n);
+            for i in 0..m {
+                let arow = a.row(i);
+                let crow = &mut c.row_mut(i)[jb..jend];
+                for kk in kb..kend {
+                    let aik = alpha * arow[kk];
+                    if aik == 0.0 {
+                        continue;
+                    }
+                    let brow = &b.row(kk)[jb..jend];
+                    for (cj, bj) in crow.iter_mut().zip(brow) {
+                        *cj += aik * bj;
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// C ← Aᵀ B  (m×k)ᵀ·(m×n): accumulate outer products of rows of A and B.
+pub fn gemm_tn(a: &Mat, b: &Mat) -> Mat {
+    assert_eq!(a.rows, b.rows);
+    let mut c = Mat::zeros(a.cols, b.cols);
+    for i in 0..a.rows {
+        let arow = a.row(i);
+        let brow = b.row(i);
+        for p in 0..a.cols {
+            let api = arow[p];
+            if api == 0.0 {
+                continue;
+            }
+            let crow = c.row_mut(p);
+            for q in 0..b.cols {
+                crow[q] += api * brow[q];
+            }
+        }
+    }
+    c
+}
+
+/// C ← A Bᵀ — dot products of rows; very cache friendly.
+pub fn gemm_nt(a: &Mat, b: &Mat) -> Mat {
+    assert_eq!(a.cols, b.cols);
+    let mut c = Mat::zeros(a.rows, b.rows);
+    for i in 0..a.rows {
+        let arow = a.row(i);
+        let crow = c.row_mut(i);
+        for j in 0..b.rows {
+            crow[j] = dot(arow, b.row(j));
+        }
+    }
+    c
+}
+
+/// G ← AᵀA (symmetric rank-k update). Computes only the upper triangle and
+/// mirrors it. This is MMF's dominant cost; see also the XLA artifact path.
+pub fn syrk_ata(a: &Mat) -> Mat {
+    let n = a.cols;
+    let mut g = Mat::zeros(n, n);
+    // Accumulate row outer-products, upper triangle only.
+    for i in 0..a.rows {
+        let row = a.row(i);
+        for p in 0..n {
+            let v = row[p];
+            if v == 0.0 {
+                continue;
+            }
+            let grow = g.row_mut(p);
+            for q in p..n {
+                grow[q] += v * row[q];
+            }
+        }
+    }
+    // Mirror.
+    for p in 0..n {
+        for q in (p + 1)..n {
+            let v = g[(p, q)];
+            g[(q, p)] = v;
+        }
+    }
+    g
+}
+
+/// G ← A Aᵀ for symmetric-needed products over rows.
+pub fn syrk_aat(a: &Mat) -> Mat {
+    let n = a.rows;
+    let mut g = Mat::zeros(n, n);
+    for i in 0..n {
+        let ri = a.row(i);
+        for j in i..n {
+            let v = dot(ri, a.row(j));
+            g[(i, j)] = v;
+            g[(j, i)] = v;
+        }
+    }
+    g
+}
+
+/// Conjugation QᵀAQ for dense Q (test helper / SPCA path).
+pub fn conjugate(q: &Mat, a: &Mat) -> Mat {
+    // (QᵀA)Q
+    let qta = gemm_tn(q, a);
+    gemm(&qta, q)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn randm(r: usize, c: usize, seed: u64) -> Mat {
+        let mut rng = Rng::new(seed);
+        Mat::from_fn(r, c, |_, _| rng.normal())
+    }
+
+    /// Naive reference gemm.
+    fn gemm_ref(a: &Mat, b: &Mat) -> Mat {
+        let mut c = Mat::zeros(a.rows, b.cols);
+        for i in 0..a.rows {
+            for j in 0..b.cols {
+                let mut s = 0.0;
+                for k in 0..a.cols {
+                    s += a[(i, k)] * b[(k, j)];
+                }
+                c[(i, j)] = s;
+            }
+        }
+        c
+    }
+
+    #[test]
+    fn gemm_matches_reference() {
+        for (m, k, n) in [(1, 1, 1), (3, 4, 5), (17, 31, 13), (64, 70, 65)] {
+            let a = randm(m, k, 1);
+            let b = randm(k, n, 2);
+            let c = gemm(&a, &b);
+            let r = gemm_ref(&a, &b);
+            assert!(c.sub(&r).max_abs() < 1e-10, "m={m} k={k} n={n}");
+        }
+    }
+
+    #[test]
+    fn gemm_tn_nt_match() {
+        let a = randm(23, 11, 3);
+        let b = randm(23, 17, 4);
+        let c = gemm_tn(&a, &b);
+        let r = gemm_ref(&a.transpose(), &b);
+        assert!(c.sub(&r).max_abs() < 1e-10);
+
+        let b2 = randm(19, 11, 5);
+        let c2 = gemm_nt(&a, &b2);
+        let r2 = gemm_ref(&a, &b2.transpose());
+        assert!(c2.sub(&r2).max_abs() < 1e-10);
+    }
+
+    #[test]
+    fn syrk_matches_gemm() {
+        let a = randm(29, 13, 6);
+        let g = syrk_ata(&a);
+        let r = gemm_ref(&a.transpose(), &a);
+        assert!(g.sub(&r).max_abs() < 1e-10);
+        assert!(g.asymmetry() == 0.0);
+
+        let g2 = syrk_aat(&a);
+        let r2 = gemm_ref(&a, &a.transpose());
+        assert!(g2.sub(&r2).max_abs() < 1e-10);
+    }
+
+    #[test]
+    fn gemv_variants() {
+        let a = randm(9, 7, 7);
+        let x: Vec<f64> = (0..7).map(|i| i as f64).collect();
+        let y = gemv(&a, &x);
+        let r = gemm_ref(&a, &Mat::from_vec(7, 1, x.clone()));
+        for i in 0..9 {
+            assert!((y[i] - r[(i, 0)]).abs() < 1e-12);
+        }
+        let xt: Vec<f64> = (0..9).map(|i| (i as f64) - 4.0).collect();
+        let yt = gemv_t(&a, &xt);
+        let rt = gemm_ref(&a.transpose(), &Mat::from_vec(9, 1, xt));
+        for j in 0..7 {
+            assert!((yt[j] - rt[(j, 0)]).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn dot_axpy_norm() {
+        let a = [1.0, 2.0, 3.0, 4.0, 5.0];
+        let b = [5.0, 4.0, 3.0, 2.0, 1.0];
+        assert_eq!(dot(&a, &b), 35.0);
+        let mut y = vec![1.0; 5];
+        axpy(2.0, &a, &mut y);
+        assert_eq!(y, vec![3.0, 5.0, 7.0, 9.0, 11.0]);
+        assert!((norm2(&[3.0, 4.0]) - 5.0).abs() < 1e-15);
+    }
+
+    #[test]
+    fn conjugation_by_identity() {
+        let a = {
+            let mut a = randm(6, 6, 8);
+            a.symmetrize();
+            a
+        };
+        let q = Mat::eye(6);
+        let c = conjugate(&q, &a);
+        assert!(c.sub(&a).max_abs() < 1e-12);
+    }
+}

@@ -1,0 +1,238 @@
+//! Cholesky factorization and spd solves.
+//!
+//! Used by the Full-GP baseline (the paper's "Full" column), the Nyström
+//! family (SoR/FITC/PITC inner m×m solves), and MKA's final core inversion.
+
+use super::blas::dot;
+use super::dense::Mat;
+use crate::error::{Error, Result};
+
+/// Lower-triangular Cholesky factor: A = L Lᵀ.
+#[derive(Clone, Debug)]
+pub struct Chol {
+    pub l: Mat,
+}
+
+impl Chol {
+    /// Factorize a symmetric positive-definite matrix. Returns an error if a
+    /// non-positive pivot is hit (matrix not pd to machine precision).
+    pub fn new(a: &Mat) -> Result<Chol> {
+        assert!(a.is_square());
+        let n = a.rows;
+        let mut l = Mat::zeros(n, n);
+        for i in 0..n {
+            for j in 0..=i {
+                // s = A[i][j] - sum_k L[i][k] L[j][k]
+                let s = a.at(i, j) - dot(&l.row(i)[..j], &l.row(j)[..j]);
+                if i == j {
+                    if s <= 0.0 {
+                        return Err(Error::Linalg(format!(
+                            "cholesky: non-positive pivot {s:.3e} at index {i}"
+                        )));
+                    }
+                    l.set(i, j, s.sqrt());
+                } else {
+                    l.set(i, j, s / l.at(j, j));
+                }
+            }
+        }
+        Ok(Chol { l })
+    }
+
+    /// Factorize with a jitter fallback: retries with growing diagonal shift
+    /// until the factorization succeeds. Returns (chol, jitter_used).
+    pub fn new_jittered(a: &Mat, max_tries: usize) -> Result<(Chol, f64)> {
+        match Chol::new(a) {
+            Ok(c) => Ok((c, 0.0)),
+            Err(_) => {
+                let scale = a.diagonal().iter().fold(0.0f64, |m, x| m.max(x.abs())).max(1e-12);
+                let mut jitter = 1e-10 * scale;
+                for _ in 0..max_tries {
+                    let mut aj = a.clone();
+                    aj.add_diag(jitter);
+                    if let Ok(c) = Chol::new(&aj) {
+                        return Ok((c, jitter));
+                    }
+                    jitter *= 10.0;
+                }
+                Err(Error::Linalg("cholesky: jitter exhausted".into()))
+            }
+        }
+    }
+
+    /// Solve A x = b.
+    pub fn solve(&self, b: &[f64]) -> Vec<f64> {
+        let y = solve_lower(&self.l, b);
+        solve_lower_t(&self.l, &y)
+    }
+
+    /// Solve A X = B column-wise.
+    pub fn solve_mat(&self, b: &Mat) -> Mat {
+        let n = self.l.rows;
+        assert_eq!(b.rows, n);
+        let mut x = Mat::zeros(n, b.cols);
+        // Process by column (gathers/scatters); fine for the sizes we use.
+        for j in 0..b.cols {
+            let col: Vec<f64> = (0..n).map(|i| b.at(i, j)).collect();
+            let s = self.solve(&col);
+            for i in 0..n {
+                x.set(i, j, s[i]);
+            }
+        }
+        x
+    }
+
+    /// log det(A) = 2 Σ log L_ii.
+    pub fn logdet(&self) -> f64 {
+        self.l.diagonal().iter().map(|x| x.ln()).sum::<f64>() * 2.0
+    }
+
+    /// Explicit inverse (n³/3 extra work; prefer `solve`).
+    pub fn inverse(&self) -> Mat {
+        let n = self.l.rows;
+        let mut inv = Mat::zeros(n, n);
+        let mut e = vec![0.0; n];
+        for j in 0..n {
+            e[j] = 1.0;
+            let x = self.solve(&e);
+            for i in 0..n {
+                inv.set(i, j, x[i]);
+            }
+            e[j] = 0.0;
+        }
+        inv
+    }
+
+    /// L y = b (forward substitution) — exposed for whitening tests.
+    pub fn solve_l(&self, b: &[f64]) -> Vec<f64> {
+        solve_lower(&self.l, b)
+    }
+}
+
+/// Forward substitution: L y = b for lower-triangular L.
+pub fn solve_lower(l: &Mat, b: &[f64]) -> Vec<f64> {
+    let n = l.rows;
+    assert_eq!(b.len(), n);
+    let mut y = vec![0.0; n];
+    for i in 0..n {
+        let s = b[i] - dot(&l.row(i)[..i], &y[..i]);
+        y[i] = s / l.at(i, i);
+    }
+    y
+}
+
+/// Backward substitution with the transpose: Lᵀ x = y.
+pub fn solve_lower_t(l: &Mat, y: &[f64]) -> Vec<f64> {
+    let n = l.rows;
+    assert_eq!(y.len(), n);
+    let mut x = y.to_vec();
+    for i in (0..n).rev() {
+        x[i] /= l.at(i, i);
+        let xi = x[i];
+        // subtract xi * L[i] from earlier entries (column i of Lᵀ).
+        for j in 0..i {
+            x[j] -= l.at(i, j) * xi;
+        }
+    }
+    x
+}
+
+/// Backward substitution: U x = b for upper-triangular U.
+pub fn solve_upper(u: &Mat, b: &[f64]) -> Vec<f64> {
+    let n = u.rows;
+    let mut x = b.to_vec();
+    for i in (0..n).rev() {
+        let s = dot(&u.row(i)[i + 1..], &x[i + 1..]);
+        x[i] = (x[i] - s) / u.at(i, i);
+    }
+    x
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::la::blas::{gemm, gemm_nt, gemv};
+    use crate::util::Rng;
+
+    fn spd(n: usize, seed: u64) -> Mat {
+        let mut rng = Rng::new(seed);
+        let b = Mat::from_fn(n, n + 3, |_, _| rng.normal());
+        let mut a = gemm_nt(&b, &b);
+        a.add_diag(0.5);
+        a
+    }
+
+    #[test]
+    fn factor_reconstructs() {
+        let a = spd(20, 1);
+        let c = Chol::new(&a).unwrap();
+        let rec = gemm_nt(&c.l, &c.l);
+        assert!(rec.sub(&a).max_abs() < 1e-9);
+    }
+
+    #[test]
+    fn solve_is_inverse_application() {
+        let a = spd(15, 2);
+        let c = Chol::new(&a).unwrap();
+        let mut rng = Rng::new(3);
+        let b = rng.normal_vec(15);
+        let x = c.solve(&b);
+        let ax = gemv(&a, &x);
+        for i in 0..15 {
+            assert!((ax[i] - b[i]).abs() < 1e-8);
+        }
+    }
+
+    #[test]
+    fn solve_mat_matches_columns() {
+        let a = spd(10, 4);
+        let c = Chol::new(&a).unwrap();
+        let mut rng = Rng::new(5);
+        let b = Mat::from_fn(10, 3, |_, _| rng.normal());
+        let x = c.solve_mat(&b);
+        let ax = gemm(&a, &x);
+        assert!(ax.sub(&b).max_abs() < 1e-8);
+    }
+
+    #[test]
+    fn logdet_matches_known() {
+        // diag(2, 3, 4): logdet = ln 24
+        let a = Mat::diag(&[2.0, 3.0, 4.0]);
+        let c = Chol::new(&a).unwrap();
+        assert!((c.logdet() - 24.0f64.ln()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn rejects_indefinite() {
+        let a = Mat::from_rows(&[&[1.0, 2.0], &[2.0, 1.0]]); // eigenvalues 3, -1
+        assert!(Chol::new(&a).is_err());
+    }
+
+    #[test]
+    fn jitter_rescues_semidefinite() {
+        // rank-1 psd matrix
+        let a = Mat::from_rows(&[&[1.0, 1.0], &[1.0, 1.0]]);
+        let (c, j) = Chol::new_jittered(&a, 12).unwrap();
+        assert!(j > 0.0);
+        assert_eq!(c.l.rows, 2);
+    }
+
+    #[test]
+    fn inverse_explicit() {
+        let a = spd(8, 6);
+        let c = Chol::new(&a).unwrap();
+        let inv = c.inverse();
+        let prod = gemm(&a, &inv);
+        assert!(prod.sub(&Mat::eye(8)).max_abs() < 1e-8);
+    }
+
+    #[test]
+    fn triangular_solvers() {
+        let l = Mat::from_rows(&[&[2.0, 0.0], &[1.0, 3.0]]);
+        let y = solve_lower(&l, &[4.0, 11.0]);
+        assert_eq!(y, vec![2.0, 3.0]);
+        let u = Mat::from_rows(&[&[2.0, 1.0], &[0.0, 3.0]]);
+        let x = solve_upper(&u, &[7.0, 9.0]);
+        assert_eq!(x, vec![2.0, 3.0]);
+    }
+}

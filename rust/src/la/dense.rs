@@ -1,0 +1,401 @@
+//! Dense row-major matrix type.
+//!
+//! This is the workhorse container for the whole stack. No external BLAS /
+//! LAPACK is available in the offline build, so the compute kernels
+//! (`la::blas`) and factorizations (`la::{chol,qr,evd,lu}`) are implemented
+//! from scratch on top of this type.
+
+use std::fmt;
+use std::ops::{Index, IndexMut};
+
+/// Dense row-major `f64` matrix.
+#[derive(Clone, PartialEq)]
+pub struct Mat {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f64>,
+}
+
+impl Mat {
+    // ------------------------------------------------------------------
+    // Constructors
+    // ------------------------------------------------------------------
+
+    pub fn zeros(rows: usize, cols: usize) -> Mat {
+        Mat { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    pub fn filled(rows: usize, cols: usize, v: f64) -> Mat {
+        Mat { rows, cols, data: vec![v; rows * cols] }
+    }
+
+    pub fn eye(n: usize) -> Mat {
+        let mut m = Mat::zeros(n, n);
+        for i in 0..n {
+            m[(i, i)] = 1.0;
+        }
+        m
+    }
+
+    /// Build from a function of (row, col).
+    pub fn from_fn(rows: usize, cols: usize, mut f: impl FnMut(usize, usize) -> f64) -> Mat {
+        let mut data = Vec::with_capacity(rows * cols);
+        for i in 0..rows {
+            for j in 0..cols {
+                data.push(f(i, j));
+            }
+        }
+        Mat { rows, cols, data }
+    }
+
+    /// Wrap an existing row-major buffer.
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f64>) -> Mat {
+        assert_eq!(data.len(), rows * cols, "buffer size mismatch");
+        Mat { rows, cols, data }
+    }
+
+    /// Build from row slices (must be equal length).
+    pub fn from_rows(rows: &[&[f64]]) -> Mat {
+        let r = rows.len();
+        let c = if r > 0 { rows[0].len() } else { 0 };
+        let mut data = Vec::with_capacity(r * c);
+        for row in rows {
+            assert_eq!(row.len(), c, "ragged rows");
+            data.extend_from_slice(row);
+        }
+        Mat { rows: r, cols: c, data }
+    }
+
+    /// Diagonal matrix from a vector.
+    pub fn diag(d: &[f64]) -> Mat {
+        let n = d.len();
+        let mut m = Mat::zeros(n, n);
+        for i in 0..n {
+            m[(i, i)] = d[i];
+        }
+        m
+    }
+
+    // ------------------------------------------------------------------
+    // Access
+    // ------------------------------------------------------------------
+
+    #[inline(always)]
+    pub fn at(&self, i: usize, j: usize) -> f64 {
+        debug_assert!(i < self.rows && j < self.cols);
+        unsafe { *self.data.get_unchecked(i * self.cols + j) }
+    }
+
+    #[inline(always)]
+    pub fn set(&mut self, i: usize, j: usize, v: f64) {
+        debug_assert!(i < self.rows && j < self.cols);
+        unsafe {
+            *self.data.get_unchecked_mut(i * self.cols + j) = v;
+        }
+    }
+
+    #[inline(always)]
+    pub fn row(&self, i: usize) -> &[f64] {
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    #[inline(always)]
+    pub fn row_mut(&mut self, i: usize) -> &mut [f64] {
+        let c = self.cols;
+        &mut self.data[i * c..(i + 1) * c]
+    }
+
+    pub fn col(&self, j: usize) -> Vec<f64> {
+        (0..self.rows).map(|i| self.at(i, j)).collect()
+    }
+
+    pub fn diagonal(&self) -> Vec<f64> {
+        let n = self.rows.min(self.cols);
+        (0..n).map(|i| self.at(i, i)).collect()
+    }
+
+    pub fn is_square(&self) -> bool {
+        self.rows == self.cols
+    }
+
+    // ------------------------------------------------------------------
+    // Structural ops
+    // ------------------------------------------------------------------
+
+    pub fn transpose(&self) -> Mat {
+        let mut t = Mat::zeros(self.cols, self.rows);
+        // Blocked transpose for cache friendliness.
+        const B: usize = 32;
+        for ib in (0..self.rows).step_by(B) {
+            for jb in (0..self.cols).step_by(B) {
+                for i in ib..(ib + B).min(self.rows) {
+                    for j in jb..(jb + B).min(self.cols) {
+                        t.set(j, i, self.at(i, j));
+                    }
+                }
+            }
+        }
+        t
+    }
+
+    /// Gather the submatrix with given row and column indices.
+    pub fn gather(&self, ridx: &[usize], cidx: &[usize]) -> Mat {
+        let mut m = Mat::zeros(ridx.len(), cidx.len());
+        for (a, &i) in ridx.iter().enumerate() {
+            let src = self.row(i);
+            let dst = m.row_mut(a);
+            for (b, &j) in cidx.iter().enumerate() {
+                dst[b] = src[j];
+            }
+        }
+        m
+    }
+
+    /// Gather rows only.
+    pub fn gather_rows(&self, ridx: &[usize]) -> Mat {
+        let mut m = Mat::zeros(ridx.len(), self.cols);
+        for (a, &i) in ridx.iter().enumerate() {
+            m.row_mut(a).copy_from_slice(self.row(i));
+        }
+        m
+    }
+
+    /// Contiguous submatrix block [r0..r1) x [c0..c1).
+    pub fn block(&self, r0: usize, r1: usize, c0: usize, c1: usize) -> Mat {
+        assert!(r1 <= self.rows && c1 <= self.cols && r0 <= r1 && c0 <= c1);
+        let mut m = Mat::zeros(r1 - r0, c1 - c0);
+        for i in r0..r1 {
+            m.row_mut(i - r0).copy_from_slice(&self.row(i)[c0..c1]);
+        }
+        m
+    }
+
+    /// Write `src` into the block starting at (r0, c0).
+    pub fn set_block(&mut self, r0: usize, c0: usize, src: &Mat) {
+        assert!(r0 + src.rows <= self.rows && c0 + src.cols <= self.cols);
+        for i in 0..src.rows {
+            self.row_mut(r0 + i)[c0..c0 + src.cols].copy_from_slice(src.row(i));
+        }
+    }
+
+    /// Symmetric permutation P A Pᵀ expressed by `perm` (new index i takes
+    /// old index perm[i]).
+    pub fn sym_permute(&self, perm: &[usize]) -> Mat {
+        assert!(self.is_square());
+        assert_eq!(perm.len(), self.rows);
+        let n = self.rows;
+        let mut m = Mat::zeros(n, n);
+        for i in 0..n {
+            let pi = perm[i];
+            let src = self.row(pi);
+            let dst = m.row_mut(i);
+            for j in 0..n {
+                dst[j] = src[perm[j]];
+            }
+        }
+        m
+    }
+
+    // ------------------------------------------------------------------
+    // Elementwise / reductions
+    // ------------------------------------------------------------------
+
+    pub fn scale(&mut self, a: f64) -> &mut Self {
+        for x in &mut self.data {
+            *x *= a;
+        }
+        self
+    }
+
+    pub fn add_assign(&mut self, other: &Mat) {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        for (x, y) in self.data.iter_mut().zip(&other.data) {
+            *x += *y;
+        }
+    }
+
+    pub fn sub(&self, other: &Mat) -> Mat {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        let data = self.data.iter().zip(&other.data).map(|(a, b)| a - b).collect();
+        Mat { rows: self.rows, cols: self.cols, data }
+    }
+
+    pub fn add(&self, other: &Mat) -> Mat {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        let data = self.data.iter().zip(&other.data).map(|(a, b)| a + b).collect();
+        Mat { rows: self.rows, cols: self.cols, data }
+    }
+
+    /// Add `v` to every diagonal entry (K + σ²I).
+    pub fn add_diag(&mut self, v: f64) -> &mut Self {
+        let n = self.rows.min(self.cols);
+        for i in 0..n {
+            let x = self.at(i, i);
+            self.set(i, i, x + v);
+        }
+        self
+    }
+
+    pub fn frob_norm(&self) -> f64 {
+        self.data.iter().map(|x| x * x).sum::<f64>().sqrt()
+    }
+
+    pub fn max_abs(&self) -> f64 {
+        self.data.iter().fold(0.0, |m, x| m.max(x.abs()))
+    }
+
+    /// ‖A − Aᵀ‖∞ — symmetry defect.
+    pub fn asymmetry(&self) -> f64 {
+        assert!(self.is_square());
+        let mut d: f64 = 0.0;
+        for i in 0..self.rows {
+            for j in (i + 1)..self.cols {
+                d = d.max((self.at(i, j) - self.at(j, i)).abs());
+            }
+        }
+        d
+    }
+
+    /// Force exact symmetry: A ← (A + Aᵀ)/2.
+    pub fn symmetrize(&mut self) -> &mut Self {
+        assert!(self.is_square());
+        for i in 0..self.rows {
+            for j in (i + 1)..self.cols {
+                let v = 0.5 * (self.at(i, j) + self.at(j, i));
+                self.set(i, j, v);
+                self.set(j, i, v);
+            }
+        }
+        self
+    }
+}
+
+impl Index<(usize, usize)> for Mat {
+    type Output = f64;
+    #[inline(always)]
+    fn index(&self, (i, j): (usize, usize)) -> &f64 {
+        debug_assert!(i < self.rows && j < self.cols);
+        &self.data[i * self.cols + j]
+    }
+}
+
+impl IndexMut<(usize, usize)> for Mat {
+    #[inline(always)]
+    fn index_mut(&mut self, (i, j): (usize, usize)) -> &mut f64 {
+        debug_assert!(i < self.rows && j < self.cols);
+        &mut self.data[i * self.cols + j]
+    }
+}
+
+impl fmt::Debug for Mat {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        writeln!(f, "Mat {}x{} [", self.rows, self.cols)?;
+        let show = self.rows.min(8);
+        for i in 0..show {
+            write!(f, "  ")?;
+            for j in 0..self.cols.min(8) {
+                write!(f, "{:10.4} ", self.at(i, j))?;
+            }
+            writeln!(f, "{}", if self.cols > 8 { "..." } else { "" })?;
+        }
+        if self.rows > 8 {
+            writeln!(f, "  ...")?;
+        }
+        write!(f, "]")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn construct_and_index() {
+        let m = Mat::from_fn(3, 4, |i, j| (i * 10 + j) as f64);
+        assert_eq!(m[(2, 3)], 23.0);
+        assert_eq!(m.row(1), &[10.0, 11.0, 12.0, 13.0]);
+        assert_eq!(m.col(0), vec![0.0, 10.0, 20.0]);
+    }
+
+    #[test]
+    fn eye_and_diag() {
+        let i3 = Mat::eye(3);
+        assert_eq!(i3.diagonal(), vec![1.0, 1.0, 1.0]);
+        let d = Mat::diag(&[2.0, 3.0]);
+        assert_eq!(d[(0, 0)], 2.0);
+        assert_eq!(d[(0, 1)], 0.0);
+    }
+
+    #[test]
+    fn transpose_roundtrip() {
+        let m = Mat::from_fn(17, 41, |i, j| (i * 41 + j) as f64);
+        let t = m.transpose();
+        assert_eq!(t.rows, 41);
+        assert_eq!(t[(40, 16)], m[(16, 40)]);
+        assert_eq!(t.transpose(), m);
+    }
+
+    #[test]
+    fn gather_block() {
+        let m = Mat::from_fn(5, 5, |i, j| (i * 5 + j) as f64);
+        let g = m.gather(&[0, 2], &[1, 4]);
+        assert_eq!(g.data, vec![1.0, 4.0, 11.0, 14.0]);
+        let b = m.block(1, 3, 2, 4);
+        assert_eq!(b.data, vec![7.0, 8.0, 12.0, 13.0]);
+    }
+
+    #[test]
+    fn set_block_roundtrip() {
+        let mut m = Mat::zeros(4, 4);
+        let b = Mat::from_fn(2, 2, |i, j| (i + j) as f64 + 1.0);
+        m.set_block(1, 2, &b);
+        assert_eq!(m.block(1, 3, 2, 4), b);
+    }
+
+    #[test]
+    fn sym_permute_is_conjugation() {
+        let a = {
+            let mut a = Mat::from_fn(4, 4, |i, j| ((i * 7 + j * 3) % 5) as f64);
+            a.symmetrize();
+            a
+        };
+        let perm = vec![2, 0, 3, 1];
+        let p = a.sym_permute(&perm);
+        for i in 0..4 {
+            for j in 0..4 {
+                assert_eq!(p[(i, j)], a[(perm[i], perm[j])]);
+            }
+        }
+        assert!(p.asymmetry() < 1e-15);
+    }
+
+    #[test]
+    fn arithmetic() {
+        let a = Mat::filled(2, 2, 1.0);
+        let b = Mat::filled(2, 2, 2.0);
+        assert_eq!(a.add(&b).data, vec![3.0; 4]);
+        assert_eq!(b.sub(&a).data, vec![1.0; 4]);
+        let mut c = a.clone();
+        c.scale(4.0);
+        assert_eq!(c.data, vec![4.0; 4]);
+        c.add_diag(1.0);
+        assert_eq!(c[(0, 0)], 5.0);
+        assert_eq!(c[(0, 1)], 4.0);
+    }
+
+    #[test]
+    fn norms() {
+        let m = Mat::from_rows(&[&[3.0, 0.0], &[0.0, 4.0]]);
+        assert!((m.frob_norm() - 5.0).abs() < 1e-15);
+        assert_eq!(m.max_abs(), 4.0);
+    }
+
+    #[test]
+    fn symmetrize_fixes_asymmetry() {
+        let mut m = Mat::from_rows(&[&[1.0, 2.0], &[4.0, 1.0]]);
+        assert!(m.asymmetry() > 1.0);
+        m.symmetrize();
+        assert_eq!(m[(0, 1)], 3.0);
+        assert_eq!(m.asymmetry(), 0.0);
+    }
+}

@@ -1,0 +1,431 @@
+//! Symmetric eigendecomposition.
+//!
+//! Default path: Householder tridiagonalization (`tred2`) + implicit-shift
+//! QL (`tql2`) — the classic EISPACK pair, O(n³) with a small constant
+//! (≈20× faster than Jacobi at n = 512; see EXPERIMENTS.md §Perf). The
+//! cyclic-Jacobi solver is retained as [`SymEig::jacobi`] and used by the
+//! tests as an independent oracle.
+
+use super::blas::gemm;
+use super::dense::Mat;
+
+/// Eigendecomposition A = V diag(λ) Vᵀ with eigenvalues ascending.
+#[derive(Clone, Debug)]
+pub struct SymEig {
+    /// Eigenvalues, ascending.
+    pub values: Vec<f64>,
+    /// Columns are eigenvectors (same order as `values`).
+    pub vectors: Mat,
+}
+
+impl SymEig {
+    /// Compute the full EVD of a symmetric matrix (tred2 + tql2).
+    pub fn new(a: &Mat) -> SymEig {
+        assert!(a.is_square());
+        let n = a.rows;
+        if n <= 4 {
+            // tiny cases: Jacobi is exact and allocation-light
+            return SymEig::jacobi(a);
+        }
+        let mut z = a.clone();
+        z.symmetrize();
+        let (mut d, mut e) = tred2(&mut z);
+        tql2(&mut d, &mut e, &mut z);
+        // Sort ascending (tql2 leaves eigenvalues unordered in general).
+        let mut idx: Vec<usize> = (0..n).collect();
+        idx.sort_by(|&p, &q| d[p].partial_cmp(&d[q]).unwrap());
+        let values: Vec<f64> = idx.iter().map(|&p| d[p]).collect();
+        let mut vectors = Mat::zeros(n, n);
+        for (newj, &oldj) in idx.iter().enumerate() {
+            for i in 0..n {
+                vectors.set(i, newj, z.at(i, oldj));
+            }
+        }
+        SymEig { values, vectors }
+    }
+
+    /// Cyclic-Jacobi EVD (slow, very accurate) — test oracle.
+    pub fn jacobi(a: &Mat) -> SymEig {
+        assert!(a.is_square());
+        let n = a.rows;
+        let mut m = a.clone();
+        m.symmetrize();
+        let mut v = Mat::eye(n);
+
+        if n <= 1 {
+            return SymEig { values: m.diagonal(), vectors: v };
+        }
+
+        let max_sweeps = 64;
+        for _sweep in 0..max_sweeps {
+            let mut off = 0.0f64;
+            for i in 0..n {
+                for j in (i + 1)..n {
+                    off = off.max(m.at(i, j).abs());
+                }
+            }
+            let scale = m.max_abs().max(1e-300);
+            if off <= 1e-14 * scale {
+                break;
+            }
+            for p in 0..n {
+                for q in (p + 1)..n {
+                    let apq = m.at(p, q);
+                    if apq.abs() <= 1e-300 {
+                        continue;
+                    }
+                    let app = m.at(p, p);
+                    let aqq = m.at(q, q);
+                    // Stable rotation computation (Golub & Van Loan 8.4).
+                    let theta = (aqq - app) / (2.0 * apq);
+                    let t = if theta >= 0.0 {
+                        1.0 / (theta + (1.0 + theta * theta).sqrt())
+                    } else {
+                        1.0 / (theta - (1.0 + theta * theta).sqrt())
+                    };
+                    let c = 1.0 / (1.0 + t * t).sqrt();
+                    let s = t * c;
+                    rotate_sym(&mut m, p, q, c, s);
+                    rotate_cols(&mut v, p, q, c, s);
+                }
+            }
+        }
+
+        // Extract and sort ascending.
+        let mut idx: Vec<usize> = (0..n).collect();
+        let d = m.diagonal();
+        idx.sort_by(|&a, &b| d[a].partial_cmp(&d[b]).unwrap());
+        let values: Vec<f64> = idx.iter().map(|&i| d[i]).collect();
+        let mut vectors = Mat::zeros(n, n);
+        for (newj, &oldj) in idx.iter().enumerate() {
+            for i in 0..n {
+                vectors.set(i, newj, v.at(i, oldj));
+            }
+        }
+        SymEig { values, vectors }
+    }
+
+    /// Apply a scalar function to the spectrum: f(A) = V f(Λ) Vᵀ.
+    pub fn apply_fn(&self, f: impl Fn(f64) -> f64) -> Mat {
+        let n = self.values.len();
+        let mut scaled = self.vectors.clone(); // V f(Λ)
+        for j in 0..n {
+            let fj = f(self.values[j]);
+            for i in 0..n {
+                let v = scaled.at(i, j);
+                scaled.set(i, j, v * fj);
+            }
+        }
+        // (V f(Λ)) Vᵀ
+        gemm(&scaled, &self.vectors.transpose())
+    }
+
+    /// Reconstruct A (for tests).
+    pub fn reconstruct(&self) -> Mat {
+        self.apply_fn(|x| x)
+    }
+
+    /// The largest magnitude eigenvalue.
+    pub fn spectral_radius(&self) -> f64 {
+        self.values.iter().fold(0.0f64, |m, &x| m.max(x.abs()))
+    }
+}
+
+/// Symmetric two-sided Givens rotation on rows/cols p, q:
+/// M ← JᵀMJ with J the identity plus [[c, s], [-s, c]] in the (p, q) plane.
+#[inline]
+fn rotate_sym(m: &mut Mat, p: usize, q: usize, c: f64, s: f64) {
+    let n = m.rows;
+    for k in 0..n {
+        if k != p && k != q {
+            let mkp = m.at(k, p);
+            let mkq = m.at(k, q);
+            let np = c * mkp - s * mkq;
+            let nq = s * mkp + c * mkq;
+            m.set(k, p, np);
+            m.set(p, k, np);
+            m.set(k, q, nq);
+            m.set(q, k, nq);
+        }
+    }
+    let app = m.at(p, p);
+    let aqq = m.at(q, q);
+    let apq = m.at(p, q);
+    let new_pp = c * c * app - 2.0 * s * c * apq + s * s * aqq;
+    let new_qq = s * s * app + 2.0 * s * c * apq + c * c * aqq;
+    m.set(p, p, new_pp);
+    m.set(q, q, new_qq);
+    m.set(p, q, 0.0);
+    m.set(q, p, 0.0);
+}
+
+/// Right-multiply V by the rotation (update eigenvector columns p, q).
+#[inline]
+fn rotate_cols(v: &mut Mat, p: usize, q: usize, c: f64, s: f64) {
+    for k in 0..v.rows {
+        let vkp = v.at(k, p);
+        let vkq = v.at(k, q);
+        v.set(k, p, c * vkp - s * vkq);
+        v.set(k, q, s * vkp + c * vkq);
+    }
+}
+
+/// Householder reduction of a real symmetric matrix to tridiagonal form
+/// (EISPACK `tred2`). On return `z` holds the accumulated orthogonal
+/// transform Q (A = Q T Qᵀ); returns (diagonal d, subdiagonal e).
+fn tred2(z: &mut Mat) -> (Vec<f64>, Vec<f64>) {
+    let n = z.rows;
+    let mut d = vec![0.0; n];
+    let mut e = vec![0.0; n];
+    for i in (1..n).rev() {
+        let l = i - 1;
+        let mut h = 0.0;
+        if l > 0 {
+            let mut scale = 0.0;
+            for k in 0..=l {
+                scale += z.at(i, k).abs();
+            }
+            if scale == 0.0 {
+                e[i] = z.at(i, l);
+            } else {
+                for k in 0..=l {
+                    let v = z.at(i, k) / scale;
+                    z.set(i, k, v);
+                    h += v * v;
+                }
+                let mut f = z.at(i, l);
+                let g = if f >= 0.0 { -h.sqrt() } else { h.sqrt() };
+                e[i] = scale * g;
+                h -= f * g;
+                z.set(i, l, f - g);
+                f = 0.0;
+                for j in 0..=l {
+                    z.set(j, i, z.at(i, j) / h);
+                    let mut g = 0.0;
+                    for k in 0..=j {
+                        g += z.at(j, k) * z.at(i, k);
+                    }
+                    for k in (j + 1)..=l {
+                        g += z.at(k, j) * z.at(i, k);
+                    }
+                    e[j] = g / h;
+                    f += e[j] * z.at(i, j);
+                }
+                let hh = f / (h + h);
+                for j in 0..=l {
+                    let fj = z.at(i, j);
+                    let gj = e[j] - hh * fj;
+                    e[j] = gj;
+                    for k in 0..=j {
+                        let v = z.at(j, k) - (fj * e[k] + gj * z.at(i, k));
+                        z.set(j, k, v);
+                    }
+                }
+            }
+        } else {
+            e[i] = z.at(i, l);
+        }
+        d[i] = h;
+    }
+    d[0] = 0.0;
+    e[0] = 0.0;
+    for i in 0..n {
+        let l = i;
+        if d[i] != 0.0 {
+            for j in 0..l {
+                let mut g = 0.0;
+                for k in 0..l {
+                    g += z.at(i, k) * z.at(k, j);
+                }
+                for k in 0..l {
+                    let v = z.at(k, j) - g * z.at(k, i);
+                    z.set(k, j, v);
+                }
+            }
+        }
+        d[i] = z.at(i, i);
+        z.set(i, i, 1.0);
+        for j in 0..l {
+            z.set(j, i, 0.0);
+            z.set(i, j, 0.0);
+        }
+    }
+    (d, e)
+}
+
+/// Implicit-shift QL iteration on a symmetric tridiagonal matrix
+/// (EISPACK `tql2`), accumulating eigenvectors into `z` (columns).
+fn tql2(d: &mut [f64], e: &mut [f64], z: &mut Mat) {
+    let n = d.len();
+    if n == 0 {
+        return;
+    }
+    for i in 1..n {
+        e[i - 1] = e[i];
+    }
+    e[n - 1] = 0.0;
+    for l in 0..n {
+        let mut iter = 0;
+        loop {
+            // Find a small subdiagonal element.
+            let mut m = l;
+            while m + 1 < n {
+                let dd = d[m].abs() + d[m + 1].abs();
+                if e[m].abs() <= f64::EPSILON * dd {
+                    break;
+                }
+                m += 1;
+            }
+            if m == l {
+                break;
+            }
+            iter += 1;
+            if iter > 50 {
+                break; // fail soft: values are still usable to ~eps·‖A‖
+            }
+            // Form the implicit shift.
+            let mut g = (d[l + 1] - d[l]) / (2.0 * e[l]);
+            let mut r = g.hypot(1.0);
+            let sign_r = if g >= 0.0 { r } else { -r };
+            g = d[m] - d[l] + e[l] / (g + sign_r);
+            let (mut s, mut c) = (1.0f64, 1.0f64);
+            let mut p = 0.0f64;
+            for i in (l..m).rev() {
+                let mut f = s * e[i];
+                let b = c * e[i];
+                r = f.hypot(g);
+                e[i + 1] = r;
+                if r == 0.0 {
+                    d[i + 1] -= p;
+                    e[m] = 0.0;
+                    break;
+                }
+                s = f / r;
+                c = g / r;
+                g = d[i + 1] - p;
+                r = (d[i] - g) * s + 2.0 * c * b;
+                p = s * r;
+                d[i + 1] = g + p;
+                g = c * r - b;
+                // Accumulate the rotation in the eigenvector matrix.
+                for k in 0..n {
+                    f = z.at(k, i + 1);
+                    let v = z.at(k, i);
+                    z.set(k, i + 1, s * v + c * f);
+                    z.set(k, i, c * v - s * f);
+                }
+            }
+            if r == 0.0 && m > l {
+                continue;
+            }
+            d[l] -= p;
+            e[l] = g;
+            e[m] = 0.0;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::la::blas::{gemm_nt, gemm_tn};
+    use crate::util::Rng;
+
+    fn randsym(n: usize, seed: u64) -> Mat {
+        let mut rng = Rng::new(seed);
+        let mut a = Mat::from_fn(n, n, |_, _| rng.normal());
+        a.symmetrize();
+        a
+    }
+
+    #[test]
+    fn diagonal_matrix() {
+        let e = SymEig::new(&Mat::diag(&[3.0, 1.0, 2.0]));
+        assert!((e.values[0] - 1.0).abs() < 1e-12);
+        assert!((e.values[1] - 2.0).abs() < 1e-12);
+        assert!((e.values[2] - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn known_2x2() {
+        // [[2,1],[1,2]] has eigenvalues 1 and 3.
+        let e = SymEig::new(&Mat::from_rows(&[&[2.0, 1.0], &[1.0, 2.0]]));
+        assert!((e.values[0] - 1.0).abs() < 1e-12);
+        assert!((e.values[1] - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn reconstruction_and_orthogonality() {
+        for n in [1, 2, 5, 20, 40] {
+            let a = randsym(n, n as u64);
+            let e = SymEig::new(&a);
+            let rec = e.reconstruct();
+            assert!(rec.sub(&a).max_abs() < 1e-9, "n={n}");
+            let vtv = gemm_tn(&e.vectors, &e.vectors);
+            assert!(vtv.sub(&Mat::eye(n)).max_abs() < 1e-10, "n={n}");
+        }
+    }
+
+    #[test]
+    fn values_ascending() {
+        let a = randsym(15, 99);
+        let e = SymEig::new(&a);
+        for w in e.values.windows(2) {
+            assert!(w[0] <= w[1] + 1e-12);
+        }
+    }
+
+    #[test]
+    fn trace_and_det_invariants() {
+        let a = randsym(12, 5);
+        let e = SymEig::new(&a);
+        let tr: f64 = a.diagonal().iter().sum();
+        let tr_e: f64 = e.values.iter().sum();
+        assert!((tr - tr_e).abs() < 1e-9);
+    }
+
+    #[test]
+    fn apply_fn_inverse() {
+        let mut rng = Rng::new(77);
+        let b = Mat::from_fn(10, 12, |_, _| rng.normal());
+        let mut a = gemm_nt(&b, &b);
+        a.add_diag(1.0); // spd
+        let e = SymEig::new(&a);
+        let inv = e.apply_fn(|x| 1.0 / x);
+        let prod = gemm(&a, &inv);
+        assert!(prod.sub(&Mat::eye(10)).max_abs() < 1e-8);
+    }
+
+    #[test]
+    fn tql2_matches_jacobi_oracle() {
+        for n in [5, 8, 33, 64] {
+            let a = randsym(n, 1000 + n as u64);
+            let fast = SymEig::new(&a);
+            let oracle = SymEig::jacobi(&a);
+            for (x, y) in fast.values.iter().zip(&oracle.values) {
+                assert!((x - y).abs() < 1e-8 * y.abs().max(1.0), "n={n}: {x} vs {y}");
+            }
+            // reconstruction through the fast path
+            assert!(fast.reconstruct().sub(&a).max_abs() < 1e-9, "n={n}");
+            let vtv = gemm_tn(&fast.vectors, &fast.vectors);
+            assert!(vtv.sub(&Mat::eye(n)).max_abs() < 1e-9, "n={n}");
+        }
+    }
+
+    #[test]
+    fn large_matrix_evd_sane() {
+        let a = randsym(200, 7);
+        let e = SymEig::new(&a);
+        assert!(e.reconstruct().sub(&a).max_abs() < 1e-8);
+        let tr: f64 = a.diagonal().iter().sum();
+        assert!((e.values.iter().sum::<f64>() - tr).abs() < 1e-7);
+    }
+
+    #[test]
+    fn apply_fn_exp_of_zero_is_identity() {
+        let z = Mat::zeros(4, 4);
+        let e = SymEig::new(&z);
+        let ex = e.apply_fn(f64::exp);
+        assert!(ex.sub(&Mat::eye(4)).max_abs() < 1e-12);
+    }
+}

@@ -1,0 +1,360 @@
+//! Givens rotations and rotation sequences.
+//!
+//! MMF-based MKA stores each local orthogonal factor Q as a product of
+//! ⌊(1−γ)m⌋ Givens rotations (paper §4, feature (a)), so a whole stage's
+//! Q̄_ℓ is a `GivensSeq` over global coordinates — 2 reals + 2 indices per
+//! rotation, giving the (2s+1)n storage bound of Proposition 5 and the
+//! O(sn) matvec of Proposition 6.
+
+use super::dense::Mat;
+
+/// A single Givens rotation acting in the (i, j) coordinate plane.
+///
+/// As an operator on vectors:
+///   (Gx)_i =  c·x_i + s·x_j
+///   (Gx)_j = −s·x_i + c·x_j
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Givens {
+    pub i: usize,
+    pub j: usize,
+    pub c: f64,
+    pub s: f64,
+}
+
+impl Givens {
+    /// The Jacobi rotation G such that conjugating A by G (A' = G A Gᵀ)
+    /// zeroes the (i, j) off-diagonal entry, given the 2×2 submatrix
+    /// [[a_ii, a_ij], [a_ij, a_jj]].
+    pub fn jacobi(i: usize, j: usize, aii: f64, aij: f64, ajj: f64) -> Givens {
+        if aij.abs() < 1e-300 {
+            return Givens { i, j, c: 1.0, s: 0.0 };
+        }
+        let theta = (ajj - aii) / (2.0 * aij);
+        // Solve t² − 2θt − 1 = 0 stably, taking the smaller-|t| root
+        // (this convention matches (Gx)_i = c·x_i + s·x_j,
+        // (Gx)_j = −s·x_i + c·x_j).
+        let t = if theta >= 0.0 {
+            -1.0 / (theta + (1.0 + theta * theta).sqrt())
+        } else {
+            1.0 / (-theta + (1.0 + theta * theta).sqrt())
+        };
+        let c = 1.0 / (1.0 + t * t).sqrt();
+        let s = t * c;
+        Givens { i, j, c, s }
+    }
+
+    /// Apply to a vector: x ← Gx.
+    #[inline]
+    pub fn apply_vec(&self, x: &mut [f64]) {
+        let xi = x[self.i];
+        let xj = x[self.j];
+        x[self.i] = self.c * xi + self.s * xj;
+        x[self.j] = -self.s * xi + self.c * xj;
+    }
+
+    /// Apply the transpose (= inverse): x ← Gᵀx.
+    #[inline]
+    pub fn apply_vec_t(&self, x: &mut [f64]) {
+        let xi = x[self.i];
+        let xj = x[self.j];
+        x[self.i] = self.c * xi - self.s * xj;
+        x[self.j] = self.s * xi + self.c * xj;
+    }
+
+    /// Two-sided symmetric conjugation A ← G A Gᵀ (dense A).
+    ///
+    /// Hot path of both MMF compression and the stage-global rotation
+    /// application: the row updates run on contiguous memory (two fused
+    /// axpy-like passes that auto-vectorize), and the symmetric column
+    /// copies are done in two clean strided passes afterwards.
+    pub fn conjugate_sym(&self, a: &mut Mat) {
+        let (i, j, c, s) = (self.i, self.j, self.c, self.s);
+        let n = a.rows;
+        debug_assert!(a.is_square() && i < n && j < n && i != j);
+        // --- rows i and j, contiguous (uses pre-rotation values of both) --
+        let (lo, hi) = (i.min(j), i.max(j));
+        let (first, second) = a.data.split_at_mut(hi * n);
+        let row_lo = &mut first[lo * n..lo * n + n];
+        let row_hi = &mut second[..n];
+        if lo == i {
+            for (vi, vj) in row_lo.iter_mut().zip(row_hi.iter_mut()) {
+                let (x, y) = (*vi, *vj);
+                *vi = c * x + s * y;
+                *vj = -s * x + c * y;
+            }
+        } else {
+            for (vj, vi) in row_lo.iter_mut().zip(row_hi.iter_mut()) {
+                let (x, y) = (*vi, *vj);
+                *vi = c * x + s * y;
+                *vj = -s * x + c * y;
+            }
+        }
+        // --- the 2×2 corner (from symmetric two-sided formulas) -----------
+        // After the row pass, a[i][j] currently holds c·A_ij + s·A_jj etc.;
+        // recompute the corner exactly from the one-sided values.
+        let b_ii = a.at(i, i); // = c·A_ii + s·A_ij (wrong for two-sided)
+        let b_ij = a.at(i, j);
+        let b_ji = a.at(j, i);
+        let b_jj = a.at(j, j);
+        // Apply the right-hand rotation to the corner columns:
+        // new_ii = c·b_ii + s·b_ij, new_ij = −s·b_ii + c·b_ij, etc.
+        let nii = c * b_ii + s * b_ij;
+        let nij = -s * b_ii + c * b_ij;
+        let nji = c * b_ji + s * b_jj;
+        let njj = -s * b_ji + c * b_jj;
+        a.set(i, i, nii);
+        a.set(i, j, 0.5 * (nij + nji)); // symmetrize roundoff
+        a.set(j, i, 0.5 * (nij + nji));
+        a.set(j, j, njj);
+        // --- mirror the new rows into columns i and j ----------------------
+        for k in 0..n {
+            if k != i && k != j {
+                let vi = a.at(i, k);
+                let vj = a.at(j, k);
+                a.set(k, i, vi);
+                a.set(k, j, vj);
+            }
+        }
+    }
+
+    /// Left-multiply a dense matrix: A ← G A (rows i, j mix).
+    pub fn apply_left(&self, a: &mut Mat) {
+        let (i, j, c, s) = (self.i, self.j, self.c, self.s);
+        let cols = a.cols;
+        for k in 0..cols {
+            let aik = a.at(i, k);
+            let ajk = a.at(j, k);
+            a.set(i, k, c * aik + s * ajk);
+            a.set(j, k, -s * aik + c * ajk);
+        }
+    }
+
+    /// Right-multiply by the transpose: A ← A Gᵀ (columns i, j mix).
+    pub fn apply_right_t(&self, a: &mut Mat) {
+        let (i, j, c, s) = (self.i, self.j, self.c, self.s);
+        for r in 0..a.rows {
+            let row = a.row_mut(r);
+            let ari = row[i];
+            let arj = row[j];
+            row[i] = c * ari + s * arj;
+            row[j] = -s * ari + c * arj;
+        }
+    }
+
+    /// Dense matrix representation (tests only).
+    pub fn to_dense(&self, n: usize) -> Mat {
+        let mut g = Mat::eye(n);
+        g.set(self.i, self.i, self.c);
+        g.set(self.i, self.j, self.s);
+        g.set(self.j, self.i, -self.s);
+        g.set(self.j, self.j, self.c);
+        g
+    }
+}
+
+/// An ordered product of Givens rotations Q = g_L · … · g_2 · g_1.
+///
+/// `apply_vec` computes Qx (g_1 first); `apply_vec_t` computes Qᵀx.
+#[derive(Clone, Debug, Default)]
+pub struct GivensSeq {
+    pub rots: Vec<Givens>,
+}
+
+impl GivensSeq {
+    pub fn new() -> GivensSeq {
+        GivensSeq { rots: Vec::new() }
+    }
+
+    pub fn push(&mut self, g: Givens) {
+        self.rots.push(g);
+    }
+
+    pub fn len(&self) -> usize {
+        self.rots.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.rots.is_empty()
+    }
+
+    /// x ← Qx.
+    pub fn apply_vec(&self, x: &mut [f64]) {
+        for g in &self.rots {
+            g.apply_vec(x);
+        }
+    }
+
+    /// x ← Qᵀx (reverse order, transposed rotations).
+    pub fn apply_vec_t(&self, x: &mut [f64]) {
+        for g in self.rots.iter().rev() {
+            g.apply_vec_t(x);
+        }
+    }
+
+    /// A ← Q A Qᵀ.
+    pub fn conjugate_sym(&self, a: &mut Mat) {
+        for g in &self.rots {
+            g.conjugate_sym(a);
+        }
+    }
+
+    /// Dense representation (tests only).
+    pub fn to_dense(&self, n: usize) -> Mat {
+        let mut q = Mat::eye(n);
+        for g in &self.rots {
+            g.apply_left(&mut q);
+        }
+        q
+    }
+
+    /// Number of stored reals (2 per rotation) — for Prop. 5 storage audits.
+    pub fn stored_reals(&self) -> usize {
+        2 * self.rots.len()
+    }
+
+    /// Shift all indices by `offset` (for assembling block-diagonal ⊕Q_i).
+    pub fn offset(&self, offset: usize) -> GivensSeq {
+        GivensSeq {
+            rots: self
+                .rots
+                .iter()
+                .map(|g| Givens { i: g.i + offset, j: g.j + offset, ..*g })
+                .collect(),
+        }
+    }
+
+    /// Remap indices through `map` (local-to-global index translation).
+    pub fn remap(&self, map: &[usize]) -> GivensSeq {
+        GivensSeq {
+            rots: self
+                .rots
+                .iter()
+                .map(|g| Givens { i: map[g.i], j: map[g.j], ..*g })
+                .collect(),
+        }
+    }
+
+    pub fn extend(&mut self, other: GivensSeq) {
+        self.rots.extend(other.rots);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::la::blas::{conjugate, gemm_tn};
+    use crate::util::Rng;
+
+    #[test]
+    fn jacobi_zeroes_offdiag() {
+        let (aii, aij, ajj) = (2.0, 1.5, -1.0);
+        let g = Givens::jacobi(0, 1, aii, aij, ajj);
+        let mut a = Mat::from_rows(&[&[aii, aij], &[aij, ajj]]);
+        g.conjugate_sym(&mut a);
+        assert!(a[(0, 1)].abs() < 1e-14);
+        assert!(a[(1, 0)].abs() < 1e-14);
+        // trace preserved
+        assert!((a[(0, 0)] + a[(1, 1)] - (aii + ajj)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn rotation_is_orthogonal() {
+        let g = Givens::jacobi(1, 3, 1.0, 0.7, -0.2);
+        let d = g.to_dense(5);
+        let dtd = gemm_tn(&d, &d);
+        assert!(dtd.sub(&Mat::eye(5)).max_abs() < 1e-14);
+    }
+
+    #[test]
+    fn vec_apply_matches_dense() {
+        let mut rng = Rng::new(1);
+        let g = Givens::jacobi(0, 4, 1.0, -0.4, 2.0);
+        let x: Vec<f64> = rng.normal_vec(6);
+        let mut xv = x.clone();
+        g.apply_vec(&mut xv);
+        let d = g.to_dense(6);
+        let expected = crate::la::blas::gemv(&d, &x);
+        for i in 0..6 {
+            assert!((xv[i] - expected[i]).abs() < 1e-12);
+        }
+        // transpose undoes
+        g.apply_vec_t(&mut xv);
+        for i in 0..6 {
+            assert!((xv[i] - x[i]).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn conjugate_sym_matches_dense() {
+        let mut rng = Rng::new(2);
+        let mut a = Mat::from_fn(6, 6, |_, _| rng.normal());
+        a.symmetrize();
+        let g = Givens::jacobi(2, 5, a[(2, 2)], a[(2, 5)], a[(5, 5)]);
+        let mut fast = a.clone();
+        g.conjugate_sym(&mut fast);
+        let d = g.to_dense(6);
+        // G A Gᵀ = conjugate(Gᵀ, A) since conjugate(Q,A) = QᵀAQ
+        let slow = conjugate(&d.transpose(), &a);
+        assert!(fast.sub(&slow).max_abs() < 1e-12);
+        assert!(fast.asymmetry() < 1e-12);
+    }
+
+    #[test]
+    fn seq_apply_and_inverse() {
+        let mut rng = Rng::new(3);
+        let mut seq = GivensSeq::new();
+        for k in 0..10 {
+            let i = k % 5;
+            let j = (k + 2) % 5;
+            if i != j {
+                seq.push(Givens::jacobi(i.min(j), i.max(j), rng.normal(), rng.normal(), rng.normal()));
+            }
+        }
+        let x = rng.normal_vec(5);
+        let mut y = x.clone();
+        seq.apply_vec(&mut y);
+        seq.apply_vec_t(&mut y);
+        for i in 0..5 {
+            assert!((y[i] - x[i]).abs() < 1e-12);
+        }
+        // dense consistency
+        let q = seq.to_dense(5);
+        let qtq = gemm_tn(&q, &q);
+        assert!(qtq.sub(&Mat::eye(5)).max_abs() < 1e-12);
+    }
+
+    #[test]
+    fn seq_conjugation_matches_dense() {
+        let mut rng = Rng::new(4);
+        let mut a = Mat::from_fn(7, 7, |_, _| rng.normal());
+        a.symmetrize();
+        let mut seq = GivensSeq::new();
+        for _ in 0..6 {
+            let i = rng.below(7);
+            let mut j = rng.below(7);
+            while j == i {
+                j = rng.below(7);
+            }
+            seq.push(Givens::jacobi(i, j, rng.normal(), rng.normal(), rng.normal()));
+        }
+        let mut fast = a.clone();
+        seq.conjugate_sym(&mut fast);
+        let q = seq.to_dense(7);
+        let slow = conjugate(&q.transpose(), &a);
+        assert!(fast.sub(&slow).max_abs() < 1e-11);
+    }
+
+    #[test]
+    fn remap_and_offset() {
+        let g = Givens { i: 0, j: 1, c: 0.6, s: 0.8 };
+        let mut seq = GivensSeq::new();
+        seq.push(g);
+        let off = seq.offset(10);
+        assert_eq!(off.rots[0].i, 10);
+        assert_eq!(off.rots[0].j, 11);
+        let re = seq.remap(&[5, 9]);
+        assert_eq!(re.rots[0].i, 5);
+        assert_eq!(re.rots[0].j, 9);
+        assert_eq!(seq.stored_reals(), 2);
+    }
+}

@@ -1,0 +1,168 @@
+//! LU decomposition with partial pivoting.
+//!
+//! Used for the small p×p "D block" inversion in the MKA-GP Schur-complement
+//! predictor (§4.1 of the paper) where the matrix is symmetric but may be
+//! only near-definite, and as a general-purpose dense solver in tests.
+
+use super::dense::Mat;
+use crate::error::{Error, Result};
+
+/// PA = LU factorization with partial pivoting.
+#[derive(Clone, Debug)]
+pub struct Lu {
+    /// Combined LU storage: unit-lower below diagonal, U on and above.
+    lu: Mat,
+    /// Row permutation: row i of the factored matrix is row piv[i] of A.
+    piv: Vec<usize>,
+    /// Sign of the permutation (for determinants).
+    sign: f64,
+}
+
+impl Lu {
+    pub fn new(a: &Mat) -> Result<Lu> {
+        assert!(a.is_square());
+        let n = a.rows;
+        let mut lu = a.clone();
+        let mut piv: Vec<usize> = (0..n).collect();
+        let mut sign = 1.0;
+        for k in 0..n {
+            // Pivot search.
+            let mut p = k;
+            let mut best = lu.at(k, k).abs();
+            for i in (k + 1)..n {
+                let v = lu.at(i, k).abs();
+                if v > best {
+                    best = v;
+                    p = i;
+                }
+            }
+            if best < 1e-300 {
+                return Err(Error::Linalg(format!("LU: singular at column {k}")));
+            }
+            if p != k {
+                // swap rows p, k
+                for j in 0..n {
+                    let t = lu.at(k, j);
+                    lu.set(k, j, lu.at(p, j));
+                    lu.set(p, j, t);
+                }
+                piv.swap(k, p);
+                sign = -sign;
+            }
+            let pivot = lu.at(k, k);
+            for i in (k + 1)..n {
+                let m = lu.at(i, k) / pivot;
+                lu.set(i, k, m);
+                if m != 0.0 {
+                    for j in (k + 1)..n {
+                        let v = lu.at(i, j) - m * lu.at(k, j);
+                        lu.set(i, j, v);
+                    }
+                }
+            }
+        }
+        Ok(Lu { lu, piv, sign })
+    }
+
+    /// Solve A x = b.
+    pub fn solve(&self, b: &[f64]) -> Vec<f64> {
+        let n = self.lu.rows;
+        assert_eq!(b.len(), n);
+        // Apply permutation.
+        let mut x: Vec<f64> = self.piv.iter().map(|&i| b[i]).collect();
+        // Forward: L y = Pb (unit diagonal).
+        for i in 1..n {
+            let mut s = x[i];
+            let row = self.lu.row(i);
+            for j in 0..i {
+                s -= row[j] * x[j];
+            }
+            x[i] = s;
+        }
+        // Backward: U x = y.
+        for i in (0..n).rev() {
+            let mut s = x[i];
+            let row = self.lu.row(i);
+            for j in (i + 1)..n {
+                s -= row[j] * x[j];
+            }
+            x[i] = s / row[i];
+        }
+        x
+    }
+
+    /// Explicit inverse.
+    pub fn inverse(&self) -> Mat {
+        let n = self.lu.rows;
+        let mut inv = Mat::zeros(n, n);
+        let mut e = vec![0.0; n];
+        for j in 0..n {
+            e[j] = 1.0;
+            let x = self.solve(&e);
+            for i in 0..n {
+                inv.set(i, j, x[i]);
+            }
+            e[j] = 0.0;
+        }
+        inv
+    }
+
+    /// det(A) = sign · Π U_ii.
+    pub fn det(&self) -> f64 {
+        self.sign * self.lu.diagonal().iter().product::<f64>()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::la::blas::{gemm, gemv};
+    use crate::util::Rng;
+
+    fn randm(n: usize, seed: u64) -> Mat {
+        let mut rng = Rng::new(seed);
+        Mat::from_fn(n, n, |_, _| rng.normal())
+    }
+
+    #[test]
+    fn solve_recovers() {
+        let a = randm(12, 1);
+        let lu = Lu::new(&a).unwrap();
+        let mut rng = Rng::new(2);
+        let x_true = rng.normal_vec(12);
+        let b = gemv(&a, &x_true);
+        let x = lu.solve(&b);
+        for i in 0..12 {
+            assert!((x[i] - x_true[i]).abs() < 1e-8);
+        }
+    }
+
+    #[test]
+    fn inverse_works() {
+        let a = randm(9, 3);
+        let inv = Lu::new(&a).unwrap().inverse();
+        assert!(gemm(&a, &inv).sub(&Mat::eye(9)).max_abs() < 1e-8);
+    }
+
+    #[test]
+    fn det_known() {
+        // det([[1,2],[3,4]]) = -2
+        let a = Mat::from_rows(&[&[1.0, 2.0], &[3.0, 4.0]]);
+        let lu = Lu::new(&a).unwrap();
+        assert!((lu.det() + 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn det_of_permutation_needs_pivots() {
+        // [[0,1],[1,0]] requires pivoting; det = -1.
+        let a = Mat::from_rows(&[&[0.0, 1.0], &[1.0, 0.0]]);
+        let lu = Lu::new(&a).unwrap();
+        assert!((lu.det() + 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn singular_detected() {
+        let a = Mat::from_rows(&[&[1.0, 2.0], &[2.0, 4.0]]);
+        assert!(Lu::new(&a).is_err());
+    }
+}

@@ -1,0 +1,30 @@
+//! Dense and sparse linear algebra substrate (no external BLAS/LAPACK).
+//!
+//! * [`dense::Mat`] — row-major matrix container
+//! * [`blas`] — GEMM/SYRK/GEMV compute kernels
+//! * [`chol`] — Cholesky (Full-GP baseline, Nyström inner solves)
+//! * [`qr`] — Householder QR (SPCA compressor)
+//! * [`evd`] — symmetric Jacobi eigensolver (Prop. 7 core EVDs)
+//! * [`lu`] — partially-pivoted LU (Schur complement block)
+//! * [`givens`] — Givens rotations / sequences (MMF factors)
+//! * [`sparse`] — CSR + graph Laplacians (§4 diffusion kernels)
+//! * [`stats`] — means/variances/standardization
+
+pub mod blas;
+pub mod chol;
+pub mod dense;
+pub mod evd;
+pub mod givens;
+pub mod lu;
+pub mod qr;
+pub mod sparse;
+pub mod stats;
+
+pub use blas::{axpy, dot, gemm, gemm_nt, gemm_tn, gemv, gemv_t, norm2, syrk_aat, syrk_ata};
+pub use chol::Chol;
+pub use dense::Mat;
+pub use evd::SymEig;
+pub use givens::{Givens, GivensSeq};
+pub use lu::Lu;
+pub use qr::Qr;
+pub use sparse::{Csr, Graph};

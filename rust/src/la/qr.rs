@@ -1,0 +1,224 @@
+//! Householder QR factorization.
+//!
+//! Used by the augmented-SPCA compressor (orthonormalizing sparse loading
+//! vectors and building the complement basis) and by tests as an
+//! orthogonality oracle.
+
+use super::blas::{dot, norm2};
+use super::dense::Mat;
+
+/// Thin QR: A (m×n, m ≥ n) = Q (m×n, orthonormal cols) · R (n×n upper).
+#[derive(Clone, Debug)]
+pub struct Qr {
+    pub q: Mat,
+    pub r: Mat,
+}
+
+impl Qr {
+    pub fn new(a: &Mat) -> Qr {
+        let (m, n) = (a.rows, a.cols);
+        assert!(m >= n, "thin QR requires m >= n (got {m}x{n})");
+        let mut r = a.clone();
+        // Householder vectors stored below the diagonal + separate betas.
+        let mut vs: Vec<Vec<f64>> = Vec::with_capacity(n);
+        for k in 0..n {
+            // Build the Householder vector for column k.
+            let mut v: Vec<f64> = (k..m).map(|i| r.at(i, k)).collect();
+            let alpha = -v[0].signum() * norm2(&v);
+            if alpha.abs() < 1e-300 {
+                // Zero column below diagonal; identity reflector.
+                vs.push(vec![0.0; m - k]);
+                continue;
+            }
+            v[0] -= alpha;
+            let vnorm = norm2(&v);
+            if vnorm < 1e-300 {
+                vs.push(vec![0.0; m - k]);
+                continue;
+            }
+            for x in &mut v {
+                *x /= vnorm;
+            }
+            // Apply H = I - 2vvᵀ to R[k.., k..].
+            for j in k..n {
+                let mut s = 0.0;
+                for i in k..m {
+                    s += v[i - k] * r.at(i, j);
+                }
+                s *= 2.0;
+                for i in k..m {
+                    let x = r.at(i, j) - s * v[i - k];
+                    r.set(i, j, x);
+                }
+            }
+            vs.push(v);
+        }
+        // Accumulate Q = H_0 H_1 ... H_{n-1} applied to the first n columns
+        // of the identity.
+        let mut q = Mat::zeros(m, n);
+        for j in 0..n {
+            q.set(j, j, 1.0);
+        }
+        for k in (0..n).rev() {
+            let v = &vs[k];
+            if v.iter().all(|&x| x == 0.0) {
+                continue;
+            }
+            for j in 0..n {
+                let mut s = 0.0;
+                for i in k..m {
+                    s += v[i - k] * q.at(i, j);
+                }
+                s *= 2.0;
+                for i in k..m {
+                    let x = q.at(i, j) - s * v[i - k];
+                    q.set(i, j, x);
+                }
+            }
+        }
+        // Zero out strictly-lower part of R and truncate to n×n.
+        let mut rn = Mat::zeros(n, n);
+        for i in 0..n {
+            for j in i..n {
+                rn.set(i, j, r.at(i, j));
+            }
+        }
+        Qr { q, r: rn }
+    }
+}
+
+/// Orthonormalize the columns of A in place via modified Gram–Schmidt,
+/// dropping (near-)dependent columns. Returns a matrix whose columns form an
+/// orthonormal basis of range(A).
+pub fn orthonormalize_cols(a: &Mat, tol: f64) -> Mat {
+    let m = a.rows;
+    let mut cols: Vec<Vec<f64>> = Vec::new();
+    for j in 0..a.cols {
+        let mut v = a.col(j);
+        for u in &cols {
+            let c = dot(u, &v);
+            for i in 0..m {
+                v[i] -= c * u[i];
+            }
+        }
+        // Re-orthogonalize once (classic twice-is-enough).
+        for u in &cols {
+            let c = dot(u, &v);
+            for i in 0..m {
+                v[i] -= c * u[i];
+            }
+        }
+        let nv = norm2(&v);
+        if nv > tol {
+            for x in &mut v {
+                *x /= nv;
+            }
+            cols.push(v);
+        }
+    }
+    let mut q = Mat::zeros(m, cols.len());
+    for (j, c) in cols.iter().enumerate() {
+        for i in 0..m {
+            q.set(i, j, c[i]);
+        }
+    }
+    q
+}
+
+/// An orthonormal basis of the orthogonal complement of range(Q)
+/// (Q: m×c with orthonormal columns; result: m×(m−c)).
+pub fn complement_basis(q: &Mat) -> Mat {
+    let m = q.rows;
+    let c = q.cols;
+    // Project the identity columns and orthonormalize what survives.
+    let mut candidates = Mat::zeros(m, m);
+    for j in 0..m {
+        // e_j - Q Qᵀ e_j
+        let qt_e: Vec<f64> = (0..c).map(|k| q.at(j, k)).collect();
+        for i in 0..m {
+            let mut v = if i == j { 1.0 } else { 0.0 };
+            for k in 0..c {
+                v -= q.at(i, k) * qt_e[k];
+            }
+            candidates.set(i, j, v);
+        }
+    }
+    let basis = orthonormalize_cols(&candidates, 1e-8);
+    // Keep exactly m - c columns (numerical rank should match).
+    assert!(
+        basis.cols >= m - c,
+        "complement basis rank deficient: got {} need {}",
+        basis.cols,
+        m - c
+    );
+    basis.block(0, m, 0, m - c)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::la::blas::{gemm, gemm_tn};
+    use crate::util::Rng;
+
+    fn randm(r: usize, c: usize, seed: u64) -> Mat {
+        let mut rng = Rng::new(seed);
+        Mat::from_fn(r, c, |_, _| rng.normal())
+    }
+
+    #[test]
+    fn qr_reconstructs() {
+        for (m, n) in [(5, 5), (10, 4), (30, 30), (50, 7)] {
+            let a = randm(m, n, (m * n) as u64);
+            let qr = Qr::new(&a);
+            let rec = gemm(&qr.q, &qr.r);
+            assert!(rec.sub(&a).max_abs() < 1e-9, "{m}x{n}");
+            let qtq = gemm_tn(&qr.q, &qr.q);
+            assert!(qtq.sub(&Mat::eye(n)).max_abs() < 1e-10, "{m}x{n}");
+        }
+    }
+
+    #[test]
+    fn r_is_upper_triangular() {
+        let a = randm(12, 6, 3);
+        let qr = Qr::new(&a);
+        for i in 0..6 {
+            for j in 0..i {
+                assert_eq!(qr.r[(i, j)], 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn orthonormalize_drops_dependent() {
+        let mut a = randm(8, 3, 4);
+        // append a duplicate column
+        let dup = a.col(0);
+        let mut data = a.data.clone();
+        let mut b = Mat::zeros(8, 4);
+        for i in 0..8 {
+            for j in 0..3 {
+                b.set(i, j, data.remove(0));
+            }
+            b.set(i, 3, dup[i]);
+        }
+        a = b;
+        let q = orthonormalize_cols(&a, 1e-10);
+        assert_eq!(q.cols, 3);
+        let qtq = gemm_tn(&q, &q);
+        assert!(qtq.sub(&Mat::eye(3)).max_abs() < 1e-10);
+    }
+
+    #[test]
+    fn complement_is_orthogonal_and_complete() {
+        let a = randm(9, 3, 5);
+        let q = orthonormalize_cols(&a, 1e-10);
+        let u = complement_basis(&q);
+        assert_eq!(u.cols, 6);
+        // UᵀU = I
+        let utu = gemm_tn(&u, &u);
+        assert!(utu.sub(&Mat::eye(6)).max_abs() < 1e-9);
+        // QᵀU = 0
+        let qtu = gemm_tn(&q, &u);
+        assert!(qtu.max_abs() < 1e-9);
+    }
+}

@@ -1,0 +1,237 @@
+//! CSR sparse matrices and graph Laplacians.
+//!
+//! Substrate for §4's sparse-kernel extension: diffusion kernels are matrix
+//! functions of a sparse graph Laplacian, and MKA of a sparse matrix runs in
+//! near-linear time because the local Gram matrices AᵀA stay cheap.
+
+use super::dense::Mat;
+
+/// Compressed sparse row matrix (f64).
+#[derive(Clone, Debug)]
+pub struct Csr {
+    pub rows: usize,
+    pub cols: usize,
+    pub indptr: Vec<usize>,
+    pub indices: Vec<usize>,
+    pub values: Vec<f64>,
+}
+
+impl Csr {
+    /// Build from (row, col, value) triplets; duplicates are summed.
+    pub fn from_triplets(rows: usize, cols: usize, triplets: &[(usize, usize, f64)]) -> Csr {
+        let mut per_row: Vec<Vec<(usize, f64)>> = vec![Vec::new(); rows];
+        for &(i, j, v) in triplets {
+            assert!(i < rows && j < cols, "triplet ({i},{j}) out of bounds");
+            per_row[i].push((j, v));
+        }
+        let mut indptr = Vec::with_capacity(rows + 1);
+        let mut indices = Vec::new();
+        let mut values = Vec::new();
+        indptr.push(0);
+        for row in &mut per_row {
+            row.sort_by_key(|&(j, _)| j);
+            // merge duplicates
+            let mut k = 0;
+            while k < row.len() {
+                let j = row[k].0;
+                let mut v = row[k].1;
+                let mut k2 = k + 1;
+                while k2 < row.len() && row[k2].0 == j {
+                    v += row[k2].1;
+                    k2 += 1;
+                }
+                if v != 0.0 {
+                    indices.push(j);
+                    values.push(v);
+                }
+                k = k2;
+            }
+            indptr.push(indices.len());
+        }
+        Csr { rows, cols, indptr, indices, values }
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.values.len()
+    }
+
+    /// Row i as (indices, values) slices.
+    pub fn row(&self, i: usize) -> (&[usize], &[f64]) {
+        let (a, b) = (self.indptr[i], self.indptr[i + 1]);
+        (&self.indices[a..b], &self.values[a..b])
+    }
+
+    /// y ← A x.
+    pub fn spmv(&self, x: &[f64]) -> Vec<f64> {
+        assert_eq!(x.len(), self.cols);
+        let mut y = vec![0.0; self.rows];
+        for i in 0..self.rows {
+            let (idx, val) = self.row(i);
+            let mut s = 0.0;
+            for (j, v) in idx.iter().zip(val) {
+                s += v * x[*j];
+            }
+            y[i] = s;
+        }
+        y
+    }
+
+    /// Densify (tests / small blocks only).
+    pub fn to_dense(&self) -> Mat {
+        let mut m = Mat::zeros(self.rows, self.cols);
+        for i in 0..self.rows {
+            let (idx, val) = self.row(i);
+            for (j, v) in idx.iter().zip(val) {
+                m.set(i, *j, *v);
+            }
+        }
+        m
+    }
+
+    /// Symmetric gather of a square CSR: dense submatrix A[idx, idx].
+    pub fn gather_dense(&self, idx: &[usize]) -> Mat {
+        assert_eq!(self.rows, self.cols);
+        let pos: std::collections::HashMap<usize, usize> =
+            idx.iter().enumerate().map(|(a, &i)| (i, a)).collect();
+        let mut m = Mat::zeros(idx.len(), idx.len());
+        for (a, &i) in idx.iter().enumerate() {
+            let (cols, vals) = self.row(i);
+            for (j, v) in cols.iter().zip(vals) {
+                if let Some(&b) = pos.get(j) {
+                    m.set(a, b, *v);
+                }
+            }
+        }
+        m
+    }
+}
+
+/// An undirected weighted graph stored as an adjacency CSR.
+#[derive(Clone, Debug)]
+pub struct Graph {
+    pub adj: Csr,
+}
+
+impl Graph {
+    /// Build from undirected edges (i, j, w); both directions are inserted.
+    pub fn from_edges(n: usize, edges: &[(usize, usize, f64)]) -> Graph {
+        let mut triplets = Vec::with_capacity(edges.len() * 2);
+        for &(i, j, w) in edges {
+            assert_ne!(i, j, "self loops not allowed");
+            triplets.push((i, j, w));
+            triplets.push((j, i, w));
+        }
+        Graph { adj: Csr::from_triplets(n, n, &triplets) }
+    }
+
+    pub fn n(&self) -> usize {
+        self.adj.rows
+    }
+
+    pub fn degrees(&self) -> Vec<f64> {
+        (0..self.n())
+            .map(|i| {
+                let (_, vals) = self.adj.row(i);
+                vals.iter().sum()
+            })
+            .collect()
+    }
+
+    /// Unnormalized graph Laplacian L = D − A as CSR.
+    pub fn laplacian(&self) -> Csr {
+        let n = self.n();
+        let deg = self.degrees();
+        let mut triplets = Vec::with_capacity(self.adj.nnz() + n);
+        for i in 0..n {
+            let (idx, val) = self.adj.row(i);
+            for (j, v) in idx.iter().zip(val) {
+                triplets.push((i, *j, -*v));
+            }
+            triplets.push((i, i, deg[i]));
+        }
+        Csr::from_triplets(n, n, &triplets)
+    }
+
+    /// Normalized Laplacian L̂ = I − D^{-1/2} A D^{-1/2}.
+    pub fn normalized_laplacian(&self) -> Csr {
+        let n = self.n();
+        let deg = self.degrees();
+        let dinv: Vec<f64> =
+            deg.iter().map(|&d| if d > 0.0 { 1.0 / d.sqrt() } else { 0.0 }).collect();
+        let mut triplets = Vec::with_capacity(self.adj.nnz() + n);
+        for i in 0..n {
+            let (idx, val) = self.adj.row(i);
+            for (j, v) in idx.iter().zip(val) {
+                triplets.push((i, *j, -v * dinv[i] * dinv[*j]));
+            }
+            triplets.push((i, i, 1.0));
+        }
+        Csr::from_triplets(n, n, &triplets)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn triplets_merge_and_sort() {
+        let a = Csr::from_triplets(2, 3, &[(0, 2, 1.0), (0, 0, 2.0), (0, 2, 3.0), (1, 1, 5.0)]);
+        assert_eq!(a.nnz(), 3);
+        let (idx, val) = a.row(0);
+        assert_eq!(idx, &[0, 2]);
+        assert_eq!(val, &[2.0, 4.0]);
+    }
+
+    #[test]
+    fn spmv_matches_dense() {
+        let a = Csr::from_triplets(3, 3, &[(0, 0, 1.0), (0, 2, 2.0), (1, 1, 3.0), (2, 0, 4.0)]);
+        let x = [1.0, 2.0, 3.0];
+        let y = a.spmv(&x);
+        let d = a.to_dense();
+        let yd = crate::la::blas::gemv(&d, &x);
+        assert_eq!(y, yd);
+    }
+
+    #[test]
+    fn laplacian_rows_sum_to_zero() {
+        let g = Graph::from_edges(4, &[(0, 1, 1.0), (1, 2, 2.0), (2, 3, 0.5), (0, 3, 1.0)]);
+        let l = g.laplacian();
+        let ones = vec![1.0; 4];
+        let y = l.spmv(&ones);
+        for v in y {
+            assert!(v.abs() < 1e-14);
+        }
+    }
+
+    #[test]
+    fn laplacian_is_psd() {
+        let g = Graph::from_edges(5, &[(0, 1, 1.0), (1, 2, 1.0), (2, 3, 1.0), (3, 4, 1.0), (4, 0, 1.0)]);
+        let l = g.laplacian().to_dense();
+        let e = crate::la::evd::SymEig::new(&l);
+        assert!(e.values[0] > -1e-10, "smallest eig {}", e.values[0]);
+        // connected ring: exactly one ~zero eigenvalue
+        assert!(e.values[0].abs() < 1e-10);
+        assert!(e.values[1] > 1e-8);
+    }
+
+    #[test]
+    fn normalized_laplacian_spectrum_bounded() {
+        let g = Graph::from_edges(6, &[(0, 1, 1.0), (1, 2, 1.0), (2, 0, 1.0), (3, 4, 1.0), (4, 5, 1.0)]);
+        let l = g.normalized_laplacian().to_dense();
+        let e = crate::la::evd::SymEig::new(&l);
+        assert!(e.values[0] > -1e-10);
+        assert!(*e.values.last().unwrap() <= 2.0 + 1e-10);
+    }
+
+    #[test]
+    fn gather_dense_submatrix() {
+        let a = Csr::from_triplets(
+            4,
+            4,
+            &[(0, 0, 1.0), (0, 3, 2.0), (3, 0, 2.0), (3, 3, 4.0), (1, 1, 9.0)],
+        );
+        let sub = a.gather_dense(&[0, 3]);
+        assert_eq!(sub.data, vec![1.0, 2.0, 2.0, 4.0]);
+    }
+}

@@ -1,0 +1,105 @@
+//! Small statistics helpers: means, variances, standardization, quantiles.
+
+/// Mean of a slice (0 for empty).
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    xs.iter().sum::<f64>() / xs.len() as f64
+}
+
+/// Population variance.
+pub fn variance(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / xs.len() as f64
+}
+
+pub fn std_dev(xs: &[f64]) -> f64 {
+    variance(xs).sqrt()
+}
+
+/// Standardize in place to mean 0 / std 1; returns (mean, std).
+/// A zero std is replaced by 1 so constant columns pass through.
+pub fn standardize(xs: &mut [f64]) -> (f64, f64) {
+    let m = mean(xs);
+    let mut s = std_dev(xs);
+    if s < 1e-12 {
+        s = 1.0;
+    }
+    for x in xs.iter_mut() {
+        *x = (*x - m) / s;
+    }
+    (m, s)
+}
+
+/// Quantile by linear interpolation over a *sorted* slice, q in [0, 1].
+pub fn quantile_sorted(sorted: &[f64], q: f64) -> f64 {
+    assert!(!sorted.is_empty());
+    let pos = q.clamp(0.0, 1.0) * (sorted.len() - 1) as f64;
+    let lo = pos.floor() as usize;
+    let hi = pos.ceil() as usize;
+    if lo == hi {
+        sorted[lo]
+    } else {
+        let w = pos - lo as f64;
+        sorted[lo] * (1.0 - w) + sorted[hi] * w
+    }
+}
+
+/// Mean and sample-std of repeated measurements (Bessel corrected).
+pub fn mean_std_sample(xs: &[f64]) -> (f64, f64) {
+    let m = mean(xs);
+    if xs.len() < 2 {
+        return (m, 0.0);
+    }
+    let v = xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / (xs.len() - 1) as f64;
+    (m, v.sqrt())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mean_var() {
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        assert_eq!(mean(&xs), 2.5);
+        assert!((variance(&xs) - 1.25).abs() < 1e-15);
+    }
+
+    #[test]
+    fn standardize_works() {
+        let mut xs = vec![10.0, 20.0, 30.0];
+        let (m, s) = standardize(&mut xs);
+        assert_eq!(m, 20.0);
+        assert!(s > 0.0);
+        assert!(mean(&xs).abs() < 1e-12);
+        assert!((std_dev(&xs) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn standardize_constant_column() {
+        let mut xs = vec![5.0; 4];
+        standardize(&mut xs);
+        assert!(xs.iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn quantiles() {
+        let xs = [1.0, 2.0, 3.0, 4.0, 5.0];
+        assert_eq!(quantile_sorted(&xs, 0.0), 1.0);
+        assert_eq!(quantile_sorted(&xs, 1.0), 5.0);
+        assert_eq!(quantile_sorted(&xs, 0.5), 3.0);
+        assert_eq!(quantile_sorted(&xs, 0.25), 2.0);
+    }
+
+    #[test]
+    fn sample_std() {
+        let (m, s) = mean_std_sample(&[2.0, 4.0]);
+        assert_eq!(m, 3.0);
+        assert!((s - std::f64::consts::SQRT_2).abs() < 1e-12);
+    }
+}

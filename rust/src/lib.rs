@@ -1,0 +1,48 @@
+//! # mka-gp — Multiresolution Kernel Approximation for Gaussian Process Regression
+//!
+//! A production-grade reimplementation of Ding, Kondor & Eskreis-Winkler,
+//! *Multiresolution Kernel Approximation for Gaussian Process Regression*
+//! (NIPS 2017), as a three-layer Rust + JAX + Pallas stack:
+//!
+//! * **Layer 3 (this crate)** — the MKA meta-algorithm (clustering,
+//!   core-diagonal compression, telescoping factorization, matrix-free
+//!   operator algebra), the full GP regression stack, all five comparison
+//!   baselines, and a serving coordinator.
+//! * **Layer 2** — JAX compute graphs for the dense hot spots (kernel gram
+//!   tiles, AᵀA), AOT-lowered to HLO text in `artifacts/`.
+//! * **Layer 1** — Pallas kernels called by the L2 graphs (see
+//!   `python/compile/kernels/`).
+//!
+//! Python never runs at inference time: the rust binary loads the AOT
+//! artifacts through PJRT (`runtime`) or falls back to native kernels.
+
+pub mod error;
+pub mod util;
+pub mod la;
+pub mod kernels;
+pub mod cluster;
+pub mod compress;
+pub mod mka;
+pub mod gp;
+pub mod baselines;
+pub mod data;
+pub mod runtime;
+pub mod coordinator;
+pub mod experiments;
+pub mod bench;
+
+/// Convenience re-exports for examples and downstream users.
+pub mod prelude {
+    pub use crate::baselines::{fitc::Fitc, meka::Meka, pitc::Pitc, sor::Sor};
+    pub use crate::cluster::ClusterMethod;
+    pub use crate::compress::CompressorKind;
+    pub use crate::data::dataset::Dataset;
+    pub use crate::data::synth::{self, SynthSpec};
+    pub use crate::error::{Error, Result};
+    pub use crate::gp::metrics::{mnlp, smse};
+    pub use crate::gp::{full::FullGp, mka_gp::MkaGp, GpModel, Prediction};
+    pub use crate::kernels::{Kernel, RbfKernel};
+    pub use crate::la::Mat;
+    pub use crate::mka::{MkaConfig, MkaFactor};
+    pub use crate::util::{Args, Json, Rng};
+}

@@ -1,0 +1,239 @@
+//! `mka-gp` — command line interface.
+//!
+//! Subcommands:
+//!   serve       start the coordinator (JSON-over-TCP GP service)
+//!   fit         fit a model on a CSV (last column = target) and report CV metrics
+//!   experiment  run a paper experiment: table1 | fig1 | fig2
+//!   selftest    verify the AOT artifacts against native kernels
+//!   info        print config / artifact status
+
+use std::path::Path;
+use std::sync::Arc;
+
+use mka_gp::coordinator::{Router, Server, ServiceConfig};
+use mka_gp::data::loader;
+use mka_gp::error::Result;
+use mka_gp::experiments::methods::Method;
+use mka_gp::gp::cv::HyperParams;
+use mka_gp::gp::metrics::{mnlp, smse};
+use mka_gp::kernels::gram::rbf_tile_native;
+use mka_gp::la::dense::Mat;
+use mka_gp::runtime::engine::XlaEngine;
+use mka_gp::util::{Args, Rng};
+
+fn main() {
+    let args = Args::from_env(true);
+    let code = match args.subcommand.as_deref() {
+        Some("serve") => cmd_serve(&args),
+        Some("fit") => cmd_fit(&args),
+        Some("experiment") => cmd_experiment(&args),
+        Some("selftest") => cmd_selftest(&args),
+        Some("info") => cmd_info(&args),
+        _ => {
+            print_usage();
+            Ok(())
+        }
+    }
+    .map(|_| 0)
+    .unwrap_or_else(|e| {
+        eprintln!("error: {e}");
+        1
+    });
+    std::process::exit(code);
+}
+
+fn print_usage() {
+    println!(
+        "mka-gp — Multiresolution Kernel Approximation for GP regression\n\
+         \n\
+         USAGE: mka-gp <subcommand> [--options]\n\
+         \n\
+         serve       --port 7470 --workers 2 --config cfg.json --artifacts artifacts\n\
+         fit         --data file.csv --method mka|full|sor|fitc|pitc|meka --k 32\n\
+         experiment  --name table1|fig1|fig2 [--full] [--max-n N] [--datasets a,b]\n\
+         selftest    --artifacts artifacts\n\
+         info        [--artifacts artifacts]"
+    );
+}
+
+fn service_config(args: &Args) -> Result<ServiceConfig> {
+    let mut cfg = ServiceConfig::default();
+    if let Some(path) = args.get("config") {
+        cfg.apply_file(Path::new(path))?;
+    }
+    cfg.apply_env()?;
+    cfg.apply(args.options())?;
+    Ok(cfg)
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let cfg = service_config(args)?;
+    let host = cfg.host.clone();
+    let port = cfg.port;
+    println!("mka-gp coordinator on {host}:{port} ({} workers)", cfg.n_workers);
+    // Keep the engine alive for the life of the server when available.
+    let _engine = cfg.artifacts_dir.as_ref().and_then(|dir| match XlaEngine::start(dir) {
+        Ok(engine) => {
+            println!("XLA engine ready ({} artifacts)", dir.display());
+            Some(engine)
+        }
+        Err(e) => {
+            println!("XLA engine unavailable ({e}); using native kernels");
+            None
+        }
+    });
+    let router = Arc::new(Router::new(cfg));
+    let server = Server::start(router, &host, port)?;
+    println!("listening on {}", server.addr());
+    // Block forever (Ctrl-C exits the process).
+    loop {
+        std::thread::sleep(std::time::Duration::from_secs(3600));
+    }
+}
+
+fn cmd_fit(args: &Args) -> Result<()> {
+    let path = args
+        .get("data")
+        .ok_or_else(|| mka_gp::error::Error::Config("fit: --data <csv> required".into()))?;
+    let method = Method::parse(args.get_or("method", "mka"))
+        .ok_or_else(|| mka_gp::error::Error::Config("unknown --method".into()))?;
+    let k = args.get_usize("k", 32);
+    let seed = args.get_u64("seed", 42);
+    let mut data = loader::load_csv(Path::new(path), "cli")?;
+    data.normalize();
+    let (train, test) = data.split(0.9, seed);
+    let hp = HyperParams {
+        lengthscale: args.get_f64("lengthscale", (data.dim() as f64).sqrt()),
+        sigma2: args.get_f64("sigma2", 0.1),
+    };
+    println!(
+        "fitting {} on {} (n={}, d={}, k={k})",
+        method.label(),
+        data.name,
+        train.n(),
+        data.dim()
+    );
+    let model = mka_gp::coordinator::router::fit_model(method, &train, hp, k, seed)?;
+    let pred = model.predict(&test.x);
+    println!("test SMSE = {:.4}", smse(&test.y, &pred.mean));
+    if pred.var.iter().all(|v| v.is_finite()) {
+        println!("test MNLP = {:.4}", mnlp(&test.y, &pred.mean, &pred.var));
+    }
+    Ok(())
+}
+
+fn cmd_experiment(args: &Args) -> Result<()> {
+    let name = args.get_or("name", "table1");
+    match name {
+        "table1" => {
+            let mut cfg = mka_gp::experiments::table1::Table1Config::default();
+            if args.has_flag("full") {
+                cfg.max_n = usize::MAX;
+                cfg.repeats = 5;
+                cfg.folds = 5;
+            }
+            cfg.max_n = args.get_usize("max-n", cfg.max_n);
+            let only = args.get("datasets").map(|s| s.split(',').collect::<Vec<_>>());
+            let rows = mka_gp::experiments::table1::run_table(&cfg, only.as_deref());
+            println!("{}", mka_gp::experiments::table1::format_rows(&rows));
+        }
+        "fig1" => {
+            let hp = HyperParams { lengthscale: 0.5, sigma2: 0.01 };
+            let (_data, curves) =
+                mka_gp::experiments::snelson::run(200, 10, 200, hp, &Method::ALL, 7);
+            for c in &curves {
+                println!(
+                    "{:?}: mean range [{:.2}, {:.2}]",
+                    c.method,
+                    c.mean.iter().cloned().fold(f64::INFINITY, f64::min),
+                    c.mean.iter().cloned().fold(f64::NEG_INFINITY, f64::max)
+                );
+            }
+            for (m, d) in mka_gp::experiments::snelson::deviation_from_full(&curves) {
+                println!("deviation from Full: {m:?} = {d:.4}");
+            }
+        }
+        "fig2" => {
+            let data = mka_gp::data::synth::gp_dataset(
+                &mka_gp::data::synth::SynthSpec::named("sweep", 800, 8),
+                13,
+            );
+            let hp = HyperParams { lengthscale: 1.0, sigma2: 0.1 };
+            let pts = mka_gp::experiments::sweep::sweep(
+                &data,
+                &[8, 16, 32, 64, 128],
+                hp,
+                &Method::ALL,
+                13,
+            );
+            for p in pts {
+                println!("{:?} k={}: smse={:.3} mnlp={:?}", p.method, p.k, p.smse, p.mnlp);
+            }
+        }
+        other => println!("unknown experiment {other}; use table1|fig1|fig2"),
+    }
+    Ok(())
+}
+
+fn cmd_selftest(args: &Args) -> Result<()> {
+    let dir = args.get_or("artifacts", "artifacts");
+    println!("loading artifacts from {dir} ...");
+    let engine = XlaEngine::start(Path::new(dir))?;
+    let handle = engine.handle();
+    let mut rng = Rng::new(7);
+    // gram tile vs native
+    let t = handle.gram_tile_size().min(64);
+    let d = handle.gram_max_dim().min(8);
+    let x = Mat::from_fn(t, d, |_, _| rng.normal());
+    let y = Mat::from_fn(t, d, |_, _| rng.normal());
+    let via_xla = handle.rbf_tile(&x, &y, 0.9, 1.3)?;
+    let via_native = rbf_tile_native(&x, &y, 0.9, 1.3);
+    let err = via_xla.sub(&via_native).max_abs();
+    println!("gram_tile   max|xla - native| = {err:.3e}");
+    assert!(err < 1e-10, "gram tile mismatch");
+    // ata vs native
+    let a = Mat::from_fn(96, 96, |_, _| rng.normal());
+    let g_xla = handle.ata(&a)?;
+    let g_nat = mka_gp::la::syrk_ata(&a);
+    let err = g_xla.sub(&g_nat).max_abs();
+    println!("ata         max|xla - native| = {err:.3e}");
+    assert!(err < 1e-9, "ata mismatch");
+    // chol_solve vs native
+    let b = Mat::from_fn(80, 85, |_, _| rng.normal());
+    let mut k = mka_gp::la::gemm_nt(&b, &b);
+    k.scale(1.0 / 85.0);
+    let yv = rng.normal_vec(80);
+    let alpha_xla = handle.chol_solve(&k, &yv, 0.1)?;
+    let mut kp = k.clone();
+    kp.add_diag(0.1);
+    let alpha_nat = mka_gp::la::Chol::new(&kp)?.solve(&yv);
+    let err = alpha_xla
+        .iter()
+        .zip(&alpha_nat)
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0f64, f64::max);
+    println!("chol_solve  max|xla - native| = {err:.3e}");
+    assert!(err < 1e-7, "chol_solve mismatch");
+    println!("selftest OK — all AOT artifacts agree with native kernels");
+    Ok(())
+}
+
+fn cmd_info(args: &Args) -> Result<()> {
+    let cfg = service_config(args)?;
+    println!("config: {}", cfg.to_json().dump_pretty());
+    let dir = args.get_or("artifacts", "artifacts");
+    match mka_gp::runtime::Manifest::load(Path::new(dir)) {
+        Ok(m) => {
+            println!("artifacts in {dir}:");
+            for a in &m.artifacts {
+                println!("  {} ({} params, sha {})", a.name, a.n_params, a.sha256);
+            }
+            println!(
+                "shapes: gram tile {}x{} | ata {} | chol {}",
+                m.gram_tile, m.gram_dim, m.ata_m, m.chol_n
+            );
+        }
+        Err(e) => println!("no artifacts: {e}"),
+    }
+    Ok(())
+}

@@ -1,0 +1,209 @@
+//! The telescoping MKA factor
+//! K̃ = Q₁ᵀ(Q₂ᵀ(… Q_sᵀ(K_s ⊕ D_s)Q_s …) ⊕ D₂)Q₂ ⊕ D₁)Q₁   (paper eq. 6)
+//! and its matrix-free application (Proposition 6).
+
+use std::sync::OnceLock;
+
+use super::stage::Stage;
+use crate::la::blas::gemv;
+use crate::la::dense::Mat;
+use crate::la::evd::SymEig;
+
+/// A factorized kernel approximation. Obtained from [`super::factorize`].
+#[derive(Debug)]
+pub struct MkaFactor {
+    /// Ambient dimension n.
+    pub n: usize,
+    /// Stages, outermost (stage 1) first.
+    pub stages: Vec<Stage>,
+    /// Final dense core K_s (d_core × d_core).
+    pub core: Mat,
+    /// Lazily computed EVD of the core (Proposition 7's d³ step).
+    pub(crate) core_eig: OnceLock<SymEig>,
+}
+
+impl Clone for MkaFactor {
+    fn clone(&self) -> Self {
+        MkaFactor {
+            n: self.n,
+            stages: self.stages.clone(),
+            core: self.core.clone(),
+            core_eig: OnceLock::new(),
+        }
+    }
+}
+
+impl MkaFactor {
+    pub fn new(n: usize, stages: Vec<Stage>, core: Mat) -> MkaFactor {
+        MkaFactor { n, stages, core, core_eig: OnceLock::new() }
+    }
+
+    /// Size of the final core d_core.
+    pub fn d_core(&self) -> usize {
+        self.core.rows
+    }
+
+    /// Number of stages s.
+    pub fn n_stages(&self) -> usize {
+        self.stages.len()
+    }
+
+    /// EVD of the core, computed once on first use.
+    pub(crate) fn eig(&self) -> &SymEig {
+        self.core_eig.get_or_init(|| SymEig::new(&self.core))
+    }
+
+    /// K̃ z — the Proposition 6 cascade: forward through every stage,
+    /// multiply the core / scale the wavelets, cascade back.
+    pub fn matvec(&self, z: &[f64]) -> Vec<f64> {
+        self.apply_with(z, |core_vec| gemv(&self.core, core_vec), |d| d)
+    }
+
+    /// Generic spectral application: given how to act on the final core
+    /// vector and how to map each wavelet diagonal value, apply the
+    /// corresponding matrix function of K̃ (Proposition 7 pattern).
+    pub(crate) fn apply_with(
+        &self,
+        z: &[f64],
+        core_op: impl Fn(&[f64]) -> Vec<f64>,
+        dmap: impl Fn(f64) -> f64,
+    ) -> Vec<f64> {
+        assert_eq!(z.len(), self.n, "matvec dimension mismatch");
+        let mut scratch: Vec<f64> = Vec::new();
+        let mut v = z.to_vec();
+        let mut wavs: Vec<Vec<f64>> = Vec::with_capacity(self.stages.len());
+        for st in &self.stages {
+            let (core, wav) = st.forward(&mut v, &mut scratch);
+            wavs.push(wav);
+            v = core;
+        }
+        // Core action.
+        let mut u = core_op(&v);
+        // Backward cascade, scaling wavelet coefficients by f(D).
+        for (st, wav) in self.stages.iter().zip(wavs.iter()).rev() {
+            let scaled: Vec<f64> =
+                wav.iter().zip(&st.dvals).map(|(w, &d)| w * dmap(d)).collect();
+            u = st.backward(&u, &scaled, &mut scratch);
+        }
+        u
+    }
+
+    /// Dense reconstruction of K̃ (tests / small n only): n matvecs.
+    pub fn to_dense(&self) -> Mat {
+        let n = self.n;
+        let mut out = Mat::zeros(n, n);
+        let mut e = vec![0.0; n];
+        for j in 0..n {
+            e[j] = 1.0;
+            let col = self.matvec(&e);
+            for i in 0..n {
+                out.set(i, j, col[i]);
+            }
+            e[j] = 0.0;
+        }
+        out
+    }
+
+    /// Stored reals (Proposition 3/5): rotations + diagonals + core.
+    pub fn stored_reals(&self) -> usize {
+        self.stages.iter().map(|s| s.stored_reals()).sum::<usize>()
+            + self.core.rows * self.core.cols
+    }
+
+    /// All wavelet diagonal values across stages (the spectrum outside the
+    /// core, up to rotation).
+    pub fn all_dvals(&self) -> Vec<f64> {
+        self.stages.iter().flat_map(|s| s.dvals.iter().copied()).collect()
+    }
+
+    /// Structural validation of the whole factor.
+    pub fn check_valid(&self) -> bool {
+        let mut dim = self.n;
+        for st in &self.stages {
+            if st.n_in != dim || !st.check_valid() {
+                return false;
+            }
+            dim = st.c();
+        }
+        dim == self.core.rows && self.core.is_square()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::QFactor;
+    use crate::la::givens::{Givens, GivensSeq};
+    use crate::mka::stage::BlockFactor;
+    use crate::util::Rng;
+
+    /// A hand-built 4→2 single-stage factor for exact checks.
+    fn tiny_factor() -> MkaFactor {
+        let mut seq = GivensSeq::new();
+        seq.push(Givens::jacobi(0, 1, 3.0, 1.0, 2.0));
+        let stage = Stage {
+            n_in: 4,
+            blocks: vec![
+                BlockFactor { idx: vec![0, 1], q: QFactor::Givens(seq) },
+                BlockFactor { idx: vec![2, 3], q: QFactor::Identity },
+            ],
+            core_global: vec![0, 2],
+            wavelet_global: vec![1, 3],
+            dvals: vec![0.7, 0.9],
+        };
+        let core = Mat::from_rows(&[&[2.0, 0.3], &[0.3, 1.5]]);
+        MkaFactor::new(4, vec![stage], core)
+    }
+
+    #[test]
+    fn structure_valid() {
+        let f = tiny_factor();
+        assert!(f.check_valid());
+        assert_eq!(f.d_core(), 2);
+        assert_eq!(f.n_stages(), 1);
+    }
+
+    #[test]
+    fn matvec_matches_dense_reconstruction() {
+        let f = tiny_factor();
+        let dense = f.to_dense();
+        assert!(dense.asymmetry() < 1e-12, "K̃ must be symmetric");
+        let mut rng = Rng::new(1);
+        let z = rng.normal_vec(4);
+        let y = f.matvec(&z);
+        let y2 = gemv(&dense, &z);
+        for i in 0..4 {
+            assert!((y[i] - y2[i]).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn matvec_linear() {
+        let f = tiny_factor();
+        let mut rng = Rng::new(2);
+        let a = rng.normal_vec(4);
+        let b = rng.normal_vec(4);
+        let ab: Vec<f64> = a.iter().zip(&b).map(|(x, y)| 2.0 * x - 3.0 * y).collect();
+        let fa = f.matvec(&a);
+        let fb = f.matvec(&b);
+        let fab = f.matvec(&ab);
+        for i in 0..4 {
+            assert!((fab[i] - (2.0 * fa[i] - 3.0 * fb[i])).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn dense_is_psd_when_parts_are() {
+        // Core is pd, dvals positive ⇒ K̃ psd (Proposition 1).
+        let f = tiny_factor();
+        let e = crate::la::evd::SymEig::new(&f.to_dense());
+        assert!(e.values[0] > 0.0);
+    }
+
+    #[test]
+    fn stored_reals_accounting() {
+        let f = tiny_factor();
+        // 1 rotation (2) + 2 dvals + 2x2 core = 8
+        assert_eq!(f.stored_reals(), 8);
+    }
+}

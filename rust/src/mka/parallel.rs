@@ -1,0 +1,112 @@
+//! Minimal scoped-thread parallel map for block compression.
+//!
+//! MKA is "inherently bottom-up … naturally parallelizable" (§3 remark 5):
+//! within a stage, every diagonal block is compressed independently. No
+//! rayon offline, so this is a small work-stealing-free static partitioner
+//! over `std::thread::scope` — adequate because MKA blocks are
+//! near-uniform in size by construction (balanced clustering).
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// Map `f` over `items` using up to `n_threads` OS threads, preserving
+/// order. Falls back to a plain serial map when `n_threads <= 1` or the
+/// item count is small.
+pub fn par_map<T, R, F>(items: Vec<T>, n_threads: usize, f: F) -> Vec<R>
+where
+    T: Send,
+    R: Send,
+    F: Fn(usize, T) -> R + Send + Sync,
+{
+    let n = items.len();
+    if n_threads <= 1 || n <= 1 {
+        return items.into_iter().enumerate().map(|(i, t)| f(i, t)).collect();
+    }
+    let n_threads = n_threads.min(n);
+    // Slots for results; dynamic index dispenser for load balancing.
+    let mut slots: Vec<Option<R>> = (0..n).map(|_| None).collect();
+    let items: Vec<std::sync::Mutex<Option<T>>> =
+        items.into_iter().map(|t| std::sync::Mutex::new(Some(t))).collect();
+    let next = AtomicUsize::new(0);
+    let slot_ptr = SlotsPtr(slots.as_mut_ptr());
+
+    std::thread::scope(|scope| {
+        for _ in 0..n_threads {
+            let f = &f;
+            let items = &items;
+            let next = &next;
+            let slot_ptr = &slot_ptr;
+            scope.spawn(move || loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                let item = items[i].lock().unwrap().take().unwrap();
+                let r = f(i, item);
+                // SAFETY: each index i is claimed exactly once via the
+                // atomic dispenser, so writes to slots are disjoint; the
+                // scope guarantees the buffer outlives the threads.
+                unsafe {
+                    *slot_ptr.0.add(i) = Some(r);
+                }
+            });
+        }
+    });
+
+    slots.into_iter().map(|s| s.expect("worker failed to fill slot")).collect()
+}
+
+/// Wrapper to make the raw slot pointer Sync for the scoped threads.
+struct SlotsPtr<R>(*mut Option<R>);
+unsafe impl<R: Send> Sync for SlotsPtr<R> {}
+unsafe impl<R: Send> Send for SlotsPtr<R> {}
+
+/// Number of worker threads to use by default.
+pub fn default_threads() -> usize {
+    std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matches_serial_map() {
+        let items: Vec<usize> = (0..100).collect();
+        let serial: Vec<usize> = items.iter().map(|&x| x * x).collect();
+        let parallel = par_map(items, 4, |_, x| x * x);
+        assert_eq!(serial, parallel);
+    }
+
+    #[test]
+    fn order_preserved_with_uneven_work() {
+        let items: Vec<usize> = (0..40).collect();
+        let out = par_map(items, 8, |i, x| {
+            if x % 7 == 0 {
+                std::thread::sleep(std::time::Duration::from_millis(1));
+            }
+            (i, x * 2)
+        });
+        for (i, (idx, v)) in out.iter().enumerate() {
+            assert_eq!(*idx, i);
+            assert_eq!(*v, i * 2);
+        }
+    }
+
+    #[test]
+    fn single_thread_path() {
+        let out = par_map(vec![1, 2, 3], 1, |_, x| x + 1);
+        assert_eq!(out, vec![2, 3, 4]);
+    }
+
+    #[test]
+    fn empty_input() {
+        let out: Vec<i32> = par_map(Vec::<i32>::new(), 4, |_, x| x);
+        assert!(out.is_empty());
+    }
+
+    #[test]
+    fn more_threads_than_items() {
+        let out = par_map(vec![5], 16, |_, x| x * 10);
+        assert_eq!(out, vec![50]);
+    }
+}

@@ -1,0 +1,198 @@
+//! One MKA stage: the blocked rotation Q̄_ℓ = ⊕_i Q_i, the core/wavelet
+//! split, and the diagonal D_ℓ (Algorithm 1 steps 1–5).
+//!
+//! Permutations C_ℓ and P_ℓ are never materialized ("they really just
+//! correspond to different ways of blocking K_s", §3 remark 3): blocks
+//! store their member indices and the core/wavelet split stores global
+//! positions, so gather/scatter does the permuting implicitly.
+
+use crate::compress::QFactor;
+
+/// The local rotation of one diagonal block, in stage-input coordinates.
+#[derive(Clone, Debug)]
+pub struct BlockFactor {
+    /// Stage-input coordinates belonging to this block (sorted).
+    pub idx: Vec<usize>,
+    /// Local orthogonal factor on `idx.len()` coordinates.
+    pub q: QFactor,
+}
+
+/// One stage of the telescoping factorization.
+#[derive(Clone, Debug)]
+pub struct Stage {
+    /// Dimension entering this stage (n_{ℓ-1} in paper notation).
+    pub n_in: usize,
+    /// Per-cluster local rotations (disjoint index sets covering 0..n_in).
+    pub blocks: Vec<BlockFactor>,
+    /// Stage-input coordinates that continue as the next stage's core,
+    /// in the order they map to coordinates 0.. of the next stage.
+    pub core_global: Vec<usize>,
+    /// Stage-input coordinates retired as wavelets.
+    pub wavelet_global: Vec<usize>,
+    /// D_ℓ: diagonal values for the wavelet coordinates (same order).
+    pub dvals: Vec<f64>,
+}
+
+impl Stage {
+    /// Number of core coordinates c_ℓ.
+    pub fn c(&self) -> usize {
+        self.core_global.len()
+    }
+
+    /// Apply Q̄_ℓ to a stage-input vector in place (v ← Q̄ v), then split
+    /// into (core, wavelet-coefficients).
+    pub fn forward(&self, v: &mut [f64], scratch: &mut Vec<f64>) -> (Vec<f64>, Vec<f64>) {
+        debug_assert_eq!(v.len(), self.n_in);
+        for b in &self.blocks {
+            apply_block(&b.q, &b.idx, v, scratch, false);
+        }
+        let core = self.core_global.iter().map(|&i| v[i]).collect();
+        let wav = self.wavelet_global.iter().map(|&i| v[i]).collect();
+        (core, wav)
+    }
+
+    /// Inverse of [`Stage::forward`]: scatter (core, wavelet) back into a
+    /// stage-input vector and apply Q̄ᵀ.
+    pub fn backward(&self, core: &[f64], wav: &[f64], scratch: &mut Vec<f64>) -> Vec<f64> {
+        debug_assert_eq!(core.len(), self.core_global.len());
+        debug_assert_eq!(wav.len(), self.wavelet_global.len());
+        let mut v = vec![0.0; self.n_in];
+        for (&g, &c) in self.core_global.iter().zip(core) {
+            v[g] = c;
+        }
+        for (&g, &w) in self.wavelet_global.iter().zip(wav) {
+            v[g] = w;
+        }
+        for b in &self.blocks {
+            apply_block(&b.q, &b.idx, &mut v, scratch, true);
+        }
+        v
+    }
+
+    /// Stored reals in this stage (Proposition 3/5 audits): rotations + D.
+    pub fn stored_reals(&self) -> usize {
+        self.blocks.iter().map(|b| b.q.stored_reals()).sum::<usize>() + self.dvals.len()
+    }
+
+    /// Structural invariant: blocks partition 0..n_in; core ∪ wavelet too.
+    pub fn check_valid(&self) -> bool {
+        let mut seen = vec![false; self.n_in];
+        for b in &self.blocks {
+            for &i in &b.idx {
+                if i >= self.n_in || seen[i] {
+                    return false;
+                }
+                seen[i] = true;
+            }
+        }
+        if !seen.iter().all(|&s| s) {
+            return false;
+        }
+        let mut seen2 = vec![false; self.n_in];
+        for &i in self.core_global.iter().chain(&self.wavelet_global) {
+            if i >= self.n_in || seen2[i] {
+                return false;
+            }
+            seen2[i] = true;
+        }
+        seen2.iter().all(|&s| s) && self.dvals.len() == self.wavelet_global.len()
+    }
+}
+
+/// Gather a block's subvector, apply the local rotation (or its transpose),
+/// scatter back. `scratch` avoids reallocation in the matvec hot loop.
+#[inline]
+fn apply_block(q: &QFactor, idx: &[usize], v: &mut [f64], scratch: &mut Vec<f64>, transpose: bool) {
+    match q {
+        QFactor::Identity => {}
+        _ => {
+            scratch.clear();
+            scratch.extend(idx.iter().map(|&i| v[i]));
+            if transpose {
+                q.apply_vec_t(scratch);
+            } else {
+                q.apply_vec(scratch);
+            }
+            for (&i, &s) in idx.iter().zip(scratch.iter()) {
+                v[i] = s;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::la::givens::{Givens, GivensSeq};
+    use crate::util::Rng;
+
+    fn demo_stage() -> Stage {
+        // n_in = 4, two blocks {0,2} and {1,3}, each with one rotation.
+        let mut s1 = GivensSeq::new();
+        s1.push(Givens::jacobi(0, 1, 2.0, 1.0, 1.0));
+        let mut s2 = GivensSeq::new();
+        s2.push(Givens::jacobi(0, 1, 1.0, -0.5, 3.0));
+        Stage {
+            n_in: 4,
+            blocks: vec![
+                BlockFactor { idx: vec![0, 2], q: QFactor::Givens(s1) },
+                BlockFactor { idx: vec![1, 3], q: QFactor::Givens(s2) },
+            ],
+            core_global: vec![0, 1],
+            wavelet_global: vec![2, 3],
+            dvals: vec![0.5, 0.25],
+        }
+    }
+
+    #[test]
+    fn forward_backward_roundtrip() {
+        let st = demo_stage();
+        assert!(st.check_valid());
+        let mut rng = Rng::new(1);
+        let x = rng.normal_vec(4);
+        let mut v = x.clone();
+        let mut scratch = Vec::new();
+        let (core, wav) = st.forward(&mut v, &mut scratch);
+        assert_eq!(core.len(), 2);
+        assert_eq!(wav.len(), 2);
+        let back = st.backward(&core, &wav, &mut scratch);
+        for i in 0..4 {
+            assert!((back[i] - x[i]).abs() < 1e-12, "i={i}");
+        }
+    }
+
+    #[test]
+    fn forward_preserves_norm() {
+        // Q̄ is orthogonal, so ‖(core, wav)‖ = ‖x‖.
+        let st = demo_stage();
+        let mut rng = Rng::new(2);
+        let x = rng.normal_vec(4);
+        let n0: f64 = x.iter().map(|v| v * v).sum();
+        let mut v = x;
+        let mut scratch = Vec::new();
+        let (core, wav) = st.forward(&mut v, &mut scratch);
+        let n1: f64 =
+            core.iter().map(|v| v * v).sum::<f64>() + wav.iter().map(|v| v * v).sum::<f64>();
+        assert!((n0 - n1).abs() < 1e-12);
+    }
+
+    #[test]
+    fn invalid_structures_detected() {
+        let mut st = demo_stage();
+        st.core_global = vec![0, 0]; // duplicate
+        assert!(!st.check_valid());
+        let mut st2 = demo_stage();
+        st2.blocks[0].idx = vec![0, 1]; // overlaps block 2
+        assert!(!st2.check_valid());
+        let mut st3 = demo_stage();
+        st3.dvals = vec![1.0]; // wrong length
+        assert!(!st3.check_valid());
+    }
+
+    #[test]
+    fn stored_reals_counts() {
+        let st = demo_stage();
+        // two Givens rotations (2 reals each) + 2 dvals
+        assert_eq!(st.stored_reals(), 6);
+    }
+}

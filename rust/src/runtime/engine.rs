@@ -1,0 +1,316 @@
+//! The XLA execution engine: an actor thread owning the PJRT CPU client
+//! and the compiled executables, plus a `Send + Sync` handle.
+//!
+//! Interchange contract (see `python/compile/aot.py` and
+//! `/opt/xla-example/README.md`):
+//! * artifacts are HLO **text**; `HloModuleProto::from_text_file` reassigns
+//!   instruction ids, avoiding the 64-bit-id proto incompatibility;
+//! * all exported functions were lowered with `return_tuple=True`, so
+//!   results are unwrapped with `to_tuple1`;
+//! * all shapes are fixed — the handle pads inputs (zero rows / identity
+//!   diagonal) and slices outputs back down.
+
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+
+use crate::error::{Error, Result};
+use crate::kernels::gram::TileEngine;
+use crate::la::dense::Mat;
+
+use super::Manifest;
+
+/// Requests served by the engine actor.
+enum Request {
+    /// RBF gram tile on padded blocks.
+    RbfTile { x: Mat, y: Mat, ell: f64, sf2: f64, resp: mpsc::Sender<Result<Mat>> },
+    /// G = AᵀA on a padded block.
+    Ata { a: Mat, resp: mpsc::Sender<Result<Mat>> },
+    /// α = (K + σ²I)⁻¹ y on a padded system.
+    CholSolve { k: Mat, y: Vec<f64>, sigma2: f64, resp: mpsc::Sender<Result<Vec<f64>>> },
+    Shutdown,
+}
+
+/// Thread-safe handle to the engine actor. Cloning is cheap.
+#[derive(Clone)]
+pub struct EngineHandle {
+    tx: Arc<Mutex<mpsc::Sender<Request>>>,
+    manifest: Arc<Manifest>,
+}
+
+/// The engine itself — spawn with [`XlaEngine::start`].
+pub struct XlaEngine {
+    handle: EngineHandle,
+    join: Option<std::thread::JoinHandle<()>>,
+}
+
+impl XlaEngine {
+    /// Load the manifest from `dir`, compile every artifact on a dedicated
+    /// PJRT thread, and return the engine. Fails fast if the client cannot
+    /// be created or any artifact fails to compile.
+    pub fn start(dir: &std::path::Path) -> Result<XlaEngine> {
+        let manifest = Arc::new(Manifest::load(dir)?);
+        manifest.check_files()?;
+        let (tx, rx) = mpsc::channel::<Request>();
+        let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
+        let m2 = Arc::clone(&manifest);
+        let join = std::thread::Builder::new()
+            .name("xla-engine".into())
+            .spawn(move || actor_main(m2, rx, ready_tx))
+            .map_err(|e| Error::Runtime(format!("spawn engine: {e}")))?;
+        // Wait for compilation to finish (or fail).
+        match ready_rx.recv() {
+            Ok(Ok(())) => {}
+            Ok(Err(e)) => return Err(e),
+            Err(_) => return Err(Error::Runtime("engine thread died during init".into())),
+        }
+        Ok(XlaEngine {
+            handle: EngineHandle { tx: Arc::new(Mutex::new(tx)), manifest },
+            join: Some(join),
+        })
+    }
+
+    pub fn handle(&self) -> EngineHandle {
+        self.handle.clone()
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.handle.manifest
+    }
+}
+
+impl Drop for XlaEngine {
+    fn drop(&mut self) {
+        if let Ok(tx) = self.handle.tx.lock() {
+            let _ = tx.send(Request::Shutdown);
+        }
+        if let Some(j) = self.join.take() {
+            let _ = j.join();
+        }
+    }
+}
+
+impl EngineHandle {
+    fn send(&self, req: Request) -> Result<()> {
+        self.tx
+            .lock()
+            .map_err(|_| Error::Runtime("engine mutex poisoned".into()))?
+            .send(req)
+            .map_err(|_| Error::Runtime("engine thread gone".into()))
+    }
+
+    /// RBF gram tile for (short) blocks — pads to the artifact shape and
+    /// slices the result.
+    pub fn rbf_tile(&self, xb: &Mat, yb: &Mat, ell: f64, sf2: f64) -> Result<Mat> {
+        let t = self.manifest.gram_tile;
+        let d = self.manifest.gram_dim;
+        if xb.rows > t || yb.rows > t || xb.cols > d {
+            return Err(Error::Runtime(format!(
+                "tile too large: {}x{} (max {t}x{d})",
+                xb.rows, xb.cols
+            )));
+        }
+        let xp = pad_to(xb, t, d);
+        let yp = pad_to(yb, t, d);
+        let (tx_resp, rx_resp) = mpsc::channel();
+        self.send(Request::RbfTile { x: xp, y: yp, ell, sf2, resp: tx_resp })?;
+        let full = rx_resp
+            .recv()
+            .map_err(|_| Error::Runtime("engine dropped response".into()))??;
+        Ok(full.block(0, xb.rows, 0, yb.rows))
+    }
+
+    /// G = AᵀA via the AOT artifact (pads with zeros — exact embedding).
+    pub fn ata(&self, a: &Mat) -> Result<Mat> {
+        let m = self.manifest.ata_m;
+        if a.rows > m || a.cols > m {
+            return Err(Error::Runtime(format!("ata block {}x{} > {m}", a.rows, a.cols)));
+        }
+        let ap = pad_to(a, m, m);
+        let (tx_resp, rx_resp) = mpsc::channel();
+        self.send(Request::Ata { a: ap, resp: tx_resp })?;
+        let full = rx_resp
+            .recv()
+            .map_err(|_| Error::Runtime("engine dropped response".into()))??;
+        Ok(full.block(0, a.cols, 0, a.cols))
+    }
+
+    /// α = (K + σ²I)⁻¹ y via the AOT artifact. K is padded with an
+    /// identity diagonal, which leaves the leading entries exact.
+    pub fn chol_solve(&self, k: &Mat, y: &[f64], sigma2: f64) -> Result<Vec<f64>> {
+        let n = self.manifest.chol_n;
+        if k.rows > n {
+            return Err(Error::Runtime(format!("chol_solve n={} > {n}", k.rows)));
+        }
+        let mut kp = Mat::eye(n);
+        kp.set_block(0, 0, k);
+        let mut yp = vec![0.0; n];
+        yp[..y.len()].copy_from_slice(y);
+        let (tx_resp, rx_resp) = mpsc::channel();
+        self.send(Request::CholSolve { k: kp, y: yp, sigma2, resp: tx_resp })?;
+        let full = rx_resp
+            .recv()
+            .map_err(|_| Error::Runtime("engine dropped response".into()))??;
+        Ok(full[..y.len()].to_vec())
+    }
+
+    pub fn gram_tile_size(&self) -> usize {
+        self.manifest.gram_tile
+    }
+
+    pub fn gram_max_dim(&self) -> usize {
+        self.manifest.gram_dim
+    }
+}
+
+impl TileEngine for EngineHandle {
+    fn tile(&self) -> usize {
+        self.manifest.gram_tile
+    }
+
+    fn max_dim(&self) -> usize {
+        self.manifest.gram_dim
+    }
+
+    fn rbf_tile(&self, xb: &Mat, yb: &Mat, lengthscale: f64, signal_var: f64) -> Mat {
+        match EngineHandle::rbf_tile(self, xb, yb, lengthscale, signal_var) {
+            Ok(m) => m,
+            Err(_) => crate::kernels::gram::rbf_tile_native(xb, yb, lengthscale, signal_var),
+        }
+    }
+}
+
+/// Zero-pad a matrix to (rows, cols).
+fn pad_to(a: &Mat, rows: usize, cols: usize) -> Mat {
+    let mut p = Mat::zeros(rows, cols);
+    p.set_block(0, 0, a);
+    p
+}
+
+// ---------------------------------------------------------------------------
+// Actor internals (the only code touching the xla crate).
+// ---------------------------------------------------------------------------
+
+struct Compiled {
+    gram: Option<xla::PjRtLoadedExecutable>,
+    ata: Option<xla::PjRtLoadedExecutable>,
+    chol: Option<xla::PjRtLoadedExecutable>,
+}
+
+fn actor_main(manifest: Arc<Manifest>, rx: mpsc::Receiver<Request>, ready: mpsc::Sender<Result<()>>) {
+    let setup = (|| -> Result<(xla::PjRtClient, Compiled)> {
+        let client = xla::PjRtClient::cpu().map_err(|e| Error::Runtime(format!("pjrt: {e}")))?;
+        let compile = |name: &str| -> Result<Option<xla::PjRtLoadedExecutable>> {
+            match manifest.artifact(name) {
+                None => Ok(None),
+                Some(info) => {
+                    let proto = xla::HloModuleProto::from_text_file(&info.file)
+                        .map_err(|e| Error::Runtime(format!("parse {name}: {e}")))?;
+                    let comp = xla::XlaComputation::from_proto(&proto);
+                    let exe = client
+                        .compile(&comp)
+                        .map_err(|e| Error::Runtime(format!("compile {name}: {e}")))?;
+                    Ok(Some(exe))
+                }
+            }
+        };
+        let compiled =
+            Compiled { gram: compile("gram_tile")?, ata: compile("ata")?, chol: compile("chol_solve")? };
+        Ok((client, compiled))
+    })();
+
+    let (_client, compiled) = match setup {
+        Ok(v) => {
+            let _ = ready.send(Ok(()));
+            v
+        }
+        Err(e) => {
+            let _ = ready.send(Err(e));
+            return;
+        }
+    };
+
+    while let Ok(req) = rx.recv() {
+        match req {
+            Request::Shutdown => break,
+            Request::RbfTile { x, y, ell, sf2, resp } => {
+                let out = run_gram(&compiled, &x, &y, ell, sf2);
+                let _ = resp.send(out);
+            }
+            Request::Ata { a, resp } => {
+                let out = run_ata(&compiled, &a);
+                let _ = resp.send(out);
+            }
+            Request::CholSolve { k, y, sigma2, resp } => {
+                let out = run_chol(&compiled, &k, &y, sigma2);
+                let _ = resp.send(out);
+            }
+        }
+    }
+}
+
+fn mat_literal(m: &Mat) -> Result<xla::Literal> {
+    xla::Literal::vec1(&m.data)
+        .reshape(&[m.rows as i64, m.cols as i64])
+        .map_err(|e| Error::Runtime(format!("literal: {e}")))
+}
+
+fn run1(exe: &xla::PjRtLoadedExecutable, args: &[xla::Literal]) -> Result<xla::Literal> {
+    let result = exe
+        .execute::<xla::Literal>(args)
+        .map_err(|e| Error::Runtime(format!("execute: {e}")))?;
+    let lit = result[0][0]
+        .to_literal_sync()
+        .map_err(|e| Error::Runtime(format!("to_literal: {e}")))?;
+    lit.to_tuple1().map_err(|e| Error::Runtime(format!("tuple: {e}")))
+}
+
+fn run_gram(c: &Compiled, x: &Mat, y: &Mat, ell: f64, sf2: f64) -> Result<Mat> {
+    let exe = c.gram.as_ref().ok_or_else(|| Error::Runtime("gram_tile not loaded".into()))?;
+    let t = x.rows;
+    let args = vec![
+        mat_literal(x)?,
+        mat_literal(y)?,
+        xla::Literal::vec1(&[ell]),
+        xla::Literal::vec1(&[sf2]),
+    ];
+    let out = run1(exe, &args)?;
+    let data = out.to_vec::<f64>().map_err(|e| Error::Runtime(format!("to_vec: {e}")))?;
+    Ok(Mat::from_vec(t, t, data))
+}
+
+fn run_ata(c: &Compiled, a: &Mat) -> Result<Mat> {
+    let exe = c.ata.as_ref().ok_or_else(|| Error::Runtime("ata not loaded".into()))?;
+    let m = a.rows;
+    let out = run1(exe, &[mat_literal(a)?])?;
+    let data = out.to_vec::<f64>().map_err(|e| Error::Runtime(format!("to_vec: {e}")))?;
+    Ok(Mat::from_vec(m, m, data))
+}
+
+fn run_chol(c: &Compiled, k: &Mat, y: &[f64], sigma2: f64) -> Result<Vec<f64>> {
+    let exe = c.chol.as_ref().ok_or_else(|| Error::Runtime("chol_solve not loaded".into()))?;
+    let args = vec![mat_literal(k)?, xla::Literal::vec1(y), xla::Literal::vec1(&[sigma2])];
+    let out = run1(exe, &args)?;
+    out.to_vec::<f64>().map_err(|e| Error::Runtime(format!("to_vec: {e}")))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pad_embeds_exactly() {
+        let a = Mat::from_rows(&[&[1.0, 2.0], &[3.0, 4.0]]);
+        let p = pad_to(&a, 4, 3);
+        assert_eq!(p.rows, 4);
+        assert_eq!(p.cols, 3);
+        assert_eq!(p[(1, 1)], 4.0);
+        assert_eq!(p[(2, 2)], 0.0);
+        assert_eq!(p.block(0, 2, 0, 2), a);
+    }
+
+    #[test]
+    fn start_fails_cleanly_without_artifacts() {
+        let e = XlaEngine::start(std::path::Path::new("/definitely/not/here"));
+        assert!(e.is_err());
+    }
+}

@@ -1,0 +1,146 @@
+//! PJRT runtime — loads the AOT artifacts produced by `python/compile/aot.py`
+//! (HLO text + `manifest.json`) and executes them from the Rust hot path.
+//!
+//! Python is build-time only: after `make artifacts`, the rust binary is
+//! self-contained. The PJRT client object is not `Send` (it wraps an `Rc`
+//! C++ handle), so [`engine::XlaEngine`] runs on a dedicated actor thread
+//! and hands out a cheap, thread-safe [`engine::EngineHandle`].
+
+pub mod engine;
+
+use std::path::{Path, PathBuf};
+
+use crate::error::{Error, Result};
+use crate::util::json::Json;
+
+/// One AOT-compiled artifact entry.
+#[derive(Clone, Debug)]
+pub struct ArtifactInfo {
+    pub name: String,
+    pub file: PathBuf,
+    pub n_params: usize,
+    pub sha256: String,
+}
+
+/// Parsed `artifacts/manifest.json`.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub artifacts: Vec<ArtifactInfo>,
+    /// Fixed gram-tile edge (points per block).
+    pub gram_tile: usize,
+    /// Fixed (padded) feature dimension of the gram tile.
+    pub gram_dim: usize,
+    /// Fixed AᵀA block size.
+    pub ata_m: usize,
+    /// Fixed Cholesky-solve size.
+    pub chol_n: usize,
+}
+
+impl Manifest {
+    /// Load and validate `<dir>/manifest.json`.
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let text = std::fs::read_to_string(dir.join("manifest.json"))?;
+        Self::parse(dir, &text)
+    }
+
+    /// Parse manifest text (separated out for tests).
+    pub fn parse(dir: &Path, text: &str) -> Result<Manifest> {
+        let v = Json::parse(text)?;
+        let arts = v
+            .get("artifacts")
+            .and_then(|a| a.as_obj())
+            .ok_or_else(|| Error::Runtime("manifest: missing artifacts".into()))?;
+        let mut artifacts = Vec::new();
+        for (name, meta) in arts {
+            let file = meta
+                .str_field("file")
+                .ok_or_else(|| Error::Runtime(format!("manifest: {name} missing file")))?;
+            artifacts.push(ArtifactInfo {
+                name: name.clone(),
+                file: dir.join(file),
+                n_params: meta.usize_field("n_params").unwrap_or(0),
+                sha256: meta.str_field("sha256").unwrap_or("").to_string(),
+            });
+        }
+        let shapes = v.get("shapes");
+        let shape_of = |art: &str, field: &str, default: usize| -> usize {
+            shapes
+                .and_then(|s| s.get(art))
+                .and_then(|a| a.usize_field(field))
+                .unwrap_or(default)
+        };
+        Ok(Manifest {
+            dir: dir.to_path_buf(),
+            artifacts,
+            gram_tile: shape_of("gram_tile", "tile", 128),
+            gram_dim: shape_of("gram_tile", "dim", 32),
+            ata_m: shape_of("ata", "m", 256),
+            chol_n: shape_of("chol_solve", "n", 512),
+        })
+    }
+
+    pub fn artifact(&self, name: &str) -> Option<&ArtifactInfo> {
+        self.artifacts.iter().find(|a| a.name == name)
+    }
+
+    /// Verify every artifact file exists on disk.
+    pub fn check_files(&self) -> Result<()> {
+        for a in &self.artifacts {
+            if !a.file.exists() {
+                return Err(Error::Runtime(format!(
+                    "artifact {} missing: {}",
+                    a.name,
+                    a.file.display()
+                )));
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Default artifacts directory: `$MKA_GP_ARTIFACTS` or `./artifacts`.
+pub fn default_artifacts_dir() -> PathBuf {
+    std::env::var("MKA_GP_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| PathBuf::from("artifacts"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "artifacts": {
+        "gram_tile": {"file": "gram_tile.hlo.txt", "n_params": 4, "sha256": "ab", "bytes": 10},
+        "ata": {"file": "ata.hlo.txt", "n_params": 1, "sha256": "cd", "bytes": 10}
+      },
+      "dtype": "f64",
+      "shapes": {"gram_tile": {"tile": 128, "dim": 32}, "ata": {"m": 256}, "chol_solve": {"n": 512}}
+    }"#;
+
+    #[test]
+    fn parse_manifest() {
+        let m = Manifest::parse(Path::new("/tmp/arts"), SAMPLE).unwrap();
+        assert_eq!(m.artifacts.len(), 2);
+        assert_eq!(m.gram_tile, 128);
+        assert_eq!(m.gram_dim, 32);
+        assert_eq!(m.ata_m, 256);
+        let g = m.artifact("gram_tile").unwrap();
+        assert_eq!(g.n_params, 4);
+        assert!(g.file.ends_with("gram_tile.hlo.txt"));
+        assert!(m.artifact("nope").is_none());
+    }
+
+    #[test]
+    fn missing_artifacts_key_rejected() {
+        assert!(Manifest::parse(Path::new("/tmp"), r#"{"dtype": "f64"}"#).is_err());
+        assert!(Manifest::parse(Path::new("/tmp"), "not json").is_err());
+    }
+
+    #[test]
+    fn check_files_detects_missing() {
+        let m = Manifest::parse(Path::new("/nonexistent-dir-xyz"), SAMPLE).unwrap();
+        assert!(m.check_files().is_err());
+    }
+}

@@ -1,0 +1,134 @@
+//! A small command-line argument parser (no `clap` in the offline build).
+//!
+//! Supports `--flag`, `--key value`, `--key=value`, positional arguments and
+//! subcommands. Used by the `mka-gp` binary, the examples and the benches.
+
+use std::collections::BTreeMap;
+
+/// Parsed command line: subcommand (optional), options, flags, positionals.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    opts: BTreeMap<String, String>,
+    flags: Vec<String>,
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse from `std::env::args()` (skipping argv[0]).
+    pub fn from_env(with_subcommand: bool) -> Args {
+        let argv: Vec<String> = std::env::args().skip(1).collect();
+        Self::parse(&argv, with_subcommand)
+    }
+
+    /// Parse from an explicit list.
+    ///
+    /// If `with_subcommand` is true, the first non-option token is treated as
+    /// the subcommand name.
+    pub fn parse<S: AsRef<str>>(argv: &[S], with_subcommand: bool) -> Args {
+        let mut out = Args::default();
+        let mut i = 0;
+        while i < argv.len() {
+            let a = argv[i].as_ref();
+            if let Some(body) = a.strip_prefix("--") {
+                if let Some(eq) = body.find('=') {
+                    out.opts.insert(body[..eq].to_string(), body[eq + 1..].to_string());
+                } else if i + 1 < argv.len() && !argv[i + 1].as_ref().starts_with("--") {
+                    out.opts.insert(body.to_string(), argv[i + 1].as_ref().to_string());
+                    i += 1;
+                } else {
+                    out.flags.push(body.to_string());
+                }
+            } else if with_subcommand && out.subcommand.is_none() && out.positional.is_empty() {
+                out.subcommand = Some(a.to_string());
+            } else {
+                out.positional.push(a.to_string());
+            }
+            i += 1;
+        }
+        out
+    }
+
+    pub fn has_flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.opts.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    pub fn get_usize(&self, name: &str, default: usize) -> usize {
+        self.get(name).and_then(|s| s.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn get_u64(&self, name: &str, default: u64) -> u64 {
+        self.get(name).and_then(|s| s.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn get_f64(&self, name: &str, default: f64) -> f64 {
+        self.get(name).and_then(|s| s.parse().ok()).unwrap_or(default)
+    }
+
+    /// Comma-separated list of usizes, e.g. `--sizes 512,1024,2048`.
+    pub fn get_usize_list(&self, name: &str, default: &[usize]) -> Vec<usize> {
+        match self.get(name) {
+            Some(s) => s
+                .split(',')
+                .filter(|t| !t.is_empty())
+                .filter_map(|t| t.trim().parse().ok())
+                .collect(),
+            None => default.to_vec(),
+        }
+    }
+
+    /// All `--key value` options (for config layering).
+    pub fn options(&self) -> &BTreeMap<String, String> {
+        &self.opts
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_mixed() {
+        let a = Args::parse(
+            &["serve", "--port", "7070", "--verbose", "--name=gp", "file.csv"],
+            true,
+        );
+        assert_eq!(a.subcommand.as_deref(), Some("serve"));
+        assert_eq!(a.get("port"), Some("7070"));
+        assert_eq!(a.get("name"), Some("gp"));
+        assert!(a.has_flag("verbose"));
+        assert_eq!(a.positional, vec!["file.csv"]);
+    }
+
+    #[test]
+    fn typed_getters() {
+        let a = Args::parse(&["--n", "100", "--lr", "0.5", "--sizes", "1,2,3"], false);
+        assert_eq!(a.get_usize("n", 0), 100);
+        assert_eq!(a.get_f64("lr", 0.0), 0.5);
+        assert_eq!(a.get_usize("missing", 7), 7);
+        assert_eq!(a.get_usize_list("sizes", &[]), vec![1, 2, 3]);
+        assert_eq!(a.get_usize_list("nope", &[4]), vec![4]);
+    }
+
+    #[test]
+    fn flag_at_end() {
+        let a = Args::parse(&["--x", "1", "--dry-run"], false);
+        assert!(a.has_flag("dry-run"));
+        assert_eq!(a.get("x"), Some("1"));
+    }
+
+    #[test]
+    fn no_subcommand_mode() {
+        let a = Args::parse(&["pos1", "--k", "v"], false);
+        assert_eq!(a.subcommand, None);
+        assert_eq!(a.positional, vec!["pos1"]);
+    }
+}

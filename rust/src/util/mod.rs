@@ -1,0 +1,12 @@
+//! General-purpose substrates built from scratch for the offline environment:
+//! RNG (no `rand`), JSON (no `serde`), CLI parsing (no `clap`), timing.
+
+pub mod args;
+pub mod json;
+pub mod rng;
+pub mod timer;
+
+pub use args::Args;
+pub use json::Json;
+pub use rng::Rng;
+pub use timer::{fmt_duration, timed, Timer};

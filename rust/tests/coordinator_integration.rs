@@ -1,0 +1,187 @@
+//! Integration tests for the serving coordinator: full TCP round trips,
+//! async job lifecycle, batched prediction correctness vs direct calls.
+
+use std::sync::Arc;
+
+use mka_gp::coordinator::{Client, JobState, Router, Server, ServiceConfig};
+use mka_gp::data::synth::{gp_dataset, SynthSpec};
+use mka_gp::gp::GpModel;
+use mka_gp::util::Json;
+
+fn boot() -> (Server, Arc<Router>, String) {
+    let cfg = ServiceConfig { port: 0, n_workers: 2, batch_window_ms: 2, ..Default::default() };
+    let router = Arc::new(Router::new(cfg));
+    let server = Server::start(Arc::clone(&router), "127.0.0.1", 0).unwrap();
+    let addr = format!("{}", server.addr());
+    (server, router, addr)
+}
+
+fn fit_json(model: &str, method: &str, data: &mka_gp::data::Dataset, k: usize, is_async: bool) -> Json {
+    let x: Vec<Json> = (0..data.n()).map(|i| Json::from_f64_slice(data.x.row(i))).collect();
+    Json::obj()
+        .with("op", Json::Str("fit".into()))
+        .with("model", Json::Str(model.into()))
+        .with("method", Json::Str(method.into()))
+        .with("x", Json::Arr(x))
+        .with("y", Json::from_f64_slice(&data.y))
+        .with(
+            "params",
+            Json::obj()
+                .with("lengthscale", Json::Num(0.8))
+                .with("sigma2", Json::Num(0.1))
+                .with("k", Json::Num(k as f64)),
+        )
+        .with("async", Json::Bool(is_async))
+}
+
+#[test]
+fn full_lifecycle_over_tcp() {
+    let (_server, router, addr) = boot();
+    let data = gp_dataset(&SynthSpec::named("life", 150, 2), 1);
+    let (tr, te) = data.split(0.9, 1);
+    let mut c = Client::connect(&addr).unwrap();
+
+    // sync fit
+    let resp = c.call(&fit_json("m-sync", "sor", &tr, 12, false)).unwrap();
+    assert_eq!(resp.get("ok"), Some(&Json::Bool(true)), "{resp:?}");
+    assert!(resp.num_field("fit_secs").unwrap() >= 0.0);
+
+    // models listed
+    let resp = c.call(&Json::obj().with("op", Json::Str("models".into()))).unwrap();
+    let names: Vec<&str> =
+        resp.get("models").unwrap().as_arr().unwrap().iter().filter_map(|v| v.as_str()).collect();
+    assert!(names.contains(&"m-sync"));
+
+    // predict over TCP equals direct predict
+    let x: Vec<Json> = (0..te.n()).map(|i| Json::from_f64_slice(te.x.row(i))).collect();
+    let resp = c
+        .call(
+            &Json::obj()
+                .with("op", Json::Str("predict".into()))
+                .with("model", Json::Str("m-sync".into()))
+                .with("x", Json::Arr(x)),
+        )
+        .unwrap();
+    assert_eq!(resp.get("ok"), Some(&Json::Bool(true)));
+    let tcp_mean = resp.get("mean").unwrap().f64_array().unwrap();
+    let direct = router.registry.get("m-sync").unwrap().predict(&te.x);
+    assert_eq!(tcp_mean.len(), direct.mean.len());
+    for (a, b) in tcp_mean.iter().zip(&direct.mean) {
+        assert!((a - b).abs() < 1e-9);
+    }
+
+    // drop model
+    let resp = c
+        .call(
+            &Json::obj()
+                .with("op", Json::Str("drop_model".into()))
+                .with("model", Json::Str("m-sync".into())),
+        )
+        .unwrap();
+    assert_eq!(resp.get("dropped"), Some(&Json::Bool(true)));
+    assert!(router.registry.get("m-sync").is_none());
+}
+
+#[test]
+fn async_fit_lifecycle() {
+    let (_server, router, addr) = boot();
+    let data = gp_dataset(&SynthSpec::named("async", 120, 2), 2);
+    let mut c = Client::connect(&addr).unwrap();
+    let resp = c.call(&fit_json("m-async", "mka", &data, 12, true)).unwrap();
+    let job = resp.usize_field("job_id").expect("job_id") as u64;
+
+    // poll until done
+    let mut done = false;
+    for _ in 0..300 {
+        let resp = c
+            .call(&Json::obj().with("op", Json::Str("job".into())).with("job_id", Json::Num(job as f64)))
+            .unwrap();
+        match resp.str_field("state") {
+            Some("done") => {
+                done = true;
+                break;
+            }
+            Some("failed") => panic!("fit failed: {resp:?}"),
+            _ => std::thread::sleep(std::time::Duration::from_millis(20)),
+        }
+    }
+    assert!(done, "job never finished");
+    assert!(matches!(router.jobs.get(job).unwrap().1, JobState::Done { .. }));
+    assert!(router.registry.get("m-async").is_some());
+}
+
+#[test]
+fn batching_counts_requests() {
+    let (_server, router, addr) = boot();
+    let data = gp_dataset(&SynthSpec::named("bat", 130, 2), 3);
+    let mut c = Client::connect(&addr).unwrap();
+    c.call(&fit_json("m-b", "sor", &data, 10, false)).unwrap();
+
+    // several concurrent single-point predictions
+    let handles: Vec<_> = (0..6)
+        .map(|i| {
+            let addr = addr.clone();
+            let row = data.x.row(i).to_vec();
+            std::thread::spawn(move || {
+                let mut c = Client::connect(&addr).unwrap();
+                let req = Json::obj()
+                    .with("op", Json::Str("predict".into()))
+                    .with("model", Json::Str("m-b".into()))
+                    .with("x", Json::Arr(vec![Json::from_f64_slice(&row)]));
+                c.call(&req).unwrap()
+            })
+        })
+        .collect();
+    for h in handles {
+        assert_eq!(h.join().unwrap().get("ok"), Some(&Json::Bool(true)));
+    }
+    assert_eq!(router.metrics.counter("predictions"), 6);
+    assert!(router.metrics.counter("batches") >= 1);
+}
+
+#[test]
+fn protocol_error_paths() {
+    let (_server, _router, addr) = boot();
+    let mut c = Client::connect(&addr).unwrap();
+    // unknown op
+    let resp = c.call(&Json::obj().with("op", Json::Str("bogus".into()))).unwrap();
+    assert_eq!(resp.get("ok"), Some(&Json::Bool(false)));
+    // fit with mismatched shapes
+    let bad = Json::parse(
+        r#"{"op":"fit","model":"m","method":"sor","x":[[1.0,2.0]],"y":[1.0,2.0,3.0]}"#,
+    )
+    .unwrap();
+    let resp = c.call(&bad).unwrap();
+    assert_eq!(resp.get("ok"), Some(&Json::Bool(false)));
+    // predict against unknown model
+    let resp = c
+        .call(
+            &Json::obj()
+                .with("op", Json::Str("predict".into()))
+                .with("model", Json::Str("ghost".into()))
+                .with("x", Json::Arr(vec![Json::from_f64_slice(&[1.0])])),
+        )
+        .unwrap();
+    assert_eq!(resp.get("ok"), Some(&Json::Bool(false)));
+    // metrics include the error count
+    let resp = c.call(&Json::obj().with("op", Json::Str("metrics".into()))).unwrap();
+    let errors = resp.get("counters").and_then(|x| x.num_field("errors")).unwrap_or(0.0);
+    assert!(errors >= 3.0, "errors counter {errors}");
+}
+
+#[test]
+fn config_layering_env_and_map() {
+    let mut cfg = ServiceConfig::default();
+    std::env::set_var("MKA_GP_PORT", "9191");
+    std::env::set_var("MKA_GP_COMPRESSOR", "evd");
+    cfg.apply_env().unwrap();
+    std::env::remove_var("MKA_GP_PORT");
+    std::env::remove_var("MKA_GP_COMPRESSOR");
+    assert_eq!(cfg.port, 9191);
+    assert_eq!(cfg.compressor, "evd");
+    // CLI-style overrides win
+    let mut kv = std::collections::BTreeMap::new();
+    kv.insert("port".to_string(), "9009".to_string());
+    cfg.apply(&kv).unwrap();
+    assert_eq!(cfg.port, 9009);
+}

@@ -1,0 +1,154 @@
+//! Integration tests across the GP stack: all six methods of the paper's
+//! evaluation on catalog datasets, checked for the paper's qualitative
+//! ordering and for metric sanity.
+
+use mka_gp::data::synth::{gp_dataset, snelson1d, table1_k, table1_specs, SynthSpec};
+use mka_gp::experiments::methods::{run_method, Method};
+use mka_gp::experiments::{snelson, sweep};
+use mka_gp::gp::cv::{default_grid, grid_search, HyperParams};
+use mka_gp::gp::full::FullGp;
+use mka_gp::gp::GpModel;
+use mka_gp::kernels::RbfKernel;
+
+#[test]
+fn all_six_methods_on_all_catalog_datasets() {
+    // Subsampled catalog: every method must produce finite, non-degenerate
+    // predictions on every dataset geometry (n, d) of Table 1.
+    let hp = HyperParams { lengthscale: 0.8, sigma2: 0.1 };
+    for spec in table1_specs() {
+        let data = gp_dataset(&spec, 11).subsample(220, 1);
+        let (tr, te) = data.split(0.9, 2);
+        let k = table1_k(&spec.name).min(tr.n() / 4);
+        for m in Method::ALL {
+            let r = run_method(m, &tr, &te, hp, k, 3)
+                .unwrap_or_else(|e| panic!("{m:?} on {}: {e}", spec.name));
+            assert!(
+                r.smse.is_finite() && r.smse < 3.0,
+                "{m:?} on {}: smse {}",
+                spec.name,
+                r.smse
+            );
+        }
+    }
+}
+
+#[test]
+fn paper_ordering_on_broad_spectrum_data() {
+    // The Table-1 shape: Full best, MKA closest to Full among
+    // approximations, averaged over a few splits.
+    let spec = SynthSpec { ell_local: 0.4, local_weight: 0.55, ..SynthSpec::named("ord", 450, 3) };
+    let data = gp_dataset(&spec, 21);
+    let hp = HyperParams { lengthscale: 0.45, sigma2: 0.1 };
+    let k = 16;
+    let mut sums = std::collections::BTreeMap::new();
+    for rep in 0..3u64 {
+        let (tr, te) = data.split(0.9, rep);
+        for m in Method::ALL {
+            if let Ok(r) = run_method(m, &tr, &te, hp, k, rep) {
+                *sums.entry(m.label()).or_insert(0.0) += r.smse / 3.0;
+            }
+        }
+    }
+    let get = |m: &str| *sums.get(m).unwrap_or(&f64::INFINITY);
+    let full = get("Full");
+    let mka = get("MKA");
+    let low_rank_best = get("SOR").min(get("FITC")).min(get("PITC"));
+    assert!(full <= mka + 0.15, "Full {full} should lead MKA {mka}");
+    assert!(
+        mka < low_rank_best + 0.05,
+        "MKA {mka} should beat/track best low-rank {low_rank_best} (sums: {sums:?})"
+    );
+}
+
+#[test]
+fn cv_then_fit_pipeline() {
+    // The §5 protocol end to end: CV grid → best hp → final fit → sane SMSE.
+    let data = gp_dataset(&SynthSpec::named("cvp", 240, 2), 31);
+    let (tr, te) = data.split(0.9, 1);
+    let grid = default_grid(2);
+    let out = grid_search(&tr, 3, &grid, 5, |t, vx, hp| {
+        let gp = FullGp::fit(t, &RbfKernel::new(hp.lengthscale), hp.sigma2).ok()?;
+        Some(gp.predict(vx).mean)
+    });
+    assert!(out.best_score < 1.0, "CV best {}", out.best_score);
+    let model = FullGp::fit(&tr, &RbfKernel::new(out.best.lengthscale), out.best.sigma2).unwrap();
+    let pred = model.predict(&te.x);
+    let e = mka_gp::gp::metrics::smse(&te.y, &pred.mean);
+    assert!(e < 1.0, "test smse {e}");
+}
+
+#[test]
+fn snelson_figure_shape() {
+    // Figure 1: MKA's deviation from Full must be the smallest.
+    let hp = HyperParams { lengthscale: 0.5, sigma2: 0.01 };
+    let (_d, curves) = snelson::run(180, 10, 150, hp, &Method::ALL, 3);
+    let dev = snelson::deviation_from_full(&curves);
+    let mka = dev.iter().find(|(m, _)| *m == Method::Mka).unwrap().1;
+    for (m, d) in &dev {
+        if *m != Method::Mka {
+            assert!(mka <= d + 0.03, "MKA dev {mka} vs {m:?} {d}");
+        }
+    }
+}
+
+#[test]
+fn snelson_data_reproducible() {
+    let a = snelson1d(100, 9);
+    let b = snelson1d(100, 9);
+    assert_eq!(a.y, b.y);
+}
+
+#[test]
+fn figure2_flatness_shape() {
+    // MKA must degrade less than SoR when k shrinks (averaged over seeds).
+    let spec = SynthSpec { ell_local: 0.4, local_weight: 0.5, ..SynthSpec::named("flat", 400, 3) };
+    let data = gp_dataset(&spec, 41);
+    let hp = HyperParams { lengthscale: 0.45, sigma2: 0.1 };
+    let mut sor_gap = 0.0;
+    let mut mka_gap = 0.0;
+    for seed in 0..2u64 {
+        let pts = sweep::sweep(&data, &[8, 64], hp, &[Method::Sor, Method::Mka], seed);
+        let at = |m: Method, k: usize| {
+            pts.iter().find(|p| p.method == m && p.k == k).unwrap().smse
+        };
+        sor_gap += at(Method::Sor, 8) - at(Method::Sor, 64);
+        mka_gap += at(Method::Mka, 8) - at(Method::Mka, 64);
+    }
+    assert!(
+        mka_gap <= sor_gap + 0.1,
+        "MKA gap {mka_gap} should be flatter than SoR gap {sor_gap}"
+    );
+}
+
+#[test]
+fn variance_calibration_on_heldout() {
+    // Predictive z-scores (y−μ)/σ must have roughly unit scale for the
+    // calibrated methods (Full, MKA).
+    let data = gp_dataset(&SynthSpec::named("cal", 300, 2), 51);
+    let (tr, te) = data.split(0.9, 1);
+    let kern = RbfKernel::new(0.5);
+    for (name, pred) in [
+        ("full", FullGp::fit(&tr, &kern, 0.1).unwrap().predict(&te.x)),
+        (
+            "mka",
+            mka_gp::gp::mka_gp::MkaGp::fit(
+                &tr,
+                &kern,
+                0.1,
+                &mka_gp::mka::MkaConfig { d_core: 32, block_size: 80, ..Default::default() },
+            )
+            .unwrap()
+            .predict(&te.x),
+        ),
+    ] {
+        let z2: f64 = te
+            .y
+            .iter()
+            .zip(&pred.mean)
+            .zip(&pred.var)
+            .map(|((y, m), v)| (y - m) * (y - m) / v.max(1e-12))
+            .sum::<f64>()
+            / te.n() as f64;
+        assert!((0.1..10.0).contains(&z2), "{name}: mean squared z-score {z2}");
+    }
+}

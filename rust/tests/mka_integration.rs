@@ -1,0 +1,153 @@
+//! Integration tests for the MKA pipeline: multi-stage factorizations on
+//! realistic kernel matrices, checked against dense ground truth.
+
+use mka_gp::cluster::ClusterMethod;
+use mka_gp::compress::CompressorKind;
+use mka_gp::data::synth::{gp_dataset, SynthSpec};
+use mka_gp::kernels::{Kernel, RbfKernel};
+use mka_gp::la::{Chol, Mat, SymEig};
+use mka_gp::mka::{factorize, MkaConfig};
+use mka_gp::util::Rng;
+
+fn kernel_system(n: usize, seed: u64) -> (Mat, Mat) {
+    let data = gp_dataset(&SynthSpec::named("it", n, 3), seed);
+    let mut k = RbfKernel::new(0.7).gram_sym(&data.x);
+    k.add_diag(0.1);
+    (k, data.x)
+}
+
+#[test]
+fn deep_factorization_reaches_small_core() {
+    let (k, x) = kernel_system(512, 1);
+    let cfg = MkaConfig { d_core: 16, block_size: 64, ..MkaConfig::default() };
+    let f = factorize(&k, Some(&x), &cfg).unwrap();
+    assert!(f.n_stages() >= 4, "expected several stages, got {}", f.n_stages());
+    assert!(f.d_core() <= 32);
+    assert!(f.check_valid());
+    // heavy compression: far fewer stored reals than dense
+    assert!(f.stored_reals() * 10 < 512 * 512);
+}
+
+#[test]
+fn solve_agrees_with_cholesky_within_approximation() {
+    // K̃⁻¹b is the exact inverse of the approximate operator; compare it
+    // with the true K⁻¹b — the angle between them must be small when the
+    // approximation is good (gentle compression).
+    let (k, x) = kernel_system(256, 2);
+    let cfg = MkaConfig { d_core: 128, block_size: 128, gamma: 0.7, ..MkaConfig::default() };
+    let f = factorize(&k, Some(&x), &cfg).unwrap();
+    let chol = Chol::new(&k).unwrap();
+    let mut rng = Rng::new(3);
+    let b = rng.normal_vec(256);
+    let exact = chol.solve(&b);
+    let approx = f.solve(&b).unwrap();
+    let dot: f64 = exact.iter().zip(&approx).map(|(a, b)| a * b).sum();
+    let ne: f64 = exact.iter().map(|v| v * v).sum::<f64>().sqrt();
+    let na: f64 = approx.iter().map(|v| v * v).sum::<f64>().sqrt();
+    let cosine = dot / (ne * na);
+    assert!(cosine > 0.9, "cosine(K̃⁻¹b, K⁻¹b) = {cosine}");
+}
+
+#[test]
+fn error_decreases_with_d_core() {
+    let (k, x) = kernel_system(300, 4);
+    let rel = |d_core: usize| {
+        let cfg = MkaConfig { d_core, block_size: 75, ..MkaConfig::default() };
+        let f = factorize(&k, Some(&x), &cfg).unwrap();
+        f.to_dense().sub(&k).frob_norm() / k.frob_norm()
+    };
+    let e8 = rel(8);
+    let e64 = rel(64);
+    let e150 = rel(150);
+    assert!(e64 <= e8 + 0.02, "e64={e64} e8={e8}");
+    assert!(e150 <= e64 + 0.02, "e150={e150} e64={e64}");
+    assert!(e150 < 0.2, "e150={e150}");
+}
+
+#[test]
+fn logdet_tracks_dense_logdet() {
+    let (k, x) = kernel_system(200, 5);
+    let exact = Chol::new(&k).unwrap().logdet();
+    // Gentle compression tracks closely; aggressive compression stays in
+    // the right ballpark (truncation replaces small-eigenvalue directions
+    // with their larger diagonal values, biasing logdet upward).
+    let cfg_gentle =
+        MkaConfig { d_core: 128, block_size: 100, gamma: 0.7, ..MkaConfig::default() };
+    let approx_gentle = factorize(&k, Some(&x), &cfg_gentle).unwrap().logdet().unwrap();
+    assert!(
+        (exact - approx_gentle).abs() < 0.15 * exact.abs(),
+        "gentle: exact {exact} vs approx {approx_gentle}"
+    );
+    let cfg = MkaConfig { d_core: 64, block_size: 64, ..MkaConfig::default() };
+    let approx = factorize(&k, Some(&x), &cfg).unwrap().logdet().unwrap();
+    assert!(
+        (exact - approx).abs() < 0.30 * exact.abs(),
+        "aggressive: exact {exact} vs approx {approx}"
+    );
+}
+
+#[test]
+fn every_compressor_and_clustering_combination_works() {
+    let (k, x) = kernel_system(150, 6);
+    for comp in [CompressorKind::Mmf, CompressorKind::Spca, CompressorKind::Evd] {
+        for cl in [ClusterMethod::Bisect, ClusterMethod::KMeans, ClusterMethod::Affinity] {
+            let cfg = MkaConfig {
+                d_core: 24,
+                block_size: 50,
+                compressor: comp,
+                cluster_method: cl,
+                ..MkaConfig::default()
+            };
+            let f = factorize(&k, Some(&x), &cfg)
+                .unwrap_or_else(|e| panic!("{comp:?}/{cl:?}: {e}"));
+            assert!(f.check_valid(), "{comp:?}/{cl:?}");
+            let rel = f.to_dense().sub(&k).frob_norm() / k.frob_norm();
+            assert!(rel < 0.5, "{comp:?}/{cl:?}: rel {rel}");
+        }
+    }
+}
+
+#[test]
+fn multithreaded_matches_single_threaded() {
+    let (k, x) = kernel_system(300, 7);
+    let f1 = factorize(
+        &k,
+        Some(&x),
+        &MkaConfig { d_core: 32, block_size: 60, n_threads: 1, ..MkaConfig::default() },
+    )
+    .unwrap();
+    let f4 = factorize(
+        &k,
+        Some(&x),
+        &MkaConfig { d_core: 32, block_size: 60, n_threads: 4, ..MkaConfig::default() },
+    )
+    .unwrap();
+    // Thread count must not change the result (determinism).
+    let d1 = f1.to_dense();
+    let d4 = f4.to_dense();
+    assert!(d1.sub(&d4).max_abs() < 1e-12);
+}
+
+#[test]
+fn psd_preserved_even_with_tiny_noise() {
+    // Near-singular kernel (tiny σ²): Proposition 1 must still hold.
+    let data = gp_dataset(&SynthSpec::named("psd", 200, 2), 8);
+    let mut k = RbfKernel::new(1.5).gram_sym(&data.x);
+    k.add_diag(1e-8);
+    let cfg = MkaConfig { d_core: 32, block_size: 50, ..MkaConfig::default() };
+    let f = factorize(&k, Some(&data.x), &cfg).unwrap();
+    assert!(f.min_eig() >= 0.0, "min eig {}", f.min_eig());
+    let e = SymEig::new(&f.to_dense());
+    assert!(e.values[0] > -1e-9);
+}
+
+#[test]
+fn identity_matrix_is_exact() {
+    // I is already core-diagonal: MKA must reproduce it exactly.
+    let n = 100;
+    let k = Mat::eye(n);
+    let cfg = MkaConfig { d_core: 10, block_size: 25, ..MkaConfig::default() };
+    let f = factorize(&k, None, &cfg).unwrap();
+    assert!(f.to_dense().sub(&k).max_abs() < 1e-10);
+    assert!((f.logdet().unwrap()).abs() < 1e-9);
+}

@@ -1,0 +1,243 @@
+//! Property-based tests (hand-rolled generators — no proptest offline):
+//! every property is checked across many random seeds / shapes, with the
+//! failing seed printed for reproduction.
+
+use mka_gp::compress::CompressorKind;
+use mka_gp::kernels::{Kernel, LaplaceKernel, Matern32Kernel, RbfKernel};
+use mka_gp::la::{gemv, Mat, SymEig};
+use mka_gp::mka::{factorize, MkaConfig};
+use mka_gp::util::{Json, Rng};
+
+/// Random kernel matrix + points: varied n, d, lengthscale, kernel family.
+fn random_kernel(seed: u64) -> (Mat, Mat, f64) {
+    let mut rng = Rng::new(seed);
+    let n = 40 + rng.below(120); // 40..160
+    let d = 1 + rng.below(5);
+    let ell = rng.uniform_in(0.3, 2.5);
+    let sigma2 = rng.uniform_in(0.02, 0.4);
+    let x = Mat::from_fn(n, d, |_, _| rng.normal() * rng.uniform_in(0.5, 2.0));
+    let kern: Box<dyn Kernel> = match rng.below(3) {
+        0 => Box::new(RbfKernel::new(ell)),
+        1 => Box::new(LaplaceKernel::new(ell)),
+        _ => Box::new(Matern32Kernel::new(ell)),
+    };
+    let mut k = kern.gram_sym(&x);
+    k.add_diag(sigma2);
+    (k, x, sigma2)
+}
+
+fn random_config(seed: u64, n: usize) -> MkaConfig {
+    let mut rng = Rng::new(seed ^ 0xc0ffee);
+    MkaConfig {
+        d_core: 8 + rng.below(24),
+        block_size: (16 + rng.below(48)).min(n).max(2),
+        gamma: rng.uniform_in(0.35, 0.7),
+        compressor: match rng.below(3) {
+            0 => CompressorKind::Mmf,
+            1 => CompressorKind::Spca,
+            _ => CompressorKind::Evd,
+        },
+        seed,
+        n_threads: 1 + rng.below(3),
+        ..MkaConfig::default()
+    }
+}
+
+const TRIALS: u64 = 12;
+
+#[test]
+fn prop_factor_is_valid_and_spsd() {
+    for seed in 0..TRIALS {
+        let (k, x, _) = random_kernel(seed);
+        let cfg = random_config(seed, k.rows);
+        let f = factorize(&k, Some(&x), &cfg).unwrap_or_else(|e| panic!("seed {seed}: {e}"));
+        assert!(f.check_valid(), "seed {seed}: invalid factor");
+        // Proposition 1: spsd preservation.
+        assert!(f.min_eig() > 0.0, "seed {seed}: min eig {}", f.min_eig());
+    }
+}
+
+#[test]
+fn prop_matvec_is_symmetric_operator() {
+    for seed in 0..TRIALS {
+        let (k, x, _) = random_kernel(seed + 100);
+        let cfg = random_config(seed + 100, k.rows);
+        let f = factorize(&k, Some(&x), &cfg).unwrap();
+        let mut rng = Rng::new(seed + 999);
+        let a = rng.normal_vec(k.rows);
+        let b = rng.normal_vec(k.rows);
+        let ka = f.matvec(&a);
+        let kb = f.matvec(&b);
+        let lhs: f64 = ka.iter().zip(&b).map(|(p, q)| p * q).sum();
+        let rhs: f64 = a.iter().zip(&kb).map(|(p, q)| p * q).sum();
+        assert!(
+            (lhs - rhs).abs() <= 1e-8 * lhs.abs().max(1.0),
+            "seed {seed}: ⟨Ka,b⟩={lhs} vs ⟨a,Kb⟩={rhs}"
+        );
+    }
+}
+
+#[test]
+fn prop_solve_inverts_matvec() {
+    for seed in 0..TRIALS {
+        let (k, x, _) = random_kernel(seed + 200);
+        let cfg = random_config(seed + 200, k.rows);
+        let f = factorize(&k, Some(&x), &cfg).unwrap();
+        let mut rng = Rng::new(seed);
+        let z = rng.normal_vec(k.rows);
+        let b = f.matvec(&z);
+        let back = f.solve(&b).unwrap();
+        let err = back
+            .iter()
+            .zip(&z)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0f64, f64::max);
+        assert!(err < 1e-5, "seed {seed}: roundtrip err {err}");
+    }
+}
+
+#[test]
+fn prop_spectrum_matches_dense_evd() {
+    for seed in 0..6 {
+        let (k, x, _) = random_kernel(seed + 300);
+        let cfg = random_config(seed + 300, k.rows);
+        let f = factorize(&k, Some(&x), &cfg).unwrap();
+        let dense = f.to_dense();
+        let e = SymEig::new(&dense);
+        let s = f.spectrum();
+        assert_eq!(s.len(), e.values.len());
+        for (a, b) in s.iter().zip(&e.values) {
+            assert!(
+                (a - b).abs() < 1e-7 * b.abs().max(1.0),
+                "seed {seed}: spectrum {a} vs dense {b}"
+            );
+        }
+    }
+}
+
+#[test]
+fn prop_logdet_and_det_consistent() {
+    for seed in 0..6 {
+        let (k, x, _) = random_kernel(seed + 400);
+        let cfg = random_config(seed + 400, k.rows);
+        let f = factorize(&k, Some(&x), &cfg).unwrap();
+        let ld = f.logdet().unwrap();
+        let spectrum_ld: f64 = f.spectrum().iter().map(|v| v.abs().ln()).sum();
+        assert!((ld - spectrum_ld).abs() < 1e-7 * ld.abs().max(1.0), "seed {seed}");
+    }
+}
+
+#[test]
+fn prop_matrix_functions_compose() {
+    for seed in 0..6 {
+        let (k, x, _) = random_kernel(seed + 500);
+        let cfg = random_config(seed + 500, k.rows);
+        let f = factorize(&k, Some(&x), &cfg).unwrap();
+        let mut rng = Rng::new(seed);
+        let z = rng.normal_vec(k.rows);
+        // K^(1/3) applied three times = K z
+        let third = f.pow_apply(1.0 / 3.0, &z);
+        let third2 = f.pow_apply(1.0 / 3.0, &third);
+        let third3 = f.pow_apply(1.0 / 3.0, &third2);
+        let direct = f.matvec(&z);
+        for i in 0..k.rows {
+            assert!(
+                (third3[i] - direct[i]).abs() < 1e-6 * direct[i].abs().max(1.0),
+                "seed {seed} i={i}"
+            );
+        }
+        // exp(βK) exp(−βK) z = z
+        let e1 = f.exp_apply(0.05, &z);
+        let e2 = f.exp_apply(-0.05, &e1);
+        for i in 0..k.rows {
+            assert!((e2[i] - z[i]).abs() < 1e-7, "seed {seed} i={i}");
+        }
+    }
+}
+
+#[test]
+fn prop_storage_bound_prop5() {
+    for seed in 0..TRIALS {
+        let (k, x, _) = random_kernel(seed + 600);
+        // MMF only (the Prop-5 bound is MMF-specific), strict budget.
+        let cfg = MkaConfig {
+            compressor: CompressorKind::Mmf,
+            d_core: 16,
+            block_size: 32.min(k.rows).max(2),
+            seed,
+            ..MkaConfig::default()
+        };
+        let f = factorize(&k, Some(&x), &cfg).unwrap();
+        let s = f.n_stages();
+        // default MMF performs 2 pre-sweeps per wavelet → (2·3·s + 1)n
+        let per_wavelet = 2 * (1 + 2);
+        let bound = (per_wavelet * s + 1) * f.n + f.d_core() * f.d_core();
+        assert!(
+            f.stored_reals() <= bound,
+            "seed {seed}: {} > {bound}",
+            f.stored_reals()
+        );
+    }
+}
+
+#[test]
+fn prop_dense_reconstruction_error_bounded() {
+    // The factorization is an approximation, but it must stay sane across
+    // the whole random family (relative Frobenius error well below 1).
+    for seed in 0..TRIALS {
+        let (k, x, _) = random_kernel(seed + 700);
+        let cfg = random_config(seed + 700, k.rows);
+        let f = factorize(&k, Some(&x), &cfg).unwrap();
+        let rel = f.to_dense().sub(&k).frob_norm() / k.frob_norm();
+        assert!(rel < 0.6, "seed {seed}: rel {rel}");
+    }
+}
+
+#[test]
+fn prop_matvec_matches_dense_application() {
+    for seed in 0..6 {
+        let (k, x, _) = random_kernel(seed + 800);
+        let cfg = random_config(seed + 800, k.rows);
+        let f = factorize(&k, Some(&x), &cfg).unwrap();
+        let dense = f.to_dense();
+        let mut rng = Rng::new(seed * 31 + 1);
+        let z = rng.normal_vec(k.rows);
+        let fast = f.matvec(&z);
+        let slow = gemv(&dense, &z);
+        for i in 0..k.rows {
+            assert!((fast[i] - slow[i]).abs() < 1e-9, "seed {seed} i={i}");
+        }
+    }
+}
+
+#[test]
+fn prop_json_fuzz_roundtrip() {
+    // Random JSON trees serialize → parse → identical.
+    fn random_json(rng: &mut Rng, depth: usize) -> Json {
+        match if depth == 0 { rng.below(4) } else { rng.below(6) } {
+            0 => Json::Null,
+            1 => Json::Bool(rng.below(2) == 0),
+            2 => Json::Num((rng.normal() * 1e3).round() / 8.0),
+            3 => {
+                let len = rng.below(8);
+                Json::Str((0..len).map(|_| (b'a' + rng.below(26) as u8) as char).collect())
+            }
+            4 => Json::Arr((0..rng.below(5)).map(|_| random_json(rng, depth - 1)).collect()),
+            _ => {
+                let mut o = Json::obj();
+                for i in 0..rng.below(5) {
+                    o.set(&format!("k{i}"), random_json(rng, depth - 1));
+                }
+                o
+            }
+        }
+    }
+    let mut rng = Rng::new(4242);
+    for _ in 0..300 {
+        let v = random_json(&mut rng, 3);
+        let back = Json::parse(&v.dump()).expect("parse back");
+        assert_eq!(v, back);
+        let back2 = Json::parse(&v.dump_pretty()).expect("pretty parse back");
+        assert_eq!(v, back2);
+    }
+}

@@ -1,0 +1,152 @@
+//! Integration tests for the PJRT runtime: load the real AOT artifacts,
+//! execute them, and verify numerics against the native kernels.
+//!
+//! These tests need `make artifacts` to have run; when the artifacts are
+//! missing they print a skip notice and pass (so `cargo test` works in a
+//! fresh checkout), but CI runs them for real via `make test`.
+
+use std::path::Path;
+use std::sync::Arc;
+
+use mka_gp::kernels::gram::{rbf_tile_native, GramBuilder, TileEngine};
+use mka_gp::kernels::{Kernel, RbfKernel};
+use mka_gp::la::{syrk_ata, Chol, Mat};
+use mka_gp::runtime::engine::XlaEngine;
+use mka_gp::util::Rng;
+
+fn engine() -> Option<XlaEngine> {
+    let dir = Path::new("artifacts");
+    if !dir.join("manifest.json").exists() {
+        eprintln!("SKIP: artifacts/ not built (run `make artifacts`)");
+        return None;
+    }
+    Some(XlaEngine::start(dir).expect("engine start"))
+}
+
+#[test]
+fn gram_tile_matches_native_exactly() {
+    let Some(engine) = engine() else { return };
+    let h = engine.handle();
+    let mut rng = Rng::new(1);
+    for (r, c, d) in [(128, 128, 32), (64, 128, 8), (5, 7, 3), (1, 1, 1)] {
+        let x = Mat::from_fn(r, d, |_, _| rng.normal());
+        let y = Mat::from_fn(c, d, |_, _| rng.normal());
+        for ell in [0.3, 1.0, 4.0] {
+            let xla = h.rbf_tile(&x, &y, ell, 1.2).unwrap();
+            let native = rbf_tile_native(&x, &y, ell, 1.2);
+            assert!(
+                xla.sub(&native).max_abs() < 1e-12,
+                "tile {r}x{c}x{d} ell={ell}"
+            );
+        }
+    }
+}
+
+#[test]
+fn ata_matches_native() {
+    let Some(engine) = engine() else { return };
+    let h = engine.handle();
+    let mut rng = Rng::new(2);
+    for m in [256, 200, 64, 3] {
+        let a = Mat::from_fn(m, m, |_, _| rng.normal());
+        let xla = h.ata(&a).unwrap();
+        let native = syrk_ata(&a);
+        assert!(xla.sub(&native).max_abs() < 1e-10, "ata m={m}");
+    }
+}
+
+#[test]
+fn chol_solve_matches_native() {
+    let Some(engine) = engine() else { return };
+    let h = engine.handle();
+    let mut rng = Rng::new(3);
+    for n in [512, 300, 50] {
+        let b = Mat::from_fn(n, n + 4, |_, _| rng.normal());
+        let mut k = mka_gp::la::gemm_nt(&b, &b);
+        k.scale(1.0 / (n as f64 + 4.0));
+        let y = rng.normal_vec(n);
+        let xla = h.chol_solve(&k, &y, 0.2).unwrap();
+        let mut kp = k.clone();
+        kp.add_diag(0.2);
+        let native = Chol::new(&kp).unwrap().solve(&y);
+        let err = xla
+            .iter()
+            .zip(&native)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0f64, f64::max);
+        assert!(err < 1e-6, "chol n={n}: err {err}");
+    }
+}
+
+#[test]
+fn gram_builder_through_engine_matches_direct() {
+    let Some(engine) = engine() else { return };
+    let handle = engine.handle();
+    let mut rng = Rng::new(4);
+    // deliberately ragged size and smaller dim than the artifact's 32
+    let x = Mat::from_fn(301, 5, |_, _| rng.normal());
+    let builder = GramBuilder::rbf(0.9, 1.0, Some(Arc::new(handle) as Arc<dyn TileEngine>));
+    assert!(builder.has_engine());
+    let k_eng = builder.build_sym(&x);
+    let k_direct = RbfKernel::new(0.9).gram_sym(&x);
+    assert!(k_eng.sub(&k_direct).max_abs() < 1e-12);
+}
+
+#[test]
+fn oversize_requests_rejected() {
+    let Some(engine) = engine() else { return };
+    let h = engine.handle();
+    let big = Mat::zeros(h.gram_tile_size() + 1, 4);
+    assert!(h.rbf_tile(&big, &big, 1.0, 1.0).is_err());
+    let big_a = Mat::zeros(600, 600);
+    assert!(h.ata(&big_a).is_err());
+}
+
+#[test]
+fn engine_is_thread_safe_handle() {
+    let Some(engine) = engine() else { return };
+    let h = engine.handle();
+    let handles: Vec<_> = (0..4)
+        .map(|t| {
+            let h = h.clone();
+            std::thread::spawn(move || {
+                let mut rng = Rng::new(t as u64);
+                let x = Mat::from_fn(32, 4, |_, _| rng.normal());
+                let out = h.rbf_tile(&x, &x, 1.0, 1.0).unwrap();
+                let native = rbf_tile_native(&x, &x, 1.0, 1.0);
+                assert!(out.sub(&native).max_abs() < 1e-12);
+            })
+        })
+        .collect();
+    for t in handles {
+        t.join().unwrap();
+    }
+}
+
+#[test]
+fn mka_gp_with_engine_backed_gram() {
+    let Some(engine) = engine() else { return };
+    use mka_gp::data::synth::{gp_dataset, SynthSpec};
+    use mka_gp::gp::mka_gp::MkaGp;
+    use mka_gp::gp::GpModel;
+    let data = gp_dataset(&SynthSpec::named("eng", 200, 3), 5);
+    let (tr, te) = data.split(0.9, 1);
+    let kern = RbfKernel::new(0.7);
+    let cfg = mka_gp::mka::MkaConfig { d_core: 24, block_size: 64, ..Default::default() };
+    let plain = MkaGp::fit(&tr, &kern, 0.1, &cfg).unwrap();
+    let with_engine = MkaGp::fit(&tr, &kern, 0.1, &cfg)
+        .unwrap()
+        .with_gram_builder(GramBuilder::rbf(
+            0.7,
+            1.0,
+            Some(Arc::new(engine.handle()) as Arc<dyn TileEngine>),
+        ));
+    let p1 = plain.predict(&te.x);
+    let p2 = with_engine.predict(&te.x);
+    for i in 0..te.n() {
+        assert!(
+            (p1.mean[i] - p2.mean[i]).abs() < 1e-8,
+            "engine-backed gram changed predictions at {i}"
+        );
+    }
+}
