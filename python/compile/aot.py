@@ -39,6 +39,7 @@ def lower_all(out_dir: str) -> dict:
             "gram_tile": {"tile": model.GRAM_TILE, "dim": model.GRAM_DIM},
             "ata": {"m": model.ATA_M},
             "chol_solve": {"n": model.CHOL_N},
+            "chol_solve_mat": {"n": model.CHOL_N, "b": model.CHOL_B},
         },
     }
     for name, fn in model.EXPORTS.items():

@@ -26,6 +26,9 @@ GRAM_TILE = gram_kernel.TILE
 GRAM_DIM = gram_kernel.MAX_DIM
 ATA_M = ata_kernel.ATA_M
 CHOL_N = 512
+# RHS-block width of the multi-RHS solve artifact (rust pads ragged
+# column chunks with zero columns).
+CHOL_B = 32
 
 DTYPE = jnp.float64
 
@@ -65,6 +68,32 @@ def chol_solve_fn(k, y, sigma2):
     return (alpha,)
 
 
+def chol_solve_mat_fn(k, ys, sigma2):
+    """ALPHA = (K + sigma2*I)^{-1} YS for a (CHOL_N, CHOL_B) RHS block.
+
+    One regularization + one Jacobi preconditioner shared by all columns;
+    the CG solve is vmapped over columns, so K is factored/streamed once
+    per artifact execution instead of once per right-hand side — this is
+    the batched counterpart the rust engine's ``chol_solve_mat`` request
+    executes. Zero-padded columns converge instantly (alpha = 0), so the
+    rust side's ragged-chunk padding is exact.
+    """
+    kp = k + sigma2[0] * jnp.eye(CHOL_N, dtype=k.dtype)
+    diag_inv = 1.0 / jnp.diagonal(kp)
+
+    def solve_one(y):
+        alpha, _info = jax.scipy.sparse.linalg.cg(
+            lambda v: kp @ v,
+            y,
+            M=lambda v: diag_inv * v,
+            tol=1e-14,
+            maxiter=CHOL_N,
+        )
+        return alpha
+
+    return (jax.vmap(solve_one, in_axes=1, out_axes=1)(ys),)
+
+
 def example_args():
     """Concrete example arguments for each exported function."""
     f64 = lambda shape: jnp.zeros(shape, DTYPE)
@@ -81,6 +110,11 @@ def example_args():
             f64((CHOL_N,)),
             jnp.ones((1,), DTYPE),
         ),
+        "chol_solve_mat": (
+            f64((CHOL_N, CHOL_N)),
+            f64((CHOL_N, CHOL_B)),
+            jnp.ones((1,), DTYPE),
+        ),
     }
 
 
@@ -88,4 +122,5 @@ EXPORTS = {
     "gram_tile": gram_tile_fn,
     "ata": ata_fn,
     "chol_solve": chol_solve_fn,
+    "chol_solve_mat": chol_solve_mat_fn,
 }

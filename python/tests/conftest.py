@@ -1,0 +1,13 @@
+"""Test bootstrap: make `compile.*` and sibling test helpers importable
+regardless of the pytest invocation directory (repo root, python/, or
+python/tests)."""
+
+import os
+import sys
+
+_HERE = os.path.dirname(os.path.abspath(__file__))
+_PY_ROOT = os.path.dirname(_HERE)  # python/
+
+for p in (_PY_ROOT, _HERE):
+    if p not in sys.path:
+        sys.path.insert(0, p)

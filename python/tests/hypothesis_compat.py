@@ -1,0 +1,88 @@
+"""`hypothesis` front-end with an offline fallback.
+
+The container image does not ship `hypothesis`. Property tests still run:
+when the real package is available we re-export it untouched; otherwise a
+minimal deterministic substitute sweeps each test over seeded
+pseudo-random draws from the declared strategies (plus the strategy
+endpoints), which preserves the value-sweep coverage if not the shrinking.
+"""
+
+try:  # pragma: no cover - exercised only where hypothesis is installed
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:
+    import random
+
+    HAVE_HYPOTHESIS = False
+
+    _DEFAULT_EXAMPLES = 10
+
+    class _Strategy:
+        """A value source: endpoint examples first, then seeded draws."""
+
+        def __init__(self, lo, hi, draw):
+            self._lo = lo
+            self._hi = hi
+            self._draw = draw
+
+        def endpoints(self):
+            return [self._lo, self._hi]
+
+        def draw(self, rng):
+            return self._draw(rng)
+
+    class _StrategiesModule:
+        @staticmethod
+        def integers(min_value, max_value):
+            return _Strategy(
+                min_value, max_value, lambda rng: rng.randint(min_value, max_value)
+            )
+
+        @staticmethod
+        def floats(min_value, max_value):
+            return _Strategy(
+                min_value, max_value, lambda rng: rng.uniform(min_value, max_value)
+            )
+
+    st = _StrategiesModule()
+
+    def settings(max_examples=_DEFAULT_EXAMPLES, **_ignored):
+        """Record the example budget on the wrapped test (deadline etc. are
+        accepted and ignored)."""
+
+        def wrap(fn):
+            fn._compat_max_examples = max_examples
+            return fn
+
+        return wrap
+
+    def given(**strategies):
+        names = sorted(strategies)
+
+        def wrap(fn):
+            def runner(*args, **kwargs):
+                budget = getattr(runner, "_compat_max_examples", _DEFAULT_EXAMPLES)
+                # Deterministic per-test stream so failures reproduce.
+                rng = random.Random(f"hypothesis-compat:{fn.__name__}")
+                cases = []
+                # Endpoint case: every strategy at its minimum, then maximum.
+                cases.append({n: strategies[n].endpoints()[0] for n in names})
+                cases.append({n: strategies[n].endpoints()[1] for n in names})
+                while len(cases) < max(budget, 2):
+                    cases.append({n: strategies[n].draw(rng) for n in names})
+                for case in cases[: max(budget, 2)]:
+                    try:
+                        fn(*args, **kwargs, **case)
+                    except Exception:
+                        print(f"falsifying example ({fn.__name__}): {case}")
+                        raise
+
+            # NOT functools.wraps: copying __wrapped__ would expose the
+            # strategy parameters to pytest's fixture resolution.
+            runner.__name__ = fn.__name__
+            runner.__doc__ = fn.__doc__
+            return runner
+
+        return wrap

@@ -40,6 +40,33 @@ class TestModelFunctions:
         np.testing.assert_allclose(out[:n_small], expected, rtol=1e-8, atol=1e-8)
         np.testing.assert_allclose(out[n_small:], 0.0, atol=1e-12)
 
+    def test_chol_solve_mat_matches_per_column(self):
+        rng = np.random.default_rng(2)
+        n, b = model.CHOL_N, model.CHOL_B
+        a = jnp.asarray(rng.normal(size=(n, n + 5)))
+        k = (a @ a.T) / n
+        ys = jnp.asarray(rng.normal(size=(n, b)))
+        (out,) = model.chol_solve_mat_fn(k, ys, jnp.array([0.1]))
+        assert out.shape == (n, b)
+        for j in range(0, b, 7):
+            expected = ref.chol_solve_ref(k, ys[:, j], 0.1)
+            np.testing.assert_allclose(out[:, j], expected, rtol=1e-8, atol=1e-8)
+
+    def test_chol_solve_mat_zero_columns_stay_zero(self):
+        # rust pads ragged chunks with zero columns; they must come back 0.
+        rng = np.random.default_rng(3)
+        n, b = model.CHOL_N, model.CHOL_B
+        a = jnp.asarray(rng.normal(size=(n, n + 5)))
+        k = (a @ a.T) / n
+        ys = jnp.zeros((n, b), jnp.float64).at[:, 0].set(
+            jnp.asarray(rng.normal(size=(n,)))
+        )
+        (out,) = model.chol_solve_mat_fn(k, ys, jnp.array([0.1]))
+        np.testing.assert_allclose(out[:, 1:], 0.0, atol=1e-12)
+        np.testing.assert_allclose(
+            out[:, 0], ref.chol_solve_ref(k, ys[:, 0], 0.1), rtol=1e-8, atol=1e-8
+        )
+
     def test_exports_run_on_examples(self):
         examples = model.example_args()
         for name, fn in model.EXPORTS.items():
@@ -60,7 +87,12 @@ class TestAotLowering:
 
     def test_lower_all_writes_manifest(self, tmp_path):
         manifest = aot.lower_all(str(tmp_path))
-        assert set(manifest["artifacts"]) == {"gram_tile", "ata", "chol_solve"}
+        assert set(manifest["artifacts"]) == {
+            "gram_tile",
+            "ata",
+            "chol_solve",
+            "chol_solve_mat",
+        }
         for name, meta in manifest["artifacts"].items():
             p = tmp_path / meta["file"]
             assert p.exists(), name

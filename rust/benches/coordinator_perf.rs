@@ -100,4 +100,40 @@ fn main() {
         batches,
         preds / batches.max(1.0)
     );
+
+    // 6. Blocked multi-RHS execution: one b-point predict (one joint
+    // factorization + ONE blocked cascade for all b+1 right-hand sides)
+    // vs b independent per-vector predicts. This is the acceptance
+    // comparison for the blocked path: the batched predict must beat b
+    // independent predicts at b >= 32.
+    let b = args.get_usize("batch", 32).min(te.n());
+    let model = router.registry.get("m").expect("model published");
+    println!("\nblocked multi-RHS predict (b = {b}):");
+    let xb = te.x.block(0, b, 0, te.x.cols);
+    let c0 = mka_gp::mka::cascade_count();
+    let t = Timer::start();
+    let batched = model.predict(&xb);
+    let batched_s = t.elapsed_secs();
+    let batched_cascades = mka_gp::mka::cascade_count() - c0;
+    let c0 = mka_gp::mka::cascade_count();
+    let t = Timer::start();
+    let mut singles = Vec::with_capacity(b);
+    for i in 0..b {
+        let xi = te.x.block(i, i + 1, 0, te.x.cols);
+        singles.push(model.predict(&xi).mean[0]);
+    }
+    let serial_s = t.elapsed_secs();
+    let serial_cascades = mka_gp::mka::cascade_count() - c0;
+    assert_eq!(batched.mean.len(), b);
+    println!(
+        "  batched x{b}: {} ({batched_cascades} cascades) | {b} × x1: {} ({serial_cascades} cascades) | speedup {:.1}x",
+        fmt_secs(batched_s),
+        fmt_secs(serial_s),
+        serial_s / batched_s.max(1e-12)
+    );
+    if batched_s < serial_s {
+        println!("  OK: batched predict beats {b} independent per-vector predicts");
+    } else {
+        println!("  WARN: batched predict did NOT beat independent predicts");
+    }
 }

@@ -102,9 +102,20 @@ fn flusher(
             return;
         }
         drop(q);
-        // Batching window: let more requests accumulate.
+        // Batching window: let more requests accumulate. Waiting on the
+        // condvar (not a plain sleep) lets Drop cut the window short —
+        // shutdown used to stall a full `window` before the flusher
+        // noticed the flag.
         if !window.is_zero() {
-            std::thread::sleep(window);
+            let deadline = std::time::Instant::now() + window;
+            let mut q = lock.lock().unwrap();
+            while !q.shutdown {
+                let now = std::time::Instant::now();
+                if now >= deadline {
+                    break;
+                }
+                q = cv.wait_timeout(q, deadline - now).unwrap().0;
+            }
         }
         let drained: Vec<Pending> = {
             let mut q = lock.lock().unwrap();
@@ -254,5 +265,28 @@ mod tests {
         let (b, _) = setup(0);
         drop(b);
         // Batcher dropped: nothing to assert beyond not hanging.
+    }
+
+    /// Regression: dropping the batcher while the flusher slept out a
+    /// non-zero batching window used to block shutdown for the whole
+    /// window. The condvar wait must cut it short, and the pending
+    /// request must still get an answer.
+    #[test]
+    fn shutdown_mid_window_is_prompt() {
+        let window_ms = 5_000;
+        let (b, calls) = setup(window_ms);
+        let rx = b.submit("m", Mat::from_rows(&[&[2.0, 3.0]]));
+        // Give the flusher a moment to enter the batching window.
+        std::thread::sleep(Duration::from_millis(50));
+        let t0 = std::time::Instant::now();
+        drop(b); // join()s the flusher
+        let waited = t0.elapsed();
+        assert!(
+            waited < Duration::from_millis(window_ms / 2),
+            "shutdown stalled {waited:?} (window {window_ms}ms)"
+        );
+        let pred = rx.recv().expect("response channel closed").expect("predict failed");
+        assert_eq!(pred.mean, vec![5.0]);
+        assert_eq!(calls.lock().unwrap().len(), 1);
     }
 }

@@ -1,42 +1,62 @@
 //! Crate-wide error type.
+//!
+//! Hand-rolled `Display`/`Error` impls — the offline build carries no
+//! external crates (`thiserror` / `anyhow` are unavailable), and the
+//! variants are few enough that a derive buys nothing.
 
-use thiserror::Error;
+use std::fmt;
 
 /// All fallible operations in the crate return this error.
-#[derive(Error, Debug)]
+#[derive(Debug)]
 pub enum Error {
-    #[error("linear algebra error: {0}")]
     Linalg(String),
-
-    #[error("configuration error: {0}")]
     Config(String),
-
-    #[error("data error: {0}")]
     Data(String),
-
-    #[error("runtime (PJRT/XLA) error: {0}")]
     Runtime(String),
-
-    #[error("coordinator error: {0}")]
     Coordinator(String),
-
-    #[error("protocol error: {0}")]
     Protocol(String),
+    Io(std::io::Error),
+    Json(crate::util::json::JsonError),
+}
 
-    #[error("io error: {0}")]
-    Io(#[from] std::io::Error),
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Error::Linalg(m) => write!(f, "linear algebra error: {m}"),
+            Error::Config(m) => write!(f, "configuration error: {m}"),
+            Error::Data(m) => write!(f, "data error: {m}"),
+            Error::Runtime(m) => write!(f, "runtime (PJRT/XLA) error: {m}"),
+            Error::Coordinator(m) => write!(f, "coordinator error: {m}"),
+            Error::Protocol(m) => write!(f, "protocol error: {m}"),
+            Error::Io(e) => write!(f, "io error: {e}"),
+            Error::Json(e) => write!(f, "json error: {e}"),
+        }
+    }
+}
 
-    #[error("json error: {0}")]
-    Json(#[from] crate::util::json::JsonError),
+impl std::error::Error for Error {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            Error::Io(e) => Some(e),
+            Error::Json(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Error::Io(e)
+    }
+}
+
+impl From<crate::util::json::JsonError> for Error {
+    fn from(e: crate::util::json::JsonError) -> Self {
+        Error::Json(e)
+    }
 }
 
 pub type Result<T> = std::result::Result<T, Error>;
-
-impl From<anyhow::Error> for Error {
-    fn from(e: anyhow::Error) -> Self {
-        Error::Runtime(format!("{e:#}"))
-    }
-}
 
 #[cfg(test)]
 mod tests {
@@ -48,5 +68,13 @@ mod tests {
         assert!(format!("{e}").contains("bad pivot"));
         let e: Error = std::io::Error::new(std::io::ErrorKind::NotFound, "nope").into();
         assert!(matches!(e, Error::Io(_)));
+    }
+
+    #[test]
+    fn source_chains_io() {
+        use std::error::Error as _;
+        let e: Error = std::io::Error::new(std::io::ErrorKind::Other, "disk").into();
+        assert!(e.source().is_some());
+        assert!(Error::Config("x".into()).source().is_none());
     }
 }

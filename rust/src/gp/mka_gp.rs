@@ -134,25 +134,31 @@ impl GpModel for MkaGp {
         // spsd) modified prior 𝒦̃, it degrades gracefully with
         // approximation error instead of amplifying it the way the naive
         // mix of exact k_x with an approximate inverse does (§4.1).
-        let mut rhs = vec![0.0; n + p];
-        rhs[..n].copy_from_slice(&self.train.y);
-        let t = match f.solve(&rhs) {
-            Ok(t) => t,
+        //
+        // All p+1 right-hand sides — (y; 0) for the mean and the p test
+        // unit vectors for the D block — ride ONE blocked cascade
+        // (column 0 is (y; 0), column 1+j is e_{n+j}), instead of p+1
+        // serial solves each re-walking every rotation.
+        let mut rhs = Mat::zeros(n + p, p + 1);
+        for (i, &yi) in self.train.y.iter().enumerate() {
+            rhs.set(i, 0, yi);
+        }
+        for j in 0..p {
+            rhs.set(n + j, j + 1, 1.0);
+        }
+        let sol = match f.solve_mat_par(&rhs, self.config.n_threads) {
+            Ok(s) => s,
             Err(_) => {
                 return Prediction { mean: vec![0.0; p], var: vec![1.0 + self.sigma2; p] };
             }
         };
-        let cy = &t[n..];
+        let cy: Vec<f64> = (0..p).map(|i| sol.at(n + i, 0)).collect();
 
-        // D block of 𝒦̃⁻¹ from p unit-vector solves (p ≪ n).
+        // D block of 𝒦̃⁻¹: test rows of the unit-vector solutions.
         let mut d_block = Mat::zeros(p, p);
-        let mut e = vec![0.0; n + p];
         for j in 0..p {
-            e[n + j] = 1.0;
-            let col = f.solve(&e).expect("joint factor became singular");
-            e[n + j] = 0.0;
             for i in 0..p {
-                d_block.set(i, j, col[n + i]);
+                d_block.set(i, j, sol.at(n + i, j + 1));
             }
         }
         d_block.symmetrize();
@@ -162,14 +168,14 @@ impl GpModel for MkaGp {
             Err(_) => {
                 // D numerically singular — fall back to the naive
                 // (inconsistent) estimator f̂ = K_*ᵀ [𝒦̃⁻¹(y;0)]_train.
-                let ay = &t[..n];
-                let mean = (0..p).map(|j| dot(&kstar.col(j), ay)).collect();
+                let ay: Vec<f64> = (0..n).map(|i| sol.at(i, 0)).collect();
+                let mean = (0..p).map(|j| dot(&kstar.col(j), &ay)).collect();
                 return Prediction { mean, var: vec![1.0 + self.sigma2; p] };
             }
         };
 
         // Mean: f̂ = −D⁻¹ (C y).
-        let w = lu.solve(cy);
+        let w = lu.solve(&cy);
         let mean: Vec<f64> = w.iter().map(|v| -v).collect();
 
         // Variance: with σ² on the full joint diagonal,
@@ -278,6 +284,25 @@ mod tests {
         let mka_bad = MkaGp::fit(&data, &bad_kern, 0.1, &cfg).unwrap().log_marginal().unwrap();
         assert!(full_bad < exact);
         assert!(mka_bad < approx, "LML ordering flipped: {mka_bad} vs {approx}");
+    }
+
+    #[test]
+    fn parallel_predict_matches_serial() {
+        // Enough test points to cross the column-parallel threshold; the
+        // sharded cascade must reproduce the serial blocked result.
+        let data = gp_dataset(&SynthSpec::named("t", 200, 2), 11);
+        let (tr, te) = data.split(0.75, 7);
+        assert!(te.n() >= 32, "need a wide RHS block, got {}", te.n());
+        let kern = RbfKernel::new(1.0);
+        let serial = MkaGp::fit(&tr, &kern, 0.1, &config(24)).unwrap();
+        let par_cfg = MkaConfig { n_threads: 4, ..config(24) };
+        let parallel = MkaGp::fit(&tr, &kern, 0.1, &par_cfg).unwrap();
+        let ps = serial.predict(&te.x);
+        let pp = parallel.predict(&te.x);
+        for i in 0..te.n() {
+            assert!((ps.mean[i] - pp.mean[i]).abs() < 1e-9, "mean[{i}]");
+            assert!((ps.var[i] - pp.var[i]).abs() < 1e-9, "var[{i}]");
+        }
     }
 
     #[test]

@@ -154,6 +154,18 @@ pub fn gemm_nt(a: &Mat, b: &Mat) -> Mat {
     c
 }
 
+/// A ← diag(s) · A: scale row i by s[i]. Row-major, so each scaling is one
+/// contiguous pass — this is how the blocked cascade applies f(D_ℓ) to a
+/// whole wavelet block at once.
+pub fn scale_rows(a: &mut Mat, s: &[f64]) {
+    assert_eq!(a.rows, s.len());
+    for (i, &si) in s.iter().enumerate() {
+        for v in a.row_mut(i) {
+            *v *= si;
+        }
+    }
+}
+
 /// G ← AᵀA (symmetric rank-k update). Computes only the upper triangle and
 /// mirrors it. This is MMF's dominant cost; see also the XLA artifact path.
 pub fn syrk_ata(a: &Mat) -> Mat {

@@ -109,6 +109,49 @@ impl Mat {
         (0..self.rows).map(|i| self.at(i, j)).collect()
     }
 
+    /// Write a column in place.
+    pub fn set_col(&mut self, j: usize, v: &[f64]) {
+        assert_eq!(v.len(), self.rows);
+        for (i, &x) in v.iter().enumerate() {
+            self.set(i, j, x);
+        }
+    }
+
+    /// Two distinct rows, mutably — the row-pair rotation primitive of the
+    /// blocked (multi-RHS) cascade: a Givens rotation on a column block
+    /// mixes two full rows at a time.
+    pub fn rows_pair_mut(&mut self, i: usize, j: usize) -> (&mut [f64], &mut [f64]) {
+        assert!(i != j && i < self.rows && j < self.rows);
+        let c = self.cols;
+        let (lo, hi) = (i.min(j), i.max(j));
+        let (first, second) = self.data.split_at_mut(hi * c);
+        let row_lo = &mut first[lo * c..lo * c + c];
+        let row_hi = &mut second[..c];
+        if lo == i {
+            (row_lo, row_hi)
+        } else {
+            (row_hi, row_lo)
+        }
+    }
+
+    /// Horizontal concatenation [A₁ | A₂ | …] of equal-height blocks.
+    pub fn hstack(parts: &[Mat]) -> Mat {
+        assert!(!parts.is_empty(), "hstack of nothing");
+        let rows = parts[0].rows;
+        let mut cols = 0;
+        for p in parts {
+            assert_eq!(p.rows, rows, "hstack: ragged heights");
+            cols += p.cols;
+        }
+        let mut out = Mat::zeros(rows, cols);
+        let mut off = 0;
+        for p in parts {
+            out.set_block(0, off, p);
+            off += p.cols;
+        }
+        out
+    }
+
     pub fn diagonal(&self) -> Vec<f64> {
         let n = self.rows.min(self.cols);
         (0..n).map(|i| self.at(i, i)).collect()
@@ -350,6 +393,31 @@ mod tests {
         let b = Mat::from_fn(2, 2, |i, j| (i + j) as f64 + 1.0);
         m.set_block(1, 2, &b);
         assert_eq!(m.block(1, 3, 2, 4), b);
+    }
+
+    #[test]
+    fn rows_pair_and_set_col() {
+        let mut m = Mat::from_fn(4, 3, |i, j| (i * 3 + j) as f64);
+        {
+            let (r2, r0) = m.rows_pair_mut(2, 0);
+            assert_eq!(r2, &[6.0, 7.0, 8.0]);
+            assert_eq!(r0, &[0.0, 1.0, 2.0]);
+            r0[1] = 99.0;
+        }
+        assert_eq!(m[(0, 1)], 99.0);
+        m.set_col(2, &[9.0, 9.0, 9.0, 9.0]);
+        assert_eq!(m.col(2), vec![9.0; 4]);
+    }
+
+    #[test]
+    fn hstack_concatenates() {
+        let a = Mat::filled(2, 1, 1.0);
+        let b = Mat::from_fn(2, 2, |i, j| (i + j) as f64);
+        let h = Mat::hstack(&[a, b]);
+        assert_eq!(h.rows, 2);
+        assert_eq!(h.cols, 3);
+        assert_eq!(h.row(0), &[1.0, 0.0, 1.0]);
+        assert_eq!(h.row(1), &[1.0, 1.0, 2.0]);
     }
 
     #[test]

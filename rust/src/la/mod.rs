@@ -20,7 +20,7 @@ pub mod qr;
 pub mod sparse;
 pub mod stats;
 
-pub use blas::{axpy, dot, gemm, gemm_nt, gemm_tn, gemv, gemv_t, norm2, syrk_aat, syrk_ata};
+pub use blas::{axpy, dot, gemm, gemm_nt, gemm_tn, gemv, gemv_t, norm2, scale_rows, syrk_aat, syrk_ata};
 pub use chol::Chol;
 pub use dense::Mat;
 pub use evd::SymEig;

@@ -11,7 +11,7 @@ pub mod ops;
 pub mod parallel;
 pub mod stage;
 
-pub use factor::MkaFactor;
+pub use factor::{cascade_count, MkaFactor};
 pub use stage::{BlockFactor, Stage};
 
 use crate::cluster::{cluster_rows, ClusterMethod};

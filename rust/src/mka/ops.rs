@@ -6,6 +6,8 @@
 
 use super::factor::MkaFactor;
 use crate::error::{Error, Result};
+use crate::la::blas::{gemm, gemm_tn, scale_rows};
+use crate::la::dense::Mat;
 
 impl MkaFactor {
     /// Solve K̃ x = b exactly (x = K̃⁻¹ b). Errors if the factor is
@@ -20,6 +22,34 @@ impl MkaFactor {
         ))
     }
 
+    /// Blocked solve K̃ X = B for a block of right-hand sides (columns of
+    /// `b`): one cascade, one core spectral op — the multi-RHS Proposition
+    /// 7 path used by batched prediction.
+    pub fn solve_mat(&self, b: &Mat) -> Result<Mat> {
+        self.check_invertible()?;
+        let eig = self.eig();
+        Ok(self.apply_with_mat(
+            b,
+            |v| spectral_apply_mat(eig, v, |lam| 1.0 / lam),
+            |d| 1.0 / d,
+        ))
+    }
+
+    /// Column-parallel [`MkaFactor::solve_mat`]: wide blocks are sharded
+    /// over `n_threads` workers (one logical cascade regardless of how
+    /// many chunks execute it).
+    pub fn solve_mat_par(&self, b: &Mat, n_threads: usize) -> Result<Mat> {
+        self.check_invertible()?;
+        let eig = self.eig();
+        Ok(self.par_over_cols(b, n_threads, |chunk| {
+            self.apply_with_mat_uncounted(
+                chunk,
+                |v| spectral_apply_mat(eig, v, |lam| 1.0 / lam),
+                |d| 1.0 / d,
+            )
+        }))
+    }
+
     /// K̃^α b for any real α (Proposition 7 item 1). Requires positive
     /// spectrum for non-integer α.
     pub fn pow_apply(&self, alpha: f64, b: &[f64]) -> Vec<f64> {
@@ -27,6 +57,16 @@ impl MkaFactor {
         self.apply_with(
             b,
             |v| spectral_apply(eig, v, |lam| signed_pow(lam, alpha)),
+            |d| signed_pow(d, alpha),
+        )
+    }
+
+    /// Blocked K̃^α B (columns of `b` are independent vectors).
+    pub fn pow_apply_mat(&self, alpha: f64, b: &Mat) -> Mat {
+        let eig = self.eig();
+        self.apply_with_mat(
+            b,
+            |v| spectral_apply_mat(eig, v, |lam| signed_pow(lam, alpha)),
             |d| signed_pow(d, alpha),
         )
     }
@@ -42,13 +82,41 @@ impl MkaFactor {
         )
     }
 
+    /// Blocked exp(β K̃) B.
+    pub fn exp_apply_mat(&self, beta: f64, b: &Mat) -> Mat {
+        let eig = self.eig();
+        self.apply_with_mat(
+            b,
+            |v| spectral_apply_mat(eig, v, |lam| (beta * lam).exp()),
+            |d| (beta * d).exp(),
+        )
+    }
+
     /// log det K̃ (Proposition 7 item 3) — the GP marginal-likelihood term.
+    ///
+    /// Errors on a non-positive spectral value: log det of a non-psd
+    /// "kernel" is a modelling bug upstream, and silently summing
+    /// log|λ| (the old behaviour) produced a finite but meaningless
+    /// marginal likelihood.
     pub fn logdet(&self) -> Result<f64> {
         self.check_invertible()?;
         let eig = self.eig();
-        let mut ld: f64 = eig.values.iter().map(|&l| l.abs().ln()).sum();
+        let mut ld = 0.0f64;
+        for &l in &eig.values {
+            if l <= 0.0 {
+                return Err(Error::Linalg(format!(
+                    "logdet: non-positive core eigenvalue {l}"
+                )));
+            }
+            ld += l.ln();
+        }
         for d in self.all_dvals() {
-            ld += d.abs().ln();
+            if d <= 0.0 {
+                return Err(Error::Linalg(format!(
+                    "logdet: non-positive wavelet diagonal value {d}"
+                )));
+            }
+            ld += d.ln();
         }
         Ok(ld)
     }
@@ -81,12 +149,29 @@ impl MkaFactor {
         core_min.min(d_min)
     }
 
-    fn check_invertible(&self) -> Result<()> {
-        let tol = 1e-300;
-        if self.eig().values.iter().any(|l| l.abs() < tol)
-            || self.all_dvals().iter().any(|d| d.abs() < tol)
-        {
-            return Err(Error::Linalg("MKA factor is numerically singular".into()));
+    pub(crate) fn check_invertible(&self) -> Result<()> {
+        // Relative gate: a spectral value only counts as nonzero when it
+        // clears `RTOL ×` the largest spectral magnitude. The old absolute
+        // 1e-300 floor waved through any factor that was singular in
+        // f64 arithmetic (e.g. eigenvalues {1, 1e-18}), and solve/logdet
+        // then returned garbage amplified by ~1/λ_min. RTOL is a few
+        // hundred ulps — merely ill-conditioned factors (κ up to ~1e13)
+        // still solve; only spectra unresolvable in f64 are rejected.
+        const RTOL: f64 = 64.0 * f64::EPSILON; // ≈ 1.4e-14
+        let eig = self.eig();
+        let mut max_mag = 0.0f64;
+        for &l in &eig.values {
+            max_mag = max_mag.max(l.abs());
+        }
+        let dvals = self.all_dvals();
+        for &d in &dvals {
+            max_mag = max_mag.max(d.abs());
+        }
+        let tol = RTOL * max_mag.max(1e-300);
+        if eig.values.iter().any(|l| l.abs() < tol) || dvals.iter().any(|d| d.abs() < tol) {
+            return Err(Error::Linalg(format!(
+                "MKA factor is numerically singular (spectral value below {RTOL:e} of max magnitude {max_mag:e})"
+            )));
         }
         Ok(())
     }
@@ -103,6 +188,19 @@ fn spectral_apply(
     let scaled: Vec<f64> =
         vt_x.iter().zip(&eig.values).map(|(v, &l)| v * f(l)).collect();
     crate::la::blas::gemv(&eig.vectors, &scaled)
+}
+
+/// Blocked V f(Λ) Vᵀ X: two GEMMs + one contiguous row scaling for the
+/// whole block, replacing 2b GEMV sweeps.
+fn spectral_apply_mat(
+    eig: &crate::la::evd::SymEig,
+    x: &Mat,
+    f: impl Fn(f64) -> f64,
+) -> Mat {
+    let mut vt_x = gemm_tn(&eig.vectors, x);
+    let fvals: Vec<f64> = eig.values.iter().map(|&l| f(l)).collect();
+    scale_rows(&mut vt_x, &fvals);
+    gemm(&eig.vectors, &vt_x)
 }
 
 /// |λ|^α · sign(λ) for odd behaviour on any stray negatives (psd clamping
@@ -215,6 +313,76 @@ mod tests {
             assert!((a - b).abs() < 1e-9, "{a} vs {b}");
         }
         assert!(f.min_eig() > 0.0);
+    }
+
+    #[test]
+    fn solve_mat_matches_per_column_solve() {
+        let f = tiny_factor();
+        let mut rng = Rng::new(21);
+        let b = Mat::from_fn(4, 6, |_, _| rng.normal());
+        let blocked = f.solve_mat(&b).unwrap();
+        for j in 0..6 {
+            let col = f.solve(&b.col(j)).unwrap();
+            for i in 0..4 {
+                assert!((blocked.at(i, j) - col[i]).abs() < 1e-12, "({i},{j})");
+            }
+        }
+        let par = f.solve_mat_par(&b, 3).unwrap();
+        assert!(par.sub(&blocked).max_abs() < 1e-12);
+    }
+
+    #[test]
+    fn pow_and_exp_mat_match_vector_paths() {
+        let f = tiny_factor();
+        let mut rng = Rng::new(22);
+        let b = Mat::from_fn(4, 5, |_, _| rng.normal());
+        let powm = f.pow_apply_mat(0.5, &b);
+        let expm = f.exp_apply_mat(0.3, &b);
+        for j in 0..5 {
+            let pv = f.pow_apply(0.5, &b.col(j));
+            let ev = f.exp_apply(0.3, &b.col(j));
+            for i in 0..4 {
+                assert!((powm.at(i, j) - pv[i]).abs() < 1e-12);
+                assert!((expm.at(i, j) - ev[i]).abs() < 1e-12);
+            }
+        }
+    }
+
+    /// Regression: the old absolute 1e-300 singularity floor accepted a
+    /// factor with spectrum {O(1), 1e-18} and let solve/logdet emit
+    /// garbage. The gate is now relative to the largest spectral value.
+    #[test]
+    fn relatively_singular_factor_rejected() {
+        let core = Mat::from_rows(&[&[1.0, 0.0], &[0.0, 1e-18]]);
+        let f = MkaFactor::new(2, vec![], core);
+        assert!(f.check_valid());
+        assert!(f.solve(&[1.0, 1.0]).is_err(), "solve must reject λ_min/λ_max = 1e-18");
+        assert!(f.logdet().is_err());
+        // A tiny wavelet diagonal value trips the same gate.
+        let mut f2 = tiny_factor();
+        f2.stages[0].dvals[1] = 1e-20;
+        assert!(f2.solve(&[1.0; 4]).is_err());
+        // Well-conditioned factors still pass.
+        assert!(tiny_factor().solve(&[1.0; 4]).is_ok());
+        // Merely ill-conditioned (κ ≈ 1e12, resolvable in f64) passes —
+        // the gate targets numerical singularity, not conditioning.
+        let ill = MkaFactor::new(2, vec![], Mat::from_rows(&[&[1.0, 0.0], &[0.0, 1e-12]]));
+        assert!(ill.solve(&[1.0, 1.0]).is_ok());
+    }
+
+    #[test]
+    fn logdet_rejects_non_positive_spectrum() {
+        // Negative wavelet diagonal: |λ| used to be taken silently.
+        let mut f = tiny_factor();
+        f.stages[0].dvals[0] = -0.7;
+        assert!(f.logdet().is_err());
+        // det and pow_apply stay well-defined on the signed spectrum.
+        assert!(f.det().is_finite());
+        let _ = f.pow_apply(1.0, &[1.0; 4]);
+        // Negative core eigenvalue trips it too.
+        let core = Mat::from_rows(&[&[-2.0, 0.0], &[0.0, 1.5]]);
+        let f2 = MkaFactor::new(2, vec![], core);
+        assert!(f2.logdet().is_err());
     }
 
     #[test]

@@ -65,6 +65,26 @@ pub fn default_threads() -> usize {
     std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1)
 }
 
+/// Split `0..n` into at most `k` contiguous, near-equal, non-empty ranges
+/// (used to shard the columns of a multi-RHS block across workers).
+pub fn chunk_ranges(n: usize, k: usize) -> Vec<(usize, usize)> {
+    if n == 0 {
+        return Vec::new();
+    }
+    let k = k.clamp(1, n);
+    let base = n / k;
+    let extra = n % k;
+    let mut out = Vec::with_capacity(k);
+    let mut start = 0;
+    for i in 0..k {
+        let len = base + usize::from(i < extra);
+        out.push((start, start + len));
+        start += len;
+    }
+    debug_assert_eq!(start, n);
+    out
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -108,5 +128,25 @@ mod tests {
     fn more_threads_than_items() {
         let out = par_map(vec![5], 16, |_, x| x * 10);
         assert_eq!(out, vec![50]);
+    }
+
+    #[test]
+    fn chunk_ranges_cover_exactly() {
+        for (n, k) in [(10, 3), (1, 4), (7, 7), (16, 2), (5, 1), (100, 8)] {
+            let ranges = chunk_ranges(n, k);
+            assert!(ranges.len() <= k);
+            assert_eq!(ranges[0].0, 0);
+            assert_eq!(ranges.last().unwrap().1, n);
+            for w in ranges.windows(2) {
+                assert_eq!(w[0].1, w[1].0, "contiguous");
+            }
+            for &(a, b) in &ranges {
+                assert!(b > a, "non-empty");
+            }
+            let sizes: Vec<usize> = ranges.iter().map(|&(a, b)| b - a).collect();
+            let (mn, mx) = (sizes.iter().min().unwrap(), sizes.iter().max().unwrap());
+            assert!(mx - mn <= 1, "near-equal: {sizes:?}");
+        }
+        assert!(chunk_ranges(0, 4).is_empty());
     }
 }

@@ -7,6 +7,8 @@
 //! positions, so gather/scatter does the permuting implicitly.
 
 use crate::compress::QFactor;
+use crate::la::blas::{gemm, gemm_tn};
+use crate::la::dense::Mat;
 
 /// The local rotation of one diagonal block, in stage-input coordinates.
 #[derive(Clone, Debug)]
@@ -69,6 +71,39 @@ impl Stage {
         v
     }
 
+    /// Blocked (multi-RHS) [`Stage::forward`]: apply Q̄_ℓ to every column
+    /// of an `n_in × b` block at once, then split the rows into
+    /// (core, wavelet) blocks. One pass over the stage's rotations serves
+    /// all b right-hand sides — the per-rotation work is two contiguous
+    /// row axpys instead of b strided scalar pairs.
+    pub fn forward_mat(&self, v: &mut Mat) -> (Mat, Mat) {
+        debug_assert_eq!(v.rows, self.n_in);
+        for b in &self.blocks {
+            apply_block_mat(&b.q, &b.idx, v, false);
+        }
+        (v.gather_rows(&self.core_global), v.gather_rows(&self.wavelet_global))
+    }
+
+    /// Inverse of [`Stage::forward_mat`]: scatter the (core, wavelet) row
+    /// blocks back into stage-input coordinates and apply Q̄ᵀ to all
+    /// columns.
+    pub fn backward_mat(&self, core: &Mat, wav: &Mat) -> Mat {
+        debug_assert_eq!(core.rows, self.core_global.len());
+        debug_assert_eq!(wav.rows, self.wavelet_global.len());
+        debug_assert_eq!(core.cols, wav.cols);
+        let mut v = Mat::zeros(self.n_in, core.cols);
+        for (a, &g) in self.core_global.iter().enumerate() {
+            v.row_mut(g).copy_from_slice(core.row(a));
+        }
+        for (a, &g) in self.wavelet_global.iter().enumerate() {
+            v.row_mut(g).copy_from_slice(wav.row(a));
+        }
+        for b in &self.blocks {
+            apply_block_mat(&b.q, &b.idx, &mut v, true);
+        }
+        v
+    }
+
     /// Stored reals in this stage (Proposition 3/5 audits): rotations + D.
     pub fn stored_reals(&self) -> usize {
         self.blocks.iter().map(|b| b.q.stored_reals()).sum::<usize>() + self.dvals.len()
@@ -117,6 +152,50 @@ fn apply_block(q: &QFactor, idx: &[usize], v: &mut [f64], scratch: &mut Vec<f64>
                 v[i] = s;
             }
         }
+    }
+}
+
+/// Blocked analogue of [`apply_block`]: apply one block's local rotation
+/// (or its transpose) to every column of an `n_in × b` matrix.
+///
+/// * Givens factors act directly on the full block — a rotation in the
+///   (local i, j) plane mixes global rows `idx[i]` and `idx[j]`, two
+///   contiguous slices in the row-major layout.
+/// * Dense factors gather the block's rows once and hit them with a single
+///   `gemm` instead of b `gemv`s.
+fn apply_block_mat(q: &QFactor, idx: &[usize], v: &mut Mat, transpose: bool) {
+    match q {
+        QFactor::Identity => {}
+        QFactor::Givens(seq) => {
+            if transpose {
+                for g in seq.rots.iter().rev() {
+                    rotate_rows(v, idx[g.i], idx[g.j], g.c, -g.s);
+                }
+            } else {
+                for g in &seq.rots {
+                    rotate_rows(v, idx[g.i], idx[g.j], g.c, g.s);
+                }
+            }
+        }
+        QFactor::Dense(qm) => {
+            let sub = v.gather_rows(idx); // m × b
+            let new = if transpose { gemm_tn(qm, &sub) } else { gemm(qm, &sub) };
+            for (a, &i) in idx.iter().enumerate() {
+                v.row_mut(i).copy_from_slice(new.row(a));
+            }
+        }
+    }
+}
+
+/// Row-pair Givens application: (rowᵢ, rowⱼ) ← (c·rowᵢ + s·rowⱼ,
+/// −s·rowᵢ + c·rowⱼ). The transpose is the same map with s ↦ −s.
+#[inline]
+fn rotate_rows(v: &mut Mat, i: usize, j: usize, c: f64, s: f64) {
+    let (ri, rj) = v.rows_pair_mut(i, j);
+    for (a, b) in ri.iter_mut().zip(rj.iter_mut()) {
+        let (x, y) = (*a, *b);
+        *a = c * x + s * y;
+        *b = -s * x + c * y;
     }
 }
 
@@ -187,6 +266,79 @@ mod tests {
         let mut st3 = demo_stage();
         st3.dvals = vec![1.0]; // wrong length
         assert!(!st3.check_valid());
+    }
+
+    #[test]
+    fn forward_mat_matches_columnwise_forward() {
+        let st = demo_stage();
+        let mut rng = Rng::new(7);
+        let b = 5;
+        let z = Mat::from_fn(4, b, |_, _| rng.normal());
+        let mut vm = z.clone();
+        let (core_m, wav_m) = st.forward_mat(&mut vm);
+        let mut scratch = Vec::new();
+        for j in 0..b {
+            let mut col = z.col(j);
+            let (core, wav) = st.forward(&mut col, &mut scratch);
+            for (i, &c) in core.iter().enumerate() {
+                assert!((core_m.at(i, j) - c).abs() < 1e-12, "core[{i},{j}]");
+            }
+            for (i, &w) in wav.iter().enumerate() {
+                assert!((wav_m.at(i, j) - w).abs() < 1e-12, "wav[{i},{j}]");
+            }
+        }
+    }
+
+    #[test]
+    fn forward_backward_mat_roundtrip() {
+        let st = demo_stage();
+        let mut rng = Rng::new(8);
+        let z = Mat::from_fn(4, 3, |_, _| rng.normal());
+        let mut vm = z.clone();
+        let (core, wav) = st.forward_mat(&mut vm);
+        let back = st.backward_mat(&core, &wav);
+        assert!(back.sub(&z).max_abs() < 1e-12);
+    }
+
+    #[test]
+    fn dense_block_forward_mat_matches_vector_path() {
+        // A stage with a Dense Q exercises the gemm branch of
+        // apply_block_mat.
+        let mut rng = Rng::new(9);
+        let q = {
+            // Orthogonalize a random 3x3 via Givens products.
+            let mut seq = GivensSeq::new();
+            seq.push(Givens::jacobi(0, 1, rng.normal(), rng.normal(), rng.normal()));
+            seq.push(Givens::jacobi(1, 2, rng.normal(), rng.normal(), rng.normal()));
+            seq.to_dense(3)
+        };
+        let st = Stage {
+            n_in: 4,
+            blocks: vec![
+                BlockFactor { idx: vec![0, 2, 3], q: QFactor::Dense(q) },
+                BlockFactor { idx: vec![1], q: QFactor::Identity },
+            ],
+            core_global: vec![0, 1],
+            wavelet_global: vec![2, 3],
+            dvals: vec![0.4, 0.6],
+        };
+        assert!(st.check_valid());
+        let z = Mat::from_fn(4, 6, |_, _| rng.normal());
+        let mut vm = z.clone();
+        let (core_m, wav_m) = st.forward_mat(&mut vm);
+        let mut scratch = Vec::new();
+        for j in 0..6 {
+            let mut col = z.col(j);
+            let (core, wav) = st.forward(&mut col, &mut scratch);
+            for (i, &c) in core.iter().enumerate() {
+                assert!((core_m.at(i, j) - c).abs() < 1e-12);
+            }
+            for (i, &w) in wav.iter().enumerate() {
+                assert!((wav_m.at(i, j) - w).abs() < 1e-12);
+            }
+        }
+        let back = st.backward_mat(&core_m, &wav_m);
+        assert!(back.sub(&z).max_abs() < 1e-12);
     }
 
     #[test]

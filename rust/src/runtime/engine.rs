@@ -9,6 +9,12 @@
 //!   results are unwrapped with `to_tuple1`;
 //! * all shapes are fixed — the handle pads inputs (zero rows / identity
 //!   diagonal) and slices outputs back down.
+//!
+//! The actual PJRT bindings live behind the `xla` cargo feature (the
+//! offline build has no `xla` crate). Without the feature the full
+//! manifest / padding / actor protocol still compiles and is tested, but
+//! [`XlaEngine::start`] fails fast with a clear error so callers fall
+//! back to the native kernels.
 
 use std::sync::mpsc;
 use std::sync::{Arc, Mutex};
@@ -27,6 +33,12 @@ enum Request {
     Ata { a: Mat, resp: mpsc::Sender<Result<Mat>> },
     /// α = (K + σ²I)⁻¹ y on a padded system.
     CholSolve { k: Mat, y: Vec<f64>, sigma2: f64, resp: mpsc::Sender<Result<Vec<f64>>> },
+    /// Blocked multi-RHS solve: A = (K + σ²I)⁻¹ Y for Y with b columns.
+    /// One request for the whole block; the backend uses the dedicated
+    /// multi-RHS artifact in `chol_b`-wide chunks (one factorization per
+    /// chunk) when it is present, and otherwise loops the single-RHS
+    /// artifact per column reusing one K literal.
+    CholSolveMat { k: Mat, ys: Mat, sigma2: f64, resp: mpsc::Sender<Result<Mat>> },
     Shutdown,
 }
 
@@ -46,7 +58,8 @@ pub struct XlaEngine {
 impl XlaEngine {
     /// Load the manifest from `dir`, compile every artifact on a dedicated
     /// PJRT thread, and return the engine. Fails fast if the client cannot
-    /// be created or any artifact fails to compile.
+    /// be created or any artifact fails to compile (or the crate was built
+    /// without the `xla` feature).
     pub fn start(dir: &std::path::Path) -> Result<XlaEngine> {
         let manifest = Arc::new(Manifest::load(dir)?);
         manifest.check_files()?;
@@ -153,6 +166,34 @@ impl EngineHandle {
         Ok(full[..y.len()].to_vec())
     }
 
+    /// Blocked multi-RHS solve A = (K + σ²I)⁻¹ Y, where the columns of
+    /// `ys` (k.rows × b) are independent right-hand sides. K is padded
+    /// once for the whole block; with the `chol_solve_mat` artifact
+    /// loaded the backend solves `chol_b` columns per execution (one
+    /// factorization per chunk), otherwise it falls back to per-column
+    /// execution sharing one K literal. Columns come back in order.
+    pub fn chol_solve_mat(&self, k: &Mat, ys: &Mat, sigma2: f64) -> Result<Mat> {
+        let n = self.manifest.chol_n;
+        if k.rows > n {
+            return Err(Error::Runtime(format!("chol_solve_mat n={} > {n}", k.rows)));
+        }
+        if ys.rows != k.rows {
+            return Err(Error::Runtime(format!(
+                "chol_solve_mat rhs rows {} != n {}",
+                ys.rows, k.rows
+            )));
+        }
+        let mut kp = Mat::eye(n);
+        kp.set_block(0, 0, k);
+        let ysp = pad_to(ys, n, ys.cols);
+        let (tx_resp, rx_resp) = mpsc::channel();
+        self.send(Request::CholSolveMat { k: kp, ys: ysp, sigma2, resp: tx_resp })?;
+        let full = rx_resp
+            .recv()
+            .map_err(|_| Error::Runtime("engine dropped response".into()))??;
+        Ok(full.block(0, ys.rows, 0, ys.cols))
+    }
+
     pub fn gram_tile_size(&self) -> usize {
         self.manifest.gram_tile
     }
@@ -187,17 +228,74 @@ fn pad_to(a: &Mat, rows: usize, cols: usize) -> Mat {
 }
 
 // ---------------------------------------------------------------------------
-// Actor internals (the only code touching the xla crate).
+// Actor loop (backend-agnostic).
 // ---------------------------------------------------------------------------
 
-struct Compiled {
-    gram: Option<xla::PjRtLoadedExecutable>,
-    ata: Option<xla::PjRtLoadedExecutable>,
-    chol: Option<xla::PjRtLoadedExecutable>,
+fn actor_main(manifest: Arc<Manifest>, rx: mpsc::Receiver<Request>, ready: mpsc::Sender<Result<()>>) {
+    let compiled = match backend::setup(&manifest) {
+        Ok(c) => {
+            let _ = ready.send(Ok(()));
+            c
+        }
+        Err(e) => {
+            let _ = ready.send(Err(e));
+            return;
+        }
+    };
+
+    while let Ok(req) = rx.recv() {
+        match req {
+            Request::Shutdown => break,
+            Request::RbfTile { x, y, ell, sf2, resp } => {
+                let out = backend::run_gram(&compiled, &x, &y, ell, sf2);
+                let _ = resp.send(out);
+            }
+            Request::Ata { a, resp } => {
+                let out = backend::run_ata(&compiled, &a);
+                let _ = resp.send(out);
+            }
+            Request::CholSolve { k, y, sigma2, resp } => {
+                let out = backend::run_chol(&compiled, &k, &y, sigma2);
+                let _ = resp.send(out);
+            }
+            Request::CholSolveMat { k, ys, sigma2, resp } => {
+                let out = backend::run_chol_mat(&compiled, &k, &ys, sigma2);
+                let _ = resp.send(out);
+            }
+        }
+    }
 }
 
-fn actor_main(manifest: Arc<Manifest>, rx: mpsc::Receiver<Request>, ready: mpsc::Sender<Result<()>>) {
-    let setup = (|| -> Result<(xla::PjRtClient, Compiled)> {
+// ---------------------------------------------------------------------------
+// Real backend (the only code touching the xla crate).
+// ---------------------------------------------------------------------------
+
+// The offline build has no `xla` crate, so enabling the feature without
+// vendoring it would otherwise die in a wall of unresolved-import errors.
+// Surface one actionable message instead. To light up the real backend:
+// add `xla = { path = "<vendored xla-rs>" }` under [dependencies] in
+// rust/Cargo.toml and delete this guard.
+#[cfg(feature = "xla")]
+compile_error!(
+    "the `xla` feature requires a vendored `xla` crate: add it as a path \
+     dependency in rust/Cargo.toml, then remove this compile_error guard \
+     in rust/src/runtime/engine.rs"
+);
+
+#[cfg(feature = "xla")]
+mod backend {
+    use super::*;
+
+    pub struct Compiled {
+        gram: Option<xla::PjRtLoadedExecutable>,
+        ata: Option<xla::PjRtLoadedExecutable>,
+        chol: Option<xla::PjRtLoadedExecutable>,
+        chol_mat: Option<xla::PjRtLoadedExecutable>,
+        chol_b: usize,
+        _client: xla::PjRtClient,
+    }
+
+    pub fn setup(manifest: &Manifest) -> Result<Compiled> {
         let client = xla::PjRtClient::cpu().map_err(|e| Error::Runtime(format!("pjrt: {e}")))?;
         let compile = |name: &str| -> Result<Option<xla::PjRtLoadedExecutable>> {
             match manifest.artifact(name) {
@@ -213,84 +311,151 @@ fn actor_main(manifest: Arc<Manifest>, rx: mpsc::Receiver<Request>, ready: mpsc:
                 }
             }
         };
-        let compiled =
-            Compiled { gram: compile("gram_tile")?, ata: compile("ata")?, chol: compile("chol_solve")? };
-        Ok((client, compiled))
-    })();
+        Ok(Compiled {
+            gram: compile("gram_tile")?,
+            ata: compile("ata")?,
+            chol: compile("chol_solve")?,
+            chol_mat: compile("chol_solve_mat")?,
+            chol_b: manifest.chol_b,
+            _client: client,
+        })
+    }
 
-    let (_client, compiled) = match setup {
-        Ok(v) => {
-            let _ = ready.send(Ok(()));
-            v
-        }
-        Err(e) => {
-            let _ = ready.send(Err(e));
-            return;
-        }
-    };
+    fn mat_literal(m: &Mat) -> Result<xla::Literal> {
+        xla::Literal::vec1(&m.data)
+            .reshape(&[m.rows as i64, m.cols as i64])
+            .map_err(|e| Error::Runtime(format!("literal: {e}")))
+    }
 
-    while let Ok(req) = rx.recv() {
-        match req {
-            Request::Shutdown => break,
-            Request::RbfTile { x, y, ell, sf2, resp } => {
-                let out = run_gram(&compiled, &x, &y, ell, sf2);
-                let _ = resp.send(out);
+    fn run1(exe: &xla::PjRtLoadedExecutable, args: &[xla::Literal]) -> Result<xla::Literal> {
+        let result = exe
+            .execute::<xla::Literal>(args)
+            .map_err(|e| Error::Runtime(format!("execute: {e}")))?;
+        let lit = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| Error::Runtime(format!("to_literal: {e}")))?;
+        lit.to_tuple1().map_err(|e| Error::Runtime(format!("tuple: {e}")))
+    }
+
+    pub fn run_gram(c: &Compiled, x: &Mat, y: &Mat, ell: f64, sf2: f64) -> Result<Mat> {
+        let exe = c.gram.as_ref().ok_or_else(|| Error::Runtime("gram_tile not loaded".into()))?;
+        let t = x.rows;
+        let args = vec![
+            mat_literal(x)?,
+            mat_literal(y)?,
+            xla::Literal::vec1(&[ell]),
+            xla::Literal::vec1(&[sf2]),
+        ];
+        let out = run1(exe, &args)?;
+        let data = out.to_vec::<f64>().map_err(|e| Error::Runtime(format!("to_vec: {e}")))?;
+        Ok(Mat::from_vec(t, t, data))
+    }
+
+    pub fn run_ata(c: &Compiled, a: &Mat) -> Result<Mat> {
+        let exe = c.ata.as_ref().ok_or_else(|| Error::Runtime("ata not loaded".into()))?;
+        let m = a.rows;
+        let out = run1(exe, &[mat_literal(a)?])?;
+        let data = out.to_vec::<f64>().map_err(|e| Error::Runtime(format!("to_vec: {e}")))?;
+        Ok(Mat::from_vec(m, m, data))
+    }
+
+    pub fn run_chol(c: &Compiled, k: &Mat, y: &[f64], sigma2: f64) -> Result<Vec<f64>> {
+        let exe = c.chol.as_ref().ok_or_else(|| Error::Runtime("chol_solve not loaded".into()))?;
+        let args = vec![mat_literal(k)?, xla::Literal::vec1(y), xla::Literal::vec1(&[sigma2])];
+        let out = run1(exe, &args)?;
+        out.to_vec::<f64>().map_err(|e| Error::Runtime(format!("to_vec: {e}")))
+    }
+
+    /// Multi-RHS solve. Preferred path: the `chol_solve_mat` artifact,
+    /// which factors K once per `chol_b`-wide column chunk (ragged tails
+    /// are padded with zero columns — the artifact maps zero RHS to zero
+    /// exactly). Fallback when that artifact is absent: loop the
+    /// single-RHS executable per column, still converting/uploading the
+    /// n×n K literal only once.
+    pub fn run_chol_mat(c: &Compiled, k: &Mat, ys: &Mat, sigma2: f64) -> Result<Mat> {
+        let (n, b) = (ys.rows, ys.cols);
+        let mut out = Mat::zeros(n, b);
+        if let Some(exe) = c.chol_mat.as_ref() {
+            let bw = c.chol_b.max(1);
+            let mut chunk = Mat::zeros(n, bw);
+            // args[0] (the K literal) is built once and reused; only the
+            // RHS literal is rebuilt per chunk.
+            let mut args = vec![
+                mat_literal(k)?,
+                mat_literal(&chunk)?,
+                xla::Literal::vec1(&[sigma2]),
+            ];
+            for c0 in (0..b).step_by(bw) {
+                let width = bw.min(b - c0);
+                for i in 0..n {
+                    let dst = chunk.row_mut(i);
+                    dst[..width].copy_from_slice(&ys.row(i)[c0..c0 + width]);
+                    dst[width..].fill(0.0);
+                }
+                args[1] = mat_literal(&chunk)?;
+                let data = run1(exe, &args)?
+                    .to_vec::<f64>()
+                    .map_err(|e| Error::Runtime(format!("to_vec: {e}")))?;
+                let alpha = Mat::from_vec(n, bw, data);
+                for i in 0..n {
+                    out.row_mut(i)[c0..c0 + width].copy_from_slice(&alpha.row(i)[..width]);
+                }
             }
-            Request::Ata { a, resp } => {
-                let out = run_ata(&compiled, &a);
-                let _ = resp.send(out);
-            }
-            Request::CholSolve { k, y, sigma2, resp } => {
-                let out = run_chol(&compiled, &k, &y, sigma2);
-                let _ = resp.send(out);
-            }
+            return Ok(out);
         }
+        let exe = c.chol.as_ref().ok_or_else(|| Error::Runtime("chol_solve not loaded".into()))?;
+        let mut col = vec![0.0; n];
+        let mut args = vec![
+            mat_literal(k)?,
+            xla::Literal::vec1(&col),
+            xla::Literal::vec1(&[sigma2]),
+        ];
+        for j in 0..b {
+            for i in 0..n {
+                col[i] = ys.at(i, j);
+            }
+            args[1] = xla::Literal::vec1(&col);
+            let alpha = run1(exe, &args)?
+                .to_vec::<f64>()
+                .map_err(|e| Error::Runtime(format!("to_vec: {e}")))?;
+            out.set_col(j, &alpha[..n]);
+        }
+        Ok(out)
     }
 }
 
-fn mat_literal(m: &Mat) -> Result<xla::Literal> {
-    xla::Literal::vec1(&m.data)
-        .reshape(&[m.rows as i64, m.cols as i64])
-        .map_err(|e| Error::Runtime(format!("literal: {e}")))
-}
+// ---------------------------------------------------------------------------
+// Stub backend: keeps the engine protocol compiling & tested offline.
+// ---------------------------------------------------------------------------
 
-fn run1(exe: &xla::PjRtLoadedExecutable, args: &[xla::Literal]) -> Result<xla::Literal> {
-    let result = exe
-        .execute::<xla::Literal>(args)
-        .map_err(|e| Error::Runtime(format!("execute: {e}")))?;
-    let lit = result[0][0]
-        .to_literal_sync()
-        .map_err(|e| Error::Runtime(format!("to_literal: {e}")))?;
-    lit.to_tuple1().map_err(|e| Error::Runtime(format!("tuple: {e}")))
-}
+#[cfg(not(feature = "xla"))]
+mod backend {
+    use super::*;
 
-fn run_gram(c: &Compiled, x: &Mat, y: &Mat, ell: f64, sf2: f64) -> Result<Mat> {
-    let exe = c.gram.as_ref().ok_or_else(|| Error::Runtime("gram_tile not loaded".into()))?;
-    let t = x.rows;
-    let args = vec![
-        mat_literal(x)?,
-        mat_literal(y)?,
-        xla::Literal::vec1(&[ell]),
-        xla::Literal::vec1(&[sf2]),
-    ];
-    let out = run1(exe, &args)?;
-    let data = out.to_vec::<f64>().map_err(|e| Error::Runtime(format!("to_vec: {e}")))?;
-    Ok(Mat::from_vec(t, t, data))
-}
+    pub struct Compiled;
 
-fn run_ata(c: &Compiled, a: &Mat) -> Result<Mat> {
-    let exe = c.ata.as_ref().ok_or_else(|| Error::Runtime("ata not loaded".into()))?;
-    let m = a.rows;
-    let out = run1(exe, &[mat_literal(a)?])?;
-    let data = out.to_vec::<f64>().map_err(|e| Error::Runtime(format!("to_vec: {e}")))?;
-    Ok(Mat::from_vec(m, m, data))
-}
+    const MSG: &str = "mka-gp was built without the `xla` feature; \
+                       AOT artifacts cannot be executed — use native kernels";
 
-fn run_chol(c: &Compiled, k: &Mat, y: &[f64], sigma2: f64) -> Result<Vec<f64>> {
-    let exe = c.chol.as_ref().ok_or_else(|| Error::Runtime("chol_solve not loaded".into()))?;
-    let args = vec![mat_literal(k)?, xla::Literal::vec1(y), xla::Literal::vec1(&[sigma2])];
-    let out = run1(exe, &args)?;
-    out.to_vec::<f64>().map_err(|e| Error::Runtime(format!("to_vec: {e}")))
+    pub fn setup(_manifest: &Manifest) -> Result<Compiled> {
+        Err(Error::Runtime(MSG.into()))
+    }
+
+    pub fn run_gram(_c: &Compiled, _x: &Mat, _y: &Mat, _ell: f64, _sf2: f64) -> Result<Mat> {
+        Err(Error::Runtime(MSG.into()))
+    }
+
+    pub fn run_ata(_c: &Compiled, _a: &Mat) -> Result<Mat> {
+        Err(Error::Runtime(MSG.into()))
+    }
+
+    pub fn run_chol(_c: &Compiled, _k: &Mat, _y: &[f64], _sigma2: f64) -> Result<Vec<f64>> {
+        Err(Error::Runtime(MSG.into()))
+    }
+
+    pub fn run_chol_mat(_c: &Compiled, _k: &Mat, _ys: &Mat, _sigma2: f64) -> Result<Mat> {
+        Err(Error::Runtime(MSG.into()))
+    }
 }
 
 #[cfg(test)]

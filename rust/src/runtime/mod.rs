@@ -35,6 +35,8 @@ pub struct Manifest {
     pub ata_m: usize,
     /// Fixed Cholesky-solve size.
     pub chol_n: usize,
+    /// RHS-block width of the multi-RHS Cholesky-solve artifact.
+    pub chol_b: usize,
 }
 
 impl Manifest {
@@ -77,6 +79,7 @@ impl Manifest {
             gram_dim: shape_of("gram_tile", "dim", 32),
             ata_m: shape_of("ata", "m", 256),
             chol_n: shape_of("chol_solve", "n", 512),
+            chol_b: shape_of("chol_solve_mat", "b", 32),
         })
     }
 

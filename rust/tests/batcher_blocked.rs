@@ -1,0 +1,118 @@
+//! End-to-end proof that a coalesced predict batch runs ONE blocked
+//! cascade: b concurrent single-point requests against the same MKA model
+//! are merged by the `PredictBatcher` into a single `predict` call, and
+//! that call issues exactly one multi-RHS solve (one orthogonal cascade)
+//! through the factor stack.
+//!
+//! This lives in its own integration binary on purpose: the cascade
+//! counter is process-wide, and any other test running MKA applies in the
+//! same process would pollute the delta.
+
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use mka_gp::coordinator::{Metrics, ModelRegistry, PredictBatcher};
+use mka_gp::data::synth::{gp_dataset, SynthSpec};
+use mka_gp::gp::mka_gp::MkaGp;
+use mka_gp::gp::{GpModel, Prediction};
+use mka_gp::kernels::RbfKernel;
+use mka_gp::la::Mat;
+use mka_gp::mka::{cascade_count, MkaConfig};
+
+/// Wrapper that records the row count of every predict call it serves.
+struct Recording {
+    inner: MkaGp,
+    rows_per_call: Arc<Mutex<Vec<usize>>>,
+}
+
+impl GpModel for Recording {
+    fn predict(&self, x: &Mat) -> Prediction {
+        self.rows_per_call.lock().unwrap().push(x.rows);
+        self.inner.predict(x)
+    }
+
+    fn name(&self) -> String {
+        "recording-mka".into()
+    }
+}
+
+#[test]
+fn coalesced_batch_is_one_blocked_cascade() {
+    let data = gp_dataset(&SynthSpec::named("blocked", 120, 2), 3);
+    let (tr, te) = data.split(0.9, 1);
+    let b = 6.min(te.n());
+    assert!(b >= 2, "need at least 2 test points");
+    let cfg = MkaConfig { d_core: 16, block_size: 48, n_threads: 1, ..MkaConfig::default() };
+    let model = MkaGp::fit(&tr, &RbfKernel::new(1.0), 0.1, &cfg).unwrap();
+
+    let rows_per_call = Arc::new(Mutex::new(Vec::new()));
+    let registry = ModelRegistry::new();
+    registry.publish(
+        "m",
+        Arc::new(Recording { inner: model, rows_per_call: Arc::clone(&rows_per_call) }),
+    );
+    let batcher = PredictBatcher::start(
+        registry,
+        Arc::new(Metrics::new()),
+        Duration::from_millis(200),
+        64,
+    );
+
+    let before = cascade_count();
+    // Enqueue b single-point requests inside one batching window
+    // (submit is non-blocking), then collect all responses.
+    let rxs: Vec<_> = (0..b)
+        .map(|i| batcher.submit("m", te.x.block(i, i + 1, 0, te.x.cols)))
+        .collect();
+    let preds: Vec<Prediction> = rxs
+        .into_iter()
+        .map(|rx| rx.recv().expect("batcher dropped request").expect("predict failed"))
+        .collect();
+    let cascades = cascade_count() - before;
+
+    // Every caller got its one-point slice back.
+    assert_eq!(preds.len(), b);
+    for p in &preds {
+        assert_eq!(p.mean.len(), 1);
+        assert!(p.mean[0].is_finite() && p.var[0] > 0.0);
+    }
+
+    // The b requests were coalesced into one model call carrying all rows…
+    let calls = rows_per_call.lock().unwrap().clone();
+    assert_eq!(calls.iter().sum::<usize>(), b, "all rows served: {calls:?}");
+    assert_eq!(calls.len(), 1, "batch was split into {calls:?}");
+
+    // …and that call ran exactly ONE orthogonal cascade: the p+1
+    // right-hand sides of the §4.1 predictor ride a single solve_mat.
+    assert_eq!(cascades, 1, "expected one blocked cascade, saw {cascades}");
+
+    // Control: b sequential independent predicts cost b cascades.
+    let model = Recording {
+        inner: MkaGp::fit(&tr, &RbfKernel::new(1.0), 0.1, &cfg).unwrap(),
+        rows_per_call: Arc::new(Mutex::new(Vec::new())),
+    };
+    let before = cascade_count();
+    for i in 0..b {
+        let _ = model.predict(&te.x.block(i, i + 1, 0, te.x.cols));
+    }
+    assert_eq!(
+        cascade_count() - before,
+        b as u64,
+        "per-vector serving should cost one cascade per request"
+    );
+
+    // Column-parallel execution still counts ONE logical cascade: a wide
+    // batch with n_threads > 1 shards the RHS over workers but must not
+    // inflate the serving metric.
+    let par_cfg = MkaConfig { n_threads: 4, ..cfg };
+    let par_model = MkaGp::fit(&tr, &RbfKernel::new(1.0), 0.1, &par_cfg).unwrap();
+    // 20 test points -> 21 RHS columns, over the chunking threshold.
+    let wide = data.x.block(0, 20, 0, data.x.cols);
+    let before = cascade_count();
+    let _ = par_model.predict(&wide);
+    assert_eq!(
+        cascade_count() - before,
+        1,
+        "column-sharded predict must count one logical cascade"
+    );
+}

@@ -15,6 +15,10 @@ use mka_gp::runtime::engine::XlaEngine;
 use mka_gp::util::Rng;
 
 fn engine() -> Option<XlaEngine> {
+    if cfg!(not(feature = "xla")) {
+        eprintln!("SKIP: built without the `xla` feature (PJRT backend stubbed)");
+        return None;
+    }
     let dir = Path::new("artifacts");
     if !dir.join("manifest.json").exists() {
         eprintln!("SKIP: artifacts/ not built (run `make artifacts`)");
