@@ -9,14 +9,20 @@
 
 use mka_gp::bench::{bench_budget, fmt_secs, Table};
 use mka_gp::data::synth::{clustered_features, gp_dataset, SynthSpec};
+use mka_gp::gp::mka_gp::MkaGp;
+use mka_gp::gp::GpModel;
 use mka_gp::kernels::{Kernel, RbfKernel};
 use mka_gp::la::{gemv, Chol, Mat};
 use mka_gp::mka::parallel::default_threads;
 use mka_gp::mka::{factorize, MkaConfig};
-use mka_gp::util::{Args, Rng, Timer};
+use mka_gp::util::{Args, Json, Rng, Timer};
 
 fn main() {
     let args = Args::from_env(false);
+    if args.has_flag("json") {
+        run_json_bench(&args);
+        return;
+    }
     let sizes = args.get_usize_list("sizes", &[512, 1024, 2048, 4096]);
     let d_core = args.get_usize("d-core", 64);
 
@@ -151,4 +157,121 @@ fn main() {
         fmt_secs(sv.mean_s),
         sv.mean_s / sm.mean_s.max(1e-12)
     );
+}
+
+/// `--json` mode: machine-readable perf trajectory across PRs.
+///
+///     cargo bench --bench complexity -- --json \
+///         [--sizes 1024,2048,4096] [--threads 1,2,4] [--rhs 32] \
+///         [--test-points 64] [--out ../BENCH_perf.json]
+///
+/// For every (n, threads) cell it times factorize, a blocked solve
+/// (`solve_mat`, `rhs` columns) and an end-to-end `MkaGp::predict`
+/// (joint gram + factorize + blocked solve), asserts that every thread
+/// count reproduces the single-thread solve bit-for-bit, and writes
+/// speedups vs the serial column to `--out`. CI runs a small-n smoke
+/// invocation of exactly this path.
+fn run_json_bench(args: &Args) {
+    let sizes = args.get_usize_list("sizes", &[1024, 2048, 4096]);
+    let threads_list = args.get_usize_list("threads", &[1, 2, 4]);
+    let rhs = args.get_usize("rhs", 32);
+    let test_points = args.get_usize("test-points", 64);
+    let d_core = args.get_usize("d-core", 64);
+    let out_path = args.get_or("out", "../BENCH_perf.json").to_string();
+
+    let mut results: Vec<Json> = Vec::new();
+    let mut accept = Json::obj();
+    for &n in &sizes {
+        let data = gp_dataset(&SynthSpec::named("perf", n, 4), 5);
+        let (tr, te) = data.split(0.95, 7);
+        let p = test_points.min(te.n()).max(1);
+        let te_x = te.x.block(0, p, 0, te.x.cols);
+        let kern = RbfKernel::new(0.8);
+        let mut k = kern.gram_sym(&tr.x);
+        k.add_diag(0.1);
+        let mut rng = Rng::new(11);
+        let z = Mat::from_fn(k.rows, rhs, |_, _| rng.normal());
+
+        let mut base: Option<(f64, f64, f64)> = None;
+        let mut reference_solve: Option<Mat> = None;
+        for &t in &threads_list {
+            mka_gp::par::set_threads(t);
+            let cfg = MkaConfig {
+                d_core,
+                block_size: 256,
+                n_threads: t,
+                ..MkaConfig::default()
+            };
+            let timer = Timer::start();
+            let f = factorize(&k, Some(&tr.x), &cfg).expect("factorize");
+            let fact_s = timer.elapsed_secs();
+
+            let timer = Timer::start();
+            let sol = f.solve_mat_par(&z, t).expect("solve");
+            let solve_s = timer.elapsed_secs();
+            match &reference_solve {
+                None => reference_solve = Some(sol),
+                Some(r) => assert_eq!(
+                    r.data, sol.data,
+                    "solve at {t} threads must be bit-identical to serial (n={n})"
+                ),
+            }
+
+            let model = MkaGp::fit(&tr, &kern, 0.1, &cfg).expect("fit");
+            let timer = Timer::start();
+            let pred = model.predict(&te_x);
+            let predict_s = timer.elapsed_secs();
+            assert_eq!(pred.mean.len(), p);
+
+            let (f0, s0, p0) = *base.get_or_insert((fact_s, solve_s, predict_s));
+            let row = Json::obj()
+                .with("n", Json::Num(n as f64))
+                .with("threads", Json::Num(t as f64))
+                .with("stages", Json::Num(f.n_stages() as f64))
+                .with("factorize_s", Json::Num(fact_s))
+                .with("solve_mat_s", Json::Num(solve_s))
+                .with("predict_s", Json::Num(predict_s))
+                .with("factorize_speedup", Json::Num(f0 / fact_s.max(1e-12)))
+                .with("solve_speedup", Json::Num(s0 / solve_s.max(1e-12)))
+                .with("predict_speedup", Json::Num(p0 / predict_s.max(1e-12)))
+                .with("bit_identical", Json::Bool(true));
+            println!(
+                "n={n} t={t}: factorize {} ({:.2}x) solve {} ({:.2}x) predict {} ({:.2}x)",
+                fmt_secs(fact_s),
+                f0 / fact_s.max(1e-12),
+                fmt_secs(solve_s),
+                s0 / solve_s.max(1e-12),
+                fmt_secs(predict_s),
+                p0 / predict_s.max(1e-12)
+            );
+            if n == *sizes.last().unwrap() && t == *threads_list.last().unwrap() {
+                accept = Json::obj()
+                    .with("n", Json::Num(n as f64))
+                    .with("threads", Json::Num(t as f64))
+                    .with("factorize_speedup", Json::Num(f0 / fact_s.max(1e-12)))
+                    .with("predict_speedup", Json::Num(p0 / predict_s.max(1e-12)))
+                    .with(
+                        "ge_2x",
+                        Json::Bool(
+                            f0 / fact_s.max(1e-12) >= 2.0 || p0 / predict_s.max(1e-12) >= 2.0,
+                        ),
+                    );
+            }
+            results.push(row);
+        }
+    }
+
+    let doc = Json::obj()
+        .with("bench", Json::Str("mka_perf".into()))
+        .with(
+            "generated_by",
+            Json::Str("cargo bench --bench complexity -- --json".into()),
+        )
+        .with("rhs_cols", Json::Num(rhs as f64))
+        .with("test_points", Json::Num(test_points as f64))
+        .with("pool_jobs", Json::Num(mka_gp::par::jobs_executed() as f64))
+        .with("results", Json::Arr(results))
+        .with("acceptance", accept);
+    std::fs::write(&out_path, doc.dump_pretty()).expect("write bench json");
+    println!("wrote {out_path}");
 }

@@ -9,13 +9,13 @@
 //!   mean(x*) = k_zᵀ A⁻¹ K_zf Λ⁻¹ y
 //!   var(x*)  = k** − k_zᵀ W⁻¹ k_z + k_zᵀ A⁻¹ k_z + σ²
 
-use super::nystrom::{select_landmarks, LandmarkMethod, NystromBlocks};
+use super::nystrom::{column_sq_norms, select_landmarks, LandmarkMethod, NystromBlocks};
 use crate::data::dataset::Dataset;
 use crate::error::Result;
 use crate::gp::{GpModel, Prediction};
 use crate::kernels::Kernel;
-use crate::la::blas::{dot, gemv};
-use crate::la::chol::{solve_lower, Chol};
+use crate::la::blas::{gemm_nt, gemv, gemv_t};
+use crate::la::chol::{solve_lower_mat, Chol};
 use crate::la::dense::Mat;
 
 /// Fitted FITC model.
@@ -48,23 +48,17 @@ impl Fitc {
         let lam: Vec<f64> = (0..n)
             .map(|i| (kernel.diag(train.x.row(i)) - qd[i]).max(0.0) + sigma2)
             .collect();
-        // A = W + K_zf Λ⁻¹ K_fz
-        let m_ = nb.m();
+        // A = W + K_zf Λ⁻¹ K_fz — one rank-n GEMM over the column-scaled
+        // cross block instead of n rank-1 updates.
         let mut a = nb.w.clone();
-        for i in 0..n {
-            let linv = 1.0 / lam[i];
-            let col = nb.kzf.col(i);
-            for r in 0..m_ {
-                let vr = col[r] * linv;
-                if vr == 0.0 {
-                    continue;
-                }
-                let arow = a.row_mut(r);
-                for c in 0..m_ {
-                    arow[c] += vr * col[c];
-                }
+        let mut scaled = nb.kzf.clone();
+        let lam_inv: Vec<f64> = lam.iter().map(|l| 1.0 / l).collect();
+        for r in 0..scaled.rows {
+            for (v, &li) in scaled.row_mut(r).iter_mut().zip(&lam_inv) {
+                *v *= li;
             }
         }
+        a.add_assign(&gemm_nt(&scaled, &nb.kzf));
         let (a_chol, _) = Chol::new_jittered(&a, 12)?;
         // rhs = K_zf Λ⁻¹ y
         let ly: Vec<f64> = train.y.iter().zip(&lam).map(|(y, l)| y / l).collect();
@@ -87,19 +81,19 @@ impl Fitc {
 
 impl GpModel for Fitc {
     fn predict(&self, x_test: &Mat) -> Prediction {
+        // Blocked: all p test columns go through two multi-RHS triangular
+        // solves instead of 2p per-point `solve_lower` loops.
         let p = x_test.rows;
-        let mut mean = Vec::with_capacity(p);
-        let mut var = Vec::with_capacity(p);
-        for t in 0..p {
-            let xt = x_test.row(t);
-            let kz = self.kernel.cross(xt, &self.z);
-            mean.push(dot(&kz, &self.beta));
-            let vw = solve_lower(&self.w_chol.l, &kz);
-            let va = solve_lower(&self.a_chol.l, &kz);
-            let kss = self.kernel.diag(xt);
-            let v = kss - dot(&vw, &vw) + dot(&va, &va) + self.sigma2;
-            var.push(v.max(self.sigma2 * 1e-3));
-        }
+        let kzt = self.kernel.gram(&self.z, x_test); // m×p
+        let mean = gemv_t(&kzt, &self.beta);
+        let sw = column_sq_norms(&solve_lower_mat(&self.w_chol.l, &kzt));
+        let sa = column_sq_norms(&solve_lower_mat(&self.a_chol.l, &kzt));
+        let var = (0..p)
+            .map(|t| {
+                let kss = self.kernel.diag(x_test.row(t));
+                (kss - sw[t] + sa[t] + self.sigma2).max(self.sigma2 * 1e-3)
+            })
+            .collect();
         Prediction { mean, var }
     }
 

@@ -73,16 +73,12 @@ impl NystromBlocks {
     }
 
     /// q_ii = k_z(x_i)ᵀ W⁻¹ k_z(x_i) — diagonal of the Nyström approximant
-    /// (needed by FITC's diagonal correction).
+    /// (needed by FITC's diagonal correction). One blocked forward
+    /// substitution V = L⁻¹ K_zf carrying all n right-hand sides, then
+    /// column sums of squares — replaces n per-column `solve_lower` calls.
     pub fn q_diag(&self) -> Vec<f64> {
-        let n = self.kzf.cols;
-        (0..n)
-            .map(|i| {
-                let kz = self.kzf.col(i);
-                let v = crate::la::chol::solve_lower(&self.w_chol.l, &kz);
-                crate::la::blas::dot(&v, &v)
-            })
-            .collect()
+        let v = crate::la::chol::solve_lower_mat(&self.w_chol.l, &self.kzf); // m×n
+        column_sq_norms(&v)
     }
 
     /// Q(X, X) block between index sets a, b: K_za' W⁻¹ K_zb (for PITC).
@@ -93,6 +89,18 @@ impl NystromBlocks {
         let winv_kzb = self.w_chol.solve_mat(&kzb);
         crate::la::blas::gemm_tn(&kza, &winv_kzb)
     }
+}
+
+/// Per-column squared norms of a row-major matrix in one row-major pass:
+/// out[j] = Σ_r V[r, j]².
+pub fn column_sq_norms(v: &Mat) -> Vec<f64> {
+    let mut out = vec![0.0; v.cols];
+    for r in 0..v.rows {
+        for (o, &x) in out.iter_mut().zip(v.row(r)) {
+            *o += x * x;
+        }
+    }
+    out
 }
 
 #[cfg(test)]

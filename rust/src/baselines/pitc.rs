@@ -6,14 +6,14 @@
 //! exact covariance, across blocks it is Nyström. Same algebra as FITC
 //! with Λ = blockdiag(K_bb − Q_bb) + σ²I.
 
-use super::nystrom::{select_landmarks, LandmarkMethod, NystromBlocks};
+use super::nystrom::{column_sq_norms, select_landmarks, LandmarkMethod, NystromBlocks};
 use crate::cluster::{cluster_rows, ClusterMethod};
 use crate::data::dataset::Dataset;
 use crate::error::Result;
 use crate::gp::{GpModel, Prediction};
 use crate::kernels::Kernel;
-use crate::la::blas::{dot, gemm};
-use crate::la::chol::{solve_lower, Chol};
+use crate::la::blas::{dot, gemm, gemv_t};
+use crate::la::chol::{solve_lower_mat, Chol};
 use crate::la::dense::Mat;
 use crate::util::Rng;
 
@@ -109,20 +109,20 @@ impl Pitc {
 impl GpModel for Pitc {
     fn predict(&self, x_test: &Mat) -> Prediction {
         // Test points are (as standard) treated as their own block, so the
-        // predictive equations coincide with FITC's.
+        // predictive equations coincide with FITC's. All p cross-covariance
+        // columns ride TWO blocked triangular solves (W and A) instead of
+        // 2p per-point `solve_lower` loops.
         let p = x_test.rows;
-        let mut mean = Vec::with_capacity(p);
-        let mut var = Vec::with_capacity(p);
-        for t in 0..p {
-            let xt = x_test.row(t);
-            let kz = self.kernel.cross(xt, &self.z);
-            mean.push(dot(&kz, &self.beta));
-            let vw = solve_lower(&self.w_chol.l, &kz);
-            let va = solve_lower(&self.a_chol.l, &kz);
-            let kss = self.kernel.diag(xt);
-            let v = kss - dot(&vw, &vw) + dot(&va, &va) + self.sigma2;
-            var.push(v.max(self.sigma2 * 1e-3));
-        }
+        let kzt = self.kernel.gram(&self.z, x_test); // m×p
+        let mean = gemv_t(&kzt, &self.beta);
+        let sw = column_sq_norms(&solve_lower_mat(&self.w_chol.l, &kzt));
+        let sa = column_sq_norms(&solve_lower_mat(&self.a_chol.l, &kzt));
+        let var = (0..p)
+            .map(|t| {
+                let kss = self.kernel.diag(x_test.row(t));
+                (kss - sw[t] + sa[t] + self.sigma2).max(self.sigma2 * 1e-3)
+            })
+            .collect();
         Prediction { mean, var }
     }
 

@@ -7,13 +7,13 @@
 //! Degenerate (strictly low-rank) prior ⇒ variance collapses far from the
 //! landmarks — exactly the failure mode Figures 1–2 exhibit.
 
-use super::nystrom::{select_landmarks, LandmarkMethod, NystromBlocks};
+use super::nystrom::{column_sq_norms, select_landmarks, LandmarkMethod, NystromBlocks};
 use crate::data::dataset::Dataset;
 use crate::error::Result;
 use crate::gp::{GpModel, Prediction};
 use crate::kernels::Kernel;
-use crate::la::blas::{dot, gemm_nt, gemv};
-use crate::la::chol::{solve_lower, Chol};
+use crate::la::blas::{gemm_nt, gemv, gemv_t};
+use crate::la::chol::{solve_lower_mat, Chol};
 use crate::la::dense::Mat;
 
 /// Fitted SoR model.
@@ -58,16 +58,12 @@ impl Sor {
 
 impl GpModel for Sor {
     fn predict(&self, x_test: &Mat) -> Prediction {
-        let p = x_test.rows;
-        let mut mean = Vec::with_capacity(p);
-        let mut var = Vec::with_capacity(p);
-        for t in 0..p {
-            let kz = self.kernel.cross(x_test.row(t), &self.z);
-            mean.push(dot(&kz, &self.beta));
-            // σ² k_zᵀ A⁻¹ k_z + σ²
-            let v = solve_lower(&self.a_chol.l, &kz);
-            var.push(self.sigma2 * dot(&v, &v) + self.sigma2);
-        }
+        // Blocked: one m×p cross block, one multi-RHS triangular solve.
+        let kzt = self.kernel.gram(&self.z, x_test); // m×p
+        let mean = gemv_t(&kzt, &self.beta);
+        // σ² k_zᵀ A⁻¹ k_z + σ²
+        let sa = column_sq_norms(&solve_lower_mat(&self.a_chol.l, &kzt));
+        let var = sa.iter().map(|s| self.sigma2 * s + self.sigma2).collect();
         Prediction { mean, var }
     }
 

@@ -18,6 +18,9 @@ pub struct ServiceConfig {
     pub port: u16,
     /// Worker threads for fitting jobs.
     pub n_workers: usize,
+    /// Compute-pool threads for the dense plane (GEMM, gram tiles, stage
+    /// rotations, cascades). 0 = auto-detect hardware parallelism.
+    pub n_threads: usize,
     /// Artifacts directory for the XLA engine (None = native kernels only).
     pub artifacts_dir: Option<PathBuf>,
     /// Prediction batcher window (milliseconds) and max batch size.
@@ -38,6 +41,7 @@ impl Default for ServiceConfig {
             host: "127.0.0.1".into(),
             port: 7470,
             n_workers: 2,
+            n_threads: 0,
             artifacts_dir: None,
             batch_window_ms: 5,
             max_batch: 64,
@@ -59,6 +63,7 @@ impl ServiceConfig {
                 "host" => self.host = v.clone(),
                 "port" => self.port = parse(k, v)?,
                 "n_workers" | "workers" => self.n_workers = parse(k, v)?,
+                "n_threads" | "threads" => self.n_threads = parse(k, v)?,
                 "artifacts_dir" | "artifacts" => {
                     self.artifacts_dir =
                         if v.is_empty() || v == "none" { None } else { Some(PathBuf::from(v)) }
@@ -118,6 +123,15 @@ impl ServiceConfig {
         Ok(())
     }
 
+    /// Compute-pool parallelism with the auto default resolved.
+    pub fn resolved_threads(&self) -> usize {
+        if self.n_threads == 0 {
+            crate::par::default_threads()
+        } else {
+            self.n_threads
+        }
+    }
+
     /// The MkaConfig implied by the service defaults.
     pub fn mka_config(&self) -> MkaConfig {
         MkaConfig {
@@ -127,7 +141,7 @@ impl ServiceConfig {
             compressor: CompressorKind::parse(&self.compressor),
             cluster_method: ClusterMethod::parse(&self.cluster),
             seed: self.seed,
-            n_threads: self.n_workers,
+            n_threads: self.resolved_threads(),
             ..MkaConfig::default()
         }
     }
@@ -137,6 +151,7 @@ impl ServiceConfig {
             .with("host", Json::Str(self.host.clone()))
             .with("port", Json::Num(self.port as f64))
             .with("n_workers", Json::Num(self.n_workers as f64))
+            .with("n_threads", Json::Num(self.n_threads as f64))
             .with("d_core", Json::Num(self.d_core as f64))
             .with("block_size", Json::Num(self.block_size as f64))
             .with("gamma", Json::Num(self.gamma))

@@ -40,6 +40,9 @@ pub struct Router {
 
 impl Router {
     pub fn new(config: ServiceConfig) -> Router {
+        // Size the shared compute pool from the service config so fits
+        // and batched predicts saturate the configured parallelism.
+        crate::par::set_threads(config.resolved_threads());
         let metrics = Arc::new(Metrics::new());
         let registry = ModelRegistry::new();
         let batcher = PredictBatcher::start(
@@ -70,7 +73,20 @@ impl Router {
                 let name = req.str_field("model").unwrap_or("");
                 Ok(Json::obj().with("dropped", Json::Bool(self.registry.remove(name))))
             }
-            "metrics" => Ok(self.metrics.snapshot()),
+            "metrics" => {
+                // Registry counters/histograms plus the compute-plane
+                // observables: logical cascade count and pool utilization.
+                let mut snap = self.metrics.snapshot();
+                snap.set(
+                    "compute",
+                    Json::obj()
+                        .with("cascades", Json::Num(crate::mka::cascade_count() as f64))
+                        .with("pool_threads", Json::Num(crate::par::threads() as f64))
+                        .with("pool_workers", Json::Num(crate::par::pool_workers() as f64))
+                        .with("pool_jobs", Json::Num(crate::par::jobs_executed() as f64)),
+                );
+                Ok(snap)
+            }
             "config" => Ok(self.config.to_json()),
             other => Err(Error::Protocol(format!("unknown op {other:?}"))),
         };
@@ -340,5 +356,24 @@ mod tests {
         assert!(m.get("counters").is_some());
         let c = r.handle(&Json::parse(r#"{"op":"config"}"#).unwrap());
         assert_eq!(c.usize_field("port"), Some(7470));
+    }
+
+    #[test]
+    fn metrics_surface_compute_plane() {
+        let r = router();
+        // Serve one prediction so at least one cascade has run.
+        let out = r.handle(&fit_req("mc", "mka", 60, false));
+        assert_eq!(out.get("ok"), Some(&Json::Bool(true)), "{out:?}");
+        let pred = Json::obj()
+            .with("op", Json::Str("predict".into()))
+            .with("model", Json::Str("mc".into()))
+            .with("x", Json::Arr(vec![Json::from_f64_slice(&[0.0, 0.0])]));
+        assert_eq!(r.handle(&pred).get("ok"), Some(&Json::Bool(true)));
+        let m = r.handle(&Json::parse(r#"{"op":"metrics"}"#).unwrap());
+        let compute = m.get("compute").expect("compute section present");
+        assert!(compute.num_field("cascades").unwrap_or(0.0) >= 1.0);
+        assert!(compute.num_field("pool_threads").unwrap_or(0.0) >= 1.0);
+        assert!(compute.num_field("pool_jobs").is_some());
+        assert!(compute.num_field("pool_workers").is_some());
     }
 }

@@ -25,18 +25,27 @@ pub trait TileEngine: Send + Sync {
     fn rbf_tile(&self, xb: &Mat, yb: &Mat, lengthscale: f64, signal_var: f64) -> Mat;
 }
 
+/// Gram tiles engage the pool above this many output entries.
+const TILE_PAR_MIN_ENTRIES: usize = 1 << 14;
+
 /// Builds gram matrices, optionally offloading tiles to a [`TileEngine`].
+/// Tiles are independent, so both the engine path and the native fallback
+/// are tile/band-parallel over the shared pool — each tile is produced by
+/// exactly one task with the same per-tile computation as the serial
+/// sweep, keeping results bit-identical at any thread count.
 pub struct GramBuilder {
     kernel: Box<dyn Kernel>,
     engine: Option<Arc<dyn TileEngine>>,
     /// RBF parameters if (and only if) the kernel is RBF — the AOT tile
     /// kernel implements the RBF formula specifically.
     rbf_params: Option<(f64, f64)>,
+    /// Thread-count cap (None = process-wide default).
+    threads: Option<usize>,
 }
 
 impl GramBuilder {
     pub fn new(kernel: Box<dyn Kernel>) -> GramBuilder {
-        GramBuilder { kernel, engine: None, rbf_params: None }
+        GramBuilder { kernel, engine: None, rbf_params: None, threads: None }
     }
 
     /// Create a builder for an RBF kernel that may offload to `engine`.
@@ -45,7 +54,18 @@ impl GramBuilder {
             kernel: Box::new(super::RbfKernel::with_signal(lengthscale, signal_var)),
             engine,
             rbf_params: Some((lengthscale, signal_var)),
+            threads: None,
         }
+    }
+
+    /// Cap the worker threads used for tile assembly (testing/benching).
+    pub fn with_threads(mut self, threads: usize) -> GramBuilder {
+        self.threads = Some(threads);
+        self
+    }
+
+    fn effective_threads(&self) -> usize {
+        self.threads.unwrap_or_else(crate::par::threads)
     }
 
     pub fn kernel(&self) -> &dyn Kernel {
@@ -62,7 +82,7 @@ impl GramBuilder {
             (Some(eng), Some((l, sf))) if x.cols <= eng.max_dim() => {
                 self.build_tiled(eng.as_ref(), x, y, l, sf)
             }
-            _ => self.kernel.gram(x, y),
+            _ => super::gram_with(self.kernel.as_ref(), x, y, self.effective_threads()),
         }
     }
 
@@ -70,59 +90,97 @@ impl GramBuilder {
     pub fn build_sym(&self, x: &Mat) -> Mat {
         match (&self.engine, self.rbf_params) {
             (Some(eng), Some((l, sf))) if x.cols <= eng.max_dim() => {
-                // Tile the upper triangle; mirror.
-                let t = eng.tile();
-                let n = x.rows;
-                let mut k = Mat::zeros(n, n);
-                let mut r0 = 0;
-                while r0 < n {
-                    let r1 = (r0 + t).min(n);
-                    let xb = x.block(r0, r1, 0, x.cols);
-                    let mut c0 = r0;
-                    while c0 < n {
-                        let c1 = (c0 + t).min(n);
-                        let yb = x.block(c0, c1, 0, x.cols);
-                        let tile = eng.rbf_tile(&xb, &yb, l, sf);
-                        for i in 0..(r1 - r0) {
-                            for j in 0..(c1 - c0) {
-                                let v = tile.at(i, j);
-                                k.set(r0 + i, c0 + j, v);
-                                k.set(c0 + j, r0 + i, v);
-                            }
-                        }
-                        c0 = c1;
-                    }
-                    r0 = r1;
-                }
-                // Exact diagonal.
-                for i in 0..n {
-                    k.set(i, i, sf);
-                }
-                k
+                self.build_sym_tiled(eng.as_ref(), x, l, sf)
             }
-            _ => self.kernel.gram_sym(x),
+            _ => super::gram_sym_with(self.kernel.as_ref(), x, self.effective_threads()),
         }
+    }
+
+    /// Engine path for K(X, X): upper-triangle tiles, each written to its
+    /// own block and its mirror (disjoint regions per tile ⇒ tile-parallel
+    /// is race-free; a diagonal tile only overwrites itself).
+    fn build_sym_tiled(&self, eng: &dyn TileEngine, x: &Mat, l: f64, sf: f64) -> Mat {
+        let t = eng.tile();
+        let n = x.rows;
+        let mut k = Mat::zeros(n, n);
+        // Enumerate upper-triangle tile origins.
+        let mut tiles: Vec<(usize, usize)> = Vec::new();
+        let mut r0 = 0;
+        while r0 < n {
+            let mut c0 = r0;
+            while c0 < n {
+                tiles.push((r0, c0));
+                c0 = (c0 + t).min(n);
+            }
+            r0 = (r0 + t).min(n);
+        }
+        let write_tile = |kptr: crate::par::SendPtr<f64>, r0: usize, c0: usize| {
+            let r1 = (r0 + t).min(n);
+            let c1 = (c0 + t).min(n);
+            let xb = x.block(r0, r1, 0, x.cols);
+            let yb = x.block(c0, c1, 0, x.cols);
+            let tile = eng.rbf_tile(&xb, &yb, l, sf);
+            for i in 0..(r1 - r0) {
+                for j in 0..(c1 - c0) {
+                    let v = tile.at(i, j);
+                    // SAFETY: tile (r0,c0) owns block [r0,r1)×[c0,c1) and
+                    // its mirror [c0,c1)×[r0,r1); distinct upper tiles own
+                    // distinct block pairs.
+                    unsafe {
+                        *kptr.ptr().add((r0 + i) * n + (c0 + j)) = v;
+                        *kptr.ptr().add((c0 + j) * n + (r0 + i)) = v;
+                    }
+                }
+            }
+        };
+        let kptr = crate::par::SendPtr::new(k.data.as_mut_ptr());
+        let threads = if n * n < TILE_PAR_MIN_ENTRIES { 1 } else { self.effective_threads() };
+        let tiles_ref = &tiles;
+        crate::par::run_tasks(tiles.len(), threads, move |ti| {
+            let (r0, c0) = tiles_ref[ti];
+            write_tile(kptr, r0, c0);
+        });
+        // Exact diagonal.
+        for i in 0..n {
+            k.set(i, i, sf);
+        }
+        k
     }
 
     fn build_tiled(&self, eng: &dyn TileEngine, x: &Mat, y: &Mat, l: f64, sf: f64) -> Mat {
         let t = eng.tile();
         let mut k = Mat::zeros(x.rows, y.rows);
-        let mut r0 = 0;
-        while r0 < x.rows {
+        let n = y.rows;
+        // Row strips of tiles write disjoint row bands of K.
+        let strips: Vec<usize> = (0..x.rows).step_by(t).collect();
+        let fill_strip = |kptr: crate::par::SendPtr<f64>, r0: usize| {
             let r1 = (r0 + t).min(x.rows);
             let xb = x.block(r0, r1, 0, x.cols);
             let mut c0 = 0;
-            while c0 < y.rows {
-                let c1 = (c0 + t).min(y.rows);
+            while c0 < n {
+                let c1 = (c0 + t).min(n);
                 let yb = y.block(c0, c1, 0, y.cols);
                 let tile = eng.rbf_tile(&xb, &yb, l, sf);
                 for i in 0..(r1 - r0) {
-                    k.row_mut(r0 + i)[c0..c1].copy_from_slice(&tile.row(i)[..c1 - c0]);
+                    // SAFETY: strip owns rows [r0, r1) of K.
+                    unsafe {
+                        std::ptr::copy_nonoverlapping(
+                            tile.row(i).as_ptr(),
+                            kptr.ptr().add((r0 + i) * n + c0),
+                            c1 - c0,
+                        );
+                    }
                 }
                 c0 = c1;
             }
-            r0 = r1;
-        }
+        };
+        let kptr = crate::par::SendPtr::new(k.data.as_mut_ptr());
+        let threads =
+            if x.rows * n < TILE_PAR_MIN_ENTRIES { 1 } else { self.effective_threads() };
+        let strips_ref = &strips;
+        crate::par::run_tasks(strips.len(), threads, move |si| {
+            fill_strip(kptr, strips_ref[si]);
+        });
         k
     }
 }

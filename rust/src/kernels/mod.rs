@@ -30,25 +30,17 @@ pub trait Kernel: Send + Sync {
     /// Clone into a box (object-safe clone).
     fn boxed_clone(&self) -> Box<dyn Kernel>;
 
-    /// Dense gram matrix K(X, Y); rows of `x`/`y` are points.
+    /// Dense gram matrix K(X, Y); rows of `x`/`y` are points. Row-band
+    /// parallel over the shared pool (deterministic — every entry is an
+    /// independent `eval`).
     fn gram(&self, x: &Mat, y: &Mat) -> Mat {
-        assert_eq!(x.cols, y.cols, "dimension mismatch");
-        Mat::from_fn(x.rows, y.rows, |i, j| self.eval(x.row(i), y.row(j)))
+        gram_with(self, x, y, crate::par::threads())
     }
 
-    /// Symmetric gram matrix K(X, X) — computes the upper triangle once.
+    /// Symmetric gram matrix K(X, X) — computes the upper triangle once
+    /// (band-parallel), then mirrors.
     fn gram_sym(&self, x: &Mat) -> Mat {
-        let n = x.rows;
-        let mut k = Mat::zeros(n, n);
-        for i in 0..n {
-            k.set(i, i, self.diag(x.row(i)));
-            for j in (i + 1)..n {
-                let v = self.eval(x.row(i), x.row(j));
-                k.set(i, j, v);
-                k.set(j, i, v);
-            }
-        }
-        k
+        gram_sym_with(self, x, crate::par::threads())
     }
 
     /// Cross-covariance vector k(x, X) against all rows of X.
@@ -61,6 +53,91 @@ impl Clone for Box<dyn Kernel> {
     fn clone(&self) -> Self {
         self.boxed_clone()
     }
+}
+
+/// Gram assembly engages the pool above this many output entries (kernel
+/// evals carry an `exp`, so the per-element cost is far above a gemm FMA).
+const GRAM_PAR_MIN_ENTRIES: usize = 1 << 14;
+
+/// K(X, Y) with an explicit thread-count cap. Bands of output rows are
+/// filled independently; entry (i, j) is the same single `eval` at any
+/// thread count, so results are bit-identical to the serial path.
+pub fn gram_with<K: Kernel + ?Sized>(kernel: &K, x: &Mat, y: &Mat, threads: usize) -> Mat {
+    assert_eq!(x.cols, y.cols, "dimension mismatch");
+    let (n, m) = (x.rows, y.rows);
+    let mut k = Mat::zeros(n, m);
+    let fill = |kband: &mut [f64], i0: usize, i1: usize| {
+        for i in i0..i1 {
+            let xr = x.row(i);
+            let krow = &mut kband[(i - i0) * m..(i - i0) * m + m];
+            for (j, kv) in krow.iter_mut().enumerate() {
+                *kv = kernel.eval(xr, y.row(j));
+            }
+        }
+    };
+    if threads <= 1 || n < 2 || n * m < GRAM_PAR_MIN_ENTRIES {
+        fill(&mut k.data, 0, n);
+        return k;
+    }
+    let kptr = crate::par::SendPtr::new(k.data.as_mut_ptr());
+    crate::par::for_ranges(n, threads, move |_, lo, hi| {
+        // SAFETY: bands are disjoint row ranges of K.
+        let band = unsafe {
+            std::slice::from_raw_parts_mut(kptr.ptr().add(lo * m), (hi - lo) * m)
+        };
+        fill(band, lo, hi);
+    });
+    k
+}
+
+/// Symmetric K(X, X) with an explicit thread-count cap: the upper triangle
+/// is filled in row bands (each entry one `eval`, exactly as serial), then
+/// mirrored — so `asymmetry()` is exactly 0 and any thread count gives the
+/// same bits.
+pub fn gram_sym_with<K: Kernel + ?Sized>(kernel: &K, x: &Mat, threads: usize) -> Mat {
+    let n = x.rows;
+    let mut k = Mat::zeros(n, n);
+    let fill_upper = |kband: &mut [f64], i0: usize, i1: usize| {
+        for i in i0..i1 {
+            let xr = x.row(i);
+            let krow = &mut kband[(i - i0) * n..(i - i0) * n + n];
+            krow[i] = kernel.diag(xr);
+            for j in (i + 1)..n {
+                krow[j] = kernel.eval(xr, x.row(j));
+            }
+        }
+    };
+    if threads <= 1 || n < 2 || n * n < GRAM_PAR_MIN_ENTRIES {
+        fill_upper(&mut k.data, 0, n);
+        for i in 0..n {
+            for j in (i + 1)..n {
+                let v = k.at(i, j);
+                k.set(j, i, v);
+            }
+        }
+        return k;
+    }
+    let kptr = crate::par::SendPtr::new(k.data.as_mut_ptr());
+    crate::par::for_ranges(n, threads, move |_, lo, hi| {
+        // SAFETY: bands are disjoint row ranges of K.
+        let band = unsafe {
+            std::slice::from_raw_parts_mut(kptr.ptr().add(lo * n), (hi - lo) * n)
+        };
+        fill_upper(band, lo, hi);
+    });
+    // Mirror: row j of the lower triangle reads only finished upper rows.
+    crate::par::for_ranges(n, threads, move |_, lo, hi| {
+        for j in lo..hi {
+            for i in 0..j {
+                // SAFETY: writes stay inside rows [lo, hi).
+                unsafe {
+                    let v = *kptr.ptr().add(i * n + j);
+                    *kptr.ptr().add(j * n + i) = v;
+                }
+            }
+        }
+    });
+    k
 }
 
 #[inline]

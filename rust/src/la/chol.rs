@@ -66,20 +66,14 @@ impl Chol {
         solve_lower_t(&self.l, &y)
     }
 
-    /// Solve A X = B column-wise.
+    /// Solve A X = B for all columns at once: one blocked forward and one
+    /// blocked backward substitution whose inner loops are contiguous row
+    /// axpys serving every right-hand side (the multi-RHS path the
+    /// Nyström-family baselines route through; replaces the old
+    /// column-at-a-time gather/scatter loop).
     pub fn solve_mat(&self, b: &Mat) -> Mat {
-        let n = self.l.rows;
-        assert_eq!(b.rows, n);
-        let mut x = Mat::zeros(n, b.cols);
-        // Process by column (gathers/scatters); fine for the sizes we use.
-        for j in 0..b.cols {
-            let col: Vec<f64> = (0..n).map(|i| b.at(i, j)).collect();
-            let s = self.solve(&col);
-            for i in 0..n {
-                x.set(i, j, s[i]);
-            }
-        }
-        x
+        let y = solve_lower_mat(&self.l, b);
+        solve_lower_t_mat(&self.l, &y)
     }
 
     /// log det(A) = 2 Σ log L_ii.
@@ -132,6 +126,57 @@ pub fn solve_lower_t(l: &Mat, y: &[f64]) -> Vec<f64> {
         // subtract xi * L[i] from earlier entries (column i of Lᵀ).
         for j in 0..i {
             x[j] -= l.at(i, j) * xi;
+        }
+    }
+    x
+}
+
+/// Blocked forward substitution: L Y = B for every column of B at once.
+/// Row-major layout makes each elimination step a contiguous axpy of row k
+/// into row i — b right-hand sides per memory pass instead of one.
+pub fn solve_lower_mat(l: &Mat, b: &Mat) -> Mat {
+    let n = l.rows;
+    assert_eq!(b.rows, n);
+    let mut y = b.clone();
+    for i in 0..n {
+        let lrow = l.row(i);
+        for (k, &lik) in lrow.iter().enumerate().take(i) {
+            if lik == 0.0 {
+                continue;
+            }
+            let (yi, yk) = y.rows_pair_mut(i, k);
+            for (a, b2) in yi.iter_mut().zip(yk.iter()) {
+                *a -= lik * *b2;
+            }
+        }
+        let inv = 1.0 / lrow[i];
+        for v in y.row_mut(i) {
+            *v *= inv;
+        }
+    }
+    y
+}
+
+/// Blocked backward substitution with the transpose: Lᵀ X = B for every
+/// column of B at once.
+pub fn solve_lower_t_mat(l: &Mat, b: &Mat) -> Mat {
+    let n = l.rows;
+    assert_eq!(b.rows, n);
+    let mut x = b.clone();
+    for i in (0..n).rev() {
+        let inv = 1.0 / l.at(i, i);
+        for v in x.row_mut(i) {
+            *v *= inv;
+        }
+        let lrow = l.row(i);
+        for (j, &lij) in lrow.iter().enumerate().take(i) {
+            if lij == 0.0 {
+                continue;
+            }
+            let (xj, xi) = x.rows_pair_mut(j, i);
+            for (a, b2) in xj.iter_mut().zip(xi.iter()) {
+                *a -= lij * *b2;
+            }
         }
     }
     x

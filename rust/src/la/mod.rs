@@ -21,7 +21,7 @@ pub mod sparse;
 pub mod stats;
 
 pub use blas::{axpy, dot, gemm, gemm_nt, gemm_tn, gemv, gemv_t, norm2, scale_rows, syrk_aat, syrk_ata};
-pub use chol::Chol;
+pub use chol::{solve_lower_mat, solve_lower_t_mat, Chol};
 pub use dense::Mat;
 pub use evd::SymEig;
 pub use givens::{Givens, GivensSeq};

@@ -37,6 +37,10 @@ pub struct MkaFactor {
     pub stages: Vec<Stage>,
     /// Final dense core K_s (d_core × d_core).
     pub core: Mat,
+    /// Worker threads for block-parallel stage rotations inside the
+    /// cascade (set from `MkaConfig::n_threads` at factorize time; purely
+    /// a wall-clock knob — results are bit-identical at any value).
+    pub n_threads: usize,
     /// Lazily computed EVD of the core (Proposition 7's d³ step).
     pub(crate) core_eig: OnceLock<SymEig>,
 }
@@ -47,6 +51,7 @@ impl Clone for MkaFactor {
             n: self.n,
             stages: self.stages.clone(),
             core: self.core.clone(),
+            n_threads: self.n_threads,
             core_eig: OnceLock::new(),
         }
     }
@@ -54,7 +59,13 @@ impl Clone for MkaFactor {
 
 impl MkaFactor {
     pub fn new(n: usize, stages: Vec<Stage>, core: Mat) -> MkaFactor {
-        MkaFactor { n, stages, core, core_eig: OnceLock::new() }
+        MkaFactor { n, stages, core, n_threads: 1, core_eig: OnceLock::new() }
+    }
+
+    /// Set the cascade's block-parallel thread cap (builder style).
+    pub fn with_threads(mut self, threads: usize) -> MkaFactor {
+        self.n_threads = threads.max(1);
+        self
     }
 
     /// Size of the final core d_core.
@@ -87,33 +98,41 @@ impl MkaFactor {
 
     /// Column-parallel [`MkaFactor::matmat`]: wide blocks are split into
     /// near-equal column chunks, one blocked cascade per worker thread.
-    /// Small blocks (or `n_threads <= 1`) fall back to the serial blocked
-    /// path.
+    /// Narrow blocks (or `n_threads <= 1`) run one blocked cascade whose
+    /// stage rotations are block-parallel instead — so a single wide batch
+    /// and a 1-RHS solve both saturate the pool.
     pub fn matmat_par(&self, z: &Mat, n_threads: usize) -> Mat {
-        self.par_over_cols(z, n_threads, |chunk| {
-            self.apply_with_mat_uncounted(chunk, |c| gemm(&self.core, c), |d| d)
+        self.par_over_cols(z, n_threads, |chunk, stage_threads| {
+            self.apply_with_mat_stage(chunk, |c| gemm(&self.core, c), |d| d, stage_threads)
         })
     }
 
     /// Shared column-chunking driver for the `_par` entry points. Counts
     /// ONE logical cascade itself; `apply` must be an *uncounted* blocked
-    /// apply so chunked execution doesn't inflate the counter.
+    /// apply so chunked execution doesn't inflate the counter. The second
+    /// argument handed to `apply` is the stage-level thread cap: when the
+    /// columns are sharded the chunks are the parallel grain (stage
+    /// rotations run serial inside each), when they are not the cascade
+    /// parallelizes over rotation blocks instead. Either schedule yields
+    /// bit-identical results.
     pub(crate) fn par_over_cols<F>(&self, z: &Mat, n_threads: usize, apply: F) -> Mat
     where
-        F: Fn(&Mat) -> Mat + Send + Sync,
+        F: Fn(&Mat, usize) -> Mat + Send + Sync,
     {
         CASCADES.fetch_add(1, Ordering::Relaxed);
         if n_threads <= 1 || z.cols < MIN_PAR_COLS.max(2 * n_threads) {
-            return apply(z);
+            return apply(z, self.n_threads.max(n_threads));
         }
         let chunks = chunk_ranges(z.cols, n_threads);
-        let parts = par_map(chunks, n_threads, |_, (c0, c1)| apply(&z.block(0, z.rows, c0, c1)));
+        let parts = par_map(chunks, n_threads, |_, (c0, c1)| apply(&z.block(0, z.rows, c0, c1), 1));
         Mat::hstack(&parts)
     }
 
     /// Generic spectral application: given how to act on the final core
     /// vector and how to map each wavelet diagonal value, apply the
-    /// corresponding matrix function of K̃ (Proposition 7 pattern).
+    /// corresponding matrix function of K̃ (Proposition 7 pattern). Stage
+    /// rotations run block-parallel under `self.n_threads` (bit-identical
+    /// to serial at any thread count).
     pub(crate) fn apply_with(
         &self,
         z: &[f64],
@@ -122,11 +141,12 @@ impl MkaFactor {
     ) -> Vec<f64> {
         assert_eq!(z.len(), self.n, "matvec dimension mismatch");
         CASCADES.fetch_add(1, Ordering::Relaxed);
+        let threads = self.n_threads;
         let mut scratch: Vec<f64> = Vec::new();
         let mut v = z.to_vec();
         let mut wavs: Vec<Vec<f64>> = Vec::with_capacity(self.stages.len());
         for st in &self.stages {
-            let (core, wav) = st.forward(&mut v, &mut scratch);
+            let (core, wav) = st.forward_mt(&mut v, &mut scratch, threads);
             wavs.push(wav);
             v = core;
         }
@@ -136,7 +156,7 @@ impl MkaFactor {
         for (st, wav) in self.stages.iter().zip(wavs.iter()).rev() {
             let scaled: Vec<f64> =
                 wav.iter().zip(&st.dvals).map(|(w, &d)| w * dmap(d)).collect();
-            u = st.backward(&u, &scaled, &mut scratch);
+            u = st.backward_mt(&u, &scaled, &mut scratch, threads);
         }
         u
     }
@@ -153,23 +173,25 @@ impl MkaFactor {
         dmap: impl Fn(f64) -> f64,
     ) -> Mat {
         CASCADES.fetch_add(1, Ordering::Relaxed);
-        self.apply_with_mat_uncounted(z, core_op, dmap)
+        self.apply_with_mat_stage(z, core_op, dmap, self.n_threads)
     }
 
     /// The cascade body without the counter bump — chunk workers of the
     /// `_par` entry points use this so a sharded apply still counts as
-    /// one logical cascade.
-    pub(crate) fn apply_with_mat_uncounted(
+    /// one logical cascade. `stage_threads` caps the block-parallel
+    /// rotation work inside each stage.
+    pub(crate) fn apply_with_mat_stage(
         &self,
         z: &Mat,
         core_op: impl Fn(&Mat) -> Mat,
         dmap: impl Fn(f64) -> f64,
+        stage_threads: usize,
     ) -> Mat {
         assert_eq!(z.rows, self.n, "matmat dimension mismatch");
         let mut v = z.clone();
         let mut wavs: Vec<Mat> = Vec::with_capacity(self.stages.len());
         for st in &self.stages {
-            let (core, wav) = st.forward_mat(&mut v);
+            let (core, wav) = st.forward_mat_mt(&mut v, stage_threads);
             wavs.push(wav);
             v = core;
         }
@@ -180,7 +202,7 @@ impl MkaFactor {
         for (st, mut wav) in self.stages.iter().zip(wavs).rev() {
             let fd: Vec<f64> = st.dvals.iter().map(|&d| dmap(d)).collect();
             scale_rows(&mut wav, &fd);
-            u = st.backward_mat(&u, &wav);
+            u = st.backward_mat_mt(&u, &wav, stage_threads);
         }
         u
     }

@@ -17,8 +17,9 @@ pub use stage::{BlockFactor, Stage};
 use crate::cluster::{cluster_rows, ClusterMethod};
 use crate::compress::{Compression, CompressorKind, QFactor};
 use crate::error::{Error, Result};
-use crate::la::blas::{gemm, gemm_nt};
+use crate::la::blas::{gemm_mt, gemm_nt_mt};
 use crate::la::dense::Mat;
+use crate::par::SendPtr;
 use crate::util::Rng;
 
 /// Configuration for the MKA factorization.
@@ -165,9 +166,7 @@ pub fn factorize(k: &Mat, x: Option<&Mat>, config: &MkaConfig) -> Result<MkaFact
         let t_compress = t_stage.elapsed_secs() - t_cluster;
 
         // ---- 3. rotate the FULL matrix by Q̄ = ⊕Q_i ----------------------
-        for (idx, comp) in &comps {
-            apply_block_rotation_global(&mut kc, idx, &comp.q);
-        }
+        apply_stage_rotations(&mut kc, &comps, config.n_threads);
         let t_rotate = t_stage.elapsed_secs() - t_cluster - t_compress;
 
         // ---- 4–5. split core / wavelet, read D from the rotated diagonal -
@@ -211,7 +210,7 @@ pub fn factorize(k: &Mat, x: Option<&Mat>, config: &MkaConfig) -> Result<MkaFact
         kc.symmetrize();
     }
 
-    let f = MkaFactor::new(n, stages, kc);
+    let f = MkaFactor::new(n, stages, kc).with_threads(config.n_threads);
     debug_assert!(f.check_valid());
     Ok(f)
 }
@@ -242,36 +241,146 @@ fn block_targets(clusters: &[Vec<usize>], gamma: f64, d_core: usize, n_cur: usiz
     targets
 }
 
-/// Apply a block-local orthogonal factor to the full matrix from both
-/// sides: K ← (I ⊕ Q ⊕ I) K (I ⊕ Qᵀ ⊕ I), where Q acts on `idx`.
-fn apply_block_rotation_global(kc: &mut Mat, idx: &[usize], q: &QFactor) {
+/// Below this matrix dimension the stage rotation stays serial.
+const ROTATE_PAR_MIN_N: usize = 512;
+
+/// Apply the whole stage rotation K ← Q̄ K Q̄ᵀ with Q̄ = ⊕Q_i, in two
+/// phases:
+///
+/// 1. **Left (rows)**: K[idxᵢ, :] ← Qᵢ · K[idxᵢ, :]. Blocks own disjoint
+///    row sets, so blocks run in parallel; when a stage has few blocks,
+///    each block's work is further split into column panels (a rotation
+///    acts on each column independently, so panels don't change bits).
+/// 2. **Right (columns)**: K[:, idxᵢ] ← K[:, idxᵢ] · Qᵢᵀ for every block,
+///    sharded over row bands — each row's entries at `idx` positions
+///    rotate like a gathered vector.
+///
+/// Serial execution runs the exact same phase kernels over single ranges,
+/// so the result is bit-identical at any thread count.
+fn apply_stage_rotations(kc: &mut Mat, comps: &[(Vec<usize>, Compression)], threads: usize) {
+    let n = kc.rows;
+    if n == 0 {
+        return;
+    }
+    let t = if threads <= 1 || n < ROTATE_PAR_MIN_N { 1 } else { threads };
+    let kptr = SendPtr::new(kc.data.as_mut_ptr());
+
+    // ---- Phase 1: left multiply (rows) --------------------------------
+    // Work units are (block, column panel) pairs; panels only exist when
+    // blocks alone can't feed the requested parallelism. Each unit owns a
+    // disjoint row×col region, and `run_tasks` caps in-flight tasks at t.
+    // panels is capped by n: chunk_ranges clamps its output to n ranges,
+    // so an oversized configured thread count must not out-index it.
+    let panels = if t <= 1 || comps.len() >= 2 * t { 1 } else { t.min(n) };
+    let panel_ranges = parallel::chunk_ranges(n, panels);
+    debug_assert_eq!(panel_ranges.len(), panels);
+    let panel_ranges = &panel_ranges;
+    crate::par::run_tasks(comps.len() * panels, t, move |u| {
+        let (idx, comp) = &comps[u / panels];
+        let (c0, c1) = panel_ranges[u % panels];
+        // SAFETY: blocks own disjoint rows; panels own disjoint columns
+        // within a block (serial execution when t <= 1).
+        unsafe { rotate_block_rows_ptr(&comp.q, idx, kptr, n, c0, c1) };
+    });
+
+    // ---- Phase 2: right multiply (columns), row-banded ----------------
+    crate::par::for_ranges(n, t, move |_, r0, r1| {
+        for (idx, comp) in comps {
+            // SAFETY: bands own disjoint rows of K.
+            unsafe { rotate_block_cols_ptr(&comp.q, idx, kptr, n, r0, r1) };
+        }
+    });
+}
+
+/// Left-phase kernel: rows `idx` of the n×n buffer, columns [c0, c1) only,
+/// get Q applied (row mixing).
+///
+/// # Safety
+/// The caller guarantees exclusive access to the (idx × [c0, c1)) region.
+unsafe fn rotate_block_rows_ptr(
+    q: &QFactor,
+    idx: &[usize],
+    kptr: SendPtr<f64>,
+    n: usize,
+    c0: usize,
+    c1: usize,
+) {
+    let data = kptr.ptr();
     match q {
         QFactor::Identity => {}
         QFactor::Givens(seq) => {
-            // Remap local rotation indices to global coordinates and
-            // conjugate in place — O(n) per rotation.
-            let global = seq.remap(idx);
-            global.conjugate_sym(kc);
-        }
-        QFactor::Dense(qm) => {
-            let n = kc.rows;
-            let m = idx.len();
-            // Rows: K[idx, :] ← Q · K[idx, :]
-            let rows = kc.gather_rows(idx); // m×n
-            let new_rows = gemm(qm, &rows);
-            for (a, &i) in idx.iter().enumerate() {
-                kc.row_mut(i).copy_from_slice(new_rows.row(a));
-            }
-            // Columns: K[:, idx] ← K[:, idx] · Qᵀ
-            let all: Vec<usize> = (0..n).collect();
-            let cols = kc.gather(&all, idx); // n×m
-            let new_cols = gemm_nt(&cols, qm); // (n×m)·(m×m)ᵀ
-            for (b, &j) in idx.iter().enumerate() {
-                for i in 0..n {
-                    kc.set(i, j, new_cols.at(i, b));
+            for g in &seq.rots {
+                let (gi, gj) = (idx[g.i], idx[g.j]);
+                let ri = std::slice::from_raw_parts_mut(data.add(gi * n + c0), c1 - c0);
+                let rj = std::slice::from_raw_parts_mut(data.add(gj * n + c0), c1 - c0);
+                for (a, b) in ri.iter_mut().zip(rj.iter_mut()) {
+                    let (x, y) = (*a, *b);
+                    *a = g.c * x + g.s * y;
+                    *b = -g.s * x + g.c * y;
                 }
             }
-            let _ = m;
+        }
+        QFactor::Dense(qm) => {
+            let m = idx.len();
+            let w = c1 - c0;
+            let mut sub = Mat::zeros(m, w);
+            for (a, &i) in idx.iter().enumerate() {
+                std::ptr::copy_nonoverlapping(data.add(i * n + c0), sub.row_mut(a).as_mut_ptr(), w);
+            }
+            let new = gemm_mt(qm, &sub, 1);
+            for (a, &i) in idx.iter().enumerate() {
+                std::ptr::copy_nonoverlapping(new.row(a).as_ptr(), data.add(i * n + c0), w);
+            }
+        }
+    }
+}
+
+/// Right-phase kernel: rows [r0, r1) get K[r, idx] ← K[r, idx] · Qᵀ — the
+/// entries at `idx` positions of each row rotate exactly like a gathered
+/// vector under Q (uᵀ Qᵀ = (Q u)ᵀ).
+///
+/// # Safety
+/// The caller guarantees exclusive access to rows [r0, r1).
+unsafe fn rotate_block_cols_ptr(
+    q: &QFactor,
+    idx: &[usize],
+    kptr: SendPtr<f64>,
+    n: usize,
+    r0: usize,
+    r1: usize,
+) {
+    let data = kptr.ptr();
+    match q {
+        QFactor::Identity => {}
+        QFactor::Givens(seq) => {
+            for r in r0..r1 {
+                let row = std::slice::from_raw_parts_mut(data.add(r * n), n);
+                for g in &seq.rots {
+                    let (gi, gj) = (idx[g.i], idx[g.j]);
+                    let (x, y) = (row[gi], row[gj]);
+                    row[gi] = g.c * x + g.s * y;
+                    row[gj] = -g.s * x + g.c * y;
+                }
+            }
+        }
+        QFactor::Dense(qm) => {
+            let m = idx.len();
+            let h = r1 - r0;
+            // Gather K[r0..r1, idx] (h×m), right-multiply by Qᵀ, scatter.
+            let mut sub = Mat::zeros(h, m);
+            for r in r0..r1 {
+                let srow = sub.row_mut(r - r0);
+                for (b, &j) in idx.iter().enumerate() {
+                    srow[b] = *data.add(r * n + j);
+                }
+            }
+            let new = gemm_nt_mt(&sub, qm, 1); // (h×m)·(m×m)ᵀ
+            for r in r0..r1 {
+                let nrow = new.row(r - r0);
+                for (b, &j) in idx.iter().enumerate() {
+                    *data.add(r * n + j) = nrow[b];
+                }
+            }
         }
     }
 }

@@ -37,15 +37,17 @@ impl MkaFactor {
 
     /// Column-parallel [`MkaFactor::solve_mat`]: wide blocks are sharded
     /// over `n_threads` workers (one logical cascade regardless of how
-    /// many chunks execute it).
+    /// many chunks execute it); narrow blocks parallelize over rotation
+    /// blocks inside each stage instead.
     pub fn solve_mat_par(&self, b: &Mat, n_threads: usize) -> Result<Mat> {
         self.check_invertible()?;
         let eig = self.eig();
-        Ok(self.par_over_cols(b, n_threads, |chunk| {
-            self.apply_with_mat_uncounted(
+        Ok(self.par_over_cols(b, n_threads, |chunk, stage_threads| {
+            self.apply_with_mat_stage(
                 chunk,
                 |v| spectral_apply_mat(eig, v, |lam| 1.0 / lam),
                 |d| 1.0 / d,
+                stage_threads,
             )
         }))
     }

@@ -1,16 +1,21 @@
-//! Minimal scoped-thread parallel map for block compression.
+//! Thin compatibility shim over the shared compute plane (`crate::par`).
 //!
 //! MKA is "inherently bottom-up … naturally parallelizable" (§3 remark 5):
-//! within a stage, every diagonal block is compressed independently. No
-//! rayon offline, so this is a small work-stealing-free static partitioner
-//! over `std::thread::scope` — adequate because MKA blocks are
-//! near-uniform in size by construction (balanced clustering).
+//! within a stage, every diagonal block is compressed independently. Block
+//! compression used to spawn scoped OS threads per call; the map now rides
+//! the persistent work-sharing pool, so a factorization no longer pays
+//! thread startup per stage and shares workers with the GEMM/gram/cascade
+//! layers.
 
-use std::sync::atomic::{AtomicUsize, Ordering};
+pub use crate::par::{chunk_ranges, default_threads};
 
-/// Map `f` over `items` using up to `n_threads` OS threads, preserving
-/// order. Falls back to a plain serial map when `n_threads <= 1` or the
-/// item count is small.
+use crate::par::SendPtr;
+
+/// Map `f` over `items`, preserving order, with at most `n_threads` pool
+/// tasks in flight (contiguous item groups, serial within a group —
+/// adequate because MKA blocks are near-uniform in size by construction).
+/// `n_threads <= 1` (or a trivial item count) runs serially inline.
+/// Output order — and every output value — is identical either way.
 pub fn par_map<T, R, F>(items: Vec<T>, n_threads: usize, f: F) -> Vec<R>
 where
     T: Send,
@@ -21,68 +26,37 @@ where
     if n_threads <= 1 || n <= 1 {
         return items.into_iter().enumerate().map(|(i, t)| f(i, t)).collect();
     }
-    let n_threads = n_threads.min(n);
-    // Slots for results; dynamic index dispenser for load balancing.
-    let mut slots: Vec<Option<R>> = (0..n).map(|_| None).collect();
-    let items: Vec<std::sync::Mutex<Option<T>>> =
-        items.into_iter().map(|t| std::sync::Mutex::new(Some(t))).collect();
-    let next = AtomicUsize::new(0);
-    let slot_ptr = SlotsPtr(slots.as_mut_ptr());
+    // Split the items into at most n_threads contiguous groups, keeping
+    // each group's base index so results land in their original slots.
+    let groups = chunk_ranges(n, n_threads);
+    let mut grouped: Vec<(usize, Vec<T>)> = Vec::with_capacity(groups.len());
+    let mut rest = items;
+    for &(lo, _hi) in groups.iter().rev() {
+        let tail = rest.split_off(lo);
+        grouped.push((lo, tail));
+    }
+    grouped.reverse();
 
-    std::thread::scope(|scope| {
-        for _ in 0..n_threads {
-            let f = &f;
-            let items = &items;
-            let next = &next;
-            let slot_ptr = &slot_ptr;
-            scope.spawn(move || loop {
-                let i = next.fetch_add(1, Ordering::Relaxed);
-                if i >= n {
-                    break;
-                }
-                let item = items[i].lock().unwrap().take().unwrap();
-                let r = f(i, item);
-                // SAFETY: each index i is claimed exactly once via the
-                // atomic dispenser, so writes to slots are disjoint; the
-                // scope guarantees the buffer outlives the threads.
-                unsafe {
-                    *slot_ptr.0.add(i) = Some(r);
+    let mut slots: Vec<Option<R>> = (0..n).map(|_| None).collect();
+    let slot_ptr = SendPtr::new(slots.as_mut_ptr());
+    let fref = &f;
+    let tasks: Vec<Box<dyn FnOnce() + Send + '_>> = grouped
+        .into_iter()
+        .map(|(base, group)| {
+            let b: Box<dyn FnOnce() + Send + '_> = Box::new(move || {
+                for (off, item) in group.into_iter().enumerate() {
+                    let r = fref(base + off, item);
+                    // SAFETY: each group writes only its own slot range,
+                    // and `run_all` keeps `slots` alive until every task
+                    // is done.
+                    unsafe { *slot_ptr.ptr().add(base + off) = Some(r) };
                 }
             });
-        }
-    });
-
+            b
+        })
+        .collect();
+    crate::par::global().run_all(tasks);
     slots.into_iter().map(|s| s.expect("worker failed to fill slot")).collect()
-}
-
-/// Wrapper to make the raw slot pointer Sync for the scoped threads.
-struct SlotsPtr<R>(*mut Option<R>);
-unsafe impl<R: Send> Sync for SlotsPtr<R> {}
-unsafe impl<R: Send> Send for SlotsPtr<R> {}
-
-/// Number of worker threads to use by default.
-pub fn default_threads() -> usize {
-    std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1)
-}
-
-/// Split `0..n` into at most `k` contiguous, near-equal, non-empty ranges
-/// (used to shard the columns of a multi-RHS block across workers).
-pub fn chunk_ranges(n: usize, k: usize) -> Vec<(usize, usize)> {
-    if n == 0 {
-        return Vec::new();
-    }
-    let k = k.clamp(1, n);
-    let base = n / k;
-    let extra = n % k;
-    let mut out = Vec::with_capacity(k);
-    let mut start = 0;
-    for i in 0..k {
-        let len = base + usize::from(i < extra);
-        out.push((start, start + len));
-        start += len;
-    }
-    debug_assert_eq!(start, n);
-    out
 }
 
 #[cfg(test)]
@@ -131,22 +105,14 @@ mod tests {
     }
 
     #[test]
-    fn chunk_ranges_cover_exactly() {
-        for (n, k) in [(10, 3), (1, 4), (7, 7), (16, 2), (5, 1), (100, 8)] {
-            let ranges = chunk_ranges(n, k);
-            assert!(ranges.len() <= k);
-            assert_eq!(ranges[0].0, 0);
-            assert_eq!(ranges.last().unwrap().1, n);
-            for w in ranges.windows(2) {
-                assert_eq!(w[0].1, w[1].0, "contiguous");
-            }
-            for &(a, b) in &ranges {
-                assert!(b > a, "non-empty");
-            }
-            let sizes: Vec<usize> = ranges.iter().map(|&(a, b)| b - a).collect();
-            let (mn, mx) = (sizes.iter().min().unwrap(), sizes.iter().max().unwrap());
-            assert!(mx - mn <= 1, "near-equal: {sizes:?}");
-        }
-        assert!(chunk_ranges(0, 4).is_empty());
+    fn nested_par_map_through_the_pool() {
+        // Block compression calls gemm, which may itself shard onto the
+        // pool — nested submission must complete and stay ordered.
+        let out = par_map((0..6).collect::<Vec<usize>>(), 3, |_, x| {
+            let inner = par_map((0..4).collect::<Vec<usize>>(), 2, move |_, y| x * 10 + y);
+            inner.iter().sum::<usize>()
+        });
+        let expect: Vec<usize> = (0..6).map(|x| 4 * x * 10 + 6).collect();
+        assert_eq!(out, expect);
     }
 }

@@ -7,8 +7,17 @@
 //! positions, so gather/scatter does the permuting implicitly.
 
 use crate::compress::QFactor;
-use crate::la::blas::{gemm, gemm_tn};
+use crate::la::blas::{gemm_mt, gemm_tn_mt};
 use crate::la::dense::Mat;
+use crate::par::SendPtr;
+
+/// Block-parallel rotation of a multi-RHS block engages above this many
+/// matrix elements (n_in × b).
+const STAGE_MAT_PAR_MIN: usize = 1 << 16;
+
+/// Block-parallel rotation of a single vector engages above this length —
+/// per-block work is only O(m) flops, so it takes a big stage to win.
+const STAGE_VEC_PAR_MIN: usize = 1 << 13;
 
 /// The local rotation of one diagonal block, in stage-input coordinates.
 #[derive(Clone, Debug)]
@@ -44,10 +53,21 @@ impl Stage {
     /// Apply Q̄_ℓ to a stage-input vector in place (v ← Q̄ v), then split
     /// into (core, wavelet-coefficients).
     pub fn forward(&self, v: &mut [f64], scratch: &mut Vec<f64>) -> (Vec<f64>, Vec<f64>) {
+        self.forward_mt(v, scratch, 1)
+    }
+
+    /// [`Stage::forward`] with block-parallel rotations: blocks act on
+    /// disjoint coordinate sets, so each can rotate its slice of `v`
+    /// concurrently — this is what parallelizes 1-RHS solves, where column
+    /// sharding has nothing to split.
+    pub fn forward_mt(
+        &self,
+        v: &mut [f64],
+        scratch: &mut Vec<f64>,
+        threads: usize,
+    ) -> (Vec<f64>, Vec<f64>) {
         debug_assert_eq!(v.len(), self.n_in);
-        for b in &self.blocks {
-            apply_block(&b.q, &b.idx, v, scratch, false);
-        }
+        self.rotate_vec(v, scratch, false, threads);
         let core = self.core_global.iter().map(|&i| v[i]).collect();
         let wav = self.wavelet_global.iter().map(|&i| v[i]).collect();
         (core, wav)
@@ -56,6 +76,17 @@ impl Stage {
     /// Inverse of [`Stage::forward`]: scatter (core, wavelet) back into a
     /// stage-input vector and apply Q̄ᵀ.
     pub fn backward(&self, core: &[f64], wav: &[f64], scratch: &mut Vec<f64>) -> Vec<f64> {
+        self.backward_mt(core, wav, scratch, 1)
+    }
+
+    /// [`Stage::backward`] with block-parallel rotations.
+    pub fn backward_mt(
+        &self,
+        core: &[f64],
+        wav: &[f64],
+        scratch: &mut Vec<f64>,
+        threads: usize,
+    ) -> Vec<f64> {
         debug_assert_eq!(core.len(), self.core_global.len());
         debug_assert_eq!(wav.len(), self.wavelet_global.len());
         let mut v = vec![0.0; self.n_in];
@@ -65,10 +96,30 @@ impl Stage {
         for (&g, &w) in self.wavelet_global.iter().zip(wav) {
             v[g] = w;
         }
-        for b in &self.blocks {
-            apply_block(&b.q, &b.idx, &mut v, scratch, true);
-        }
+        self.rotate_vec(&mut v, scratch, true, threads);
         v
+    }
+
+    /// Apply every block's rotation (or transpose) to a vector, block-
+    /// parallel when the stage is large enough. Each block gathers its own
+    /// coordinates, applies Q locally and scatters back — identical
+    /// arithmetic serial or parallel, so bits never depend on `threads`.
+    fn rotate_vec(&self, v: &mut [f64], scratch: &mut Vec<f64>, transpose: bool, threads: usize) {
+        if threads <= 1 || self.blocks.len() < 2 || self.n_in < STAGE_VEC_PAR_MIN {
+            for b in &self.blocks {
+                apply_block(&b.q, &b.idx, v, scratch, transpose);
+            }
+            return;
+        }
+        let vptr = SendPtr::new(v.as_mut_ptr());
+        let blocks = &self.blocks;
+        crate::par::run_tasks(blocks.len(), threads, move |bi| {
+            let b = &blocks[bi];
+            let mut local = Vec::new();
+            // SAFETY: blocks partition the coordinates (check_valid), so
+            // tasks touch disjoint entries.
+            unsafe { apply_block_vec_ptr(&b.q, &b.idx, vptr.ptr(), &mut local, transpose) };
+        });
     }
 
     /// Blocked (multi-RHS) [`Stage::forward`]: apply Q̄_ℓ to every column
@@ -77,10 +128,14 @@ impl Stage {
     /// all b right-hand sides — the per-rotation work is two contiguous
     /// row axpys instead of b strided scalar pairs.
     pub fn forward_mat(&self, v: &mut Mat) -> (Mat, Mat) {
+        self.forward_mat_mt(v, 1)
+    }
+
+    /// [`Stage::forward_mat`] with block-parallel rotations (row ranges of
+    /// the RHS block are owned by disjoint rotation blocks).
+    pub fn forward_mat_mt(&self, v: &mut Mat, threads: usize) -> (Mat, Mat) {
         debug_assert_eq!(v.rows, self.n_in);
-        for b in &self.blocks {
-            apply_block_mat(&b.q, &b.idx, v, false);
-        }
+        self.rotate_mat(v, false, threads);
         (v.gather_rows(&self.core_global), v.gather_rows(&self.wavelet_global))
     }
 
@@ -88,6 +143,11 @@ impl Stage {
     /// blocks back into stage-input coordinates and apply Q̄ᵀ to all
     /// columns.
     pub fn backward_mat(&self, core: &Mat, wav: &Mat) -> Mat {
+        self.backward_mat_mt(core, wav, 1)
+    }
+
+    /// [`Stage::backward_mat`] with block-parallel rotations.
+    pub fn backward_mat_mt(&self, core: &Mat, wav: &Mat, threads: usize) -> Mat {
         debug_assert_eq!(core.rows, self.core_global.len());
         debug_assert_eq!(wav.rows, self.wavelet_global.len());
         debug_assert_eq!(core.cols, wav.cols);
@@ -98,10 +158,29 @@ impl Stage {
         for (a, &g) in self.wavelet_global.iter().enumerate() {
             v.row_mut(g).copy_from_slice(wav.row(a));
         }
-        for b in &self.blocks {
-            apply_block_mat(&b.q, &b.idx, &mut v, true);
-        }
+        self.rotate_mat(&mut v, true, threads);
         v
+    }
+
+    /// Apply every block's rotation (or transpose) to all columns of `v`,
+    /// block-parallel when there is enough work. Serial and parallel run
+    /// the same per-block kernel on the same rows — bit-identical output
+    /// at any thread count.
+    fn rotate_mat(&self, v: &mut Mat, transpose: bool, threads: usize) {
+        if threads <= 1 || self.blocks.len() < 2 || self.n_in * v.cols < STAGE_MAT_PAR_MIN {
+            for b in &self.blocks {
+                apply_block_mat(&b.q, &b.idx, v, transpose);
+            }
+            return;
+        }
+        let cols = v.cols;
+        let vptr = SendPtr::new(v.data.as_mut_ptr());
+        let blocks = &self.blocks;
+        crate::par::run_tasks(blocks.len(), threads, move |bi| {
+            let b = &blocks[bi];
+            // SAFETY: blocks own disjoint row sets (check_valid).
+            unsafe { apply_block_mat_ptr(&b.q, &b.idx, vptr.ptr(), cols, transpose) };
+        });
     }
 
     /// Stored reals in this stage (Proposition 3/5 audits): rotations + D.
@@ -138,18 +217,42 @@ impl Stage {
 /// scatter back. `scratch` avoids reallocation in the matvec hot loop.
 #[inline]
 fn apply_block(q: &QFactor, idx: &[usize], v: &mut [f64], scratch: &mut Vec<f64>, transpose: bool) {
+    for &i in idx {
+        debug_assert!(i < v.len());
+    }
+    // SAFETY: exclusive &mut access to the whole vector.
+    unsafe { apply_block_vec_ptr(q, idx, v.as_mut_ptr(), scratch, transpose) }
+}
+
+/// Shared implementation behind the serial and block-parallel vector
+/// rotation paths: gather through the raw pointer, rotate locally, scatter
+/// back — same arithmetic regardless of how blocks are scheduled.
+///
+/// # Safety
+/// `data` must cover every index in `idx`, and no other access to those
+/// entries may be live.
+unsafe fn apply_block_vec_ptr(
+    q: &QFactor,
+    idx: &[usize],
+    data: *mut f64,
+    scratch: &mut Vec<f64>,
+    transpose: bool,
+) {
     match q {
         QFactor::Identity => {}
         _ => {
             scratch.clear();
-            scratch.extend(idx.iter().map(|&i| v[i]));
+            scratch.reserve(idx.len());
+            for &i in idx {
+                scratch.push(*data.add(i));
+            }
             if transpose {
                 q.apply_vec_t(scratch);
             } else {
                 q.apply_vec(scratch);
             }
             for (&i, &s) in idx.iter().zip(scratch.iter()) {
-                v[i] = s;
+                *data.add(i) = s;
             }
         }
     }
@@ -157,31 +260,55 @@ fn apply_block(q: &QFactor, idx: &[usize], v: &mut [f64], scratch: &mut Vec<f64>
 
 /// Blocked analogue of [`apply_block`]: apply one block's local rotation
 /// (or its transpose) to every column of an `n_in × b` matrix.
+fn apply_block_mat(q: &QFactor, idx: &[usize], v: &mut Mat, transpose: bool) {
+    // SAFETY: exclusive &mut access to the whole matrix.
+    unsafe { apply_block_mat_ptr(q, idx, v.data.as_mut_ptr(), v.cols, transpose) }
+}
+
+/// The one shared implementation behind the serial and block-parallel
+/// multi-RHS rotation paths — operating through a raw pointer so disjoint
+/// blocks can run concurrently.
 ///
 /// * Givens factors act directly on the full block — a rotation in the
 ///   (local i, j) plane mixes global rows `idx[i]` and `idx[j]`, two
 ///   contiguous slices in the row-major layout.
 /// * Dense factors gather the block's rows once and hit them with a single
-///   `gemm` instead of b `gemv`s.
-fn apply_block_mat(q: &QFactor, idx: &[usize], v: &mut Mat, transpose: bool) {
+///   `gemm` instead of b `gemv`s (serial inner gemm: the block task *is*
+///   the parallel grain).
+///
+/// # Safety
+/// `data` must point to a row-major buffer with `cols` columns covering
+/// every row in `idx`, and no concurrent access to those rows may exist.
+unsafe fn apply_block_mat_ptr(
+    q: &QFactor,
+    idx: &[usize],
+    data: *mut f64,
+    cols: usize,
+    transpose: bool,
+) {
     match q {
         QFactor::Identity => {}
         QFactor::Givens(seq) => {
             if transpose {
                 for g in seq.rots.iter().rev() {
-                    rotate_rows(v, idx[g.i], idx[g.j], g.c, -g.s);
+                    rotate_rows_ptr(data, cols, idx[g.i], idx[g.j], g.c, -g.s);
                 }
             } else {
                 for g in &seq.rots {
-                    rotate_rows(v, idx[g.i], idx[g.j], g.c, g.s);
+                    rotate_rows_ptr(data, cols, idx[g.i], idx[g.j], g.c, g.s);
                 }
             }
         }
         QFactor::Dense(qm) => {
-            let sub = v.gather_rows(idx); // m × b
-            let new = if transpose { gemm_tn(qm, &sub) } else { gemm(qm, &sub) };
+            let m = idx.len();
+            let mut sub = Mat::zeros(m, cols);
             for (a, &i) in idx.iter().enumerate() {
-                v.row_mut(i).copy_from_slice(new.row(a));
+                let dst = sub.row_mut(a).as_mut_ptr();
+                std::ptr::copy_nonoverlapping(data.add(i * cols), dst, cols);
+            }
+            let new = if transpose { gemm_tn_mt(qm, &sub, 1) } else { gemm_mt(qm, &sub, 1) };
+            for (a, &i) in idx.iter().enumerate() {
+                std::ptr::copy_nonoverlapping(new.row(a).as_ptr(), data.add(i * cols), cols);
             }
         }
     }
@@ -189,9 +316,14 @@ fn apply_block_mat(q: &QFactor, idx: &[usize], v: &mut Mat, transpose: bool) {
 
 /// Row-pair Givens application: (rowᵢ, rowⱼ) ← (c·rowᵢ + s·rowⱼ,
 /// −s·rowᵢ + c·rowⱼ). The transpose is the same map with s ↦ −s.
+///
+/// # Safety
+/// Rows `i` and `j` (distinct) must be exclusively owned by the caller.
 #[inline]
-fn rotate_rows(v: &mut Mat, i: usize, j: usize, c: f64, s: f64) {
-    let (ri, rj) = v.rows_pair_mut(i, j);
+unsafe fn rotate_rows_ptr(data: *mut f64, cols: usize, i: usize, j: usize, c: f64, s: f64) {
+    debug_assert_ne!(i, j);
+    let ri = std::slice::from_raw_parts_mut(data.add(i * cols), cols);
+    let rj = std::slice::from_raw_parts_mut(data.add(j * cols), cols);
     for (a, b) in ri.iter_mut().zip(rj.iter_mut()) {
         let (x, y) = (*a, *b);
         *a = c * x + s * y;

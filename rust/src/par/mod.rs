@@ -1,0 +1,231 @@
+//! Shared parallel compute plane.
+//!
+//! One process-wide persistent [`ThreadPool`] sits under every dense hot
+//! loop: row-band GEMM/SYRK (`la::blas`), tile-parallel gram assembly
+//! (`kernels`), the per-stage rotation application of the MKA factorize
+//! loop, and the block-parallel cascade (`mka::stage`). The old
+//! spawn-per-call `mka::parallel::par_map` is now a thin shim over it.
+//!
+//! **Determinism contract**: every parallel path in this crate uses fixed
+//! sharding over *output* regions (row bands, column panels, tiles, or
+//! disjoint rotation blocks) and runs, per output element, exactly the
+//! same accumulation sequence as the serial code. Results are therefore
+//! bit-for-bit identical at any thread count — `rust/tests/
+//! par_determinism.rs` enforces this across thread counts 1/2/4.
+
+pub mod pool;
+
+pub use pool::ThreadPool;
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::OnceLock;
+
+/// Requested parallelism (0 = auto-detect at first use).
+static TARGET: AtomicUsize = AtomicUsize::new(0);
+static GLOBAL: OnceLock<ThreadPool> = OnceLock::new();
+
+/// Hardware parallelism (fallback 1).
+pub fn default_threads() -> usize {
+    std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1)
+}
+
+/// Set the target parallelism for the shared pool (0 = auto). Growing an
+/// already-started pool spawns additional workers; results never depend
+/// on this value (see the determinism contract), only wall-clock does.
+pub fn set_threads(n: usize) {
+    TARGET.store(n, Ordering::Relaxed);
+    if n > 1 {
+        if let Some(p) = GLOBAL.get() {
+            p.ensure_workers(n);
+        }
+    }
+}
+
+/// Current target parallelism (≥ 1).
+pub fn threads() -> usize {
+    let t = TARGET.load(Ordering::Relaxed);
+    if t == 0 {
+        default_threads()
+    } else {
+        t.max(1)
+    }
+}
+
+/// The process-wide pool, started on first use.
+pub fn global() -> &'static ThreadPool {
+    GLOBAL.get_or_init(|| ThreadPool::new(threads()))
+}
+
+/// Jobs executed so far on the shared pool (0 if it never started).
+pub fn jobs_executed() -> u64 {
+    GLOBAL.get().map(|p| p.jobs_executed()).unwrap_or(0)
+}
+
+/// Worker threads currently alive in the shared pool (0 if not started).
+pub fn pool_workers() -> usize {
+    GLOBAL.get().map(|p| p.n_workers()).unwrap_or(0)
+}
+
+/// Split `0..n` into at most `k` contiguous, near-equal, non-empty ranges.
+pub fn chunk_ranges(n: usize, k: usize) -> Vec<(usize, usize)> {
+    if n == 0 {
+        return Vec::new();
+    }
+    let k = k.clamp(1, n);
+    let base = n / k;
+    let extra = n % k;
+    let mut out = Vec::with_capacity(k);
+    let mut start = 0;
+    for i in 0..k {
+        let len = base + usize::from(i < extra);
+        out.push((start, start + len));
+        start += len;
+    }
+    debug_assert_eq!(start, n);
+    out
+}
+
+/// Run `f(shard_index, lo, hi)` over contiguous shards of `0..n` on the
+/// shared pool. With one shard (or `n == 0`) the call is inlined — the
+/// serial path and the parallel path execute the same code on the same
+/// ranges, which is what makes callers bit-deterministic.
+pub fn for_ranges<F>(n: usize, max_shards: usize, f: F)
+where
+    F: Fn(usize, usize, usize) + Send + Sync,
+{
+    if n == 0 {
+        return;
+    }
+    let ranges = chunk_ranges(n, max_shards.max(1));
+    if ranges.len() <= 1 {
+        f(0, 0, n);
+        return;
+    }
+    let fref = &f;
+    let tasks: Vec<Box<dyn FnOnce() + Send + '_>> = ranges
+        .iter()
+        .enumerate()
+        .map(|(i, &(lo, hi))| {
+            let b: Box<dyn FnOnce() + Send + '_> = Box::new(move || fref(i, lo, hi));
+            b
+        })
+        .collect();
+    global().run_all(tasks);
+}
+
+/// Run `f(task_index)` for every index in `0..n_tasks` with at most
+/// `max_parallel` pool tasks in flight: indices are grouped into
+/// contiguous chunks, one pool task per chunk, serial inside a chunk —
+/// so `max_parallel` is a real concurrency cap for this call, not just a
+/// hint. Per-index execution is identical to the serial loop, keeping
+/// callers bit-deterministic. `f` must tolerate concurrent calls for
+/// different indices.
+pub fn run_tasks<F>(n_tasks: usize, max_parallel: usize, f: F)
+where
+    F: Fn(usize) + Send + Sync,
+{
+    if n_tasks == 0 {
+        return;
+    }
+    let groups = chunk_ranges(n_tasks, max_parallel.max(1));
+    if max_parallel <= 1 || groups.len() <= 1 {
+        for i in 0..n_tasks {
+            f(i);
+        }
+        return;
+    }
+    let fref = &f;
+    let tasks: Vec<Box<dyn FnOnce() + Send + '_>> = groups
+        .iter()
+        .map(|&(lo, hi)| {
+            let b: Box<dyn FnOnce() + Send + '_> = Box::new(move || {
+                for i in lo..hi {
+                    fref(i);
+                }
+            });
+            b
+        })
+        .collect();
+    global().run_all(tasks);
+}
+
+/// Raw mutable pointer that may cross thread boundaries.
+///
+/// # Safety contract
+/// The *user* guarantees that concurrent tasks touch disjoint regions
+/// behind the pointer (disjoint row bands, tiles, or rotation blocks) and
+/// that the allocation outlives the parallel region — which `run_all`'s
+/// blocking semantics provide.
+#[derive(Clone, Copy)]
+pub struct SendPtr<T>(*mut T);
+
+unsafe impl<T> Send for SendPtr<T> {}
+unsafe impl<T> Sync for SendPtr<T> {}
+
+impl<T> SendPtr<T> {
+    pub fn new(p: *mut T) -> SendPtr<T> {
+        SendPtr(p)
+    }
+
+    pub fn ptr(&self) -> *mut T {
+        self.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn threads_is_positive() {
+        assert!(threads() >= 1);
+        assert!(default_threads() >= 1);
+    }
+
+    #[test]
+    fn for_ranges_covers_everything_once() {
+        let n = 1000;
+        let mut hits = vec![0u8; n];
+        let ptr = SendPtr::new(hits.as_mut_ptr());
+        for_ranges(n, 7, move |_, lo, hi| {
+            for i in lo..hi {
+                // SAFETY: shards are disjoint.
+                unsafe { *ptr.ptr().add(i) += 1 };
+            }
+        });
+        assert!(hits.iter().all(|&h| h == 1));
+    }
+
+    #[test]
+    fn for_ranges_serial_inline() {
+        // One shard: f runs inline exactly once over the full range.
+        let calls = std::sync::atomic::AtomicUsize::new(0);
+        let covered = std::sync::atomic::AtomicUsize::new(0);
+        for_ranges(10, 1, |_, lo, hi| {
+            calls.fetch_add(1, Ordering::SeqCst);
+            covered.fetch_add(hi - lo, Ordering::SeqCst);
+        });
+        assert_eq!(calls.load(Ordering::SeqCst), 1);
+        assert_eq!(covered.load(Ordering::SeqCst), 10);
+    }
+
+    #[test]
+    fn chunk_ranges_cover_exactly() {
+        for (n, k) in [(10, 3), (1, 4), (7, 7), (16, 2), (5, 1), (100, 8)] {
+            let ranges = chunk_ranges(n, k);
+            assert!(ranges.len() <= k);
+            assert_eq!(ranges[0].0, 0);
+            assert_eq!(ranges.last().unwrap().1, n);
+            for w in ranges.windows(2) {
+                assert_eq!(w[0].1, w[1].0, "contiguous");
+            }
+            for &(a, b) in &ranges {
+                assert!(b > a, "non-empty");
+            }
+            let sizes: Vec<usize> = ranges.iter().map(|&(a, b)| b - a).collect();
+            let (mn, mx) = (sizes.iter().min().unwrap(), sizes.iter().max().unwrap());
+            assert!(mx - mn <= 1, "near-equal: {sizes:?}");
+        }
+        assert!(chunk_ranges(0, 4).is_empty());
+    }
+}

@@ -1,0 +1,378 @@
+//! Persistent work-sharing thread pool.
+//!
+//! One shared FIFO of jobs, N long-lived worker threads, and a *helping*
+//! submitter: `run_all` pushes its tasks and then executes jobs from the
+//! shared queue itself until its own batch completes. Helping makes nested
+//! submission deadlock-free (a task that submits a sub-batch drains the
+//! queue while it waits) and means a pool of N workers delivers N+1-way
+//! execution under a blocked caller.
+//!
+//! Panic safety: a panicking task never kills a worker; the first payload
+//! is captured and re-thrown on the thread that called `run_all`, after
+//! every task of the batch has finished (so borrowed data stays valid for
+//! exactly the call duration — the invariant behind the lifetime erasure).
+
+use std::any::Any;
+use std::collections::VecDeque;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+/// A queued job plus the batch it belongs to (None for detached `spawn`s).
+/// The batch handle lets a helping submitter pick *its own* jobs out of
+/// the shared FIFO, so a small batch's latency never includes a foreign
+/// long-running job.
+struct QueuedJob {
+    run: Job,
+    batch: Option<Arc<Batch>>,
+}
+
+struct Shared {
+    queue: Mutex<VecDeque<QueuedJob>>,
+    work_cv: Condvar,
+    shutdown: AtomicBool,
+    jobs_executed: AtomicU64,
+}
+
+/// Completion latch for one `run_all` batch.
+struct Batch {
+    state: Mutex<BatchState>,
+    done_cv: Condvar,
+}
+
+struct BatchState {
+    remaining: usize,
+    panic: Option<Box<dyn Any + Send>>,
+}
+
+impl Batch {
+    fn new(n: usize) -> Batch {
+        Batch {
+            state: Mutex::new(BatchState { remaining: n, panic: None }),
+            done_cv: Condvar::new(),
+        }
+    }
+
+    /// Mark one task finished, recording the first panic payload.
+    fn complete(&self, panic: Option<Box<dyn Any + Send>>) {
+        let mut st = self.state.lock().unwrap();
+        if st.panic.is_none() {
+            st.panic = panic;
+        }
+        st.remaining -= 1;
+        if st.remaining == 0 {
+            self.done_cv.notify_all();
+        }
+    }
+}
+
+/// A fixed set of persistent worker threads sharing one job queue.
+pub struct ThreadPool {
+    shared: Arc<Shared>,
+    workers: Mutex<Vec<std::thread::JoinHandle<()>>>,
+}
+
+impl ThreadPool {
+    /// Spawn a pool with `n` workers (at least 1).
+    pub fn new(n: usize) -> ThreadPool {
+        let shared = Arc::new(Shared {
+            queue: Mutex::new(VecDeque::new()),
+            work_cv: Condvar::new(),
+            shutdown: AtomicBool::new(false),
+            jobs_executed: AtomicU64::new(0),
+        });
+        let pool = ThreadPool { shared, workers: Mutex::new(Vec::new()) };
+        pool.ensure_workers(n.max(1));
+        pool
+    }
+
+    /// Grow the pool to at least `n` workers (never shrinks).
+    pub fn ensure_workers(&self, n: usize) {
+        let mut workers = self.workers.lock().unwrap();
+        while workers.len() < n {
+            let shared = Arc::clone(&self.shared);
+            let idx = workers.len();
+            let handle = std::thread::Builder::new()
+                .name(format!("mka-par-{idx}"))
+                .spawn(move || worker_loop(&shared))
+                .expect("spawn pool worker");
+            workers.push(handle);
+        }
+    }
+
+    pub fn n_workers(&self) -> usize {
+        self.workers.lock().unwrap().len()
+    }
+
+    /// Total jobs executed on this pool (workers + helping submitters).
+    pub fn jobs_executed(&self) -> u64 {
+        self.shared.jobs_executed.load(Ordering::Relaxed)
+    }
+
+    /// Fire-and-forget job. Panics in `f` are swallowed (they must not
+    /// kill a worker); use `run_all` when failure matters.
+    pub fn spawn(&self, f: impl FnOnce() + Send + 'static) {
+        let job: Job = Box::new(move || {
+            let _ = catch_unwind(AssertUnwindSafe(f));
+        });
+        let mut q = self.shared.queue.lock().unwrap();
+        q.push_back(QueuedJob { run: job, batch: None });
+        self.shared.work_cv.notify_one();
+    }
+
+    /// Execute every task, blocking until all have finished. The calling
+    /// thread helps by executing *its own batch's* queued jobs while it
+    /// waits — nested `run_all` from inside a task therefore cannot
+    /// deadlock, and a small batch never waits on an unrelated long job.
+    /// If any task panicked, the first payload is re-thrown here — after
+    /// the whole batch is done.
+    pub fn run_all<'env>(&self, tasks: Vec<Box<dyn FnOnce() + Send + 'env>>) {
+        let n = tasks.len();
+        if n == 0 {
+            return;
+        }
+        if n == 1 {
+            let task = tasks.into_iter().next().unwrap();
+            task();
+            return;
+        }
+        let batch = Arc::new(Batch::new(n));
+        {
+            let mut q = self.shared.queue.lock().unwrap();
+            for task in tasks {
+                let b = Arc::clone(&batch);
+                let job: Box<dyn FnOnce() + Send + 'env> = Box::new(move || {
+                    let result = catch_unwind(AssertUnwindSafe(task));
+                    b.complete(result.err());
+                });
+                // SAFETY: `run_all` does not return until `remaining == 0`,
+                // i.e. every job (and everything it borrows from 'env) has
+                // finished executing, so erasing 'env to 'static never lets
+                // a job outlive its borrows.
+                let job: Job = unsafe {
+                    std::mem::transmute::<Box<dyn FnOnce() + Send + 'env>, Job>(job)
+                };
+                q.push_back(QueuedJob { run: job, batch: Some(Arc::clone(&batch)) });
+            }
+            self.shared.work_cv.notify_all();
+        }
+        self.help_until(&batch);
+        let panic = batch.state.lock().unwrap().panic.take();
+        if let Some(p) = panic {
+            std::panic::resume_unwind(p);
+        }
+    }
+
+    /// Pop the first queued job belonging to `batch`, if any.
+    fn pop_own(&self, batch: &Arc<Batch>) -> Option<QueuedJob> {
+        let mut q = self.shared.queue.lock().unwrap();
+        let pos = q
+            .iter()
+            .position(|j| j.batch.as_ref().is_some_and(|b| Arc::ptr_eq(b, batch)));
+        pos.and_then(|p| q.remove(p))
+    }
+
+    /// Execute this batch's queued jobs until none are left, then block on
+    /// the batch latch until jobs picked up by workers have finished too.
+    /// Own jobs cannot reappear once the queue holds none (a batch's jobs
+    /// are all pushed up front), so a single drain-then-wait suffices.
+    fn help_until(&self, batch: &Arc<Batch>) {
+        while let Some(job) = self.pop_own(batch) {
+            self.shared.jobs_executed.fetch_add(1, Ordering::Relaxed);
+            (job.run)();
+        }
+        let mut st = batch.state.lock().unwrap();
+        while st.remaining > 0 {
+            st = batch.done_cv.wait(st).unwrap();
+        }
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        {
+            // Store + notify under the queue lock: a worker checks the
+            // shutdown flag while holding this lock and releases it
+            // atomically when it parks on work_cv, so the store can never
+            // land inside a worker's check-then-wait window (which would
+            // lose the wakeup and hang the join below).
+            let _q = self.shared.queue.lock().unwrap();
+            self.shared.shutdown.store(true, Ordering::Relaxed);
+            self.shared.work_cv.notify_all();
+        }
+        let mut workers = self.workers.lock().unwrap();
+        for w in workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+fn worker_loop(shared: &Shared) {
+    loop {
+        let job = {
+            let mut q = shared.queue.lock().unwrap();
+            loop {
+                if let Some(j) = q.pop_front() {
+                    break Some(j);
+                }
+                // Drain-then-exit: pending jobs are always completed, so a
+                // pool dropped while busy still runs everything submitted.
+                if shared.shutdown.load(Ordering::Relaxed) {
+                    break None;
+                }
+                q = shared.work_cv.wait(q).unwrap();
+            }
+        };
+        match job {
+            Some(j) => {
+                shared.jobs_executed.fetch_add(1, Ordering::Relaxed);
+                (j.run)();
+            }
+            None => return,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicUsize;
+    use std::time::Duration;
+
+    #[test]
+    fn runs_all_tasks() {
+        let pool = ThreadPool::new(4);
+        let count = AtomicUsize::new(0);
+        let tasks: Vec<Box<dyn FnOnce() + Send + '_>> = (0..64)
+            .map(|_| {
+                let c = &count;
+                let b: Box<dyn FnOnce() + Send + '_> = Box::new(move || {
+                    c.fetch_add(1, Ordering::SeqCst);
+                });
+                b
+            })
+            .collect();
+        pool.run_all(tasks);
+        assert_eq!(count.load(Ordering::SeqCst), 64);
+        assert!(pool.jobs_executed() >= 1);
+    }
+
+    #[test]
+    fn borrowed_results_are_visible() {
+        let pool = ThreadPool::new(2);
+        let mut out = vec![0usize; 32];
+        {
+            let ptr = crate::par::SendPtr::new(out.as_mut_ptr());
+            let tasks: Vec<Box<dyn FnOnce() + Send + '_>> = (0..32)
+                .map(|i| {
+                    let b: Box<dyn FnOnce() + Send + '_> = Box::new(move || {
+                        // SAFETY: one task per slot.
+                        unsafe { *ptr.ptr().add(i) = i * i };
+                    });
+                    b
+                })
+                .collect();
+            pool.run_all(tasks);
+        }
+        for (i, v) in out.iter().enumerate() {
+            assert_eq!(*v, i * i);
+        }
+    }
+
+    #[test]
+    fn nested_run_all_does_not_deadlock() {
+        let pool = ThreadPool::new(2);
+        let count = AtomicUsize::new(0);
+        let outer: Vec<Box<dyn FnOnce() + Send + '_>> = (0..8)
+            .map(|_| {
+                let pool_ref = &pool;
+                let c = &count;
+                let b: Box<dyn FnOnce() + Send + '_> = Box::new(move || {
+                    let inner: Vec<Box<dyn FnOnce() + Send + '_>> = (0..8)
+                        .map(|_| {
+                            let b2: Box<dyn FnOnce() + Send + '_> = Box::new(move || {
+                                c.fetch_add(1, Ordering::SeqCst);
+                            });
+                            b2
+                        })
+                        .collect();
+                    pool_ref.run_all(inner);
+                });
+                b
+            })
+            .collect();
+        pool.run_all(outer);
+        assert_eq!(count.load(Ordering::SeqCst), 64);
+    }
+
+    #[test]
+    fn panic_propagates_and_pool_survives() {
+        let pool = ThreadPool::new(2);
+        let result = catch_unwind(AssertUnwindSafe(|| {
+            let tasks: Vec<Box<dyn FnOnce() + Send + 'static>> = (0..4)
+                .map(|i| {
+                    let b: Box<dyn FnOnce() + Send + 'static> = Box::new(move || {
+                        if i == 2 {
+                            panic!("task boom");
+                        }
+                    });
+                    b
+                })
+                .collect();
+            pool.run_all(tasks);
+        }));
+        assert!(result.is_err(), "panic must propagate to the submitter");
+        // Pool is still usable after a panicked batch.
+        let count = AtomicUsize::new(0);
+        let tasks: Vec<Box<dyn FnOnce() + Send + '_>> = (0..8)
+            .map(|_| {
+                let c = &count;
+                let b: Box<dyn FnOnce() + Send + '_> = Box::new(move || {
+                    c.fetch_add(1, Ordering::SeqCst);
+                });
+                b
+            })
+            .collect();
+        pool.run_all(tasks);
+        assert_eq!(count.load(Ordering::SeqCst), 8);
+    }
+
+    #[test]
+    fn drop_while_busy_completes_spawned_jobs() {
+        let pool = ThreadPool::new(2);
+        let count = Arc::new(AtomicUsize::new(0));
+        for _ in 0..16 {
+            let c = Arc::clone(&count);
+            pool.spawn(move || {
+                std::thread::sleep(Duration::from_millis(2));
+                c.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        drop(pool); // workers drain the queue before exiting
+        assert_eq!(count.load(Ordering::SeqCst), 16);
+    }
+
+    #[test]
+    fn ensure_workers_grows() {
+        let pool = ThreadPool::new(1);
+        assert_eq!(pool.n_workers(), 1);
+        pool.ensure_workers(3);
+        assert_eq!(pool.n_workers(), 3);
+        pool.ensure_workers(2); // never shrinks
+        assert_eq!(pool.n_workers(), 3);
+    }
+
+    #[test]
+    fn empty_and_single_batches() {
+        let pool = ThreadPool::new(2);
+        pool.run_all(Vec::new());
+        let ran = AtomicUsize::new(0);
+        let r = &ran;
+        pool.run_all(vec![Box::new(move || {
+            r.fetch_add(1, Ordering::SeqCst);
+        }) as Box<dyn FnOnce() + Send + '_>]);
+        assert_eq!(ran.load(Ordering::SeqCst), 1);
+    }
+}

@@ -1,0 +1,278 @@
+//! Determinism and robustness properties of the shared compute plane.
+//!
+//! The pool's contract is that parallelism is *only* a wall-clock knob:
+//! every parallel path (row-band GEMM/SYRK, tiled gram assembly, the
+//! factorize rotation phases, block-parallel cascades, column-sharded
+//! solves) must reproduce the serial result bit-for-bit at any thread
+//! count. These tests pin that across thread counts 1/2/4, plus the pool
+//! stress cases (nested submit, panic propagation, drop-while-busy).
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+
+use mka_gp::data::synth::{gp_dataset, SynthSpec};
+use mka_gp::gp::mka_gp::MkaGp;
+use mka_gp::gp::GpModel;
+use mka_gp::kernels::gram::{rbf_tile_native, GramBuilder, TileEngine};
+use mka_gp::kernels::{gram_sym_with, gram_with, Kernel, RbfKernel};
+use mka_gp::la::blas::{
+    gemm_mt, gemm_nt_mt, gemm_tn_mt, syrk_aat_mt, syrk_ata_mt,
+};
+use mka_gp::la::{Chol, Mat};
+use mka_gp::mka::{factorize, MkaConfig};
+use mka_gp::par::ThreadPool;
+use mka_gp::util::Rng;
+
+fn randm(r: usize, c: usize, seed: u64) -> Mat {
+    let mut rng = Rng::new(seed);
+    Mat::from_fn(r, c, |_, _| rng.normal())
+}
+
+#[test]
+fn gemm_family_bit_identical_across_thread_counts() {
+    // Sizes chosen to clear PAR_MIN_FLOPS so the banding really engages.
+    let a = randm(180, 150, 1);
+    let b = randm(150, 160, 2);
+    let a_sq = randm(170, 180, 3);
+    let serial = (
+        gemm_mt(&a, &b, 1),
+        gemm_tn_mt(&a_sq, &randm(170, 150, 4), 1),
+        gemm_nt_mt(&a, &randm(190, 150, 5), 1),
+        syrk_ata_mt(&a_sq, 1),
+        syrk_aat_mt(&a_sq, 1),
+    );
+    for t in [2, 4] {
+        assert_eq!(serial.0.data, gemm_mt(&a, &b, t).data, "gemm t={t}");
+        assert_eq!(
+            serial.1.data,
+            gemm_tn_mt(&a_sq, &randm(170, 150, 4), t).data,
+            "gemm_tn t={t}"
+        );
+        assert_eq!(
+            serial.2.data,
+            gemm_nt_mt(&a, &randm(190, 150, 5), t).data,
+            "gemm_nt t={t}"
+        );
+        assert_eq!(serial.3.data, syrk_ata_mt(&a_sq, t).data, "syrk_ata t={t}");
+        assert_eq!(serial.4.data, syrk_aat_mt(&a_sq, t).data, "syrk_aat t={t}");
+    }
+}
+
+#[test]
+fn gram_assembly_bit_identical_across_thread_counts() {
+    let x = randm(200, 3, 6);
+    let y = randm(170, 3, 7);
+    let kern = RbfKernel::with_signal(0.8, 1.4);
+    let sym1 = gram_sym_with(&kern, &x, 1);
+    let rect1 = gram_with(&kern, &x, &y, 1);
+    assert_eq!(sym1.asymmetry(), 0.0);
+    for t in [2, 4] {
+        assert_eq!(sym1.data, gram_sym_with(&kern, &x, t).data, "gram_sym t={t}");
+        assert_eq!(rect1.data, gram_with(&kern, &x, &y, t).data, "gram t={t}");
+    }
+}
+
+struct NativeTileEngine {
+    tile: usize,
+}
+
+impl TileEngine for NativeTileEngine {
+    fn tile(&self) -> usize {
+        self.tile
+    }
+    fn max_dim(&self) -> usize {
+        64
+    }
+    fn rbf_tile(&self, xb: &Mat, yb: &Mat, l: f64, sf: f64) -> Mat {
+        rbf_tile_native(xb, yb, l, sf)
+    }
+}
+
+#[test]
+fn tiled_engine_gram_bit_identical_across_thread_counts() {
+    let x = randm(150, 4, 8);
+    let y = randm(130, 4, 9);
+    let build = |threads: usize| {
+        let eng: Arc<dyn TileEngine> = Arc::new(NativeTileEngine { tile: 16 });
+        GramBuilder::rbf(0.9, 1.2, Some(eng)).with_threads(threads)
+    };
+    let sym1 = build(1).build_sym(&x);
+    let rect1 = build(1).build(&x, &y);
+    for t in [2, 4] {
+        assert_eq!(sym1.data, build(t).build_sym(&x).data, "build_sym t={t}");
+        assert_eq!(rect1.data, build(t).build(&x, &y).data, "build t={t}");
+    }
+}
+
+fn kernel_matrix(n: usize, seed: u64) -> (Mat, Mat) {
+    let mut rng = Rng::new(seed);
+    let x = Mat::from_fn(n, 3, |_, _| rng.normal());
+    let mut k = RbfKernel::new(1.0).gram_sym(&x);
+    k.add_diag(0.1);
+    (k, x)
+}
+
+#[test]
+fn factorize_bit_identical_across_thread_counts() {
+    // n >= 512 so the parallel rotation phases actually engage.
+    let (k, x) = kernel_matrix(600, 10);
+    let cfg = |t: usize| MkaConfig {
+        d_core: 24,
+        block_size: 64,
+        n_threads: t,
+        ..MkaConfig::default()
+    };
+    let f1 = factorize(&k, Some(&x), &cfg(1)).unwrap();
+    let d1 = f1.to_dense();
+    for t in [2, 4] {
+        let ft = factorize(&k, Some(&x), &cfg(t)).unwrap();
+        assert_eq!(f1.core.data, ft.core.data, "core t={t}");
+        assert_eq!(f1.n_stages(), ft.n_stages(), "stages t={t}");
+        for (s1, st) in f1.stages.iter().zip(&ft.stages) {
+            assert_eq!(s1.dvals, st.dvals, "dvals t={t}");
+            assert_eq!(s1.core_global, st.core_global, "core idx t={t}");
+        }
+        // The cascade itself (block-parallel under t) reproduces serial.
+        assert_eq!(d1.data, ft.to_dense().data, "to_dense t={t}");
+    }
+}
+
+#[test]
+fn solve_paths_bit_identical_across_thread_counts() {
+    let (k, x) = kernel_matrix(600, 11);
+    let f1 = factorize(
+        &k,
+        Some(&x),
+        &MkaConfig { d_core: 24, block_size: 64, n_threads: 1, ..MkaConfig::default() },
+    )
+    .unwrap();
+    let mut rng = Rng::new(12);
+    let wide = Mat::from_fn(600, 40, |_, _| rng.normal());
+    let narrow = Mat::from_fn(600, 3, |_, _| rng.normal());
+    let wide1 = f1.solve_mat_par(&wide, 1).unwrap();
+    let narrow1 = f1.solve_mat_par(&narrow, 1).unwrap();
+    let mm1 = f1.matmat_par(&wide, 1);
+    for t in [2, 4] {
+        assert_eq!(wide1.data, f1.solve_mat_par(&wide, t).unwrap().data, "wide t={t}");
+        assert_eq!(
+            narrow1.data,
+            f1.solve_mat_par(&narrow, t).unwrap().data,
+            "narrow t={t}"
+        );
+        assert_eq!(mm1.data, f1.matmat_par(&wide, t).data, "matmat t={t}");
+    }
+}
+
+#[test]
+fn predict_bit_identical_across_thread_counts() {
+    let data = gp_dataset(&SynthSpec::named("det", 360, 2), 13);
+    let (tr, te) = data.split(0.88, 3);
+    let kern = RbfKernel::new(1.0);
+    let cfg = |t: usize| MkaConfig {
+        d_core: 24,
+        block_size: 48,
+        n_threads: t,
+        ..MkaConfig::default()
+    };
+    let p1 = MkaGp::fit(&tr, &kern, 0.1, &cfg(1)).unwrap().predict(&te.x);
+    for t in [2, 4] {
+        let pt = MkaGp::fit(&tr, &kern, 0.1, &cfg(t)).unwrap().predict(&te.x);
+        for i in 0..te.n() {
+            assert_eq!(p1.mean[i].to_bits(), pt.mean[i].to_bits(), "mean[{i}] t={t}");
+            assert_eq!(p1.var[i].to_bits(), pt.var[i].to_bits(), "var[{i}] t={t}");
+        }
+    }
+}
+
+#[test]
+fn blocked_chol_solve_matches_per_column() {
+    let b = randm(60, 64, 14);
+    let mut a = mka_gp::la::gemm_nt(&b, &b);
+    a.add_diag(0.5);
+    let chol = Chol::new(&a).unwrap();
+    let rhs = randm(60, 9, 15);
+    let blocked = chol.solve_mat(&rhs);
+    // A · X ≈ B and agreement with the per-column solver.
+    let ax = mka_gp::la::gemm(&a, &blocked);
+    assert!(ax.sub(&rhs).max_abs() < 1e-8);
+    for j in 0..rhs.cols {
+        let col = chol.solve(&rhs.col(j));
+        for i in 0..60 {
+            assert!((blocked.at(i, j) - col[i]).abs() < 1e-9, "({i},{j})");
+        }
+    }
+}
+
+#[test]
+fn pool_stress_nested_submit() {
+    let pool = ThreadPool::new(3);
+    let count = AtomicUsize::new(0);
+    let outer: Vec<Box<dyn FnOnce() + Send + '_>> = (0..6)
+        .map(|_| {
+            let pool_ref = &pool;
+            let c = &count;
+            let b: Box<dyn FnOnce() + Send + '_> = Box::new(move || {
+                let inner: Vec<Box<dyn FnOnce() + Send + '_>> = (0..10)
+                    .map(|_| {
+                        let b2: Box<dyn FnOnce() + Send + '_> = Box::new(move || {
+                            c.fetch_add(1, Ordering::SeqCst);
+                        });
+                        b2
+                    })
+                    .collect();
+                pool_ref.run_all(inner);
+            });
+            b
+        })
+        .collect();
+    pool.run_all(outer);
+    assert_eq!(count.load(Ordering::SeqCst), 60);
+}
+
+#[test]
+fn pool_stress_panic_propagation() {
+    let pool = ThreadPool::new(2);
+    let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+        let tasks: Vec<Box<dyn FnOnce() + Send + 'static>> = (0..5)
+            .map(|i| {
+                let b: Box<dyn FnOnce() + Send + 'static> = Box::new(move || {
+                    if i == 3 {
+                        panic!("deliberate failure in task {i}");
+                    }
+                });
+                b
+            })
+            .collect();
+        pool.run_all(tasks);
+    }));
+    assert!(result.is_err(), "batch panic must reach the submitter");
+    // The pool survives and keeps executing.
+    let done = AtomicUsize::new(0);
+    let d = &done;
+    let tasks: Vec<Box<dyn FnOnce() + Send + '_>> = (0..4)
+        .map(|_| {
+            let b: Box<dyn FnOnce() + Send + '_> = Box::new(move || {
+                d.fetch_add(1, Ordering::SeqCst);
+            });
+            b
+        })
+        .collect();
+    pool.run_all(tasks);
+    assert_eq!(done.load(Ordering::SeqCst), 4);
+}
+
+#[test]
+fn pool_stress_drop_while_busy() {
+    let pool = ThreadPool::new(2);
+    let count = Arc::new(AtomicUsize::new(0));
+    for _ in 0..24 {
+        let c = Arc::clone(&count);
+        pool.spawn(move || {
+            std::thread::sleep(std::time::Duration::from_millis(1));
+            c.fetch_add(1, Ordering::SeqCst);
+        });
+    }
+    // Dropping a busy pool must drain the queue, not hang or lose work.
+    drop(pool);
+    assert_eq!(count.load(Ordering::SeqCst), 24);
+}
