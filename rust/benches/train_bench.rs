@@ -1,0 +1,150 @@
+//! Bench: the marginal-likelihood training plane.
+//!
+//! Measures the two quantities the `train` workload lives on:
+//!
+//! * **MLL evals/sec** — one evidence evaluation = one `factorize` +
+//!   `solve` + `logdet` for MKA (Proposition 7's "direct method" pitch);
+//! * **train-op wall time** — a full multi-start Nelder–Mead run through
+//!   `train_model`, i.e. what one `{"op":"train"}` job costs.
+//!
+//!     cargo bench --bench train_bench [-- --sizes 512,1024 --k 32]
+//!
+//! `--json` mode writes the machine-readable `BENCH_train.json`
+//! trajectory (MLL evals/sec and train wall time vs n × threads),
+//! asserting along the way that the evidence value is bit-identical at
+//! every thread count:
+//!
+//!     cargo bench --bench train_bench -- --json \
+//!         [--sizes 512,1024,2048] [--threads 1,2,4] [--k 32] \
+//!         [--max-evals 12] [--out ../BENCH_train.json]
+
+use mka_gp::bench::{bench_budget, fmt_secs, Table};
+use mka_gp::data::synth::{gp_dataset, SynthSpec};
+use mka_gp::experiments::methods::Method;
+use mka_gp::gp::cv::HyperParams;
+use mka_gp::train::{log_marginal_likelihood, train_model, ModelSelection, OptimBudget};
+use mka_gp::util::{Args, Json, Timer};
+
+fn main() {
+    let args = Args::from_env(false);
+    if args.has_flag("json") {
+        run_json_bench(&args);
+        return;
+    }
+    let sizes = args.get_usize_list("sizes", &[512, 1024]);
+    let k = args.get_usize("k", 32);
+    let hp = HyperParams { lengthscale: 1.0, sigma2: 0.1 };
+
+    println!("=== Training plane: evidence evaluation cost ===\n");
+    let mut table = Table::new(&["n", "method", "mll", "one eval", "evals/s"]);
+    for &n in &sizes {
+        let data = gp_dataset(&SynthSpec::named("tb", n, 4), 5);
+        for m in [Method::Mka, Method::Full, Method::Sor, Method::Fitc, Method::Pitc] {
+            let st = bench_budget("mll", 0.4, 20, || {
+                std::hint::black_box(log_marginal_likelihood(m, &data, hp, k, 7).expect("mll"));
+            });
+            let val = log_marginal_likelihood(m, &data, hp, k, 7).expect("mll");
+            table.row(&[
+                n.to_string(),
+                m.label().to_string(),
+                format!("{val:.1}"),
+                fmt_secs(st.mean_s),
+                format!("{:.1}", 1.0 / st.mean_s.max(1e-12)),
+            ]);
+        }
+    }
+    table.print();
+
+    let n = sizes[0];
+    let data = gp_dataset(&SynthSpec::named("tb", n, 4), 5);
+    let sel = ModelSelection::Mll {
+        budget: OptimBudget { max_evals: 24, n_starts: 3, tol: 1e-4 },
+    };
+    let timer = Timer::start();
+    let (_model, report) = train_model(Method::Mka, &data, &sel, k, 7).expect("train");
+    println!(
+        "\ntrain op (MKA, n={n}): {} evals in {}, best MLL {:.2}, converged={}",
+        report.evals,
+        fmt_secs(timer.elapsed_secs()),
+        report.best_mll.unwrap_or(f64::NAN),
+        report.converged
+    );
+}
+
+/// `--json` mode: machine-readable training-plane perf trajectory.
+fn run_json_bench(args: &Args) {
+    let sizes = args.get_usize_list("sizes", &[512, 1024, 2048]);
+    let threads_list = args.get_usize_list("threads", &[1, 2, 4]);
+    let k = args.get_usize("k", 32);
+    let max_evals = args.get_usize("max-evals", 12);
+    let out_path = args.get_or("out", "../BENCH_train.json").to_string();
+    let hp = HyperParams { lengthscale: 1.0, sigma2: 0.1 };
+
+    let mut results: Vec<Json> = Vec::new();
+    for &n in &sizes {
+        let data = gp_dataset(&SynthSpec::named("tb", n, 4), 5);
+        let mut base: Option<(f64, f64)> = None;
+        let mut ref_mll: Option<f64> = None;
+        for &t in &threads_list {
+            mka_gp::par::set_threads(t);
+            let st = bench_budget("mll", 0.5, 8, || {
+                std::hint::black_box(
+                    log_marginal_likelihood(Method::Mka, &data, hp, k, 7).expect("mll"),
+                );
+            });
+            let val = log_marginal_likelihood(Method::Mka, &data, hp, k, 7).expect("mll");
+            match ref_mll {
+                None => ref_mll = Some(val),
+                Some(r) => assert_eq!(
+                    r.to_bits(),
+                    val.to_bits(),
+                    "MLL at {t} threads must be bit-identical to serial (n={n})"
+                ),
+            }
+            let sel = ModelSelection::Mll {
+                budget: OptimBudget { max_evals, n_starts: 2, tol: 1e-4 },
+            };
+            let timer = Timer::start();
+            let (_model, report) = train_model(Method::Mka, &data, &sel, k, 7).expect("train");
+            let train_s = timer.elapsed_secs();
+
+            let (m0, t0) = *base.get_or_insert((st.mean_s, train_s));
+            println!(
+                "n={n} t={t}: mll eval {} ({:.2}x, {:.1}/s) train {} ({:.2}x, {} evals)",
+                fmt_secs(st.mean_s),
+                m0 / st.mean_s.max(1e-12),
+                1.0 / st.mean_s.max(1e-12),
+                fmt_secs(train_s),
+                t0 / train_s.max(1e-12),
+                report.evals
+            );
+            results.push(
+                Json::obj()
+                    .with("n", Json::Num(n as f64))
+                    .with("threads", Json::Num(t as f64))
+                    .with("mll_eval_s", Json::Num(st.mean_s))
+                    .with("mll_evals_per_s", Json::Num(1.0 / st.mean_s.max(1e-12)))
+                    .with("mll_value", Json::Num(val))
+                    .with("train_s", Json::Num(train_s))
+                    .with("train_evals", Json::Num(report.evals as f64))
+                    .with("best_mll", Json::Num(report.best_mll.unwrap_or(f64::NAN)))
+                    .with("converged", Json::Bool(report.converged))
+                    .with("mll_speedup", Json::Num(m0 / st.mean_s.max(1e-12)))
+                    .with("train_speedup", Json::Num(t0 / train_s.max(1e-12)))
+                    .with("bit_identical", Json::Bool(true)),
+            );
+        }
+    }
+
+    let doc = Json::obj()
+        .with("bench", Json::Str("train_plane".into()))
+        .with(
+            "generated_by",
+            Json::Str("cargo bench --bench train_bench -- --json".into()),
+        )
+        .with("k", Json::Num(k as f64))
+        .with("max_evals", Json::Num(max_evals as f64))
+        .with("results", Json::Arr(results));
+    std::fs::write(&out_path, doc.dump_pretty()).expect("write bench json");
+    println!("wrote {out_path}");
+}

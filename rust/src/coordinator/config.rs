@@ -33,6 +33,10 @@ pub struct ServiceConfig {
     pub compressor: String,
     pub cluster: String,
     pub seed: u64,
+    /// Default budget for `train` requests that don't override it:
+    /// total MLL evaluations and Nelder–Mead restarts.
+    pub train_max_evals: usize,
+    pub train_starts: usize,
 }
 
 impl Default for ServiceConfig {
@@ -51,6 +55,8 @@ impl Default for ServiceConfig {
             compressor: "mmf".into(),
             cluster: "bisect".into(),
             seed: 42,
+            train_max_evals: 60,
+            train_starts: 3,
         }
     }
 }
@@ -76,6 +82,8 @@ impl ServiceConfig {
                 "compressor" => self.compressor = v.clone(),
                 "cluster" => self.cluster = v.clone(),
                 "seed" => self.seed = parse(k, v)?,
+                "train_max_evals" => self.train_max_evals = parse(k, v)?,
+                "train_starts" => self.train_starts = parse(k, v)?,
                 _ => {} // unknown keys ignored (forward compatible)
             }
         }
@@ -120,6 +128,9 @@ impl ServiceConfig {
         if self.n_workers == 0 || self.max_batch == 0 {
             return Err(Error::Config("n_workers and max_batch must be >= 1".into()));
         }
+        if self.train_max_evals == 0 || self.train_starts == 0 {
+            return Err(Error::Config("train_max_evals and train_starts must be >= 1".into()));
+        }
         Ok(())
     }
 
@@ -157,6 +168,8 @@ impl ServiceConfig {
             .with("gamma", Json::Num(self.gamma))
             .with("compressor", Json::Str(self.compressor.clone()))
             .with("cluster", Json::Str(self.cluster.clone()))
+            .with("train_max_evals", Json::Num(self.train_max_evals as f64))
+            .with("train_starts", Json::Num(self.train_starts as f64))
     }
 }
 
@@ -180,10 +193,14 @@ mod tests {
         kv.insert("port".to_string(), "9999".to_string());
         kv.insert("gamma".to_string(), "0.7".to_string());
         kv.insert("compressor".to_string(), "spca".to_string());
+        kv.insert("train_max_evals".to_string(), "25".to_string());
+        kv.insert("train_starts".to_string(), "2".to_string());
         kv.insert("unknown_key".to_string(), "ignored".to_string());
         c.apply(&kv).unwrap();
         assert_eq!(c.port, 9999);
         assert_eq!(c.gamma, 0.7);
+        assert_eq!(c.train_max_evals, 25);
+        assert_eq!(c.train_starts, 2);
         assert_eq!(c.mka_config().compressor, CompressorKind::Spca);
     }
 

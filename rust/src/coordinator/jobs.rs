@@ -28,11 +28,21 @@ impl JobState {
     }
 }
 
+/// One tracked job: owning model name, lifecycle state, and an optional
+/// result payload (e.g. the per-candidate trace of a `train` job) merged
+/// into the `job` op's response.
+#[derive(Clone, Debug)]
+struct JobEntry {
+    model: String,
+    state: JobState,
+    detail: Option<Json>,
+}
+
 /// Tracks job states by id.
 #[derive(Default)]
 pub struct JobStore {
     next_id: Mutex<u64>,
-    jobs: Mutex<BTreeMap<u64, (String, JobState)>>,
+    jobs: Mutex<BTreeMap<u64, JobEntry>>,
 }
 
 impl JobStore {
@@ -45,24 +55,37 @@ impl JobStore {
         let mut id = self.next_id.lock().unwrap();
         *id += 1;
         let jid = *id;
-        self.jobs.lock().unwrap().insert(jid, (model.to_string(), JobState::Queued));
+        self.jobs.lock().unwrap().insert(
+            jid,
+            JobEntry { model: model.to_string(), state: JobState::Queued, detail: None },
+        );
         jid
     }
 
     pub fn set_state(&self, id: u64, state: JobState) {
         if let Some(entry) = self.jobs.lock().unwrap().get_mut(&id) {
-            entry.1 = state;
+            entry.state = state;
+        }
+    }
+
+    /// Attach a result payload; its top-level fields are merged into the
+    /// `job` op's JSON (set before the terminal state so pollers never
+    /// observe `done` without the detail).
+    pub fn set_detail(&self, id: u64, detail: Json) {
+        if let Some(entry) = self.jobs.lock().unwrap().get_mut(&id) {
+            entry.detail = Some(detail);
         }
     }
 
     pub fn get(&self, id: u64) -> Option<(String, JobState)> {
-        self.jobs.lock().unwrap().get(&id).cloned()
+        self.jobs.lock().unwrap().get(&id).map(|e| (e.model.clone(), e.state.clone()))
     }
 
     pub fn to_json(&self, id: u64) -> Json {
-        match self.get(id) {
+        let entry = self.jobs.lock().unwrap().get(&id).cloned();
+        match entry {
             None => Json::obj().with("error", Json::Str(format!("no job {id}"))),
-            Some((model, state)) => {
+            Some(JobEntry { model, state, detail }) => {
                 let mut j = Json::obj()
                     .with("job_id", Json::Num(id as f64))
                     .with("model", Json::Str(model))
@@ -75,6 +98,15 @@ impl JobStore {
                         j.set("error", Json::Str(error));
                     }
                     _ => {}
+                }
+                if let Some(d) = detail {
+                    if let Some(fields) = d.as_obj().cloned() {
+                        for (k, v) in fields {
+                            j.set(&k, v);
+                        }
+                    } else {
+                        j.set("detail", d);
+                    }
                 }
                 j
             }
@@ -161,6 +193,28 @@ mod tests {
     fn unknown_job_json() {
         let store = JobStore::new();
         assert!(store.to_json(99).str_field("error").is_some());
+    }
+
+    #[test]
+    fn detail_fields_merge_into_job_json() {
+        let store = JobStore::new();
+        let id = store.create("m");
+        store.set_detail(
+            id,
+            Json::obj().with(
+                "train",
+                Json::obj().with("evals", Json::Num(7.0)).with("best_mll", Json::Num(-12.5)),
+            ),
+        );
+        store.set_state(id, JobState::Done { fit_secs: 0.2 });
+        let j = store.to_json(id);
+        assert_eq!(j.str_field("state"), Some("done"));
+        let train = j.get("train").expect("train detail merged");
+        assert_eq!(train.num_field("evals"), Some(7.0));
+        assert_eq!(train.num_field("best_mll"), Some(-12.5));
+        // jobs without detail are unaffected
+        let id2 = store.create("m2");
+        assert!(store.to_json(id2).get("train").is_none());
     }
 
     #[test]

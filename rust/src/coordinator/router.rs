@@ -6,7 +6,13 @@
 //!   {"op": "fit", "model": "m1", "method": "mka", "x": [[...]...],
 //!    "y": [...], "params": {"lengthscale": 1.0, "sigma2": 0.1, "k": 32},
 //!    "async": true}
-//!   {"op": "job", "job_id": 1}
+//!   {"op": "train", "model": "m1", "method": "mka", "x": [[...]...],
+//!    "y": [...], "selection": "mll"|"cv",
+//!    "budget": {"max_evals": 60, "n_starts": 3, "tol": 1e-5, "folds": 5},
+//!    "params": {"k": 32}}            — async by default: returns a job id,
+//!                                      learns (lengthscale, σ²), publishes
+//!                                      the fitted model on completion
+//!   {"op": "job", "job_id": 1}       — train jobs carry the eval trace
 //!   {"op": "predict", "model": "m1", "x": [[...]...]}
 //!   {"op": "models"} | {"op": "drop_model", "model": "m1"}
 //!   {"op": "metrics"} | {"op": "config"}
@@ -23,10 +29,14 @@ use crate::data::dataset::Dataset;
 use crate::error::{Error, Result};
 use crate::experiments::methods::Method;
 use crate::gp::cv::HyperParams;
-use crate::gp::GpModel;
 use crate::la::dense::Mat;
+use crate::train::{ModelSelection, OptimBudget, TrainReport};
 use crate::util::json::Json;
 use crate::util::timer::Timer;
+
+/// Shared model constructor (moved to the training plane; re-exported
+/// here for the CLI and existing callers).
+pub use crate::train::trainer::fit_model;
 
 /// Shared coordinator state + dispatch.
 pub struct Router {
@@ -63,6 +73,7 @@ impl Router {
         let out = match op {
             "ping" => Ok(Json::obj().with("pong", Json::Bool(true))),
             "fit" => self.handle_fit(req),
+            "train" => self.handle_train(req),
             "job" => self.handle_job(req),
             "predict" => self.handle_predict(req),
             "models" => Ok(Json::obj().with(
@@ -137,15 +148,25 @@ impl Router {
             let submitted = self.pool.submit(move || {
                 jobs.set_state(job_id, JobState::Running);
                 let t = Timer::start();
-                match fit_model(method, &data, hp, k, seed) {
-                    Ok(model) => {
+                // A panicking fit must not kill the worker thread (the
+                // pool would shrink forever) or strand the job in
+                // Running: contain it and fail the job instead.
+                let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                    fit_model(method, &data, hp, k, seed)
+                }));
+                match outcome {
+                    Ok(Ok(model)) => {
                         registry.publish(&name, model.into());
                         metrics.incr("fits", 1);
                         jobs.set_state(job_id, JobState::Done { fit_secs: t.elapsed_secs() });
                     }
-                    Err(e) => {
+                    Ok(Err(e)) => {
                         metrics.incr("fit_errors", 1);
                         jobs.set_state(job_id, JobState::Failed { error: format!("{e}") });
+                    }
+                    Err(p) => {
+                        metrics.incr("fit_errors", 1);
+                        jobs.set_state(job_id, JobState::Failed { error: panic_label(p) });
                     }
                 }
             });
@@ -161,6 +182,92 @@ impl Router {
             Ok(Json::obj()
                 .with("model", Json::Str(name))
                 .with("fit_secs", Json::Num(t.elapsed_secs())))
+        }
+    }
+
+    /// Hyperparameter learning as a served workload: parse the dataset,
+    /// run `train_model` (MLL maximization or grid CV) on the worker
+    /// pool, publish the optimized model under `model` on completion.
+    /// Async by default — the response carries a job id immediately and
+    /// the `job` op reports Queued → Running → Done with the eval trace.
+    fn handle_train(&self, req: &Json) -> Result<Json> {
+        let name = req
+            .str_field("model")
+            .ok_or_else(|| Error::Protocol("train: missing model".into()))?
+            .to_string();
+        let method = Method::parse(req.str_field("method").unwrap_or("mka"))
+            .ok_or_else(|| Error::Protocol("train: unknown method".into()))?;
+        let x =
+            parse_matrix(req.get("x").ok_or_else(|| Error::Protocol("train: missing x".into()))?)?;
+        let y = req
+            .get("y")
+            .and_then(|v| v.f64_array())
+            .ok_or_else(|| Error::Protocol("train: missing y".into()))?;
+        if x.rows != y.len() || x.rows == 0 {
+            return Err(Error::Protocol("train: x/y shape mismatch".into()));
+        }
+        let data = Dataset::new(name.clone(), x, y);
+        let k = req.get("params").and_then(|p| p.usize_field("k")).unwrap_or(self.config.d_core);
+        let seed = self.config.seed;
+        let budget_j = req.get("budget");
+        let budget = OptimBudget {
+            max_evals: budget_j
+                .and_then(|b| b.usize_field("max_evals"))
+                .unwrap_or(self.config.train_max_evals),
+            n_starts: budget_j
+                .and_then(|b| b.usize_field("n_starts"))
+                .unwrap_or(self.config.train_starts),
+            tol: budget_j.and_then(|b| b.num_field("tol")).unwrap_or(1e-5),
+        };
+        let folds = budget_j.and_then(|b| b.usize_field("folds")).unwrap_or(5);
+        let sel_name = req.str_field("selection").unwrap_or("mll");
+        let selection = ModelSelection::parse(sel_name, folds, budget)
+            .ok_or_else(|| Error::Protocol(format!("train: unknown selection {sel_name:?}")))?;
+        let is_async = req.get("async").and_then(|v| v.as_bool()).unwrap_or(true);
+
+        if is_async {
+            let job_id = self.jobs.create(&name);
+            let jobs = Arc::clone(&self.jobs);
+            let registry = self.registry.clone();
+            let metrics = Arc::clone(&self.metrics);
+            let submitted = self.pool.submit(move || {
+                jobs.set_state(job_id, JobState::Running);
+                // Same panic containment as the fit path: the par pool
+                // re-throws task panics on the submitter by design, and
+                // a dead worker + Running-forever job would wedge every
+                // poller of this job id.
+                let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                    crate::train::train_model(method, &data, &selection, k, seed)
+                }));
+                match outcome {
+                    Ok(Ok((model, report))) => {
+                        registry.publish(&name, model.into());
+                        record_train_metrics(&metrics, &report);
+                        let secs = report.train_secs;
+                        // Detail before the terminal state: a poller that
+                        // sees `done` must also see the trace.
+                        jobs.set_detail(job_id, Json::obj().with("train", report.to_json()));
+                        jobs.set_state(job_id, JobState::Done { fit_secs: secs });
+                    }
+                    Ok(Err(e)) => {
+                        metrics.incr("train_errors", 1);
+                        jobs.set_state(job_id, JobState::Failed { error: format!("{e}") });
+                    }
+                    Err(p) => {
+                        metrics.incr("train_errors", 1);
+                        jobs.set_state(job_id, JobState::Failed { error: panic_label(p) });
+                    }
+                }
+            });
+            if !submitted {
+                return Err(Error::Coordinator("worker pool unavailable".into()));
+            }
+            Ok(Json::obj().with("job_id", Json::Num(job_id as f64)))
+        } else {
+            let (model, report) = crate::train::train_model(method, &data, &selection, k, seed)?;
+            self.registry.publish(&name, model.into());
+            record_train_metrics(&self.metrics, &report);
+            Ok(Json::obj().with("model", Json::Str(name)).with("train", report.to_json()))
         }
     }
 
@@ -185,37 +292,26 @@ impl Router {
     }
 }
 
-/// Fit a model of the requested kind (shared with the CLI).
-pub fn fit_model(
-    method: Method,
-    data: &Dataset,
-    hp: HyperParams,
-    k: usize,
-    seed: u64,
-) -> Result<Box<dyn GpModel>> {
-    use crate::baselines::{Fitc, Meka, MekaConfig, Pitc, Sor};
-    use crate::gp::full::FullGp;
-    use crate::gp::mka_gp::MkaGp;
-    use crate::kernels::RbfKernel;
-    let kern = RbfKernel::new(hp.lengthscale);
-    let s2 = hp.sigma2;
-    Ok(match method {
-        Method::Full => Box::new(FullGp::fit(data, &kern, s2)?),
-        Method::Sor => Box::new(Sor::fit(data, &kern, s2, k, seed)?),
-        Method::Fitc => Box::new(Fitc::fit(data, &kern, s2, k, seed)?),
-        Method::Pitc => {
-            let block = (data.n() / 10).clamp(k.max(8), 200);
-            Box::new(Pitc::fit(data, &kern, s2, k, block, seed)?)
-        }
-        Method::Meka => {
-            let cfg = MekaConfig { rank: k, n_clusters: (k / 8).clamp(2, 8), sample_frac: 0.7, seed };
-            Box::new(Meka::fit(data, &kern, s2, &cfg)?)
-        }
-        Method::Mka => {
-            let cfg = crate::experiments::methods::mka_config_for(k, data.n(), seed);
-            Box::new(MkaGp::fit(data, &kern, s2, &cfg)?)
-        }
-    })
+/// Human-readable label for a contained job panic.
+fn panic_label(p: Box<dyn std::any::Any + Send>) -> String {
+    if let Some(s) = p.downcast_ref::<&str>() {
+        format!("job panicked: {s}")
+    } else if let Some(s) = p.downcast_ref::<String>() {
+        format!("job panicked: {s}")
+    } else {
+        "job panicked".to_string()
+    }
+}
+
+/// Surface `train.{evals,best_mll,secs}` observables (plus the `trains`
+/// counter) in the `metrics` op's snapshot.
+fn record_train_metrics(metrics: &Metrics, report: &TrainReport) {
+    metrics.incr("trains", 1);
+    metrics.observe("train.secs", report.train_secs);
+    metrics.observe("train.evals", report.evals as f64);
+    if let Some(m) = report.best_mll {
+        metrics.observe("train.best_mll", m);
+    }
 }
 
 /// Parse [[f64...]...] into a Mat.
@@ -356,6 +452,68 @@ mod tests {
         assert!(m.get("counters").is_some());
         let c = r.handle(&Json::parse(r#"{"op":"config"}"#).unwrap());
         assert_eq!(c.usize_field("port"), Some(7470));
+    }
+
+    fn train_req(model: &str, method: &str, n: usize, selection: &str, is_async: bool) -> Json {
+        let data = gp_dataset(&SynthSpec::named("t", n, 2), 2);
+        let x: Vec<Json> =
+            (0..n).map(|i| Json::from_f64_slice(data.x.row(i))).collect();
+        Json::obj()
+            .with("op", Json::Str("train".into()))
+            .with("model", Json::Str(model.into()))
+            .with("method", Json::Str(method.into()))
+            .with("x", Json::Arr(x))
+            .with("y", Json::from_f64_slice(&data.y))
+            .with("selection", Json::Str(selection.into()))
+            .with(
+                "budget",
+                Json::obj()
+                    .with("max_evals", Json::Num(14.0))
+                    .with("n_starts", Json::Num(2.0))
+                    .with("folds", Json::Num(2.0)),
+            )
+            .with("params", Json::obj().with("k", Json::Num(8.0)))
+            .with("async", Json::Bool(is_async))
+    }
+
+    #[test]
+    fn sync_train_selects_and_publishes() {
+        let r = router();
+        let out = r.handle(&train_req("mt", "sor", 70, "mll", false));
+        assert_eq!(out.get("ok"), Some(&Json::Bool(true)), "{out:?}");
+        let train = out.get("train").expect("train report");
+        assert!(train.num_field("best_mll").unwrap().is_finite());
+        assert!(train.num_field("evals").unwrap() >= 2.0);
+        assert!(train.get("best").unwrap().num_field("sigma2").unwrap() > 0.0);
+        assert!(r.registry.get("mt").is_some());
+        assert!(r.metrics.counter("trains") >= 1);
+    }
+
+    #[test]
+    fn sync_train_cv_path() {
+        let r = router();
+        let out = r.handle(&train_req("mtcv", "sor", 60, "cv", false));
+        assert_eq!(out.get("ok"), Some(&Json::Bool(true)), "{out:?}");
+        let train = out.get("train").unwrap();
+        assert_eq!(train.str_field("selection"), Some("cv"));
+        assert!(train.num_field("cv_smse").unwrap().is_finite());
+        assert!(r.registry.get("mtcv").is_some());
+    }
+
+    #[test]
+    fn train_validation_errors() {
+        let r = router();
+        let bad = Json::parse(r#"{"op":"train","model":"m","method":"mka","x":[[1,2]],"y":[1,2]}"#)
+            .unwrap();
+        assert_eq!(r.handle(&bad).get("ok"), Some(&Json::Bool(false)));
+        let bad_sel = Json::parse(
+            r#"{"op":"train","model":"m","method":"mka","x":[[1.0],[2.0]],"y":[1,2],"selection":"nope"}"#,
+        )
+        .unwrap();
+        assert_eq!(r.handle(&bad_sel).get("ok"), Some(&Json::Bool(false)));
+        // MEKA + MLL is a modelling error surfaced through the protocol.
+        let meka = train_req("mk", "meka", 60, "mll", false);
+        assert_eq!(r.handle(&meka).get("ok"), Some(&Json::Bool(false)));
     }
 
     #[test]

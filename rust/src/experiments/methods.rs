@@ -67,6 +67,14 @@ pub struct MethodResult {
     pub predict_s: f64,
 }
 
+/// PITC conditioning-block size for a landmark budget `k`: about n/10,
+/// at least k (floored at 8) and at most 200. The lower bound is capped
+/// at 200 too — `clamp` panics on min > max, and `k` arrives from the
+/// protocol/CLI, so k > 200 must degrade instead of aborting.
+pub fn pitc_block_size(n: usize, k: usize) -> usize {
+    (n / 10).clamp(k.max(8).min(200), 200)
+}
+
 /// MKA configuration matched to a pseudo-input budget `k`: d_core = k,
 /// block size scaled so a few stages exist (paper: c ≈ m/2 per stage).
 pub fn mka_config_for(k: usize, n: usize, seed: u64) -> MkaConfig {
@@ -97,7 +105,7 @@ pub fn run_method(
         Method::Sor => Box::new(Sor::fit(train, &kernel, s2, k, seed)?),
         Method::Fitc => Box::new(Fitc::fit(train, &kernel, s2, k, seed)?),
         Method::Pitc => {
-            let block = (train.n() / 10).clamp(k.max(8), 200);
+            let block = pitc_block_size(train.n(), k);
             Box::new(Pitc::fit(train, &kernel, s2, k, block, seed)?)
         }
         Method::Meka => {
@@ -145,7 +153,7 @@ pub fn cv_predict(
         Method::Sor => Sor::fit(train, &kernel, s2, k, seed).ok()?.predict(x_val).mean,
         Method::Fitc => Fitc::fit(train, &kernel, s2, k, seed).ok()?.predict(x_val).mean,
         Method::Pitc => {
-            let block = (train.n() / 10).clamp(k.max(8), 200);
+            let block = pitc_block_size(train.n(), k);
             Pitc::fit(train, &kernel, s2, k, block, seed).ok()?.predict(x_val).mean
         }
         Method::Meka => {
@@ -190,6 +198,16 @@ mod tests {
         }
         assert_eq!(Method::parse("dtc"), Some(Method::Sor));
         assert_eq!(Method::parse("nope"), None);
+    }
+
+    #[test]
+    fn pitc_block_size_never_panics_on_huge_k() {
+        // Regression: `clamp` with min > max aborts; k comes from the
+        // protocol, so k > 200 must degrade gracefully.
+        assert_eq!(pitc_block_size(1000, 300), 200);
+        assert_eq!(pitc_block_size(1000, 32), 100);
+        assert_eq!(pitc_block_size(50, 2), 8);
+        assert_eq!(pitc_block_size(10_000, 2), 200);
     }
 
     #[test]

@@ -3,6 +3,7 @@
 //! and noise parameter for each method").
 
 use crate::data::dataset::Dataset;
+use crate::error::{Error, Result};
 use crate::gp::metrics::smse;
 
 /// A candidate hyperparameter pair.
@@ -13,11 +14,13 @@ pub struct HyperParams {
 }
 
 /// Default search grid: length scales around the √d heuristic of
-/// standardized data, noise levels spanning three decades.
+/// standardized data, noise levels spanning from the low-noise regime
+/// the paper's small-lengthscale experiments care about (1e-3) up to
+/// half the target variance. Also seeds the MLL optimizer's multi-start.
 pub fn default_grid(dim: usize) -> Vec<HyperParams> {
     let base = (dim as f64).sqrt().max(1.0);
     let ells = [0.1 * base, 0.2 * base, 0.4 * base, 0.8 * base, 1.6 * base, 3.2 * base];
-    let sig2s = [0.01, 0.1, 0.5];
+    let sig2s = [0.001, 0.01, 0.1, 0.5];
     let mut grid = Vec::with_capacity(ells.len() * sig2s.len());
     for &l in &ells {
         for &s in &sig2s {
@@ -41,21 +44,24 @@ pub struct CvOutcome {
 /// the given hyperparameters and returns mean predictions on a validation
 /// matrix; errors (e.g. a Cholesky failure at an aggressive setting) simply
 /// disqualify that grid point. Score is validation SMSE (lower = better).
+///
+/// Errors when **every** grid point fails — the old behaviour silently
+/// returned `grid[0]` with an infinite score as if selection had
+/// succeeded, and downstream fits then ran at an arbitrary setting.
 pub fn grid_search<F>(
     data: &Dataset,
     folds: usize,
     grid: &[HyperParams],
     seed: u64,
     mut fit_predict: F,
-) -> CvOutcome
+) -> Result<CvOutcome>
 where
     F: FnMut(&Dataset, &crate::la::dense::Mat, HyperParams) -> Option<Vec<f64>>,
 {
     assert!(!grid.is_empty());
     let splits = data.kfold(folds, seed);
     let mut table = Vec::new();
-    let mut best = grid[0];
-    let mut best_score = f64::INFINITY;
+    let mut best: Option<(HyperParams, f64)> = None;
     for &hp in grid {
         let mut scores = Vec::with_capacity(splits.len());
         let mut failed = false;
@@ -75,12 +81,14 @@ where
         }
         let avg = scores.iter().sum::<f64>() / scores.len() as f64;
         table.push((hp, avg));
-        if avg < best_score {
-            best_score = avg;
-            best = hp;
+        if best.map_or(true, |(_, s)| avg < s) {
+            best = Some((hp, avg));
         }
     }
-    CvOutcome { best, best_score, table }
+    let (best, best_score) = best.ok_or_else(|| {
+        Error::Data(format!("grid_search: all {} grid points failed to fit", grid.len()))
+    })?;
+    Ok(CvOutcome { best, best_score, table })
 }
 
 #[cfg(test)]
@@ -94,8 +102,10 @@ mod tests {
     #[test]
     fn grid_has_expected_size() {
         let g = default_grid(4);
-        assert_eq!(g.len(), 18);
+        assert_eq!(g.len(), 24);
         assert!(g.iter().all(|h| h.lengthscale > 0.0 && h.sigma2 > 0.0));
+        // the noise axis reaches the low-noise regime
+        assert!(g.iter().any(|h| h.sigma2 <= 1e-3));
     }
 
     #[test]
@@ -108,7 +118,8 @@ mod tests {
         let out = grid_search(&data, 3, &grid, 7, |tr, vx, hp| {
             let gp = FullGp::fit(tr, &RbfKernel::new(hp.lengthscale), hp.sigma2).ok()?;
             Some(gp.predict(vx).mean)
-        });
+        })
+        .unwrap();
         assert_eq!(out.best.lengthscale, 1.5);
         assert!(out.best_score < 1.0);
         assert_eq!(out.table.len(), 2);
@@ -127,8 +138,22 @@ mod tests {
             }
             let gp = FullGp::fit(tr, &RbfKernel::new(hp.lengthscale), hp.sigma2).ok()?;
             Some(gp.predict(vx).mean)
-        });
+        })
+        .unwrap();
         assert_eq!(out.table.len(), 1);
         assert_eq!(out.best.lengthscale, 1.0);
+    }
+
+    /// Regression: when every grid point fails, the old code returned
+    /// `best = grid[0]` with an infinite score as if CV had succeeded.
+    #[test]
+    fn all_points_failing_is_an_error() {
+        let data = gp_dataset(&SynthSpec::named("t", 40, 2), 4);
+        let grid = vec![
+            HyperParams { lengthscale: 1.0, sigma2: 0.1 },
+            HyperParams { lengthscale: 2.0, sigma2: 0.1 },
+        ];
+        let out = grid_search(&data, 3, &grid, 5, |_, _, _| None);
+        assert!(out.is_err(), "got {out:?}");
     }
 }

@@ -31,6 +31,7 @@ pub mod cluster;
 pub mod compress;
 pub mod mka;
 pub mod gp;
+pub mod train;
 pub mod baselines;
 pub mod data;
 pub mod runtime;
@@ -51,5 +52,6 @@ pub mod prelude {
     pub use crate::kernels::{Kernel, RbfKernel};
     pub use crate::la::Mat;
     pub use crate::mka::{MkaConfig, MkaFactor};
+    pub use crate::train::{train_model, ModelSelection, OptimBudget};
     pub use crate::util::{Args, Json, Rng};
 }

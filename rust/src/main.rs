@@ -3,6 +3,7 @@
 //! Subcommands:
 //!   serve       start the coordinator (JSON-over-TCP GP service)
 //!   fit         fit a model on a CSV (last column = target) and report CV metrics
+//!   train       learn (lengthscale, σ²) by MLL maximization or grid CV, then fit
 //!   experiment  run a paper experiment: table1 | fig1 | fig2
 //!   selftest    verify the AOT artifacts against native kernels
 //!   info        print config / artifact status
@@ -29,6 +30,7 @@ fn main() {
     let code = match args.subcommand.as_deref() {
         Some("serve") => cmd_serve(&args),
         Some("fit") => cmd_fit(&args),
+        Some("train") => cmd_train(&args),
         Some("experiment") => cmd_experiment(&args),
         Some("selftest") => cmd_selftest(&args),
         Some("info") => cmd_info(&args),
@@ -53,6 +55,9 @@ fn print_usage() {
          \n\
          serve       --port 7470 --workers 2 --config cfg.json --artifacts artifacts\n\
          fit         --data file.csv --method mka|full|sor|fitc|pitc|meka --k 32\n\
+         train       --data file.csv | --synth N [--dim D] --method mka --k 32\n\
+                     --selection mll|cv --max-evals 60 --starts 3 --folds 5\n\
+                     [--assert-converged]\n\
          experiment  --name table1|fig1|fig2 [--full] [--max-n N] [--datasets a,b]\n\
          selftest    --artifacts artifacts\n\
          info        [--artifacts artifacts]"
@@ -121,6 +126,86 @@ fn cmd_fit(args: &Args) -> Result<()> {
     println!("test SMSE = {:.4}", smse(&test.y, &pred.mean));
     if pred.var.iter().all(|v| v.is_finite()) {
         println!("test MNLP = {:.4}", mnlp(&test.y, &pred.mean, &pred.var));
+    }
+    Ok(())
+}
+
+/// Hyperparameter learning from the command line: select (lengthscale,
+/// σ²) by evidence maximization (default) or grid CV, fit the final
+/// model, and report held-out metrics. `--synth N` generates a seeded
+/// synthetic dataset when no CSV is at hand (CI smoke uses this).
+fn cmd_train(args: &Args) -> Result<()> {
+    use mka_gp::train::{train_model, ModelSelection, OptimBudget};
+    let method = Method::parse(args.get_or("method", "mka"))
+        .ok_or_else(|| mka_gp::error::Error::Config("unknown --method".into()))?;
+    let k = args.get_usize("k", 32);
+    let seed = args.get_u64("seed", 42);
+    let mut data = match args.get("data") {
+        Some(path) => loader::load_csv(Path::new(path), "cli")?,
+        None => {
+            let n = args.get_usize("synth", 0);
+            if n == 0 {
+                return Err(mka_gp::error::Error::Config(
+                    "train: --data <csv> or --synth <n> required".into(),
+                ));
+            }
+            let dim = args.get_usize("dim", 2);
+            mka_gp::data::synth::gp_dataset(
+                &mka_gp::data::synth::SynthSpec::named("synthetic", n, dim),
+                seed,
+            )
+        }
+    };
+    data.normalize();
+    let (train, test) = data.split(0.9, seed);
+    let budget = OptimBudget {
+        max_evals: args.get_usize("max-evals", 60),
+        n_starts: args.get_usize("starts", 3),
+        tol: args.get_f64("tol", 1e-5),
+    };
+    let selection = ModelSelection::parse(
+        args.get_or("selection", "mll"),
+        args.get_usize("folds", 5),
+        budget,
+    )
+    .ok_or_else(|| mka_gp::error::Error::Config("unknown --selection (mll|cv)".into()))?;
+    println!(
+        "training {} on {} (n={}, d={}, k={k}, selection={})",
+        method.label(),
+        data.name,
+        train.n(),
+        data.dim(),
+        selection.label()
+    );
+    let (model, report) = train_model(method, &train, &selection, k, seed)?;
+    println!(
+        "chosen lengthscale = {:.4}, sigma2 = {:.5} ({} evals in {:.2}s, converged={})",
+        report.best.lengthscale,
+        report.best.sigma2,
+        report.evals,
+        report.train_secs,
+        report.converged
+    );
+    if let Some(mll) = report.best_mll {
+        if !mll.is_finite() {
+            return Err(mka_gp::error::Error::Config(format!(
+                "train: non-finite best log marginal likelihood {mll}"
+            )));
+        }
+        println!("best log marginal likelihood = {mll:.4}");
+    }
+    if let Some(cv) = report.cv_score {
+        println!("best CV validation SMSE = {cv:.4}");
+    }
+    let pred = model.predict(&test.x);
+    println!("test SMSE = {:.4}", smse(&test.y, &pred.mean));
+    if pred.var.iter().all(|v| v.is_finite()) {
+        println!("test MNLP = {:.4}", mnlp(&test.y, &pred.mean, &pred.var));
+    }
+    if args.has_flag("assert-converged") && !report.converged {
+        return Err(mka_gp::error::Error::Config(
+            "train: optimizer did not converge within --max-evals".into(),
+        ));
     }
     Ok(())
 }

@@ -1,0 +1,320 @@
+//! Exact-given-the-approximation GP log marginal likelihood.
+//!
+//! The evidence of a zero-mean GP with covariance C is
+//!
+//!   log p(y) = −½ yᵀC⁻¹y − ½ log det C − (n/2) log 2π,
+//!
+//! and every approximation family in this crate admits a *direct* form of
+//! both terms:
+//!
+//! * **Full** — one Cholesky of K + σ²I (Rasmussen & Williams Alg. 2.1);
+//! * **MKA** — one `factorize` then Proposition-7 `solve` + `logdet`: this
+//!   is the paper's selling point ("direct method"), here finally consumed
+//!   by hyperparameter learning instead of sitting unused;
+//! * **SoR / FITC** — Woodbury for the quadratic form and the matrix
+//!   determinant lemma for the log det of C = K_zfᵀW⁻¹K_zf + Λ with
+//!   diagonal Λ, all through the m×m [`NystromBlocks`];
+//! * **PITC** — the same with block-diagonal Λ = blockdiag(K_bb − Q_bb)
+//!   + σ²I, one small Cholesky per block.
+//!
+//! MEKA is deliberately absent: its approximant loses spsd-ness, so its
+//! "evidence" is undefined — callers must select MEKA hyperparameters by
+//! CV instead.
+
+use crate::baselines::nystrom::{select_landmarks, LandmarkMethod, NystromBlocks};
+use crate::cluster::{cluster_rows, ClusterMethod};
+use crate::data::dataset::Dataset;
+use crate::error::{Error, Result};
+use crate::experiments::methods::{mka_config_for, Method};
+use crate::gp::cv::HyperParams;
+use crate::gp::full::FullGp;
+use crate::gp::mka_gp::MkaGp;
+use crate::kernels::{Kernel, RbfKernel};
+use crate::la::blas::{dot, gemm, gemm_nt, gemv};
+use crate::la::chol::Chol;
+use crate::la::dense::Mat;
+use crate::mka::MkaConfig;
+use crate::util::Rng;
+
+/// Assemble the Gaussian evidence from its two computed terms.
+pub fn gaussian_mll(quad: f64, logdet: f64, n: usize) -> f64 {
+    -0.5 * quad - 0.5 * logdet - 0.5 * (n as f64) * (2.0 * std::f64::consts::PI).ln()
+}
+
+fn check_hp(hp: HyperParams) -> Result<()> {
+    let ok = hp.lengthscale.is_finite()
+        && hp.lengthscale > 0.0
+        && hp.sigma2.is_finite()
+        && hp.sigma2 > 0.0;
+    if !ok {
+        return Err(Error::Config(format!(
+            "invalid hyperparameters: lengthscale={}, sigma2={}",
+            hp.lengthscale, hp.sigma2
+        )));
+    }
+    Ok(())
+}
+
+/// Exact evidence via one Cholesky of K + σ²I.
+pub fn mll_full(data: &Dataset, kernel: &dyn Kernel, sigma2: f64) -> Result<f64> {
+    let gp = FullGp::fit(data, kernel, sigma2)?;
+    Ok(gp.log_marginal(&data.y))
+}
+
+/// MKA evidence: one factorization of K̃ + σ²I, then a Proposition-7
+/// solve for the quadratic form and the free `logdet`.
+pub fn mll_mka(data: &Dataset, kernel: &dyn Kernel, sigma2: f64, cfg: &MkaConfig) -> Result<f64> {
+    MkaGp::fit(data, kernel, sigma2, cfg)?.log_marginal()
+}
+
+/// Evidence of the Nyström prior C = K_zfᵀ W⁻¹ K_zf + Λ for **diagonal**
+/// Λ (SoR: Λ = σ²I; FITC: Λ = diag(K − Q) + σ²I), without ever forming
+/// the n×n C:
+///
+///   C⁻¹y     = Λ⁻¹y − Λ⁻¹K_zfᵀ B⁻¹ K_zf Λ⁻¹y,   B = W + K_zf Λ⁻¹ K_fz
+///   log det C = log det B − log det W + Σᵢ log Λᵢᵢ
+///
+/// (Woodbury + matrix determinant lemma), so the cost is one m×m Cholesky
+/// plus O(nm²).
+pub fn woodbury_mll(nb: &NystromBlocks, y: &[f64], lam: &[f64]) -> Result<f64> {
+    let n = y.len();
+    assert_eq!(nb.kzf.cols, n, "K_zf / y shape mismatch");
+    assert_eq!(lam.len(), n, "Λ / y shape mismatch");
+    if lam.iter().any(|&l| !(l > 0.0)) {
+        return Err(Error::Linalg("woodbury_mll: non-positive Λ entry".into()));
+    }
+    // B = W + K_zf Λ⁻¹ K_fz — one rank-n GEMM over the column-scaled block.
+    let mut scaled = nb.kzf.clone();
+    for r in 0..scaled.rows {
+        for (v, &l) in scaled.row_mut(r).iter_mut().zip(lam) {
+            *v /= l;
+        }
+    }
+    let mut b = nb.w.clone();
+    b.add_assign(&gemm_nt(&scaled, &nb.kzf));
+    b.symmetrize();
+    let (b_chol, _) = Chol::new_jittered(&b, 12)?;
+    // quad = yᵀΛ⁻¹y − rᵀB⁻¹r with r = K_zf Λ⁻¹ y.
+    let ly: Vec<f64> = y.iter().zip(lam).map(|(v, &l)| v / l).collect();
+    let r = gemv(&nb.kzf, &ly);
+    let quad = dot(y, &ly) - dot(&r, &b_chol.solve(&r));
+    let logdet =
+        b_chol.logdet() - nb.w_chol.logdet() + lam.iter().map(|l| l.ln()).sum::<f64>();
+    Ok(gaussian_mll(quad, logdet, n))
+}
+
+/// SoR evidence (Λ = σ²I), landmark selection identical to [`crate::baselines::Sor::fit`].
+pub fn mll_sor(
+    data: &Dataset,
+    kernel: &dyn Kernel,
+    sigma2: f64,
+    m: usize,
+    seed: u64,
+) -> Result<f64> {
+    let z = select_landmarks(&data.x, m, LandmarkMethod::Uniform, seed);
+    let nb = NystromBlocks::new(data, kernel, z)?;
+    let lam = vec![sigma2; data.n()];
+    woodbury_mll(&nb, &data.y, &lam)
+}
+
+/// FITC evidence (Λ = diag(K − Q) + σ²I, clamped like `Fitc::fit`).
+pub fn mll_fitc(
+    data: &Dataset,
+    kernel: &dyn Kernel,
+    sigma2: f64,
+    m: usize,
+    seed: u64,
+) -> Result<f64> {
+    let z = select_landmarks(&data.x, m, LandmarkMethod::Uniform, seed);
+    let nb = NystromBlocks::new(data, kernel, z)?;
+    let qd = nb.q_diag();
+    let lam: Vec<f64> = (0..data.n())
+        .map(|i| (kernel.diag(data.x.row(i)) - qd[i]).max(0.0) + sigma2)
+        .collect();
+    woodbury_mll(&nb, &data.y, &lam)
+}
+
+/// The PITC block structure: same clustering method, block size and seed
+/// mixing as [`crate::baselines::Pitc::fit`], exposed so tests can build
+/// the dense block-diagonal reference from the identical partition.
+pub fn pitc_clusters(x: &Mat, block_size: usize, seed: u64) -> Vec<Vec<usize>> {
+    let mut rng = Rng::new(seed ^ 0x5049);
+    cluster_rows(ClusterMethod::Bisect, Some(x), None, x.rows, block_size.max(1), &mut rng)
+        .clusters
+}
+
+/// PITC evidence: block-diagonal Λ with Λ_b = K_bb − Q_bb + σ²I. One
+/// |b|×|b| Cholesky per block feeds both the quadratic form and the
+/// determinant lemma; B accumulates W + Σ_b K_zb Λ_b⁻¹ K_bz.
+pub fn block_woodbury_mll(
+    nb: &NystromBlocks,
+    data: &Dataset,
+    kernel: &dyn Kernel,
+    sigma2: f64,
+    clusters: &[Vec<usize>],
+) -> Result<f64> {
+    let n = data.n();
+    let m = nb.m();
+    let all_rows: Vec<usize> = (0..m).collect();
+    let mut b = nb.w.clone();
+    let mut r = vec![0.0; m];
+    let mut quad_diag = 0.0;
+    let mut logdet_lam = 0.0;
+    for members in clusters {
+        let kbb = kernel.gram_sym(&data.x.gather_rows(members));
+        let qbb = nb.q_block(members, members);
+        let mut lam = kbb.sub(&qbb);
+        lam.symmetrize();
+        lam.add_diag(sigma2);
+        let (lchol, _) = Chol::new_jittered(&lam, 12)?;
+        logdet_lam += lchol.logdet();
+        let kzb = nb.kzf.gather(&all_rows, members); // m×|b|
+        let linv_kbz = lchol.solve_mat(&kzb.transpose()); // |b|×m
+        b.add_assign(&gemm(&kzb, &linv_kbz));
+        let yb: Vec<f64> = members.iter().map(|&i| data.y[i]).collect();
+        let linv_y = lchol.solve(&yb);
+        quad_diag += dot(&yb, &linv_y);
+        for (row, acc) in r.iter_mut().enumerate() {
+            *acc += dot(kzb.row(row), &linv_y);
+        }
+    }
+    b.symmetrize();
+    let (b_chol, _) = Chol::new_jittered(&b, 12)?;
+    let quad = quad_diag - dot(&r, &b_chol.solve(&r));
+    let logdet = b_chol.logdet() - nb.w_chol.logdet() + logdet_lam;
+    Ok(gaussian_mll(quad, logdet, n))
+}
+
+/// PITC evidence with the standard landmark/clustering choices.
+pub fn mll_pitc(
+    data: &Dataset,
+    kernel: &dyn Kernel,
+    sigma2: f64,
+    m: usize,
+    block_size: usize,
+    seed: u64,
+) -> Result<f64> {
+    let z = select_landmarks(&data.x, m, LandmarkMethod::Uniform, seed);
+    let nb = NystromBlocks::new(data, kernel, z)?;
+    let clusters = pitc_clusters(&data.x, block_size, seed);
+    block_woodbury_mll(&nb, data, kernel, sigma2, &clusters)
+}
+
+/// Method-dispatched log marginal likelihood, with the same per-method
+/// budget interpretation (`k` → landmarks / d_core, PITC block sizing) as
+/// [`crate::train::trainer::fit_model`], so the value scored during
+/// selection is the evidence of the model that will actually be fitted.
+pub fn log_marginal_likelihood(
+    method: Method,
+    data: &Dataset,
+    hp: HyperParams,
+    k: usize,
+    seed: u64,
+) -> Result<f64> {
+    check_hp(hp)?;
+    let kern = RbfKernel::new(hp.lengthscale);
+    let s2 = hp.sigma2;
+    match method {
+        Method::Full => mll_full(data, &kern, s2),
+        Method::Sor => mll_sor(data, &kern, s2, k, seed),
+        Method::Fitc => mll_fitc(data, &kern, s2, k, seed),
+        Method::Pitc => {
+            let block = crate::experiments::methods::pitc_block_size(data.n(), k);
+            mll_pitc(data, &kern, s2, k, block, seed)
+        }
+        Method::Meka => Err(Error::Config(
+            "MEKA loses spsd-ness, so its marginal likelihood is undefined; use grid CV".into(),
+        )),
+        Method::Mka => {
+            let cfg = mka_config_for(k, data.n(), seed);
+            mll_mka(data, &kern, s2, &cfg)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::{gp_dataset, SynthSpec};
+
+    fn small() -> Dataset {
+        gp_dataset(&SynthSpec::named("mll", 80, 2), 3)
+    }
+
+    #[test]
+    fn dispatcher_rejects_bad_hp_and_meka() {
+        let d = small();
+        let bad = HyperParams { lengthscale: -1.0, sigma2: 0.1 };
+        assert!(log_marginal_likelihood(Method::Full, &d, bad, 8, 1).is_err());
+        let nan = HyperParams { lengthscale: 1.0, sigma2: f64::NAN };
+        assert!(log_marginal_likelihood(Method::Sor, &d, nan, 8, 1).is_err());
+        let ok = HyperParams { lengthscale: 1.0, sigma2: 0.1 };
+        assert!(log_marginal_likelihood(Method::Meka, &d, ok, 8, 1).is_err());
+    }
+
+    #[test]
+    fn every_tractable_method_returns_finite_negative_mll() {
+        let d = small();
+        let hp = HyperParams { lengthscale: 1.2, sigma2: 0.1 };
+        for m in [Method::Full, Method::Sor, Method::Fitc, Method::Pitc, Method::Mka] {
+            let v = log_marginal_likelihood(m, &d, hp, 10, 5).unwrap();
+            assert!(v.is_finite(), "{m:?}: {v}");
+            // normalized targets ⇒ evidence is negative
+            assert!(v < 0.0, "{m:?}: {v}");
+        }
+    }
+
+    #[test]
+    fn ordering_prefers_sane_lengthscale() {
+        // The whole point of MLL selection: an absurd lengthscale scores
+        // worse than a reasonable one, for every tractable method.
+        let d = small();
+        let sane = HyperParams { lengthscale: 1.2, sigma2: 0.1 };
+        let absurd = HyperParams { lengthscale: 1e-3, sigma2: 0.1 };
+        for m in [Method::Full, Method::Sor, Method::Fitc, Method::Pitc, Method::Mka] {
+            let good = log_marginal_likelihood(m, &d, sane, 10, 5).unwrap();
+            let bad = log_marginal_likelihood(m, &d, absurd, 10, 5).unwrap();
+            assert!(bad < good, "{m:?}: bad {bad} !< good {good}");
+        }
+    }
+
+    #[test]
+    fn woodbury_rejects_non_positive_lambda() {
+        let d = small();
+        let z = select_landmarks(&d.x, 8, LandmarkMethod::Uniform, 1);
+        let nb = NystromBlocks::new(&d, &RbfKernel::new(1.0), z).unwrap();
+        let mut lam = vec![0.1; d.n()];
+        lam[3] = 0.0;
+        assert!(woodbury_mll(&nb, &d.y, &lam).is_err());
+    }
+
+    #[test]
+    fn sor_is_fitc_with_flat_lambda() {
+        // With Λ forced to σ²I, the FITC machinery must reproduce mll_sor.
+        let d = small();
+        let kern = RbfKernel::new(1.0);
+        let z = select_landmarks(&d.x, 10, LandmarkMethod::Uniform, 7);
+        let nb = NystromBlocks::new(&d, &kern, z).unwrap();
+        let via_woodbury = woodbury_mll(&nb, &d.y, &vec![0.1; d.n()]).unwrap();
+        let via_sor = mll_sor(&d, &kern, 0.1, 10, 7).unwrap();
+        assert!((via_woodbury - via_sor).abs() < 1e-9);
+    }
+
+    #[test]
+    fn pitc_single_block_matches_full_when_landmarks_are_all_points() {
+        // One block ⇒ the training conditional is exact; Z = X makes the
+        // prior exact too, so the PITC evidence is the exact evidence.
+        let d = gp_dataset(&SynthSpec::named("pitc1", 50, 2), 4);
+        let kern = RbfKernel::new(1.0);
+        let nb = NystromBlocks::new(&d, &kern, d.x.clone()).unwrap();
+        let clusters = vec![(0..d.n()).collect::<Vec<usize>>()];
+        let pitc = block_woodbury_mll(&nb, &d, &kern, 0.1, &clusters).unwrap();
+        let full = mll_full(&d, &kern, 0.1).unwrap();
+        // W carries a hair of jitter (K(X,X) is near-singular at n=50),
+        // so the identity holds to jitter precision, not machine precision.
+        assert!(
+            (pitc - full).abs() < 1e-3 * full.abs().max(1.0),
+            "pitc {pitc} vs full {full}"
+        );
+    }
+}

@@ -1,0 +1,26 @@
+//! Marginal-likelihood training plane.
+//!
+//! Turns MKA's free `logdet` (Proposition 7) into hyperparameter
+//! *learning*: after one factorization, `K̃′⁻¹y` and `log det K̃′` are
+//! both cheap, which is exactly the pair of quantities the GP log
+//! marginal likelihood needs — so evidence-based selection costs one
+//! factorize + solve + logdet per candidate instead of O(folds × grid)
+//! CV refits.
+//!
+//! * [`mll`] — per-method evidence evaluators (Full/Cholesky, MKA/
+//!   Proposition 7, Nyström family/Woodbury + determinant lemma);
+//! * [`optimizer`] — bounded multi-start Nelder–Mead over log-space
+//!   `(lengthscale, σ²)`, concurrent on the shared `par` pool,
+//!   bit-deterministic at any thread count;
+//! * [`trainer`] — the [`trainer::ModelSelection`] strategy enum
+//!   (`GridCv` | `Mll`) behind one [`trainer::train_model`] API, used by
+//!   the `train` CLI subcommand and the coordinator's async
+//!   `{"op":"train"}` job.
+
+pub mod mll;
+pub mod optimizer;
+pub mod trainer;
+
+pub use mll::log_marginal_likelihood;
+pub use optimizer::{maximize_mll, EvalRecord, OptimBudget, OptimOutcome, SearchBox};
+pub use trainer::{fit_model, select_hyperparams, train_model, ModelSelection, TrainReport};

@@ -1,0 +1,357 @@
+//! Derivative-free maximization of the log marginal likelihood over
+//! log-space (lengthscale, σ²).
+//!
+//! Std-only Nelder–Mead with a bounded box and multi-start: start points
+//! come from the [`default_grid`] heuristic (spread evenly through the
+//! grid), each start runs an independent simplex under a shared eval
+//! budget, and the starts execute **concurrently on the shared `par`
+//! pool** with the crate's bit-determinism contract preserved — each
+//! start owns a fixed output slot (one pool task per start, no work
+//! stealing across slots) and the final reduction walks the slots in
+//! start order with strict-improvement comparisons, so the outcome is
+//! identical at any thread count.
+//!
+//! Working in log space makes the box constraints multiplicative and the
+//! evidence surface far better conditioned (lengthscale and σ² are scale
+//! parameters); failed evaluations (e.g. a Cholesky failure at an
+//! aggressive setting) score −∞ and the simplex walks back into the
+//! feasible region.
+
+use crate::error::{Error, Result};
+use crate::gp::cv::{default_grid, HyperParams};
+use crate::par::{run_tasks, SendPtr};
+
+/// Evaluation budget for one optimizer call.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct OptimBudget {
+    /// Total objective evaluations across all starts (soft cap: each
+    /// start gets an equal share, min 5, and may finish its current
+    /// simplex step).
+    pub max_evals: usize,
+    /// Independent Nelder–Mead restarts.
+    pub n_starts: usize,
+    /// Relative convergence tolerance on the simplex value spread.
+    pub tol: f64,
+}
+
+impl Default for OptimBudget {
+    fn default() -> Self {
+        OptimBudget { max_evals: 60, n_starts: 3, tol: 1e-5 }
+    }
+}
+
+/// One successful objective evaluation (failures are counted but not
+/// recorded — they carry no finite value to report).
+#[derive(Clone, Copy, Debug)]
+pub struct EvalRecord {
+    pub hp: HyperParams,
+    /// Objective value: MLL for the evidence path, validation SMSE for
+    /// the CV path (see the owning report's `selection` label).
+    pub value: f64,
+}
+
+/// Result of a multi-start maximization.
+#[derive(Clone, Debug)]
+pub struct OptimOutcome {
+    pub best: HyperParams,
+    pub best_mll: f64,
+    /// Objective evaluations actually spent (including failed ones).
+    pub evals: usize,
+    /// Whether the start that produced `best` met the tolerance before
+    /// exhausting its share of the budget.
+    pub converged: bool,
+    /// Every successful evaluation, in fixed start order.
+    pub trace: Vec<EvalRecord>,
+}
+
+/// Box constraints in natural scale (applied in log space).
+#[derive(Clone, Copy, Debug)]
+pub struct SearchBox {
+    pub lengthscale: (f64, f64),
+    pub sigma2: (f64, f64),
+}
+
+impl SearchBox {
+    /// Default box around the √d lengthscale heuristic; the noise floor
+    /// matches the extended `default_grid` low-noise regime.
+    pub fn for_dim(dim: usize) -> SearchBox {
+        let base = (dim as f64).sqrt().max(1.0);
+        SearchBox { lengthscale: (0.02 * base, 20.0 * base), sigma2: (1e-4, 2.0) }
+    }
+
+    fn lo(&self) -> [f64; 2] {
+        [self.lengthscale.0.ln(), self.sigma2.0.ln()]
+    }
+
+    fn hi(&self) -> [f64; 2] {
+        [self.lengthscale.1.ln(), self.sigma2.1.ln()]
+    }
+}
+
+/// Maximize `objective` over the box. `objective` returns `None` when a
+/// candidate fails to evaluate (treated as −∞). Errors only when *every*
+/// evaluation across every start failed.
+pub fn maximize_mll<F>(
+    objective: F,
+    dim: usize,
+    budget: &OptimBudget,
+    sbox: &SearchBox,
+) -> Result<OptimOutcome>
+where
+    F: Fn(HyperParams) -> Option<f64> + Send + Sync,
+{
+    let n_starts = budget.n_starts.max(1);
+    let per_start = (budget.max_evals / n_starts).max(5);
+    let starts = seed_points(dim, n_starts, sbox);
+    let (lo, hi) = (sbox.lo(), sbox.hi());
+
+    let mut slots: Vec<Option<StartResult>> = vec![None; n_starts];
+    let ptr = SendPtr::new(slots.as_mut_ptr());
+    let obj = &objective;
+    // One pool task per start: fixed slot sharding, no cross-start state.
+    run_tasks(n_starts, n_starts, |i| {
+        let res = nelder_mead(obj, starts[i], lo, hi, per_start, budget.tol);
+        // SAFETY: task i writes only slot i; run_tasks blocks until done.
+        unsafe { *ptr.ptr().add(i) = Some(res) };
+    });
+
+    // Serial-identical reduction: walk slots in start order, strict
+    // improvement only — independent of execution interleaving.
+    let mut trace = Vec::new();
+    let mut best: Option<(HyperParams, f64, bool)> = None;
+    let mut evals = 0;
+    for slot in slots.into_iter().flatten() {
+        evals += slot.evals;
+        if let Some((hp, v)) = slot.best {
+            if best.map_or(true, |(_, bv, _)| v > bv) {
+                best = Some((hp, v, slot.converged));
+            }
+        }
+        trace.extend(slot.trace);
+    }
+    let (best, best_mll, converged) = best.ok_or_else(|| {
+        Error::Config("mll optimizer: every candidate evaluation failed".into())
+    })?;
+    Ok(OptimOutcome { best, best_mll, evals, converged, trace })
+}
+
+/// Multi-start seeds from the `default_grid` heuristic, spread evenly
+/// through the grid and clamped into the box (log space).
+fn seed_points(dim: usize, n_starts: usize, sbox: &SearchBox) -> Vec<[f64; 2]> {
+    let grid = default_grid(dim);
+    let (lo, hi) = (sbox.lo(), sbox.hi());
+    (0..n_starts)
+        .map(|i| {
+            // Evenly spaced through the ell-major grid ordering, so
+            // different starts land on different lengthscale decades.
+            let g = grid[(i * grid.len()) / n_starts.max(1)];
+            clamp([g.lengthscale.ln(), g.sigma2.ln()], lo, hi)
+        })
+        .collect()
+}
+
+fn clamp(x: [f64; 2], lo: [f64; 2], hi: [f64; 2]) -> [f64; 2] {
+    [x[0].clamp(lo[0], hi[0]), x[1].clamp(lo[1], hi[1])]
+}
+
+#[derive(Clone, Debug)]
+struct StartResult {
+    best: Option<(HyperParams, f64)>,
+    evals: usize,
+    converged: bool,
+    trace: Vec<EvalRecord>,
+}
+
+/// Tracks evaluations, the running best and the success trace for one
+/// start. Cost is the *negated* objective (Nelder–Mead minimizes).
+struct EvalCtx<'a, F> {
+    obj: &'a F,
+    evals: usize,
+    trace: Vec<EvalRecord>,
+    best: Option<(HyperParams, f64)>,
+}
+
+impl<F: Fn(HyperParams) -> Option<f64>> EvalCtx<'_, F> {
+    fn cost(&mut self, x: [f64; 2]) -> f64 {
+        let hp = HyperParams { lengthscale: x[0].exp(), sigma2: x[1].exp() };
+        self.evals += 1;
+        match (self.obj)(hp) {
+            Some(v) if v.is_finite() => {
+                self.trace.push(EvalRecord { hp, value: v });
+                if self.best.map_or(true, |(_, bv)| v > bv) {
+                    self.best = Some((hp, v));
+                }
+                -v
+            }
+            _ => f64::INFINITY,
+        }
+    }
+}
+
+/// Bounded 2-D Nelder–Mead (α=1, γ=2, ρ=½, σ=½): every candidate is
+/// clamped into the box before evaluation.
+fn nelder_mead<F>(
+    obj: &F,
+    x0: [f64; 2],
+    lo: [f64; 2],
+    hi: [f64; 2],
+    max_evals: usize,
+    tol: f64,
+) -> StartResult
+where
+    F: Fn(HyperParams) -> Option<f64>,
+{
+    let mut ctx = EvalCtx { obj, evals: 0, trace: Vec::new(), best: None };
+    // Initial simplex: steps of 0.45 in log space (≈ ×1.57), flipped
+    // when the start sits against the upper bound.
+    let mut simplex: Vec<([f64; 2], f64)> = Vec::with_capacity(3);
+    let p0 = clamp(x0, lo, hi);
+    simplex.push((p0, ctx.cost(p0)));
+    for d in 0..2 {
+        let step = if p0[d] + 0.45 <= hi[d] { 0.45 } else { -0.45 };
+        let mut p = p0;
+        p[d] += step;
+        let p = clamp(p, lo, hi);
+        simplex.push((p, ctx.cost(p)));
+    }
+
+    let mut converged = false;
+    while ctx.evals < max_evals {
+        simplex.sort_by(|a, b| a.1.partial_cmp(&b.1).unwrap_or(std::cmp::Ordering::Equal));
+        let (fb, fw) = (simplex[0].1, simplex[2].1);
+        if fb.is_infinite() {
+            break; // the whole simplex is infeasible — nothing to walk back to
+        }
+        if fw.is_finite() && (fw - fb).abs() <= tol * (1.0 + fb.abs()) {
+            converged = true;
+            break;
+        }
+        // Centroid of the two best vertices.
+        let c = [
+            0.5 * (simplex[0].0[0] + simplex[1].0[0]),
+            0.5 * (simplex[0].0[1] + simplex[1].0[1]),
+        ];
+        let xw = simplex[2].0;
+        let refl = clamp([2.0 * c[0] - xw[0], 2.0 * c[1] - xw[1]], lo, hi);
+        let fr = ctx.cost(refl);
+        if fr < simplex[0].1 {
+            // Expand.
+            let exp = clamp([3.0 * c[0] - 2.0 * xw[0], 3.0 * c[1] - 2.0 * xw[1]], lo, hi);
+            let fe = ctx.cost(exp);
+            simplex[2] = if fe < fr { (exp, fe) } else { (refl, fr) };
+        } else if fr < simplex[1].1 {
+            simplex[2] = (refl, fr);
+        } else {
+            // Contract (outside if the reflection improved on the worst).
+            let toward = if fr < simplex[2].1 { refl } else { xw };
+            let con = clamp([0.5 * (c[0] + toward[0]), 0.5 * (c[1] + toward[1])], lo, hi);
+            let fc = ctx.cost(con);
+            if fc < simplex[2].1.min(fr) {
+                simplex[2] = (con, fc);
+            } else {
+                // Shrink toward the best vertex.
+                let xb = simplex[0].0;
+                for v in simplex.iter_mut().skip(1) {
+                    let p = clamp([0.5 * (xb[0] + v.0[0]), 0.5 * (xb[1] + v.0[1])], lo, hi);
+                    *v = (p, ctx.cost(p));
+                }
+            }
+        }
+    }
+
+    StartResult { best: ctx.best, evals: ctx.evals, converged, trace: ctx.trace }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Smooth test objective with a known maximum at (ℓ*, σ²*).
+    fn bowl(ell_star: f64, s2_star: f64) -> impl Fn(HyperParams) -> Option<f64> + Send + Sync {
+        move |hp: HyperParams| {
+            let a = hp.lengthscale.ln() - ell_star.ln();
+            let b = hp.sigma2.ln() - s2_star.ln();
+            Some(-(a * a) - 0.5 * (b * b))
+        }
+    }
+
+    #[test]
+    fn recovers_quadratic_maximum() {
+        let budget = OptimBudget { max_evals: 180, n_starts: 3, tol: 1e-5 };
+        let sbox = SearchBox::for_dim(2);
+        let out = maximize_mll(bowl(1.5, 0.05), 2, &budget, &sbox).unwrap();
+        assert!(out.converged, "evals={}", out.evals);
+        assert!((out.best.lengthscale.ln() - 1.5f64.ln()).abs() < 0.05, "{:?}", out.best);
+        assert!((out.best.sigma2.ln() - 0.05f64.ln()).abs() < 0.1, "{:?}", out.best);
+        assert!(out.best_mll > -1e-3);
+        assert!(!out.trace.is_empty());
+        assert!(out.evals <= budget.max_evals + 15); // per-start step overshoot only
+    }
+
+    #[test]
+    fn respects_box_bounds() {
+        // Maximum far outside the box ⇒ the optimum lands on the boundary.
+        let sbox = SearchBox { lengthscale: (0.5, 2.0), sigma2: (0.01, 0.1) };
+        let budget = OptimBudget { max_evals: 90, n_starts: 2, tol: 1e-10 };
+        let out = maximize_mll(bowl(100.0, 1.0), 2, &budget, &sbox).unwrap();
+        assert!(out.best.lengthscale <= 2.0 + 1e-9);
+        assert!(out.best.sigma2 <= 0.1 + 1e-9);
+        for e in &out.trace {
+            assert!(e.hp.lengthscale >= 0.5 - 1e-9 && e.hp.lengthscale <= 2.0 + 1e-9);
+            assert!(e.hp.sigma2 >= 0.01 - 1e-9 && e.hp.sigma2 <= 0.1 + 1e-9);
+        }
+    }
+
+    #[test]
+    fn all_failures_error_and_partial_failures_recover() {
+        let budget = OptimBudget { max_evals: 30, n_starts: 2, tol: 1e-6 };
+        let sbox = SearchBox::for_dim(2);
+        let out = maximize_mll(|_| None, 2, &budget, &sbox);
+        assert!(out.is_err());
+        // Feasible only above ℓ = 1: the simplex must still find the bowl.
+        let partial = |hp: HyperParams| {
+            if hp.lengthscale < 1.0 {
+                None
+            } else {
+                Some(-(hp.lengthscale.ln() - 2.0f64.ln()).powi(2))
+            }
+        };
+        let wide = OptimBudget { max_evals: 90, n_starts: 3, tol: 1e-8 };
+        let out = maximize_mll(partial, 2, &wide, &sbox).unwrap();
+        assert!(out.best.lengthscale >= 1.0);
+    }
+
+    #[test]
+    fn deterministic_across_thread_counts() {
+        // Fixed slot sharding + in-order reduction ⇒ the outcome cannot
+        // depend on pool parallelism.
+        let budget = OptimBudget { max_evals: 60, n_starts: 4, tol: 1e-8 };
+        let sbox = SearchBox::for_dim(3);
+        let run = || maximize_mll(bowl(2.0, 0.02), 3, &budget, &sbox).unwrap();
+        let a = run();
+        crate::par::set_threads(4);
+        let b = run();
+        crate::par::set_threads(1);
+        let c = run();
+        for other in [&b, &c] {
+            assert_eq!(a.best.lengthscale.to_bits(), other.best.lengthscale.to_bits());
+            assert_eq!(a.best.sigma2.to_bits(), other.best.sigma2.to_bits());
+            assert_eq!(a.best_mll.to_bits(), other.best_mll.to_bits());
+            assert_eq!(a.evals, other.evals);
+            assert_eq!(a.trace.len(), other.trace.len());
+        }
+    }
+
+    #[test]
+    fn seed_points_land_in_box_and_differ() {
+        let sbox = SearchBox::for_dim(4);
+        let (lo, hi) = (sbox.lo(), sbox.hi());
+        let pts = seed_points(4, 3, &sbox);
+        assert_eq!(pts.len(), 3);
+        for p in &pts {
+            assert!(p[0] >= lo[0] && p[0] <= hi[0]);
+            assert!(p[1] >= lo[1] && p[1] <= hi[1]);
+        }
+        assert!(pts[0] != pts[1] || pts[1] != pts[2]);
+    }
+}

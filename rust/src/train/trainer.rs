@@ -1,0 +1,288 @@
+//! Model *learning*: hyperparameter selection strategies unified behind
+//! one train API.
+//!
+//! [`ModelSelection`] names the two strategies the repo supports:
+//!
+//! * `GridCv` — the paper's §5 protocol (k-fold CV over a grid), the old
+//!   `gp::cv` path. O(folds × grid) refits; works for every method
+//!   including MEKA.
+//! * `Mll` — evidence maximization through [`crate::train::mll`]: one
+//!   `factorize` + `solve` + `logdet` per candidate for MKA (the direct
+//!   method's free lunch), closed Woodbury forms for the Nyström family,
+//!   driven by the multi-start Nelder–Mead in
+//!   [`crate::train::optimizer`].
+//!
+//! [`train_model`] = select hyperparameters + one final [`fit_model`];
+//! it backs both the `train` CLI subcommand and the coordinator's async
+//! `{"op":"train"}` job.
+
+use crate::data::dataset::Dataset;
+use crate::error::{Error, Result};
+use crate::experiments::methods::{cv_predict, Method};
+use crate::gp::cv::{default_grid, grid_search, HyperParams};
+use crate::gp::GpModel;
+use crate::train::mll::log_marginal_likelihood;
+use crate::train::optimizer::{maximize_mll, EvalRecord, OptimBudget, SearchBox};
+use crate::util::json::Json;
+use crate::util::timer::Timer;
+
+/// How to choose `(lengthscale, σ²)` before the final fit.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum ModelSelection {
+    /// k-fold cross-validation over the default grid (validation SMSE).
+    GridCv { folds: usize },
+    /// Log-marginal-likelihood maximization (direct evidence).
+    Mll { budget: OptimBudget },
+}
+
+impl ModelSelection {
+    /// Parse a protocol/CLI name; `folds`/`budget` fill in the knobs.
+    pub fn parse(name: &str, folds: usize, budget: OptimBudget) -> Option<ModelSelection> {
+        match name.to_ascii_lowercase().as_str() {
+            "cv" | "gridcv" | "grid_cv" => Some(ModelSelection::GridCv { folds }),
+            "mll" | "ml" | "evidence" => Some(ModelSelection::Mll { budget }),
+            _ => None,
+        }
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            ModelSelection::GridCv { .. } => "cv",
+            ModelSelection::Mll { .. } => "mll",
+        }
+    }
+}
+
+/// What a training run found, protocol-serializable for the `job` op.
+#[derive(Clone, Debug)]
+pub struct TrainReport {
+    pub method: Method,
+    pub selection: &'static str,
+    pub best: HyperParams,
+    /// Evidence at the chosen point (`Mll` path only).
+    pub best_mll: Option<f64>,
+    /// Mean validation SMSE at the chosen point (`GridCv` path only).
+    pub cv_score: Option<f64>,
+    /// Candidate evaluations spent (including failed ones).
+    pub evals: usize,
+    pub converged: bool,
+    /// Per-candidate trace (successful evaluations only).
+    pub trace: Vec<EvalRecord>,
+    pub train_secs: f64,
+}
+
+impl TrainReport {
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj()
+            .with("method", Json::Str(self.method.label().into()))
+            .with("selection", Json::Str(self.selection.into()))
+            .with("evals", Json::Num(self.evals as f64))
+            .with("converged", Json::Bool(self.converged))
+            .with("secs", Json::Num(self.train_secs))
+            .with(
+                "best",
+                Json::obj()
+                    .with("lengthscale", Json::Num(self.best.lengthscale))
+                    .with("sigma2", Json::Num(self.best.sigma2)),
+            );
+        if let Some(m) = self.best_mll {
+            j.set("best_mll", Json::Num(m));
+        }
+        if let Some(s) = self.cv_score {
+            j.set("cv_smse", Json::Num(s));
+        }
+        let trace: Vec<Json> = self
+            .trace
+            .iter()
+            .map(|e| {
+                Json::obj()
+                    .with("lengthscale", Json::Num(e.hp.lengthscale))
+                    .with("sigma2", Json::Num(e.hp.sigma2))
+                    .with("value", Json::Num(e.value))
+            })
+            .collect();
+        j.with("trace", Json::Arr(trace))
+    }
+}
+
+/// Run the selection strategy and report the chosen hyperparameters
+/// (no final fit).
+pub fn select_hyperparams(
+    method: Method,
+    data: &Dataset,
+    selection: &ModelSelection,
+    k: usize,
+    seed: u64,
+) -> Result<TrainReport> {
+    let t = Timer::start();
+    match selection {
+        ModelSelection::GridCv { folds } => {
+            let grid = default_grid(data.dim());
+            let out = grid_search(data, *folds, &grid, seed, |tr, vx, hp| {
+                cv_predict(method, tr, vx, hp, k, seed)
+            })?;
+            let trace = out.table.iter().map(|&(hp, v)| EvalRecord { hp, value: v }).collect();
+            Ok(TrainReport {
+                method,
+                selection: "cv",
+                best: out.best,
+                best_mll: None,
+                cv_score: Some(out.best_score),
+                evals: grid.len(),
+                converged: true,
+                trace,
+                train_secs: t.elapsed_secs(),
+            })
+        }
+        ModelSelection::Mll { budget } => {
+            if method == Method::Meka {
+                return Err(Error::Config(
+                    "MEKA has no marginal likelihood (spsd-ness lost); use selection=\"cv\"".into(),
+                ));
+            }
+            let sbox = SearchBox::for_dim(data.dim());
+            let out = maximize_mll(
+                |hp| log_marginal_likelihood(method, data, hp, k, seed).ok(),
+                data.dim(),
+                budget,
+                &sbox,
+            )?;
+            Ok(TrainReport {
+                method,
+                selection: "mll",
+                best: out.best,
+                best_mll: Some(out.best_mll),
+                cv_score: None,
+                evals: out.evals,
+                converged: out.converged,
+                trace: out.trace,
+                train_secs: t.elapsed_secs(),
+            })
+        }
+    }
+}
+
+/// Select hyperparameters, then fit the final model at the chosen point.
+pub fn train_model(
+    method: Method,
+    data: &Dataset,
+    selection: &ModelSelection,
+    k: usize,
+    seed: u64,
+) -> Result<(Box<dyn GpModel>, TrainReport)> {
+    let t = Timer::start();
+    let mut report = select_hyperparams(method, data, selection, k, seed)?;
+    let model = fit_model(method, data, report.best, k, seed)?;
+    report.train_secs = t.elapsed_secs();
+    Ok((model, report))
+}
+
+/// Fit a model of the requested kind at explicit hyperparameters (shared
+/// by the CLI, the coordinator's `fit` op and the final step of
+/// [`train_model`]).
+pub fn fit_model(
+    method: Method,
+    data: &Dataset,
+    hp: HyperParams,
+    k: usize,
+    seed: u64,
+) -> Result<Box<dyn GpModel>> {
+    use crate::baselines::{Fitc, Meka, MekaConfig, Pitc, Sor};
+    use crate::gp::full::FullGp;
+    use crate::gp::mka_gp::MkaGp;
+    use crate::kernels::RbfKernel;
+    let kern = RbfKernel::new(hp.lengthscale);
+    let s2 = hp.sigma2;
+    Ok(match method {
+        Method::Full => Box::new(FullGp::fit(data, &kern, s2)?),
+        Method::Sor => Box::new(Sor::fit(data, &kern, s2, k, seed)?),
+        Method::Fitc => Box::new(Fitc::fit(data, &kern, s2, k, seed)?),
+        Method::Pitc => {
+            let block = crate::experiments::methods::pitc_block_size(data.n(), k);
+            Box::new(Pitc::fit(data, &kern, s2, k, block, seed)?)
+        }
+        Method::Meka => {
+            let cfg = MekaConfig { rank: k, n_clusters: (k / 8).clamp(2, 8), sample_frac: 0.7, seed };
+            Box::new(Meka::fit(data, &kern, s2, &cfg)?)
+        }
+        Method::Mka => {
+            let cfg = crate::experiments::methods::mka_config_for(k, data.n(), seed);
+            Box::new(MkaGp::fit(data, &kern, s2, &cfg)?)
+        }
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::{gp_dataset, SynthSpec};
+    use crate::gp::metrics::smse;
+
+    fn tiny_budget() -> OptimBudget {
+        OptimBudget { max_evals: 18, n_starts: 2, tol: 1e-4 }
+    }
+
+    #[test]
+    fn parse_roundtrip() {
+        let b = OptimBudget::default();
+        assert_eq!(
+            ModelSelection::parse("cv", 3, b),
+            Some(ModelSelection::GridCv { folds: 3 })
+        );
+        assert_eq!(
+            ModelSelection::parse("MLL", 3, b),
+            Some(ModelSelection::Mll { budget: b })
+        );
+        assert_eq!(ModelSelection::parse("nope", 3, b), None);
+        assert_eq!(ModelSelection::GridCv { folds: 5 }.label(), "cv");
+        assert_eq!(ModelSelection::Mll { budget: b }.label(), "mll");
+    }
+
+    #[test]
+    fn meka_mll_is_rejected() {
+        let d = gp_dataset(&SynthSpec::named("t", 60, 2), 1);
+        let sel = ModelSelection::Mll { budget: tiny_budget() };
+        let err = select_hyperparams(Method::Meka, &d, &sel, 8, 1);
+        assert!(err.is_err());
+    }
+
+    #[test]
+    fn mll_training_produces_serving_model() {
+        let d = gp_dataset(&SynthSpec::named("t", 110, 2), 2);
+        let (tr, te) = d.split(0.85, 2);
+        let sel = ModelSelection::Mll { budget: tiny_budget() };
+        let (model, report) = train_model(Method::Full, &tr, &sel, 8, 3).unwrap();
+        assert_eq!(report.selection, "mll");
+        assert!(report.best_mll.unwrap().is_finite());
+        assert!(report.evals >= 2 && !report.trace.is_empty());
+        assert!(report.train_secs >= 0.0);
+        let pred = model.predict(&te.x);
+        assert!(smse(&te.y, &pred.mean) < 1.0);
+    }
+
+    #[test]
+    fn cv_training_flows_through_same_api() {
+        let d = gp_dataset(&SynthSpec::named("t", 90, 2), 3);
+        let sel = ModelSelection::GridCv { folds: 2 };
+        let (model, report) = train_model(Method::Sor, &d, &sel, 8, 4).unwrap();
+        assert_eq!(report.selection, "cv");
+        assert!(report.cv_score.unwrap().is_finite());
+        assert!(report.best_mll.is_none());
+        assert!(!report.trace.is_empty());
+        assert_eq!(model.predict(&d.x).mean.len(), d.n());
+    }
+
+    #[test]
+    fn report_serializes_trace() {
+        let d = gp_dataset(&SynthSpec::named("t", 80, 2), 5);
+        let sel = ModelSelection::Mll { budget: tiny_budget() };
+        let report = select_hyperparams(Method::Sor, &d, &sel, 8, 5).unwrap();
+        let j = report.to_json();
+        assert_eq!(j.str_field("selection"), Some("mll"));
+        assert!(j.num_field("best_mll").unwrap().is_finite());
+        assert!(j.get("trace").unwrap().as_arr().unwrap().len() >= 1);
+        let best = j.get("best").unwrap();
+        assert!(best.num_field("lengthscale").unwrap() > 0.0);
+        assert!(best.num_field("sigma2").unwrap() > 0.0);
+    }
+}

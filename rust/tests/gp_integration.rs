@@ -69,7 +69,8 @@ fn cv_then_fit_pipeline() {
     let out = grid_search(&tr, 3, &grid, 5, |t, vx, hp| {
         let gp = FullGp::fit(t, &RbfKernel::new(hp.lengthscale), hp.sigma2).ok()?;
         Some(gp.predict(vx).mean)
-    });
+    })
+    .expect("CV grid fully failed");
     assert!(out.best_score < 1.0, "CV best {}", out.best_score);
     let model = FullGp::fit(&tr, &RbfKernel::new(out.best.lengthscale), out.best.sigma2).unwrap();
     let pred = model.predict(&te.x);

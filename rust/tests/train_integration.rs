@@ -1,0 +1,275 @@
+//! Integration tests for the marginal-likelihood training plane:
+//!
+//! * the MKA-path MLL matches the dense Cholesky evidence (exactly when
+//!   the core holds everything, closely under compression);
+//! * the Nyström/Woodbury and PITC/block-Woodbury forms match their
+//!   dense n×n equivalents to solver precision;
+//! * the optimizer recovers planted (lengthscale, σ²) from GP draws;
+//! * the coordinator serves `train` asynchronously: job id immediately,
+//!   Queued→Running→Done with an eval trace, and the published model
+//!   answers `predict`.
+
+use mka_gp::baselines::nystrom::{select_landmarks, LandmarkMethod, NystromBlocks};
+use mka_gp::coordinator::{JobState, Router, ServiceConfig};
+use mka_gp::data::dataset::Dataset;
+use mka_gp::data::synth::{gp_dataset, gp_prior_draw, latent_features, SynthSpec};
+use mka_gp::experiments::methods::Method;
+use mka_gp::gp::cv::HyperParams;
+use mka_gp::kernels::{Kernel, RbfKernel};
+use mka_gp::la::blas::{dot, gemm_tn};
+use mka_gp::la::chol::Chol;
+use mka_gp::la::dense::Mat;
+use mka_gp::mka::MkaConfig;
+use mka_gp::train::mll;
+use mka_gp::train::{log_marginal_likelihood, maximize_mll, OptimBudget, SearchBox};
+use mka_gp::util::{Json, Rng};
+
+/// Dense reference evidence: −½yᵀC⁻¹y − ½ log det C − (n/2) log 2π.
+fn dense_mll(c: &Mat, y: &[f64]) -> f64 {
+    let chol = Chol::new(c).expect("dense covariance must be PD");
+    let alpha = chol.solve(y);
+    mll::gaussian_mll(dot(y, &alpha), chol.logdet(), y.len())
+}
+
+#[test]
+fn mka_mll_matches_dense_cholesky() {
+    let data = gp_dataset(&SynthSpec::named("mkamll", 90, 2), 3);
+    let kern = RbfKernel::new(1.0);
+    let s2 = 0.1;
+    // Dense reference on K + σ²I.
+    let mut k = kern.gram_sym(&data.x);
+    k.add_diag(s2);
+    let exact = dense_mll(&k, &data.y);
+
+    // Core holds everything ⇒ the factorization is exact ⇒ the MLL is too.
+    let lossless = MkaConfig { d_core: 128, block_size: 48, ..MkaConfig::default() };
+    let v = mll::mll_mka(&data, &kern, s2, &lossless).unwrap();
+    assert!(
+        (v - exact).abs() < 1e-6 * exact.abs().max(1.0),
+        "lossless MKA MLL {v} vs dense {exact}"
+    );
+
+    // Moderate compression tracks the dense value closely.
+    let compressed =
+        MkaConfig { d_core: 60, block_size: 45, gamma: 0.7, ..MkaConfig::default() };
+    let va = mll::mll_mka(&data, &kern, s2, &compressed).unwrap();
+    assert!(
+        (va - exact).abs() < 0.10 * exact.abs(),
+        "compressed MKA MLL {va} vs dense {exact}"
+    );
+}
+
+#[test]
+fn sor_and_fitc_woodbury_match_dense() {
+    let data = gp_dataset(&SynthSpec::named("wood", 60, 2), 5);
+    let n = data.n();
+    let kern = RbfKernel::new(1.1);
+    let s2 = 0.08;
+    let z = select_landmarks(&data.x, 12, LandmarkMethod::Uniform, 9);
+    let nb = NystromBlocks::new(&data, &kern, z).unwrap();
+
+    // Dense Q = K_zfᵀ W⁻¹ K_zf through the same (jittered) W factor.
+    let winv_kzf = nb.w_chol.solve_mat(&nb.kzf); // m×n
+    let q = gemm_tn(&nb.kzf, &winv_kzf); // n×n
+
+    // SoR: Λ = σ²I.
+    let mut c_sor = q.clone();
+    c_sor.symmetrize();
+    c_sor.add_diag(s2);
+    let dense_sor = dense_mll(&c_sor, &data.y);
+    let fast_sor = mll::woodbury_mll(&nb, &data.y, &vec![s2; n]).unwrap();
+    assert!(
+        (fast_sor - dense_sor).abs() < 1e-6 * dense_sor.abs().max(1.0),
+        "SoR Woodbury {fast_sor} vs dense {dense_sor}"
+    );
+
+    // FITC: Λ = diag(K − Q) + σ²I (same clamping as the model).
+    let qd = nb.q_diag();
+    let lam: Vec<f64> = (0..n)
+        .map(|i| (kern.diag(data.x.row(i)) - qd[i]).max(0.0) + s2)
+        .collect();
+    let mut c_fitc = q.clone();
+    c_fitc.symmetrize();
+    for i in 0..n {
+        c_fitc.set(i, i, c_fitc.at(i, i) + lam[i]);
+    }
+    let dense_fitc = dense_mll(&c_fitc, &data.y);
+    let fast_fitc = mll::woodbury_mll(&nb, &data.y, &lam).unwrap();
+    assert!(
+        (fast_fitc - dense_fitc).abs() < 1e-6 * dense_fitc.abs().max(1.0),
+        "FITC Woodbury {fast_fitc} vs dense {dense_fitc}"
+    );
+}
+
+#[test]
+fn pitc_block_woodbury_matches_dense() {
+    let data = gp_dataset(&SynthSpec::named("pitcw", 60, 2), 7);
+    let n = data.n();
+    let kern = RbfKernel::new(1.0);
+    let s2 = 0.1;
+    let z = select_landmarks(&data.x, 10, LandmarkMethod::Uniform, 11);
+    let nb = NystromBlocks::new(&data, &kern, z).unwrap();
+    let clusters = mll::pitc_clusters(&data.x, 15, 11);
+
+    // Dense C = Q + blockdiag(K_bb − Q_bb) + σ²I from the same partition.
+    let winv_kzf = nb.w_chol.solve_mat(&nb.kzf);
+    let mut c = gemm_tn(&nb.kzf, &winv_kzf);
+    c.symmetrize();
+    for members in &clusters {
+        let kbb = kern.gram_sym(&data.x.gather_rows(members));
+        let qbb = nb.q_block(members, members);
+        for (bi, &i) in members.iter().enumerate() {
+            for (bj, &j) in members.iter().enumerate() {
+                let corr = 0.5 * (kbb.at(bi, bj) + kbb.at(bj, bi))
+                    - 0.5 * (qbb.at(bi, bj) + qbb.at(bj, bi));
+                c.set(i, j, c.at(i, j) + corr);
+            }
+        }
+    }
+    c.symmetrize();
+    c.add_diag(s2);
+    let dense = dense_mll(&c, &data.y);
+    let fast = mll::block_woodbury_mll(&nb, &data, &kern, s2, &clusters).unwrap();
+    assert!(
+        (fast - dense).abs() < 1e-5 * dense.abs().max(1.0),
+        "PITC block-Woodbury {fast} vs dense {dense}"
+    );
+}
+
+#[test]
+fn optimizer_recovers_planted_hyperparams() {
+    // Plant a GP draw with known (ℓ, σ²) — no normalization, so the
+    // planted noise level survives — and maximize the exact evidence.
+    let mut rng = Rng::new(17);
+    let x = latent_features(150, 2, 3, &mut rng);
+    let ell_true = 1.2;
+    let sigma_true = 0.3; // σ² = 0.09
+    let f = gp_prior_draw(&x, ell_true, &mut rng);
+    let y: Vec<f64> = f.iter().map(|&v| v + sigma_true * rng.normal()).collect();
+    let data = Dataset::new("planted", x, y);
+
+    // 60 evals per start: the mixture-cluster evidence surface needs a
+    // real budget — 30/start reliably stalls on worse-than-planted optima.
+    let budget = OptimBudget { max_evals: 180, n_starts: 3, tol: 1e-6 };
+    let sbox = SearchBox::for_dim(2);
+    let out = maximize_mll(
+        |hp| log_marginal_likelihood(Method::Full, &data, hp, 16, 1).ok(),
+        2,
+        &budget,
+        &sbox,
+    )
+    .unwrap();
+
+    let s2_true = sigma_true * sigma_true;
+    assert!(
+        out.best.lengthscale > ell_true / 2.0 && out.best.lengthscale < ell_true * 2.0,
+        "recovered lengthscale {} vs planted {ell_true}",
+        out.best.lengthscale
+    );
+    assert!(
+        out.best.sigma2 > s2_true / 3.0 && out.best.sigma2 < s2_true * 3.0,
+        "recovered sigma2 {} vs planted {s2_true}",
+        out.best.sigma2
+    );
+    // The optimum must be at least as good as the planted point itself.
+    let planted = log_marginal_likelihood(
+        Method::Full,
+        &data,
+        HyperParams { lengthscale: ell_true, sigma2: s2_true },
+        16,
+        1,
+    )
+    .unwrap();
+    assert!(
+        out.best_mll >= planted - 1e-6,
+        "best {} < planted {planted}",
+        out.best_mll
+    );
+}
+
+#[test]
+fn coordinator_train_job_lifecycle() {
+    let cfg = ServiceConfig { batch_window_ms: 0, n_workers: 2, ..Default::default() };
+    let r = Router::new(cfg);
+    let data = gp_dataset(&SynthSpec::named("coord", 120, 2), 2);
+    let n = data.n();
+    let x: Vec<Json> = (0..n).map(|i| Json::from_f64_slice(data.x.row(i))).collect();
+    let req = Json::obj()
+        .with("op", Json::Str("train".into()))
+        .with("model", Json::Str("m-train".into()))
+        .with("method", Json::Str("mka".into()))
+        .with("x", Json::Arr(x))
+        .with("y", Json::from_f64_slice(&data.y))
+        .with("selection", Json::Str("mll".into()))
+        .with(
+            "budget",
+            Json::obj().with("max_evals", Json::Num(16.0)).with("n_starts", Json::Num(2.0)),
+        )
+        .with("params", Json::obj().with("k", Json::Num(12.0)));
+
+    // Async by default: a job id comes back immediately, before Done.
+    let resp = r.handle(&req);
+    assert_eq!(resp.get("ok"), Some(&Json::Bool(true)), "{resp:?}");
+    let job_id = resp.usize_field("job_id").expect("job_id") as u64;
+    let first = r.jobs.get(job_id).unwrap().1;
+    assert!(
+        matches!(first, JobState::Queued | JobState::Running),
+        "job already terminal at submit time: {first:?}"
+    );
+
+    // Poll through the job op until done.
+    let mut done_json = None;
+    for _ in 0..600 {
+        let poll = r.handle(
+            &Json::obj()
+                .with("op", Json::Str("job".into()))
+                .with("job_id", Json::Num(job_id as f64)),
+        );
+        match poll.str_field("state") {
+            Some("done") => {
+                done_json = Some(poll);
+                break;
+            }
+            Some("failed") => panic!("train job failed: {poll:?}"),
+            _ => std::thread::sleep(std::time::Duration::from_millis(25)),
+        }
+    }
+    let done = done_json.expect("train job never finished");
+
+    // The job report carries the optimization result and trace.
+    let train = done.get("train").expect("train detail");
+    assert!(train.num_field("best_mll").unwrap().is_finite());
+    assert!(train.num_field("evals").unwrap() >= 2.0);
+    assert!(train.num_field("secs").unwrap() >= 0.0);
+    let best = train.get("best").unwrap();
+    assert!(best.num_field("lengthscale").unwrap() > 0.0);
+    assert!(best.num_field("sigma2").unwrap() > 0.0);
+    let trace = train.get("trace").unwrap().as_arr().unwrap();
+    assert!(!trace.is_empty());
+    for e in trace {
+        assert!(e.num_field("value").unwrap().is_finite());
+    }
+
+    // The optimized model serves predictions.
+    let pred_req = Json::obj()
+        .with("op", Json::Str("predict".into()))
+        .with("model", Json::Str("m-train".into()))
+        .with(
+            "x",
+            Json::Arr(vec![
+                Json::from_f64_slice(&[0.1, -0.3]),
+                Json::from_f64_slice(&[0.5, 0.2]),
+            ]),
+        );
+    let pred = r.handle(&pred_req);
+    assert_eq!(pred.get("ok"), Some(&Json::Bool(true)), "{pred:?}");
+    assert_eq!(pred.get("mean").unwrap().f64_array().unwrap().len(), 2);
+
+    // Metrics surface the training plane.
+    let m = r.handle(&Json::parse(r#"{"op":"metrics"}"#).unwrap());
+    assert!(m.get("counters").unwrap().num_field("trains").unwrap_or(0.0) >= 1.0);
+    let hists = m.get("histograms").unwrap();
+    assert!(hists.get("train.secs").is_some());
+    assert!(hists.get("train.evals").is_some());
+    assert!(hists.get("train.best_mll").is_some());
+}
