@@ -5,7 +5,10 @@
 //! * **MLL evals/sec** — one evidence evaluation = one `factorize` +
 //!   `solve` + `logdet` for MKA (Proposition 7's "direct method" pitch);
 //! * **train-op wall time** — a full multi-start Nelder–Mead run through
-//!   `train_model`, i.e. what one `{"op":"train"}` job costs.
+//!   `train_model`, i.e. what one `{"op":"train"}` job costs;
+//! * **NM vs L-BFGS** — evals-to-convergence of the derivative-free and
+//!   the analytic-gradient optimizer on the same evidence surface (the
+//!   gradient win the trajectory tracks).
 //!
 //!     cargo bench --bench train_bench [-- --sizes 512,1024 --k 32]
 //!
@@ -69,6 +72,31 @@ fn main() {
         report.best_mll.unwrap_or(f64::NAN),
         report.converged
     );
+
+    println!("\n=== NM vs L-BFGS: evals to convergence (same evidence surface) ===\n");
+    let mut table = Table::new(&["n", "method", "optimizer", "evals", "best mll", "conv", "time"]);
+    for m in [Method::Mka, Method::Full] {
+        for (sel, name) in [
+            (ModelSelection::Mll { budget: OptimBudget::default() }, "nelder-mead"),
+            (
+                ModelSelection::MllGrad { budget: OptimBudget::default(), ard: false },
+                "l-bfgs",
+            ),
+        ] {
+            let timer = Timer::start();
+            let (_model, rep) = train_model(m, &data, &sel, k, 7).expect("train");
+            table.row(&[
+                n.to_string(),
+                m.label().to_string(),
+                name.to_string(),
+                rep.evals.to_string(),
+                format!("{:.2}", rep.best_mll.unwrap_or(f64::NAN)),
+                rep.converged.to_string(),
+                fmt_secs(timer.elapsed_secs()),
+            ]);
+        }
+    }
+    table.print();
 }
 
 /// `--json` mode: machine-readable training-plane perf trajectory.
@@ -101,22 +129,31 @@ fn run_json_bench(args: &Args) {
                     "MLL at {t} threads must be bit-identical to serial (n={n})"
                 ),
             }
-            let sel = ModelSelection::Mll {
-                budget: OptimBudget { max_evals, n_starts: 2, tol: 1e-4 },
-            };
+            let budget = OptimBudget { max_evals, n_starts: 2, tol: 1e-4 };
+            let sel = ModelSelection::Mll { budget };
             let timer = Timer::start();
             let (_model, report) = train_model(Method::Mka, &data, &sel, k, 7).expect("train");
             let train_s = timer.elapsed_secs();
 
+            // Same surface, analytic gradients: the evals-to-convergence
+            // comparison the trajectory tracks (NM vs L-BFGS).
+            let sel_g = ModelSelection::MllGrad { budget, ard: false };
+            let timer_g = Timer::start();
+            let (_model_g, report_g) =
+                train_model(Method::Mka, &data, &sel_g, k, 7).expect("train lbfgs");
+            let lbfgs_s = timer_g.elapsed_secs();
+
             let (m0, t0) = *base.get_or_insert((st.mean_s, train_s));
             println!(
-                "n={n} t={t}: mll eval {} ({:.2}x, {:.1}/s) train {} ({:.2}x, {} evals)",
+                "n={n} t={t}: mll eval {} ({:.2}x, {:.1}/s) train {} ({:.2}x, {} evals) lbfgs {} ({} evals)",
                 fmt_secs(st.mean_s),
                 m0 / st.mean_s.max(1e-12),
                 1.0 / st.mean_s.max(1e-12),
                 fmt_secs(train_s),
                 t0 / train_s.max(1e-12),
-                report.evals
+                report.evals,
+                fmt_secs(lbfgs_s),
+                report_g.evals
             );
             results.push(
                 Json::obj()
@@ -129,6 +166,10 @@ fn run_json_bench(args: &Args) {
                     .with("train_evals", Json::Num(report.evals as f64))
                     .with("best_mll", Json::Num(report.best_mll.unwrap_or(f64::NAN)))
                     .with("converged", Json::Bool(report.converged))
+                    .with("lbfgs_train_s", Json::Num(lbfgs_s))
+                    .with("lbfgs_evals", Json::Num(report_g.evals as f64))
+                    .with("lbfgs_best_mll", Json::Num(report_g.best_mll.unwrap_or(f64::NAN)))
+                    .with("lbfgs_converged", Json::Bool(report_g.converged))
                     .with("mll_speedup", Json::Num(m0 / st.mean_s.max(1e-12)))
                     .with("train_speedup", Json::Num(t0 / train_s.max(1e-12)))
                     .with("bit_identical", Json::Bool(true)),

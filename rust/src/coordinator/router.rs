@@ -7,11 +7,15 @@
 //!    "y": [...], "params": {"lengthscale": 1.0, "sigma2": 0.1, "k": 32},
 //!    "async": true}
 //!   {"op": "train", "model": "m1", "method": "mka", "x": [[...]...],
-//!    "y": [...], "selection": "mll"|"cv",
+//!    "y": [...], "selection": "mll"|"mll-grad"|"cv", "ard": false,
 //!    "budget": {"max_evals": 60, "n_starts": 3, "tol": 1e-5, "folds": 5},
 //!    "params": {"k": 32}}            — async by default: returns a job id,
-//!                                      learns (lengthscale, σ²), publishes
-//!                                      the fitted model on completion
+//!                                      learns (lengthscale, σ²) — or one
+//!                                      length scale per dimension with
+//!                                      "selection": "mll-grad", "ard": true
+//!                                      (L-BFGS on analytic gradients) —
+//!                                      and publishes the fitted model on
+//!                                      completion
 //!   {"op": "job", "job_id": 1}       — train jobs carry the eval trace
 //!   {"op": "predict", "model": "m1", "x": [[...]...]}
 //!   {"op": "models"} | {"op": "drop_model", "model": "m1"}
@@ -37,6 +41,15 @@ use crate::util::timer::Timer;
 /// Shared model constructor (moved to the training plane; re-exported
 /// here for the CLI and existing callers).
 pub use crate::train::trainer::fit_model;
+
+/// Every op [`Router::handle`] dispatches, in protocol-reference order.
+/// Kept adjacent to the dispatch match — extend BOTH when adding an op.
+/// The docs round-trip test (`rust/tests/protocol_docs.rs`) requires
+/// every entry here to be documented in `docs/PROTOCOL.md`, and the
+/// unknown-op error below advertises this list, so a new match arm
+/// without an `OPS` entry is visible immediately.
+pub const OPS: &[&str] =
+    &["ping", "fit", "train", "job", "predict", "models", "drop_model", "metrics", "config"];
 
 /// Shared coordinator state + dispatch.
 pub struct Router {
@@ -99,7 +112,7 @@ impl Router {
                 Ok(snap)
             }
             "config" => Ok(self.config.to_json()),
-            other => Err(Error::Protocol(format!("unknown op {other:?}"))),
+            other => Err(Error::Protocol(format!("unknown op {other:?} (supported: {OPS:?})"))),
         };
         match out {
             Ok(mut j) => {
@@ -221,8 +234,19 @@ impl Router {
         };
         let folds = budget_j.and_then(|b| b.usize_field("folds")).unwrap_or(5);
         let sel_name = req.str_field("selection").unwrap_or("mll");
-        let selection = ModelSelection::parse(sel_name, folds, budget)
-            .ok_or_else(|| Error::Protocol(format!("train: unknown selection {sel_name:?}")))?;
+        let ard = req.get("ard").and_then(|v| v.as_bool()).unwrap_or(false);
+        let selection = ModelSelection::parse(sel_name, folds, budget, ard).ok_or_else(|| {
+            // Distinguish the two parse failures: a name that is simply
+            // unknown vs a known non-gradient name combined with ard.
+            if ard && ModelSelection::parse(sel_name, folds, budget, false).is_some() {
+                Error::Protocol(
+                    "train: \"ard\": true requires the gradient path (\"selection\": \"mll-grad\")"
+                        .into(),
+                )
+            } else {
+                Error::Protocol(format!("train: unknown selection {sel_name:?}"))
+            }
+        })?;
         let is_async = req.get("async").and_then(|v| v.as_bool()).unwrap_or(true);
 
         if is_async {
@@ -498,6 +522,26 @@ mod tests {
         assert_eq!(train.str_field("selection"), Some("cv"));
         assert!(train.num_field("cv_smse").unwrap().is_finite());
         assert!(r.registry.get("mtcv").is_some());
+    }
+
+    #[test]
+    fn sync_train_ard_lbfgs_path() {
+        let r = router();
+        let mut req = train_req("mard", "sor", 70, "mll-grad", false);
+        req.set("ard", Json::Bool(true));
+        let out = r.handle(&req);
+        assert_eq!(out.get("ok"), Some(&Json::Bool(true)), "{out:?}");
+        let train = out.get("train").unwrap();
+        assert_eq!(train.str_field("selection"), Some("mll-grad"));
+        // per-dimension length scales surface in the report (d = 2)
+        let ells = train.get("lengthscales").expect("lengthscales").f64_array().unwrap();
+        assert_eq!(ells.len(), 2);
+        assert!(train.num_field("best_mll").unwrap().is_finite());
+        assert!(r.registry.get("mard").is_some());
+        // ard without the gradient path is a protocol error, not silence
+        let mut bad = train_req("mbad", "sor", 60, "mll", false);
+        bad.set("ard", Json::Bool(true));
+        assert_eq!(r.handle(&bad).get("ok"), Some(&Json::Bool(false)));
     }
 
     #[test]

@@ -13,6 +13,48 @@ pub struct HyperParams {
     pub sigma2: f64,
 }
 
+/// Hyperparameters with per-dimension (ARD) length scales. The tied
+/// special case (all length scales equal) reproduces [`HyperParams`]
+/// exactly; the gradient-based optimizer (`train::optimizer`) walks the
+/// full `(log ℓ_1..log ℓ_d, log σ²)` vector.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ArdHyperParams {
+    pub lengthscales: Vec<f64>,
+    pub sigma2: f64,
+}
+
+impl ArdHyperParams {
+    /// Broadcast an isotropic pair to `dim` tied length scales.
+    pub fn isotropic(hp: HyperParams, dim: usize) -> ArdHyperParams {
+        ArdHyperParams { lengthscales: vec![hp.lengthscale; dim.max(1)], sigma2: hp.sigma2 }
+    }
+
+    pub fn dim(&self) -> usize {
+        self.lengthscales.len()
+    }
+
+    /// The matching ARD kernel.
+    pub fn kernel(&self) -> crate::kernels::ArdRbfKernel {
+        crate::kernels::ArdRbfKernel::new(self.lengthscales.clone())
+    }
+
+    /// Isotropic summary: the geometric mean of the length scales (exact
+    /// when tied), for reports and trace records that carry a single ℓ.
+    pub fn tied(&self) -> HyperParams {
+        let d = self.lengthscales.len().max(1) as f64;
+        let gm = (self.lengthscales.iter().map(|l| l.ln()).sum::<f64>() / d).exp();
+        HyperParams { lengthscale: gm, sigma2: self.sigma2 }
+    }
+
+    /// All parameters finite and positive?
+    pub fn is_valid(&self) -> bool {
+        !self.lengthscales.is_empty()
+            && self.lengthscales.iter().all(|l| l.is_finite() && *l > 0.0)
+            && self.sigma2.is_finite()
+            && self.sigma2 > 0.0
+    }
+}
+
 /// Default search grid: length scales around the √d heuristic of
 /// standardized data, noise levels spanning from the low-noise regime
 /// the paper's small-lengthscale experiments care about (1e-3) up to
@@ -106,6 +148,22 @@ mod tests {
         assert!(g.iter().all(|h| h.lengthscale > 0.0 && h.sigma2 > 0.0));
         // the noise axis reaches the low-noise regime
         assert!(g.iter().any(|h| h.sigma2 <= 1e-3));
+    }
+
+    #[test]
+    fn ard_hyperparams_roundtrip() {
+        let hp = HyperParams { lengthscale: 1.5, sigma2: 0.1 };
+        let ard = ArdHyperParams::isotropic(hp, 3);
+        assert_eq!(ard.dim(), 3);
+        assert!(ard.is_valid());
+        // tied summary of a tied vector is exact
+        assert!((ard.tied().lengthscale - 1.5).abs() < 1e-12);
+        assert_eq!(ard.tied().sigma2, 0.1);
+        // geometric mean for a genuinely anisotropic vector
+        let aniso = ArdHyperParams { lengthscales: vec![0.5, 2.0], sigma2: 0.1 };
+        assert!((aniso.tied().lengthscale - 1.0).abs() < 1e-12);
+        let bad = ArdHyperParams { lengthscales: vec![1.0, -1.0], sigma2: 0.1 };
+        assert!(!bad.is_valid());
     }
 
     #[test]

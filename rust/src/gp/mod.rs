@@ -5,7 +5,10 @@
 //!   train/test kernel + Schur complement;
 //! * [`ridge::MkaRidge`] — kernel ridge regression through an MKA solve
 //!   (the frequentist cousin, mean only);
-//! * [`cv`] — k-fold cross-validation for hyperparameters (§5 protocol);
+//! * [`cv`] — k-fold cross-validation for hyperparameters (§5 protocol),
+//!   plus the hyperparameter types themselves: [`cv::HyperParams`]
+//!   (isotropic ℓ, σ²) and [`cv::ArdHyperParams`] (per-dimension ℓ_d —
+//!   the ARD parametrization the gradient trainer optimizes);
 //! * [`metrics`] — SMSE / MNLP.
 //!
 //! The five sparse baselines live in [`crate::baselines`] and implement the

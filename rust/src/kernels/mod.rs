@@ -189,6 +189,106 @@ impl Kernel for RbfKernel {
     }
 }
 
+/// ARD (automatic relevance determination) Gaussian kernel:
+///
+///   k(x, x') = σ_f² exp(−½ Σ_d (x_d − x'_d)² / ℓ_d²)
+///
+/// with one length scale per input dimension. With all ℓ_d equal it is
+/// exactly [`RbfKernel`]; the per-dimension parametrization is what
+/// gradient-based evidence maximization unlocks (`train::grad` supplies
+/// ∂(log marginal likelihood)/∂log ℓ_d for every evidence evaluator, and
+/// `train::optimizer`'s L-BFGS walks all d+1 log-parameters at once).
+#[derive(Clone, Debug)]
+pub struct ArdRbfKernel {
+    /// One length scale per input dimension.
+    pub lengthscales: Vec<f64>,
+    pub signal_var: f64,
+}
+
+impl ArdRbfKernel {
+    /// Per-dimension length scales (all must be positive and finite).
+    pub fn new(lengthscales: Vec<f64>) -> ArdRbfKernel {
+        assert!(
+            !lengthscales.is_empty() && lengthscales.iter().all(|l| l.is_finite() && *l > 0.0),
+            "ARD lengthscales must be positive and finite: {lengthscales:?}"
+        );
+        ArdRbfKernel { lengthscales, signal_var: 1.0 }
+    }
+
+    /// The isotropic kernel ℓ_d = ℓ for all `dim` dimensions (identical to
+    /// [`RbfKernel::new`] values, useful for tied-lengthscale gradients).
+    pub fn isotropic(lengthscale: f64, dim: usize) -> ArdRbfKernel {
+        ArdRbfKernel::new(vec![lengthscale; dim.max(1)])
+    }
+
+    /// Number of input dimensions this kernel is parametrized for.
+    pub fn dim(&self) -> usize {
+        self.lengthscales.len()
+    }
+
+    /// ∂K/∂log ℓ_d as a dense matrix, reusing the already-assembled gram
+    /// `k` = K(X, Y) of **this** kernel (noiseless — no σ² on the
+    /// diagonal):
+    ///
+    ///   ∂k(x, y)/∂log ℓ_d = k(x, y) · (x_d − y_d)² / ℓ_d².
+    ///
+    /// One elementwise pass over K; entry (i, j) of the result depends
+    /// only on entry (i, j) of `k`, so the determinism of the gram
+    /// carries over.
+    pub fn grad_gram_dim(&self, k: &Mat, x: &Mat, y: &Mat, d: usize) -> Mat {
+        assert_eq!(k.rows, x.rows, "gram/x shape mismatch");
+        assert_eq!(k.cols, y.rows, "gram/y shape mismatch");
+        assert!(d < self.lengthscales.len(), "ARD dimension out of range");
+        let inv_l2 = 1.0 / (self.lengthscales[d] * self.lengthscales[d]);
+        Mat::from_fn(k.rows, k.cols, |i, j| {
+            let diff = x.at(i, d) - y.at(j, d);
+            k.at(i, j) * diff * diff * inv_l2
+        })
+    }
+
+    /// ∂K/∂log ℓ for a single **tied** length scale driving every
+    /// dimension (the chain-rule sum of [`ArdRbfKernel::grad_gram_dim`]
+    /// over d): ∂k/∂log ℓ = k(x, y) · Σ_d (x_d − y_d)²/ℓ_d².
+    pub fn grad_gram_tied(&self, k: &Mat, x: &Mat, y: &Mat) -> Mat {
+        assert_eq!(k.rows, x.rows, "gram/x shape mismatch");
+        assert_eq!(k.cols, y.rows, "gram/y shape mismatch");
+        Mat::from_fn(k.rows, k.cols, |i, j| {
+            let (xr, yr) = (x.row(i), y.row(j));
+            let mut s = 0.0;
+            for (d, &l) in self.lengthscales.iter().enumerate() {
+                let diff = xr[d] - yr[d];
+                s += diff * diff / (l * l);
+            }
+            k.at(i, j) * s
+        })
+    }
+}
+
+impl Kernel for ArdRbfKernel {
+    #[inline]
+    fn eval(&self, x: &[f64], y: &[f64]) -> f64 {
+        debug_assert_eq!(x.len(), self.lengthscales.len(), "ARD dim mismatch");
+        let mut s = 0.0;
+        for ((a, b), l) in x.iter().zip(y).zip(&self.lengthscales) {
+            let d = (a - b) / l;
+            s += d * d;
+        }
+        self.signal_var * (-0.5 * s).exp()
+    }
+
+    fn diag(&self, _x: &[f64]) -> f64 {
+        self.signal_var
+    }
+
+    fn name(&self) -> String {
+        format!("ard-rbf(l={:?}, sf2={})", self.lengthscales, self.signal_var)
+    }
+
+    fn boxed_clone(&self) -> Box<dyn Kernel> {
+        Box::new(self.clone())
+    }
+}
+
 /// Laplace (exponential) kernel: exp(−‖x−x'‖ / ℓ). Heavier spectral tail
 /// than RBF — a stress test for low-rank methods.
 #[derive(Clone, Debug)]
@@ -433,6 +533,57 @@ mod tests {
         for i in 0..6 {
             assert_eq!(c[i], k.eval(&q, x.row(i)));
         }
+    }
+
+    #[test]
+    fn ard_matches_isotropic_rbf_when_tied() {
+        let x = randx(12, 3, 7);
+        let iso = RbfKernel::new(1.3);
+        let ard = ArdRbfKernel::isotropic(1.3, 3);
+        let a = iso.gram_sym(&x);
+        let b = ard.gram_sym(&x);
+        assert!(a.sub(&b).max_abs() < 1e-15);
+        assert_eq!(ard.dim(), 3);
+    }
+
+    #[test]
+    fn ard_anisotropy_stretches_one_axis() {
+        // A huge ℓ_1 makes dimension 1 irrelevant: k must ignore it.
+        let k = ArdRbfKernel::new(vec![1.0, 1e6]);
+        let a = [0.0, 0.0];
+        let b = [0.0, 5.0];
+        let c = [5.0, 0.0];
+        assert!((k.eval(&a, &b) - 1.0).abs() < 1e-9, "irrelevant dim moved k");
+        assert!(k.eval(&a, &c) < 1e-5, "relevant dim ignored");
+    }
+
+    #[test]
+    fn ard_grad_gram_matches_finite_differences() {
+        let x = randx(9, 2, 11);
+        let y = randx(7, 2, 12);
+        let ells = vec![0.8, 1.7];
+        let kern = ArdRbfKernel::new(ells.clone());
+        let k = kern.gram(&x, &y);
+        let h = 1e-5;
+        for d in 0..2 {
+            let g = kern.grad_gram_dim(&k, &x, &y, d);
+            let mut up = ells.clone();
+            let mut dn = ells.clone();
+            up[d] *= h.exp();
+            dn[d] *= (-h).exp();
+            let kp = ArdRbfKernel::new(up).gram(&x, &y);
+            let km = ArdRbfKernel::new(dn).gram(&x, &y);
+            for i in 0..9 {
+                for j in 0..7 {
+                    let fd = (kp.at(i, j) - km.at(i, j)) / (2.0 * h);
+                    assert!((g.at(i, j) - fd).abs() < 1e-8, "d={d} ({i},{j})");
+                }
+            }
+        }
+        // Tied gradient is the sum of the per-dimension gradients.
+        let tied = kern.grad_gram_tied(&k, &x, &y);
+        let sum = kern.grad_gram_dim(&k, &x, &y, 0).add(&kern.grad_gram_dim(&k, &x, &y, 1));
+        assert!(tied.sub(&sum).max_abs() < 1e-12);
     }
 
     #[test]

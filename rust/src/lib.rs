@@ -14,7 +14,30 @@
 //!   `python/compile/kernels/`).
 //!
 //! Python never runs at inference time: the rust binary loads the AOT
-//! artifacts through PJRT (`runtime`) or falls back to native kernels.
+//! artifacts through PJRT ([`runtime`]) or falls back to native kernels.
+//!
+//! ## Orientation
+//!
+//! The layer order is `la → par → kernels → cluster/compress → mka →
+//! gp/baselines → train → coordinator` — `docs/ARCHITECTURE.md` maps it
+//! in full (including where each paper equation lives) and
+//! `docs/PROTOCOL.md` is the executable coordinator op reference.
+//!
+//! Paper-notation anchors: the telescoping factor K̃ of eq. 6 is
+//! [`mka::MkaFactor`] (stages: [`mka::Stage`], core size:
+//! `MkaConfig::d_core`); the Proposition 7 operator algebra (solve,
+//! powers, exp, `logdet`, explicit spectrum) hangs off the factor in
+//! `mka::ops`; the §4.1 joint train/test predictor is
+//! [`gp::mka_gp::MkaGp`]; the evidence `log p(y)` and its per-method
+//! evaluators live in [`train::mll`], their analytic gradients in
+//! [`train::grad`], and the Nelder–Mead / L-BFGS maximizers in
+//! [`train::optimizer`]. The (per-dimension, ARD-capable) hyperparameter
+//! types are [`gp::cv::HyperParams`] / [`gp::cv::ArdHyperParams`] with
+//! kernels [`kernels::RbfKernel`] / [`kernels::ArdRbfKernel`].
+//!
+//! **Determinism:** every parallel path shards fixed output regions and
+//! replays the serial accumulation order per element, so all results are
+//! bit-identical at any thread count ([`par`] documents the contract).
 
 // CI runs `cargo clippy -- -D warnings`; style/complexity/perf lints are
 // advisory for this from-scratch numeric code (index-heavy kernels trip
@@ -49,9 +72,10 @@ pub mod prelude {
     pub use crate::error::{Error, Result};
     pub use crate::gp::metrics::{mnlp, smse};
     pub use crate::gp::{full::FullGp, mka_gp::MkaGp, GpModel, Prediction};
-    pub use crate::kernels::{Kernel, RbfKernel};
+    pub use crate::gp::cv::{ArdHyperParams, HyperParams};
+    pub use crate::kernels::{ArdRbfKernel, Kernel, RbfKernel};
     pub use crate::la::Mat;
     pub use crate::mka::{MkaConfig, MkaFactor};
-    pub use crate::train::{train_model, ModelSelection, OptimBudget};
+    pub use crate::train::{mll_grad, train_model, MllGrad, ModelSelection, OptimBudget};
     pub use crate::util::{Args, Json, Rng};
 }

@@ -56,8 +56,8 @@ fn print_usage() {
          serve       --port 7470 --workers 2 --config cfg.json --artifacts artifacts\n\
          fit         --data file.csv --method mka|full|sor|fitc|pitc|meka --k 32\n\
          train       --data file.csv | --synth N [--dim D] --method mka --k 32\n\
-                     --selection mll|cv --max-evals 60 --starts 3 --folds 5\n\
-                     [--assert-converged]\n\
+                     --selection mll|mll-grad|cv [--ard] --max-evals 60\n\
+                     --starts 3 --folds 5 [--assert-converged]\n\
          experiment  --name table1|fig1|fig2 [--full] [--max-n N] [--datasets a,b]\n\
          selftest    --artifacts artifacts\n\
          info        [--artifacts artifacts]"
@@ -131,9 +131,11 @@ fn cmd_fit(args: &Args) -> Result<()> {
 }
 
 /// Hyperparameter learning from the command line: select (lengthscale,
-/// σ²) by evidence maximization (default) or grid CV, fit the final
-/// model, and report held-out metrics. `--synth N` generates a seeded
-/// synthetic dataset when no CSV is at hand (CI smoke uses this).
+/// σ²) by evidence maximization (default: derivative-free `mll`;
+/// `mll-grad` runs L-BFGS on the analytic gradients, `--ard` learns one
+/// length scale per input dimension) or grid CV, fit the final model,
+/// and report held-out metrics. `--synth N` generates a seeded synthetic
+/// dataset when no CSV is at hand (CI smoke uses this).
 fn cmd_train(args: &Args) -> Result<()> {
     use mka_gp::train::{train_model, ModelSelection, OptimBudget};
     let method = Method::parse(args.get_or("method", "mka"))
@@ -163,12 +165,20 @@ fn cmd_train(args: &Args) -> Result<()> {
         n_starts: args.get_usize("starts", 3),
         tol: args.get_f64("tol", 1e-5),
     };
-    let selection = ModelSelection::parse(
-        args.get_or("selection", "mll"),
-        args.get_usize("folds", 5),
-        budget,
-    )
-    .ok_or_else(|| mka_gp::error::Error::Config("unknown --selection (mll|cv)".into()))?;
+    let ard = args.has_flag("ard");
+    let sel_name = args.get_or("selection", "mll");
+    let folds = args.get_usize("folds", 5);
+    let selection = ModelSelection::parse(sel_name, folds, budget, ard).ok_or_else(|| {
+        // A known non-gradient name + --ard is a flag conflict; anything
+        // else is an unknown selection name.
+        mka_gp::error::Error::Config(
+            if ard && ModelSelection::parse(sel_name, folds, budget, false).is_some() {
+                "--ard requires the gradient path (--selection mll-grad)".into()
+            } else {
+                "unknown --selection (mll|mll-grad|cv)".into()
+            },
+        )
+    })?;
     println!(
         "training {} on {} (n={}, d={}, k={k}, selection={})",
         method.label(),
@@ -186,6 +196,10 @@ fn cmd_train(args: &Args) -> Result<()> {
         report.train_secs,
         report.converged
     );
+    if let Some(ells) = &report.lengthscales {
+        let pretty: Vec<String> = ells.iter().map(|l| format!("{l:.4}")).collect();
+        println!("ARD lengthscales = [{}]", pretty.join(", "));
+    }
     if let Some(mll) = report.best_mll {
         if !mll.is_finite() {
             return Err(mka_gp::error::Error::Config(format!(

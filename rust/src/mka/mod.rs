@@ -5,6 +5,15 @@
 //! the next core K_ℓ and the wavelet diagonal D_ℓ → recurse on K_ℓ. The
 //! result is an [`MkaFactor`] supporting matrix-free matvec / solve /
 //! logdet / powers / exp (Propositions 6–7).
+//!
+//! Paper ↔ type map: K̃ (eq. 6) is [`MkaFactor`]; each Q̄_ℓ with its
+//! wavelet diagonal D_ℓ is a [`Stage`] (`blocks` hold the per-cluster
+//! rotations, `dvals` the D_ℓ entries); the final dense core K_s is
+//! `MkaFactor::core` with d_core = [`MkaConfig::d_core`]; the explicit
+//! spectrum of Proposition 7 (core eigenvalues ∪ wavelet diagonal) backs
+//! `solve`/`logdet`/`spectrum` in [`ops`], which the training plane
+//! consumes for evidence values *and* gradients
+//! ([`crate::train::grad`]).
 
 pub mod factor;
 pub mod ops;

@@ -1,0 +1,622 @@
+//! Analytic gradients of the log marginal likelihood.
+//!
+//! Every evidence evaluator in [`crate::train::mll`] gains a matching
+//! gradient: for a parameter θ ∈ {log ℓ_1, …, log ℓ_d, log σ²} of the ARD
+//! covariance C(θ),
+//!
+//!   ∂/∂θ log p(y) = ½ αᵀ(∂C/∂θ)α − ½ tr(C⁻¹ ∂C/∂θ),   α = C⁻¹y
+//!
+//! (the classic `½ tr((ααᵀ − C⁻¹) ∂C/∂θ)` identity, Rasmussen & Williams
+//! eq. 5.9). The work is organizing that trace per approximation family
+//! without ever forming an n×n inverse where the evaluator itself doesn't:
+//!
+//! * **Full** — one blocked [`Chol::solve_mat`] against the identity gives
+//!   C⁻¹ (the evaluator already paid the n³ Cholesky), then each ∂C/∂θ is
+//!   an elementwise product with the gram (see
+//!   [`crate::kernels::ArdRbfKernel::grad_gram_dim`]).
+//! * **SoR / FITC** (diagonal Λ) and **PITC** (block-diagonal Λ) — the
+//!   Woodbury/determinant-lemma forms differentiate through the m×m
+//!   Nyström blocks: with C = UᵀW⁻¹U + Λ, U = K_zf, the key identity is
+//!   W⁻¹ U C⁻¹ = B⁻¹ S where S = UΛ⁻¹ and B = W + SUᵀ — so every trace
+//!   reduces to m×n products against T = B⁻¹S and V = W⁻¹U.
+//! * **MKA** — the factorization is produced by a combinatorial pipeline
+//!   (clustering, Jacobi rotations), so we differentiate the *model*,
+//!   not the pipeline: d(logdet K̃′)/dθ ≈ tr(K̃′⁻¹ ∂K/∂θ), with the trace
+//!   estimated by a fixed-seed Hutchinson probe batch pushed through ONE
+//!   [`crate::mka::MkaFactor::solve_mat_par`] cascade (bit-deterministic
+//!   at any thread count per the PR-2 contract), or computed exactly via
+//!   a dense solve for validation ([`TraceMode::Exact`]). The σ²
+//!   direction needs tr(K̃′⁻¹), which the factor's explicit spectrum
+//!   (Proposition 7) gives **exactly** — no probes.
+
+use crate::baselines::nystrom::{select_landmarks, LandmarkMethod, NystromBlocks};
+use crate::data::dataset::Dataset;
+use crate::error::{Error, Result};
+use crate::experiments::methods::{mka_config_for, pitc_block_size, Method};
+use crate::gp::cv::ArdHyperParams;
+use crate::kernels::{ArdRbfKernel, Kernel};
+use crate::la::blas::{dot, gemm, gemm_nt, gemm_tn, gemv, gemv_t};
+use crate::la::chol::Chol;
+use crate::la::dense::Mat;
+use crate::mka::{factorize, MkaConfig};
+use crate::train::mll::{gaussian_mll, pitc_clusters};
+use crate::util::Rng;
+
+/// Default Hutchinson probe count for the MKA trace estimator.
+pub const MKA_TRACE_PROBES: usize = 16;
+
+/// How the MKA gradient estimates tr(K̃′⁻¹ ∂K/∂θ).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TraceMode {
+    /// Fixed-seed Rademacher probes, all pushed through one blocked
+    /// cascade — O(P) extra solve columns.
+    Probes(usize),
+    /// Exact dense trace via a blocked solve against ∂K/∂θ itself —
+    /// O(n) extra solve columns per parameter; the validation path.
+    Exact,
+}
+
+/// The evidence and its gradient in log-parameter space.
+#[derive(Clone, Debug)]
+pub struct MllGrad {
+    pub mll: f64,
+    /// ∂mll/∂log ℓ — one entry per dimension (ARD), or a single entry for
+    /// a tied length scale.
+    pub d_log_ell: Vec<f64>,
+    /// ∂mll/∂log σ².
+    pub d_log_sigma2: f64,
+}
+
+impl MllGrad {
+    /// The flat gradient vector `(∂/∂log ℓ…, ∂/∂log σ²)` the optimizer
+    /// consumes.
+    pub fn grad_vec(&self) -> Vec<f64> {
+        let mut g = self.d_log_ell.clone();
+        g.push(self.d_log_sigma2);
+        g
+    }
+}
+
+/// Σ_ij A∘B — equals tr(AᵀB), and tr(AB) for symmetric A (or B).
+fn elem_dot(a: &Mat, b: &Mat) -> f64 {
+    debug_assert_eq!((a.rows, a.cols), (b.rows, b.cols));
+    dot(&a.data, &b.data)
+}
+
+/// Per-column dots: out[j] = Σ_i A[i,j]·B[i,j] = diag(AᵀB).
+fn col_dots(a: &Mat, b: &Mat) -> Vec<f64> {
+    debug_assert_eq!((a.rows, a.cols), (b.rows, b.cols));
+    let mut out = vec![0.0; a.cols];
+    for r in 0..a.rows {
+        for ((o, &x), &y) in out.iter_mut().zip(a.row(r)).zip(b.row(r)) {
+            *o += x * y;
+        }
+    }
+    out
+}
+
+fn check_hp(data: &Dataset, hp: &ArdHyperParams) -> Result<()> {
+    if !hp.is_valid() {
+        return Err(Error::Config(format!("invalid ARD hyperparameters: {hp:?}")));
+    }
+    if hp.dim() != data.dim() {
+        return Err(Error::Config(format!(
+            "ARD dimension mismatch: {} lengthscales for {}-dimensional data",
+            hp.dim(),
+            data.dim()
+        )));
+    }
+    Ok(())
+}
+
+/// Number of length-scale parameters in the tied/ARD layout.
+fn n_ell_params(kern: &ArdRbfKernel, tied: bool) -> usize {
+    if tied {
+        1
+    } else {
+        kern.dim()
+    }
+}
+
+/// The gradient gram for length-scale parameter `p` of the tied/ARD
+/// layout — materialized one at a time, so an ARD evaluation never holds
+/// more than a single dense gram regardless of the input dimension.
+fn ell_grad_at(kern: &ArdRbfKernel, k: &Mat, x: &Mat, y: &Mat, tied: bool, p: usize) -> Mat {
+    if tied {
+        kern.grad_gram_tied(k, x, y)
+    } else {
+        kern.grad_gram_dim(k, x, y, p)
+    }
+}
+
+// ----------------------------------------------------------------------
+// Full GP
+// ----------------------------------------------------------------------
+
+/// Exact gradient of the exact evidence: one Cholesky of K + σ²I, one
+/// blocked solve against the identity for C⁻¹, then elementwise traces.
+pub fn mll_grad_full(data: &Dataset, hp: &ArdHyperParams, tied: bool) -> Result<MllGrad> {
+    check_hp(data, hp)?;
+    let n = data.n();
+    let kern = hp.kernel();
+    let k = kern.gram_sym(&data.x);
+    let mut kp = k.clone();
+    kp.add_diag(hp.sigma2);
+    let (chol, _) = Chol::new_jittered(&kp, 12)?;
+    let alpha = chol.solve(&data.y);
+    let mll = gaussian_mll(dot(&data.y, &alpha), chol.logdet(), n);
+    // C⁻¹ explicitly — the blocked multi-RHS path on the shared pool.
+    let cinv = chol.solve_mat(&Mat::eye(n));
+    let n_ell = n_ell_params(&kern, tied);
+    let mut d_log_ell = Vec::with_capacity(n_ell);
+    for p in 0..n_ell {
+        let g = ell_grad_at(&kern, &k, &data.x, &data.x, tied, p);
+        let ga = gemv(&g, &alpha);
+        d_log_ell.push(0.5 * (dot(&alpha, &ga) - elem_dot(&cinv, &g)));
+    }
+    let tr_cinv: f64 = cinv.diagonal().iter().sum();
+    let d_log_sigma2 = 0.5 * hp.sigma2 * (dot(&alpha, &alpha) - tr_cinv);
+    Ok(MllGrad { mll, d_log_ell, d_log_sigma2 })
+}
+
+// ----------------------------------------------------------------------
+// SoR / FITC (diagonal Λ)
+// ----------------------------------------------------------------------
+
+/// Shared SoR/FITC gradient: C = UᵀW⁻¹U + Λ with diagonal Λ (SoR: σ²I;
+/// FITC: diag(K − Q) + σ²I). Never forms C — every term reduces to m×n
+/// products against T = B⁻¹S and V = W⁻¹U.
+fn nystrom_mll_grad(
+    data: &Dataset,
+    hp: &ArdHyperParams,
+    tied: bool,
+    m: usize,
+    seed: u64,
+    fitc: bool,
+) -> Result<MllGrad> {
+    check_hp(data, hp)?;
+    let n = data.n();
+    let s2 = hp.sigma2;
+    let kern = hp.kernel();
+    let z = select_landmarks(&data.x, m, LandmarkMethod::Uniform, seed);
+    let nb = NystromBlocks::new(data, &kern, z)?;
+    let u = &nb.kzf; // m×n
+    let v = nb.w_chol.solve_mat(u); // W⁻¹U
+
+    // Λ and, for FITC, where the (k_ii − q_ii) ≥ 0 clamp engaged (there
+    // the length-scale derivative of Λ is zero).
+    let q = col_dots(u, &v); // diag(UᵀW⁻¹U)
+    let mut clamped = vec![false; n];
+    let lam: Vec<f64> = if fitc {
+        (0..n)
+            .map(|i| {
+                let corr = kern.diag(data.x.row(i)) - q[i];
+                clamped[i] = corr < 0.0;
+                corr.max(0.0) + s2
+            })
+            .collect()
+    } else {
+        vec![s2; n]
+    };
+    if lam.iter().any(|&l| !(l > 0.0)) {
+        return Err(Error::Linalg("nystrom_mll_grad: non-positive Λ entry".into()));
+    }
+
+    // S = UΛ⁻¹, B = W + SUᵀ, T = B⁻¹S.
+    let mut s = u.clone();
+    for r in 0..s.rows {
+        for (x, &l) in s.row_mut(r).iter_mut().zip(&lam) {
+            *x /= l;
+        }
+    }
+    let mut b = nb.w.clone();
+    b.add_assign(&gemm_nt(&s, u));
+    b.symmetrize();
+    let (bchol, _) = Chol::new_jittered(&b, 12)?;
+    let t = bchol.solve_mat(&s);
+
+    // α = Λ⁻¹y − Tᵀ(Sy); evidence from the determinant lemma.
+    let ly: Vec<f64> = data.y.iter().zip(&lam).map(|(yi, &l)| yi / l).collect();
+    let sy = gemv(&s, &data.y);
+    let tt_sy = gemv_t(&t, &sy);
+    let alpha: Vec<f64> = ly.iter().zip(&tt_sy).map(|(a, b)| a - b).collect();
+    let logdet =
+        bchol.logdet() - nb.w_chol.logdet() + lam.iter().map(|l| l.ln()).sum::<f64>();
+    let mll = gaussian_mll(dot(&data.y, &alpha), logdet, n);
+
+    // Reusable pieces: Vα, diag(C⁻¹) = Λ⁻¹ − diag(SᵀT), M = VC⁻¹Vᵀ = TVᵀ.
+    let va = gemv(&v, &alpha);
+    let st_diag = col_dots(&s, &t);
+    let cinv_diag: Vec<f64> =
+        lam.iter().zip(&st_diag).map(|(&l, &d)| 1.0 / l - d).collect();
+    let m_mat = gemm_nt(&t, &v);
+
+    let n_ell = n_ell_params(&kern, tied);
+    let mut d_log_ell = Vec::with_capacity(n_ell);
+    for p in 0..n_ell {
+        let udot = ell_grad_at(&kern, u, &nb.z, &data.x, tied, p);
+        let wdot = ell_grad_at(&kern, &nb.w, &nb.z, &nb.z, tied, p);
+        let ua = gemv(&udot, &alpha);
+        let wva = gemv(&wdot, &va);
+        let mut quad = 2.0 * dot(&ua, &va) - dot(&va, &wva);
+        let mut tr = 2.0 * elem_dot(&udot, &t) - elem_dot(&wdot, &m_mat);
+        if fitc {
+            // Λ̇_i = −q̇_i (zero where the clamp engaged):
+            // q̇ = diag(U̇ᵀV + VᵀU̇ − VᵀẆV).
+            let wv = gemm(&wdot, &v);
+            let qdot_raw: Vec<f64> = col_dots(&udot, &v)
+                .iter()
+                .zip(col_dots(&v, &wv))
+                .map(|(&uv, &vwv)| 2.0 * uv - vwv)
+                .collect();
+            for i in 0..n {
+                if !clamped[i] {
+                    let ld = -qdot_raw[i];
+                    quad += ld * alpha[i] * alpha[i];
+                    tr += ld * cinv_diag[i];
+                }
+            }
+        }
+        d_log_ell.push(0.5 * (quad - tr));
+    }
+
+    // log σ²: U̇ = Ẇ = 0, Λ̇ = σ²I for both SoR and FITC.
+    let d_log_sigma2 =
+        0.5 * s2 * (dot(&alpha, &alpha) - cinv_diag.iter().sum::<f64>());
+    Ok(MllGrad { mll, d_log_ell, d_log_sigma2 })
+}
+
+/// SoR evidence gradient (Λ = σ²I), landmarks as in `mll_sor`.
+pub fn mll_grad_sor(
+    data: &Dataset,
+    hp: &ArdHyperParams,
+    tied: bool,
+    m: usize,
+    seed: u64,
+) -> Result<MllGrad> {
+    nystrom_mll_grad(data, hp, tied, m, seed, false)
+}
+
+/// FITC evidence gradient (Λ = diag(K − Q) + σ²I), landmarks as in
+/// `mll_fitc`.
+pub fn mll_grad_fitc(
+    data: &Dataset,
+    hp: &ArdHyperParams,
+    tied: bool,
+    m: usize,
+    seed: u64,
+) -> Result<MllGrad> {
+    nystrom_mll_grad(data, hp, tied, m, seed, true)
+}
+
+// ----------------------------------------------------------------------
+// PITC (block-diagonal Λ)
+// ----------------------------------------------------------------------
+
+/// Per-block state shared by every parameter's gradient pass.
+struct PitcBlock {
+    members: Vec<usize>,
+    xb: Mat,
+    /// Base gram K_bb of the block (noiseless, before the Q subtraction).
+    kbb: Mat,
+    /// Λ_b⁻¹ (dense |b|×|b|).
+    linv: Mat,
+    /// m×|b| column gathers of V, S, T at the block's indices.
+    vb: Mat,
+    sb: Mat,
+    tb: Mat,
+    alpha_b: Vec<f64>,
+}
+
+/// PITC evidence gradient: identical clustering and Λ_b assembly to
+/// `mll_pitc`, with Λ̇_b = Ġ_bb − Q̇_bb per block for the length-scale
+/// directions and σ²I_b for the noise direction.
+pub fn mll_grad_pitc(
+    data: &Dataset,
+    hp: &ArdHyperParams,
+    tied: bool,
+    m: usize,
+    block_size: usize,
+    seed: u64,
+) -> Result<MllGrad> {
+    check_hp(data, hp)?;
+    let n = data.n();
+    let s2 = hp.sigma2;
+    let kern = hp.kernel();
+    let z = select_landmarks(&data.x, m, LandmarkMethod::Uniform, seed);
+    let nb = NystromBlocks::new(data, &kern, z)?;
+    let u = &nb.kzf;
+    let mm = nb.m();
+    let all_rows: Vec<usize> = (0..mm).collect();
+    let v = nb.w_chol.solve_mat(u);
+    let clusters = pitc_clusters(&data.x, block_size, seed);
+
+    // Per-block Λ_b = K_bb − Q_bb + σ²I; assemble S = UΛ⁻¹ and Λ⁻¹y by
+    // scattering block results into the global column layout.
+    let mut s = Mat::zeros(mm, n);
+    let mut ly = vec![0.0; n];
+    let mut logdet_lam = 0.0;
+    let mut blocks: Vec<PitcBlock> = Vec::with_capacity(clusters.len());
+    for members in &clusters {
+        let xb = data.x.gather_rows(members);
+        let kbb = kern.gram_sym(&xb);
+        let qbb = nb.q_block(members, members);
+        let mut lam = kbb.sub(&qbb);
+        lam.symmetrize();
+        lam.add_diag(s2);
+        let (lchol, _) = Chol::new_jittered(&lam, 12)?;
+        logdet_lam += lchol.logdet();
+        let linv = lchol.solve_mat(&Mat::eye(members.len()));
+        let ub = u.gather(&all_rows, members);
+        // S_b = U_b Λ_b⁻¹ = (Λ_b⁻¹ U_bᵀ)ᵀ.
+        let sb = lchol.solve_mat(&ub.transpose()).transpose();
+        for (jl, &jg) in members.iter().enumerate() {
+            for a in 0..mm {
+                s.set(a, jg, sb.at(a, jl));
+            }
+        }
+        let yb: Vec<f64> = members.iter().map(|&i| data.y[i]).collect();
+        let ly_b = lchol.solve(&yb);
+        for (jl, &jg) in members.iter().enumerate() {
+            ly[jg] = ly_b[jl];
+        }
+        blocks.push(PitcBlock {
+            members: members.clone(),
+            xb,
+            kbb,
+            linv,
+            vb: v.gather(&all_rows, members),
+            sb,
+            tb: Mat::zeros(0, 0), // filled once T exists
+            alpha_b: Vec::new(),  // filled once α exists
+        });
+    }
+
+    // B = W + SUᵀ, T = B⁻¹S, α = Λ⁻¹y − Tᵀ(Sy).
+    let mut b = nb.w.clone();
+    b.add_assign(&gemm_nt(&s, u));
+    b.symmetrize();
+    let (bchol, _) = Chol::new_jittered(&b, 12)?;
+    let t = bchol.solve_mat(&s);
+    let sy = gemv(&s, &data.y);
+    let tt_sy = gemv_t(&t, &sy);
+    let alpha: Vec<f64> = ly.iter().zip(&tt_sy).map(|(a, b)| a - b).collect();
+    let logdet = bchol.logdet() - nb.w_chol.logdet() + logdet_lam;
+    let mll = gaussian_mll(dot(&data.y, &alpha), logdet, n);
+
+    for blk in &mut blocks {
+        blk.tb = t.gather(&all_rows, &blk.members);
+        blk.alpha_b = blk.members.iter().map(|&i| alpha[i]).collect();
+    }
+
+    let va = gemv(&v, &alpha);
+    let m_mat = gemm_nt(&t, &v);
+
+    let n_ell = n_ell_params(&kern, tied);
+    let mut d_log_ell = Vec::with_capacity(n_ell);
+    for p in 0..n_ell {
+        let udot = ell_grad_at(&kern, u, &nb.z, &data.x, tied, p);
+        let wdot = ell_grad_at(&kern, &nb.w, &nb.z, &nb.z, tied, p);
+        let ua = gemv(&udot, &alpha);
+        let wva = gemv(&wdot, &va);
+        let mut quad = 2.0 * dot(&ua, &va) - dot(&va, &wva);
+        let mut tr = 2.0 * elem_dot(&udot, &t) - elem_dot(&wdot, &m_mat);
+        for blk in &blocks {
+            // Λ̇_b = Ġ_bb − (U̇_bᵀV_b + V_bᵀU̇_b − V_bᵀẆV_b).
+            let gbb = ell_grad_at(&kern, &blk.kbb, &blk.xb, &blk.xb, tied, p);
+            let udot_b = udot.gather(&all_rows, &blk.members);
+            let a1 = gemm_tn(&udot_b, &blk.vb);
+            let wv_b = gemm(&wdot, &blk.vb);
+            let a2 = gemm_tn(&blk.vb, &wv_b);
+            let mut lamdot = gbb.sub(&a1).sub(&a1.transpose());
+            lamdot.add_assign(&a2);
+            // C⁻¹_bb = Λ_b⁻¹ − S_bᵀT_b.
+            let cinv_bb = blk.linv.sub(&gemm_tn(&blk.sb, &blk.tb));
+            let la = gemv(&lamdot, &blk.alpha_b);
+            quad += dot(&blk.alpha_b, &la);
+            tr += elem_dot(&cinv_bb, &lamdot);
+        }
+        d_log_ell.push(0.5 * (quad - tr));
+    }
+
+    // log σ²: Λ̇ = σ²I ⇒ tr(C⁻¹Λ̇) = σ² Σ_b tr(Λ_b⁻¹ − S_bᵀT_b).
+    let mut tr_cinv = 0.0;
+    for blk in &blocks {
+        tr_cinv += blk.linv.diagonal().iter().sum::<f64>();
+        tr_cinv -= col_dots(&blk.sb, &blk.tb).iter().sum::<f64>();
+    }
+    let d_log_sigma2 = 0.5 * s2 * (dot(&alpha, &alpha) - tr_cinv);
+    Ok(MllGrad { mll, d_log_ell, d_log_sigma2 })
+}
+
+// ----------------------------------------------------------------------
+// MKA
+// ----------------------------------------------------------------------
+
+/// MKA evidence gradient through the cascade. The quadratic-form term is
+/// exact given the factorization (`½ αᵀ(∂K/∂θ)α`, α = K̃′⁻¹y); the logdet
+/// term uses tr(K̃′⁻¹ ∂K/∂θ) per `mode`, and the σ² direction uses the
+/// factor's exact spectrum for tr(K̃′⁻¹). `probe_seed` fixes the
+/// Rademacher batch, so the estimate is deterministic — and because the
+/// probes ride one `solve_mat_par`, bit-identical at any thread count.
+pub fn mll_grad_mka(
+    data: &Dataset,
+    hp: &ArdHyperParams,
+    tied: bool,
+    cfg: &MkaConfig,
+    mode: TraceMode,
+    probe_seed: u64,
+) -> Result<MllGrad> {
+    check_hp(data, hp)?;
+    let n = data.n();
+    let kern = hp.kernel();
+    let k = kern.gram_sym(&data.x);
+    let mut kp = k.clone();
+    kp.add_diag(hp.sigma2);
+    let f = factorize(&kp, Some(&data.x), cfg)?;
+    let alpha = f.solve(&data.y)?;
+    let mll = gaussian_mll(dot(&data.y, &alpha), f.logdet()?, n);
+    let threads = crate::par::threads();
+
+    // One blocked cascade carries the whole probe batch (Probes mode).
+    let probes = match mode {
+        TraceMode::Probes(p) => {
+            let p = p.max(1);
+            let mut rng = Rng::new(probe_seed);
+            let z = Mat::from_fn(n, p, |_, _| {
+                if rng.next_u64() & 1 == 0 {
+                    1.0
+                } else {
+                    -1.0
+                }
+            });
+            let r = f.solve_mat_par(&z, threads)?;
+            Some((z, r))
+        }
+        TraceMode::Exact => None,
+    };
+
+    let n_ell = n_ell_params(&kern, tied);
+    let mut d_log_ell = Vec::with_capacity(n_ell);
+    for p in 0..n_ell {
+        let g = ell_grad_at(&kern, &k, &data.x, &data.x, tied, p);
+        let ga = gemv(&g, &alpha);
+        let quad = dot(&alpha, &ga);
+        let tr = match &probes {
+            Some((z, r)) => {
+                // tr(K̃′⁻¹G) ≈ mean_p (K̃′⁻¹z_p)ᵀ(G z_p).
+                let gz = gemm(&g, z);
+                elem_dot(r, &gz) / z.cols as f64
+            }
+            None => {
+                let x = f.solve_mat_par(&g, threads)?;
+                x.diagonal().iter().sum()
+            }
+        };
+        d_log_ell.push(0.5 * (quad - tr));
+    }
+
+    // tr(K̃′⁻¹) exactly from the explicit spectrum (Proposition 7):
+    // core eigenvalues ∪ wavelet diagonal values.
+    let tr_inv: f64 = f.spectrum().iter().map(|l| 1.0 / l).sum();
+    let d_log_sigma2 = 0.5 * hp.sigma2 * (dot(&alpha, &alpha) - tr_inv);
+    Ok(MllGrad { mll, d_log_ell, d_log_sigma2 })
+}
+
+// ----------------------------------------------------------------------
+// Dispatch
+// ----------------------------------------------------------------------
+
+/// Method-dispatched evidence gradient with the same budget
+/// interpretation (`k` → landmarks / d_core, PITC block sizing) as
+/// [`crate::train::mll::log_marginal_likelihood`], so the surface the
+/// L-BFGS optimizer climbs is the evidence of the model that will be
+/// fitted. `tied = true` collapses the length-scale gradient to a single
+/// entry (the isotropic parametrization); `tied = false` is full ARD.
+pub fn mll_grad(
+    method: Method,
+    data: &Dataset,
+    hp: &ArdHyperParams,
+    tied: bool,
+    k: usize,
+    seed: u64,
+) -> Result<MllGrad> {
+    match method {
+        Method::Full => mll_grad_full(data, hp, tied),
+        Method::Sor => mll_grad_sor(data, hp, tied, k, seed),
+        Method::Fitc => mll_grad_fitc(data, hp, tied, k, seed),
+        Method::Pitc => {
+            let block = pitc_block_size(data.n(), k);
+            mll_grad_pitc(data, hp, tied, k, block, seed)
+        }
+        Method::Meka => Err(Error::Config(
+            "MEKA loses spsd-ness, so its marginal likelihood has no gradient; use grid CV"
+                .into(),
+        )),
+        Method::Mka => {
+            let cfg = mka_config_for(k, data.n(), seed);
+            mll_grad_mka(
+                data,
+                hp,
+                tied,
+                &cfg,
+                TraceMode::Probes(MKA_TRACE_PROBES),
+                seed ^ 0x70524f42,
+            )
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::{gp_dataset, SynthSpec};
+    use crate::gp::cv::HyperParams;
+
+    fn small() -> Dataset {
+        gp_dataset(&SynthSpec::named("grad", 70, 2), 3)
+    }
+
+    fn hp() -> ArdHyperParams {
+        ArdHyperParams { lengthscales: vec![0.9, 1.6], sigma2: 0.08 }
+    }
+
+    // Finite-difference validation of every evaluator lives in the
+    // integration suite (`rust/tests/grad_check.rs`) — one shared
+    // central-difference harness instead of a per-module copy. The unit
+    // tests here pin the cheap structural invariants only.
+
+    #[test]
+    fn tied_gradient_is_sum_of_ard_gradients() {
+        let d = small();
+        // With equal lengthscales, the tied derivative must equal the sum
+        // of the per-dimension derivatives (chain rule).
+        let iso = ArdHyperParams::isotropic(HyperParams { lengthscale: 1.1, sigma2: 0.1 }, 2);
+        let tied = mll_grad_full(&d, &iso, true).unwrap();
+        let ard = mll_grad_full(&d, &iso, false).unwrap();
+        let sum: f64 = ard.d_log_ell.iter().sum();
+        assert!((tied.d_log_ell[0] - sum).abs() < 1e-9);
+        assert!((tied.mll - ard.mll).abs() < 1e-12);
+        assert!((tied.d_log_sigma2 - ard.d_log_sigma2).abs() < 1e-12);
+    }
+
+    #[test]
+    fn dispatcher_validates_and_rejects_meka() {
+        let d = small();
+        let bad = ArdHyperParams { lengthscales: vec![1.0], sigma2: 0.1 }; // wrong dim
+        assert!(mll_grad(Method::Full, &d, &bad, false, 8, 1).is_err());
+        let neg = ArdHyperParams { lengthscales: vec![1.0, -1.0], sigma2: 0.1 };
+        assert!(mll_grad(Method::Sor, &d, &neg, false, 8, 1).is_err());
+        assert!(mll_grad(Method::Meka, &d, &hp(), false, 8, 1).is_err());
+    }
+
+    #[test]
+    fn every_method_returns_finite_gradients() {
+        let d = small();
+        let hp = hp();
+        for m in [Method::Full, Method::Sor, Method::Fitc, Method::Pitc, Method::Mka] {
+            let g = mll_grad(m, &d, &hp, false, 10, 5).unwrap();
+            assert!(g.mll.is_finite(), "{m:?}");
+            assert_eq!(g.d_log_ell.len(), 2, "{m:?}");
+            assert!(g.grad_vec().iter().all(|v| v.is_finite()), "{m:?}: {g:?}");
+        }
+    }
+
+    #[test]
+    fn mll_value_agrees_with_mll_module() {
+        // The gradient evaluators must score the same evidence surface as
+        // the value-only evaluators (isotropic case).
+        let d = small();
+        let flat = HyperParams { lengthscale: 1.2, sigma2: 0.1 };
+        let iso = ArdHyperParams::isotropic(flat, 2);
+        for m in [Method::Full, Method::Sor, Method::Fitc, Method::Pitc] {
+            let v = crate::train::mll::log_marginal_likelihood(m, &d, flat, 10, 5).unwrap();
+            let g = mll_grad(m, &d, &iso, true, 10, 5).unwrap();
+            assert!(
+                (v - g.mll).abs() < 1e-6 * v.abs().max(1.0),
+                "{m:?}: value {v} vs grad-path {}",
+                g.mll
+            );
+        }
+    }
+}

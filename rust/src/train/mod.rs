@@ -9,18 +9,34 @@
 //!
 //! * [`mll`] — per-method evidence evaluators (Full/Cholesky, MKA/
 //!   Proposition 7, Nyström family/Woodbury + determinant lemma);
-//! * [`optimizer`] — bounded multi-start Nelder–Mead over log-space
-//!   `(lengthscale, σ²)`, concurrent on the shared `par` pool,
-//!   bit-deterministic at any thread count;
+//! * [`grad`] — the matching analytic gradients
+//!   `∂(log marginal likelihood)/∂(log ℓ_d, log σ²)`: the classic
+//!   `½ tr((ααᵀ − C⁻¹)∂C/∂θ)` identity organized per family (blocked
+//!   dense solves for Full, differentiated Woodbury/determinant-lemma
+//!   forms for SoR/FITC/PITC, fixed-seed Hutchinson probes through one
+//!   cascade for MKA);
+//! * [`optimizer`] — two maximizers over log-space hyperparameters:
+//!   bounded multi-start Nelder–Mead (`maximize_mll`, 2-D) and bounded
+//!   L-BFGS (`maximize_mll_lbfgs`, d+1-dimensional with ARD), both
+//!   concurrent on the shared `par` pool and bit-deterministic at any
+//!   thread count;
 //! * [`trainer`] — the [`trainer::ModelSelection`] strategy enum
-//!   (`GridCv` | `Mll`) behind one [`trainer::train_model`] API, used by
-//!   the `train` CLI subcommand and the coordinator's async
+//!   (`GridCv` | `Mll` | `MllGrad`) behind one [`trainer::train_model`]
+//!   API, used by the `train` CLI subcommand and the coordinator's async
 //!   `{"op":"train"}` job.
 
+pub mod grad;
 pub mod mll;
 pub mod optimizer;
 pub mod trainer;
 
+pub use grad::{mll_grad, MllGrad, TraceMode};
 pub use mll::log_marginal_likelihood;
-pub use optimizer::{maximize_mll, EvalRecord, OptimBudget, OptimOutcome, SearchBox};
-pub use trainer::{fit_model, select_hyperparams, train_model, ModelSelection, TrainReport};
+pub use optimizer::{
+    maximize_mll, maximize_mll_lbfgs, EvalRecord, GradOptimOutcome, OptimBudget, OptimOutcome,
+    SearchBox,
+};
+pub use trainer::{
+    fit_model, fit_model_ard, fit_model_with_kernel, select_hyperparams, train_model,
+    ModelSelection, TrainReport,
+};

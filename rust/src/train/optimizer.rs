@@ -1,5 +1,7 @@
-//! Derivative-free maximization of the log marginal likelihood over
-//! log-space (lengthscale, σ²).
+//! Maximization of the log marginal likelihood over log-space
+//! hyperparameters — derivative-free ([`maximize_mll`], Nelder–Mead over
+//! `(lengthscale, σ²)`) and gradient-based ([`maximize_mll_lbfgs`],
+//! bounded L-BFGS over `(ℓ_1..ℓ_d, σ²)` with ARD support).
 //!
 //! Std-only Nelder–Mead with a bounded box and multi-start: start points
 //! come from the [`default_grid`] heuristic (spread evenly through the
@@ -18,7 +20,8 @@
 //! feasible region.
 
 use crate::error::{Error, Result};
-use crate::gp::cv::{default_grid, HyperParams};
+use crate::gp::cv::{default_grid, ArdHyperParams, HyperParams};
+use crate::la::blas::{axpy, dot};
 use crate::par::{run_tasks, SendPtr};
 
 /// Evaluation budget for one optimizer call.
@@ -262,6 +265,276 @@ where
     StartResult { best: ctx.best, evals: ctx.evals, converged, trace: ctx.trace }
 }
 
+// ----------------------------------------------------------------------
+// Gradient-based path: bounded L-BFGS with ARD
+// ----------------------------------------------------------------------
+
+/// Result of a gradient-based multi-start maximization. Unlike
+/// [`OptimOutcome`], `best` carries per-dimension length scales; the
+/// `trace` records isotropic summaries ([`ArdHyperParams::tied`]) so the
+/// protocol-serialized eval trace keeps a uniform shape.
+#[derive(Clone, Debug)]
+pub struct GradOptimOutcome {
+    pub best: ArdHyperParams,
+    pub best_mll: f64,
+    /// Objective+gradient evaluations spent (including failed ones).
+    pub evals: usize,
+    /// Whether the winning start met the projected-gradient tolerance.
+    pub converged: bool,
+    pub trace: Vec<EvalRecord>,
+}
+
+/// L-BFGS history depth (pairs of (s, y) kept for the two-loop recursion).
+const LBFGS_HISTORY: usize = 8;
+
+/// Armijo sufficient-decrease constant.
+const ARMIJO_C1: f64 = 1e-4;
+
+/// Maximize `objective` (which returns the MLL **and** its gradient with
+/// respect to the log-parameters) over the box with bounded L-BFGS.
+///
+/// The parameter vector is `(log ℓ_1, …, log ℓ_p, log σ²)` with `p = dim`
+/// when `ard` is true and `p = 1` (one tied length scale broadcast to all
+/// dimensions) otherwise; the gradient the objective returns must have
+/// the same layout (see [`crate::train::grad::MllGrad::grad_vec`]).
+/// Box constraints are enforced by projection: every trial point is
+/// clamped before evaluation and the Armijo test uses the projected step,
+/// so iterates can slide along active bounds. Starts run concurrently on
+/// the shared pool with fixed slot sharding and an in-order reduction —
+/// the same bit-determinism contract as [`maximize_mll`].
+pub fn maximize_mll_lbfgs<F>(
+    objective: F,
+    dim: usize,
+    ard: bool,
+    budget: &OptimBudget,
+    sbox: &SearchBox,
+) -> Result<GradOptimOutcome>
+where
+    F: Fn(&ArdHyperParams) -> Option<(f64, Vec<f64>)> + Send + Sync,
+{
+    let dim = dim.max(1);
+    let n_ell = if ard { dim } else { 1 };
+    let p = n_ell + 1;
+    let n_starts = budget.n_starts.max(1);
+    let per_start = (budget.max_evals / n_starts).max(5);
+    let (lo2, hi2) = (sbox.lo(), sbox.hi());
+    // Broadcast the 2-D box to the full parameter vector.
+    let mut lo = vec![lo2[0]; p];
+    let mut hi = vec![hi2[0]; p];
+    lo[n_ell] = lo2[1];
+    hi[n_ell] = hi2[1];
+    let starts: Vec<Vec<f64>> = seed_points(dim, n_starts, sbox)
+        .into_iter()
+        .map(|s2| {
+            let mut x = vec![s2[0]; p];
+            x[n_ell] = s2[1];
+            x
+        })
+        .collect();
+
+    let mut slots: Vec<Option<GradStartResult>> = vec![None; n_starts];
+    let ptr = SendPtr::new(slots.as_mut_ptr());
+    let obj = &objective;
+    run_tasks(n_starts, n_starts, |i| {
+        let res = lbfgs(obj, dim, ard, &starts[i], &lo, &hi, per_start, budget.tol);
+        // SAFETY: task i writes only slot i; run_tasks blocks until done.
+        unsafe { *ptr.ptr().add(i) = Some(res) };
+    });
+
+    let mut trace = Vec::new();
+    let mut best: Option<(Vec<f64>, f64, bool)> = None;
+    let mut evals = 0;
+    for slot in slots.into_iter().flatten() {
+        evals += slot.evals;
+        if let Some((x, v)) = slot.best {
+            if best.as_ref().map_or(true, |(_, bv, _)| v > *bv) {
+                best = Some((x, v, slot.converged));
+            }
+        }
+        trace.extend(slot.trace);
+    }
+    let (x, best_mll, converged) = best.ok_or_else(|| {
+        Error::Config("mll lbfgs: every candidate evaluation failed".into())
+    })?;
+    Ok(GradOptimOutcome {
+        best: theta_to_hp(&x, dim, ard),
+        best_mll,
+        evals,
+        converged,
+        trace,
+    })
+}
+
+/// Decode a log-parameter vector into hyperparameters (tied length scale
+/// broadcast to every dimension when `ard` is false).
+fn theta_to_hp(x: &[f64], dim: usize, ard: bool) -> ArdHyperParams {
+    let n_ell = if ard { dim } else { 1 };
+    let lengthscales = if ard {
+        x[..n_ell].iter().map(|v| v.exp()).collect()
+    } else {
+        vec![x[0].exp(); dim]
+    };
+    ArdHyperParams { lengthscales, sigma2: x[n_ell].exp() }
+}
+
+fn clamp_vec(x: &[f64], lo: &[f64], hi: &[f64]) -> Vec<f64> {
+    x.iter().zip(lo).zip(hi).map(|((v, &l), &h)| v.clamp(l, h)).collect()
+}
+
+#[derive(Clone, Debug)]
+struct GradStartResult {
+    best: Option<(Vec<f64>, f64)>,
+    evals: usize,
+    converged: bool,
+    trace: Vec<EvalRecord>,
+}
+
+/// One bounded L-BFGS descent on the negated objective.
+fn lbfgs<F>(
+    obj: &F,
+    dim: usize,
+    ard: bool,
+    x0: &[f64],
+    lo: &[f64],
+    hi: &[f64],
+    max_evals: usize,
+    tol: f64,
+) -> GradStartResult
+where
+    F: Fn(&ArdHyperParams) -> Option<(f64, Vec<f64>)>,
+{
+    let p = x0.len();
+    let mut evals = 0usize;
+    let mut trace: Vec<EvalRecord> = Vec::new();
+    let mut best: Option<(Vec<f64>, f64)> = None;
+    // Evaluate cost = −mll and its gradient at a point, recording traces.
+    let eval = |x: &[f64],
+                    evals: &mut usize,
+                    trace: &mut Vec<EvalRecord>,
+                    best: &mut Option<(Vec<f64>, f64)>|
+     -> Option<(f64, Vec<f64>)> {
+        *evals += 1;
+        let hp = theta_to_hp(x, dim, ard);
+        match obj(&hp) {
+            Some((v, g))
+                if v.is_finite() && g.len() == p && g.iter().all(|a| a.is_finite()) =>
+            {
+                trace.push(EvalRecord { hp: hp.tied(), value: v });
+                if best.as_ref().map_or(true, |(_, bv)| v > *bv) {
+                    *best = Some((x.to_vec(), v));
+                }
+                Some((-v, g.iter().map(|a| -a).collect()))
+            }
+            _ => None,
+        }
+    };
+
+    let mut x = clamp_vec(x0, lo, hi);
+    let Some((mut fx, mut gx)) = eval(&x, &mut evals, &mut trace, &mut best) else {
+        return GradStartResult { best: None, evals, converged: false, trace: Vec::new() };
+    };
+    let mut hist: Vec<(Vec<f64>, Vec<f64>, f64)> = Vec::new(); // (s, y, 1/sᵀy)
+    let mut converged = false;
+
+    while evals < max_evals {
+        // Projected-gradient convergence test: the box-feasible steepest
+        // step length (∞-norm) relative to the objective scale.
+        let pg = x
+            .iter()
+            .zip(&gx)
+            .zip(lo.iter().zip(hi))
+            .map(|((&xi, &gi), (&l, &h))| ((xi - gi).clamp(l, h) - xi).abs())
+            .fold(0.0f64, f64::max);
+        if pg <= tol * (1.0 + fx.abs()) {
+            converged = true;
+            break;
+        }
+
+        let mut d = lbfgs_direction(&hist, &gx);
+        if dot(&d, &gx) >= 0.0 {
+            // Not a descent direction (stale curvature) — steepest descent.
+            d = gx.iter().map(|g| -g).collect();
+            hist.clear();
+        }
+
+        // Backtracking Armijo line search on the projected point.
+        let mut step = 1.0f64;
+        let mut accepted: Option<(Vec<f64>, f64, Vec<f64>, Vec<f64>)> = None;
+        for _ in 0..16 {
+            if evals >= max_evals {
+                break;
+            }
+            let cand: Vec<f64> = x.iter().zip(&d).map(|(xi, di)| xi + step * di).collect();
+            let xt = clamp_vec(&cand, lo, hi);
+            let s: Vec<f64> = xt.iter().zip(&x).map(|(a, b)| a - b).collect();
+            if s.iter().all(|v| v.abs() < 1e-14) {
+                break; // projection collapsed the step entirely
+            }
+            // Projection can flip a descent direction against the box
+            // (gᵀs ≥ 0): never accept such a step — backtracking shrinks
+            // it until fewer components clamp and s realigns with d.
+            let gs = dot(&gx, &s);
+            if gs < 0.0 {
+                if let Some((ft, gt)) = eval(&xt, &mut evals, &mut trace, &mut best) {
+                    if ft <= fx + ARMIJO_C1 * gs {
+                        accepted = Some((xt, ft, gt, s));
+                        break;
+                    }
+                }
+            }
+            step *= 0.5;
+        }
+        let Some((xt, ft, gt, s)) = accepted else {
+            break; // no acceptable step — at a (possibly bound) stationary point
+        };
+
+        let y: Vec<f64> = gt.iter().zip(&gx).map(|(a, b)| a - b).collect();
+        let sy = dot(&s, &y);
+        let sn = dot(&s, &s).sqrt();
+        let yn = dot(&y, &y).sqrt();
+        if sy > 1e-10 * sn * yn {
+            if hist.len() == LBFGS_HISTORY {
+                hist.remove(0);
+            }
+            hist.push((s, y, 1.0 / sy));
+        }
+        x = xt;
+        fx = ft;
+        gx = gt;
+    }
+
+    GradStartResult { best, evals, converged, trace }
+}
+
+/// Two-loop recursion: returns the descent direction −H∇f, with the
+/// standard γ = sᵀy/yᵀy initial Hessian scaling.
+fn lbfgs_direction(hist: &[(Vec<f64>, Vec<f64>, f64)], g: &[f64]) -> Vec<f64> {
+    let mut q = g.to_vec();
+    let mut alphas = vec![0.0; hist.len()];
+    for (i, (s, y, rho)) in hist.iter().enumerate().rev() {
+        let a = rho * dot(s, &q);
+        alphas[i] = a;
+        axpy(-a, y, &mut q);
+    }
+    if let Some((s, y, _)) = hist.last() {
+        let yy = dot(y, y);
+        if yy > 0.0 {
+            let gamma = dot(s, y) / yy;
+            for v in &mut q {
+                *v *= gamma;
+            }
+        }
+    }
+    for (i, (s, y, rho)) in hist.iter().enumerate() {
+        let b = rho * dot(y, &q);
+        axpy(alphas[i] - b, s, &mut q);
+    }
+    for v in &mut q {
+        *v = -*v;
+    }
+    q
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -335,6 +608,109 @@ mod tests {
         let c = run();
         for other in [&b, &c] {
             assert_eq!(a.best.lengthscale.to_bits(), other.best.lengthscale.to_bits());
+            assert_eq!(a.best.sigma2.to_bits(), other.best.sigma2.to_bits());
+            assert_eq!(a.best_mll.to_bits(), other.best_mll.to_bits());
+            assert_eq!(a.evals, other.evals);
+            assert_eq!(a.trace.len(), other.trace.len());
+        }
+    }
+
+    /// ARD quadratic bowl with a known maximum and exact gradients.
+    fn grad_bowl(
+        ells: Vec<f64>,
+        s2: f64,
+        ard: bool,
+    ) -> impl Fn(&ArdHyperParams) -> Option<(f64, Vec<f64>)> + Send + Sync {
+        move |hp: &ArdHyperParams| {
+            let mut v = 0.0;
+            let mut g = Vec::new();
+            if ard {
+                for (l, t) in hp.lengthscales.iter().zip(&ells) {
+                    let a = l.ln() - t.ln();
+                    v -= a * a;
+                    g.push(-2.0 * a);
+                }
+            } else {
+                let a = hp.lengthscales[0].ln() - ells[0].ln();
+                v -= a * a;
+                g.push(-2.0 * a);
+            }
+            let b = hp.sigma2.ln() - s2.ln();
+            v -= 0.5 * b * b;
+            g.push(-b);
+            Some((v, g))
+        }
+    }
+
+    #[test]
+    fn lbfgs_recovers_ard_maximum() {
+        let budget = OptimBudget { max_evals: 120, n_starts: 2, tol: 1e-7 };
+        let sbox = SearchBox::for_dim(3);
+        let targets = vec![0.5, 1.5, 4.0];
+        let out =
+            maximize_mll_lbfgs(grad_bowl(targets.clone(), 0.05, true), 3, true, &budget, &sbox)
+                .unwrap();
+        assert!(out.converged, "evals={}", out.evals);
+        assert_eq!(out.best.lengthscales.len(), 3);
+        for (l, t) in out.best.lengthscales.iter().zip(&targets) {
+            assert!((l.ln() - t.ln()).abs() < 1e-3, "{:?}", out.best);
+        }
+        assert!((out.best.sigma2.ln() - 0.05f64.ln()).abs() < 1e-3);
+        assert!(out.best_mll > -1e-5);
+        assert!(!out.trace.is_empty());
+    }
+
+    #[test]
+    fn lbfgs_tied_mode_broadcasts_single_lengthscale() {
+        let budget = OptimBudget { max_evals: 80, n_starts: 2, tol: 1e-7 };
+        let sbox = SearchBox::for_dim(4);
+        let out = maximize_mll_lbfgs(grad_bowl(vec![2.0], 0.1, false), 4, false, &budget, &sbox)
+            .unwrap();
+        assert_eq!(out.best.lengthscales.len(), 4);
+        let l0 = out.best.lengthscales[0];
+        assert!(out.best.lengthscales.iter().all(|l| (l - l0).abs() < 1e-12));
+        assert!((l0.ln() - 2.0f64.ln()).abs() < 1e-3, "{:?}", out.best);
+    }
+
+    #[test]
+    fn lbfgs_respects_box_and_converges_on_boundary() {
+        let sbox = SearchBox { lengthscale: (0.5, 2.0), sigma2: (0.01, 0.1) };
+        let budget = OptimBudget { max_evals: 80, n_starts: 2, tol: 1e-9 };
+        let out = maximize_mll_lbfgs(grad_bowl(vec![100.0], 1.0, false), 1, false, &budget, &sbox)
+            .unwrap();
+        assert!(out.best.lengthscales[0] <= 2.0 + 1e-9);
+        assert!(out.best.sigma2 <= 0.1 + 1e-9);
+        // the optimum sits against the upper bounds
+        assert!((out.best.lengthscales[0] - 2.0).abs() < 1e-6, "{:?}", out.best);
+        for e in &out.trace {
+            assert!(e.hp.lengthscale >= 0.5 - 1e-9 && e.hp.lengthscale <= 2.0 + 1e-9);
+        }
+    }
+
+    #[test]
+    fn lbfgs_all_failures_error() {
+        let budget = OptimBudget { max_evals: 20, n_starts: 2, tol: 1e-6 };
+        let sbox = SearchBox::for_dim(2);
+        assert!(maximize_mll_lbfgs(|_| None, 2, true, &budget, &sbox).is_err());
+    }
+
+    #[test]
+    fn lbfgs_deterministic_across_thread_counts() {
+        let budget = OptimBudget { max_evals: 60, n_starts: 3, tol: 1e-8 };
+        let sbox = SearchBox::for_dim(2);
+        let run = || {
+            maximize_mll_lbfgs(grad_bowl(vec![0.7, 3.0], 0.02, true), 2, true, &budget, &sbox)
+                .unwrap()
+        };
+        let a = run();
+        crate::par::set_threads(4);
+        let b = run();
+        crate::par::set_threads(1);
+        let c = run();
+        for other in [&b, &c] {
+            for (x, y) in a.best.lengthscales.iter().zip(&other.best.lengthscales) {
+                assert_eq!(x.to_bits(), y.to_bits());
+            }
             assert_eq!(a.best.sigma2.to_bits(), other.best.sigma2.to_bits());
             assert_eq!(a.best_mll.to_bits(), other.best_mll.to_bits());
             assert_eq!(a.evals, other.evals);

@@ -1,7 +1,7 @@
 //! Model *learning*: hyperparameter selection strategies unified behind
 //! one train API.
 //!
-//! [`ModelSelection`] names the two strategies the repo supports:
+//! [`ModelSelection`] names the three strategies the repo supports:
 //!
 //! * `GridCv` — the paper's §5 protocol (k-fold CV over a grid), the old
 //!   `gp::cv` path. O(folds × grid) refits; works for every method
@@ -11,6 +11,11 @@
 //!   method's free lunch), closed Woodbury forms for the Nyström family,
 //!   driven by the multi-start Nelder–Mead in
 //!   [`crate::train::optimizer`].
+//! * `MllGrad` — the same evidence surfaces climbed with their analytic
+//!   gradients ([`crate::train::grad`]) by bounded L-BFGS; with
+//!   `ard: true` the optimizer learns one length scale **per input
+//!   dimension** and the final fit uses the matching
+//!   [`crate::kernels::ArdRbfKernel`].
 //!
 //! [`train_model`] = select hyperparameters + one final [`fit_model`];
 //! it backs both the `train` CLI subcommand and the coordinator's async
@@ -19,36 +24,58 @@
 use crate::data::dataset::Dataset;
 use crate::error::{Error, Result};
 use crate::experiments::methods::{cv_predict, Method};
-use crate::gp::cv::{default_grid, grid_search, HyperParams};
+use crate::gp::cv::{default_grid, grid_search, ArdHyperParams, HyperParams};
 use crate::gp::GpModel;
+use crate::kernels::Kernel;
+use crate::train::grad::mll_grad;
 use crate::train::mll::log_marginal_likelihood;
-use crate::train::optimizer::{maximize_mll, EvalRecord, OptimBudget, SearchBox};
+use crate::train::optimizer::{maximize_mll, maximize_mll_lbfgs, EvalRecord, OptimBudget, SearchBox};
 use crate::util::json::Json;
 use crate::util::timer::Timer;
 
-/// How to choose `(lengthscale, σ²)` before the final fit.
+/// How to choose the kernel hyperparameters before the final fit.
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub enum ModelSelection {
     /// k-fold cross-validation over the default grid (validation SMSE).
     GridCv { folds: usize },
-    /// Log-marginal-likelihood maximization (direct evidence).
+    /// Log-marginal-likelihood maximization (direct evidence),
+    /// derivative-free Nelder–Mead over `(lengthscale, σ²)`.
     Mll { budget: OptimBudget },
+    /// Evidence maximization with analytic gradients (bounded L-BFGS);
+    /// `ard` learns one length scale per input dimension.
+    MllGrad { budget: OptimBudget, ard: bool },
 }
 
 impl ModelSelection {
-    /// Parse a protocol/CLI name; `folds`/`budget` fill in the knobs.
-    pub fn parse(name: &str, folds: usize, budget: OptimBudget) -> Option<ModelSelection> {
-        match name.to_ascii_lowercase().as_str() {
-            "cv" | "gridcv" | "grid_cv" => Some(ModelSelection::GridCv { folds }),
-            "mll" | "ml" | "evidence" => Some(ModelSelection::Mll { budget }),
-            _ => None,
+    /// Parse a protocol/CLI name; `folds`/`budget`/`ard` fill in the
+    /// knobs. `ard = true` is only representable on the gradient-based
+    /// selection — any other name combined with it parses to `None`
+    /// rather than silently dropping the flag.
+    pub fn parse(
+        name: &str,
+        folds: usize,
+        budget: OptimBudget,
+        ard: bool,
+    ) -> Option<ModelSelection> {
+        let sel = match name.to_ascii_lowercase().as_str() {
+            "cv" | "gridcv" | "grid_cv" => ModelSelection::GridCv { folds },
+            "mll" | "ml" | "evidence" => ModelSelection::Mll { budget },
+            "mll-grad" | "mll_grad" | "mllgrad" | "grad" | "lbfgs" => {
+                ModelSelection::MllGrad { budget, ard }
+            }
+            _ => return None,
+        };
+        if ard && !matches!(sel, ModelSelection::MllGrad { .. }) {
+            return None;
         }
+        Some(sel)
     }
 
     pub fn label(&self) -> &'static str {
         match self {
             ModelSelection::GridCv { .. } => "cv",
             ModelSelection::Mll { .. } => "mll",
+            ModelSelection::MllGrad { .. } => "mll-grad",
         }
     }
 }
@@ -58,8 +85,12 @@ impl ModelSelection {
 pub struct TrainReport {
     pub method: Method,
     pub selection: &'static str,
+    /// Chosen isotropic pair; for an ARD run this is the
+    /// [`ArdHyperParams::tied`] summary (geometric-mean length scale).
     pub best: HyperParams,
-    /// Evidence at the chosen point (`Mll` path only).
+    /// Per-dimension length scales when the ARD path selected them.
+    pub lengthscales: Option<Vec<f64>>,
+    /// Evidence at the chosen point (`Mll`/`MllGrad` paths only).
     pub best_mll: Option<f64>,
     /// Mean validation SMSE at the chosen point (`GridCv` path only).
     pub cv_score: Option<f64>,
@@ -85,6 +116,9 @@ impl TrainReport {
                     .with("lengthscale", Json::Num(self.best.lengthscale))
                     .with("sigma2", Json::Num(self.best.sigma2)),
             );
+        if let Some(ells) = &self.lengthscales {
+            j.set("lengthscales", Json::from_f64_slice(ells));
+        }
         if let Some(m) = self.best_mll {
             j.set("best_mll", Json::Num(m));
         }
@@ -126,6 +160,7 @@ pub fn select_hyperparams(
                 method,
                 selection: "cv",
                 best: out.best,
+                lengthscales: None,
                 best_mll: None,
                 cv_score: Some(out.best_score),
                 evals: grid.len(),
@@ -151,6 +186,35 @@ pub fn select_hyperparams(
                 method,
                 selection: "mll",
                 best: out.best,
+                lengthscales: None,
+                best_mll: Some(out.best_mll),
+                cv_score: None,
+                evals: out.evals,
+                converged: out.converged,
+                trace: out.trace,
+                train_secs: t.elapsed_secs(),
+            })
+        }
+        ModelSelection::MllGrad { budget, ard } => {
+            if method == Method::Meka {
+                return Err(Error::Config(
+                    "MEKA has no marginal likelihood (spsd-ness lost); use selection=\"cv\"".into(),
+                ));
+            }
+            let sbox = SearchBox::for_dim(data.dim());
+            let tied = !*ard;
+            let out = maximize_mll_lbfgs(
+                |hp| mll_grad(method, data, hp, tied, k, seed).ok().map(|g| (g.mll, g.grad_vec())),
+                data.dim(),
+                *ard,
+                budget,
+                &sbox,
+            )?;
+            Ok(TrainReport {
+                method,
+                selection: "mll-grad",
+                best: out.best.tied(),
+                lengthscales: if *ard { Some(out.best.lengthscales.clone()) } else { None },
                 best_mll: Some(out.best_mll),
                 cv_score: None,
                 evals: out.evals,
@@ -163,6 +227,7 @@ pub fn select_hyperparams(
 }
 
 /// Select hyperparameters, then fit the final model at the chosen point.
+/// An ARD selection fits with the matching per-dimension kernel.
 pub fn train_model(
     method: Method,
     data: &Dataset,
@@ -172,14 +237,17 @@ pub fn train_model(
 ) -> Result<(Box<dyn GpModel>, TrainReport)> {
     let t = Timer::start();
     let mut report = select_hyperparams(method, data, selection, k, seed)?;
-    let model = fit_model(method, data, report.best, k, seed)?;
+    let model = match &report.lengthscales {
+        Some(ells) => fit_model_ard(method, data, ells, report.best.sigma2, k, seed)?,
+        None => fit_model(method, data, report.best, k, seed)?,
+    };
     report.train_secs = t.elapsed_secs();
     Ok((model, report))
 }
 
-/// Fit a model of the requested kind at explicit hyperparameters (shared
-/// by the CLI, the coordinator's `fit` op and the final step of
-/// [`train_model`]).
+/// Fit a model of the requested kind at explicit isotropic
+/// hyperparameters (shared by the CLI, the coordinator's `fit` op and
+/// the final step of [`train_model`]).
 pub fn fit_model(
     method: Method,
     data: &Dataset,
@@ -187,27 +255,57 @@ pub fn fit_model(
     k: usize,
     seed: u64,
 ) -> Result<Box<dyn GpModel>> {
+    let kern = crate::kernels::RbfKernel::new(hp.lengthscale);
+    fit_model_with_kernel(method, data, &kern, hp.sigma2, k, seed)
+}
+
+/// Fit with per-dimension (ARD) length scales.
+pub fn fit_model_ard(
+    method: Method,
+    data: &Dataset,
+    lengthscales: &[f64],
+    sigma2: f64,
+    k: usize,
+    seed: u64,
+) -> Result<Box<dyn GpModel>> {
+    let hp = ArdHyperParams { lengthscales: lengthscales.to_vec(), sigma2 };
+    if !hp.is_valid() || hp.dim() != data.dim() {
+        return Err(Error::Config(format!(
+            "fit_model_ard: invalid lengthscales for {}-dimensional data: {hp:?}",
+            data.dim()
+        )));
+    }
+    let kern = hp.kernel();
+    fit_model_with_kernel(method, data, &kern, sigma2, k, seed)
+}
+
+/// The kernel-generic fit every entry point reduces to.
+pub fn fit_model_with_kernel(
+    method: Method,
+    data: &Dataset,
+    kern: &dyn Kernel,
+    s2: f64,
+    k: usize,
+    seed: u64,
+) -> Result<Box<dyn GpModel>> {
     use crate::baselines::{Fitc, Meka, MekaConfig, Pitc, Sor};
     use crate::gp::full::FullGp;
     use crate::gp::mka_gp::MkaGp;
-    use crate::kernels::RbfKernel;
-    let kern = RbfKernel::new(hp.lengthscale);
-    let s2 = hp.sigma2;
     Ok(match method {
-        Method::Full => Box::new(FullGp::fit(data, &kern, s2)?),
-        Method::Sor => Box::new(Sor::fit(data, &kern, s2, k, seed)?),
-        Method::Fitc => Box::new(Fitc::fit(data, &kern, s2, k, seed)?),
+        Method::Full => Box::new(FullGp::fit(data, kern, s2)?),
+        Method::Sor => Box::new(Sor::fit(data, kern, s2, k, seed)?),
+        Method::Fitc => Box::new(Fitc::fit(data, kern, s2, k, seed)?),
         Method::Pitc => {
             let block = crate::experiments::methods::pitc_block_size(data.n(), k);
-            Box::new(Pitc::fit(data, &kern, s2, k, block, seed)?)
+            Box::new(Pitc::fit(data, kern, s2, k, block, seed)?)
         }
         Method::Meka => {
             let cfg = MekaConfig { rank: k, n_clusters: (k / 8).clamp(2, 8), sample_frac: 0.7, seed };
-            Box::new(Meka::fit(data, &kern, s2, &cfg)?)
+            Box::new(Meka::fit(data, kern, s2, &cfg)?)
         }
         Method::Mka => {
             let cfg = crate::experiments::methods::mka_config_for(k, data.n(), seed);
-            Box::new(MkaGp::fit(data, &kern, s2, &cfg)?)
+            Box::new(MkaGp::fit(data, kern, s2, &cfg)?)
         }
     })
 }
@@ -226,16 +324,28 @@ mod tests {
     fn parse_roundtrip() {
         let b = OptimBudget::default();
         assert_eq!(
-            ModelSelection::parse("cv", 3, b),
+            ModelSelection::parse("cv", 3, b, false),
             Some(ModelSelection::GridCv { folds: 3 })
         );
         assert_eq!(
-            ModelSelection::parse("MLL", 3, b),
+            ModelSelection::parse("MLL", 3, b, false),
             Some(ModelSelection::Mll { budget: b })
         );
-        assert_eq!(ModelSelection::parse("nope", 3, b), None);
+        assert_eq!(
+            ModelSelection::parse("mll-grad", 3, b, true),
+            Some(ModelSelection::MllGrad { budget: b, ard: true })
+        );
+        assert_eq!(
+            ModelSelection::parse("lbfgs", 3, b, false),
+            Some(ModelSelection::MllGrad { budget: b, ard: false })
+        );
+        assert_eq!(ModelSelection::parse("nope", 3, b, false), None);
+        // ard is only representable on the gradient path — never dropped
+        assert_eq!(ModelSelection::parse("mll", 3, b, true), None);
+        assert_eq!(ModelSelection::parse("cv", 3, b, true), None);
         assert_eq!(ModelSelection::GridCv { folds: 5 }.label(), "cv");
         assert_eq!(ModelSelection::Mll { budget: b }.label(), "mll");
+        assert_eq!(ModelSelection::MllGrad { budget: b, ard: true }.label(), "mll-grad");
     }
 
     #[test]
@@ -244,6 +354,40 @@ mod tests {
         let sel = ModelSelection::Mll { budget: tiny_budget() };
         let err = select_hyperparams(Method::Meka, &d, &sel, 8, 1);
         assert!(err.is_err());
+        let sel = ModelSelection::MllGrad { budget: tiny_budget(), ard: true };
+        assert!(select_hyperparams(Method::Meka, &d, &sel, 8, 1).is_err());
+    }
+
+    #[test]
+    fn lbfgs_training_produces_serving_model() {
+        let d = gp_dataset(&SynthSpec::named("t", 110, 2), 6);
+        let (tr, te) = d.split(0.85, 2);
+        let sel = ModelSelection::MllGrad { budget: tiny_budget(), ard: false };
+        let (model, report) = train_model(Method::Full, &tr, &sel, 8, 3).unwrap();
+        assert_eq!(report.selection, "mll-grad");
+        assert!(report.best_mll.unwrap().is_finite());
+        assert!(report.lengthscales.is_none(), "tied run must not report ARD scales");
+        assert!(report.evals >= 2 && !report.trace.is_empty());
+        let pred = model.predict(&te.x);
+        assert!(smse(&te.y, &pred.mean) < 1.0);
+    }
+
+    #[test]
+    fn ard_training_reports_per_dimension_lengthscales() {
+        let d = gp_dataset(&SynthSpec::named("t", 100, 3), 7);
+        let budget = OptimBudget { max_evals: 30, n_starts: 2, tol: 1e-4 };
+        let sel = ModelSelection::MllGrad { budget, ard: true };
+        let (model, report) = train_model(Method::Sor, &d, &sel, 10, 4).unwrap();
+        let ells = report.lengthscales.as_ref().expect("ARD lengthscales");
+        assert_eq!(ells.len(), 3);
+        assert!(ells.iter().all(|l| l.is_finite() && *l > 0.0));
+        // the tied summary is the geometric mean of the reported scales
+        let gm = (ells.iter().map(|l| l.ln()).sum::<f64>() / 3.0).exp();
+        assert!((report.best.lengthscale - gm).abs() < 1e-9);
+        // serialization carries the per-dimension scales
+        let j = report.to_json();
+        assert_eq!(j.get("lengthscales").unwrap().f64_array().unwrap().len(), 3);
+        assert_eq!(model.predict(&d.x).mean.len(), d.n());
     }
 
     #[test]

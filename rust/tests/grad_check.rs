@@ -1,0 +1,242 @@
+//! Gradient correctness: every analytic `mll_grad` against central finite
+//! differences of its own evidence value, the MKA Hutchinson probe
+//! against its exact dense-trace path, bit-determinism of the probe
+//! across thread counts, and planted anisotropic-lengthscale recovery via
+//! ARD L-BFGS (which the isotropic parametrization cannot represent).
+
+use mka_gp::data::dataset::Dataset;
+use mka_gp::data::synth::{gp_dataset, SynthSpec};
+use mka_gp::experiments::methods::{mka_config_for, Method};
+use mka_gp::gp::cv::ArdHyperParams;
+use mka_gp::kernels::{ArdRbfKernel, Kernel};
+use mka_gp::la::chol::Chol;
+use mka_gp::la::dense::Mat;
+use mka_gp::train::grad::{
+    mll_grad, mll_grad_fitc, mll_grad_full, mll_grad_mka, mll_grad_pitc, mll_grad_sor, MllGrad,
+    TraceMode,
+};
+use mka_gp::train::{maximize_mll, maximize_mll_lbfgs, OptimBudget, SearchBox};
+use mka_gp::util::Rng;
+
+fn data() -> Dataset {
+    gp_dataset(&SynthSpec::named("fd", 80, 2), 3)
+}
+
+fn hp() -> ArdHyperParams {
+    // Deliberately away from any optimum so every gradient component is
+    // well off zero and the relative comparison is meaningful.
+    ArdHyperParams { lengthscales: vec![0.9, 1.6], sigma2: 0.08 }
+}
+
+/// Shift parameter `p` (last = log σ²) of `hp` by `dir·h` in log space;
+/// in tied mode the single length-scale parameter drives every dimension.
+fn shifted(hp: &ArdHyperParams, tied: bool, p: usize, dir: f64, h: f64) -> ArdHyperParams {
+    let mut s = hp.clone();
+    let n_ell = if tied { 1 } else { s.lengthscales.len() };
+    if p < n_ell {
+        if tied {
+            for l in &mut s.lengthscales {
+                *l *= (dir * h).exp();
+            }
+        } else {
+            s.lengthscales[p] *= (dir * h).exp();
+        }
+    } else {
+        s.sigma2 *= (dir * h).exp();
+    }
+    s
+}
+
+/// Assert the analytic gradient matches central finite differences of the
+/// evaluator's own value: |analytic − fd| ≤ 1e-5 · max(10, ‖fd‖∞)
+/// per component (the paper-check tolerance, relative to the gradient
+/// scale with a floor keeping FD roundoff out of the comparison).
+fn assert_matches_fd(eval: &dyn Fn(&ArdHyperParams) -> MllGrad, hp: &ArdHyperParams, tied: bool) {
+    let h = 1e-4;
+    let g = eval(hp);
+    let analytic = g.grad_vec();
+    let fd: Vec<f64> = (0..analytic.len())
+        .map(|p| {
+            (eval(&shifted(hp, tied, p, 1.0, h)).mll - eval(&shifted(hp, tied, p, -1.0, h)).mll)
+                / (2.0 * h)
+        })
+        .collect();
+    let scale = fd.iter().fold(10.0f64, |m, v| m.max(v.abs()));
+    for (p, (&a, &f)) in analytic.iter().zip(&fd).enumerate() {
+        assert!(
+            (a - f).abs() <= 1e-5 * scale,
+            "tied={tied} param {p}: analytic {a} vs central-difference {f} (scale {scale})"
+        );
+    }
+}
+
+#[test]
+fn full_gradient_matches_central_differences() {
+    let d = data();
+    for tied in [true, false] {
+        assert_matches_fd(&|h| mll_grad_full(&d, h, tied).unwrap(), &hp(), tied);
+    }
+}
+
+#[test]
+fn sor_gradient_matches_central_differences() {
+    let d = data();
+    for tied in [true, false] {
+        assert_matches_fd(&|h| mll_grad_sor(&d, h, tied, 10, 5).unwrap(), &hp(), tied);
+    }
+}
+
+#[test]
+fn fitc_gradient_matches_central_differences() {
+    let d = data();
+    for tied in [true, false] {
+        assert_matches_fd(&|h| mll_grad_fitc(&d, h, tied, 10, 5).unwrap(), &hp(), tied);
+    }
+}
+
+#[test]
+fn pitc_gradient_matches_central_differences() {
+    let d = data();
+    for tied in [true, false] {
+        assert_matches_fd(&|h| mll_grad_pitc(&d, h, tied, 10, 16, 5).unwrap(), &hp(), tied);
+    }
+}
+
+/// With d_core ≥ n the factorization stores K + σ²I exactly, so the
+/// MKA gradient with the exact dense-trace path must reproduce the Full
+/// gradient — a non-stochastic end-to-end check of the cascade trace.
+#[test]
+fn mka_exact_trace_matches_full_gradient_without_compression() {
+    let d = gp_dataset(&SynthSpec::named("fdm", 60, 2), 4);
+    let hp = hp();
+    let mut cfg = mka_config_for(16, d.n(), 5);
+    cfg.d_core = d.n(); // no compression
+    let mka = mll_grad_mka(&d, &hp, false, &cfg, TraceMode::Exact, 1).unwrap();
+    let full = mll_grad_full(&d, &hp, false).unwrap();
+    assert!(
+        (mka.mll - full.mll).abs() < 1e-7 * full.mll.abs().max(1.0),
+        "mll: mka {} vs full {}",
+        mka.mll,
+        full.mll
+    );
+    let (a, b) = (mka.grad_vec(), full.grad_vec());
+    let scale = b.iter().fold(1.0f64, |m, v| m.max(v.abs()));
+    for (p, (x, y)) in a.iter().zip(&b).enumerate() {
+        assert!((x - y).abs() <= 1e-6 * scale, "param {p}: mka {x} vs full {y}");
+    }
+}
+
+/// Under real compression the fixed-seed Hutchinson probe batch must land
+/// near the exact dense trace — the estimator's whole job.
+#[test]
+fn mka_probe_tracks_exact_trace_under_compression() {
+    let d = gp_dataset(&SynthSpec::named("fdm", 60, 2), 4);
+    let hp = hp();
+    let cfg = mka_config_for(16, d.n(), 5);
+    let exact = mll_grad_mka(&d, &hp, false, &cfg, TraceMode::Exact, 1).unwrap();
+    let probe = mll_grad_mka(&d, &hp, false, &cfg, TraceMode::Probes(256), 99).unwrap();
+    // The probe never touches the value or the (spectrum-exact) σ² term.
+    assert_eq!(probe.mll.to_bits(), exact.mll.to_bits());
+    assert_eq!(probe.d_log_sigma2.to_bits(), exact.d_log_sigma2.to_bits());
+    let scale = exact.d_log_ell.iter().fold(10.0f64, |m, v| m.max(v.abs()));
+    for (p, (a, e)) in probe.d_log_ell.iter().zip(&exact.d_log_ell).enumerate() {
+        assert!(
+            (a - e).abs() <= 0.5 * scale,
+            "param {p}: probe {a} vs exact {e} (scale {scale})"
+        );
+    }
+}
+
+/// The probe rides one `solve_mat_par` cascade: bit-identical at any
+/// thread count (the PR-2 determinism contract extended to training).
+#[test]
+fn mka_gradient_bit_deterministic_across_thread_counts() {
+    let d = gp_dataset(&SynthSpec::named("fdm", 70, 2), 6);
+    let hp = hp();
+    let run = || mll_grad(Method::Mka, &d, &hp, false, 12, 7).unwrap();
+    let a = run();
+    mka_gp::par::set_threads(4);
+    let b = run();
+    mka_gp::par::set_threads(2);
+    let c = run();
+    mka_gp::par::set_threads(1);
+    let e = run();
+    for other in [&b, &c, &e] {
+        assert_eq!(a.mll.to_bits(), other.mll.to_bits());
+        assert_eq!(a.d_log_sigma2.to_bits(), other.d_log_sigma2.to_bits());
+        for (x, y) in a.d_log_ell.iter().zip(&other.d_log_ell) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
+    }
+}
+
+/// Plant strongly anisotropic per-dimension length scales, then show the
+/// ARD L-BFGS path recovers them while the isotropic parametrization —
+/// by construction — can only land in between, at measurably lower
+/// evidence.
+#[test]
+fn ard_lbfgs_recovers_planted_anisotropic_lengthscales() {
+    let (ell_short, ell_long) = (0.4, 4.0);
+    let n = 110;
+    let mut rng = Rng::new(17);
+    let x = Mat::from_fn(n, 2, |_, _| rng.normal());
+    let kern = ArdRbfKernel::new(vec![ell_short, ell_long]);
+    let kf = kern.gram_sym(&x);
+    let (chol, _) = Chol::new_jittered(&kf, 12).unwrap();
+    // f ~ GP(0, K): f = L ε; observe y = f + 0.1·N(0,1).
+    let eps = rng.normal_vec(n);
+    let mut y = vec![0.0; n];
+    for i in 0..n {
+        let mut s = 0.0;
+        for j in 0..=i {
+            s += chol.l.at(i, j) * eps[j];
+        }
+        y[i] = s + 0.1 * rng.normal();
+    }
+    let d = Dataset::new("ard-planted", x, y);
+
+    let sbox = SearchBox::for_dim(2);
+    let budget = OptimBudget { max_evals: 90, n_starts: 3, tol: 1e-6 };
+    let ard = maximize_mll_lbfgs(
+        |h| mll_grad_full(&d, h, false).ok().map(|g| (g.mll, g.grad_vec())),
+        2,
+        true,
+        &budget,
+        &sbox,
+    )
+    .unwrap();
+    let (l0, l1) = (ard.best.lengthscales[0], ard.best.lengthscales[1]);
+    assert!(l0 < l1, "anisotropy direction lost: {:?}", ard.best);
+    assert!(l1 / l0 >= 3.0, "planted ratio 10 collapsed to {}", l1 / l0);
+    assert!(
+        (l0.ln() - ell_short.ln()).abs() < 0.8,
+        "short scale {l0} vs planted {ell_short}"
+    );
+    assert!(
+        (l1.ln() - ell_long.ln()).abs() < 1.2,
+        "long scale {l1} vs planted {ell_long}"
+    );
+
+    // The derivative-free isotropic path on the same surface: one tied ℓ
+    // must compromise between the planted scales and pay in evidence.
+    let iso = maximize_mll(
+        |h| {
+            mka_gp::train::log_marginal_likelihood(Method::Full, &d, h, 8, 7).ok()
+        },
+        2,
+        &OptimBudget { max_evals: 90, n_starts: 3, tol: 1e-6 },
+        &sbox,
+    )
+    .unwrap();
+    assert!(
+        ard.best_mll > iso.best_mll + 2.0,
+        "ARD evidence {} should clearly beat isotropic {}",
+        ard.best_mll,
+        iso.best_mll
+    );
+    assert!(
+        iso.best.lengthscale > 0.8 * l0 && iso.best.lengthscale < 1.2 * l1,
+        "isotropic compromise {} not between ARD scales ({l0}, {l1})",
+        iso.best.lengthscale
+    );
+}

@@ -1,0 +1,112 @@
+//! Keeps `docs/PROTOCOL.md` honest: every fenced example tagged
+//! `json request` is parsed and routed through a live [`Router`] in
+//! document order (examples share state, exactly like a client session),
+//! and must come back `"ok": true`; blocks tagged `json request-error`
+//! must come back `"ok": false`. Untagged/`json response` blocks are
+//! illustrative and skipped — but still must parse as JSON.
+
+use mka_gp::coordinator::{Router, ServiceConfig};
+use mka_gp::util::Json;
+
+const DOC: &str = include_str!("../../docs/PROTOCOL.md");
+
+#[derive(Debug, PartialEq, Eq, Clone, Copy)]
+enum BlockKind {
+    Request,
+    RequestError,
+    Other,
+}
+
+/// Extract every ```json fenced block with its tag.
+fn json_blocks(doc: &str) -> Vec<(BlockKind, String)> {
+    let mut blocks = Vec::new();
+    let mut current: Option<(BlockKind, Vec<&str>)> = None;
+    for line in doc.lines() {
+        let trimmed = line.trim_end();
+        match &mut current {
+            None => {
+                if let Some(info) = trimmed.strip_prefix("```") {
+                    let info = info.trim();
+                    if info.starts_with("json") {
+                        let kind = match info {
+                            "json request" => BlockKind::Request,
+                            "json request-error" => BlockKind::RequestError,
+                            _ => BlockKind::Other,
+                        };
+                        current = Some((kind, Vec::new()));
+                    } else if !info.is_empty() {
+                        // a non-json fence: skip until it closes
+                        current = Some((BlockKind::Other, Vec::new()));
+                    }
+                }
+            }
+            Some((kind, lines)) => {
+                if trimmed == "```" {
+                    blocks.push((*kind, lines.join("\n")));
+                    current = None;
+                } else {
+                    lines.push(line);
+                }
+            }
+        }
+    }
+    assert!(current.is_none(), "unterminated fenced block in PROTOCOL.md");
+    blocks
+}
+
+#[test]
+fn every_documented_example_routes_as_documented() {
+    let blocks = json_blocks(DOC);
+    let requests: Vec<&(BlockKind, String)> =
+        blocks.iter().filter(|(k, _)| *k != BlockKind::Other).collect();
+    assert!(
+        requests.len() >= 12,
+        "PROTOCOL.md should document a full session, found {} routable examples",
+        requests.len()
+    );
+
+    let cfg = ServiceConfig { batch_window_ms: 0, n_workers: 2, ..Default::default() };
+    let router = Router::new(cfg);
+    for (i, (kind, text)) in requests.iter().enumerate() {
+        let req = Json::parse(text)
+            .unwrap_or_else(|e| panic!("example {i} is not valid JSON ({e:?}):\n{text}"));
+        assert!(req.str_field("op").is_some(), "example {i} has no op:\n{text}");
+        let resp = router.handle(&req);
+        let ok = resp.get("ok") == Some(&Json::Bool(true));
+        match kind {
+            BlockKind::Request => assert!(
+                ok,
+                "documented request {i} failed to route:\n{text}\n→ {}",
+                resp.dump()
+            ),
+            BlockKind::RequestError => assert!(
+                !ok,
+                "documented error example {i} unexpectedly succeeded:\n{text}\n→ {}",
+                resp.dump()
+            ),
+            BlockKind::Other => unreachable!(),
+        }
+    }
+}
+
+#[test]
+fn every_json_block_parses_even_the_illustrative_ones() {
+    for (i, (_, text)) in json_blocks(DOC).iter().enumerate() {
+        Json::parse(text).unwrap_or_else(|e| {
+            panic!("PROTOCOL.md json block {i} does not parse ({e:?}):\n{text}")
+        });
+    }
+}
+
+#[test]
+fn document_covers_every_router_op() {
+    // The op list lives next to the router's dispatch match
+    // (`router::OPS`); every op it advertises must be documented, so a
+    // new op registered there without documentation fails here.
+    for op in mka_gp::coordinator::router::OPS {
+        assert!(
+            DOC.contains(&format!("`{op}`")),
+            "PROTOCOL.md does not document op {op:?}"
+        );
+    }
+}

@@ -188,6 +188,68 @@ fn optimizer_recovers_planted_hyperparams() {
 }
 
 #[test]
+fn coordinator_ard_train_job_lifecycle() {
+    // The gradient path end-to-end: async {"op":"train"} with
+    // "selection": "mll-grad", "ard": true learns per-dimension length
+    // scales, surfaces them in the job detail, and publishes a serving
+    // model fitted with the ARD kernel.
+    let cfg = ServiceConfig { batch_window_ms: 0, n_workers: 2, ..Default::default() };
+    let r = Router::new(cfg);
+    let data = gp_dataset(&SynthSpec::named("coord-ard", 90, 2), 8);
+    let n = data.n();
+    let x: Vec<Json> = (0..n).map(|i| Json::from_f64_slice(data.x.row(i))).collect();
+    let req = Json::obj()
+        .with("op", Json::Str("train".into()))
+        .with("model", Json::Str("m-ard".into()))
+        .with("method", Json::Str("sor".into()))
+        .with("x", Json::Arr(x))
+        .with("y", Json::from_f64_slice(&data.y))
+        .with("selection", Json::Str("mll-grad".into()))
+        .with("ard", Json::Bool(true))
+        .with(
+            "budget",
+            Json::obj().with("max_evals", Json::Num(20.0)).with("n_starts", Json::Num(2.0)),
+        )
+        .with("params", Json::obj().with("k", Json::Num(10.0)));
+    let resp = r.handle(&req);
+    assert_eq!(resp.get("ok"), Some(&Json::Bool(true)), "{resp:?}");
+    let job_id = resp.usize_field("job_id").expect("job_id") as u64;
+
+    let mut done_json = None;
+    for _ in 0..600 {
+        let poll = r.handle(
+            &Json::obj()
+                .with("op", Json::Str("job".into()))
+                .with("job_id", Json::Num(job_id as f64)),
+        );
+        match poll.str_field("state") {
+            Some("done") => {
+                done_json = Some(poll);
+                break;
+            }
+            Some("failed") => panic!("ARD train job failed: {poll:?}"),
+            _ => std::thread::sleep(std::time::Duration::from_millis(25)),
+        }
+    }
+    let done = done_json.expect("ARD train job never finished");
+    let train = done.get("train").expect("train detail");
+    assert_eq!(train.str_field("selection"), Some("mll-grad"));
+    let ells = train.get("lengthscales").expect("per-dimension scales").f64_array().unwrap();
+    assert_eq!(ells.len(), 2);
+    assert!(ells.iter().all(|l| l.is_finite() && *l > 0.0));
+    assert!(train.num_field("best_mll").unwrap().is_finite());
+
+    let pred = r.handle(
+        &Json::obj()
+            .with("op", Json::Str("predict".into()))
+            .with("model", Json::Str("m-ard".into()))
+            .with("x", Json::Arr(vec![Json::from_f64_slice(&[0.2, -0.1])])),
+    );
+    assert_eq!(pred.get("ok"), Some(&Json::Bool(true)), "{pred:?}");
+    assert_eq!(pred.get("mean").unwrap().f64_array().unwrap().len(), 1);
+}
+
+#[test]
 fn coordinator_train_job_lifecycle() {
     let cfg = ServiceConfig { batch_window_ms: 0, n_workers: 2, ..Default::default() };
     let r = Router::new(cfg);
