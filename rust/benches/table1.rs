@@ -5,7 +5,8 @@
 //! Default run caps dataset sizes so the table completes in minutes on one
 //! core; `--full` lifts the caps to the paper's exact sizes.
 //!
-//!     cargo bench --bench table1 [-- --full --max-n 2048 --datasets housing,wine]
+//!     cargo bench --bench table1 [-- --full --max-n 2048 --datasets housing,wine
+//!                                   --selection cv|mll|mll-grad]
 
 use mka_gp::experiments::table1::{format_rows, run_table, Table1Config};
 use mka_gp::util::{Args, Timer};
@@ -22,6 +23,7 @@ fn main() {
     cfg.max_n = args.get_usize("max-n", cfg.max_n);
     cfg.repeats = args.get_usize("repeats", cfg.repeats);
     cfg.seed = args.get_u64("seed", cfg.seed);
+    cfg.selection = args.get_or("selection", "cv").to_string();
     let only_arg = args.get("datasets").map(|s| s.split(',').collect::<Vec<_>>());
 
     println!("=== Table 1: Regression results, SMSE(MNLP) ===");

@@ -4,6 +4,12 @@
 //! For MKA-GP this is not just a throughput trick — the §4.1 predictor
 //! factorizes the joint train/test kernel once per *batch*, so b requests
 //! of p points each cost one factorization instead of b.
+//!
+//! The queue is **bounded** (`ServiceConfig.batch_queue_max`): a
+//! submission that would grow the pending set past the bound is rejected
+//! immediately with [`Error::Busy`] — the router surfaces it as a typed
+//! `"busy": true` response — instead of queueing unbounded work behind a
+//! slow model and amplifying the overload.
 
 use std::sync::mpsc;
 use std::sync::{Arc, Condvar, Mutex};
@@ -27,9 +33,11 @@ struct Queue {
     shutdown: bool,
 }
 
-/// The batcher: owns a flusher thread.
+/// The batcher: owns a flusher thread and a bounded pending queue.
 pub struct PredictBatcher {
     queue: Arc<(Mutex<Queue>, Condvar)>,
+    metrics: Arc<Metrics>,
+    queue_max: usize,
     worker: Option<std::thread::JoinHandle<()>>,
 }
 
@@ -39,23 +47,34 @@ impl PredictBatcher {
         metrics: Arc<Metrics>,
         window: Duration,
         max_batch: usize,
+        queue_max: usize,
     ) -> PredictBatcher {
         let queue: Arc<(Mutex<Queue>, Condvar)> = Arc::new(Default::default());
         let q2 = Arc::clone(&queue);
+        let m2 = Arc::clone(&metrics);
         let worker = std::thread::Builder::new()
             .name("predict-batcher".into())
-            .spawn(move || flusher(q2, registry, metrics, window, max_batch))
+            .spawn(move || flusher(q2, registry, m2, window, max_batch))
             .expect("spawn batcher");
-        PredictBatcher { queue, worker: Some(worker) }
+        PredictBatcher { queue, metrics, queue_max: queue_max.max(1), worker: Some(worker) }
     }
 
     /// Enqueue a prediction; the result arrives on the returned receiver.
+    /// When the pending queue is at `queue_max`, the request is rejected
+    /// immediately with [`Error::Busy`] (backpressure) rather than queued.
     pub fn submit(&self, model: &str, x: Mat) -> mpsc::Receiver<Result<Prediction>> {
         let (tx, rx) = mpsc::channel();
         let (lock, cv) = &*self.queue;
         let mut q = lock.lock().unwrap();
         if q.shutdown {
             let _ = tx.send(Err(Error::Coordinator("batcher shut down".into())));
+        } else if q.items.len() >= self.queue_max {
+            self.metrics.incr("predict_rejected", 1);
+            let _ = tx.send(Err(Error::Busy(format!(
+                "predict queue full ({} pending, bound {}); retry later",
+                q.items.len(),
+                self.queue_max
+            ))));
         } else {
             q.items.push(Pending { model: model.to_string(), x, resp: tx });
             cv.notify_one();
@@ -202,6 +221,13 @@ mod tests {
     }
 
     fn setup(window_ms: u64) -> (PredictBatcher, Arc<Mutex<Vec<usize>>>) {
+        setup_bounded(window_ms, 1024)
+    }
+
+    fn setup_bounded(
+        window_ms: u64,
+        queue_max: usize,
+    ) -> (PredictBatcher, Arc<Mutex<Vec<usize>>>) {
         let reg = ModelRegistry::new();
         let calls = Arc::new(Mutex::new(Vec::new()));
         reg.publish("m", Arc::new(RecordingModel { calls: Arc::clone(&calls) }));
@@ -210,6 +236,7 @@ mod tests {
             Arc::new(Metrics::new()),
             Duration::from_millis(window_ms),
             64,
+            queue_max,
         );
         (b, calls)
     }
@@ -258,6 +285,28 @@ mod tests {
         // one of the two dims wins the batch; the other errors out —
         // exactly one Ok and one Err regardless of arrival order.
         assert!(ok.is_ok() != bad.is_ok() || (ok.is_ok() && bad.is_err()));
+    }
+
+    /// Regression (backpressure): submissions beyond `queue_max` must be
+    /// rejected immediately with the typed busy error, while everything
+    /// already queued is still answered. A long window keeps the flusher
+    /// parked so the pending set is deterministic.
+    #[test]
+    fn backpressure_rejects_when_queue_full() {
+        let (b, calls) = setup_bounded(10_000, 2);
+        let rx1 = b.submit("m", Mat::from_rows(&[&[1.0, 1.0]]));
+        let rx2 = b.submit("m", Mat::from_rows(&[&[2.0, 2.0]]));
+        // Third submission exceeds the bound: rejected without waiting.
+        let rx3 = b.submit("m", Mat::from_rows(&[&[3.0, 3.0]]));
+        match rx3.recv().expect("rejection must be delivered") {
+            Err(Error::Busy(msg)) => assert!(msg.contains("queue full"), "{msg}"),
+            other => panic!("expected Busy rejection, got {other:?}"),
+        }
+        // Shutdown flushes the two accepted requests (window cut short).
+        drop(b);
+        assert_eq!(rx1.recv().unwrap().unwrap().mean, vec![2.0]);
+        assert_eq!(rx2.recv().unwrap().unwrap().mean, vec![4.0]);
+        assert_eq!(calls.lock().unwrap().iter().sum::<usize>(), 2);
     }
 
     #[test]

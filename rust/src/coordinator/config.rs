@@ -26,6 +26,10 @@ pub struct ServiceConfig {
     /// Prediction batcher window (milliseconds) and max batch size.
     pub batch_window_ms: u64,
     pub max_batch: usize,
+    /// Backpressure bound: at most this many predict requests may sit in
+    /// the batcher queue; submissions beyond it are rejected immediately
+    /// with a typed busy error instead of growing the queue without limit.
+    pub batch_queue_max: usize,
     /// Default MKA parameters for fit requests that don't override them.
     pub d_core: usize,
     pub block_size: usize,
@@ -37,6 +41,11 @@ pub struct ServiceConfig {
     /// total MLL evaluations and Nelder–Mead restarts.
     pub train_max_evals: usize,
     pub train_starts: usize,
+    /// Per-training-run factor-cache capacity (LRU entries per family):
+    /// the σ²-independent halves of evidence evaluations — noise-free
+    /// MKA factorizations, Nyström blocks — kept per length scale so
+    /// σ²-only optimizer moves cost zero factorizations. 0 disables.
+    pub train_cache_factors: usize,
 }
 
 impl Default for ServiceConfig {
@@ -49,6 +58,7 @@ impl Default for ServiceConfig {
             artifacts_dir: None,
             batch_window_ms: 5,
             max_batch: 64,
+            batch_queue_max: 1024,
             d_core: 64,
             block_size: 256,
             gamma: 0.5,
@@ -57,6 +67,7 @@ impl Default for ServiceConfig {
             seed: 42,
             train_max_evals: 60,
             train_starts: 3,
+            train_cache_factors: 4,
         }
     }
 }
@@ -76,6 +87,7 @@ impl ServiceConfig {
                 }
                 "batch_window_ms" => self.batch_window_ms = parse(k, v)?,
                 "max_batch" => self.max_batch = parse(k, v)?,
+                "batch_queue_max" => self.batch_queue_max = parse(k, v)?,
                 "d_core" => self.d_core = parse(k, v)?,
                 "block_size" => self.block_size = parse(k, v)?,
                 "gamma" => self.gamma = parse(k, v)?,
@@ -84,6 +96,7 @@ impl ServiceConfig {
                 "seed" => self.seed = parse(k, v)?,
                 "train_max_evals" => self.train_max_evals = parse(k, v)?,
                 "train_starts" => self.train_starts = parse(k, v)?,
+                "train_cache_factors" => self.train_cache_factors = parse(k, v)?,
                 _ => {} // unknown keys ignored (forward compatible)
             }
         }
@@ -128,6 +141,9 @@ impl ServiceConfig {
         if self.n_workers == 0 || self.max_batch == 0 {
             return Err(Error::Config("n_workers and max_batch must be >= 1".into()));
         }
+        if self.batch_queue_max == 0 {
+            return Err(Error::Config("batch_queue_max must be >= 1".into()));
+        }
         if self.train_max_evals == 0 || self.train_starts == 0 {
             return Err(Error::Config("train_max_evals and train_starts must be >= 1".into()));
         }
@@ -170,6 +186,8 @@ impl ServiceConfig {
             .with("cluster", Json::Str(self.cluster.clone()))
             .with("train_max_evals", Json::Num(self.train_max_evals as f64))
             .with("train_starts", Json::Num(self.train_starts as f64))
+            .with("train_cache_factors", Json::Num(self.train_cache_factors as f64))
+            .with("batch_queue_max", Json::Num(self.batch_queue_max as f64))
     }
 }
 
@@ -195,13 +213,21 @@ mod tests {
         kv.insert("compressor".to_string(), "spca".to_string());
         kv.insert("train_max_evals".to_string(), "25".to_string());
         kv.insert("train_starts".to_string(), "2".to_string());
+        kv.insert("train_cache_factors".to_string(), "8".to_string());
+        kv.insert("batch_queue_max".to_string(), "16".to_string());
         kv.insert("unknown_key".to_string(), "ignored".to_string());
         c.apply(&kv).unwrap();
         assert_eq!(c.port, 9999);
         assert_eq!(c.gamma, 0.7);
         assert_eq!(c.train_max_evals, 25);
         assert_eq!(c.train_starts, 2);
+        assert_eq!(c.train_cache_factors, 8);
+        assert_eq!(c.batch_queue_max, 16);
         assert_eq!(c.mka_config().compressor, CompressorKind::Spca);
+        // a queue bound of zero would deadlock every predict — rejected
+        let mut kv3 = BTreeMap::new();
+        kv3.insert("batch_queue_max".to_string(), "0".to_string());
+        assert!(c.apply(&kv3).is_err());
     }
 
     #[test]

@@ -18,6 +18,10 @@
 //!                                      completion
 //!   {"op": "job", "job_id": 1}       — train jobs carry the eval trace
 //!   {"op": "predict", "model": "m1", "x": [[...]...]}
+//!   {"op": "retune", "model": "m1", "sigma2": 0.05}
+//!                                    — republish at a new noise level via
+//!                                      the σ² spectrum shift (no refit
+//!                                      job, no refactorization)
 //!   {"op": "models"} | {"op": "drop_model", "model": "m1"}
 //!   {"op": "metrics"} | {"op": "config"}
 
@@ -48,8 +52,18 @@ pub use crate::train::trainer::fit_model;
 /// every entry here to be documented in `docs/PROTOCOL.md`, and the
 /// unknown-op error below advertises this list, so a new match arm
 /// without an `OPS` entry is visible immediately.
-pub const OPS: &[&str] =
-    &["ping", "fit", "train", "job", "predict", "models", "drop_model", "metrics", "config"];
+pub const OPS: &[&str] = &[
+    "ping",
+    "fit",
+    "train",
+    "job",
+    "predict",
+    "retune",
+    "models",
+    "drop_model",
+    "metrics",
+    "config",
+];
 
 /// Shared coordinator state + dispatch.
 pub struct Router {
@@ -66,6 +80,9 @@ impl Router {
         // Size the shared compute pool from the service config so fits
         // and batched predicts saturate the configured parallelism.
         crate::par::set_threads(config.resolved_threads());
+        // Size the per-training-run factor cache (σ²-independent factor
+        // builds memoized per length scale).
+        crate::train::cache::set_default_capacity(config.train_cache_factors);
         let metrics = Arc::new(Metrics::new());
         let registry = ModelRegistry::new();
         let batcher = PredictBatcher::start(
@@ -73,6 +90,7 @@ impl Router {
             Arc::clone(&metrics),
             Duration::from_millis(config.batch_window_ms),
             config.max_batch,
+            config.batch_queue_max,
         );
         let pool = WorkerPool::new(config.n_workers);
         Router { config, metrics, registry, jobs: Arc::new(JobStore::new()), pool, batcher }
@@ -89,6 +107,7 @@ impl Router {
             "train" => self.handle_train(req),
             "job" => self.handle_job(req),
             "predict" => self.handle_predict(req),
+            "retune" => self.handle_retune(req),
             "models" => Ok(Json::obj().with(
                 "models",
                 Json::Arr(self.registry.names().into_iter().map(Json::Str).collect()),
@@ -99,12 +118,22 @@ impl Router {
             }
             "metrics" => {
                 // Registry counters/histograms plus the compute-plane
-                // observables: logical cascade count and pool utilization.
+                // observables: logical cascade count, full factorization
+                // count, factor-cache traffic and pool utilization.
                 let mut snap = self.metrics.snapshot();
                 snap.set(
                     "compute",
                     Json::obj()
                         .with("cascades", Json::Num(crate::mka::cascade_count() as f64))
+                        .with("factorizes", Json::Num(crate::mka::factorize_count() as f64))
+                        .with(
+                            "factor_cache_hits",
+                            Json::Num(crate::train::cache::factor_cache_hits() as f64),
+                        )
+                        .with(
+                            "factor_cache_misses",
+                            Json::Num(crate::train::cache::factor_cache_misses() as f64),
+                        )
                         .with("pool_threads", Json::Num(crate::par::threads() as f64))
                         .with("pool_workers", Json::Num(crate::par::pool_workers() as f64))
                         .with("pool_jobs", Json::Num(crate::par::jobs_executed() as f64)),
@@ -120,10 +149,22 @@ impl Router {
                 j
             }
             Err(e) => {
-                self.metrics.incr("errors", 1);
-                Json::obj()
+                // Typed backpressure: a Busy rejection is shed load, not
+                // a failure — it carries "busy": true for clients to back
+                // off on, counts into `predict_rejected` (batcher side)
+                // and stays OUT of the `errors` counter operators alert
+                // on.
+                let busy = matches!(e, Error::Busy(_));
+                if !busy {
+                    self.metrics.incr("errors", 1);
+                }
+                let mut j = Json::obj()
                     .with("ok", Json::Bool(false))
-                    .with("error", Json::Str(format!("{e}")))
+                    .with("error", Json::Str(format!("{e}")));
+                if busy {
+                    j.set("busy", Json::Bool(true));
+                }
+                j
             }
         }
     }
@@ -314,6 +355,44 @@ impl Router {
             .with("mean", Json::from_f64_slice(&pred.mean))
             .with("var", Json::from_f64_slice(&pred.var)))
     }
+
+    /// Republish a registry model at a new noise level σ² — a spectrum
+    /// re-tune through [`crate::gp::GpModel::with_noise`], not a refit
+    /// job: for MKA the stored factorization's rotations are shared and
+    /// only the shift changes, so this is O(1) work and synchronous.
+    /// Models whose method cannot re-tune noise cheaply answer with a
+    /// protocol error directing the caller to `fit`/`train`.
+    fn handle_retune(&self, req: &Json) -> Result<Json> {
+        let name = req
+            .str_field("model")
+            .ok_or_else(|| Error::Protocol("retune: missing model".into()))?;
+        let sigma2 = req
+            .num_field("sigma2")
+            .ok_or_else(|| Error::Protocol("retune: missing sigma2".into()))?;
+        if !(sigma2.is_finite() && sigma2 > 0.0) {
+            return Err(Error::Protocol(format!(
+                "retune: sigma2 must be finite and > 0, got {sigma2}"
+            )));
+        }
+        let model = self
+            .registry
+            .get(name)
+            .ok_or_else(|| Error::Coordinator(format!("no model {name}")))?;
+        let t = Timer::start();
+        let retuned = model.with_noise(sigma2).ok_or_else(|| {
+            Error::Protocol(format!(
+                "retune: model {name:?} ({}) does not support noise re-tuning; \
+                 use fit/train to rebuild it at the new sigma2",
+                model.name()
+            ))
+        })?;
+        self.registry.publish(name, retuned.into());
+        self.metrics.incr("retunes", 1);
+        self.metrics.observe("retune_secs", t.elapsed_secs());
+        Ok(Json::obj()
+            .with("model", Json::Str(name.to_string()))
+            .with("sigma2", Json::Num(sigma2)))
+    }
 }
 
 /// Human-readable label for a contained job panic.
@@ -327,12 +406,18 @@ fn panic_label(p: Box<dyn std::any::Any + Send>) -> String {
     }
 }
 
-/// Surface `train.{evals,best_mll,secs}` observables (plus the `trains`
-/// counter) in the `metrics` op's snapshot.
+/// Surface `train.{evals,factorizations,best_mll,secs}` observables
+/// (plus the `trains` counter) in the `metrics` op's snapshot.
+/// `train.factorizations` is the run's σ²-independent factor-build count
+/// — with the per-lengthscale cache it sits strictly below
+/// `train.evals` whenever the optimizer revisits a length scale.
 fn record_train_metrics(metrics: &Metrics, report: &TrainReport) {
     metrics.incr("trains", 1);
     metrics.observe("train.secs", report.train_secs);
     metrics.observe("train.evals", report.evals as f64);
+    if let Some(fx) = report.factorizations {
+        metrics.observe("train.factorizations", fx as f64);
+    }
     if let Some(m) = report.best_mll {
         metrics.observe("train.best_mll", m);
     }
@@ -560,6 +645,44 @@ mod tests {
         assert_eq!(r.handle(&meka).get("ok"), Some(&Json::Bool(false)));
     }
 
+    /// The retune op republishes an MKA model at a new σ² without any
+    /// refit job; other methods get a typed protocol error, and bad
+    /// inputs are rejected.
+    #[test]
+    fn retune_op_republishes_mka_model() {
+        let r = router();
+        let out = r.handle(&fit_req("mr", "mka", 70, false));
+        assert_eq!(out.get("ok"), Some(&Json::Bool(true)), "{out:?}");
+        let retune = Json::parse(r#"{"op":"retune","model":"mr","sigma2":0.4}"#).unwrap();
+        let out = r.handle(&retune);
+        assert_eq!(out.get("ok"), Some(&Json::Bool(true)), "{out:?}");
+        assert_eq!(out.num_field("sigma2"), Some(0.4));
+        assert!(r.metrics.counter("retunes") >= 1);
+        // the republished model still serves predictions
+        let pred = Json::obj()
+            .with("op", Json::Str("predict".into()))
+            .with("model", Json::Str("mr".into()))
+            .with("x", Json::Arr(vec![Json::from_f64_slice(&[0.1, 0.1])]));
+        let out = r.handle(&pred);
+        assert_eq!(out.get("ok"), Some(&Json::Bool(true)), "{out:?}");
+        // higher noise ⇒ the predictive variance floor rises with it
+        assert!(out.get("var").unwrap().f64_array().unwrap()[0] >= 0.4);
+
+        // non-MKA models cannot retune
+        let out = r.handle(&fit_req("mfull", "full", 60, false));
+        assert_eq!(out.get("ok"), Some(&Json::Bool(true)), "{out:?}");
+        let bad = Json::parse(r#"{"op":"retune","model":"mfull","sigma2":0.2}"#).unwrap();
+        let out = r.handle(&bad);
+        assert_eq!(out.get("ok"), Some(&Json::Bool(false)));
+        // unknown model / missing or invalid sigma2
+        let ghost = Json::parse(r#"{"op":"retune","model":"ghost","sigma2":0.2}"#).unwrap();
+        assert_eq!(r.handle(&ghost).get("ok"), Some(&Json::Bool(false)));
+        let missing = Json::parse(r#"{"op":"retune","model":"mr"}"#).unwrap();
+        assert_eq!(r.handle(&missing).get("ok"), Some(&Json::Bool(false)));
+        let neg = Json::parse(r#"{"op":"retune","model":"mr","sigma2":-0.1}"#).unwrap();
+        assert_eq!(r.handle(&neg).get("ok"), Some(&Json::Bool(false)));
+    }
+
     #[test]
     fn metrics_surface_compute_plane() {
         let r = router();
@@ -574,6 +697,9 @@ mod tests {
         let m = r.handle(&Json::parse(r#"{"op":"metrics"}"#).unwrap());
         let compute = m.get("compute").expect("compute section present");
         assert!(compute.num_field("cascades").unwrap_or(0.0) >= 1.0);
+        assert!(compute.num_field("factorizes").unwrap_or(0.0) >= 1.0);
+        assert!(compute.num_field("factor_cache_hits").is_some());
+        assert!(compute.num_field("factor_cache_misses").is_some());
         assert!(compute.num_field("pool_threads").unwrap_or(0.0) >= 1.0);
         assert!(compute.num_field("pool_jobs").is_some());
         assert!(compute.num_field("pool_workers").is_some());

@@ -15,6 +15,10 @@ pub enum Error {
     Runtime(String),
     Coordinator(String),
     Protocol(String),
+    /// Transient overload (e.g. the predict queue is at capacity): the
+    /// request was rejected, not failed — clients should back off and
+    /// retry. The router marks these responses with `"busy": true`.
+    Busy(String),
     Io(std::io::Error),
     Json(crate::util::json::JsonError),
 }
@@ -28,6 +32,7 @@ impl fmt::Display for Error {
             Error::Runtime(m) => write!(f, "runtime (PJRT/XLA) error: {m}"),
             Error::Coordinator(m) => write!(f, "coordinator error: {m}"),
             Error::Protocol(m) => write!(f, "protocol error: {m}"),
+            Error::Busy(m) => write!(f, "service busy: {m}"),
             Error::Io(e) => write!(f, "io error: {e}"),
             Error::Json(e) => write!(f, "json error: {e}"),
         }

@@ -19,10 +19,19 @@
 //! The same D block gives calibrated predictive variances: by the block
 //! inverse identity D⁻¹ = K_test − K_*ᵀ(K+σ²I)⁻¹K_*, i.e. D⁻¹ *is* the
 //! posterior covariance of the latent f at the test points.
+//!
+//! **Noise is a shift, not an input:** every factorization here is of the
+//! noise-free gram, with σ² applied as the O(1)
+//! [`crate::mka::MkaFactor::shifted`] spectrum view. The train-side
+//! factor is built once (lazily) and reused across noise levels, so
+//! [`MkaGp::set_noise`] re-tunes a fitted model — `log_marginal` at the
+//! new σ² is pure spectrum arithmetic — without any refactorization.
+
+use std::sync::OnceLock;
 
 use super::{GpModel, Prediction};
 use crate::data::dataset::Dataset;
-use crate::error::Result;
+use crate::error::{Error, Result};
 use crate::kernels::gram::GramBuilder;
 use crate::kernels::Kernel;
 use crate::la::blas::dot;
@@ -30,14 +39,20 @@ use crate::la::dense::Mat;
 use crate::la::lu::Lu;
 use crate::mka::{factorize, MkaConfig, MkaFactor};
 
-/// MKA-based GP regressor (transductive: the factorization is built per
-/// prediction batch over the joint train/test kernel).
+/// MKA-based GP regressor (transductive: the joint factorization is built
+/// per prediction batch over the train/test kernel; the train-only factor
+/// backing `log_marginal` is built once and shared across noise levels).
 pub struct MkaGp {
     train: Dataset,
     kernel: Box<dyn Kernel>,
     sigma2: f64,
     config: MkaConfig,
     gram: Option<GramBuilder>,
+    /// Noise-free factorization of the train-only gram, built on first
+    /// use. σ² enters as a spectrum shift, so noise re-tunes never touch
+    /// this. A failure is stored as its message so it is sticky (the
+    /// factorization is deterministic — retrying cannot succeed).
+    train_factor: OnceLock<std::result::Result<MkaFactor, String>>,
 }
 
 impl MkaGp {
@@ -48,12 +63,18 @@ impl MkaGp {
         config: &MkaConfig,
     ) -> Result<MkaGp> {
         config.validate()?;
+        if !(sigma2.is_finite() && sigma2 > 0.0) {
+            return Err(Error::Config(format!(
+                "MkaGp::fit: σ² must be finite and > 0, got {sigma2}"
+            )));
+        }
         Ok(MkaGp {
             train: train.clone(),
             kernel: kernel.boxed_clone(),
             sigma2,
             config: config.clone(),
             gram: None,
+            train_factor: OnceLock::new(),
         })
     }
 
@@ -64,7 +85,45 @@ impl MkaGp {
         self
     }
 
+    /// The noise-free factorization of the train-only gram, computed on
+    /// first use and shared by every subsequent `log_marginal` /
+    /// [`MkaGp::set_noise`] cycle.
+    pub fn train_factor(&self) -> Result<&MkaFactor> {
+        let slot = self.train_factor.get_or_init(|| {
+            // Same gram source as factorize_joint: the tile engine when a
+            // builder is configured, native assembly otherwise.
+            let k = match &self.gram {
+                Some(g) => g.build_sym(&self.train.x),
+                None => self.kernel.gram_sym(&self.train.x),
+            };
+            factorize(&k, Some(&self.train.x), &self.config).map_err(|e| e.to_string())
+        });
+        slot.as_ref().map_err(|m| Error::Linalg(m.clone()))
+    }
+
+    /// Current observation-noise variance σ².
+    pub fn sigma2(&self) -> f64 {
+        self.sigma2
+    }
+
+    /// Re-tune the observation noise of a fitted model **without
+    /// refactorizing**: σ² only shifts the factor spectrum
+    /// ([`MkaFactor::shifted`]), so the next `log_marginal` is pure
+    /// spectrum arithmetic and the next `predict` factorizes exactly as
+    /// often as it would have anyway (once per joint batch).
+    pub fn set_noise(&mut self, sigma2: f64) -> Result<()> {
+        if !(sigma2.is_finite() && sigma2 > 0.0) {
+            return Err(Error::Config(format!(
+                "set_noise: σ² must be finite and > 0, got {sigma2}"
+            )));
+        }
+        self.sigma2 = sigma2;
+        Ok(())
+    }
+
     /// Factorize the joint train/test kernel (exposed for diagnostics).
+    /// The factorization itself is noise-free; the returned factor is the
+    /// σ²-shifted view.
     pub fn factorize_joint(&self, x_test: &Mat) -> Result<(MkaFactor, Mat)> {
         let n = self.train.n();
         let p = x_test.rows;
@@ -72,19 +131,22 @@ impl MkaGp {
         let mut xj = Mat::zeros(n + p, self.train.x.cols);
         xj.set_block(0, 0, &self.train.x);
         xj.set_block(n, 0, x_test);
-        let mut kj = match &self.gram {
+        let kj = match &self.gram {
             Some(g) => g.build_sym(&xj),
             None => self.kernel.gram_sym(&xj),
         };
-        // σ² on the whole joint diagonal. The paper's 𝒦 puts σ² on the
-        // train block only; by the block-inverse identity
+        // σ² on the whole joint diagonal, as a shift view. The paper's 𝒦
+        // puts σ² on the train block only; by the block-inverse identity
         // A − B D⁻¹ C = (K + σ²I)⁻¹ *independently of the test block*, so
         // the mean is unchanged in exact arithmetic — but λ_min(𝒦) ≥ σ²
         // makes the factorized inverse numerically robust, and D⁻¹ becomes
-        // the noise-inclusive predictive covariance directly.
-        kj.add_diag(self.sigma2);
-        let f = factorize(&kj, Some(&xj), &self.config)?;
-        // K_* block (n×p) for the mean formula.
+        // the noise-inclusive predictive covariance directly. Under the
+        // default (shift-invariant) pivot rules this is exactly
+        // `factorize(𝒦_noise-free + σ²I)` at the cost of factorizing the
+        // noise-free matrix once; see `mka::factor` for the SPCA caveat.
+        let f = factorize(&kj, Some(&xj), &self.config)?.shifted(self.sigma2);
+        // K_* block (n×p) for the mean formula (off-diagonal — the shift
+        // never touches it).
         let kstar = kj.block(0, n, n, n + p);
         Ok((f, kstar))
     }
@@ -98,11 +160,11 @@ impl MkaGp {
     /// solve + logdet of the factorization (Proposition 7). This is the
     /// quantity the paper highlights for hyperparameter learning ("small
     /// errors can be compounded in the process of learning hyperparameters
-    /// through log-likelihood maximization").
+    /// through log-likelihood maximization"). The train factor is built
+    /// once; evaluations at other noise levels (after
+    /// [`MkaGp::set_noise`]) reuse it through the shift view.
     pub fn log_marginal(&self) -> Result<f64> {
-        let mut k = self.kernel.gram_sym(&self.train.x);
-        k.add_diag(self.sigma2);
-        let f = factorize(&k, Some(&self.train.x), &self.config)?;
+        let f = self.train_factor()?.shifted(self.sigma2);
         let alpha = f.solve(&self.train.y)?;
         let quad: f64 = self.train.y.iter().zip(&alpha).map(|(a, b)| a * b).sum();
         let n = self.train.n() as f64;
@@ -180,16 +242,36 @@ impl GpModel for MkaGp {
 
         // Variance: with σ² on the full joint diagonal,
         // D⁻¹ = K_test + σ²I − K_*ᵀ(K+σ²I)⁻¹K_* — the noise-inclusive
-        // predictive covariance (floored at a fraction of σ² for safety).
+        // predictive covariance. Its diagonal is ≥ σ² in exact arithmetic
+        // (the latent Schur complement of the spsd 𝒦̃ is psd), so the
+        // noise variance itself is the tight floor against LU roundoff —
+        // predictive variance can never undercut the observation noise.
         let dinv = lu.inverse();
         let var: Vec<f64> =
-            (0..p).map(|j| dinv.at(j, j).max(self.sigma2 * 1e-3)).collect();
+            (0..p).map(|j| dinv.at(j, j).max(self.sigma2)).collect();
 
         Prediction { mean, var }
     }
 
     fn name(&self) -> String {
         format!("MKA(d={})", self.config.d_core)
+    }
+
+    fn with_noise(&self, sigma2: f64) -> Option<Box<dyn GpModel>> {
+        let mut m = MkaGp {
+            train: self.train.clone(),
+            kernel: self.kernel.boxed_clone(),
+            sigma2: self.sigma2,
+            config: self.config.clone(),
+            gram: self.gram.clone(),
+            train_factor: OnceLock::new(),
+        };
+        // Share the already-computed train factor (cheap: Arc'd stages).
+        if let Some(slot) = self.train_factor.get() {
+            let _ = m.train_factor.set(slot.clone());
+        }
+        m.set_noise(sigma2).ok()?;
+        Some(Box::new(m))
     }
 }
 
@@ -261,6 +343,81 @@ mod tests {
         for &v in &pred.var {
             assert!(v >= 0.1 - 1e-12 && v < 10.0, "var={v}");
         }
+    }
+
+    /// The predictive variance floor is exactly σ²: with σ² on the whole
+    /// joint diagonal, diag(D⁻¹) ≥ σ² in exact arithmetic, so even under
+    /// heavy compression no reported variance may undercut the noise.
+    #[test]
+    fn variance_never_below_noise_floor() {
+        let data = gp_dataset(&SynthSpec::named("t", 150, 2), 8);
+        let (tr, te) = data.split(0.85, 4);
+        for s2 in [0.02, 0.1, 0.5] {
+            // aggressive compression to stress the D-block arithmetic
+            let cfg = MkaConfig { d_core: 8, block_size: 24, ..MkaConfig::default() };
+            let mka = MkaGp::fit(&tr, &RbfKernel::new(0.9), s2, &cfg).unwrap();
+            let pred = mka.predict(&te.x);
+            for &v in &pred.var {
+                assert!(v >= s2, "var {v} < σ² {s2}");
+            }
+        }
+    }
+
+    /// `set_noise` must be indistinguishable from a fresh fit at the new
+    /// σ² — predictions and evidence both route through the same
+    /// noise-free factorizations plus a shift.
+    #[test]
+    fn set_noise_matches_refit() {
+        let data = gp_dataset(&SynthSpec::named("t", 140, 2), 6);
+        let (tr, te) = data.split(0.85, 5);
+        let kern = RbfKernel::new(1.1);
+        let mut tuned = MkaGp::fit(&tr, &kern, 0.1, &config(20)).unwrap();
+        let ml_before = tuned.log_marginal().unwrap();
+        tuned.set_noise(0.03).unwrap();
+        assert_eq!(tuned.sigma2(), 0.03);
+        let fresh = MkaGp::fit(&tr, &kern, 0.03, &config(20)).unwrap();
+        // evidence: identical arithmetic (same factor, same shift)
+        let ml_tuned = tuned.log_marginal().unwrap();
+        let ml_fresh = fresh.log_marginal().unwrap();
+        assert!(
+            (ml_tuned - ml_fresh).abs() < 1e-9 * ml_fresh.abs().max(1.0),
+            "retuned {ml_tuned} vs fresh {ml_fresh}"
+        );
+        assert!(ml_tuned != ml_before, "noise change must move the evidence");
+        // predictions: same joint factorization path, same shift
+        let pt = tuned.predict(&te.x);
+        let pf = fresh.predict(&te.x);
+        for i in 0..te.n() {
+            assert!((pt.mean[i] - pf.mean[i]).abs() < 1e-10, "mean[{i}]");
+            assert!((pt.var[i] - pf.var[i]).abs() < 1e-10, "var[{i}]");
+        }
+        // invalid noise is rejected without touching the model
+        assert!(tuned.set_noise(-1.0).is_err());
+        assert!(tuned.set_noise(f64::NAN).is_err());
+        assert_eq!(tuned.sigma2(), 0.03);
+    }
+
+    /// The `GpModel::with_noise` hook (serving-plane `retune`) produces a
+    /// model equivalent to a fresh fit; non-MKA models opt out with None.
+    #[test]
+    fn with_noise_trait_retunes() {
+        let data = gp_dataset(&SynthSpec::named("t", 100, 2), 7);
+        let (tr, te) = data.split(0.85, 6);
+        let kern = RbfKernel::new(1.0);
+        let mka = MkaGp::fit(&tr, &kern, 0.1, &config(16)).unwrap();
+        let retuned = mka.with_noise(0.25).expect("MKA supports retune");
+        let fresh = MkaGp::fit(&tr, &kern, 0.25, &config(16)).unwrap();
+        let pr = retuned.predict(&te.x);
+        let pf = fresh.predict(&te.x);
+        for i in 0..te.n() {
+            assert!((pr.mean[i] - pf.mean[i]).abs() < 1e-10);
+            assert!((pr.var[i] - pf.var[i]).abs() < 1e-10);
+        }
+        // invalid σ² refuses the retune
+        assert!(mka.with_noise(0.0).is_none());
+        // the default implementation opts out
+        let full = FullGp::fit(&tr, &kern, 0.1).unwrap();
+        assert!(full.with_noise(0.2).is_none());
     }
 
     #[test]

@@ -47,6 +47,17 @@ pub trait GpModel: Send + Sync {
 
     /// Model name for tables/logs.
     fn name(&self) -> String;
+
+    /// Cheap σ² re-tune: a copy of this model serving at noise variance
+    /// `sigma2` **without refitting**, when the method supports it. For
+    /// MKA, noise is a spectrum shift of the stored factorization
+    /// ([`crate::mka::MkaFactor::shifted`]), so this is O(1) work plus a
+    /// registry republish — the serving-plane `retune` op rides it.
+    /// `None` means unsupported (or an invalid σ²); callers fall back to
+    /// a full refit job.
+    fn with_noise(&self, _sigma2: f64) -> Option<Box<dyn GpModel>> {
+        None
+    }
 }
 
 #[cfg(test)]

@@ -31,9 +31,12 @@ impl MkaRidge {
         lambda: f64,
         config: &MkaConfig,
     ) -> Result<MkaRidge> {
-        let mut k = kernel.gram_sym(&train.x);
-        k.add_diag(lambda);
-        let f = factorize(&k, Some(&train.x), config)?;
+        // λ enters as a spectrum shift of the noise-free factorization
+        // (exactly equivalent to factorizing K + λI — see `mka::factor`),
+        // so ridge refits across regularization levels could share one
+        // factorization the same way the training plane's cache does.
+        let k = kernel.gram_sym(&train.x);
+        let f = factorize(&k, Some(&train.x), config)?.shifted(lambda);
         let alpha = f.solve(&train.y)?;
         Ok(MkaRidge {
             x_train: train.x.clone(),

@@ -43,6 +43,17 @@ pub struct GramBuilder {
     threads: Option<usize>,
 }
 
+impl Clone for GramBuilder {
+    fn clone(&self) -> GramBuilder {
+        GramBuilder {
+            kernel: self.kernel.boxed_clone(),
+            engine: self.engine.clone(),
+            rbf_params: self.rbf_params,
+            threads: self.threads,
+        }
+    }
+}
+
 impl GramBuilder {
     pub fn new(kernel: Box<dyn Kernel>) -> GramBuilder {
         GramBuilder { kernel, engine: None, rbf_params: None, threads: None }

@@ -57,8 +57,9 @@ fn print_usage() {
          fit         --data file.csv --method mka|full|sor|fitc|pitc|meka --k 32\n\
          train       --data file.csv | --synth N [--dim D] --method mka --k 32\n\
                      --selection mll|mll-grad|cv [--ard] --max-evals 60\n\
-                     --starts 3 --folds 5 [--assert-converged]\n\
+                     --starts 3 --folds 5 [--assert-converged] [--assert-cache-hit]\n\
          experiment  --name table1|fig1|fig2 [--full] [--max-n N] [--datasets a,b]\n\
+                     [--selection cv|mll|mll-grad]\n\
          selftest    --artifacts artifacts\n\
          info        [--artifacts artifacts]"
     );
@@ -187,7 +188,12 @@ fn cmd_train(args: &Args) -> Result<()> {
         data.dim(),
         selection.label()
     );
+    // Factor-cache delta around this run (single-process CLI, so the
+    // global counters are exact for it): σ²-only optimizer moves at a
+    // cached length scale must not refactorize.
+    let cache_hits_before = mka_gp::train::factor_cache_hits();
     let (model, report) = train_model(method, &train, &selection, k, seed)?;
+    let cache_hits = mka_gp::train::factor_cache_hits() - cache_hits_before;
     println!(
         "chosen lengthscale = {:.4}, sigma2 = {:.5} ({} evals in {:.2}s, converged={})",
         report.best.lengthscale,
@@ -196,6 +202,12 @@ fn cmd_train(args: &Args) -> Result<()> {
         report.train_secs,
         report.converged
     );
+    if let Some(fx) = report.factorizations {
+        println!(
+            "factor cache: {fx} σ²-independent builds over {} evals ({cache_hits} hits)",
+            report.evals
+        );
+    }
     if let Some(ells) = &report.lengthscales {
         let pretty: Vec<String> = ells.iter().map(|l| format!("{l:.4}")).collect();
         println!("ARD lengthscales = [{}]", pretty.join(", "));
@@ -221,6 +233,13 @@ fn cmd_train(args: &Args) -> Result<()> {
             "train: optimizer did not converge within --max-evals".into(),
         ));
     }
+    if args.has_flag("assert-cache-hit") && cache_hits == 0 {
+        return Err(mka_gp::error::Error::Config(
+            "train: expected at least one factor-cache hit (σ²-only moves \
+             must reuse the per-lengthscale factorization)"
+                .into(),
+        ));
+    }
     Ok(())
 }
 
@@ -235,6 +254,7 @@ fn cmd_experiment(args: &Args) -> Result<()> {
                 cfg.folds = 5;
             }
             cfg.max_n = args.get_usize("max-n", cfg.max_n);
+            cfg.selection = args.get_or("selection", "cv").to_string();
             let only = args.get("datasets").map(|s| s.split(',').collect::<Vec<_>>());
             let rows = mka_gp::experiments::table1::run_table(&cfg, only.as_deref());
             println!("{}", mka_gp::experiments::table1::format_rows(&rows));

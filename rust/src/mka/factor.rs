@@ -1,13 +1,35 @@
 //! The telescoping MKA factor
 //! K̃ = Q₁ᵀ(Q₂ᵀ(… Q_sᵀ(K_s ⊕ D_s)Q_s …) ⊕ D₂)Q₂ ⊕ D₁)Q₁   (paper eq. 6)
 //! and its matrix-free application (Proposition 6).
+//!
+//! ## The noise-shift view
+//!
+//! Diagonal shifts commute with the whole cascade: every Q̄_ℓ is
+//! orthogonal, so Q̄(K + σ²I)Q̄ᵀ = Q̄KQ̄ᵀ + σ²I, and the core/wavelet split
+//! keeps diagonal entries — the running matrix of `factorize(K + σ²I)`
+//! differs from that of `factorize(K)` by exactly σ²I at every stage.
+//! Because the default pivot rules score candidates on shift-invariant
+//! quantities (off-diagonal energies, diagonal *differences*, outside
+//! Grams — see `compress::mmf`; the EVD oracle's eigenvectors are
+//! shift-invariant too), both runs choose the same rotations, and the
+//! two factors share Q̄s while every spectral value (core eigenvalue or
+//! wavelet diagonal) moves by σ². The factor therefore stores the
+//! **noise-free** cascade plus a single [`MkaFactor::shift`], applied to
+//! the spectrum at the point of use; [`MkaFactor::shifted`] is an O(1)
+//! view sharing the rotations, so re-tuning σ² never refactorizes.
+//!
+//! Caveat: the non-default SPCA compressor and MMF's MaxCorrelation
+//! ablation rule score shift-*dependent* quantities (Gram diagonals),
+//! so for those configurations `factorize(K).shifted(σ²)` is a
+//! different — still valid, still spsd — member of the approximation
+//! family than `factorize(K + σ²I)`, not the identical factor.
 
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::OnceLock;
+use std::sync::{Arc, OnceLock};
 
 use super::parallel::{chunk_ranges, par_map};
 use super::stage::Stage;
-use crate::la::blas::{gemm, gemv, scale_rows};
+use crate::la::blas::{axpy, gemm, gemv, scale_rows};
 use crate::la::dense::Mat;
 use crate::la::evd::SymEig;
 
@@ -20,52 +42,85 @@ use crate::la::evd::SymEig;
 /// to keep on in production for serving metrics.
 static CASCADES: AtomicU64 = AtomicU64::new(0);
 
+/// Process-wide count of full O(n²)–O(n³) factorizations ([`super::factorize`]
+/// runs). The shift view exists precisely to keep this from growing with
+/// σ² re-tunes: a σ²-only hyperparameter move through the training
+/// plane's factor cache, or a serving-plane `retune`, must not bump it.
+/// Sits next to [`cascade_count`] as the training plane's cost gauge.
+static FACTORIZES: AtomicU64 = AtomicU64::new(0);
+
 /// Total orthogonal cascades executed by this process so far.
 pub fn cascade_count() -> u64 {
     CASCADES.load(Ordering::Relaxed)
 }
 
+/// Total kernel factorizations executed by this process so far.
+pub fn factorize_count() -> u64 {
+    FACTORIZES.load(Ordering::Relaxed)
+}
+
+/// Bumped by [`super::factorize`] once per factorization run.
+pub(crate) fn record_factorize() {
+    FACTORIZES.fetch_add(1, Ordering::Relaxed);
+}
+
 /// Below this many columns a parallel split would be all overhead.
 const MIN_PAR_COLS: usize = 16;
 
-/// A factorized kernel approximation. Obtained from [`super::factorize`].
-#[derive(Debug)]
+/// A factorized kernel approximation representing K̃ + `shift`·I.
+/// Obtained from [`super::factorize`] (at `shift = 0`) or as a cheap
+/// [`MkaFactor::shifted`] view of an existing factor.
+#[derive(Clone, Debug)]
 pub struct MkaFactor {
     /// Ambient dimension n.
     pub n: usize,
-    /// Stages, outermost (stage 1) first.
-    pub stages: Vec<Stage>,
-    /// Final dense core K_s (d_core × d_core).
-    pub core: Mat,
+    /// Stages, outermost (stage 1) first — shared between shifted views.
+    pub stages: Arc<Vec<Stage>>,
+    /// Final dense core K_s (d_core × d_core) of the **noise-free**
+    /// cascade; the shift is added to its spectrum at the point of use.
+    pub core: Arc<Mat>,
+    /// Diagonal noise shift σ² ≥ 0: every consumer (solve, logdet,
+    /// pow/exp, spectrum, validity gates) reads the spectrum as λ + shift
+    /// and each wavelet diagonal as d + shift.
+    pub shift: f64,
     /// Worker threads for block-parallel stage rotations inside the
     /// cascade (set from `MkaConfig::n_threads` at factorize time; purely
     /// a wall-clock knob — results are bit-identical at any value).
     pub n_threads: usize,
-    /// Lazily computed EVD of the core (Proposition 7's d³ step).
-    pub(crate) core_eig: OnceLock<SymEig>,
-}
-
-impl Clone for MkaFactor {
-    fn clone(&self) -> Self {
-        MkaFactor {
-            n: self.n,
-            stages: self.stages.clone(),
-            core: self.core.clone(),
-            n_threads: self.n_threads,
-            core_eig: OnceLock::new(),
-        }
-    }
+    /// Lazily computed EVD of the noise-free core (Proposition 7's d³
+    /// step). Shared between shifted views — the eigenvectors are
+    /// shift-independent, so one EVD serves every σ².
+    pub(crate) core_eig: Arc<OnceLock<SymEig>>,
 }
 
 impl MkaFactor {
     pub fn new(n: usize, stages: Vec<Stage>, core: Mat) -> MkaFactor {
-        MkaFactor { n, stages, core, n_threads: 1, core_eig: OnceLock::new() }
+        MkaFactor {
+            n,
+            stages: Arc::new(stages),
+            core: Arc::new(core),
+            shift: 0.0,
+            n_threads: 1,
+            core_eig: Arc::new(OnceLock::new()),
+        }
     }
 
     /// Set the cascade's block-parallel thread cap (builder style).
     pub fn with_threads(mut self, threads: usize) -> MkaFactor {
         self.n_threads = threads.max(1);
         self
+    }
+
+    /// An O(1) view of this factor at **absolute** diagonal shift
+    /// `sigma2`: the result represents K̃ + σ²I where K̃ is the factorized
+    /// (noise-free) approximation — re-shifting a view replaces the
+    /// shift, it does not accumulate. Rotations, core and the core EVD
+    /// are shared, so this is the paper-exact equivalent of
+    /// `factorize(K + σ²I)` at zero factorization cost (see the module
+    /// docs for why — and for which pivot rules — the equivalence is
+    /// exact).
+    pub fn shifted(&self, sigma2: f64) -> MkaFactor {
+        MkaFactor { shift: sigma2, ..self.clone() }
     }
 
     /// Size of the final core d_core.
@@ -78,22 +133,43 @@ impl MkaFactor {
         self.stages.len()
     }
 
-    /// EVD of the core, computed once on first use.
+    /// EVD of the noise-free core, computed once on first use and shared
+    /// by every shifted view.
     pub(crate) fn eig(&self) -> &SymEig {
         self.core_eig.get_or_init(|| SymEig::new(&self.core))
     }
 
-    /// K̃ z — the Proposition 6 cascade: forward through every stage,
-    /// multiply the core / scale the wavelets, cascade back.
+    /// (K̃ + shift·I) z — the Proposition 6 cascade: forward through every
+    /// stage, multiply the core / scale the wavelets, cascade back.
     pub fn matvec(&self, z: &[f64]) -> Vec<f64> {
-        self.apply_with(z, |core_vec| gemv(&self.core, core_vec), |d| d)
+        let s = self.shift;
+        self.apply_with(
+            z,
+            |core_vec| {
+                let mut u = gemv(&self.core, core_vec);
+                if s != 0.0 {
+                    axpy(s, core_vec, &mut u);
+                }
+                u
+            },
+            |d| d + s,
+        )
     }
 
-    /// K̃ Z for a block of right-hand sides (columns of `z`): ONE cascade
-    /// through the stages carrying all columns, with the core hit by a
-    /// single `gemm` instead of per-column `gemv` pairs.
+    /// (K̃ + shift·I) Z for a block of right-hand sides (columns of `z`):
+    /// ONE cascade through the stages carrying all columns, with the core
+    /// hit by a single `gemm` instead of per-column `gemv` pairs.
     pub fn matmat(&self, z: &Mat) -> Mat {
-        self.apply_with_mat(z, |core_block| gemm(&self.core, core_block), |d| d)
+        let s = self.shift;
+        self.apply_with_mat(
+            z,
+            |core_block| {
+                let mut u = gemm(&self.core, core_block);
+                shift_acc(&mut u, core_block, s);
+                u
+            },
+            |d| d + s,
+        )
     }
 
     /// Column-parallel [`MkaFactor::matmat`]: wide blocks are split into
@@ -102,8 +178,18 @@ impl MkaFactor {
     /// stage rotations are block-parallel instead — so a single wide batch
     /// and a 1-RHS solve both saturate the pool.
     pub fn matmat_par(&self, z: &Mat, n_threads: usize) -> Mat {
+        let s = self.shift;
         self.par_over_cols(z, n_threads, |chunk, stage_threads| {
-            self.apply_with_mat_stage(chunk, |c| gemm(&self.core, c), |d| d, stage_threads)
+            self.apply_with_mat_stage(
+                chunk,
+                |c| {
+                    let mut u = gemm(&self.core, c);
+                    shift_acc(&mut u, c, s);
+                    u
+                },
+                |d| d + s,
+                stage_threads,
+            )
         })
     }
 
@@ -130,9 +216,11 @@ impl MkaFactor {
 
     /// Generic spectral application: given how to act on the final core
     /// vector and how to map each wavelet diagonal value, apply the
-    /// corresponding matrix function of K̃ (Proposition 7 pattern). Stage
-    /// rotations run block-parallel under `self.n_threads` (bit-identical
-    /// to serial at any thread count).
+    /// corresponding matrix function of K̃ + shift·I (Proposition 7
+    /// pattern; `dmap` receives the noise-free diagonal values, so shift
+    /// handling belongs to the caller's closures). Stage rotations run
+    /// block-parallel under `self.n_threads` (bit-identical to serial at
+    /// any thread count).
     pub(crate) fn apply_with(
         &self,
         z: &[f64],
@@ -145,7 +233,7 @@ impl MkaFactor {
         let mut scratch: Vec<f64> = Vec::new();
         let mut v = z.to_vec();
         let mut wavs: Vec<Vec<f64>> = Vec::with_capacity(self.stages.len());
-        for st in &self.stages {
+        for st in self.stages.iter() {
             let (core, wav) = st.forward_mt(&mut v, &mut scratch, threads);
             wavs.push(wav);
             v = core;
@@ -190,7 +278,7 @@ impl MkaFactor {
         assert_eq!(z.rows, self.n, "matmat dimension mismatch");
         let mut v = z.clone();
         let mut wavs: Vec<Mat> = Vec::with_capacity(self.stages.len());
-        for st in &self.stages {
+        for st in self.stages.iter() {
             let (core, wav) = st.forward_mat_mt(&mut v, stage_threads);
             wavs.push(wav);
             v = core;
@@ -207,8 +295,8 @@ impl MkaFactor {
         u
     }
 
-    /// Dense reconstruction of K̃ (tests / small n only): one blocked
-    /// cascade over the identity instead of n serial matvecs.
+    /// Dense reconstruction of K̃ + shift·I (tests / small n only): one
+    /// blocked cascade over the identity instead of n serial matvecs.
     pub fn to_dense(&self) -> Mat {
         self.matmat(&Mat::eye(self.n))
     }
@@ -219,22 +307,39 @@ impl MkaFactor {
             + self.core.rows * self.core.cols
     }
 
-    /// All wavelet diagonal values across stages (the spectrum outside the
-    /// core, up to rotation).
+    /// All wavelet diagonal values across stages, **with the shift
+    /// applied** — i.e. the part of the spectrum of K̃ + shift·I that
+    /// lives outside the core (up to rotation).
     pub fn all_dvals(&self) -> Vec<f64> {
-        self.stages.iter().flat_map(|s| s.dvals.iter().copied()).collect()
+        self.stages
+            .iter()
+            .flat_map(|s| s.dvals.iter().map(|&d| d + self.shift))
+            .collect()
     }
 
-    /// Structural validation of the whole factor.
+    /// Structural validation of the whole factor (including the shift:
+    /// a noise variance must be finite and nonnegative).
     pub fn check_valid(&self) -> bool {
+        if !self.shift.is_finite() || self.shift < 0.0 {
+            return false;
+        }
         let mut dim = self.n;
-        for st in &self.stages {
+        for st in self.stages.iter() {
             if st.n_in != dim || !st.check_valid() {
                 return false;
             }
             dim = st.c();
         }
         dim == self.core.rows && self.core.is_square()
+    }
+}
+
+/// u += s · z elementwise — the core block's share of the diagonal shift
+/// (the forward cascade is orthogonal, so shifting the core coordinates
+/// by s·I and every wavelet value by s reproduces K + sI exactly).
+fn shift_acc(u: &mut Mat, z: &Mat, s: f64) {
+    if s != 0.0 {
+        axpy(s, &z.data, &mut u.data);
     }
 }
 
@@ -353,5 +458,54 @@ mod tests {
         // Other tests run concurrently in this binary, so only a lower
         // bound is exact — but a single blocked apply adds exactly one.
         assert!(cascade_count() >= before + 1);
+    }
+
+    #[test]
+    fn shifted_is_a_cheap_view() {
+        let f = tiny_factor();
+        let fs = f.shifted(0.5);
+        // Rotations, core and the (lazy) core EVD are shared, not copied.
+        assert!(Arc::ptr_eq(&f.stages, &fs.stages));
+        assert!(Arc::ptr_eq(&f.core, &fs.core));
+        assert!(Arc::ptr_eq(&f.core_eig, &fs.core_eig));
+        assert_eq!(fs.shift, 0.5);
+        // The shift is absolute, not cumulative.
+        assert_eq!(fs.shifted(0.2).shift, 0.2);
+        assert!(f.check_valid() && fs.check_valid());
+        // A noise variance must be finite and nonnegative.
+        assert!(!f.shifted(-1.0).check_valid());
+        assert!(!f.shifted(f64::NAN).check_valid());
+    }
+
+    #[test]
+    fn shifted_matvec_and_dense_add_sigma2_identity() {
+        let f = tiny_factor();
+        let s2 = 0.37;
+        let fs = f.shifted(s2);
+        // to_dense of the view is exactly K̃ + σ²I.
+        let mut expect = f.to_dense();
+        expect.add_diag(s2);
+        assert!(fs.to_dense().sub(&expect).max_abs() < 1e-12);
+        // matvec and blocked/parallel matmat agree with the dense shift.
+        let mut rng = Rng::new(8);
+        let z = rng.normal_vec(4);
+        let y = fs.matvec(&z);
+        let y2 = gemv(&expect, &z);
+        for i in 0..4 {
+            assert!((y[i] - y2[i]).abs() < 1e-12);
+        }
+        let zb = Mat::from_fn(4, 20, |_, _| rng.normal());
+        let blocked = fs.matmat(&zb);
+        let par = fs.matmat_par(&zb, 3);
+        assert!(par.sub(&blocked).max_abs() < 1e-12);
+        for j in 0..20 {
+            let col = fs.matvec(&zb.col(j));
+            for i in 0..4 {
+                assert!((blocked.at(i, j) - col[i]).abs() < 1e-12);
+            }
+        }
+        // all_dvals reads through the shift.
+        assert_eq!(fs.all_dvals(), vec![0.7 + s2, 0.9 + s2]);
+        assert_eq!(f.all_dvals(), vec![0.7, 0.9]);
     }
 }

@@ -14,13 +14,21 @@
 //! `solve`/`logdet`/`spectrum` in [`ops`], which the training plane
 //! consumes for evidence values *and* gradients
 //! ([`crate::train::grad`]).
+//!
+//! Noise is a **view, not an input**: [`factorize`] operates on the
+//! noise-free gram, and `K + σ²I` is served by the O(1)
+//! [`MkaFactor::shifted`] view (same rotations, spectrum moved by σ² —
+//! see the `factor` module docs for the exactness argument). Callers that
+//! used to bake σ² into the gram with `add_diag` before factorizing
+//! should factorize noise-free and shift instead; σ² re-tunes then cost
+//! zero factorizations, observable through [`factorize_count`].
 
 pub mod factor;
 pub mod ops;
 pub mod parallel;
 pub mod stage;
 
-pub use factor::{cascade_count, MkaFactor};
+pub use factor::{cascade_count, factorize_count, MkaFactor};
 pub use stage::{BlockFactor, Stage};
 
 use crate::cluster::{cluster_rows, ClusterMethod};
@@ -128,6 +136,7 @@ pub fn factorize(k: &Mat, x: Option<&Mat>, config: &MkaConfig) -> Result<MkaFact
     if k.asymmetry() > 1e-6 * k.max_abs().max(1.0) {
         return Err(Error::Linalg("MKA needs a symmetric matrix".into()));
     }
+    factor::record_factorize();
     let n = k.rows;
     let mut rng = Rng::new(config.seed);
     let compressor = config.compressor.build();

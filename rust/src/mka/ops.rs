@@ -3,6 +3,12 @@
 //! f(K̃) is obtained by applying f to the core spectrum (one d³ EVD) and to
 //! each wavelet diagonal value — O(n + d³) total, "direct method" in the
 //! paper's sense (no iterative solver anywhere).
+//!
+//! Every operation here acts on K̃ + `shift`·I: the core EVD is of the
+//! noise-free core (shared across shifted views), and f is applied to
+//! λ + shift / d + shift at the point of use. That is what makes σ²
+//! re-tuning free — `solve`, `logdet`, `spectrum` at a new noise level
+//! are pure arithmetic on an existing factorization.
 
 use super::factor::MkaFactor;
 use crate::error::{Error, Result};
@@ -10,28 +16,30 @@ use crate::la::blas::{gemm, gemm_tn, scale_rows};
 use crate::la::dense::Mat;
 
 impl MkaFactor {
-    /// Solve K̃ x = b exactly (x = K̃⁻¹ b). Errors if the factor is
+    /// Solve (K̃ + shift·I) x = b exactly. Errors if the shifted factor is
     /// numerically singular.
     pub fn solve(&self, b: &[f64]) -> Result<Vec<f64>> {
         self.check_invertible()?;
         let eig = self.eig();
+        let s = self.shift;
         Ok(self.apply_with(
             b,
-            |v| spectral_apply(eig, v, |lam| 1.0 / lam),
-            |d| 1.0 / d,
+            |v| spectral_apply(eig, v, |lam| 1.0 / (lam + s)),
+            |d| 1.0 / (d + s),
         ))
     }
 
-    /// Blocked solve K̃ X = B for a block of right-hand sides (columns of
-    /// `b`): one cascade, one core spectral op — the multi-RHS Proposition
-    /// 7 path used by batched prediction.
+    /// Blocked solve (K̃ + shift·I) X = B for a block of right-hand sides
+    /// (columns of `b`): one cascade, one core spectral op — the
+    /// multi-RHS Proposition 7 path used by batched prediction.
     pub fn solve_mat(&self, b: &Mat) -> Result<Mat> {
         self.check_invertible()?;
         let eig = self.eig();
+        let s = self.shift;
         Ok(self.apply_with_mat(
             b,
-            |v| spectral_apply_mat(eig, v, |lam| 1.0 / lam),
-            |d| 1.0 / d,
+            |v| spectral_apply_mat(eig, v, |lam| 1.0 / (lam + s)),
+            |d| 1.0 / (d + s),
         ))
     }
 
@@ -42,62 +50,68 @@ impl MkaFactor {
     pub fn solve_mat_par(&self, b: &Mat, n_threads: usize) -> Result<Mat> {
         self.check_invertible()?;
         let eig = self.eig();
+        let s = self.shift;
         Ok(self.par_over_cols(b, n_threads, |chunk, stage_threads| {
             self.apply_with_mat_stage(
                 chunk,
-                |v| spectral_apply_mat(eig, v, |lam| 1.0 / lam),
-                |d| 1.0 / d,
+                |v| spectral_apply_mat(eig, v, |lam| 1.0 / (lam + s)),
+                |d| 1.0 / (d + s),
                 stage_threads,
             )
         }))
     }
 
-    /// K̃^α b for any real α (Proposition 7 item 1). Requires positive
-    /// spectrum for non-integer α.
+    /// (K̃ + shift·I)^α b for any real α (Proposition 7 item 1). Requires
+    /// positive shifted spectrum for non-integer α.
     pub fn pow_apply(&self, alpha: f64, b: &[f64]) -> Vec<f64> {
         let eig = self.eig();
+        let s = self.shift;
         self.apply_with(
             b,
-            |v| spectral_apply(eig, v, |lam| signed_pow(lam, alpha)),
-            |d| signed_pow(d, alpha),
+            |v| spectral_apply(eig, v, |lam| signed_pow(lam + s, alpha)),
+            |d| signed_pow(d + s, alpha),
         )
     }
 
-    /// Blocked K̃^α B (columns of `b` are independent vectors).
+    /// Blocked (K̃ + shift·I)^α B (columns of `b` are independent vectors).
     pub fn pow_apply_mat(&self, alpha: f64, b: &Mat) -> Mat {
         let eig = self.eig();
+        let s = self.shift;
         self.apply_with_mat(
             b,
-            |v| spectral_apply_mat(eig, v, |lam| signed_pow(lam, alpha)),
-            |d| signed_pow(d, alpha),
+            |v| spectral_apply_mat(eig, v, |lam| signed_pow(lam + s, alpha)),
+            |d| signed_pow(d + s, alpha),
         )
     }
 
-    /// exp(β K̃) b (Proposition 7 item 2) — e.g. diffusion kernels from a
-    /// factorized graph Laplacian.
+    /// exp(β (K̃ + shift·I)) b (Proposition 7 item 2) — e.g. diffusion
+    /// kernels from a factorized graph Laplacian.
     pub fn exp_apply(&self, beta: f64, b: &[f64]) -> Vec<f64> {
         let eig = self.eig();
+        let s = self.shift;
         self.apply_with(
             b,
-            |v| spectral_apply(eig, v, |lam| (beta * lam).exp()),
-            |d| (beta * d).exp(),
+            |v| spectral_apply(eig, v, |lam| (beta * (lam + s)).exp()),
+            |d| (beta * (d + s)).exp(),
         )
     }
 
-    /// Blocked exp(β K̃) B.
+    /// Blocked exp(β (K̃ + shift·I)) B.
     pub fn exp_apply_mat(&self, beta: f64, b: &Mat) -> Mat {
         let eig = self.eig();
+        let s = self.shift;
         self.apply_with_mat(
             b,
-            |v| spectral_apply_mat(eig, v, |lam| (beta * lam).exp()),
-            |d| (beta * d).exp(),
+            |v| spectral_apply_mat(eig, v, |lam| (beta * (lam + s)).exp()),
+            |d| (beta * (d + s)).exp(),
         )
     }
 
-    /// log det K̃ (Proposition 7 item 3) — the GP marginal-likelihood term.
+    /// log det (K̃ + shift·I) (Proposition 7 item 3) — the GP
+    /// marginal-likelihood term.
     ///
-    /// Errors on a non-positive spectral value: log det of a non-psd
-    /// "kernel" is a modelling bug upstream, and silently summing
+    /// Errors on a non-positive shifted spectral value: log det of a
+    /// non-psd "kernel" is a modelling bug upstream, and silently summing
     /// log|λ| (the old behaviour) produced a finite but meaningless
     /// marginal likelihood.
     pub fn logdet(&self) -> Result<f64> {
@@ -105,6 +119,7 @@ impl MkaFactor {
         let eig = self.eig();
         let mut ld = 0.0f64;
         for &l in &eig.values {
+            let l = l + self.shift;
             if l <= 0.0 {
                 return Err(Error::Linalg(format!(
                     "logdet: non-positive core eigenvalue {l}"
@@ -112,6 +127,7 @@ impl MkaFactor {
             }
             ld += l.ln();
         }
+        // all_dvals reads through the shift already.
         for d in self.all_dvals() {
             if d <= 0.0 {
                 return Err(Error::Linalg(format!(
@@ -123,29 +139,31 @@ impl MkaFactor {
         Ok(ld)
     }
 
-    /// det K̃ = det(K_s) · Π D entries (rotations have det 1).
+    /// det (K̃ + shift·I) = Π (λ_i + shift) · Π (d + shift) — rotations
+    /// have det 1.
     pub fn det(&self) -> f64 {
         let eig = self.eig();
-        let mut det: f64 = eig.values.iter().product();
+        let mut det: f64 = eig.values.iter().map(|&l| l + self.shift).product();
         for d in self.all_dvals() {
             det *= d;
         }
         det
     }
 
-    /// The full spectrum of K̃: core eigenvalues ∪ wavelet diagonal values
-    /// (exact — the wavelet coordinates are eigendirections of K̃ up to the
-    /// orthogonal cascade).
+    /// The full spectrum of K̃ + shift·I: shifted core eigenvalues ∪
+    /// shifted wavelet diagonal values (exact — the wavelet coordinates
+    /// are eigendirections of K̃ up to the orthogonal cascade).
     pub fn spectrum(&self) -> Vec<f64> {
-        let mut s = self.eig().values.clone();
+        let mut s: Vec<f64> = self.eig().values.iter().map(|&l| l + self.shift).collect();
         s.extend(self.all_dvals());
         s.sort_by(|a, b| a.partial_cmp(b).unwrap());
         s
     }
 
-    /// Smallest spectral value (negative ⇒ not psd).
+    /// Smallest shifted spectral value (negative ⇒ K̃ + shift·I not psd).
     pub fn min_eig(&self) -> f64 {
-        let core_min = self.eig().values.first().copied().unwrap_or(f64::INFINITY);
+        let core_min =
+            self.eig().values.first().copied().unwrap_or(f64::INFINITY) + self.shift;
         let d_min =
             self.all_dvals().into_iter().fold(f64::INFINITY, f64::min);
         core_min.min(d_min)
@@ -159,18 +177,22 @@ impl MkaFactor {
         // then returned garbage amplified by ~1/λ_min. RTOL is a few
         // hundred ulps — merely ill-conditioned factors (κ up to ~1e13)
         // still solve; only spectra unresolvable in f64 are rejected.
+        // The gate sees the *shifted* spectrum: a noise-free factor may be
+        // singular while the σ²-shifted view it serves is λ_min ≥ σ².
         const RTOL: f64 = 64.0 * f64::EPSILON; // ≈ 1.4e-14
         let eig = self.eig();
         let mut max_mag = 0.0f64;
         for &l in &eig.values {
-            max_mag = max_mag.max(l.abs());
+            max_mag = max_mag.max((l + self.shift).abs());
         }
         let dvals = self.all_dvals();
         for &d in &dvals {
             max_mag = max_mag.max(d.abs());
         }
         let tol = RTOL * max_mag.max(1e-300);
-        if eig.values.iter().any(|l| l.abs() < tol) || dvals.iter().any(|d| d.abs() < tol) {
+        if eig.values.iter().any(|&l| (l + self.shift).abs() < tol)
+            || dvals.iter().any(|d| d.abs() < tol)
+        {
             return Err(Error::Linalg(format!(
                 "MKA factor is numerically singular (spectral value below {RTOL:e} of max magnitude {max_mag:e})"
             )));
@@ -225,6 +247,7 @@ mod tests {
     use crate::la::givens::{Givens, GivensSeq};
     use crate::mka::stage::{BlockFactor, Stage};
     use crate::util::Rng;
+    use std::sync::Arc;
 
     fn tiny_factor() -> MkaFactor {
         let mut seq = GivensSeq::new();
@@ -317,6 +340,69 @@ mod tests {
         assert!(f.min_eig() > 0.0);
     }
 
+    /// Every Proposition-7 operation of the shifted view must agree with
+    /// the dense EVD of K̃ + σ²I — the point of the shift refactor.
+    #[test]
+    fn shifted_ops_match_dense_shifted_matrix() {
+        let f = tiny_factor();
+        let s2 = 0.25;
+        let fs = f.shifted(s2);
+        let mut dense = f.to_dense();
+        dense.add_diag(s2);
+        let e = SymEig::new(&dense);
+
+        // solve inverts the shifted operator
+        let mut rng = Rng::new(31);
+        let x = rng.normal_vec(4);
+        let b = fs.matvec(&x);
+        let xr = fs.solve(&b).unwrap();
+        for i in 0..4 {
+            assert!((xr[i] - x[i]).abs() < 1e-10);
+        }
+        // logdet / det / spectrum / min_eig all read λ + σ²
+        let ld_dense: f64 = e.values.iter().map(|l| l.ln()).sum();
+        assert!((fs.logdet().unwrap() - ld_dense).abs() < 1e-9);
+        assert!((fs.det() - e.values.iter().product::<f64>()).abs() < 1e-9);
+        for (a, b) in fs.spectrum().iter().zip(&e.values) {
+            assert!((a - b).abs() < 1e-9, "{a} vs {b}");
+        }
+        assert!((fs.min_eig() - e.values[0]).abs() < 1e-9);
+        // pow/exp act on the shifted spectrum
+        let expm = e.apply_fn(|l| (0.3 * l).exp());
+        let fast = fs.exp_apply(0.3, &x);
+        let slow = gemv(&expm, &x);
+        for i in 0..4 {
+            assert!((fast[i] - slow[i]).abs() < 1e-9);
+        }
+        let half = fs.pow_apply(0.5, &x);
+        let full = fs.pow_apply(0.5, &half);
+        let direct = fs.matvec(&x);
+        for i in 0..4 {
+            assert!((full[i] - direct[i]).abs() < 1e-9);
+        }
+        // the underlying noise-free factor is untouched
+        assert_eq!(f.shift, 0.0);
+        assert!((f.logdet().unwrap()
+            - SymEig::new(&f.to_dense()).values.iter().map(|l| l.ln()).sum::<f64>())
+        .abs()
+            < 1e-9);
+    }
+
+    /// A factor that is singular at shift 0 becomes well-posed under a
+    /// positive noise shift — λ_min(K̃ + σ²I) ≥ σ² for psd K̃.
+    #[test]
+    fn shift_rescues_singular_spectrum() {
+        let core = Mat::from_rows(&[&[1.0, 0.0], &[0.0, 1e-18]]);
+        let f = MkaFactor::new(2, vec![], core);
+        assert!(f.solve(&[1.0, 1.0]).is_err());
+        assert!(f.logdet().is_err());
+        let fs = f.shifted(0.1);
+        let x = fs.solve(&[1.0, 1.0]).unwrap();
+        assert!((x[0] - 1.0 / 1.1).abs() < 1e-12);
+        assert!((x[1] - 1.0 / (0.1 + 1e-18)).abs() < 1e-6);
+        assert!((fs.logdet().unwrap() - (1.1f64.ln() + 0.1f64.ln())).abs() < 1e-9);
+    }
+
     #[test]
     fn solve_mat_matches_per_column_solve() {
         let f = tiny_factor();
@@ -331,6 +417,17 @@ mod tests {
         }
         let par = f.solve_mat_par(&b, 3).unwrap();
         assert!(par.sub(&blocked).max_abs() < 1e-12);
+        // shifted views run the same blocked paths
+        let fs = f.shifted(0.4);
+        let sb = fs.solve_mat(&b).unwrap();
+        let sp = fs.solve_mat_par(&b, 3).unwrap();
+        assert!(sp.sub(&sb).max_abs() < 1e-12);
+        for j in 0..6 {
+            let col = fs.solve(&b.col(j)).unwrap();
+            for i in 0..4 {
+                assert!((sb.at(i, j) - col[i]).abs() < 1e-12, "shifted ({i},{j})");
+            }
+        }
     }
 
     #[test]
@@ -362,7 +459,7 @@ mod tests {
         assert!(f.logdet().is_err());
         // A tiny wavelet diagonal value trips the same gate.
         let mut f2 = tiny_factor();
-        f2.stages[0].dvals[1] = 1e-20;
+        Arc::make_mut(&mut f2.stages)[0].dvals[1] = 1e-20;
         assert!(f2.solve(&[1.0; 4]).is_err());
         // Well-conditioned factors still pass.
         assert!(tiny_factor().solve(&[1.0; 4]).is_ok());
@@ -376,7 +473,7 @@ mod tests {
     fn logdet_rejects_non_positive_spectrum() {
         // Negative wavelet diagonal: |λ| used to be taken silently.
         let mut f = tiny_factor();
-        f.stages[0].dvals[0] = -0.7;
+        Arc::make_mut(&mut f.stages)[0].dvals[0] = -0.7;
         assert!(f.logdet().is_err());
         // det and pow_apply stay well-defined on the signed spectrum.
         assert!(f.det().is_finite());

@@ -40,7 +40,10 @@ pub struct Stage {
     pub core_global: Vec<usize>,
     /// Stage-input coordinates retired as wavelets.
     pub wavelet_global: Vec<usize>,
-    /// D_ℓ: diagonal values for the wavelet coordinates (same order).
+    /// D_ℓ: **noise-free** diagonal values for the wavelet coordinates
+    /// (same order). The owning [`crate::mka::MkaFactor`] adds its
+    /// diagonal `shift` (σ²) at the point of use, so stages are shared
+    /// unchanged between noise levels.
     pub dvals: Vec<f64>,
 }
 

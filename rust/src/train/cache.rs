@@ -1,0 +1,450 @@
+//! Per-lengthscale cache of the σ²-independent factor-stack quantities.
+//!
+//! Every evidence (and gradient) evaluation splits into an expensive part
+//! that depends **only on the length scales** — the noise-free MKA
+//! `factorize` (σ² is a spectrum shift, same rotations for every noise
+//! level: see `mka::factor`) and the Nyström blocks (K_mm, K_mn and
+//! chol(K_mm) never see σ²) — and near-free σ²-dependent arithmetic
+//! (shifted-spectrum solves/logdets, Woodbury forms with a new Λ).
+//! [`FactorCache`] memoizes the first part keyed on a caller-supplied
+//! scope (capacity budget k / seed / config identity) plus the exact
+//! bits of the (ARD) length-scale vector, so σ²-only optimizer moves —
+//! Nelder–Mead's σ² simplex vertex, revisited ℓ candidates, L-BFGS
+//! probes along the noise axis — cost **zero factorizations**, while a
+//! caller that varies k or seed against one instance cannot be handed
+//! the wrong entry. The trainer creates one cache per training run
+//! ([`FactorCache::with_default_capacity`], sized by
+//! `ServiceConfig.train_cache_factors`); the *dataset* stays outside the
+//! key and is the one thing a cache instance must not be shared across.
+//!
+//! Determinism: entries are bit-deterministic functions of their key
+//! (fixed seeds all the way down), so a cache hit returns exactly the
+//! value a rebuild would produce — concurrent optimizer starts sharing
+//! the cache cannot observe the hit/miss pattern in their results, and
+//! the PR-2 bit-determinism contract survives caching untouched. Two
+//! starts racing on the same key may both build (the build runs outside
+//! the lock precisely so starts never serialize on each other's
+//! factorizations); the first insert wins and the duplicate is dropped.
+
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+
+use crate::baselines::nystrom::NystromBlocks;
+use crate::error::Result;
+use crate::la::dense::Mat;
+use crate::mka::MkaFactor;
+
+/// Process-wide hit/miss counters, surfaced by the coordinator's
+/// `metrics` op as `compute.factor_cache_{hits,misses}`.
+static HITS: AtomicU64 = AtomicU64::new(0);
+static MISSES: AtomicU64 = AtomicU64::new(0);
+
+/// Total factor-cache hits across every training run in this process.
+pub fn factor_cache_hits() -> u64 {
+    HITS.load(Ordering::Relaxed)
+}
+
+/// Total factor-cache misses (σ²-independent builds) in this process.
+pub fn factor_cache_misses() -> u64 {
+    MISSES.load(Ordering::Relaxed)
+}
+
+/// Default per-run capacity; `ServiceConfig.train_cache_factors`
+/// overrides it at router construction (0 disables caching).
+static DEFAULT_CAPACITY: AtomicUsize = AtomicUsize::new(4);
+
+/// Set the process-wide default capacity new caches are created with.
+///
+/// Process-wide and last-writer-wins, exactly like `par::set_threads`
+/// (the other knob `Router::new` sizes from its config): embedding
+/// several routers with *different* `train_cache_factors` in one
+/// process makes the last-constructed router's value govern — a known
+/// tradeoff of the global-knob pattern, irrelevant for the served
+/// deployment (one router per process) and harmless for correctness
+/// (capacity only changes wall-clock, never values).
+pub fn set_default_capacity(cap: usize) {
+    DEFAULT_CAPACITY.store(cap, Ordering::Relaxed);
+}
+
+/// The current process-wide default capacity.
+pub fn default_capacity() -> usize {
+    DEFAULT_CAPACITY.load(Ordering::Relaxed)
+}
+
+/// σ²-independent MKA quantities at one length-scale vector.
+pub struct MkaEntry {
+    /// Noise-free factorization (shift 0); consumers take `shifted(σ²)`.
+    pub factor: MkaFactor,
+    /// The noise-free gram K(X, X) the factor was built from. Only the
+    /// gradient path reads it (∂K/∂θ is an elementwise map over it), and
+    /// an n×n dense matrix per cached length scale is real memory — so
+    /// the value path drops it after factorizing and it regenerates
+    /// lazily if a consumer ever asks.
+    gram: OnceLock<Mat>,
+}
+
+impl MkaEntry {
+    /// Entry holding the factor only (value path — no gram retained).
+    pub fn new(factor: MkaFactor) -> MkaEntry {
+        MkaEntry { factor, gram: OnceLock::new() }
+    }
+
+    /// Entry that keeps the gram it was factorized from (gradient path).
+    pub fn with_gram(factor: MkaFactor, gram: Mat) -> MkaEntry {
+        let slot = OnceLock::new();
+        let _ = slot.set(gram);
+        MkaEntry { factor, gram: slot }
+    }
+
+    /// The noise-free gram, rebuilt by `build` if this entry dropped it.
+    pub fn gram(&self, build: impl FnOnce() -> Mat) -> &Mat {
+        self.gram.get_or_init(build)
+    }
+}
+
+/// σ²-independent Nyström quantities at one length-scale vector
+/// (K_mm = `nb.w`, K_mn = `nb.kzf`, chol(K_mm) = `nb.w_chol`), plus
+/// lazily built per-method extras so SoR/PITC entries never pay for
+/// FITC's diagonals and vice versa.
+pub struct NystromEntry {
+    pub nb: NystromBlocks,
+    /// FITC's Λ ingredients (diag Q = diag(K_nm W⁻¹ K_mn), k_ii per
+    /// train point) — σ²-independent, built on first FITC use only.
+    fitc_diag: OnceLock<(Vec<f64>, Vec<f64>)>,
+    /// PITC's conditioning partition, tagged by the block size it was
+    /// built for (block is not part of the entry key — Nyström entries
+    /// are shared across SoR/FITC/PITC — so the tag guards a caller that
+    /// varies block size against one entry). Built on first PITC use.
+    clusters: Mutex<Option<(u64, Arc<Vec<Vec<usize>>>)>>,
+    /// V = W⁻¹U (m×n) — the gradient paths' dominant σ²-independent
+    /// product (O(m²n)); built on first gradient use so a σ²-only
+    /// L-BFGS move pays none of it.
+    winv_u: OnceLock<Mat>,
+}
+
+impl NystromEntry {
+    pub fn new(nb: NystromBlocks) -> NystromEntry {
+        NystromEntry {
+            nb,
+            fitc_diag: OnceLock::new(),
+            clusters: Mutex::new(None),
+            winv_u: OnceLock::new(),
+        }
+    }
+
+    /// FITC's (diag Q, k_ii), built by `build` on first use. Entries are
+    /// shared across threads (`Arc`); `OnceLock` keeps one winner and the
+    /// build is deterministic, so racing initializers agree bit-for-bit.
+    pub fn fitc_diag(
+        &self,
+        build: impl FnOnce() -> (Vec<f64>, Vec<f64>),
+    ) -> &(Vec<f64>, Vec<f64>) {
+        self.fitc_diag.get_or_init(build)
+    }
+
+    /// PITC's clusters for conditioning-block size `block`, built by
+    /// `build` on first use (or when `block` differs from the cached
+    /// partition's — the entry never hands back clusters for a block
+    /// size it was not asked about).
+    pub fn clusters(
+        &self,
+        block: u64,
+        build: impl FnOnce() -> Vec<Vec<usize>>,
+    ) -> Arc<Vec<Vec<usize>>> {
+        let mut slot = self.clusters.lock().unwrap();
+        if let Some((b, c)) = slot.as_ref() {
+            if *b == block {
+                return Arc::clone(c);
+            }
+        }
+        let built = Arc::new(build());
+        *slot = Some((block, Arc::clone(&built)));
+        built
+    }
+
+    /// W⁻¹U, built by `build` on first use.
+    pub fn winv_u(&self, build: impl FnOnce() -> Mat) -> &Mat {
+        self.winv_u.get_or_init(build)
+    }
+}
+
+struct Slot<T> {
+    key: Vec<u64>,
+    entry: Arc<T>,
+    tick: u64,
+}
+
+struct Store<T> {
+    slots: Vec<Slot<T>>,
+    tick: u64,
+}
+
+impl<T> Default for Store<T> {
+    fn default() -> Self {
+        Store { slots: Vec::new(), tick: 0 }
+    }
+}
+
+/// A small LRU over σ²-independent factor entries, keyed on (scope,
+/// exact f64 bits of the length-scale vector). One instance per
+/// training run over one dataset.
+pub struct FactorCache {
+    cap: usize,
+    hits: AtomicU64,
+    misses: AtomicU64,
+    mka: Mutex<Store<MkaEntry>>,
+    nystrom: Mutex<Store<NystromEntry>>,
+}
+
+impl FactorCache {
+    /// A cache holding at most `cap` entries per family (MKA / Nyström).
+    /// `cap = 0` disables storage: every lookup builds and nothing is
+    /// kept — but each build still counts as an instance-level miss, so
+    /// `TrainReport.factorizations` stays truthful when caching is
+    /// configured off. Only the process-wide traffic gauges skip
+    /// disabled caches (the uncached compatibility wrappers create a
+    /// throwaway disabled instance per call).
+    pub fn new(cap: usize) -> FactorCache {
+        FactorCache {
+            cap,
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+            mka: Mutex::new(Store::default()),
+            nystrom: Mutex::new(Store::default()),
+        }
+    }
+
+    /// A cache sized by the service-configurable process default.
+    pub fn with_default_capacity() -> FactorCache {
+        FactorCache::new(default_capacity())
+    }
+
+    /// A cache that never stores anything.
+    pub fn disabled() -> FactorCache {
+        FactorCache::new(0)
+    }
+
+    /// Hits observed by this instance (process-local, pollution-free —
+    /// unlike the global counters, unaffected by concurrent runs).
+    pub fn hits(&self) -> u64 {
+        self.hits.load(Ordering::Relaxed)
+    }
+
+    /// Misses (= σ²-independent builds) performed through this instance.
+    pub fn misses(&self) -> u64 {
+        self.misses.load(Ordering::Relaxed)
+    }
+
+    /// The MKA entry for the length-scale vector `ells`, building it with
+    /// `build` on a miss. `scope` must encode everything *besides* the
+    /// length scales that determines the entry for a fixed dataset
+    /// (d_core/block/seed of the config) — two lookups with equal ℓ but
+    /// different scopes must not collide.
+    pub fn mka(
+        &self,
+        scope: &[u64],
+        ells: &[f64],
+        build: impl FnOnce() -> Result<MkaEntry>,
+    ) -> Result<Arc<MkaEntry>> {
+        get_or_build(&self.mka, self.cap, &self.hits, &self.misses, scope, ells, build)
+    }
+
+    /// The Nyström entry for the length-scale vector `ells`; `scope`
+    /// carries (landmark count, seed) — see [`FactorCache::mka`].
+    pub fn nystrom(
+        &self,
+        scope: &[u64],
+        ells: &[f64],
+        build: impl FnOnce() -> Result<NystromEntry>,
+    ) -> Result<Arc<NystromEntry>> {
+        get_or_build(&self.nystrom, self.cap, &self.hits, &self.misses, scope, ells, build)
+    }
+}
+
+fn key_bits(scope: &[u64], ells: &[f64]) -> Vec<u64> {
+    scope.iter().copied().chain(ells.iter().map(|l| l.to_bits())).collect()
+}
+
+fn get_or_build<T>(
+    store: &Mutex<Store<T>>,
+    cap: usize,
+    hits: &AtomicU64,
+    misses: &AtomicU64,
+    scope: &[u64],
+    ells: &[f64],
+    build: impl FnOnce() -> Result<T>,
+) -> Result<Arc<T>> {
+    if cap == 0 {
+        // Storage disabled: the build is real work, so the instance
+        // counts it (a train run with train_cache_factors = 0 must
+        // report factorizations == evals, not 0); the global gauges
+        // only track enabled caches.
+        misses.fetch_add(1, Ordering::Relaxed);
+        return build().map(Arc::new);
+    }
+    let key = key_bits(scope, ells);
+    {
+        let mut s = store.lock().unwrap();
+        s.tick += 1;
+        let tick = s.tick;
+        if let Some(slot) = s.slots.iter_mut().find(|sl| sl.key == key) {
+            slot.tick = tick;
+            hits.fetch_add(1, Ordering::Relaxed);
+            HITS.fetch_add(1, Ordering::Relaxed);
+            return Ok(Arc::clone(&slot.entry));
+        }
+    }
+    // Build OUTSIDE the lock: concurrent optimizer starts must not
+    // serialize on each other's factorizations. A failed build is not
+    // cached — the error propagates and a later lookup retries.
+    misses.fetch_add(1, Ordering::Relaxed);
+    MISSES.fetch_add(1, Ordering::Relaxed);
+    let built = Arc::new(build()?);
+    let mut s = store.lock().unwrap();
+    s.tick += 1;
+    let tick = s.tick;
+    if let Some(slot) = s.slots.iter_mut().find(|sl| sl.key == key) {
+        // Another thread built the same (bit-identical) entry first;
+        // keep the stored one and drop the duplicate.
+        slot.tick = tick;
+        return Ok(Arc::clone(&slot.entry));
+    }
+    if s.slots.len() >= cap {
+        // Evict the least-recently-used slot.
+        let lru = s
+            .slots
+            .iter()
+            .enumerate()
+            .min_by_key(|(_, sl)| sl.tick)
+            .map(|(i, _)| i)
+            .expect("non-empty at capacity");
+        s.slots.remove(lru);
+    }
+    s.slots.push(Slot { key, entry: Arc::clone(&built), tick });
+    Ok(built)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::error::Error;
+
+    fn entry(v: f64) -> MkaEntry {
+        MkaEntry::new(MkaFactor::new(1, vec![], Mat::from_rows(&[&[v]])))
+    }
+
+    #[test]
+    fn mka_entry_gram_is_lazy_and_sticky() {
+        let kept = MkaEntry::with_gram(
+            MkaFactor::new(1, vec![], Mat::from_rows(&[&[2.0]])),
+            Mat::from_rows(&[&[2.0]]),
+        );
+        // with_gram: no rebuild on access
+        assert_eq!(kept.gram(|| panic!("gram was retained")).at(0, 0), 2.0);
+        // new: regenerates once, then sticks
+        let dropped = entry(3.0);
+        let mut builds = 0;
+        let g = dropped
+            .gram(|| {
+                builds += 1;
+                Mat::from_rows(&[&[3.0]])
+            })
+            .at(0, 0);
+        assert_eq!(g, 3.0);
+        assert_eq!(dropped.gram(|| panic!("second build")).at(0, 0), 3.0);
+        assert_eq!(builds, 1);
+    }
+
+    #[test]
+    fn hit_and_miss_accounting() {
+        let c = FactorCache::new(4);
+        let a = c.mka(&[], &[1.0], || Ok(entry(1.0))).unwrap();
+        assert_eq!((c.hits(), c.misses()), (0, 1));
+        let b = c.mka(&[], &[1.0], || panic!("must not rebuild on a hit")).unwrap();
+        assert_eq!((c.hits(), c.misses()), (1, 1));
+        assert!(Arc::ptr_eq(&a, &b), "hit must return the stored entry");
+        // a different ARD vector is a different key
+        let _ = c.mka(&[], &[1.0, 1.0], || Ok(entry(2.0))).unwrap();
+        assert_eq!((c.hits(), c.misses()), (1, 2));
+    }
+
+    /// Equal length scales under different scopes (k / seed / config)
+    /// are different entries — a caller varying the budget against one
+    /// instance must never be handed the wrong factor.
+    #[test]
+    fn scope_isolates_entries() {
+        let c = FactorCache::new(4);
+        let _ = c.mka(&[16, 7], &[1.0], || Ok(entry(1.0))).unwrap();
+        let mut rebuilt = false;
+        let _ = c
+            .mka(&[32, 7], &[1.0], || {
+                rebuilt = true;
+                Ok(entry(2.0))
+            })
+            .unwrap();
+        assert!(rebuilt, "same ℓ, different scope must not collide");
+        // and the original scope still hits
+        let _ = c.mka(&[16, 7], &[1.0], || panic!("scoped hit expected")).unwrap();
+        assert_eq!((c.hits(), c.misses()), (1, 2));
+    }
+
+    #[test]
+    fn lru_evicts_least_recently_used() {
+        let c = FactorCache::new(2);
+        let _ = c.mka(&[], &[1.0], || Ok(entry(1.0))).unwrap();
+        let _ = c.mka(&[], &[2.0], || Ok(entry(2.0))).unwrap();
+        // touch 1.0 so 2.0 becomes LRU, then insert a third
+        let _ = c.mka(&[], &[1.0], || panic!("hit")).unwrap();
+        let _ = c.mka(&[], &[3.0], || Ok(entry(3.0))).unwrap();
+        // 1.0 survived, 2.0 was evicted
+        let _ = c.mka(&[], &[1.0], || panic!("1.0 must still be cached")).unwrap();
+        let mut rebuilt = false;
+        let _ = c.mka(&[], &[2.0], || {
+                rebuilt = true;
+                Ok(entry(2.0))
+            })
+            .unwrap();
+        assert!(rebuilt, "2.0 must have been evicted");
+    }
+
+    #[test]
+    fn disabled_cache_always_builds_and_counts_its_misses() {
+        let c = FactorCache::disabled();
+        let mut builds = 0;
+        for _ in 0..3 {
+            let _ = c.mka(&[], &[1.0], || {
+                    builds += 1;
+                    Ok(entry(1.0))
+                })
+                .unwrap();
+        }
+        assert_eq!(builds, 3);
+        // Every build is an instance-level miss even with storage off —
+        // factorization reporting must not claim perfect reuse when the
+        // cache is disabled.
+        assert_eq!((c.hits(), c.misses()), (0, 3));
+    }
+
+    #[test]
+    fn build_errors_are_not_cached() {
+        let c = FactorCache::new(2);
+        let err = c.mka(&[], &[1.0], || Err(Error::Linalg("boom".into())));
+        assert!(err.is_err());
+        // the failed key rebuilds (and can now succeed)
+        let ok = c.mka(&[], &[1.0], || Ok(entry(1.0)));
+        assert!(ok.is_ok());
+        assert_eq!(c.misses(), 2);
+    }
+
+    #[test]
+    fn capacity_is_respected() {
+        assert_eq!(FactorCache::new(7).cap, 7);
+        assert_eq!(FactorCache::disabled().cap, 0);
+        // The process-wide default knob is last-writer-wins and shared
+        // with every concurrently constructed Router (which writes it in
+        // Router::new), so only exercise the API — asserting a specific
+        // global value here would race other lib tests.
+        set_default_capacity(default_capacity());
+        let _ = FactorCache::with_default_capacity();
+    }
+}

@@ -29,7 +29,6 @@
 //!   direction needs tr(K̃′⁻¹), which the factor's explicit spectrum
 //!   (Proposition 7) gives **exactly** — no probes.
 
-use crate::baselines::nystrom::{select_landmarks, LandmarkMethod, NystromBlocks};
 use crate::data::dataset::Dataset;
 use crate::error::{Error, Result};
 use crate::experiments::methods::{mka_config_for, pitc_block_size, Method};
@@ -38,8 +37,9 @@ use crate::kernels::{ArdRbfKernel, Kernel};
 use crate::la::blas::{dot, gemm, gemm_nt, gemm_tn, gemv, gemv_t};
 use crate::la::chol::Chol;
 use crate::la::dense::Mat;
-use crate::mka::{factorize, MkaConfig};
-use crate::train::mll::{gaussian_mll, pitc_clusters};
+use crate::mka::MkaConfig;
+use crate::train::cache::FactorCache;
+use crate::train::mll::{gaussian_mll, mka_entry, mka_scope, nystrom_entry, pitc_clusters};
 use crate::util::Rng;
 
 /// Default Hutchinson probe count for the MKA trace estimator.
@@ -173,15 +173,21 @@ fn nystrom_mll_grad(
     m: usize,
     seed: u64,
     fitc: bool,
+    cache: &FactorCache,
 ) -> Result<MllGrad> {
     check_hp(data, hp)?;
     let n = data.n();
     let s2 = hp.sigma2;
     let kern = hp.kernel();
-    let z = select_landmarks(&data.x, m, LandmarkMethod::Uniform, seed);
-    let nb = NystromBlocks::new(data, &kern, z)?;
+    // The σ²-independent blocks (landmarks, K_mm, K_mn, chol) come from
+    // the per-lengthscale cache — a σ²-only line-search move reuses them.
+    let entry =
+        cache.nystrom(&[m as u64, seed], &hp.lengthscales, || nystrom_entry(data, &kern, m, seed))?;
+    let nb = &entry.nb;
     let u = &nb.kzf; // m×n
-    let v = nb.w_chol.solve_mat(u); // W⁻¹U
+    // V = W⁻¹U is the dominant σ²-independent product (O(m²n)) — cached
+    // on the entry so σ²-only moves skip it too.
+    let v = entry.winv_u(|| nb.w_chol.solve_mat(u));
 
     // Λ and, for FITC, where the (k_ii − q_ii) ≥ 0 clamp engaged (there
     // the length-scale derivative of Λ is zero).
@@ -274,7 +280,7 @@ pub fn mll_grad_sor(
     m: usize,
     seed: u64,
 ) -> Result<MllGrad> {
-    nystrom_mll_grad(data, hp, tied, m, seed, false)
+    nystrom_mll_grad(data, hp, tied, m, seed, false, &FactorCache::disabled())
 }
 
 /// FITC evidence gradient (Λ = diag(K − Q) + σ²I), landmarks as in
@@ -286,7 +292,7 @@ pub fn mll_grad_fitc(
     m: usize,
     seed: u64,
 ) -> Result<MllGrad> {
-    nystrom_mll_grad(data, hp, tied, m, seed, true)
+    nystrom_mll_grad(data, hp, tied, m, seed, true, &FactorCache::disabled())
 }
 
 // ----------------------------------------------------------------------
@@ -319,17 +325,33 @@ pub fn mll_grad_pitc(
     block_size: usize,
     seed: u64,
 ) -> Result<MllGrad> {
+    mll_grad_pitc_cached(data, hp, tied, m, block_size, seed, &FactorCache::disabled())
+}
+
+/// [`mll_grad_pitc`] with the per-lengthscale Nyström blocks served from
+/// a [`FactorCache`].
+pub fn mll_grad_pitc_cached(
+    data: &Dataset,
+    hp: &ArdHyperParams,
+    tied: bool,
+    m: usize,
+    block_size: usize,
+    seed: u64,
+    cache: &FactorCache,
+) -> Result<MllGrad> {
     check_hp(data, hp)?;
     let n = data.n();
     let s2 = hp.sigma2;
     let kern = hp.kernel();
-    let z = select_landmarks(&data.x, m, LandmarkMethod::Uniform, seed);
-    let nb = NystromBlocks::new(data, &kern, z)?;
+    let entry =
+        cache.nystrom(&[m as u64, seed], &hp.lengthscales, || nystrom_entry(data, &kern, m, seed))?;
+    let nb = &entry.nb;
     let u = &nb.kzf;
     let mm = nb.m();
     let all_rows: Vec<usize> = (0..mm).collect();
-    let v = nb.w_chol.solve_mat(u);
-    let clusters = pitc_clusters(&data.x, block_size, seed);
+    let v = entry.winv_u(|| nb.w_chol.solve_mat(u));
+    let clusters =
+        entry.clusters(block_size as u64, || pitc_clusters(&data.x, block_size, seed));
 
     // Per-block Λ_b = K_bb − Q_bb + σ²I; assemble S = UΛ⁻¹ and Λ⁻¹y by
     // scattering block results into the global column layout.
@@ -337,7 +359,7 @@ pub fn mll_grad_pitc(
     let mut ly = vec![0.0; n];
     let mut logdet_lam = 0.0;
     let mut blocks: Vec<PitcBlock> = Vec::with_capacity(clusters.len());
-    for members in &clusters {
+    for members in clusters.iter() {
         let xb = data.x.gather_rows(members);
         let kbb = kern.gram_sym(&xb);
         let qbb = nb.q_block(members, members);
@@ -447,13 +469,31 @@ pub fn mll_grad_mka(
     mode: TraceMode,
     probe_seed: u64,
 ) -> Result<MllGrad> {
+    mll_grad_mka_cached(data, hp, tied, cfg, mode, probe_seed, &FactorCache::disabled())
+}
+
+/// [`mll_grad_mka`] with the noise-free factorization (and the gram the
+/// ∂K/∂θ maps read) served from a per-lengthscale [`FactorCache`]: K̃′ =
+/// K̃ + σ²I is the factor's shifted spectrum view, so every gradient
+/// evaluation at a cached ℓ — in particular σ²-only L-BFGS moves — does
+/// zero factorizations.
+pub fn mll_grad_mka_cached(
+    data: &Dataset,
+    hp: &ArdHyperParams,
+    tied: bool,
+    cfg: &MkaConfig,
+    mode: TraceMode,
+    probe_seed: u64,
+    cache: &FactorCache,
+) -> Result<MllGrad> {
     check_hp(data, hp)?;
     let n = data.n();
     let kern = hp.kernel();
-    let k = kern.gram_sym(&data.x);
-    let mut kp = k.clone();
-    kp.add_diag(hp.sigma2);
-    let f = factorize(&kp, Some(&data.x), cfg)?;
+    let entry = cache.mka(&mka_scope(cfg), &hp.lengthscales, || mka_entry(data, &kern, cfg, true))?;
+    // The entry was built with its gram retained; the lazy accessor only
+    // rebuilds if a value-path entry (factor-only) ever lands on this key.
+    let k = entry.gram(|| kern.gram_sym(&data.x));
+    let f = entry.factor.shifted(hp.sigma2);
     let alpha = f.solve(&data.y)?;
     let mll = gaussian_mll(dot(&data.y, &alpha), f.logdet()?, n);
     let threads = crate::par::threads();
@@ -521,13 +561,29 @@ pub fn mll_grad(
     k: usize,
     seed: u64,
 ) -> Result<MllGrad> {
+    mll_grad_cached(method, data, hp, tied, k, seed, &FactorCache::disabled())
+}
+
+/// [`mll_grad`] with a per-run [`FactorCache`]: every family's
+/// σ²-independent half (noise-free MKA factor + gram, Nyström blocks) is
+/// looked up by the length-scale vector. Bit-identical to the uncached
+/// path — the L-BFGS trainer's evaluation loop rides this.
+pub fn mll_grad_cached(
+    method: Method,
+    data: &Dataset,
+    hp: &ArdHyperParams,
+    tied: bool,
+    k: usize,
+    seed: u64,
+    cache: &FactorCache,
+) -> Result<MllGrad> {
     match method {
         Method::Full => mll_grad_full(data, hp, tied),
-        Method::Sor => mll_grad_sor(data, hp, tied, k, seed),
-        Method::Fitc => mll_grad_fitc(data, hp, tied, k, seed),
+        Method::Sor => nystrom_mll_grad(data, hp, tied, k, seed, false, cache),
+        Method::Fitc => nystrom_mll_grad(data, hp, tied, k, seed, true, cache),
         Method::Pitc => {
             let block = pitc_block_size(data.n(), k);
-            mll_grad_pitc(data, hp, tied, k, block, seed)
+            mll_grad_pitc_cached(data, hp, tied, k, block, seed, cache)
         }
         Method::Meka => Err(Error::Config(
             "MEKA loses spsd-ness, so its marginal likelihood has no gradient; use grid CV"
@@ -535,13 +591,14 @@ pub fn mll_grad(
         )),
         Method::Mka => {
             let cfg = mka_config_for(k, data.n(), seed);
-            mll_grad_mka(
+            mll_grad_mka_cached(
                 data,
                 hp,
                 tied,
                 &cfg,
                 TraceMode::Probes(MKA_TRACE_PROBES),
                 seed ^ 0x70524f42,
+                cache,
             )
         }
     }

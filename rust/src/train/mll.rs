@@ -25,7 +25,7 @@ use crate::baselines::nystrom::{select_landmarks, LandmarkMethod, NystromBlocks}
 use crate::cluster::{cluster_rows, ClusterMethod};
 use crate::data::dataset::Dataset;
 use crate::error::{Error, Result};
-use crate::experiments::methods::{mka_config_for, Method};
+use crate::experiments::methods::{mka_config_for, pitc_block_size, Method};
 use crate::gp::cv::HyperParams;
 use crate::gp::full::FullGp;
 use crate::gp::mka_gp::MkaGp;
@@ -33,7 +33,8 @@ use crate::kernels::{Kernel, RbfKernel};
 use crate::la::blas::{dot, gemm, gemm_nt, gemv};
 use crate::la::chol::Chol;
 use crate::la::dense::Mat;
-use crate::mka::MkaConfig;
+use crate::mka::{factorize, MkaConfig, MkaFactor};
+use crate::train::cache::{FactorCache, MkaEntry, NystromEntry};
 use crate::util::Rng;
 
 /// Assemble the Gaussian evidence from its two computed terms.
@@ -61,10 +62,92 @@ pub fn mll_full(data: &Dataset, kernel: &dyn Kernel, sigma2: f64) -> Result<f64>
     Ok(gp.log_marginal(&data.y))
 }
 
-/// MKA evidence: one factorization of K̃ + σ²I, then a Proposition-7
-/// solve for the quadratic form and the free `logdet`.
+/// MKA evidence: one noise-free factorization served through the
+/// σ²-shifted spectrum view, then a Proposition-7 solve for the
+/// quadratic form and the free `logdet`.
 pub fn mll_mka(data: &Dataset, kernel: &dyn Kernel, sigma2: f64, cfg: &MkaConfig) -> Result<f64> {
     MkaGp::fit(data, kernel, sigma2, cfg)?.log_marginal()
+}
+
+/// Evidence straight from a (shifted) MKA factor — the σ²-dependent half
+/// of an MKA evidence evaluation, pure spectrum arithmetic once the
+/// factor exists. This is what a [`FactorCache`] hit reduces an
+/// evaluation to.
+pub fn mll_from_factor(f: &MkaFactor, y: &[f64]) -> Result<f64> {
+    let alpha = f.solve(y)?;
+    Ok(gaussian_mll(dot(y, &alpha), f.logdet()?, y.len()))
+}
+
+/// Build the σ²-independent Nyström entry (landmarks, K_mm/K_mn blocks,
+/// chol(K_mm)) that both the cached and the uncached SoR/FITC/PITC
+/// paths route through — landmark selection lives in exactly one place.
+/// FITC's diagonals and PITC's clusters attach lazily on first use.
+pub(crate) fn nystrom_entry(
+    data: &Dataset,
+    kernel: &dyn Kernel,
+    m: usize,
+    seed: u64,
+) -> Result<NystromEntry> {
+    let z = select_landmarks(&data.x, m, LandmarkMethod::Uniform, seed);
+    Ok(NystromEntry::new(NystromBlocks::new(data, kernel, z)?))
+}
+
+/// Build the σ²-independent MKA entry (noise-free gram → factorize) —
+/// the single home of the factor build for both the value and the
+/// gradient evaluators. `keep_gram` retains the gram on the entry for
+/// the gradient path's ∂K/∂θ maps; the value path drops it (an n×n
+/// dense matrix per cached length scale is real memory).
+pub(crate) fn mka_entry(
+    data: &Dataset,
+    kernel: &dyn Kernel,
+    cfg: &MkaConfig,
+    keep_gram: bool,
+) -> Result<MkaEntry> {
+    let g = kernel.gram_sym(&data.x);
+    let f = factorize(&g, Some(&data.x), cfg)?;
+    Ok(if keep_gram { MkaEntry::with_gram(f, g) } else { MkaEntry::new(f) })
+}
+
+/// Cache-key scope for an MKA config: everything besides the length
+/// scales (and the fixed dataset) that determines the factor.
+/// `n_threads` is deliberately absent — it is a wall-clock knob only,
+/// bit-identical results at any value (the PR-2 contract).
+pub(crate) fn mka_scope(cfg: &MkaConfig) -> [u64; 8] {
+    [
+        cfg.d_core as u64,
+        cfg.block_size as u64,
+        cfg.seed,
+        cfg.gamma.to_bits(),
+        cfg.max_stages as u64,
+        cfg.compressor as u64,
+        cfg.cluster_method as u64,
+        cfg.diag_floor.to_bits(),
+    ]
+}
+
+/// FITC's Λ = (k_ii − q_ii)₊ + σ² — the single home of the value-path
+/// clamp (the gradient path keeps its own copy because it also needs
+/// the clamp *mask*).
+pub(crate) fn fitc_lambda(k_diag: &[f64], q_diag: &[f64], sigma2: f64) -> Vec<f64> {
+    k_diag
+        .iter()
+        .zip(q_diag)
+        .map(|(&kd, &qd)| (kd - qd).max(0.0) + sigma2)
+        .collect()
+}
+
+/// The σ²-independent FITC diagonal ingredients of an entry (built once,
+/// shared by every σ² at this length scale).
+fn fitc_entry_diag<'a>(
+    e: &'a NystromEntry,
+    data: &Dataset,
+    kernel: &dyn Kernel,
+) -> &'a (Vec<f64>, Vec<f64>) {
+    e.fitc_diag(|| {
+        let qd = e.nb.q_diag();
+        let kd = (0..data.n()).map(|i| kernel.diag(data.x.row(i))).collect();
+        (qd, kd)
+    })
 }
 
 /// Evidence of the Nyström prior C = K_zfᵀ W⁻¹ K_zf + Λ for **diagonal**
@@ -111,10 +194,8 @@ pub fn mll_sor(
     m: usize,
     seed: u64,
 ) -> Result<f64> {
-    let z = select_landmarks(&data.x, m, LandmarkMethod::Uniform, seed);
-    let nb = NystromBlocks::new(data, kernel, z)?;
-    let lam = vec![sigma2; data.n()];
-    woodbury_mll(&nb, &data.y, &lam)
+    let e = nystrom_entry(data, kernel, m, seed)?;
+    woodbury_mll(&e.nb, &data.y, &vec![sigma2; data.n()])
 }
 
 /// FITC evidence (Λ = diag(K − Q) + σ²I, clamped like `Fitc::fit`).
@@ -125,13 +206,9 @@ pub fn mll_fitc(
     m: usize,
     seed: u64,
 ) -> Result<f64> {
-    let z = select_landmarks(&data.x, m, LandmarkMethod::Uniform, seed);
-    let nb = NystromBlocks::new(data, kernel, z)?;
-    let qd = nb.q_diag();
-    let lam: Vec<f64> = (0..data.n())
-        .map(|i| (kernel.diag(data.x.row(i)) - qd[i]).max(0.0) + sigma2)
-        .collect();
-    woodbury_mll(&nb, &data.y, &lam)
+    let e = nystrom_entry(data, kernel, m, seed)?;
+    let (qd, kd) = fitc_entry_diag(&e, data, kernel);
+    woodbury_mll(&e.nb, &data.y, &fitc_lambda(kd, qd, sigma2))
 }
 
 /// The PITC block structure: same clustering method, block size and seed
@@ -194,10 +271,9 @@ pub fn mll_pitc(
     block_size: usize,
     seed: u64,
 ) -> Result<f64> {
-    let z = select_landmarks(&data.x, m, LandmarkMethod::Uniform, seed);
-    let nb = NystromBlocks::new(data, kernel, z)?;
-    let clusters = pitc_clusters(&data.x, block_size, seed);
-    block_woodbury_mll(&nb, data, kernel, sigma2, &clusters)
+    let e = nystrom_entry(data, kernel, m, seed)?;
+    let clusters = e.clusters(block_size as u64, || pitc_clusters(&data.x, block_size, seed));
+    block_woodbury_mll(&e.nb, data, kernel, sigma2, &clusters)
 }
 
 /// Method-dispatched log marginal likelihood, with the same per-method
@@ -211,23 +287,55 @@ pub fn log_marginal_likelihood(
     k: usize,
     seed: u64,
 ) -> Result<f64> {
+    log_marginal_likelihood_cached(method, data, hp, k, seed, &FactorCache::disabled())
+}
+
+/// [`log_marginal_likelihood`] with a per-run [`FactorCache`]: the
+/// σ²-independent half of the evaluation — MKA's noise-free `factorize`,
+/// the Nyström family's (K_mm, K_mn, chol, diag Q) blocks — is looked up
+/// by length scale, so candidates that revisit an ℓ (in particular,
+/// σ²-only optimizer moves) are pure spectrum/Woodbury arithmetic. The
+/// cached value is bit-identical to the uncached one: entries are
+/// deterministic functions of the key.
+pub fn log_marginal_likelihood_cached(
+    method: Method,
+    data: &Dataset,
+    hp: HyperParams,
+    k: usize,
+    seed: u64,
+    cache: &FactorCache,
+) -> Result<f64> {
     check_hp(hp)?;
     let kern = RbfKernel::new(hp.lengthscale);
     let s2 = hp.sigma2;
+    let ells = [hp.lengthscale];
+    let nys_scope = [k as u64, seed];
     match method {
         Method::Full => mll_full(data, &kern, s2),
-        Method::Sor => mll_sor(data, &kern, s2, k, seed),
-        Method::Fitc => mll_fitc(data, &kern, s2, k, seed),
+        Method::Sor => {
+            let e = cache.nystrom(&nys_scope, &ells, || nystrom_entry(data, &kern, k, seed))?;
+            woodbury_mll(&e.nb, &data.y, &vec![s2; data.n()])
+        }
+        Method::Fitc => {
+            let e = cache.nystrom(&nys_scope, &ells, || nystrom_entry(data, &kern, k, seed))?;
+            let (qd, kd) = fitc_entry_diag(&e, data, &kern);
+            woodbury_mll(&e.nb, &data.y, &fitc_lambda(kd, qd, s2))
+        }
         Method::Pitc => {
-            let block = crate::experiments::methods::pitc_block_size(data.n(), k);
-            mll_pitc(data, &kern, s2, k, block, seed)
+            let block = pitc_block_size(data.n(), k);
+            let e = cache.nystrom(&nys_scope, &ells, || nystrom_entry(data, &kern, k, seed))?;
+            // Clusters depend only on (x, block, seed) — cached on the
+            // entry, so a σ²-only move re-clusters nothing either.
+            let clusters = e.clusters(block as u64, || pitc_clusters(&data.x, block, seed));
+            block_woodbury_mll(&e.nb, data, &kern, s2, &clusters)
         }
         Method::Meka => Err(Error::Config(
             "MEKA loses spsd-ness, so its marginal likelihood is undefined; use grid CV".into(),
         )),
         Method::Mka => {
             let cfg = mka_config_for(k, data.n(), seed);
-            mll_mka(data, &kern, s2, &cfg)
+            let e = cache.mka(&mka_scope(&cfg), &ells, || mka_entry(data, &kern, &cfg, false))?;
+            mll_from_factor(&e.factor.shifted(s2), &data.y)
         }
     }
 }
@@ -276,6 +384,29 @@ mod tests {
             let bad = log_marginal_likelihood(m, &d, absurd, 10, 5).unwrap();
             assert!(bad < good, "{m:?}: bad {bad} !< good {good}");
         }
+    }
+
+    /// Cached evaluation must be bit-identical to uncached — the cache
+    /// stores deterministic σ²-independent halves, so hit/miss patterns
+    /// are invisible in the values (the determinism contract).
+    #[test]
+    fn cached_evidence_is_bit_identical_to_uncached() {
+        let d = small();
+        let cache = FactorCache::new(4);
+        for m in [Method::Sor, Method::Fitc, Method::Pitc, Method::Mka] {
+            for s2 in [0.05, 0.1, 0.3] {
+                let hp = HyperParams { lengthscale: 1.2, sigma2: s2 };
+                let plain = log_marginal_likelihood(m, &d, hp, 10, 5).unwrap();
+                let cached =
+                    log_marginal_likelihood_cached(m, &d, hp, 10, 5, &cache).unwrap();
+                assert_eq!(plain.to_bits(), cached.to_bits(), "{m:?} σ²={s2}");
+            }
+        }
+        // All 12 evaluations share one ℓ: one MKA build, one Nyström
+        // build (SoR/FITC/PITC share identical landmarks at equal k and
+        // seed), everything else hits.
+        assert_eq!(cache.misses(), 2, "hits={} misses={}", cache.hits(), cache.misses());
+        assert_eq!(cache.hits(), 10);
     }
 
     #[test]

@@ -9,6 +9,11 @@
 //!
 //! * [`mll`] — per-method evidence evaluators (Full/Cholesky, MKA/
 //!   Proposition 7, Nyström family/Woodbury + determinant lemma);
+//! * [`cache`] — the per-run [`cache::FactorCache`]: the σ²-independent
+//!   half of every evaluation (noise-free MKA factorization, Nyström
+//!   K_mm/K_mn blocks) memoized per length-scale vector, so σ²-only
+//!   optimizer moves cost **zero factorizations** (noise is a spectrum
+//!   shift — `MkaFactor::shifted`);
 //! * [`grad`] — the matching analytic gradients
 //!   `∂(log marginal likelihood)/∂(log ℓ_d, log σ²)`: the classic
 //!   `½ tr((ααᵀ − C⁻¹)∂C/∂θ)` identity organized per family (blocked
@@ -25,13 +30,15 @@
 //!   API, used by the `train` CLI subcommand and the coordinator's async
 //!   `{"op":"train"}` job.
 
+pub mod cache;
 pub mod grad;
 pub mod mll;
 pub mod optimizer;
 pub mod trainer;
 
-pub use grad::{mll_grad, MllGrad, TraceMode};
-pub use mll::log_marginal_likelihood;
+pub use cache::{factor_cache_hits, factor_cache_misses, FactorCache};
+pub use grad::{mll_grad, mll_grad_cached, MllGrad, TraceMode};
+pub use mll::{log_marginal_likelihood, log_marginal_likelihood_cached};
 pub use optimizer::{
     maximize_mll, maximize_mll_lbfgs, EvalRecord, GradOptimOutcome, OptimBudget, OptimOutcome,
     SearchBox,

@@ -18,6 +18,16 @@
 //! parameters); failed evaluations (e.g. a Cholesky failure at an
 //! aggressive setting) score −∞ and the simplex walks back into the
 //! feasible region.
+//!
+//! Both optimizers compose with the trainer's per-run
+//! [`crate::train::cache::FactorCache`]: every Nelder–Mead start's
+//! initial simplex perturbs σ² at a fixed length scale (one of the three
+//! vertices shares ℓ with the start point bit-for-bit), and any
+//! revisited ℓ thereafter, so evidence evaluations along the noise axis
+//! reuse the cached noise-free factorization — zero factorizations, by
+//! construction rather than by luck. Cached values are bit-identical to
+//! fresh ones, so the determinism contract is unaffected by hit/miss
+//! timing between concurrent starts.
 
 use crate::error::{Error, Result};
 use crate::gp::cv::{default_grid, ArdHyperParams, HyperParams};

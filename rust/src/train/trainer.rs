@@ -27,8 +27,9 @@ use crate::experiments::methods::{cv_predict, Method};
 use crate::gp::cv::{default_grid, grid_search, ArdHyperParams, HyperParams};
 use crate::gp::GpModel;
 use crate::kernels::Kernel;
-use crate::train::grad::mll_grad;
-use crate::train::mll::log_marginal_likelihood;
+use crate::train::cache::FactorCache;
+use crate::train::grad::mll_grad_cached;
+use crate::train::mll::log_marginal_likelihood_cached;
 use crate::train::optimizer::{maximize_mll, maximize_mll_lbfgs, EvalRecord, OptimBudget, SearchBox};
 use crate::util::json::Json;
 use crate::util::timer::Timer;
@@ -96,6 +97,15 @@ pub struct TrainReport {
     pub cv_score: Option<f64>,
     /// Candidate evaluations spent (including failed ones).
     pub evals: usize,
+    /// σ²-independent factor builds spent by the evidence paths (MKA
+    /// factorizations / Nyström block assemblies — the per-run
+    /// [`FactorCache`] misses). `evals − factorizations` evaluations were
+    /// pure spectrum/Woodbury arithmetic on a cached factor. `None` when
+    /// the run has no cacheable factor to count: the CV path (refits
+    /// models instead of scoring evidence) and `Method::Full` (every
+    /// eval is one Cholesky that never routes through the cache —
+    /// reporting 0 there would read as perfect reuse).
+    pub factorizations: Option<usize>,
     pub converged: bool,
     /// Per-candidate trace (successful evaluations only).
     pub trace: Vec<EvalRecord>,
@@ -118,6 +128,9 @@ impl TrainReport {
             );
         if let Some(ells) = &self.lengthscales {
             j.set("lengthscales", Json::from_f64_slice(ells));
+        }
+        if let Some(fx) = self.factorizations {
+            j.set("factorizations", Json::Num(fx as f64));
         }
         if let Some(m) = self.best_mll {
             j.set("best_mll", Json::Num(m));
@@ -164,6 +177,7 @@ pub fn select_hyperparams(
                 best_mll: None,
                 cv_score: Some(out.best_score),
                 evals: grid.len(),
+                factorizations: None,
                 converged: true,
                 trace,
                 train_secs: t.elapsed_secs(),
@@ -176,8 +190,13 @@ pub fn select_hyperparams(
                 ));
             }
             let sbox = SearchBox::for_dim(data.dim());
+            // One factor cache per training run: σ²-only simplex moves
+            // (and revisited length scales) become pure spectrum
+            // arithmetic — the cache's miss count IS the number of
+            // σ²-independent factor builds this run paid for.
+            let cache = FactorCache::with_default_capacity();
             let out = maximize_mll(
-                |hp| log_marginal_likelihood(method, data, hp, k, seed).ok(),
+                |hp| log_marginal_likelihood_cached(method, data, hp, k, seed, &cache).ok(),
                 data.dim(),
                 budget,
                 &sbox,
@@ -190,6 +209,7 @@ pub fn select_hyperparams(
                 best_mll: Some(out.best_mll),
                 cv_score: None,
                 evals: out.evals,
+                factorizations: cacheable_factorizations(method, &cache),
                 converged: out.converged,
                 trace: out.trace,
                 train_secs: t.elapsed_secs(),
@@ -203,8 +223,13 @@ pub fn select_hyperparams(
             }
             let sbox = SearchBox::for_dim(data.dim());
             let tied = !*ard;
+            let cache = FactorCache::with_default_capacity();
             let out = maximize_mll_lbfgs(
-                |hp| mll_grad(method, data, hp, tied, k, seed).ok().map(|g| (g.mll, g.grad_vec())),
+                |hp| {
+                    mll_grad_cached(method, data, hp, tied, k, seed, &cache)
+                        .ok()
+                        .map(|g| (g.mll, g.grad_vec()))
+                },
                 data.dim(),
                 *ard,
                 budget,
@@ -218,11 +243,22 @@ pub fn select_hyperparams(
                 best_mll: Some(out.best_mll),
                 cv_score: None,
                 evals: out.evals,
+                factorizations: cacheable_factorizations(method, &cache),
                 converged: out.converged,
                 trace: out.trace,
                 train_secs: t.elapsed_secs(),
             })
         }
+    }
+}
+
+/// The run's σ²-independent factor-build count, or `None` for methods
+/// that never route through the cache (Full's Cholesky-per-eval has no
+/// cacheable factor — a literal 0 would misreport it as perfect reuse).
+fn cacheable_factorizations(method: Method, cache: &FactorCache) -> Option<usize> {
+    match method {
+        Method::Full | Method::Meka => None,
+        _ => Some(cache.misses() as usize),
     }
 }
 
@@ -388,6 +424,34 @@ mod tests {
         let j = report.to_json();
         assert_eq!(j.get("lengthscales").unwrap().f64_array().unwrap().len(), 3);
         assert_eq!(model.predict(&d.x).mean.len(), d.n());
+    }
+
+    /// The factor cache makes σ²-only simplex moves free: an MKA
+    /// evidence run must report strictly fewer σ²-independent factor
+    /// builds than evidence evaluations (each Nelder–Mead start's σ²
+    /// vertex alone revisits its start's length scale).
+    #[test]
+    fn evidence_selection_reports_factorization_economics() {
+        let d = gp_dataset(&SynthSpec::named("t", 90, 2), 8);
+        // Single start: the factorization count is deterministic (no
+        // cross-start build races on shared cache keys).
+        let sel =
+            ModelSelection::Mll { budget: OptimBudget { max_evals: 16, n_starts: 1, tol: 1e-4 } };
+        let report = select_hyperparams(Method::Mka, &d, &sel, 10, 3).unwrap();
+        let fx = report.factorizations.expect("evidence path reports factorizations");
+        assert!(fx >= 1, "at least one factor must be built");
+        assert!(fx < report.evals, "factorizations {fx} !< evals {}", report.evals);
+        let j = report.to_json();
+        assert_eq!(j.num_field("factorizations"), Some(fx as f64));
+        // the CV path refits models — no evidence factorizations to report
+        let cv =
+            select_hyperparams(Method::Sor, &d, &ModelSelection::GridCv { folds: 2 }, 8, 3)
+                .unwrap();
+        assert!(cv.factorizations.is_none());
+        assert!(cv.to_json().get("factorizations").is_none());
+        // Full never routes through the cache: None, not a false Some(0)
+        let full = select_hyperparams(Method::Full, &d, &sel, 8, 3).unwrap();
+        assert!(full.factorizations.is_none());
     }
 
     #[test]

@@ -56,6 +56,7 @@ fn coalesced_batch_is_one_blocked_cascade() {
         Arc::new(Metrics::new()),
         Duration::from_millis(200),
         64,
+        1024,
     );
 
     let before = cascade_count();

@@ -1,0 +1,233 @@
+//! The noise-shift factor plane (acceptance tests): diagonal shifts
+//! commute with the orthogonal stage cascade, so
+//! `factorize(K + σ²I) ≡ factorize(K).shifted(σ²)` **exactly** — same
+//! rotations (the default pivot rules score shift-invariant quantities),
+//! spectrum moved by σ². These tests pin that equivalence to 1e-10
+//! relative across solve / logdet / to_dense / evidence, the
+//! zero-refactorization economics of σ²-only moves through the
+//! [`FactorCache`], and the serving-plane `retune` path.
+
+use mka_gp::coordinator::{Router, ServiceConfig};
+use mka_gp::data::synth::{gp_dataset, SynthSpec};
+use mka_gp::experiments::methods::Method;
+use mka_gp::gp::cv::HyperParams;
+use mka_gp::gp::mka_gp::MkaGp;
+use mka_gp::gp::GpModel;
+use mka_gp::kernels::{Kernel, RbfKernel};
+use mka_gp::la::dense::Mat;
+use mka_gp::mka::{factorize, MkaConfig};
+use mka_gp::train::mll::mll_from_factor;
+use mka_gp::train::{log_marginal_likelihood_cached, FactorCache};
+use mka_gp::util::{Json, Rng};
+
+fn kernel_matrix(n: usize, d: usize, ell: f64, seed: u64) -> (Mat, Mat) {
+    let mut rng = Rng::new(seed);
+    let x = Mat::from_fn(n, d, |_, _| rng.normal());
+    let k = RbfKernel::new(ell).gram_sym(&x); // noise-free
+    (k, x)
+}
+
+fn cfg(d_core: usize, block: usize) -> MkaConfig {
+    MkaConfig { d_core, block_size: block, ..MkaConfig::default() }
+}
+
+/// Acceptance: MKA solve/logdet/to_dense at (ℓ, σ²) via
+/// `factorize(K).shifted(σ²)` match a fresh `factorize(K + σ²I)` within
+/// 1e-10 relative — one noise-free factorization serves every σ².
+#[test]
+fn shift_view_equals_fresh_noisy_factorization() {
+    let (k, x) = kernel_matrix(120, 3, 1.2, 1);
+    let config = cfg(24, 40);
+    let f0 = factorize(&k, Some(&x), &config).unwrap();
+    let mut rng = Rng::new(2);
+    let b = rng.normal_vec(120);
+    let bmat = Mat::from_fn(120, 5, |_, _| rng.normal());
+
+    for s2 in [1e-3, 0.1, 0.75] {
+        let mut ks = k.clone();
+        ks.add_diag(s2);
+        let fresh = factorize(&ks, Some(&x), &config).unwrap();
+        let view = f0.shifted(s2);
+
+        // Dense reconstruction: identical rotations + shifted spectrum.
+        let d_fresh = fresh.to_dense();
+        let d_view = view.to_dense();
+        let rel = d_fresh.sub(&d_view).max_abs() / d_fresh.max_abs();
+        assert!(rel < 1e-10, "to_dense rel {rel} at σ²={s2}");
+
+        // logdet.
+        let (ld_f, ld_v) = (fresh.logdet().unwrap(), view.logdet().unwrap());
+        assert!(
+            (ld_f - ld_v).abs() < 1e-10 * ld_f.abs().max(1.0),
+            "logdet {ld_f} vs {ld_v} at σ²={s2}"
+        );
+
+        // solve (vector + blocked).
+        let (s_f, s_v) = (fresh.solve(&b).unwrap(), view.solve(&b).unwrap());
+        let scale = s_f.iter().fold(0.0f64, |m, v| m.max(v.abs())).max(1.0);
+        for i in 0..120 {
+            assert!(
+                (s_f[i] - s_v[i]).abs() < 1e-10 * scale,
+                "solve[{i}] {} vs {} at σ²={s2}",
+                s_f[i],
+                s_v[i]
+            );
+        }
+        let sm_f = fresh.solve_mat(&bmat).unwrap();
+        let sm_v = view.solve_mat(&bmat).unwrap();
+        let rel = sm_f.sub(&sm_v).max_abs() / sm_f.max_abs().max(1.0);
+        assert!(rel < 1e-10, "solve_mat rel {rel} at σ²={s2}");
+
+        // spectrum (Proposition 7's explicit eigenvalues).
+        for (a, b) in fresh.spectrum().iter().zip(view.spectrum()) {
+            assert!((a - b).abs() < 1e-10 * a.abs().max(1.0), "spectrum {a} vs {b}");
+        }
+    }
+}
+
+/// The evidence at (ℓ, σ²) through the shifted view matches the evidence
+/// of a fresh noisy factorization to 1e-10 relative — the quantity the
+/// training plane's cache serves.
+#[test]
+fn shifted_evidence_matches_fresh_factorization() {
+    let data = gp_dataset(&SynthSpec::named("shift-mll", 110, 2), 3);
+    let kern = RbfKernel::new(1.0);
+    let config = cfg(20, 36);
+    let k = kern.gram_sym(&data.x);
+    let f0 = factorize(&k, Some(&data.x), &config).unwrap();
+    for s2 in [0.01, 0.1, 0.4] {
+        let mut ks = k.clone();
+        ks.add_diag(s2);
+        let fresh = factorize(&ks, Some(&data.x), &config).unwrap();
+        let via_fresh = mll_from_factor(&fresh, &data.y).unwrap();
+        let via_view = mll_from_factor(&f0.shifted(s2), &data.y).unwrap();
+        assert!(
+            (via_fresh - via_view).abs() < 1e-10 * via_fresh.abs().max(1.0),
+            "σ²={s2}: fresh {via_fresh} vs shifted view {via_view}"
+        );
+    }
+}
+
+/// σ²-only hyperparameter moves at a fixed length scale cost exactly one
+/// factorization, however many evaluations run — the per-lengthscale
+/// cache counts its own builds, so this pin is immune to concurrent
+/// tests touching the global counters.
+#[test]
+fn sigma_only_moves_factorize_once() {
+    let data = gp_dataset(&SynthSpec::named("shift-cache", 100, 2), 4);
+    let cache = FactorCache::new(4);
+    let sigmas = [0.02, 0.05, 0.1, 0.2, 0.4, 0.8];
+    let mut values = Vec::new();
+    for &s2 in &sigmas {
+        let hp = HyperParams { lengthscale: 1.1, sigma2: s2 };
+        values.push(
+            log_marginal_likelihood_cached(Method::Mka, &data, hp, 12, 3, &cache).unwrap(),
+        );
+    }
+    assert_eq!(cache.misses(), 1, "one ℓ ⇒ one factorization");
+    assert_eq!(cache.hits(), (sigmas.len() - 1) as u64);
+    // sanity: different σ² genuinely produce different evidence values
+    for w in values.windows(2) {
+        assert!(w[0] != w[1], "evidence must move with σ²");
+    }
+    // and every cached value is bit-identical to an uncached evaluation
+    for (&s2, &v) in sigmas.iter().zip(&values) {
+        let hp = HyperParams { lengthscale: 1.1, sigma2: s2 };
+        let plain =
+            log_marginal_likelihood_cached(Method::Mka, &data, hp, 12, 3, &FactorCache::disabled())
+                .unwrap();
+        assert_eq!(plain.to_bits(), v.to_bits(), "σ²={s2}");
+    }
+}
+
+/// End-to-end retune through the coordinator: the republished model must
+/// serve exactly what a model fitted fresh at the new σ² serves.
+#[test]
+fn retune_op_equals_fresh_fit() {
+    let cfg_srv = ServiceConfig { batch_window_ms: 0, n_workers: 2, ..Default::default() };
+    let r = Router::new(cfg_srv);
+    let data = gp_dataset(&SynthSpec::named("retune", 80, 2), 5);
+    let n = data.n();
+    let x: Vec<Json> = (0..n).map(|i| Json::from_f64_slice(data.x.row(i))).collect();
+    let fit = |model: &str, sigma2: f64| {
+        Json::obj()
+            .with("op", Json::Str("fit".into()))
+            .with("model", Json::Str(model.into()))
+            .with("method", Json::Str("mka".into()))
+            .with("x", Json::Arr(x.clone()))
+            .with("y", Json::from_f64_slice(&data.y))
+            .with(
+                "params",
+                Json::obj()
+                    .with("lengthscale", Json::Num(1.0))
+                    .with("sigma2", Json::Num(sigma2))
+                    .with("k", Json::Num(10.0)),
+            )
+            .with("async", Json::Bool(false))
+    };
+    // Fit at σ² = 0.1, retune to 0.3; fit a reference model at 0.3.
+    assert_eq!(r.handle(&fit("m", 0.1)).get("ok"), Some(&Json::Bool(true)));
+    assert_eq!(r.handle(&fit("m-ref", 0.3)).get("ok"), Some(&Json::Bool(true)));
+    let retune = Json::parse(r#"{"op":"retune","model":"m","sigma2":0.3}"#).unwrap();
+    let out = r.handle(&retune);
+    assert_eq!(out.get("ok"), Some(&Json::Bool(true)), "{out:?}");
+
+    let predict = |model: &str| {
+        let req = Json::obj()
+            .with("op", Json::Str("predict".into()))
+            .with("model", Json::Str(model.into()))
+            .with(
+                "x",
+                Json::Arr(vec![
+                    Json::from_f64_slice(&[0.2, -0.1]),
+                    Json::from_f64_slice(&[-0.4, 0.6]),
+                ]),
+            );
+        let resp = r.handle(&req);
+        assert_eq!(resp.get("ok"), Some(&Json::Bool(true)), "{resp:?}");
+        (
+            resp.get("mean").unwrap().f64_array().unwrap(),
+            resp.get("var").unwrap().f64_array().unwrap(),
+        )
+    };
+    let (mean_rt, var_rt) = predict("m");
+    let (mean_ref, var_ref) = predict("m-ref");
+    for i in 0..2 {
+        assert!(
+            (mean_rt[i] - mean_ref[i]).abs() < 1e-10,
+            "mean[{i}]: retuned {} vs fresh {}",
+            mean_rt[i],
+            mean_ref[i]
+        );
+        assert!((var_rt[i] - var_ref[i]).abs() < 1e-10, "var[{i}]");
+        assert!(var_rt[i] >= 0.3, "variance floor must follow the new σ²");
+    }
+}
+
+/// Direct model-level equivalence with heavier compression, including the
+/// `GpModel::with_noise` hook the retune op rides.
+#[test]
+fn set_noise_prediction_equals_refit_under_compression() {
+    let data = gp_dataset(&SynthSpec::named("retune-c", 150, 3), 6);
+    let (tr, te) = data.split(0.85, 7);
+    let kern = RbfKernel::new(0.9);
+    let config = cfg(12, 30);
+    let mut model = MkaGp::fit(&tr, &kern, 0.08, &config).unwrap();
+    model.set_noise(0.3).unwrap();
+    let fresh = MkaGp::fit(&tr, &kern, 0.3, &config).unwrap();
+    let pa = model.predict(&te.x);
+    let pb = fresh.predict(&te.x);
+    for i in 0..te.n() {
+        assert!((pa.mean[i] - pb.mean[i]).abs() < 1e-10, "mean[{i}]");
+        assert!((pa.var[i] - pb.var[i]).abs() < 1e-10, "var[{i}]");
+        assert!(pa.var[i] >= 0.3, "σ² floor violated: {}", pa.var[i]);
+    }
+    let via_trait = model.with_noise(0.08).expect("retune back");
+    let back = MkaGp::fit(&tr, &kern, 0.08, &config).unwrap();
+    let pc = via_trait.predict(&te.x);
+    let pd = back.predict(&te.x);
+    for i in 0..te.n() {
+        assert!((pc.mean[i] - pd.mean[i]).abs() < 1e-10);
+        assert!((pc.var[i] - pd.var[i]).abs() < 1e-10);
+    }
+}

@@ -128,7 +128,7 @@ fn factorize_bit_identical_across_thread_counts() {
         let ft = factorize(&k, Some(&x), &cfg(t)).unwrap();
         assert_eq!(f1.core.data, ft.core.data, "core t={t}");
         assert_eq!(f1.n_stages(), ft.n_stages(), "stages t={t}");
-        for (s1, st) in f1.stages.iter().zip(&ft.stages) {
+        for (s1, st) in f1.stages.iter().zip(ft.stages.iter()) {
             assert_eq!(s1.dvals, st.dvals, "dvals t={t}");
             assert_eq!(s1.core_global, st.core_global, "core idx t={t}");
         }
@@ -181,6 +181,43 @@ fn predict_bit_identical_across_thread_counts() {
             assert_eq!(p1.mean[i].to_bits(), pt.mean[i].to_bits(), "mean[{i}] t={t}");
             assert_eq!(p1.var[i].to_bits(), pt.var[i].to_bits(), "var[{i}] t={t}");
         }
+    }
+}
+
+/// Cached-factor evidence training is bit-identical at any pool size:
+/// the per-run `FactorCache` stores deterministic σ²-independent halves,
+/// so the hit/miss interleaving of concurrent Nelder–Mead starts cannot
+/// leak into the selected hyperparameters or the trace.
+#[test]
+fn cached_mll_training_bit_identical_across_thread_counts() {
+    use mka_gp::experiments::methods::Method;
+    use mka_gp::train::{select_hyperparams, ModelSelection, OptimBudget};
+    let data = gp_dataset(&SynthSpec::named("cache-det", 90, 2), 13);
+    let sel =
+        ModelSelection::Mll { budget: OptimBudget { max_evals: 18, n_starts: 3, tol: 1e-6 } };
+    // NOTE: the *miss count* is intentionally absent from the tuple —
+    // two starts racing on one key may both build (identical entries),
+    // so build counts are timing-dependent even though every value is
+    // bit-deterministic.
+    let run = || {
+        let r = select_hyperparams(Method::Mka, &data, &sel, 10, 5).unwrap();
+        (
+            r.best.lengthscale.to_bits(),
+            r.best.sigma2.to_bits(),
+            r.best_mll.unwrap().to_bits(),
+            r.evals,
+            r.trace.len(),
+        )
+    };
+    let a = run();
+    mka_gp::par::set_threads(4);
+    let b = run();
+    mka_gp::par::set_threads(2);
+    let c = run();
+    mka_gp::par::set_threads(1);
+    let d = run();
+    for (i, other) in [&b, &c, &d].into_iter().enumerate() {
+        assert_eq!(&a, other, "thread-count run {i} diverged");
     }
 }
 

@@ -21,7 +21,10 @@ use mka_gp::la::chol::Chol;
 use mka_gp::la::dense::Mat;
 use mka_gp::mka::MkaConfig;
 use mka_gp::train::mll;
-use mka_gp::train::{log_marginal_likelihood, maximize_mll, OptimBudget, SearchBox};
+use mka_gp::train::{
+    log_marginal_likelihood, maximize_mll, select_hyperparams, ModelSelection, OptimBudget,
+    SearchBox,
+};
 use mka_gp::util::{Json, Rng};
 
 /// Dense reference evidence: −½yᵀC⁻¹y − ½ log det C − (n/2) log 2π.
@@ -134,6 +137,38 @@ fn pitc_block_woodbury_matches_dense() {
         (fast - dense).abs() < 1e-5 * dense.abs().max(1.0),
         "PITC block-Woodbury {fast} vs dense {dense}"
     );
+}
+
+/// Acceptance pin (noise-shift plane): an MKA evidence run whose path
+/// revisits a cached length scale performs strictly fewer factorizations
+/// than evidence evaluations. Each Nelder–Mead start's initial simplex
+/// perturbs σ² at the start's ℓ, so at least one hit per start is
+/// structural, not incidental. The per-run cache counts its own builds
+/// (immune to concurrent tests); the process-wide `factorize_count()`
+/// observable must have moved by at least those builds.
+#[test]
+fn mka_training_factorizes_less_than_it_evaluates() {
+    // A single start keeps the factorization count fully deterministic
+    // (no cross-start build races); its initial simplex alone revisits
+    // the start's ℓ for the σ² vertex.
+    let data = gp_dataset(&SynthSpec::named("cachetrain", 100, 2), 4);
+    let sel =
+        ModelSelection::Mll { budget: OptimBudget { max_evals: 20, n_starts: 1, tol: 1e-5 } };
+    let before = mka_gp::mka::factorize_count();
+    let report = select_hyperparams(Method::Mka, &data, &sel, 12, 3).unwrap();
+    let fx = report.factorizations.expect("evidence path reports factorizations");
+    assert!(report.evals >= 3, "at least the initial simplex, got {}", report.evals);
+    assert!(fx >= 1, "at least one factor build");
+    assert!(
+        fx < report.evals,
+        "σ²-revisits must be free: {fx} factorizations for {} evals",
+        report.evals
+    );
+    // Global observable: monotone, and moved by at least this run's builds
+    // (other tests may factorize concurrently, so only a lower bound).
+    assert!(mka_gp::mka::factorize_count() >= before + fx as u64);
+    // The job-facing JSON carries the economics.
+    assert_eq!(report.to_json().num_field("factorizations"), Some(fx as f64));
 }
 
 #[test]
