@@ -3,17 +3,31 @@
 //! prediction batcher under concurrent clients.
 //!
 //!     cargo bench --bench coordinator_perf [-- --clients 8]
+//!
+//! `--json` mode benches the sharded serving plane instead: fit, predict
+//! and retune wall time vs shard count, asserting sharded predictions are
+//! bit-identical at every thread count, written to `BENCH_shard.json`:
+//!
+//!     cargo bench --bench coordinator_perf -- --json \
+//!         [--n 960] [--shards 1,2,4] [--threads 1,2,4] [--k 24] \
+//!         [--out ../BENCH_shard.json]
 
 use std::sync::Arc;
 
 use mka_gp::bench::{bench, fmt_secs, Table};
 use mka_gp::coordinator::{Client, Router, Server, ServiceConfig};
 use mka_gp::data::synth::{gp_dataset, SynthSpec};
+use mka_gp::experiments::methods::mka_config_for;
+use mka_gp::gp::sharded::ShardedGp;
 use mka_gp::prelude::*;
 use mka_gp::util::Timer;
 
 fn main() {
     let args = Args::from_env(false);
+    if args.has_flag("json") {
+        run_shard_json_bench(&args);
+        return;
+    }
     let n_clients = args.get_usize("clients", 8);
 
     // Service with a published MKA model.
@@ -136,4 +150,111 @@ fn main() {
     } else {
         println!("  WARN: batched predict did NOT beat independent predicts");
     }
+}
+
+/// `--json` mode: the sharded serving plane's scaling trajectory — fit,
+/// predict and retune wall time vs shard count, with bit-determinism
+/// asserts across thread counts — written to `BENCH_shard.json`.
+fn run_shard_json_bench(args: &Args) {
+    let n = args.get_usize("n", 960);
+    let shard_counts = args.get_usize_list("shards", &[1, 2, 4]);
+    let threads_list = args.get_usize_list("threads", &[1, 2, 4]);
+    let k = args.get_usize("k", 24);
+    let out_path = args.get_or("out", "../BENCH_shard.json").to_string();
+
+    let data = gp_dataset(&SynthSpec::named("shardperf", n, 4), 3);
+    let (tr, te) = data.split(0.9, 1);
+    let kern = RbfKernel::new(1.0);
+    let cfg = mka_config_for(k, tr.n(), 7);
+
+    let mut results: Vec<Json> = Vec::new();
+    // fit wall at the highest thread count, per shard count — the
+    // fit-scaling acceptance series (shards=1 entry is the baseline).
+    let mut fit_walls: Vec<(usize, f64)> = Vec::new();
+    for &s in &shard_counts {
+        let mut ref_bits: Option<Vec<u64>> = None;
+        let mut last_fit_s: Option<f64> = None;
+        for &t in &threads_list {
+            mka_gp::par::set_threads(t);
+            let t_fit = Timer::start();
+            let fleet = ShardedGp::fit(&tr, &kern, 0.1, &cfg, s, ClusterMethod::KMeans)
+                .expect("sharded fit");
+            let fit_s = t_fit.elapsed_secs();
+            let t_pred = Timer::start();
+            let pred = fleet.predict(&te.x);
+            let predict_s = t_pred.elapsed_secs();
+            // Serving-plane retune: O(shards) spectrum shifts, never a
+            // refit — must stay orders of magnitude under fit_s.
+            let t_ret = Timer::start();
+            let retuned = fleet.retuned(0.25).expect("retune");
+            let retune_s = t_ret.elapsed_secs();
+            assert_eq!(retuned.sigma2(), 0.25);
+
+            // PR-2 determinism contract through the fleet: the same shard
+            // count must produce bit-identical posteriors at any thread
+            // count.
+            let bits: Vec<u64> =
+                pred.mean.iter().chain(pred.var.iter()).map(|v| v.to_bits()).collect();
+            match &ref_bits {
+                None => ref_bits = Some(bits),
+                Some(r) => assert_eq!(
+                    r, &bits,
+                    "sharded predict at {t} threads must be bit-identical (shards={s})"
+                ),
+            }
+
+            let e = smse(&te.y, &pred.mean);
+            println!(
+                "shards={s} ({} effective) t={t}: fit {} predict {} retune {} ({:.0}x) smse {:.3}",
+                fleet.n_shards(),
+                fmt_secs(fit_s),
+                fmt_secs(predict_s),
+                fmt_secs(retune_s),
+                fit_s / retune_s.max(1e-12),
+                e
+            );
+            results.push(
+                Json::obj()
+                    .with("shards", Json::Num(s as f64))
+                    .with("effective_shards", Json::Num(fleet.n_shards() as f64))
+                    .with("threads", Json::Num(t as f64))
+                    .with("n", Json::Num(tr.n() as f64))
+                    .with("fit_s", Json::Num(fit_s))
+                    .with("predict_s", Json::Num(predict_s))
+                    .with("retune_s", Json::Num(retune_s))
+                    .with("retune_speedup", Json::Num(fit_s / retune_s.max(1e-12)))
+                    .with("smse", Json::Num(e))
+                    .with("bit_identical", Json::Bool(true)),
+            );
+            last_fit_s = Some(fit_s);
+        }
+        if let Some(fit_s) = last_fit_s {
+            fit_walls.push((s, fit_s));
+        }
+    }
+
+    // Fit scaling vs the unsharded baseline (same thread count): sharding
+    // replaces one n-point factorization with k (n/k)-point ones.
+    if let Some(&(_, base)) =
+        fit_walls.iter().find(|(s, _)| *s == 1).or_else(|| fit_walls.first())
+    {
+        for &(s, w) in &fit_walls {
+            println!("fit scaling: shards={s} {} ({:.2}x vs baseline)", fmt_secs(w), base / w.max(1e-12));
+            if s > 1 && w >= base {
+                println!("  WARN: shards={s} fit did not beat the unsharded fit");
+            }
+        }
+    }
+
+    let doc = Json::obj()
+        .with("bench", Json::Str("shard_plane".into()))
+        .with(
+            "generated_by",
+            Json::Str("cargo bench --bench coordinator_perf -- --json".into()),
+        )
+        .with("n", Json::Num(n as f64))
+        .with("k", Json::Num(k as f64))
+        .with("results", Json::Arr(results));
+    std::fs::write(&out_path, doc.dump_pretty()).expect("write bench json");
+    println!("wrote {out_path}");
 }

@@ -12,7 +12,7 @@
 use super::nystrom::{column_sq_norms, select_landmarks, LandmarkMethod, NystromBlocks};
 use crate::data::dataset::Dataset;
 use crate::error::Result;
-use crate::gp::{GpModel, Prediction};
+use crate::gp::{GpModel, ModelInfo, Prediction};
 use crate::kernels::Kernel;
 use crate::la::blas::{gemm_nt, gemv, gemv_t};
 use crate::la::chol::{solve_lower_mat, Chol};
@@ -23,6 +23,7 @@ pub struct Fitc {
     z: Mat,
     kernel: Box<dyn Kernel>,
     sigma2: f64,
+    n_train: usize,
     w_chol: Chol,
     a_chol: Chol,
     /// β = A⁻¹ K_zf Λ⁻¹ y.
@@ -68,6 +69,7 @@ impl Fitc {
             z: nb.z,
             kernel: kernel.boxed_clone(),
             sigma2,
+            n_train: train.n(),
             w_chol: nb.w_chol,
             a_chol,
             beta,
@@ -99,6 +101,17 @@ impl GpModel for Fitc {
 
     fn name(&self) -> String {
         format!("FITC(m={})", self.z.rows)
+    }
+
+    fn info(&self) -> ModelInfo {
+        ModelInfo {
+            method: self.name(),
+            n: self.n_train,
+            dim: self.z.cols,
+            sigma2: Some(self.sigma2),
+            shards: 1,
+            shard_sizes: Vec::new(),
+        }
     }
 }
 

@@ -15,7 +15,7 @@
 use crate::cluster::{cluster_rows, ClusterMethod};
 use crate::data::dataset::Dataset;
 use crate::error::{Error, Result};
-use crate::gp::{GpModel, Prediction};
+use crate::gp::{GpModel, ModelInfo, Prediction};
 use crate::kernels::Kernel;
 use crate::la::blas::{dot, gemm, gemm_tn, gemv, gemv_t};
 use crate::la::dense::Mat;
@@ -304,6 +304,17 @@ impl GpModel for Meka {
 
     fn name(&self) -> String {
         format!("MEKA(r={})", self.link.rows)
+    }
+
+    fn info(&self) -> ModelInfo {
+        ModelInfo {
+            method: self.name(),
+            n: self.train_x.rows,
+            dim: self.train_x.cols,
+            sigma2: Some(self.sigma2),
+            shards: 1,
+            shard_sizes: Vec::new(),
+        }
     }
 }
 

@@ -10,7 +10,7 @@ use super::nystrom::{column_sq_norms, select_landmarks, LandmarkMethod, NystromB
 use crate::cluster::{cluster_rows, ClusterMethod};
 use crate::data::dataset::Dataset;
 use crate::error::Result;
-use crate::gp::{GpModel, Prediction};
+use crate::gp::{GpModel, ModelInfo, Prediction};
 use crate::kernels::Kernel;
 use crate::la::blas::{dot, gemm, gemv_t};
 use crate::la::chol::{solve_lower_mat, Chol};
@@ -22,6 +22,7 @@ pub struct Pitc {
     z: Mat,
     kernel: Box<dyn Kernel>,
     sigma2: f64,
+    n_train: usize,
     w_chol: Chol,
     a_chol: Chol,
     beta: Vec<f64>,
@@ -95,6 +96,7 @@ impl Pitc {
             z: nb.z,
             kernel: kernel.boxed_clone(),
             sigma2,
+            n_train: train.n(),
             w_chol: nb.w_chol,
             a_chol,
             beta,
@@ -128,6 +130,17 @@ impl GpModel for Pitc {
 
     fn name(&self) -> String {
         format!("PITC(m={})", self.z.rows)
+    }
+
+    fn info(&self) -> ModelInfo {
+        ModelInfo {
+            method: self.name(),
+            n: self.n_train,
+            dim: self.z.cols,
+            sigma2: Some(self.sigma2),
+            shards: 1,
+            shard_sizes: Vec::new(),
+        }
     }
 }
 

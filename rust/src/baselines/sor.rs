@@ -10,7 +10,7 @@
 use super::nystrom::{column_sq_norms, select_landmarks, LandmarkMethod, NystromBlocks};
 use crate::data::dataset::Dataset;
 use crate::error::Result;
-use crate::gp::{GpModel, Prediction};
+use crate::gp::{GpModel, ModelInfo, Prediction};
 use crate::kernels::Kernel;
 use crate::la::blas::{gemm_nt, gemv, gemv_t};
 use crate::la::chol::{solve_lower_mat, Chol};
@@ -21,6 +21,7 @@ pub struct Sor {
     z: Mat,
     kernel: Box<dyn Kernel>,
     sigma2: f64,
+    n_train: usize,
     /// Cholesky of A = K_zf K_fz + σ² W.
     a_chol: Chol,
     /// β = A⁻¹ K_zf y.
@@ -48,7 +49,14 @@ impl Sor {
         let (a_chol, _) = Chol::new_jittered(&a, 12)?;
         let kzf_y = gemv(&nb.kzf, &train.y);
         let beta = a_chol.solve(&kzf_y);
-        Ok(Sor { z: nb.z, kernel: kernel.boxed_clone(), sigma2, a_chol, beta })
+        Ok(Sor {
+            z: nb.z,
+            kernel: kernel.boxed_clone(),
+            sigma2,
+            n_train: train.n(),
+            a_chol,
+            beta,
+        })
     }
 
     pub fn n_landmarks(&self) -> usize {
@@ -69,6 +77,17 @@ impl GpModel for Sor {
 
     fn name(&self) -> String {
         format!("SOR(m={})", self.z.rows)
+    }
+
+    fn info(&self) -> ModelInfo {
+        ModelInfo {
+            method: self.name(),
+            n: self.n_train,
+            dim: self.z.cols,
+            sigma2: Some(self.sigma2),
+            shards: 1,
+            shard_sizes: Vec::new(),
+        }
     }
 }
 

@@ -46,6 +46,12 @@ pub struct ServiceConfig {
     /// MKA factorizations, Nyström blocks — kept per length scale so
     /// σ²-only optimizer moves cost zero factorizations. 0 disables.
     pub train_cache_factors: usize,
+    /// Default shard count for `fit`/`train` requests that don't carry a
+    /// top-level `"shards"` field. 1 = unsharded serving (the default).
+    pub default_shards: usize,
+    /// Clustering method for the shard partition
+    /// (`kmeans` | `bisect` | `affinity`).
+    pub shard_assign: String,
 }
 
 impl Default for ServiceConfig {
@@ -68,6 +74,8 @@ impl Default for ServiceConfig {
             train_max_evals: 60,
             train_starts: 3,
             train_cache_factors: 4,
+            default_shards: 1,
+            shard_assign: "kmeans".into(),
         }
     }
 }
@@ -97,6 +105,8 @@ impl ServiceConfig {
                 "train_max_evals" => self.train_max_evals = parse(k, v)?,
                 "train_starts" => self.train_starts = parse(k, v)?,
                 "train_cache_factors" => self.train_cache_factors = parse(k, v)?,
+                "default_shards" | "shards" => self.default_shards = parse(k, v)?,
+                "shard_assign" => self.shard_assign = v.clone(),
                 _ => {} // unknown keys ignored (forward compatible)
             }
         }
@@ -147,7 +157,21 @@ impl ServiceConfig {
         if self.train_max_evals == 0 || self.train_starts == 0 {
             return Err(Error::Config("train_max_evals and train_starts must be >= 1".into()));
         }
+        if self.default_shards == 0 {
+            return Err(Error::Config("default_shards must be >= 1".into()));
+        }
+        if !matches!(self.shard_assign.as_str(), "kmeans" | "bisect" | "affinity") {
+            return Err(Error::Config(format!(
+                "unknown shard_assign {:?} (kmeans | bisect | affinity)",
+                self.shard_assign
+            )));
+        }
         Ok(())
+    }
+
+    /// The shard-partition clustering method implied by `shard_assign`.
+    pub fn shard_assign_method(&self) -> ClusterMethod {
+        ClusterMethod::parse(&self.shard_assign)
     }
 
     /// Compute-pool parallelism with the auto default resolved.
@@ -188,6 +212,8 @@ impl ServiceConfig {
             .with("train_starts", Json::Num(self.train_starts as f64))
             .with("train_cache_factors", Json::Num(self.train_cache_factors as f64))
             .with("batch_queue_max", Json::Num(self.batch_queue_max as f64))
+            .with("default_shards", Json::Num(self.default_shards as f64))
+            .with("shard_assign", Json::Str(self.shard_assign.clone()))
     }
 }
 

@@ -140,6 +140,12 @@ impl ModelRegistry {
     pub fn names(&self) -> Vec<String> {
         self.inner.lock().unwrap().keys().cloned().collect()
     }
+
+    /// Snapshot of every published `(name, model)` pair in name order —
+    /// the `models` op reads per-model metadata through this.
+    pub fn entries(&self) -> Vec<(String, Arc<dyn GpModel>)> {
+        self.inner.lock().unwrap().iter().map(|(k, v)| (k.clone(), Arc::clone(v))).collect()
+    }
 }
 
 #[cfg(test)]

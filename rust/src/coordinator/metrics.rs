@@ -57,7 +57,7 @@ impl Metrics {
     }
 
     /// Snapshot everything as JSON: counters verbatim, histograms as
-    /// {count, mean, p50, p95, max}.
+    /// {count, mean, p50, p95, p99, max}.
     pub fn snapshot(&self) -> Json {
         let mut counters = Json::obj();
         for (k, v) in self.counters.lock().unwrap().iter() {
@@ -78,6 +78,7 @@ impl Metrics {
                     .with("mean", Json::Num(mean))
                     .with("p50", Json::Num(quantile_sorted(&sorted, 0.5)))
                     .with("p95", Json::Num(quantile_sorted(&sorted, 0.95)))
+                    .with("p99", Json::Num(quantile_sorted(&sorted, 0.99)))
                     .with("max", Json::Num(*sorted.last().unwrap())),
             );
         }
@@ -108,6 +109,7 @@ mod tests {
         let lat = snap.get("histograms").unwrap().get("lat").unwrap();
         assert_eq!(lat.num_field("count"), Some(100.0));
         assert!((lat.num_field("p50").unwrap() - 50.5).abs() < 1.0);
+        assert!((lat.num_field("p99").unwrap() - 99.0).abs() < 1.5);
         assert_eq!(lat.num_field("max"), Some(100.0));
     }
 

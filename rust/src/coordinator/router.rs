@@ -5,7 +5,11 @@
 //!   {"op": "ping"}
 //!   {"op": "fit", "model": "m1", "method": "mka", "x": [[...]...],
 //!    "y": [...], "params": {"lengthscale": 1.0, "sigma2": 0.1, "k": 32},
-//!    "async": true}
+//!    "shards": 4, "async": true}
+//!                                    — "shards" > 1 (MKA only; default
+//!                                      from `ServiceConfig.default_shards`)
+//!                                      partitions the training rows and
+//!                                      serves a routed ShardedGp fleet
 //!   {"op": "train", "model": "m1", "method": "mka", "x": [[...]...],
 //!    "y": [...], "selection": "mll"|"mll-grad"|"cv", "ard": false,
 //!    "budget": {"max_evals": 60, "n_starts": 3, "tol": 1e-5, "folds": 5},
@@ -33,6 +37,7 @@ use super::config::ServiceConfig;
 use super::jobs::{JobState, JobStore, ModelRegistry};
 use super::metrics::Metrics;
 use super::pool::WorkerPool;
+use crate::cluster::ClusterMethod;
 use crate::data::dataset::Dataset;
 use crate::error::{Error, Result};
 use crate::experiments::methods::Method;
@@ -101,6 +106,10 @@ impl Router {
     pub fn handle(&self, req: &Json) -> Json {
         self.metrics.incr("requests", 1);
         let op = req.str_field("op").unwrap_or("");
+        // Per-op latency histograms for the serving verbs (successful
+        // requests only — validation failures would drag p50 toward 0).
+        let timed = matches!(op, "fit" | "train" | "predict" | "retune");
+        let op_timer = Timer::start();
         let out = match op {
             "ping" => Ok(Json::obj().with("pong", Json::Bool(true))),
             "fit" => self.handle_fit(req),
@@ -108,10 +117,40 @@ impl Router {
             "job" => self.handle_job(req),
             "predict" => self.handle_predict(req),
             "retune" => self.handle_retune(req),
-            "models" => Ok(Json::obj().with(
-                "models",
-                Json::Arr(self.registry.names().into_iter().map(Json::Str).collect()),
-            )),
+            "models" => {
+                // Per-model metadata, not bare names: method, training
+                // size, noise level and shard topology per entry.
+                let models: Vec<Json> = self
+                    .registry
+                    .entries()
+                    .into_iter()
+                    .map(|(name, m)| {
+                        let info = m.info();
+                        let mut j = Json::obj()
+                            .with("name", Json::Str(name))
+                            .with("method", Json::Str(info.method))
+                            .with("n", Json::Num(info.n as f64))
+                            .with("dim", Json::Num(info.dim as f64))
+                            .with("shards", Json::Num(info.shards as f64));
+                        if let Some(s2) = info.sigma2 {
+                            j.set("sigma2", Json::Num(s2));
+                        }
+                        if !info.shard_sizes.is_empty() {
+                            j.set(
+                                "shard_sizes",
+                                Json::Arr(
+                                    info.shard_sizes
+                                        .iter()
+                                        .map(|&s| Json::Num(s as f64))
+                                        .collect(),
+                                ),
+                            );
+                        }
+                        j
+                    })
+                    .collect();
+                Ok(Json::obj().with("models", Json::Arr(models)))
+            }
             "drop_model" => {
                 let name = req.str_field("model").unwrap_or("");
                 Ok(Json::obj().with("dropped", Json::Bool(self.registry.remove(name))))
@@ -138,6 +177,31 @@ impl Router {
                         .with("pool_workers", Json::Num(crate::par::pool_workers() as f64))
                         .with("pool_jobs", Json::Num(crate::par::jobs_executed() as f64)),
                 );
+                // Shard topology across the registry: fleet count, total
+                // shard count, per-shard sizes, and the process-wide
+                // expert-consult counter from the routing layer.
+                let mut fleet_models = 0u64;
+                let mut shard_count = 0u64;
+                let mut sizes: Vec<Json> = Vec::new();
+                for (_, m) in self.registry.entries() {
+                    let info = m.info();
+                    if info.shards > 1 {
+                        fleet_models += 1;
+                        shard_count += info.shards as u64;
+                        sizes.extend(info.shard_sizes.iter().map(|&s| Json::Num(s as f64)));
+                    }
+                }
+                snap.set(
+                    "shard",
+                    Json::obj()
+                        .with("models", Json::Num(fleet_models as f64))
+                        .with("count", Json::Num(shard_count as f64))
+                        .with("sizes", Json::Arr(sizes))
+                        .with(
+                            "route_hits",
+                            Json::Num(crate::gp::sharded::route_hits() as f64),
+                        ),
+                );
                 Ok(snap)
             }
             "config" => Ok(self.config.to_json()),
@@ -145,6 +209,9 @@ impl Router {
         };
         match out {
             Ok(mut j) => {
+                if timed {
+                    self.metrics.observe(&format!("op.{op}_secs"), op_timer.elapsed_secs());
+                }
                 j.set("ok", Json::Bool(true));
                 j
             }
@@ -163,10 +230,38 @@ impl Router {
                     .with("error", Json::Str(format!("{e}")));
                 if busy {
                     j.set("busy", Json::Bool(true));
+                    // Backoff hint derived from the batching window: one
+                    // window from now the batcher has drained at least one
+                    // full batch from the bounded queue.
+                    j.set(
+                        "retry_after_ms",
+                        Json::Num(self.config.batch_window_ms.max(1) as f64),
+                    );
                 }
                 j
             }
         }
+    }
+
+    /// Parse the top-level `"shards"` field (default from the service
+    /// config) and enforce the sharded plane's method constraint.
+    fn parse_shards(&self, req: &Json, op: &str, method: Method) -> Result<usize> {
+        let shards = match req.get("shards") {
+            Some(v) => v.as_usize().ok_or_else(|| {
+                Error::Protocol(format!("{op}: shards must be a non-negative integer"))
+            })?,
+            None => self.config.default_shards,
+        };
+        if shards == 0 {
+            return Err(Error::Protocol(format!("{op}: shards must be >= 1")));
+        }
+        if shards > 1 && method != Method::Mka {
+            return Err(Error::Protocol(format!(
+                "{op}: shards > 1 requires method \"mka\" (got {})",
+                method.label()
+            )));
+        }
+        Ok(shards)
     }
 
     fn handle_fit(&self, req: &Json) -> Result<Json> {
@@ -192,6 +287,8 @@ impl Router {
         };
         let k = params.and_then(|p| p.usize_field("k")).unwrap_or(self.config.d_core);
         let seed = self.config.seed;
+        let shards = self.parse_shards(req, "fit", method)?;
+        let assign = self.config.shard_assign_method();
         let is_async = req.get("async").and_then(|v| v.as_bool()).unwrap_or(false);
 
         if is_async {
@@ -206,7 +303,7 @@ impl Router {
                 // pool would shrink forever) or strand the job in
                 // Running: contain it and fail the job instead.
                 let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-                    fit_model(method, &data, hp, k, seed)
+                    fit_op_model(method, &data, hp, k, seed, shards, assign, &metrics)
                 }));
                 match outcome {
                     Ok(Ok(model)) => {
@@ -230,12 +327,17 @@ impl Router {
             Ok(Json::obj().with("job_id", Json::Num(job_id as f64)))
         } else {
             let t = Timer::start();
-            let model = fit_model(method, &data, hp, k, seed)?;
+            let model = fit_op_model(method, &data, hp, k, seed, shards, assign, &self.metrics)?;
+            let info = model.info();
             self.registry.publish(&name, model.into());
             self.metrics.incr("fits", 1);
-            Ok(Json::obj()
+            let mut out = Json::obj()
                 .with("model", Json::Str(name))
-                .with("fit_secs", Json::Num(t.elapsed_secs())))
+                .with("fit_secs", Json::Num(t.elapsed_secs()));
+            if info.shards > 1 {
+                out.set("shards", Json::Num(info.shards as f64));
+            }
+            Ok(out)
         }
     }
 
@@ -288,6 +390,8 @@ impl Router {
                 Error::Protocol(format!("train: unknown selection {sel_name:?}"))
             }
         })?;
+        let shards = self.parse_shards(req, "train", method)?;
+        let assign = self.config.shard_assign_method();
         let is_async = req.get("async").and_then(|v| v.as_bool()).unwrap_or(true);
 
         if is_async {
@@ -302,7 +406,9 @@ impl Router {
                 // a dead worker + Running-forever job would wedge every
                 // poller of this job id.
                 let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-                    crate::train::train_model(method, &data, &selection, k, seed)
+                    crate::train::train_model_sharded(
+                        method, &data, &selection, k, seed, shards, assign,
+                    )
                 }));
                 match outcome {
                     Ok(Ok((model, report))) => {
@@ -329,7 +435,9 @@ impl Router {
             }
             Ok(Json::obj().with("job_id", Json::Num(job_id as f64)))
         } else {
-            let (model, report) = crate::train::train_model(method, &data, &selection, k, seed)?;
+            let (model, report) = crate::train::train_model_sharded(
+                method, &data, &selection, k, seed, shards, assign,
+            )?;
             self.registry.publish(&name, model.into());
             record_train_metrics(&self.metrics, &report);
             Ok(Json::obj().with("model", Json::Str(name)).with("train", report.to_json()))
@@ -386,6 +494,11 @@ impl Router {
                 model.name()
             ))
         })?;
+        // A sharded model re-tunes every shard's spectrum in one pass —
+        // O(shards) total; record the fleet shift in its own histogram.
+        if retuned.info().shards > 1 {
+            self.metrics.observe("shard.retune_secs", t.elapsed_secs());
+        }
         self.registry.publish(name, retuned.into());
         self.metrics.incr("retunes", 1);
         self.metrics.observe("retune_secs", t.elapsed_secs());
@@ -393,6 +506,36 @@ impl Router {
             .with("model", Json::Str(name.to_string()))
             .with("sigma2", Json::Num(sigma2)))
     }
+}
+
+/// The fit op's model constructor: unsharded requests go through the
+/// shared [`fit_model`]; `shards > 1` (already validated MKA-only)
+/// partitions the rows and fits a routed [`crate::gp::sharded::ShardedGp`]
+/// fleet, recording each shard's factorization wall time into the
+/// `shard.fit_secs` histogram.
+#[allow(clippy::too_many_arguments)]
+fn fit_op_model(
+    method: Method,
+    data: &Dataset,
+    hp: HyperParams,
+    k: usize,
+    seed: u64,
+    shards: usize,
+    assign: ClusterMethod,
+    metrics: &Metrics,
+) -> Result<Box<dyn crate::gp::GpModel>> {
+    if shards <= 1 {
+        return fit_model(method, data, hp, k, seed);
+    }
+    let kern = crate::kernels::RbfKernel::new(hp.lengthscale);
+    let cfg = crate::experiments::methods::mka_config_for(k, data.n(), seed);
+    let model =
+        crate::gp::sharded::ShardedGp::fit(data, &kern, hp.sigma2, &cfg, shards, assign)?;
+    for &s in model.fit_secs() {
+        metrics.observe("shard.fit_secs", s);
+    }
+    metrics.incr("shard_fits", 1);
+    Ok(Box::new(model))
 }
 
 /// Human-readable label for a contained job panic.
@@ -420,6 +563,12 @@ fn record_train_metrics(metrics: &Metrics, report: &TrainReport) {
     }
     if let Some(m) = report.best_mll {
         metrics.observe("train.best_mll", m);
+    }
+    if let Some(sf) = &report.shard_factorizations {
+        metrics.incr("shard_trains", 1);
+        for &c in sf {
+            metrics.observe("train.shard_factorizations", c as f64);
+        }
     }
 }
 
@@ -681,6 +830,93 @@ mod tests {
         assert_eq!(r.handle(&missing).get("ok"), Some(&Json::Bool(false)));
         let neg = Json::parse(r#"{"op":"retune","model":"mr","sigma2":-0.1}"#).unwrap();
         assert_eq!(r.handle(&neg).get("ok"), Some(&Json::Bool(false)));
+    }
+
+    /// Full sharded lifecycle through the protocol: fit with `"shards"`,
+    /// inspect per-model metadata, predict, retune, and read the shard
+    /// metrics section.
+    #[test]
+    fn sharded_fit_lifecycle() {
+        let r = router();
+        let mut req = fit_req("ms", "mka", 90, false);
+        req.set("shards", Json::Num(3.0));
+        let out = r.handle(&req);
+        assert_eq!(out.get("ok"), Some(&Json::Bool(true)), "{out:?}");
+        assert!(out.num_field("shards").unwrap_or(0.0) >= 2.0);
+
+        // models op reports metadata objects including shard topology
+        let m = r.handle(&Json::parse(r#"{"op":"models"}"#).unwrap());
+        let models = m.get("models").unwrap().as_arr().unwrap();
+        let entry = models
+            .iter()
+            .find(|e| e.str_field("name") == Some("ms"))
+            .expect("ms listed");
+        assert!(entry.num_field("shards").unwrap() >= 2.0);
+        assert_eq!(entry.num_field("n"), Some(90.0));
+        assert_eq!(entry.num_field("dim"), Some(2.0));
+        assert_eq!(entry.num_field("sigma2"), Some(0.1));
+        let sizes = entry.get("shard_sizes").unwrap().f64_array().unwrap();
+        assert_eq!(sizes.iter().sum::<f64>(), 90.0);
+
+        // routed predict + O(shards) retune
+        let pred = Json::obj()
+            .with("op", Json::Str("predict".into()))
+            .with("model", Json::Str("ms".into()))
+            .with("x", Json::Arr(vec![Json::from_f64_slice(&[0.2, -0.1])]));
+        assert_eq!(r.handle(&pred).get("ok"), Some(&Json::Bool(true)));
+        let retune = Json::parse(r#"{"op":"retune","model":"ms","sigma2":0.3}"#).unwrap();
+        assert_eq!(r.handle(&retune).get("ok"), Some(&Json::Bool(true)));
+
+        // metrics: shard section + per-op latency histograms
+        let snap = r.handle(&Json::parse(r#"{"op":"metrics"}"#).unwrap());
+        let shard = snap.get("shard").expect("shard section");
+        assert!(shard.num_field("models").unwrap() >= 1.0);
+        assert!(shard.num_field("count").unwrap() >= 2.0);
+        assert!(shard.num_field("route_hits").unwrap() >= 1.0);
+        assert!(!shard.get("sizes").unwrap().as_arr().unwrap().is_empty());
+        let hists = snap.get("histograms").unwrap();
+        for h in ["op.fit_secs", "op.predict_secs", "op.retune_secs"] {
+            let j = hists.get(h).unwrap_or_else(|| panic!("{h} histogram"));
+            assert!(j.num_field("p50").is_some() && j.num_field("p99").is_some(), "{h}");
+        }
+        assert!(hists.get("shard.fit_secs").is_some());
+        assert!(hists.get("shard.retune_secs").is_some());
+    }
+
+    #[test]
+    fn shard_validation_errors() {
+        let r = router();
+        // shards must be >= 1
+        let mut zero = fit_req("z", "mka", 60, false);
+        zero.set("shards", Json::Num(0.0));
+        let out = r.handle(&zero);
+        assert_eq!(out.get("ok"), Some(&Json::Bool(false)));
+        assert!(out.str_field("error").unwrap().contains("shards"));
+        // shards > 1 is MKA-only
+        let mut sor = fit_req("s", "sor", 60, false);
+        sor.set("shards", Json::Num(2.0));
+        let out = r.handle(&sor);
+        assert_eq!(out.get("ok"), Some(&Json::Bool(false)));
+        assert!(out.str_field("error").unwrap().contains("mka"));
+        // shards exceeding the training size is a typed error too
+        let mut many = fit_req("m", "mka", 60, false);
+        many.set("shards", Json::Num(61.0));
+        assert_eq!(r.handle(&many).get("ok"), Some(&Json::Bool(false)));
+    }
+
+    #[test]
+    fn sync_sharded_train_publishes_fleet() {
+        let r = router();
+        let mut req = train_req("mst", "mka", 90, "mll", false);
+        req.set("shards", Json::Num(2.0));
+        let out = r.handle(&req);
+        assert_eq!(out.get("ok"), Some(&Json::Bool(true)), "{out:?}");
+        let train = out.get("train").unwrap();
+        assert!(train.num_field("best_mll").unwrap().is_finite());
+        let sf = train.get("shard_factorizations").expect("per-shard counts");
+        assert!(!sf.as_arr().unwrap().is_empty());
+        let model = r.registry.get("mst").expect("fleet published");
+        assert!(model.info().shards >= 2);
     }
 
     #[test]

@@ -97,6 +97,23 @@ pub fn run_method(
     k: usize,
     seed: u64,
 ) -> Result<MethodResult> {
+    run_method_with_shards(method, train, test, hp, k, seed, 1)
+}
+
+/// `run_method` with a shard count: `shards > 1` fits the MKA row through
+/// the sharded serving plane (shard-per-cluster experts, routed predicts,
+/// rBCM recombination) instead of one monolithic cascade. Only MKA
+/// shards; every other method ignores the count and runs unsharded, so
+/// the table's comparison columns stay the paper's.
+pub fn run_method_with_shards(
+    method: Method,
+    train: &Dataset,
+    test: &Dataset,
+    hp: HyperParams,
+    k: usize,
+    seed: u64,
+    shards: usize,
+) -> Result<MethodResult> {
     let kernel = RbfKernel::new(hp.lengthscale);
     let s2 = hp.sigma2;
     let t_fit = Timer::start();
@@ -116,6 +133,17 @@ pub fn run_method(
                 seed,
             };
             Box::new(Meka::fit(train, &kernel, s2, &cfg)?)
+        }
+        Method::Mka if shards > 1 => {
+            let cfg = mka_config_for(k, train.n(), seed);
+            Box::new(crate::gp::sharded::ShardedGp::fit(
+                train,
+                &kernel,
+                s2,
+                &cfg,
+                shards,
+                crate::cluster::ClusterMethod::KMeans,
+            )?)
         }
         Method::Mka => {
             let cfg = mka_config_for(k, train.n(), seed);
@@ -217,6 +245,23 @@ mod tests {
         assert_eq!(c.block_size, 64);
         let c2 = mka_config_for(128, 1000, 3);
         assert_eq!(c2.block_size, 256);
+    }
+
+    #[test]
+    fn sharded_mka_run_matches_quality_envelope() {
+        let data = gp_dataset(&SynthSpec::named("t-sh", 150, 2), 4);
+        let (tr, te) = data.split(0.9, 4);
+        let hp = HyperParams { lengthscale: 1.4, sigma2: 0.1 };
+        let plain = run_method_with_shards(Method::Mka, &tr, &te, hp, 12, 7, 1).unwrap();
+        let sharded = run_method_with_shards(Method::Mka, &tr, &te, hp, 12, 7, 3).unwrap();
+        assert!(plain.smse.is_finite() && sharded.smse.is_finite());
+        // rBCM over three 45-point experts loses some accuracy vs the
+        // monolithic cascade, but must stay in the same envelope.
+        assert!(sharded.smse < plain.smse * 3.0 + 0.5, "sharded={}", sharded.smse);
+        // Non-MKA methods ignore the shard count entirely.
+        let a = run_method_with_shards(Method::Sor, &tr, &te, hp, 12, 7, 3).unwrap();
+        let b = run_method(Method::Sor, &tr, &te, hp, 12, 7).unwrap();
+        assert_eq!(a.smse.to_bits(), b.smse.to_bits());
     }
 
     #[test]

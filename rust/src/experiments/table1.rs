@@ -11,7 +11,7 @@
 
 use crate::data::dataset::Dataset;
 use crate::data::synth::{gp_dataset, table1_k, table1_specs};
-use crate::experiments::methods::{cv_predict, run_method, Method};
+use crate::experiments::methods::{cv_predict, run_method_with_shards, Method};
 use crate::gp::cv::{grid_search, HyperParams};
 use crate::train::{select_hyperparams, ModelSelection, OptimBudget};
 
@@ -57,6 +57,12 @@ pub struct Table1Config {
     /// (evidence / L-BFGS on analytic gradients). Unknown names fall
     /// back to CV with a warning.
     pub selection: String,
+    /// Shard count for the MKA column (1 = monolithic cascade, the paper
+    /// protocol). `> 1` runs MKA through the sharded serving plane —
+    /// shard-per-cluster experts with rBCM recombination — so the table
+    /// reports serving-plane quality next to the baselines. Only MKA
+    /// shards; the other columns always run unsharded.
+    pub shards: usize,
 }
 
 impl Default for Table1Config {
@@ -69,6 +75,7 @@ impl Default for Table1Config {
             seed: 42,
             methods: None,
             selection: "cv".into(),
+            shards: 1,
         }
     }
 }
@@ -137,7 +144,9 @@ pub fn run_dataset(data: &Dataset, k: usize, cfg: &Table1Config) -> Row {
     for rep in 0..cfg.repeats {
         let (tr, te) = data.split(0.9, cfg.seed + 1000 * (rep as u64 + 1));
         for (mi, &m) in methods.iter().enumerate() {
-            if let Ok(r) = run_method(m, &tr, &te, hp, k, cfg.seed + rep as u64) {
+            if let Ok(r) =
+                run_method_with_shards(m, &tr, &te, hp, k, cfg.seed + rep as u64, cfg.shards)
+            {
                 acc[mi].0.push(r.smse);
                 if let Some(nl) = r.mnlp {
                     acc[mi].1.push(nl);
@@ -260,6 +269,7 @@ mod tests {
                 seed: 6,
                 methods: Some(vec![Method::Full, Method::Mka]),
                 selection: selection.into(),
+                shards: 1,
             };
             let row = run_dataset(&data, 8, &cfg);
             assert_eq!(row.cells.len(), 2, "{selection}");
@@ -267,6 +277,28 @@ mod tests {
             for c in &row.cells {
                 assert!(c.smse_mean.is_finite(), "{selection} {:?}", c.method);
             }
+        }
+    }
+
+    /// `--shards k` table runs: the MKA column goes through the sharded
+    /// serving plane and still renders a finite, competitive cell.
+    #[test]
+    fn run_dataset_with_sharded_mka_column() {
+        let data = gp_dataset(&SynthSpec::named("mini-sh", 160, 3), 5);
+        let cfg = Table1Config {
+            max_n: 160,
+            repeats: 1,
+            folds: 2,
+            cv_max_n: 100,
+            seed: 5,
+            methods: Some(vec![Method::Full, Method::Mka]),
+            shards: 3,
+            ..Table1Config::default()
+        };
+        let row = run_dataset(&data, 8, &cfg);
+        assert_eq!(row.cells.len(), 2);
+        for c in &row.cells {
+            assert!(c.smse_mean.is_finite(), "{:?}", c.method);
         }
     }
 

@@ -4,7 +4,7 @@
 //! O(n³) fit, O(n²) per-point predictive variance; only tractable for the
 //! small-to-mid datasets, which is the whole point of the paper.
 
-use super::{GpModel, Prediction};
+use super::{GpModel, ModelInfo, Prediction};
 use crate::data::dataset::Dataset;
 use crate::error::Result;
 use crate::kernels::Kernel;
@@ -71,6 +71,17 @@ impl GpModel for FullGp {
 
     fn name(&self) -> String {
         "Full".to_string()
+    }
+
+    fn info(&self) -> ModelInfo {
+        ModelInfo {
+            method: self.name(),
+            n: self.x_train.rows,
+            dim: self.x_train.cols,
+            sigma2: Some(self.sigma2),
+            shards: 1,
+            shard_sizes: Vec::new(),
+        }
     }
 }
 

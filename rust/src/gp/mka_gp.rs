@@ -29,7 +29,7 @@
 
 use std::sync::OnceLock;
 
-use super::{GpModel, Prediction};
+use super::{GpModel, ModelInfo, Prediction};
 use crate::data::dataset::Dataset;
 use crate::error::{Error, Result};
 use crate::kernels::gram::GramBuilder;
@@ -119,6 +119,26 @@ impl MkaGp {
         }
         self.sigma2 = sigma2;
         Ok(())
+    }
+
+    /// A copy of this model serving at noise `sigma2`, sharing the
+    /// already-computed train factor (cheap: Arc'd stages) — the concrete
+    /// form of [`GpModel::with_noise`], used by the sharded fleet to
+    /// retune every shard in O(shards).
+    pub fn retuned(&self, sigma2: f64) -> Result<MkaGp> {
+        let mut m = MkaGp {
+            train: self.train.clone(),
+            kernel: self.kernel.boxed_clone(),
+            sigma2: self.sigma2,
+            config: self.config.clone(),
+            gram: self.gram.clone(),
+            train_factor: OnceLock::new(),
+        };
+        if let Some(slot) = self.train_factor.get() {
+            let _ = m.train_factor.set(slot.clone());
+        }
+        m.set_noise(sigma2)?;
+        Ok(m)
     }
 
     /// Factorize the joint train/test kernel (exposed for diagnostics).
@@ -258,20 +278,18 @@ impl GpModel for MkaGp {
     }
 
     fn with_noise(&self, sigma2: f64) -> Option<Box<dyn GpModel>> {
-        let mut m = MkaGp {
-            train: self.train.clone(),
-            kernel: self.kernel.boxed_clone(),
-            sigma2: self.sigma2,
-            config: self.config.clone(),
-            gram: self.gram.clone(),
-            train_factor: OnceLock::new(),
-        };
-        // Share the already-computed train factor (cheap: Arc'd stages).
-        if let Some(slot) = self.train_factor.get() {
-            let _ = m.train_factor.set(slot.clone());
+        Some(Box::new(self.retuned(sigma2).ok()?))
+    }
+
+    fn info(&self) -> ModelInfo {
+        ModelInfo {
+            method: self.name(),
+            n: self.train.n(),
+            dim: self.train.dim(),
+            sigma2: Some(self.sigma2),
+            shards: 1,
+            shard_sizes: Vec::new(),
         }
-        m.set_noise(sigma2).ok()?;
-        Some(Box::new(m))
     }
 }
 

@@ -19,6 +19,7 @@ pub mod full;
 pub mod metrics;
 pub mod mka_gp;
 pub mod ridge;
+pub mod sharded;
 
 use crate::la::dense::Mat;
 
@@ -40,6 +41,40 @@ impl Prediction {
     }
 }
 
+/// Descriptive metadata for a fitted model — what the serving plane's
+/// `models` op reports per registry entry. `shards == 1` with an empty
+/// `shard_sizes` is the unsharded case.
+#[derive(Clone, Debug)]
+pub struct ModelInfo {
+    /// Method label, same vocabulary as [`GpModel::name`].
+    pub method: String,
+    /// Training-set size (0 when the model does not retain it).
+    pub n: usize,
+    /// Input dimension (0 when the model does not retain it).
+    pub dim: usize,
+    /// Observation-noise variance, when the model exposes one.
+    pub sigma2: Option<f64>,
+    /// Number of shards behind this model (1 unless sharded).
+    pub shards: usize,
+    /// Per-shard training sizes in shard-id order (empty when unsharded).
+    pub shard_sizes: Vec<usize>,
+}
+
+impl ModelInfo {
+    /// Name-only metadata — the default for models that retain nothing
+    /// beyond their label.
+    pub fn basic(method: String) -> ModelInfo {
+        ModelInfo {
+            method,
+            n: 0,
+            dim: 0,
+            sigma2: None,
+            shards: 1,
+            shard_sizes: Vec::new(),
+        }
+    }
+}
+
 /// A fitted GP regression model.
 pub trait GpModel: Send + Sync {
     /// Predict mean and variance at the rows of `x_test`.
@@ -57,6 +92,13 @@ pub trait GpModel: Send + Sync {
     /// a full refit job.
     fn with_noise(&self, _sigma2: f64) -> Option<Box<dyn GpModel>> {
         None
+    }
+
+    /// Descriptive metadata (method, training shape, σ², shard topology)
+    /// for the serving plane's `models` op. The default reports the name
+    /// only; models that retain their training set override it.
+    fn info(&self) -> ModelInfo {
+        ModelInfo::basic(self.name())
     }
 }
 

@@ -1,0 +1,480 @@
+//! Sharded GP serving: shard-per-cluster fit, routed predicts, BCM
+//! recombination.
+//!
+//! One `MkaGp` holds one factor on one box; [`ShardedGp`] refactors that
+//! into a fleet. Training data is partitioned with the same clustering
+//! machinery the PITC baseline conditions on ([`crate::cluster`]), one
+//! `MkaGp` is fitted per shard **concurrently on the shared `par` pool**
+//! (fixed shard→slot order, so the PR-2 bit-determinism contract holds at
+//! any thread count), and a predict routes each test point to its nearest
+//! shard centroids and recombines the per-shard posteriors with a (robust)
+//! Bayesian-committee-machine rule (Low et al., "Parallel Gaussian Process
+//! Regression for Big Data", PAPERS.md):
+//!
+//!   σ⁻²_bcm = Σ_s σ⁻²_s − (m − 1)·σ⁻²_prior,
+//!   μ_bcm   = σ²_bcm · Σ_s μ_s/σ²_s,
+//!
+//! where σ²_prior = k(x, x) + σ² is the prior predictive variance and m
+//! the number of consulted experts. When the BCM precision degenerates
+//! (≤ 0 from approximation error), the combiner falls back to the
+//! product-of-experts form with a harmonic-mean variance — conservative,
+//! never negative. A single consulted expert returns that shard's
+//! prediction **unchanged**, which is what makes the 1-shard model
+//! bit-identical to a plain `MkaGp`.
+//!
+//! Noise stays a view: `with_noise` fans out the PR-5 shift machinery per
+//! shard, so a serving-plane retune is O(shards) spectrum shifts, never a
+//! refit.
+//!
+//! Determinism contract: the partition is a fixed function of (data,
+//! method, seed); shards occupy fixed slots; per-shard fits and predicts
+//! are independently bit-deterministic (`MkaGp` under PR-2); routing sorts
+//! by distance with ties broken toward the lower shard id; and every
+//! reduction (combine loop, evidence sums in the trainer) walks shards in
+//! id order — never completion order.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use super::{GpModel, ModelInfo, Prediction};
+use crate::cluster::{cluster_rows, ClusterMethod};
+use crate::data::dataset::Dataset;
+use crate::error::{Error, Result};
+use crate::gp::mka_gp::MkaGp;
+use crate::kernels::Kernel;
+use crate::la::dense::Mat;
+use crate::mka::MkaConfig;
+use crate::par::{self, SendPtr};
+use crate::util::Rng;
+
+/// How many nearest shard centroids a test point consults by default.
+pub const DEFAULT_ROUTE_EXPERTS: usize = 2;
+
+/// Process-wide count of (test point, shard) routing decisions, surfaced
+/// by the coordinator's `metrics` op as `shard.route_hits`.
+static ROUTE_HITS: AtomicU64 = AtomicU64::new(0);
+
+/// Total routed (point, shard) pairs served by every `ShardedGp` in this
+/// process.
+pub fn route_hits() -> u64 {
+    ROUTE_HITS.load(Ordering::Relaxed)
+}
+
+/// Partition `x`'s rows into (at most) `n_shards` clusters for sharded
+/// fitting. Deterministic in (x, method, seed); `n_shards == 1` returns
+/// the identity partition in original row order (the bit-identity path).
+/// Clustering may merge small clusters, so the effective shard count is
+/// `result.len() ≤ n_shards`.
+pub fn shard_partition(
+    x: &Mat,
+    n_shards: usize,
+    method: ClusterMethod,
+    seed: u64,
+) -> Result<Vec<Vec<usize>>> {
+    let n = x.rows;
+    if n_shards == 0 {
+        return Err(Error::Config("shards must be >= 1".into()));
+    }
+    if n_shards > n {
+        return Err(Error::Config(format!(
+            "shards ({n_shards}) must not exceed training points ({n})"
+        )));
+    }
+    if n_shards == 1 {
+        return Ok(vec![(0..n).collect()]);
+    }
+    let mut rng = Rng::new(seed ^ 0x5348_4152); // "SHAR"
+    let target = n.div_ceil(n_shards);
+    let c = cluster_rows(method, Some(x), None, n, target, &mut rng).normalize();
+    Ok(c.clusters)
+}
+
+struct Shard {
+    centroid: Vec<f64>,
+    model: MkaGp,
+    n: usize,
+}
+
+/// A fleet of per-shard MKA-GPs behind one [`GpModel`] face.
+pub struct ShardedGp {
+    shards: Vec<Shard>,
+    kernel: Box<dyn Kernel>,
+    sigma2: f64,
+    config: MkaConfig,
+    route_experts: usize,
+    n_total: usize,
+    dim: usize,
+    /// Per-shard factorization wall time from `fit`, in shard-id order
+    /// (the coordinator's `shard.fit_secs` histogram feed).
+    fit_secs: Vec<f64>,
+}
+
+impl ShardedGp {
+    /// Partition `train` into `n_shards` clusters by `assign` (partition
+    /// seed = `config.seed`) and fit one `MkaGp` per shard, forcing every
+    /// shard's noise-free train factor concurrently on the shared pool.
+    pub fn fit(
+        train: &Dataset,
+        kernel: &dyn Kernel,
+        sigma2: f64,
+        config: &MkaConfig,
+        n_shards: usize,
+        assign: ClusterMethod,
+    ) -> Result<ShardedGp> {
+        let parts = shard_partition(&train.x, n_shards, assign, config.seed)?;
+        let k = parts.len();
+        let mut shards = Vec::with_capacity(k);
+        for members in &parts {
+            let sub = train.subset(members);
+            let mut centroid = vec![0.0; train.dim()];
+            for &i in members {
+                for (c, v) in centroid.iter_mut().zip(train.x.row(i)) {
+                    *c += v;
+                }
+            }
+            let inv = 1.0 / members.len() as f64;
+            for c in &mut centroid {
+                *c *= inv;
+            }
+            let model = MkaGp::fit(&sub, kernel, sigma2, config)?;
+            shards.push(Shard { centroid, model, n: members.len() });
+        }
+
+        // Force every shard's train factor now, one pool task per shard
+        // (fixed slots): fit-time work happens at fit time, in parallel,
+        // and a poisoned shard surfaces here rather than at first predict.
+        let mut fit_secs = vec![0.0f64; k];
+        let mut errors: Vec<Option<String>> = vec![None; k];
+        {
+            let secs = SendPtr::new(fit_secs.as_mut_ptr());
+            let errs = SendPtr::new(errors.as_mut_ptr());
+            let fleet = &shards;
+            par::run_tasks(k, k, |s| {
+                let t0 = std::time::Instant::now();
+                let msg = fleet[s].model.train_factor().err().map(|e| e.to_string());
+                // SAFETY: task s writes only slots s; run_tasks blocks
+                // until every task finished.
+                unsafe {
+                    *secs.ptr().add(s) = t0.elapsed().as_secs_f64();
+                    *errs.ptr().add(s) = msg;
+                }
+            });
+        }
+        for (s, e) in errors.iter().enumerate() {
+            if let Some(msg) = e {
+                return Err(Error::Linalg(format!("shard {s} fit failed: {msg}")));
+            }
+        }
+
+        Ok(ShardedGp {
+            shards,
+            kernel: kernel.boxed_clone(),
+            sigma2,
+            config: config.clone(),
+            route_experts: DEFAULT_ROUTE_EXPERTS,
+            n_total: train.n(),
+            dim: train.dim(),
+            fit_secs,
+        })
+    }
+
+    /// Consult the `m` nearest shard centroids per test point instead of
+    /// the default [`DEFAULT_ROUTE_EXPERTS`] (clamped to the shard count
+    /// at predict time; `m == 0` is rounded up to 1).
+    pub fn with_route_experts(mut self, m: usize) -> ShardedGp {
+        self.route_experts = m.max(1);
+        self
+    }
+
+    /// Number of shards actually fitted (≤ the requested count when the
+    /// clustering merged small clusters).
+    pub fn n_shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// Per-shard training sizes in shard-id order.
+    pub fn shard_sizes(&self) -> Vec<usize> {
+        self.shards.iter().map(|s| s.n).collect()
+    }
+
+    /// Per-shard factorization wall time from `fit`, in shard-id order.
+    pub fn fit_secs(&self) -> &[f64] {
+        &self.fit_secs
+    }
+
+    /// Current observation-noise variance σ².
+    pub fn sigma2(&self) -> f64 {
+        self.sigma2
+    }
+
+    /// A copy of this fleet serving at noise `sigma2`: per-shard spectrum
+    /// shifts (the PR-5 view), O(shards) work, zero refactorizations.
+    pub fn retuned(&self, sigma2: f64) -> Result<ShardedGp> {
+        let mut shards = Vec::with_capacity(self.shards.len());
+        for s in &self.shards {
+            shards.push(Shard {
+                centroid: s.centroid.clone(),
+                model: s.model.retuned(sigma2)?,
+                n: s.n,
+            });
+        }
+        Ok(ShardedGp {
+            shards,
+            kernel: self.kernel.boxed_clone(),
+            sigma2,
+            config: self.config.clone(),
+            route_experts: self.route_experts,
+            n_total: self.n_total,
+            dim: self.dim,
+            fit_secs: self.fit_secs.clone(),
+        })
+    }
+
+    /// The experts consulted for test point `xt`: the `route_experts`
+    /// nearest centroids, distance ties broken toward the lower shard id,
+    /// returned **in shard-id order** so downstream reductions are
+    /// interleaving-independent.
+    fn route(&self, xt: &[f64]) -> Vec<usize> {
+        let k = self.shards.len();
+        let m = self.route_experts.min(k);
+        let d: Vec<f64> = self.shards.iter().map(|s| sqdist(xt, &s.centroid)).collect();
+        let mut order: Vec<usize> = (0..k).collect();
+        order.sort_by(|&a, &b| {
+            d[a].partial_cmp(&d[b]).unwrap_or(std::cmp::Ordering::Equal).then(a.cmp(&b))
+        });
+        order.truncate(m);
+        order.sort_unstable();
+        order
+    }
+}
+
+fn sqdist(a: &[f64], b: &[f64]) -> f64 {
+    a.iter().zip(b).map(|(x, y)| (x - y) * (x - y)).sum()
+}
+
+impl GpModel for ShardedGp {
+    fn predict(&self, x_test: &Mat) -> Prediction {
+        let p = x_test.rows;
+        let k = self.shards.len();
+        if p == 0 {
+            return Prediction { mean: Vec::new(), var: Vec::new() };
+        }
+
+        // Route every point, then gather each shard's sub-batch (test
+        // indices in ascending order — the cursor walk below relies on it).
+        let routes: Vec<Vec<usize>> = (0..p).map(|t| self.route(x_test.row(t))).collect();
+        let hits: u64 = routes.iter().map(|r| r.len() as u64).sum();
+        ROUTE_HITS.fetch_add(hits, Ordering::Relaxed);
+        let mut per_shard: Vec<Vec<usize>> = vec![Vec::new(); k];
+        for (t, r) in routes.iter().enumerate() {
+            for &s in r {
+                per_shard[s].push(t);
+            }
+        }
+
+        // Per-shard predicts, one pool task per shard into fixed slots;
+        // each MkaGp predict is itself bit-deterministic, so concurrent
+        // shards cannot perturb each other's bits.
+        let mut preds: Vec<Option<Prediction>> = vec![None; k];
+        {
+            let slots = SendPtr::new(preds.as_mut_ptr());
+            par::run_tasks(k, k, |s| {
+                let idx = &per_shard[s];
+                let out = if idx.is_empty() {
+                    None
+                } else {
+                    Some(self.shards[s].model.predict(&x_test.gather_rows(idx)))
+                };
+                // SAFETY: task s writes only slot s; run_tasks blocks
+                // until every task finished.
+                unsafe { *slots.ptr().add(s) = out };
+            });
+        }
+
+        // Recombine serially, experts in shard-id order per point.
+        let mut cursor = vec![0usize; k];
+        let mut mean = Vec::with_capacity(p);
+        let mut var = Vec::with_capacity(p);
+        for t in 0..p {
+            let experts = &routes[t];
+            let mut ms = Vec::with_capacity(experts.len());
+            let mut vs = Vec::with_capacity(experts.len());
+            for &s in experts {
+                let pos = cursor[s];
+                cursor[s] += 1;
+                let pr = preds[s].as_ref().expect("routed shard has predictions");
+                ms.push(pr.mean[pos]);
+                vs.push(pr.var[pos]);
+            }
+            if experts.len() == 1 {
+                // Single expert: its posterior verbatim — the 1-shard
+                // fleet is bit-identical to the unsharded model.
+                mean.push(ms[0]);
+                var.push(vs[0]);
+                continue;
+            }
+            let mut prec = 0.0;
+            let mut wmean = 0.0;
+            for (m, v) in ms.iter().zip(&vs) {
+                prec += 1.0 / v;
+                wmean += m / v;
+            }
+            let v_prior = self.kernel.diag(x_test.row(t)) + self.sigma2;
+            let bcm_prec = prec - (experts.len() - 1) as f64 / v_prior;
+            if bcm_prec.is_finite() && bcm_prec > 0.0 {
+                mean.push(wmean / bcm_prec);
+                var.push((1.0 / bcm_prec).max(self.sigma2));
+            } else {
+                // Degenerate BCM precision: product-of-experts mean with a
+                // harmonic-mean (conservative) variance.
+                mean.push(wmean / prec);
+                var.push((experts.len() as f64 / prec).max(self.sigma2));
+            }
+        }
+        Prediction { mean, var }
+    }
+
+    fn name(&self) -> String {
+        format!("Sharded-MKA(shards={}, d={})", self.shards.len(), self.config.d_core)
+    }
+
+    fn with_noise(&self, sigma2: f64) -> Option<Box<dyn GpModel>> {
+        Some(Box::new(self.retuned(sigma2).ok()?))
+    }
+
+    fn info(&self) -> ModelInfo {
+        ModelInfo {
+            method: self.name(),
+            n: self.n_total,
+            dim: self.dim,
+            sigma2: Some(self.sigma2),
+            shards: self.shards.len(),
+            shard_sizes: self.shard_sizes(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::{gp_dataset, SynthSpec};
+    use crate::kernels::RbfKernel;
+
+    fn config(d: usize) -> MkaConfig {
+        MkaConfig { d_core: d, block_size: 48, ..MkaConfig::default() }
+    }
+
+    #[test]
+    fn partition_validates_and_covers() {
+        let x = Mat::from_fn(30, 2, |i, j| (i * 2 + j) as f64);
+        assert!(shard_partition(&x, 0, ClusterMethod::KMeans, 1).is_err());
+        assert!(shard_partition(&x, 31, ClusterMethod::KMeans, 1).is_err());
+        let one = shard_partition(&x, 1, ClusterMethod::KMeans, 1).unwrap();
+        assert_eq!(one, vec![(0..30).collect::<Vec<_>>()]);
+        let four = shard_partition(&x, 4, ClusterMethod::KMeans, 1).unwrap();
+        assert!(four.len() >= 2 && four.len() <= 4, "{} shards", four.len());
+        let covered: usize = four.iter().map(|c| c.len()).sum();
+        assert_eq!(covered, 30);
+        // deterministic in the seed
+        let again = shard_partition(&x, 4, ClusterMethod::KMeans, 1).unwrap();
+        assert_eq!(four, again);
+    }
+
+    #[test]
+    fn one_shard_is_bit_identical_to_plain_mka() {
+        let data = gp_dataset(&SynthSpec::named("shard1", 150, 2), 3);
+        let (tr, te) = data.split(0.85, 1);
+        let kern = RbfKernel::new(1.0);
+        let cfg = config(24);
+        let plain = MkaGp::fit(&tr, &kern, 0.1, &cfg).unwrap();
+        let fleet =
+            ShardedGp::fit(&tr, &kern, 0.1, &cfg, 1, ClusterMethod::KMeans).unwrap();
+        assert_eq!(fleet.n_shards(), 1);
+        let pp = plain.predict(&te.x);
+        let pf = fleet.predict(&te.x);
+        for i in 0..te.n() {
+            assert_eq!(pp.mean[i].to_bits(), pf.mean[i].to_bits(), "mean[{i}]");
+            assert_eq!(pp.var[i].to_bits(), pf.var[i].to_bits(), "var[{i}]");
+        }
+    }
+
+    #[test]
+    fn sharded_predicts_are_sane_and_floored_at_noise() {
+        let data = gp_dataset(&SynthSpec::named("shardk", 240, 2), 5);
+        let (tr, te) = data.split(0.85, 2);
+        let fleet =
+            ShardedGp::fit(&tr, &RbfKernel::new(0.9), 0.1, &config(16), 4, ClusterMethod::KMeans)
+                .unwrap();
+        assert!(fleet.n_shards() >= 2);
+        assert_eq!(fleet.shard_sizes().iter().sum::<usize>(), tr.n());
+        assert_eq!(fleet.fit_secs().len(), fleet.n_shards());
+        let pred = fleet.predict(&te.x);
+        assert_eq!(pred.len(), te.n());
+        for i in 0..te.n() {
+            assert!(pred.mean[i].is_finite());
+            assert!(pred.var[i] >= 0.1 - 1e-12, "var[{i}] = {}", pred.var[i]);
+        }
+        assert!(route_hits() > 0);
+    }
+
+    #[test]
+    fn retune_matches_fresh_fit() {
+        let data = gp_dataset(&SynthSpec::named("shardret", 180, 2), 7);
+        let (tr, te) = data.split(0.85, 3);
+        let kern = RbfKernel::new(1.0);
+        let fleet =
+            ShardedGp::fit(&tr, &kern, 0.1, &config(16), 3, ClusterMethod::KMeans).unwrap();
+        let retuned = fleet.retuned(0.3).unwrap();
+        assert_eq!(retuned.sigma2(), 0.3);
+        let fresh =
+            ShardedGp::fit(&tr, &kern, 0.3, &config(16), 3, ClusterMethod::KMeans).unwrap();
+        let pr = retuned.predict(&te.x);
+        let pf = fresh.predict(&te.x);
+        for i in 0..te.n() {
+            assert!((pr.mean[i] - pf.mean[i]).abs() < 1e-10, "mean[{i}]");
+            assert!((pr.var[i] - pf.var[i]).abs() < 1e-10, "var[{i}]");
+        }
+        // trait hook routes the same machinery; invalid σ² refuses
+        assert!(fleet.with_noise(0.05).is_some());
+        assert!(fleet.with_noise(-1.0).is_none());
+    }
+
+    #[test]
+    fn info_reports_shard_topology() {
+        let data = gp_dataset(&SynthSpec::named("shardinfo", 120, 3), 9);
+        let fleet =
+            ShardedGp::fit(&data, &RbfKernel::new(1.0), 0.2, &config(12), 3, ClusterMethod::KMeans)
+                .unwrap();
+        let info = fleet.info();
+        assert_eq!(info.n, 120);
+        assert_eq!(info.dim, 3);
+        assert_eq!(info.sigma2, Some(0.2));
+        assert_eq!(info.shards, fleet.n_shards());
+        assert_eq!(info.shard_sizes, fleet.shard_sizes());
+        assert!(info.method.starts_with("Sharded-MKA"));
+    }
+
+    #[test]
+    fn routing_consults_nearest_and_breaks_ties_low() {
+        let data = gp_dataset(&SynthSpec::named("shardroute", 90, 2), 11);
+        let fleet = ShardedGp::fit(
+            &data,
+            &RbfKernel::new(1.0),
+            0.1,
+            &config(8),
+            3,
+            ClusterMethod::KMeans,
+        )
+        .unwrap()
+        .with_route_experts(1);
+        let k = fleet.n_shards();
+        for t in 0..data.n().min(20) {
+            let r = fleet.route(data.x.row(t));
+            assert_eq!(r.len(), 1);
+            assert!(r[0] < k);
+        }
+        // consulting more experts than shards clamps and keeps id order
+        let routed_all = fleet.with_route_experts(99);
+        let r = routed_all.route(data.x.row(0));
+        assert_eq!(r, (0..k).collect::<Vec<_>>());
+    }
+}

@@ -59,7 +59,7 @@ fn print_usage() {
                      --selection mll|mll-grad|cv [--ard] --max-evals 60\n\
                      --starts 3 --folds 5 [--assert-converged] [--assert-cache-hit]\n\
          experiment  --name table1|fig1|fig2 [--full] [--max-n N] [--datasets a,b]\n\
-                     [--selection cv|mll|mll-grad]\n\
+                     [--selection cv|mll|mll-grad] [--shards K]\n\
          selftest    --artifacts artifacts\n\
          info        [--artifacts artifacts]"
     );
@@ -255,6 +255,9 @@ fn cmd_experiment(args: &Args) -> Result<()> {
             }
             cfg.max_n = args.get_usize("max-n", cfg.max_n);
             cfg.selection = args.get_or("selection", "cv").to_string();
+            // --shards K runs the MKA column through the sharded serving
+            // plane (shard-per-cluster experts, rBCM recombination).
+            cfg.shards = args.get_usize("shards", 1).max(1);
             let only = args.get("datasets").map(|s| s.split(',').collect::<Vec<_>>());
             let rows = mka_gp::experiments::table1::run_table(&cfg, only.as_deref());
             println!("{}", mka_gp::experiments::table1::format_rows(&rows));

@@ -39,7 +39,9 @@ use crate::la::chol::Chol;
 use crate::la::dense::Mat;
 use crate::mka::MkaConfig;
 use crate::train::cache::FactorCache;
-use crate::train::mll::{gaussian_mll, mka_entry, mka_scope, nystrom_entry, pitc_clusters};
+use crate::train::mll::{
+    gaussian_mll, mka_entry, mka_scope, nystrom_entry, pitc_clusters, shard_scope,
+};
 use crate::util::Rng;
 
 /// Default Hutchinson probe count for the MKA trace estimator.
@@ -486,10 +488,49 @@ pub fn mll_grad_mka_cached(
     probe_seed: u64,
     cache: &FactorCache,
 ) -> Result<MllGrad> {
+    mll_grad_mka_at_scope(data, hp, tied, cfg, mode, probe_seed, cache, &mka_scope(cfg))
+}
+
+/// One shard's MKA evidence gradient in a sharded training run: same
+/// cascade gradient, but the cache entry lives under a shard-tagged
+/// scope ([`shard_scope`]) so shards sharing a `FactorCache` never serve
+/// each other's factors. Trace mode and probe seed match the `mll_grad`
+/// dispatcher's MKA arm, so a 1-shard run climbs the identical surface.
+pub fn shard_mll_grad_mka(
+    data: &Dataset,
+    hp: &ArdHyperParams,
+    tied: bool,
+    cfg: &MkaConfig,
+    cache: &FactorCache,
+    shard_id: u64,
+) -> Result<MllGrad> {
+    mll_grad_mka_at_scope(
+        data,
+        hp,
+        tied,
+        cfg,
+        TraceMode::Probes(MKA_TRACE_PROBES),
+        cfg.seed ^ 0x70524f42,
+        cache,
+        &shard_scope(shard_id, &mka_scope(cfg)),
+    )
+}
+
+#[allow(clippy::too_many_arguments)]
+fn mll_grad_mka_at_scope(
+    data: &Dataset,
+    hp: &ArdHyperParams,
+    tied: bool,
+    cfg: &MkaConfig,
+    mode: TraceMode,
+    probe_seed: u64,
+    cache: &FactorCache,
+    scope: &[u64],
+) -> Result<MllGrad> {
     check_hp(data, hp)?;
     let n = data.n();
     let kern = hp.kernel();
-    let entry = cache.mka(&mka_scope(cfg), &hp.lengthscales, || mka_entry(data, &kern, cfg, true))?;
+    let entry = cache.mka(scope, &hp.lengthscales, || mka_entry(data, &kern, cfg, true))?;
     // The entry was built with its gram retained; the lazy accessor only
     // rebuilds if a value-path entry (factor-only) ever lands on this key.
     let k = entry.gram(|| kern.gram_sym(&data.x));

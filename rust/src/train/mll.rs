@@ -340,6 +340,36 @@ pub fn log_marginal_likelihood_cached(
     }
 }
 
+/// Prepend a shard tag to a cache scope: shard `tag`'s entries live
+/// under `[tag, scope…]`, so sharded training can never collide entries
+/// across shards — the shard id joins the cache key.
+pub(crate) fn shard_scope(tag: u64, scope: &[u64]) -> Vec<u64> {
+    let mut v = Vec::with_capacity(scope.len() + 1);
+    v.push(tag);
+    v.extend_from_slice(scope);
+    v
+}
+
+/// MKA evidence of **one shard** of a sharded training run: the factor
+/// rides `cache` under a shard-tagged scope ([`shard_scope`]), and `cfg`
+/// is the fleet-wide config — the same config every shard of the fitted
+/// [`crate::gp::sharded::ShardedGp`] will use — so the summed surface the
+/// optimizer climbs is the evidence of the model that will be served.
+/// MKA-only by construction: the sharded plane serves MKA shards.
+pub fn shard_log_marginal_likelihood(
+    data: &Dataset,
+    hp: HyperParams,
+    cfg: &MkaConfig,
+    cache: &FactorCache,
+    shard_id: u64,
+) -> Result<f64> {
+    check_hp(hp)?;
+    let kern = RbfKernel::new(hp.lengthscale);
+    let scope = shard_scope(shard_id, &mka_scope(cfg));
+    let e = cache.mka(&scope, &[hp.lengthscale], || mka_entry(data, &kern, cfg, false))?;
+    mll_from_factor(&e.factor.shifted(hp.sigma2), &data.y)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

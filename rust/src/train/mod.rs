@@ -37,13 +37,15 @@ pub mod optimizer;
 pub mod trainer;
 
 pub use cache::{factor_cache_hits, factor_cache_misses, FactorCache};
-pub use grad::{mll_grad, mll_grad_cached, MllGrad, TraceMode};
-pub use mll::{log_marginal_likelihood, log_marginal_likelihood_cached};
+pub use grad::{mll_grad, mll_grad_cached, shard_mll_grad_mka, MllGrad, TraceMode};
+pub use mll::{
+    log_marginal_likelihood, log_marginal_likelihood_cached, shard_log_marginal_likelihood,
+};
 pub use optimizer::{
     maximize_mll, maximize_mll_lbfgs, EvalRecord, GradOptimOutcome, OptimBudget, OptimOutcome,
     SearchBox,
 };
 pub use trainer::{
-    fit_model, fit_model_ard, fit_model_with_kernel, select_hyperparams, train_model,
-    ModelSelection, TrainReport,
+    fit_model, fit_model_ard, fit_model_with_kernel, select_hyperparams,
+    select_hyperparams_sharded, train_model, train_model_sharded, ModelSelection, TrainReport,
 };

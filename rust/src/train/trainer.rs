@@ -21,15 +21,19 @@
 //! it backs both the `train` CLI subcommand and the coordinator's async
 //! `{"op":"train"}` job.
 
+use crate::cluster::ClusterMethod;
 use crate::data::dataset::Dataset;
 use crate::error::{Error, Result};
-use crate::experiments::methods::{cv_predict, Method};
+use crate::experiments::methods::{cv_predict, mka_config_for, Method};
 use crate::gp::cv::{default_grid, grid_search, ArdHyperParams, HyperParams};
+use crate::gp::sharded::{shard_partition, ShardedGp};
 use crate::gp::GpModel;
 use crate::kernels::Kernel;
+use crate::mka::MkaConfig;
+use crate::par::{self, SendPtr};
 use crate::train::cache::FactorCache;
-use crate::train::grad::mll_grad_cached;
-use crate::train::mll::log_marginal_likelihood_cached;
+use crate::train::grad::{mll_grad_cached, shard_mll_grad_mka, MllGrad};
+use crate::train::mll::{log_marginal_likelihood_cached, shard_log_marginal_likelihood};
 use crate::train::optimizer::{maximize_mll, maximize_mll_lbfgs, EvalRecord, OptimBudget, SearchBox};
 use crate::util::json::Json;
 use crate::util::timer::Timer;
@@ -106,6 +110,10 @@ pub struct TrainReport {
     /// eval is one Cholesky that never routes through the cache —
     /// reporting 0 there would read as perfect reuse).
     pub factorizations: Option<usize>,
+    /// Per-shard factor-build counts of a sharded evidence run, in
+    /// shard-id order (each shard rides its own [`FactorCache`]; summing
+    /// this vector gives `factorizations`). `None` on unsharded runs.
+    pub shard_factorizations: Option<Vec<usize>>,
     pub converged: bool,
     /// Per-candidate trace (successful evaluations only).
     pub trace: Vec<EvalRecord>,
@@ -131,6 +139,12 @@ impl TrainReport {
         }
         if let Some(fx) = self.factorizations {
             j.set("factorizations", Json::Num(fx as f64));
+        }
+        if let Some(sf) = &self.shard_factorizations {
+            j.set(
+                "shard_factorizations",
+                Json::Arr(sf.iter().map(|&c| Json::Num(c as f64)).collect()),
+            );
         }
         if let Some(m) = self.best_mll {
             j.set("best_mll", Json::Num(m));
@@ -178,6 +192,7 @@ pub fn select_hyperparams(
                 cv_score: Some(out.best_score),
                 evals: grid.len(),
                 factorizations: None,
+                shard_factorizations: None,
                 converged: true,
                 trace,
                 train_secs: t.elapsed_secs(),
@@ -210,6 +225,7 @@ pub fn select_hyperparams(
                 cv_score: None,
                 evals: out.evals,
                 factorizations: cacheable_factorizations(method, &cache),
+                shard_factorizations: None,
                 converged: out.converged,
                 trace: out.trace,
                 train_secs: t.elapsed_secs(),
@@ -244,12 +260,219 @@ pub fn select_hyperparams(
                 cv_score: None,
                 evals: out.evals,
                 factorizations: cacheable_factorizations(method, &cache),
+                shard_factorizations: None,
                 converged: out.converged,
                 trace: out.trace,
                 train_secs: t.elapsed_secs(),
             })
         }
     }
+}
+
+/// Evaluate one objective per shard on the shared pool (fixed slots, one
+/// task per shard) and hand the slot vector back for a **serial in-order
+/// reduction** at the call site — the two halves of the sharded
+/// determinism contract: schedule-independent placement, then a
+/// schedule-independent sum.
+fn eval_shards<T: Clone + Send>(
+    n_shards: usize,
+    eval: impl Fn(usize) -> Option<T> + Send + Sync,
+) -> Vec<Option<T>> {
+    let mut slots: Vec<Option<T>> = vec![None; n_shards];
+    {
+        let ptr = SendPtr::new(slots.as_mut_ptr());
+        par::run_tasks(n_shards, n_shards, |s| {
+            let v = eval(s);
+            // SAFETY: task s writes only slot s; run_tasks blocks until
+            // every task finished.
+            unsafe { *ptr.ptr().add(s) = v };
+        });
+    }
+    slots
+}
+
+/// Sum of per-shard MKA evidences at `hp` — the objective surface of a
+/// sharded [`ModelSelection::Mll`] run. Any failed shard fails the
+/// candidate (the optimizer skips it), mirroring the unsharded contract.
+fn sharded_mll_sum(
+    shards: &[Dataset],
+    hp: HyperParams,
+    cfg: &MkaConfig,
+    caches: &[FactorCache],
+) -> Option<f64> {
+    let slots = eval_shards(shards.len(), |s| {
+        shard_log_marginal_likelihood(&shards[s], hp, cfg, &caches[s], s as u64).ok()
+    });
+    let mut sum = 0.0;
+    for v in slots {
+        sum += v?;
+    }
+    Some(sum)
+}
+
+/// Sum of per-shard MKA evidences **and gradients** at `hp` — a sum of
+/// independent log-likelihoods, so the gradient of the sum is the
+/// in-order sum of the per-shard gradients.
+fn sharded_mll_grad_sum(
+    shards: &[Dataset],
+    hp: &ArdHyperParams,
+    tied: bool,
+    cfg: &MkaConfig,
+    caches: &[FactorCache],
+) -> Option<(f64, Vec<f64>)> {
+    let slots: Vec<Option<MllGrad>> = eval_shards(shards.len(), |s| {
+        shard_mll_grad_mka(&shards[s], hp, tied, cfg, &caches[s], s as u64).ok()
+    });
+    let mut mll = 0.0;
+    let mut grad: Option<Vec<f64>> = None;
+    for g in slots {
+        let g = g?;
+        mll += g.mll;
+        let gv = g.grad_vec();
+        match &mut grad {
+            None => grad = Some(gv),
+            Some(acc) => {
+                for (a, b) in acc.iter_mut().zip(&gv) {
+                    *a += b;
+                }
+            }
+        }
+    }
+    Some((mll, grad?))
+}
+
+/// Sharded hyperparameter selection: partition `data` exactly as
+/// [`ShardedGp::fit`] will (same assign method, partition seed =
+/// `config.seed`), then learn ONE shared `(ℓ, σ²)` — or ARD vector —
+/// from the **sum of per-shard MKA evidences**. Each shard rides its own
+/// [`FactorCache`] under a shard-tagged scope, so a σ²-only move does
+/// zero factorizations on every shard at once; candidates are evaluated
+/// shard-parallel with a serial in-order reduction (bit-deterministic at
+/// any thread count).
+///
+/// `n_shards <= 1` delegates to [`select_hyperparams`] — the unsharded
+/// path, bit-identical surface. Sharded evidence is MKA-only (the
+/// sharded plane serves MKA shards); `GridCv` has no evidence to sum and
+/// is rejected here rather than silently falling back.
+pub fn select_hyperparams_sharded(
+    method: Method,
+    data: &Dataset,
+    selection: &ModelSelection,
+    k: usize,
+    seed: u64,
+    n_shards: usize,
+    assign: ClusterMethod,
+) -> Result<TrainReport> {
+    if n_shards <= 1 {
+        return select_hyperparams(method, data, selection, k, seed);
+    }
+    if method != Method::Mka {
+        return Err(Error::Config(format!(
+            "sharded training is MKA-only (got {}): the sharded plane serves MKA shards",
+            method.label()
+        )));
+    }
+    let cfg = mka_config_for(k, data.n(), seed);
+    let parts = shard_partition(&data.x, n_shards, assign, cfg.seed)?;
+    let shards: Vec<Dataset> = parts.iter().map(|m| data.subset(m)).collect();
+    let caches: Vec<FactorCache> =
+        (0..shards.len()).map(|_| FactorCache::with_default_capacity()).collect();
+    let t = Timer::start();
+    let mut report = match selection {
+        ModelSelection::GridCv { .. } => {
+            return Err(Error::Config(
+                "sharded selection needs an evidence surface; use selection=\"mll\" or \"mll-grad\""
+                    .into(),
+            ));
+        }
+        ModelSelection::Mll { budget } => {
+            let sbox = SearchBox::for_dim(data.dim());
+            let out = maximize_mll(
+                |hp| sharded_mll_sum(&shards, hp, &cfg, &caches),
+                data.dim(),
+                budget,
+                &sbox,
+            )?;
+            TrainReport {
+                method,
+                selection: "mll",
+                best: out.best,
+                lengthscales: None,
+                best_mll: Some(out.best_mll),
+                cv_score: None,
+                evals: out.evals,
+                factorizations: None,
+                shard_factorizations: None,
+                converged: out.converged,
+                trace: out.trace,
+                train_secs: 0.0,
+            }
+        }
+        ModelSelection::MllGrad { budget, ard } => {
+            let sbox = SearchBox::for_dim(data.dim());
+            let tied = !*ard;
+            let out = maximize_mll_lbfgs(
+                |hp| sharded_mll_grad_sum(&shards, hp, tied, &cfg, &caches),
+                data.dim(),
+                *ard,
+                budget,
+                &sbox,
+            )?;
+            TrainReport {
+                method,
+                selection: "mll-grad",
+                best: out.best.tied(),
+                lengthscales: if *ard { Some(out.best.lengthscales.clone()) } else { None },
+                best_mll: Some(out.best_mll),
+                cv_score: None,
+                evals: out.evals,
+                factorizations: None,
+                shard_factorizations: None,
+                converged: out.converged,
+                trace: out.trace,
+                train_secs: 0.0,
+            }
+        }
+    };
+    let per_shard: Vec<usize> = caches.iter().map(|c| c.misses() as usize).collect();
+    report.factorizations = Some(per_shard.iter().sum());
+    report.shard_factorizations = Some(per_shard);
+    report.train_secs = t.elapsed_secs();
+    Ok(report)
+}
+
+/// Sharded [`train_model`]: select shared hyperparameters from the
+/// summed per-shard evidence, then fit the serving [`ShardedGp`] at the
+/// chosen point (same partition — assign method and seed match the
+/// selection pass). `n_shards <= 1` delegates to [`train_model`].
+pub fn train_model_sharded(
+    method: Method,
+    data: &Dataset,
+    selection: &ModelSelection,
+    k: usize,
+    seed: u64,
+    n_shards: usize,
+    assign: ClusterMethod,
+) -> Result<(Box<dyn GpModel>, TrainReport)> {
+    if n_shards <= 1 {
+        return train_model(method, data, selection, k, seed);
+    }
+    let t = Timer::start();
+    let mut report =
+        select_hyperparams_sharded(method, data, selection, k, seed, n_shards, assign)?;
+    let cfg = mka_config_for(k, data.n(), seed);
+    let model: Box<dyn GpModel> = match &report.lengthscales {
+        Some(ells) => {
+            let hp = ArdHyperParams { lengthscales: ells.clone(), sigma2: report.best.sigma2 };
+            Box::new(ShardedGp::fit(data, &hp.kernel(), hp.sigma2, &cfg, n_shards, assign)?)
+        }
+        None => {
+            let kern = crate::kernels::RbfKernel::new(report.best.lengthscale);
+            Box::new(ShardedGp::fit(data, &kern, report.best.sigma2, &cfg, n_shards, assign)?)
+        }
+    };
+    report.train_secs = t.elapsed_secs();
+    Ok((model, report))
 }
 
 /// The run's σ²-independent factor-build count, or `None` for methods
@@ -452,6 +675,66 @@ mod tests {
         // Full never routes through the cache: None, not a false Some(0)
         let full = select_hyperparams(Method::Full, &d, &sel, 8, 3).unwrap();
         assert!(full.factorizations.is_none());
+    }
+
+    #[test]
+    fn sharded_selection_sums_per_shard_evidence() {
+        let d = gp_dataset(&SynthSpec::named("t", 120, 2), 9);
+        let sel =
+            ModelSelection::Mll { budget: OptimBudget { max_evals: 14, n_starts: 1, tol: 1e-4 } };
+        let report =
+            select_hyperparams_sharded(Method::Mka, &d, &sel, 8, 3, 3, ClusterMethod::KMeans)
+                .unwrap();
+        assert_eq!(report.selection, "mll");
+        assert!(report.best_mll.unwrap().is_finite());
+        let per_shard = report.shard_factorizations.as_ref().expect("per-shard counts");
+        assert!(!per_shard.is_empty());
+        assert_eq!(report.factorizations, Some(per_shard.iter().sum()));
+        // every shard paid at least one factor build
+        assert!(per_shard.iter().all(|&c| c >= 1), "{per_shard:?}");
+        let j = report.to_json();
+        let sf = j.get("shard_factorizations").unwrap().as_arr().unwrap();
+        assert_eq!(sf.len(), per_shard.len());
+        // 1-shard delegates to the unsharded path: no shard counts
+        let one = select_hyperparams_sharded(Method::Mka, &d, &sel, 8, 3, 1, ClusterMethod::KMeans)
+            .unwrap();
+        assert!(one.shard_factorizations.is_none());
+        // typed rejections: non-MKA method, CV selection
+        assert!(select_hyperparams_sharded(
+            Method::Sor,
+            &d,
+            &sel,
+            8,
+            3,
+            2,
+            ClusterMethod::KMeans
+        )
+        .is_err());
+        assert!(select_hyperparams_sharded(
+            Method::Mka,
+            &d,
+            &ModelSelection::GridCv { folds: 2 },
+            8,
+            3,
+            2,
+            ClusterMethod::KMeans
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn sharded_training_produces_sharded_serving_model() {
+        let d = gp_dataset(&SynthSpec::named("t", 130, 2), 10);
+        let (tr, te) = d.split(0.85, 3);
+        let sel = ModelSelection::Mll { budget: tiny_budget() };
+        let (model, report) =
+            train_model_sharded(Method::Mka, &tr, &sel, 8, 4, 2, ClusterMethod::KMeans).unwrap();
+        assert!(report.best_mll.unwrap().is_finite());
+        let info = model.info();
+        assert!(info.shards >= 2, "sharded fit must serve >1 shard, got {}", info.shards);
+        assert_eq!(info.shard_sizes.iter().sum::<usize>(), tr.n());
+        let pred = model.predict(&te.x);
+        assert!(smse(&te.y, &pred.mean) < 1.2);
     }
 
     #[test]

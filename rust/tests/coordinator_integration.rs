@@ -46,11 +46,15 @@ fn full_lifecycle_over_tcp() {
     assert_eq!(resp.get("ok"), Some(&Json::Bool(true)), "{resp:?}");
     assert!(resp.num_field("fit_secs").unwrap() >= 0.0);
 
-    // models listed
+    // models listed as metadata objects
     let resp = c.call(&Json::obj().with("op", Json::Str("models".into()))).unwrap();
-    let names: Vec<&str> =
-        resp.get("models").unwrap().as_arr().unwrap().iter().filter_map(|v| v.as_str()).collect();
-    assert!(names.contains(&"m-sync"));
+    let models = resp.get("models").unwrap().as_arr().unwrap();
+    let entry = models
+        .iter()
+        .find(|m| m.str_field("name") == Some("m-sync"))
+        .expect("m-sync listed");
+    assert_eq!(entry.usize_field("n"), Some(tr.n()));
+    assert_eq!(entry.usize_field("shards"), Some(1));
 
     // predict over TCP equals direct predict
     let x: Vec<Json> = (0..te.n()).map(|i| Json::from_f64_slice(te.x.row(i))).collect();

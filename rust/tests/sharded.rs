@@ -1,0 +1,190 @@
+//! Integration tests for the sharded GP serving plane: 1-shard
+//! bit-identity with the monolithic cascade, k-shard bit-determinism at
+//! any thread count, the router's `shards` lifecycle, and the typed
+//! errors guarding it.
+
+use std::sync::Arc;
+
+use mka_gp::cluster::ClusterMethod;
+use mka_gp::coordinator::{Router, ServiceConfig};
+use mka_gp::data::synth::{gp_dataset, SynthSpec};
+use mka_gp::experiments::methods::mka_config_for;
+use mka_gp::gp::mka_gp::MkaGp;
+use mka_gp::gp::sharded::ShardedGp;
+use mka_gp::gp::GpModel;
+use mka_gp::kernels::RbfKernel;
+use mka_gp::util::Json;
+
+fn fit_json(model: &str, method: &str, data: &mka_gp::data::Dataset, k: usize) -> Json {
+    let x: Vec<Json> = (0..data.n()).map(|i| Json::from_f64_slice(data.x.row(i))).collect();
+    Json::obj()
+        .with("op", Json::Str("fit".into()))
+        .with("model", Json::Str(model.into()))
+        .with("method", Json::Str(method.into()))
+        .with("x", Json::Arr(x))
+        .with("y", Json::from_f64_slice(&data.y))
+        .with(
+            "params",
+            Json::obj()
+                .with("lengthscale", Json::Num(0.9))
+                .with("sigma2", Json::Num(0.1))
+                .with("k", Json::Num(k as f64)),
+        )
+}
+
+/// The single-expert passthrough: a 1-shard fleet built through the
+/// serving-plane entry points is bit-identical to a plain `MkaGp` on the
+/// same config (the acceptance gate for the refactor being a refactor).
+#[test]
+fn one_shard_fleet_is_bit_identical_to_plain_mka() {
+    let data = gp_dataset(&SynthSpec::named("sh-one", 160, 3), 11);
+    let (tr, te) = data.split(0.9, 2);
+    let kern = RbfKernel::new(1.1);
+    let cfg = mka_config_for(16, tr.n(), 7);
+    let plain = MkaGp::fit(&tr, &kern, 0.1, &cfg).unwrap();
+    let fleet = ShardedGp::fit(&tr, &kern, 0.1, &cfg, 1, ClusterMethod::KMeans).unwrap();
+    assert_eq!(fleet.n_shards(), 1);
+    let pp = plain.predict(&te.x);
+    let pf = fleet.predict(&te.x);
+    for i in 0..te.n() {
+        assert_eq!(pp.mean[i].to_bits(), pf.mean[i].to_bits(), "mean[{i}]");
+        assert_eq!(pp.var[i].to_bits(), pf.var[i].to_bits(), "var[{i}]");
+    }
+}
+
+/// PR-2's determinism contract survives the fleet: fit + predict with
+/// k shards produces bit-identical posteriors at 1, 2 and 4 threads.
+#[test]
+fn sharded_fit_predict_bit_deterministic_across_threads() {
+    let data = gp_dataset(&SynthSpec::named("sh-det", 200, 2), 13);
+    let (tr, te) = data.split(0.9, 3);
+    let kern = RbfKernel::new(0.9);
+    let cfg = mka_config_for(12, tr.n(), 5);
+    let run = || {
+        let fleet =
+            ShardedGp::fit(&tr, &kern, 0.1, &cfg, 3, ClusterMethod::KMeans).unwrap();
+        let p = fleet.predict(&te.x);
+        let bits: Vec<u64> =
+            p.mean.iter().chain(p.var.iter()).map(|v| v.to_bits()).collect();
+        (fleet.n_shards(), fleet.shard_sizes(), bits)
+    };
+    mka_gp::par::set_threads(1);
+    let a = run();
+    mka_gp::par::set_threads(2);
+    let b = run();
+    mka_gp::par::set_threads(4);
+    let c = run();
+    assert!(a.0 >= 2, "partition should produce several shards");
+    assert_eq!(a, b, "2-thread run diverged from serial");
+    assert_eq!(a, c, "4-thread run diverged from serial");
+}
+
+/// Full `shards` lifecycle through the router: sharded fit, metadata in
+/// `models`, routed predict, O(shards) retune, shard metrics.
+#[test]
+fn router_shards_lifecycle() {
+    let cfg = ServiceConfig { port: 0, n_workers: 1, ..Default::default() };
+    let router = Arc::new(Router::new(cfg));
+    let data = gp_dataset(&SynthSpec::named("sh-life", 120, 2), 17);
+    let (tr, te) = data.split(0.9, 4);
+
+    let resp = router.handle(&fit_json("fleet", "mka", &tr, 12).with("shards", Json::Num(3.0)));
+    assert_eq!(resp.get("ok"), Some(&Json::Bool(true)), "{resp:?}");
+    assert!(resp.usize_field("shards").unwrap_or(0) >= 2, "{resp:?}");
+
+    let resp = router.handle(&Json::obj().with("op", Json::Str("models".into())));
+    let models = resp.get("models").unwrap().as_arr().unwrap();
+    let entry = models
+        .iter()
+        .find(|m| m.str_field("name") == Some("fleet"))
+        .expect("fleet listed");
+    assert!(entry.str_field("method").unwrap().starts_with("Sharded-MKA"));
+    let sizes = entry.get("shard_sizes").unwrap().f64_array().unwrap();
+    assert_eq!(sizes.iter().sum::<f64>() as usize, tr.n());
+
+    let x: Vec<Json> = (0..te.n()).map(|i| Json::from_f64_slice(te.x.row(i))).collect();
+    let resp = router.handle(
+        &Json::obj()
+            .with("op", Json::Str("predict".into()))
+            .with("model", Json::Str("fleet".into()))
+            .with("x", Json::Arr(x)),
+    );
+    assert_eq!(resp.get("ok"), Some(&Json::Bool(true)), "{resp:?}");
+    assert_eq!(resp.get("mean").unwrap().f64_array().unwrap().len(), te.n());
+
+    let resp = router.handle(
+        &Json::obj()
+            .with("op", Json::Str("retune".into()))
+            .with("model", Json::Str("fleet".into()))
+            .with("sigma2", Json::Num(0.3)),
+    );
+    assert_eq!(resp.get("ok"), Some(&Json::Bool(true)), "{resp:?}");
+
+    let resp = router.handle(&Json::obj().with("op", Json::Str("metrics".into())));
+    let shard = resp.get("shard").expect("shard metrics section");
+    assert!(shard.num_field("count").unwrap() >= 2.0);
+    assert!(shard.num_field("route_hits").unwrap() >= 1.0);
+}
+
+/// The typed errors guarding the shards field: zero, more shards than
+/// points, and shards on a non-MKA method are all refused up front.
+#[test]
+fn shard_errors_are_typed() {
+    let cfg = ServiceConfig { port: 0, n_workers: 1, ..Default::default() };
+    let router = Arc::new(Router::new(cfg));
+    let data = gp_dataset(&SynthSpec::named("sh-err", 60, 2), 19);
+
+    let resp = router.handle(&fit_json("z", "mka", &data, 8).with("shards", Json::Num(0.0)));
+    assert_eq!(resp.get("ok"), Some(&Json::Bool(false)));
+    assert!(resp.str_field("error").unwrap().contains("shards"), "{resp:?}");
+
+    let resp = router.handle(&fit_json("z", "sor", &data, 8).with("shards", Json::Num(2.0)));
+    assert_eq!(resp.get("ok"), Some(&Json::Bool(false)));
+    assert!(resp.str_field("error").unwrap().contains("mka"), "{resp:?}");
+
+    let resp = router.handle(&fit_json("z", "mka", &data, 8).with("shards", Json::Num(61.0)));
+    assert_eq!(resp.get("ok"), Some(&Json::Bool(false)), "{resp:?}");
+
+    // library layer: the partition itself validates the same bounds
+    assert!(mka_gp::gp::sharded::shard_partition(
+        &data.x,
+        0,
+        ClusterMethod::KMeans,
+        1
+    )
+    .is_err());
+    assert!(mka_gp::gp::sharded::shard_partition(
+        &data.x,
+        data.n() + 1,
+        ClusterMethod::KMeans,
+        1
+    )
+    .is_err());
+}
+
+/// Sharded `train` sums per-shard evidences and reports per-shard
+/// factorization counts; the published model is the sharded fleet.
+#[test]
+fn sharded_train_reports_per_shard_factorizations() {
+    use mka_gp::experiments::methods::Method;
+    use mka_gp::train::{ModelSelection, OptimBudget};
+
+    let data = gp_dataset(&SynthSpec::named("sh-train", 140, 2), 23);
+    let sel = ModelSelection::Mll {
+        budget: OptimBudget { max_evals: 10, n_starts: 1, tol: 1e-4 },
+    };
+    let (model, report) = mka_gp::train::train_model_sharded(
+        Method::Mka,
+        &data,
+        &sel,
+        10,
+        7,
+        2,
+        ClusterMethod::KMeans,
+    )
+    .unwrap();
+    let per_shard = report.shard_factorizations.expect("per-shard counts");
+    assert!(!per_shard.is_empty());
+    assert_eq!(per_shard.iter().sum::<usize>(), report.factorizations.unwrap());
+    assert!(model.info().shards >= 2);
+}
