@@ -163,14 +163,17 @@ fn main() {
 ///
 ///     cargo bench --bench complexity -- --json \
 ///         [--sizes 1024,2048,4096] [--threads 1,2,4] [--rhs 32] \
-///         [--test-points 64] [--out ../BENCH_perf.json]
+///         [--test-points 64] [--gemm-n 512] [--out ../BENCH_perf.json]
 ///
 /// For every (n, threads) cell it times factorize, a blocked solve
 /// (`solve_mat`, `rhs` columns) and an end-to-end `MkaGp::predict`
 /// (joint gram + factorize + blocked solve), asserts that every thread
 /// count reproduces the single-thread solve bit-for-bit, and writes
-/// speedups vs the serial column to `--out`. CI runs a small-n smoke
-/// invocation of exactly this path.
+/// speedups vs the serial column to `--out`. Predict latency is reported
+/// as p50/p99 over repeated warm-arena runs; a `kernel` section records
+/// single-thread gemm GFLOP/s vs the retained pre-rewrite kernel, and an
+/// `arena` section snapshots the scratch-pool counters. CI runs a
+/// small-n smoke invocation of exactly this path.
 fn run_json_bench(args: &Args) {
     let sizes = args.get_usize_list("sizes", &[1024, 2048, 4096]);
     let threads_list = args.get_usize_list("threads", &[1, 2, 4]);
@@ -179,6 +182,7 @@ fn run_json_bench(args: &Args) {
     let d_core = args.get_usize("d-core", 64);
     let out_path = args.get_or("out", "../BENCH_perf.json").to_string();
 
+    let kernel_section = bench_dense_kernel(args);
     let mut results: Vec<Json> = Vec::new();
     let mut accept = Json::obj();
     for &n in &sizes {
@@ -218,12 +222,25 @@ fn run_json_bench(args: &Args) {
             }
 
             let model = MkaGp::fit(&tr, &kern, 0.1, &cfg).expect("fit");
-            let timer = Timer::start();
-            let pred = model.predict(&te_x);
-            let predict_s = timer.elapsed_secs();
-            assert_eq!(pred.mean.len(), p);
+            // Serving-latency distribution, not just one shot: repeated
+            // predicts give p50/p99 over warm arenas (the steady state a
+            // serving plane actually runs in).
+            let reps = if n <= 512 { 12 } else { 5 };
+            let mut lat: Vec<f64> = Vec::with_capacity(reps);
+            let mut predict_s = f64::INFINITY;
+            for _ in 0..reps {
+                let timer = Timer::start();
+                let pred = model.predict(&te_x);
+                let dt = timer.elapsed_secs();
+                assert_eq!(pred.mean.len(), p);
+                lat.push(dt);
+                predict_s = predict_s.min(dt);
+            }
+            lat.sort_by(|a, b| a.total_cmp(b));
+            let predict_p50 = mka_gp::la::stats::quantile_sorted(&lat, 0.5);
+            let predict_p99 = mka_gp::la::stats::quantile_sorted(&lat, 0.99);
 
-            let (f0, s0, p0) = *base.get_or_insert((fact_s, solve_s, predict_s));
+            let (f0, s0, p0) = *base.get_or_insert((fact_s, solve_s, predict_p50));
             let row = Json::obj()
                 .with("n", Json::Num(n as f64))
                 .with("threads", Json::Num(t as f64))
@@ -231,29 +248,32 @@ fn run_json_bench(args: &Args) {
                 .with("factorize_s", Json::Num(fact_s))
                 .with("solve_mat_s", Json::Num(solve_s))
                 .with("predict_s", Json::Num(predict_s))
+                .with("predict_p50_s", Json::Num(predict_p50))
+                .with("predict_p99_s", Json::Num(predict_p99))
                 .with("factorize_speedup", Json::Num(f0 / fact_s.max(1e-12)))
                 .with("solve_speedup", Json::Num(s0 / solve_s.max(1e-12)))
-                .with("predict_speedup", Json::Num(p0 / predict_s.max(1e-12)))
+                .with("predict_speedup", Json::Num(p0 / predict_p50.max(1e-12)))
                 .with("bit_identical", Json::Bool(true));
             println!(
-                "n={n} t={t}: factorize {} ({:.2}x) solve {} ({:.2}x) predict {} ({:.2}x)",
+                "n={n} t={t}: factorize {} ({:.2}x) solve {} ({:.2}x) predict p50 {} p99 {} ({:.2}x)",
                 fmt_secs(fact_s),
                 f0 / fact_s.max(1e-12),
                 fmt_secs(solve_s),
                 s0 / solve_s.max(1e-12),
-                fmt_secs(predict_s),
-                p0 / predict_s.max(1e-12)
+                fmt_secs(predict_p50),
+                fmt_secs(predict_p99),
+                p0 / predict_p50.max(1e-12)
             );
             if n == *sizes.last().unwrap() && t == *threads_list.last().unwrap() {
                 accept = Json::obj()
                     .with("n", Json::Num(n as f64))
                     .with("threads", Json::Num(t as f64))
                     .with("factorize_speedup", Json::Num(f0 / fact_s.max(1e-12)))
-                    .with("predict_speedup", Json::Num(p0 / predict_s.max(1e-12)))
+                    .with("predict_speedup", Json::Num(p0 / predict_p50.max(1e-12)))
                     .with(
                         "ge_2x",
                         Json::Bool(
-                            f0 / fact_s.max(1e-12) >= 2.0 || p0 / predict_s.max(1e-12) >= 2.0,
+                            f0 / fact_s.max(1e-12) >= 2.0 || p0 / predict_p50.max(1e-12) >= 2.0,
                         ),
                     );
             }
@@ -270,8 +290,52 @@ fn run_json_bench(args: &Args) {
         .with("rhs_cols", Json::Num(rhs as f64))
         .with("test_points", Json::Num(test_points as f64))
         .with("pool_jobs", Json::Num(mka_gp::par::jobs_executed() as f64))
+        .with("simd_level", Json::Str(format!("{:?}", mka_gp::la::simd_level())))
+        .with(
+            "arena",
+            Json::obj()
+                .with("checkouts", Json::Num(mka_gp::par::arena::checkouts() as f64))
+                .with("grows", Json::Num(mka_gp::par::arena::grows() as f64))
+                .with("grow_bytes", Json::Num(mka_gp::par::arena::grow_bytes() as f64)),
+        )
+        .with("kernel", kernel_section)
         .with("results", Json::Arr(results))
         .with("acceptance", accept);
     std::fs::write(&out_path, doc.dump_pretty()).expect("write bench json");
     println!("wrote {out_path}");
+}
+
+/// Single-thread GFLOP/s of the packed/register-blocked gemm against the
+/// retained pre-rewrite blocked-axpy kernel (`gemm_baseline`) on an
+/// n³ problem (default 512³, `--gemm-n` to override). The ratio is the
+/// PR's headline number; `ge_2x` records whether the ≥2× target held on
+/// this machine (reported, not asserted — CI runners vary).
+fn bench_dense_kernel(args: &Args) -> Json {
+    use mka_gp::la::blas::{gemm_baseline, gemm_mt};
+    let n = args.get_usize("gemm-n", 512);
+    let mut rng = Rng::new(23);
+    let a = Mat::from_fn(n, n, |_, _| rng.normal());
+    let b = Mat::from_fn(n, n, |_, _| rng.normal());
+    let flops = 2.0 * (n as f64).powi(3);
+
+    let new = bench_budget("gemm-new", 1.0, 50, || {
+        std::hint::black_box(gemm_mt(&a, &b, 1));
+    });
+    let old = bench_budget("gemm-baseline", 1.0, 50, || {
+        std::hint::black_box(gemm_baseline(&a, &b));
+    });
+    let gf_new = flops / new.min_s.max(1e-12) / 1e9;
+    let gf_old = flops / old.min_s.max(1e-12) / 1e9;
+    let speedup = gf_new / gf_old.max(1e-12);
+    println!(
+        "dense kernel {n}³ ({:?}): {gf_new:.2} GFLOP/s vs baseline {gf_old:.2} ({speedup:.2}x)",
+        mka_gp::la::simd_level()
+    );
+    Json::obj()
+        .with("gemm_n", Json::Num(n as f64))
+        .with("simd_level", Json::Str(format!("{:?}", mka_gp::la::simd_level())))
+        .with("gemm_gflops", Json::Num(gf_new))
+        .with("baseline_gflops", Json::Num(gf_old))
+        .with("speedup_vs_prepr_scalar", Json::Num(speedup))
+        .with("ge_2x", Json::Bool(speedup >= 2.0))
 }

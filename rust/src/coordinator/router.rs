@@ -175,7 +175,20 @@ impl Router {
                         )
                         .with("pool_threads", Json::Num(crate::par::threads() as f64))
                         .with("pool_workers", Json::Num(crate::par::pool_workers() as f64))
-                        .with("pool_jobs", Json::Num(crate::par::jobs_executed() as f64)),
+                        .with("pool_jobs", Json::Num(crate::par::jobs_executed() as f64))
+                        .with(
+                            "arena_checkouts",
+                            Json::Num(crate::par::arena::checkouts() as f64),
+                        )
+                        .with("arena_grows", Json::Num(crate::par::arena::grows() as f64))
+                        .with(
+                            "arena_grow_bytes",
+                            Json::Num(crate::par::arena::grow_bytes() as f64),
+                        )
+                        .with(
+                            "simd_level",
+                            Json::Str(format!("{:?}", crate::la::simd_level())),
+                        ),
                 );
                 // Shard topology across the registry: fleet count, total
                 // shard count, per-shard sizes, and the process-wide
@@ -939,5 +952,17 @@ mod tests {
         assert!(compute.num_field("pool_threads").unwrap_or(0.0) >= 1.0);
         assert!(compute.num_field("pool_jobs").is_some());
         assert!(compute.num_field("pool_workers").is_some());
+        // Arena protocol observables: the fit+predict above must have
+        // checked scratch out of the per-worker pools at least once, and
+        // the dispatch level is surfaced for perf triage.
+        assert!(compute.num_field("arena_checkouts").unwrap_or(0.0) >= 1.0);
+        assert!(compute.num_field("arena_grows").is_some());
+        assert!(compute.num_field("arena_grow_bytes").is_some());
+        match compute.get("simd_level") {
+            Some(Json::Str(s)) => {
+                assert!(["Scalar", "Avx2", "Avx512"].contains(&s.as_str()), "{s}")
+            }
+            other => panic!("simd_level missing or not a string: {other:?}"),
+        }
     }
 }

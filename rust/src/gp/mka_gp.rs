@@ -38,6 +38,7 @@ use crate::la::blas::dot;
 use crate::la::dense::Mat;
 use crate::la::lu::Lu;
 use crate::mka::{factorize, MkaConfig, MkaFactor};
+use crate::par::arena;
 
 /// MKA-based GP regressor (transductive: the joint factorization is built
 /// per prediction batch over the train/test kernel; the train-only factor
@@ -147,8 +148,9 @@ impl MkaGp {
     pub fn factorize_joint(&self, x_test: &Mat) -> Result<(MkaFactor, Mat)> {
         let n = self.train.n();
         let p = x_test.rows;
-        // Assemble the joint point set and kernel.
-        let mut xj = Mat::zeros(n + p, self.train.x.cols);
+        // Assemble the joint point set and kernel. The joint coordinates
+        // come from the worker arena: the two set_blocks cover every row.
+        let mut xj = arena::take_mat(n + p, self.train.x.cols);
         xj.set_block(0, 0, &self.train.x);
         xj.set_block(n, 0, x_test);
         let kj = match &self.gram {
@@ -166,8 +168,14 @@ impl MkaGp {
         // noise-free matrix once; see `mka::factor` for the SPCA caveat.
         let f = factorize(&kj, Some(&xj), &self.config)?.shifted(self.sigma2);
         // K_* block (n×p) for the mean formula (off-diagonal — the shift
-        // never touches it).
-        let kstar = kj.block(0, n, n, n + p);
+        // never touches it). Copied into an arena buffer so the joint gram
+        // and coordinates can be donated back immediately.
+        let mut kstar = arena::take_mat(n, p);
+        for i in 0..n {
+            kstar.row_mut(i).copy_from_slice(&kj.row(i)[n..n + p]);
+        }
+        arena::give_mat(kj);
+        arena::give_mat(xj);
         Ok((f, kstar))
     }
 
@@ -221,7 +229,7 @@ impl GpModel for MkaGp {
         // unit vectors for the D block — ride ONE blocked cascade
         // (column 0 is (y; 0), column 1+j is e_{n+j}), instead of p+1
         // serial solves each re-walking every rotation.
-        let mut rhs = Mat::zeros(n + p, p + 1);
+        let mut rhs = arena::take_mat_zeroed(n + p, p + 1);
         for (i, &yi) in self.train.y.iter().enumerate() {
             rhs.set(i, 0, yi);
         }
@@ -234,10 +242,11 @@ impl GpModel for MkaGp {
                 return Prediction { mean: vec![0.0; p], var: vec![1.0 + self.sigma2; p] };
             }
         };
+        arena::give_mat(rhs);
         let cy: Vec<f64> = (0..p).map(|i| sol.at(n + i, 0)).collect();
 
         // D block of 𝒦̃⁻¹: test rows of the unit-vector solutions.
-        let mut d_block = Mat::zeros(p, p);
+        let mut d_block = arena::take_mat_zeroed(p, p);
         for j in 0..p {
             for i in 0..p {
                 d_block.set(i, j, sol.at(n + i, j + 1));
@@ -255,6 +264,9 @@ impl GpModel for MkaGp {
                 return Prediction { mean, var: vec![1.0 + self.sigma2; p] };
             }
         };
+        arena::give_mat(sol);
+        arena::give_mat(d_block);
+        arena::give_mat(kstar);
 
         // Mean: f̂ = −D⁻¹ (C y).
         let w = lu.solve(&cy);

@@ -113,7 +113,9 @@ impl GramBuilder {
     fn build_sym_tiled(&self, eng: &dyn TileEngine, x: &Mat, l: f64, sf: f64) -> Mat {
         let t = eng.tile();
         let n = x.rows;
-        let mut k = Mat::zeros(n, n);
+        // Arena-backed output: upper tiles plus their mirrors cover every
+        // entry, and the diagonal is rewritten exactly below.
+        let mut k = crate::par::arena::take_mat(n, n);
         // Enumerate upper-triangle tile origins.
         let mut tiles: Vec<(usize, usize)> = Vec::new();
         let mut r0 = 0;
@@ -143,6 +145,7 @@ impl GramBuilder {
                     }
                 }
             }
+            crate::par::arena::give_mat(tile);
         };
         let kptr = crate::par::SendPtr::new(k.data.as_mut_ptr());
         let threads = if n * n < TILE_PAR_MIN_ENTRIES { 1 } else { self.effective_threads() };
@@ -160,7 +163,8 @@ impl GramBuilder {
 
     fn build_tiled(&self, eng: &dyn TileEngine, x: &Mat, y: &Mat, l: f64, sf: f64) -> Mat {
         let t = eng.tile();
-        let mut k = Mat::zeros(x.rows, y.rows);
+        // Arena-backed output: the strips below overwrite every row band.
+        let mut k = crate::par::arena::take_mat(x.rows, y.rows);
         let n = y.rows;
         // Row strips of tiles write disjoint row bands of K.
         let strips: Vec<usize> = (0..x.rows).step_by(t).collect();
@@ -182,6 +186,7 @@ impl GramBuilder {
                         );
                     }
                 }
+                crate::par::arena::give_mat(tile);
                 c0 = c1;
             }
         };
@@ -201,13 +206,29 @@ impl GramBuilder {
 pub fn rbf_tile_native(xb: &Mat, yb: &Mat, lengthscale: f64, signal_var: f64) -> Mat {
     let inv = 1.0 / (2.0 * lengthscale * lengthscale);
     // ‖x‖² + ‖y‖² − 2 x·y, then exp — mirrors the kernel's MXU+VPU split.
-    let xs: Vec<f64> = (0..xb.rows).map(|i| crate::la::blas::dot(xb.row(i), xb.row(i))).collect();
-    let ys: Vec<f64> = (0..yb.rows).map(|j| crate::la::blas::dot(yb.row(j), yb.row(j))).collect();
+    // All temporaries (and the output) cycle through the worker arena.
+    use crate::par::arena;
+    let mut xs = arena::take_vec(xb.rows);
+    for (i, s) in xs.iter_mut().enumerate() {
+        *s = crate::la::blas::dot(xb.row(i), xb.row(i));
+    }
+    let mut ys = arena::take_vec(yb.rows);
+    for (j, s) in ys.iter_mut().enumerate() {
+        *s = crate::la::blas::dot(yb.row(j), yb.row(j));
+    }
     let xy = crate::la::blas::gemm_nt(xb, yb);
-    Mat::from_fn(xb.rows, yb.rows, |i, j| {
-        let d2 = (xs[i] + ys[j] - 2.0 * xy.at(i, j)).max(0.0);
-        signal_var * (-d2 * inv).exp()
-    })
+    let mut out = arena::take_mat(xb.rows, yb.rows);
+    for i in 0..xb.rows {
+        let (xyr, or) = (xy.row(i), out.row_mut(i));
+        for j in 0..yb.rows {
+            let d2 = (xs[i] + ys[j] - 2.0 * xyr[j]).max(0.0);
+            or[j] = signal_var * (-d2 * inv).exp();
+        }
+    }
+    arena::give_mat(xy);
+    arena::give_vec(xs);
+    arena::give_vec(ys);
+    out
 }
 
 #[cfg(test)]

@@ -65,7 +65,8 @@ const GRAM_PAR_MIN_ENTRIES: usize = 1 << 14;
 pub fn gram_with<K: Kernel + ?Sized>(kernel: &K, x: &Mat, y: &Mat, threads: usize) -> Mat {
     assert_eq!(x.cols, y.cols, "dimension mismatch");
     let (n, m) = (x.rows, y.rows);
-    let mut k = Mat::zeros(n, m);
+    // Arena-backed output: every entry is overwritten by the fill below.
+    let mut k = crate::par::arena::take_mat(n, m);
     let fill = |kband: &mut [f64], i0: usize, i1: usize| {
         for i in i0..i1 {
             let xr = x.row(i);
@@ -96,7 +97,9 @@ pub fn gram_with<K: Kernel + ?Sized>(kernel: &K, x: &Mat, y: &Mat, threads: usiz
 /// same bits.
 pub fn gram_sym_with<K: Kernel + ?Sized>(kernel: &K, x: &Mat, threads: usize) -> Mat {
     let n = x.rows;
-    let mut k = Mat::zeros(n, n);
+    // Arena-backed output: the upper fill plus the mirror below together
+    // overwrite every entry.
+    let mut k = crate::par::arena::take_mat(n, n);
     let fill_upper = |kband: &mut [f64], i0: usize, i1: usize| {
         for i in i0..i1 {
             let xr = x.row(i);

@@ -1,25 +1,131 @@
 //! BLAS-style compute kernels (no external BLAS in the offline build).
 //!
-//! `gemm` is a cache-blocked, register-tiled triple loop; `syrk` exploits
-//! symmetry (this is the AᵀA product that dominates MMF compression —
-//! Proposition 4's `m³` term — so it is one of the L3 hot paths; the same
-//! product is also available through the AOT'd XLA artifact, see
-//! `runtime::engine`).
+//! The O(n³) kernels (`gemm*`, `syrk_*`) are register-blocked, panel-
+//! packed microkernels with runtime SIMD dispatch:
 //!
-//! Every O(n³) kernel here is **row-band parallel** over the shared pool
-//! (`crate::par`): the output rows are split into contiguous bands and
-//! each band runs the *same* loop nest the serial code runs, so for every
-//! output element the floating-point accumulation sequence is identical
-//! at any thread count — results are bit-for-bit deterministic. Small
-//! products (below [`PAR_MIN_FLOPS`]) stay serial to avoid dispatch
-//! overhead. The `*_mt` variants take an explicit thread-count cap; the
-//! classic names use the process-wide default (`par::threads()`).
+//! * **Packing** — the right-hand operand is packed once per call into a
+//!   panel-major scratch buffer (arena-recycled, shared read-only across
+//!   row bands); the left-hand operand is packed per 4-row block with
+//!   alpha folded in, so the inner loop streams two contiguous buffers.
+//! * **Register blocking** — each packed B panel is reused across
+//!   `MR` = 4 rows of A; a full tile keeps 8 independent accumulator
+//!   chains live (4×8 f64 on AVX2, 4×16 on AVX-512), enough to saturate
+//!   two FMA ports at 4-cycle latency.
+//! * **Dispatch** — [`simd_level`] picks Scalar / AVX2 / AVX-512 once at
+//!   startup (`core::arch::x86_64` intrinsics behind
+//!   `is_x86_64_feature_detected!`; `MKA_FORCE_SCALAR=1` pins the
+//!   portable fallback). Non-x86 builds always take the portable path.
+//!
+//! **Determinism across dispatch paths**: the SIMD kernels vectorize
+//! over the **j** index — each vector lane owns a distinct output
+//! element — so every output element's accumulation over k is one serial
+//! fused chain `s ← fma(α·a_ik, b_kj, s)`, identical in length and order
+//! at every lane width, row-block height, and thread count. The portable
+//! fallback runs the same chain through `f64::mul_add`, which is
+//! correctly rounded with or without hardware FMA. Results are therefore
+//! **bit-for-bit identical** across Scalar/AVX2/AVX-512 and across
+//! thread counts (row-band sharding, as before) — pinned by
+//! `tests/blas_kernels.rs` and `tests/par_determinism.rs`.
+//!
+//! Zero handling: the old kernels skipped individual zero scalars of the
+//! left operand — a per-iteration branch that mispredicts on dense data.
+//! The microkernels skip only **whole left panels** whose packed values
+//! are all +0.0 (detected bitwise during packing, so −0.0 never skips);
+//! dense panels run branch-free.
+//!
+//! Small products (below [`PAR_MIN_FLOPS`]) stay serial; the `*_mt`
+//! variants take an explicit thread cap, the classic names use
+//! `par::threads()`. `*_level` variants pin the dispatch level for
+//! tests.
+
+use std::sync::OnceLock;
 
 use super::dense::Mat;
-use crate::par::{self, SendPtr};
+use crate::par::{self, arena, SendPtr};
 
 /// Below this many fused multiply-adds a parallel split is all overhead.
 pub const PAR_MIN_FLOPS: usize = 1 << 21;
+
+/// Register-block height: rows of C computed per packed left panel.
+const MR: usize = 4;
+
+/// Widest panel any dispatch level uses (AVX-512: 2 × 8 lanes).
+const MAX_W: usize = 16;
+
+/// Instruction-set tier for the dense microkernels. Every tier computes
+/// bit-identical results (see module docs); the tier is purely a
+/// wall-clock knob, exactly like the thread count.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum SimdLevel {
+    /// Portable `f64::mul_add` chains (any CPU; forced by
+    /// `MKA_FORCE_SCALAR=1`).
+    Scalar,
+    /// 256-bit lanes via AVX2 + FMA.
+    Avx2,
+    /// 512-bit lanes via AVX-512F.
+    Avx512,
+}
+
+/// Packed-panel width (columns per panel) for a dispatch level.
+fn panel_width(level: SimdLevel) -> usize {
+    match level {
+        SimdLevel::Avx512 => 16,
+        _ => 8,
+    }
+}
+
+/// Every level this CPU can run, narrowest first ([`SimdLevel::Scalar`]
+/// is always present).
+pub fn available_levels() -> Vec<SimdLevel> {
+    let mut v = vec![SimdLevel::Scalar];
+    #[cfg(target_arch = "x86_64")]
+    {
+        if std::arch::is_x86_64_feature_detected!("avx2")
+            && std::arch::is_x86_64_feature_detected!("fma")
+        {
+            v.push(SimdLevel::Avx2);
+        }
+        if std::arch::is_x86_64_feature_detected!("avx512f") {
+            v.push(SimdLevel::Avx512);
+        }
+    }
+    v
+}
+
+/// Whether `level` is runnable on this CPU.
+pub fn level_available(level: SimdLevel) -> bool {
+    available_levels().contains(&level)
+}
+
+/// The process-wide dispatch level: the widest supported tier, unless
+/// `MKA_FORCE_SCALAR` (any value but `0`/empty) pins the portable
+/// fallback. Read once and cached.
+pub fn simd_level() -> SimdLevel {
+    static LEVEL: OnceLock<SimdLevel> = OnceLock::new();
+    *LEVEL.get_or_init(|| {
+        let forced = std::env::var("MKA_FORCE_SCALAR")
+            .map(|v| !v.is_empty() && v != "0")
+            .unwrap_or(false);
+        if forced {
+            SimdLevel::Scalar
+        } else {
+            available_levels().last().copied().unwrap_or(SimdLevel::Scalar)
+        }
+    })
+}
+
+fn check_level(level: SimdLevel) {
+    assert!(level_available(level), "SIMD level {level:?} not available on this CPU");
+}
+
+/// Hardware FMA available? The portable tile body is additionally
+/// compiled under `target_feature(fma)` when so, turning `mul_add` into
+/// one instruction instead of a libm call — same bits either way.
+#[cfg(target_arch = "x86_64")]
+fn hw_fma() -> bool {
+    static FMA: OnceLock<bool> = OnceLock::new();
+    *FMA.get_or_init(|| std::arch::is_x86_64_feature_detected!("fma"))
+}
 
 /// Shard count for a banded kernel: serial unless the work and the row
 /// count justify splitting.
@@ -110,7 +216,391 @@ pub fn norm2(x: &[f64]) -> f64 {
     dot(x, x).sqrt()
 }
 
-/// C ← A B, cache-blocked i-k-j loop order (B rows stream through cache).
+// ---------------------------------------------------------------------
+// Packing
+// ---------------------------------------------------------------------
+
+/// How the left operand feeds the microkernel.
+enum LeftOp<'a> {
+    /// Output row `i` streams row `i` of `a` (gemm / gemm_nt / syrk_aat);
+    /// `alpha` is folded in at pack time (one rounding, before the fused
+    /// chain — the reference loops in tests mirror this exactly).
+    Rows { alpha: f64, a: &'a Mat },
+    /// Output row `p` streams column `p` of `a` (gemm_tn / syrk_ata).
+    Cols { a: &'a Mat },
+}
+
+impl LeftOp<'_> {
+    fn depth(&self) -> usize {
+        match *self {
+            LeftOp::Rows { a, .. } => a.cols,
+            LeftOp::Cols { a } => a.rows,
+        }
+    }
+}
+
+/// Pack the left panel for output rows [i0, i0+h): `lp[t*h + r]` holds
+/// the (alpha-folded) left value for output row `i0+r` at depth `t`.
+/// Returns true when every packed value is +0.0 — the caller then skips
+/// the whole panel. (This replaces the old per-scalar zero test, a
+/// mispredicted branch per inner iteration on dense data; −0.0 counts
+/// as nonzero so a skip can never flip an output sign bit.)
+fn pack_left(left: &LeftOp<'_>, i0: usize, h: usize, lp: &mut [f64]) -> bool {
+    let mut bits = 0u64;
+    match *left {
+        LeftOp::Rows { alpha, a } => {
+            let depth = a.cols;
+            for r in 0..h {
+                let row = a.row(i0 + r);
+                for t in 0..depth {
+                    let v = alpha * row[t];
+                    bits |= v.to_bits();
+                    lp[t * h + r] = v;
+                }
+            }
+        }
+        LeftOp::Cols { a } => {
+            for t in 0..a.rows {
+                let src = &a.row(t)[i0..i0 + h];
+                let dst = &mut lp[t * h..t * h + h];
+                for (d, &s) in dst.iter_mut().zip(src) {
+                    bits |= s.to_bits();
+                    *d = s;
+                }
+            }
+        }
+    }
+    bits == 0
+}
+
+/// Pack all of B panel-major: the panel starting at column `j0` (width
+/// `w = min(W, n−j0)`) occupies `rp[j0*depth ..][.. depth*w]`, laid out
+/// `panel[t*w + c] = b[t][j0+c]`. Packed once per call on the submitting
+/// thread and shared read-only across row bands — O(K·n) against the
+/// O(m·K·n) compute it feeds.
+fn pack_right(b: &Mat, w_full: usize, rp: &mut [f64]) {
+    let (depth, n) = (b.rows, b.cols);
+    for t in 0..depth {
+        let row = b.row(t);
+        let mut j0 = 0;
+        while j0 < n {
+            let w = (n - j0).min(w_full);
+            let base = j0 * depth + t * w;
+            rp[base..base + w].copy_from_slice(&row[j0..j0 + w]);
+            j0 += w;
+        }
+    }
+}
+
+/// Pack Bᵀ panel-major: `panel[t*w + c] = b[j0+c][t]` — the gemm_nt /
+/// syrk_aat right-hand side, transposed once at pack time so the
+/// microkernel streams it contiguously.
+fn pack_right_t(b: &Mat, w_full: usize, rp: &mut [f64]) {
+    let (n, depth) = (b.rows, b.cols);
+    let mut j0 = 0;
+    while j0 < n {
+        let w = (n - j0).min(w_full);
+        let base = j0 * depth;
+        for c in 0..w {
+            let row = b.row(j0 + c);
+            for t in 0..depth {
+                rp[base + t * w + c] = row[t];
+            }
+        }
+        j0 += w;
+    }
+}
+
+/// A packed right-hand side plus the dispatch parameters every band
+/// shares.
+struct Panels<'a> {
+    level: SimdLevel,
+    depth: usize,
+    n: usize,
+    rp: &'a [f64],
+}
+
+// ---------------------------------------------------------------------
+// Microkernels
+// ---------------------------------------------------------------------
+
+/// Portable tile body: for each of the `h ≤ MR` rows and `w ≤ MAX_W`
+/// columns, run one serial fused chain over the full depth, then add the
+/// chain total into C. This is the *definition* of the arithmetic every
+/// other path must reproduce bitwise. `clip = Some((pb, j0))` restricts
+/// stores to the upper triangle q ≥ p (syrk straddle tiles) — chains are
+/// unchanged, only stores are masked.
+#[inline(always)]
+fn mk_tile_body(
+    depth: usize,
+    dims: (usize, usize),
+    lp: &[f64],
+    rp: &[f64],
+    ctile: &mut [f64],
+    stride: usize,
+    clip: Option<(usize, usize)>,
+) {
+    let (h, w) = dims;
+    debug_assert!(h <= MR && w <= MAX_W);
+    let mut acc = [[0.0f64; MAX_W]; MR];
+    for t in 0..depth {
+        let lrow = &lp[t * h..t * h + h];
+        let rrow = &rp[t * w..t * w + w];
+        for (accr, &l) in acc.iter_mut().zip(lrow) {
+            for (av, &rv) in accr[..w].iter_mut().zip(rrow) {
+                *av = l.mul_add(rv, *av);
+            }
+        }
+    }
+    for r in 0..h {
+        let lo = match clip {
+            Some((pb, j0)) => (pb + r).saturating_sub(j0).min(w),
+            None => 0,
+        };
+        let crow = &mut ctile[r * stride..r * stride + w];
+        for c in lo..w {
+            crow[c] += acc[r][c];
+        }
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+mod x86 {
+    use super::mk_tile_body;
+    use std::arch::x86_64::*;
+
+    /// The portable body compiled under `target_feature(fma)`, so
+    /// `mul_add` lowers to vfmadd instead of a libm call. Bit-identical
+    /// by construction: `f64::mul_add` is correctly rounded with or
+    /// without hardware support.
+    ///
+    /// # Safety
+    /// CPU must support FMA (checked by the dispatcher).
+    #[target_feature(enable = "fma")]
+    pub unsafe fn mk_tile_fma(
+        depth: usize,
+        dims: (usize, usize),
+        lp: &[f64],
+        rp: &[f64],
+        ctile: &mut [f64],
+        stride: usize,
+        clip: Option<(usize, usize)>,
+    ) {
+        mk_tile_body(depth, dims, lp, rp, ctile, stride, clip);
+    }
+
+    #[target_feature(enable = "avx2")]
+    unsafe fn store_acc256(row: *mut f64, lo: __m256d, hi: __m256d) {
+        _mm256_storeu_pd(row, _mm256_add_pd(_mm256_loadu_pd(row), lo));
+        _mm256_storeu_pd(row.add(4), _mm256_add_pd(_mm256_loadu_pd(row.add(4)), hi));
+    }
+
+    /// Full 4×8 AVX2 tile: 8 ymm accumulators = 4 rows × 8 j-lanes, each
+    /// lane one output element's serial fma chain over the full depth.
+    ///
+    /// # Safety
+    /// CPU must support AVX2+FMA; `lp`/`rp` hold `depth*4`/`depth*8`
+    /// packed values; the 4×8 tile at `c` (row stride `stride`) is in
+    /// bounds.
+    #[target_feature(enable = "avx2,fma")]
+    pub unsafe fn mk4x8_avx2(
+        depth: usize,
+        lp: *const f64,
+        rp: *const f64,
+        c: *mut f64,
+        stride: usize,
+    ) {
+        let mut a00 = _mm256_setzero_pd();
+        let mut a01 = _mm256_setzero_pd();
+        let mut a10 = _mm256_setzero_pd();
+        let mut a11 = _mm256_setzero_pd();
+        let mut a20 = _mm256_setzero_pd();
+        let mut a21 = _mm256_setzero_pd();
+        let mut a30 = _mm256_setzero_pd();
+        let mut a31 = _mm256_setzero_pd();
+        for t in 0..depth {
+            let r0 = _mm256_loadu_pd(rp.add(t * 8));
+            let r1 = _mm256_loadu_pd(rp.add(t * 8 + 4));
+            let l = lp.add(t * 4);
+            let l0 = _mm256_set1_pd(*l);
+            a00 = _mm256_fmadd_pd(l0, r0, a00);
+            a01 = _mm256_fmadd_pd(l0, r1, a01);
+            let l1 = _mm256_set1_pd(*l.add(1));
+            a10 = _mm256_fmadd_pd(l1, r0, a10);
+            a11 = _mm256_fmadd_pd(l1, r1, a11);
+            let l2 = _mm256_set1_pd(*l.add(2));
+            a20 = _mm256_fmadd_pd(l2, r0, a20);
+            a21 = _mm256_fmadd_pd(l2, r1, a21);
+            let l3 = _mm256_set1_pd(*l.add(3));
+            a30 = _mm256_fmadd_pd(l3, r0, a30);
+            a31 = _mm256_fmadd_pd(l3, r1, a31);
+        }
+        store_acc256(c, a00, a01);
+        store_acc256(c.add(stride), a10, a11);
+        store_acc256(c.add(2 * stride), a20, a21);
+        store_acc256(c.add(3 * stride), a30, a31);
+    }
+
+    #[target_feature(enable = "avx512f")]
+    unsafe fn store_acc512(row: *mut f64, lo: __m512d, hi: __m512d) {
+        _mm512_storeu_pd(row, _mm512_add_pd(_mm512_loadu_pd(row), lo));
+        _mm512_storeu_pd(row.add(8), _mm512_add_pd(_mm512_loadu_pd(row.add(8)), hi));
+    }
+
+    /// Full 4×16 AVX-512 tile: 8 zmm accumulators = 4 rows × 16 j-lanes
+    /// (two vectors per row keeps 8 chains live — latency-bound at 4 with
+    /// one).
+    ///
+    /// # Safety
+    /// CPU must support AVX-512F; packing/bounds as for [`mk4x8_avx2`]
+    /// with panel width 16.
+    #[target_feature(enable = "avx512f")]
+    pub unsafe fn mk4x16_avx512(
+        depth: usize,
+        lp: *const f64,
+        rp: *const f64,
+        c: *mut f64,
+        stride: usize,
+    ) {
+        let mut a00 = _mm512_setzero_pd();
+        let mut a01 = _mm512_setzero_pd();
+        let mut a10 = _mm512_setzero_pd();
+        let mut a11 = _mm512_setzero_pd();
+        let mut a20 = _mm512_setzero_pd();
+        let mut a21 = _mm512_setzero_pd();
+        let mut a30 = _mm512_setzero_pd();
+        let mut a31 = _mm512_setzero_pd();
+        for t in 0..depth {
+            let r0 = _mm512_loadu_pd(rp.add(t * 16));
+            let r1 = _mm512_loadu_pd(rp.add(t * 16 + 8));
+            let l = lp.add(t * 4);
+            let l0 = _mm512_set1_pd(*l);
+            a00 = _mm512_fmadd_pd(l0, r0, a00);
+            a01 = _mm512_fmadd_pd(l0, r1, a01);
+            let l1 = _mm512_set1_pd(*l.add(1));
+            a10 = _mm512_fmadd_pd(l1, r0, a10);
+            a11 = _mm512_fmadd_pd(l1, r1, a11);
+            let l2 = _mm512_set1_pd(*l.add(2));
+            a20 = _mm512_fmadd_pd(l2, r0, a20);
+            a21 = _mm512_fmadd_pd(l2, r1, a21);
+            let l3 = _mm512_set1_pd(*l.add(3));
+            a30 = _mm512_fmadd_pd(l3, r0, a30);
+            a31 = _mm512_fmadd_pd(l3, r1, a31);
+        }
+        store_acc512(c, a00, a01);
+        store_acc512(c.add(stride), a10, a11);
+        store_acc512(c.add(2 * stride), a20, a21);
+        store_acc512(c.add(3 * stride), a30, a31);
+    }
+}
+
+/// Portable tile with the fastest bit-identical body this CPU has.
+fn mk_tile_scalar(
+    depth: usize,
+    dims: (usize, usize),
+    lp: &[f64],
+    rp: &[f64],
+    ctile: &mut [f64],
+    stride: usize,
+    clip: Option<(usize, usize)>,
+) {
+    #[cfg(target_arch = "x86_64")]
+    if hw_fma() {
+        // SAFETY: FMA support verified at runtime.
+        unsafe { x86::mk_tile_fma(depth, dims, lp, rp, ctile, stride, clip) };
+        return;
+    }
+    mk_tile_body(depth, dims, lp, rp, ctile, stride, clip);
+}
+
+#[cfg(target_arch = "x86_64")]
+fn try_simd_tile(
+    level: SimdLevel,
+    depth: usize,
+    dims: (usize, usize),
+    lp: &[f64],
+    rp: &[f64],
+    ctile: &mut [f64],
+    stride: usize,
+) -> bool {
+    let (h, w) = dims;
+    match level {
+        // SAFETY: the dispatch level was availability-checked at entry;
+        // packed panels hold depth*h / depth*w values; the full tile is
+        // in bounds of `ctile` with row stride `stride`.
+        SimdLevel::Avx2 if h == MR && w == 8 => {
+            unsafe { x86::mk4x8_avx2(depth, lp.as_ptr(), rp.as_ptr(), ctile.as_mut_ptr(), stride) };
+            true
+        }
+        SimdLevel::Avx512 if h == MR && w == 16 => {
+            unsafe {
+                x86::mk4x16_avx512(depth, lp.as_ptr(), rp.as_ptr(), ctile.as_mut_ptr(), stride)
+            };
+            true
+        }
+        _ => false,
+    }
+}
+
+#[cfg(not(target_arch = "x86_64"))]
+fn try_simd_tile(
+    _level: SimdLevel,
+    _depth: usize,
+    _dims: (usize, usize),
+    _lp: &[f64],
+    _rp: &[f64],
+    _ctile: &mut [f64],
+    _stride: usize,
+) -> bool {
+    false
+}
+
+/// Drive one row band [i0, i1) of the output through the packed
+/// microkernels. `upper` restricts stores to the upper triangle q ≥ p
+/// (syrk): panels fully below the diagonal are skipped, full tiles
+/// strictly inside the triangle take the SIMD path, straddling tiles
+/// fall back to the clipped portable body (same chains, masked stores).
+fn mk_band(
+    p: &Panels<'_>,
+    left: &LeftOp<'_>,
+    cband: &mut [f64],
+    i0: usize,
+    i1: usize,
+    upper: bool,
+) {
+    let (depth, n) = (p.depth, p.n);
+    if depth == 0 || n == 0 {
+        return;
+    }
+    let w_full = panel_width(p.level);
+    let mut lp = arena::take_aligned(depth * MR);
+    for ib in (i0..i1).step_by(MR) {
+        let h = (i1 - ib).min(MR);
+        if pack_left(left, ib, h, &mut lp.slice_mut()[..depth * h]) {
+            continue; // whole-panel zero skip: all-(+0.0) left panel
+        }
+        let lph = &lp.slice()[..depth * h];
+        let row0 = ib - i0;
+        let mut j0 = if upper { (ib / w_full) * w_full } else { 0 };
+        while j0 < n {
+            let w = (n - j0).min(w_full);
+            let rpp = &p.rp[j0 * depth..j0 * depth + depth * w];
+            let clip = upper && j0 < ib + h - 1;
+            let off = row0 * n + j0;
+            if clip || !try_simd_tile(p.level, depth, (h, w), lph, rpp, &mut cband[off..], n) {
+                let c = if clip { Some((ib, j0)) } else { None };
+                mk_tile_scalar(depth, (h, w), lph, rpp, &mut cband[off..], n, c);
+            }
+            j0 += w;
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// GEMM / SYRK drivers
+// ---------------------------------------------------------------------
+
+/// C ← A B.
 pub fn gemm(a: &Mat, b: &Mat) -> Mat {
     gemm_mt(a, b, par::threads())
 }
@@ -118,145 +608,153 @@ pub fn gemm(a: &Mat, b: &Mat) -> Mat {
 /// [`gemm`] with an explicit thread-count cap (bit-identical at any cap).
 pub fn gemm_mt(a: &Mat, b: &Mat, threads: usize) -> Mat {
     assert_eq!(a.cols, b.rows, "gemm shape mismatch {}x{} * {}x{}", a.rows, a.cols, b.rows, b.cols);
-    let mut c = Mat::zeros(a.rows, b.cols);
+    let mut c = arena::take_mat_zeroed(a.rows, b.cols);
     gemm_acc_mt(1.0, a, b, &mut c, threads);
     c
 }
 
-/// C ← C + alpha·A·B. The workhorse: blocked over k and j with an i-k-j
-/// inner structure; the innermost loop is an axpy over a row of B which
-/// vectorizes. Parallel over bands of C's rows — each row's accumulation
-/// order is independent of the banding, so any thread count gives the
-/// same bits.
+/// C ← C + alpha·A·B — the workhorse. Parallel over bands of C's rows;
+/// every output element's chain is independent of banding, panel width
+/// and dispatch level, so any configuration gives the same bits.
 pub fn gemm_acc(alpha: f64, a: &Mat, b: &Mat, c: &mut Mat) {
     gemm_acc_mt(alpha, a, b, c, par::threads());
 }
 
 /// [`gemm_acc`] with an explicit thread-count cap.
 pub fn gemm_acc_mt(alpha: f64, a: &Mat, b: &Mat, c: &mut Mat, threads: usize) {
+    gemm_acc_impl(simd_level(), alpha, a, b, c, threads);
+}
+
+/// [`gemm_acc`] pinned to an explicit dispatch level (serial) — the test
+/// hook behind `tests/blas_kernels.rs`. Panics if the CPU lacks `level`.
+pub fn gemm_acc_level(level: SimdLevel, alpha: f64, a: &Mat, b: &Mat, c: &mut Mat) {
+    check_level(level);
+    gemm_acc_impl(level, alpha, a, b, c, 1);
+}
+
+fn gemm_acc_impl(level: SimdLevel, alpha: f64, a: &Mat, b: &Mat, c: &mut Mat, threads: usize) {
     assert_eq!(a.cols, b.rows);
     assert_eq!(c.rows, a.rows);
     assert_eq!(c.cols, b.cols);
     let (m, k, n) = (a.rows, a.cols, b.cols);
+    if alpha == 0.0 || m == 0 || k == 0 || n == 0 {
+        return; // α=0 / empty depth contribute nothing (old semantics)
+    }
+    let mut rp = arena::take_vec(k * n);
+    pack_right(b, panel_width(level), &mut rp);
+    let panels = Panels { level, depth: k, n, rp: &rp };
     let shards = par_shards(m, m * k * n, threads);
     if shards <= 1 {
-        gemm_acc_rows(alpha, a, b, &mut c.data, 0, m);
-        return;
+        gemm_acc_rows(&panels, alpha, a, &mut c.data, 0, m);
+    } else {
+        let cols = c.cols;
+        let cptr = SendPtr::new(c.data.as_mut_ptr());
+        let pref = &panels;
+        par::for_ranges(m, shards, move |_, lo, hi| {
+            // SAFETY: bands are disjoint row ranges of C.
+            let band = unsafe { band_mut(cptr, cols, lo, hi) };
+            gemm_acc_rows(pref, alpha, a, band, lo, hi);
+        });
     }
-    let cols = c.cols;
-    let cptr = SendPtr::new(c.data.as_mut_ptr());
-    par::for_ranges(m, shards, move |_, lo, hi| {
-        // SAFETY: bands are disjoint row ranges of C.
-        let band = unsafe { band_mut(cptr, cols, lo, hi) };
-        gemm_acc_rows(alpha, a, b, band, lo, hi);
-    });
+    arena::give_vec(rp);
 }
 
-/// Band kernel for [`gemm_acc`]: rows [i0, i1) of C, `cband` holding
-/// exactly those rows.
-fn gemm_acc_rows(alpha: f64, a: &Mat, b: &Mat, cband: &mut [f64], i0: usize, i1: usize) {
-    const KB: usize = 128; // k-block: keeps a strip of B in L2
-    const JB: usize = 512; // j-block: row segments fit L1
-    let (k, n) = (a.cols, b.cols);
-    for kb in (0..k).step_by(KB) {
-        let kend = (kb + KB).min(k);
-        for jb in (0..n).step_by(JB) {
-            let jend = (jb + JB).min(n);
-            for i in i0..i1 {
-                let arow = a.row(i);
-                let crow = &mut cband[(i - i0) * n + jb..(i - i0) * n + jend];
-                for kk in kb..kend {
-                    let aik = alpha * arow[kk];
-                    if aik == 0.0 {
-                        continue;
-                    }
-                    let brow = &b.row(kk)[jb..jend];
-                    for (cj, bj) in crow.iter_mut().zip(brow) {
-                        *cj += aik * bj;
-                    }
-                }
-            }
-        }
-    }
+/// Band kernel for [`gemm_acc`]: rows [i0, i1) of C against pre-packed B.
+fn gemm_acc_rows(p: &Panels<'_>, alpha: f64, a: &Mat, cband: &mut [f64], i0: usize, i1: usize) {
+    mk_band(p, &LeftOp::Rows { alpha, a }, cband, i0, i1, false);
 }
 
-/// C ← Aᵀ B  (m×k)ᵀ·(m×n): accumulate outer products of rows of A and B.
-/// Parallel over bands of C's rows (columns of A).
+/// C ← Aᵀ B  (m×k)ᵀ·(m×n). Parallel over bands of C's rows (columns of
+/// A).
 pub fn gemm_tn(a: &Mat, b: &Mat) -> Mat {
     gemm_tn_mt(a, b, par::threads())
 }
 
 /// [`gemm_tn`] with an explicit thread-count cap.
 pub fn gemm_tn_mt(a: &Mat, b: &Mat, threads: usize) -> Mat {
+    gemm_tn_impl(simd_level(), a, b, threads)
+}
+
+/// [`gemm_tn`] pinned to an explicit dispatch level (serial).
+pub fn gemm_tn_level(level: SimdLevel, a: &Mat, b: &Mat) -> Mat {
+    check_level(level);
+    gemm_tn_impl(level, a, b, 1)
+}
+
+fn gemm_tn_impl(level: SimdLevel, a: &Mat, b: &Mat, threads: usize) -> Mat {
     assert_eq!(a.rows, b.rows);
-    let mut c = Mat::zeros(a.cols, b.cols);
-    let shards = par_shards(a.cols, a.rows * a.cols * b.cols, threads);
-    if shards <= 1 {
-        gemm_tn_rows(a, b, &mut c.data, 0, a.cols);
+    let (depth, m, n) = (a.rows, a.cols, b.cols);
+    let mut c = arena::take_mat_zeroed(m, n);
+    if depth == 0 || m == 0 || n == 0 {
         return c;
     }
-    let cols = c.cols;
-    let cptr = SendPtr::new(c.data.as_mut_ptr());
-    par::for_ranges(a.cols, shards, move |_, lo, hi| {
-        // SAFETY: bands are disjoint row ranges of C.
-        let band = unsafe { band_mut(cptr, cols, lo, hi) };
-        gemm_tn_rows(a, b, band, lo, hi);
-    });
+    let mut rp = arena::take_vec(depth * n);
+    pack_right(b, panel_width(level), &mut rp);
+    let panels = Panels { level, depth, n, rp: &rp };
+    let shards = par_shards(m, depth * m * n, threads);
+    if shards <= 1 {
+        gemm_tn_rows(&panels, a, &mut c.data, 0, m);
+    } else {
+        let cptr = SendPtr::new(c.data.as_mut_ptr());
+        let pref = &panels;
+        par::for_ranges(m, shards, move |_, lo, hi| {
+            // SAFETY: bands are disjoint row ranges of C.
+            let band = unsafe { band_mut(cptr, n, lo, hi) };
+            gemm_tn_rows(pref, a, band, lo, hi);
+        });
+    }
+    arena::give_vec(rp);
     c
 }
 
-fn gemm_tn_rows(a: &Mat, b: &Mat, cband: &mut [f64], p0: usize, p1: usize) {
-    let n = b.cols;
-    for i in 0..a.rows {
-        let arow = a.row(i);
-        let brow = b.row(i);
-        for p in p0..p1 {
-            let api = arow[p];
-            if api == 0.0 {
-                continue;
-            }
-            let crow = &mut cband[(p - p0) * n..(p - p0) * n + n];
-            for (cq, bq) in crow.iter_mut().zip(brow) {
-                *cq += api * bq;
-            }
-        }
-    }
+fn gemm_tn_rows(p: &Panels<'_>, a: &Mat, cband: &mut [f64], p0: usize, p1: usize) {
+    mk_band(p, &LeftOp::Cols { a }, cband, p0, p1, false);
 }
 
-/// C ← A Bᵀ — dot products of rows; very cache friendly. Parallel over
-/// bands of C's rows.
+/// C ← A Bᵀ. Parallel over bands of C's rows.
 pub fn gemm_nt(a: &Mat, b: &Mat) -> Mat {
     gemm_nt_mt(a, b, par::threads())
 }
 
 /// [`gemm_nt`] with an explicit thread-count cap.
 pub fn gemm_nt_mt(a: &Mat, b: &Mat, threads: usize) -> Mat {
+    gemm_nt_impl(simd_level(), a, b, threads)
+}
+
+/// [`gemm_nt`] pinned to an explicit dispatch level (serial).
+pub fn gemm_nt_level(level: SimdLevel, a: &Mat, b: &Mat) -> Mat {
+    check_level(level);
+    gemm_nt_impl(level, a, b, 1)
+}
+
+fn gemm_nt_impl(level: SimdLevel, a: &Mat, b: &Mat, threads: usize) -> Mat {
     assert_eq!(a.cols, b.cols);
-    let mut c = Mat::zeros(a.rows, b.rows);
-    let shards = par_shards(a.rows, a.rows * a.cols * b.rows, threads);
-    if shards <= 1 {
-        gemm_nt_rows(a, b, &mut c.data, 0, a.rows);
+    let (depth, m, n) = (a.cols, a.rows, b.rows);
+    let mut c = arena::take_mat_zeroed(m, n);
+    if depth == 0 || m == 0 || n == 0 {
         return c;
     }
-    let cols = c.cols;
-    let cptr = SendPtr::new(c.data.as_mut_ptr());
-    par::for_ranges(a.rows, shards, move |_, lo, hi| {
-        // SAFETY: bands are disjoint row ranges of C.
-        let band = unsafe { band_mut(cptr, cols, lo, hi) };
-        gemm_nt_rows(a, b, band, lo, hi);
-    });
+    let mut rp = arena::take_vec(depth * n);
+    pack_right_t(b, panel_width(level), &mut rp);
+    let panels = Panels { level, depth, n, rp: &rp };
+    let shards = par_shards(m, m * depth * n, threads);
+    if shards <= 1 {
+        gemm_nt_rows(&panels, a, &mut c.data, 0, m);
+    } else {
+        let cptr = SendPtr::new(c.data.as_mut_ptr());
+        let pref = &panels;
+        par::for_ranges(m, shards, move |_, lo, hi| {
+            // SAFETY: bands are disjoint row ranges of C.
+            let band = unsafe { band_mut(cptr, n, lo, hi) };
+            gemm_nt_rows(pref, a, band, lo, hi);
+        });
+    }
+    arena::give_vec(rp);
     c
 }
 
-fn gemm_nt_rows(a: &Mat, b: &Mat, cband: &mut [f64], i0: usize, i1: usize) {
-    let n = b.rows;
-    for i in i0..i1 {
-        let arow = a.row(i);
-        let crow = &mut cband[(i - i0) * n..(i - i0) * n + n];
-        for j in 0..n {
-            crow[j] = dot(arow, b.row(j));
-        }
-    }
+fn gemm_nt_rows(p: &Panels<'_>, a: &Mat, cband: &mut [f64], i0: usize, i1: usize) {
+    mk_band(p, &LeftOp::Rows { alpha: 1.0, a }, cband, i0, i1, false);
 }
 
 /// A ← diag(s) · A: scale row i by s[i]. Row-major, so each scaling is one
@@ -274,81 +772,100 @@ pub fn scale_rows(a: &mut Mat, s: &[f64]) {
 /// G ← AᵀA (symmetric rank-k update). Computes only the upper triangle
 /// (banded over G's rows — bands near p = 0 carry more of the triangle,
 /// a deliberate trade for keeping the thread cap exact) and mirrors it.
-/// This is MMF's dominant cost; see also the XLA artifact path.
+/// Upper entries are bitwise identical to `gemm_tn(a, a)`'s.
 pub fn syrk_ata(a: &Mat) -> Mat {
     syrk_ata_mt(a, par::threads())
 }
 
 /// [`syrk_ata`] with an explicit thread-count cap.
 pub fn syrk_ata_mt(a: &Mat, threads: usize) -> Mat {
-    let n = a.cols;
-    let mut g = Mat::zeros(n, n);
-    let shards = par_shards(n, a.rows * n * n / 2, threads);
-    if shards <= 1 {
-        syrk_ata_rows(a, &mut g.data, 0, n);
-    } else {
-        let gptr = SendPtr::new(g.data.as_mut_ptr());
-        par::for_ranges(n, shards, move |_, lo, hi| {
-            // SAFETY: bands are disjoint row ranges of G.
-            let band = unsafe { band_mut(gptr, n, lo, hi) };
-            syrk_ata_rows(a, band, lo, hi);
-        });
+    syrk_ata_impl(simd_level(), a, threads)
+}
+
+/// [`syrk_ata`] pinned to an explicit dispatch level (serial).
+pub fn syrk_ata_level(level: SimdLevel, a: &Mat) -> Mat {
+    check_level(level);
+    syrk_ata_impl(level, a, 1)
+}
+
+fn syrk_ata_impl(level: SimdLevel, a: &Mat, threads: usize) -> Mat {
+    let (depth, n) = (a.rows, a.cols);
+    let mut g = arena::take_mat_zeroed(n, n);
+    if n == 0 {
+        return g;
+    }
+    let shards = par_shards(n, depth * n * n / 2, threads);
+    if depth > 0 {
+        let mut rp = arena::take_vec(depth * n);
+        pack_right(a, panel_width(level), &mut rp);
+        let panels = Panels { level, depth, n, rp: &rp };
+        if shards <= 1 {
+            syrk_ata_rows(&panels, a, &mut g.data, 0, n);
+        } else {
+            let gptr = SendPtr::new(g.data.as_mut_ptr());
+            let pref = &panels;
+            par::for_ranges(n, shards, move |_, lo, hi| {
+                // SAFETY: bands are disjoint row ranges of G.
+                let band = unsafe { band_mut(gptr, n, lo, hi) };
+                syrk_ata_rows(pref, a, band, lo, hi);
+            });
+        }
+        arena::give_vec(rp);
     }
     mirror_upper(&mut g, shards);
     g
 }
 
-fn syrk_ata_rows(a: &Mat, gband: &mut [f64], p0: usize, p1: usize) {
-    let n = a.cols;
-    for i in 0..a.rows {
-        let row = a.row(i);
-        for p in p0..p1 {
-            let v = row[p];
-            if v == 0.0 {
-                continue;
-            }
-            let grow = &mut gband[(p - p0) * n..(p - p0) * n + n];
-            for q in p..n {
-                grow[q] += v * row[q];
-            }
-        }
-    }
+fn syrk_ata_rows(p: &Panels<'_>, a: &Mat, gband: &mut [f64], p0: usize, p1: usize) {
+    mk_band(p, &LeftOp::Cols { a }, gband, p0, p1, true);
 }
 
-/// G ← A Aᵀ for symmetric-needed products over rows. Upper triangle banded
-/// over G's rows, then mirrored.
+/// G ← A Aᵀ. Upper triangle banded over G's rows, then mirrored.
 pub fn syrk_aat(a: &Mat) -> Mat {
     syrk_aat_mt(a, par::threads())
 }
 
 /// [`syrk_aat`] with an explicit thread-count cap.
 pub fn syrk_aat_mt(a: &Mat, threads: usize) -> Mat {
-    let n = a.rows;
-    let mut g = Mat::zeros(n, n);
-    let shards = par_shards(n, n * n * a.cols / 2, threads);
-    if shards <= 1 {
-        syrk_aat_rows(a, &mut g.data, 0, n);
-    } else {
-        let gptr = SendPtr::new(g.data.as_mut_ptr());
-        par::for_ranges(n, shards, move |_, lo, hi| {
-            // SAFETY: bands are disjoint row ranges of G.
-            let band = unsafe { band_mut(gptr, n, lo, hi) };
-            syrk_aat_rows(a, band, lo, hi);
-        });
+    syrk_aat_impl(simd_level(), a, threads)
+}
+
+/// [`syrk_aat`] pinned to an explicit dispatch level (serial).
+pub fn syrk_aat_level(level: SimdLevel, a: &Mat) -> Mat {
+    check_level(level);
+    syrk_aat_impl(level, a, 1)
+}
+
+fn syrk_aat_impl(level: SimdLevel, a: &Mat, threads: usize) -> Mat {
+    let (depth, n) = (a.cols, a.rows);
+    let mut g = arena::take_mat_zeroed(n, n);
+    if n == 0 {
+        return g;
+    }
+    let shards = par_shards(n, n * n * depth / 2, threads);
+    if depth > 0 {
+        let mut rp = arena::take_vec(depth * n);
+        pack_right_t(a, panel_width(level), &mut rp);
+        let panels = Panels { level, depth, n, rp: &rp };
+        if shards <= 1 {
+            syrk_aat_rows(&panels, a, &mut g.data, 0, n);
+        } else {
+            let gptr = SendPtr::new(g.data.as_mut_ptr());
+            let pref = &panels;
+            par::for_ranges(n, shards, move |_, lo, hi| {
+                // SAFETY: bands are disjoint row ranges of G.
+                let band = unsafe { band_mut(gptr, n, lo, hi) };
+                syrk_aat_rows(pref, a, band, lo, hi);
+            });
+        }
+        arena::give_vec(rp);
     }
     mirror_upper(&mut g, shards);
     g
 }
 
-fn syrk_aat_rows(a: &Mat, gband: &mut [f64], i0: usize, i1: usize) {
-    let n = a.rows;
-    for i in i0..i1 {
-        let ri = a.row(i);
-        let grow = &mut gband[(i - i0) * n..(i - i0) * n + n];
-        for j in i..n {
-            grow[j] = dot(ri, a.row(j));
-        }
-    }
+fn syrk_aat_rows(p: &Panels<'_>, a: &Mat, gband: &mut [f64], i0: usize, i1: usize) {
+    mk_band(p, &LeftOp::Rows { alpha: 1.0, a }, gband, i0, i1, true);
 }
 
 /// Copy the finished upper triangle into the strictly-lower one. Row q of
@@ -385,6 +902,40 @@ pub fn conjugate(q: &Mat, a: &Mat) -> Mat {
     // (QᵀA)Q
     let qta = gemm_tn(q, a);
     gemm(&qta, q)
+}
+
+/// The pre-microkernel gemm (blocked i-k-j axpy loops with the old
+/// per-scalar zero skip), retained verbatim as the baseline the
+/// `complexity` bench measures the packed kernels against
+/// (`kernel.speedup_vs_prepr_scalar` in `BENCH_perf.json`).
+#[doc(hidden)]
+pub fn gemm_baseline(a: &Mat, b: &Mat) -> Mat {
+    assert_eq!(a.cols, b.rows);
+    const KB: usize = 128;
+    const JB: usize = 512;
+    let mut c = Mat::zeros(a.rows, b.cols);
+    let (k, n) = (a.cols, b.cols);
+    for kb in (0..k).step_by(KB) {
+        let kend = (kb + KB).min(k);
+        for jb in (0..n).step_by(JB) {
+            let jend = (jb + JB).min(n);
+            for i in 0..a.rows {
+                let arow = a.row(i);
+                let crow = &mut c.data[i * n + jb..i * n + jend];
+                for kk in kb..kend {
+                    let aik = arow[kk];
+                    if aik == 0.0 {
+                        continue;
+                    }
+                    let brow = &b.row(kk)[jb..jend];
+                    for (cj, bj) in crow.iter_mut().zip(brow) {
+                        *cj += aik * bj;
+                    }
+                }
+            }
+        }
+    }
+    c
 }
 
 #[cfg(test)]
@@ -450,16 +1001,72 @@ mod tests {
         assert!(g2.sub(&r2).max_abs() < 1e-10);
     }
 
+    #[test]
+    fn syrk_bitwise_equals_gemm_tn() {
+        // Chains are identical per element, and the mirrored lower
+        // triangle matches gemm_tn's independently computed one because
+        // fma chains commute their multiplicands.
+        let a = randm(21, 18, 16);
+        assert_eq!(syrk_ata(&a).data, gemm_tn(&a, &a).data);
+        assert_eq!(syrk_aat(&a).data, gemm_nt(&a, &a).data);
+    }
+
     // The bit-determinism contract (parallel == serial at any thread
     // count) lives in tests/par_determinism.rs; here we only spot-check
     // the banded gemm path engages correctly above the flop gate.
     #[test]
+    #[cfg_attr(miri, ignore)] // global pool + big shapes
     fn banded_gemm_bit_matches_serial() {
         let a = randm(160, 130, 7);
         let b = randm(130, 150, 8);
         let serial = gemm_mt(&a, &b, 1);
         for t in [2, 7] {
             assert_eq!(serial.data, gemm_mt(&a, &b, t).data, "gemm t={t}");
+        }
+    }
+
+    #[test]
+    fn levels_agree_bitwise_quick() {
+        // Full cross-shape matrix lives in tests/blas_kernels.rs; this
+        // spot-check keeps the property visible under `cargo miri test
+        // --lib` (shapes straddle the 8/16 panel widths).
+        for (m, k, n) in [(5, 3, 9), (4, 6, 8), (7, 2, 17)] {
+            let a = randm(m, k, 20);
+            let b = randm(k, n, 21);
+            let base = gemm_tn_level(SimdLevel::Scalar, &a.transpose(), &b);
+            for level in available_levels() {
+                let c = gemm_tn_level(level, &a.transpose(), &b);
+                assert_eq!(base.data, c.data, "{level:?} m={m} k={k} n={n}");
+            }
+        }
+    }
+
+    #[test]
+    fn zero_panels_are_skipped_correctly() {
+        // Rows 0..4 of A are exactly zero: the whole left panel is
+        // skipped; the result must still match the reference (C rows
+        // stay at their initial values).
+        let mut a = randm(10, 6, 22);
+        for i in 0..4 {
+            for v in a.row_mut(i) {
+                *v = 0.0;
+            }
+        }
+        let b = randm(6, 11, 23);
+        let mut c = randm(10, 11, 24);
+        let c0 = c.clone();
+        gemm_acc(2.5, &a, &b, &mut c);
+        for j in 0..11 {
+            for i in 0..4 {
+                assert_eq!(c[(i, j)], c0[(i, j)], "skipped rows untouched");
+            }
+        }
+        let r = gemm_ref(&a, &b);
+        for i in 4..10 {
+            for j in 0..11 {
+                let want = c0[(i, j)] + 2.5 * r[(i, j)];
+                assert!((c[(i, j)] - want).abs() < 1e-10);
+            }
         }
     }
 
@@ -501,5 +1108,12 @@ mod tests {
         let q = Mat::eye(6);
         let c = conjugate(&q, &a);
         assert!(c.sub(&a).max_abs() < 1e-12);
+    }
+
+    #[test]
+    fn baseline_matches_reference() {
+        let a = randm(33, 19, 30);
+        let b = randm(19, 27, 31);
+        assert!(gemm_baseline(&a, &b).sub(&gemm_ref(&a, &b)).max_abs() < 1e-10);
     }
 }

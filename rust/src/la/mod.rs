@@ -20,7 +20,10 @@ pub mod qr;
 pub mod sparse;
 pub mod stats;
 
-pub use blas::{axpy, dot, gemm, gemm_nt, gemm_tn, gemv, gemv_t, norm2, scale_rows, syrk_aat, syrk_ata};
+pub use blas::{
+    axpy, dot, gemm, gemm_nt, gemm_tn, gemv, gemv_t, norm2, scale_rows, simd_level, syrk_aat,
+    syrk_ata, SimdLevel,
+};
 pub use chol::{solve_lower_mat, solve_lower_t_mat, Chol};
 pub use dense::Mat;
 pub use evd::SymEig;

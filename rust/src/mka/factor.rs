@@ -32,6 +32,7 @@ use super::stage::Stage;
 use crate::la::blas::{axpy, gemm, gemv, scale_rows};
 use crate::la::dense::Mat;
 use crate::la::evd::SymEig;
+use crate::par::arena;
 
 /// Process-wide count of *logical* orthogonal cascades (one full
 /// forward+backward sweep through every stage). A blocked apply carrying
@@ -210,8 +211,22 @@ impl MkaFactor {
             return apply(z, self.n_threads.max(n_threads));
         }
         let chunks = chunk_ranges(z.cols, n_threads);
-        let parts = par_map(chunks, n_threads, |_, (c0, c1)| apply(&z.block(0, z.rows, c0, c1), 1));
-        Mat::hstack(&parts)
+        let parts = par_map(chunks, n_threads, |_, (c0, c1)| {
+            // Column chunk via per-worker arena scratch (every row is
+            // overwritten by the copy).
+            let mut sub = arena::take_mat(z.rows, c1 - c0);
+            for r in 0..z.rows {
+                sub.row_mut(r).copy_from_slice(&z.row(r)[c0..c1]);
+            }
+            let out = apply(&sub, 1);
+            arena::give_mat(sub);
+            out
+        });
+        let out = Mat::hstack(&parts);
+        for p in parts {
+            arena::give_mat(p);
+        }
+        out
     }
 
     /// Generic spectral application: given how to act on the final core
@@ -230,22 +245,33 @@ impl MkaFactor {
         assert_eq!(z.len(), self.n, "matvec dimension mismatch");
         CASCADES.fetch_add(1, Ordering::Relaxed);
         let threads = self.n_threads;
-        let mut scratch: Vec<f64> = Vec::new();
-        let mut v = z.to_vec();
+        let mut scratch: Vec<f64> = arena::take_vec(0);
+        let mut v = arena::take_vec(self.n);
+        v.copy_from_slice(z);
         let mut wavs: Vec<Vec<f64>> = Vec::with_capacity(self.stages.len());
         for st in self.stages.iter() {
             let (core, wav) = st.forward_mt(&mut v, &mut scratch, threads);
             wavs.push(wav);
-            v = core;
+            arena::give_vec(std::mem::replace(&mut v, core));
         }
         // Core action.
         let mut u = core_op(&v);
-        // Backward cascade, scaling wavelet coefficients by f(D).
+        arena::give_vec(v);
+        // Backward cascade, scaling wavelet coefficients by f(D); dead
+        // intermediates are donated back to the arena as they retire.
         for (st, wav) in self.stages.iter().zip(wavs.iter()).rev() {
-            let scaled: Vec<f64> =
-                wav.iter().zip(&st.dvals).map(|(w, &d)| w * dmap(d)).collect();
-            u = st.backward_mt(&u, &scaled, &mut scratch, threads);
+            let mut scaled = arena::take_vec(wav.len());
+            for ((s, w), &d) in scaled.iter_mut().zip(wav).zip(&st.dvals) {
+                *s = w * dmap(d);
+            }
+            let next = st.backward_mt(&u, &scaled, &mut scratch, threads);
+            arena::give_vec(scaled);
+            arena::give_vec(std::mem::replace(&mut u, next));
         }
+        for w in wavs {
+            arena::give_vec(w);
+        }
+        arena::give_vec(scratch);
         u
     }
 
@@ -276,21 +302,30 @@ impl MkaFactor {
         stage_threads: usize,
     ) -> Mat {
         assert_eq!(z.rows, self.n, "matmat dimension mismatch");
-        let mut v = z.clone();
+        let mut v = arena::take_mat(z.rows, z.cols);
+        v.data.copy_from_slice(&z.data);
         let mut wavs: Vec<Mat> = Vec::with_capacity(self.stages.len());
         for st in self.stages.iter() {
             let (core, wav) = st.forward_mat_mt(&mut v, stage_threads);
             wavs.push(wav);
-            v = core;
+            arena::give_mat(std::mem::replace(&mut v, core));
         }
         // Core action on the whole block.
         let mut u = core_op(&v);
+        arena::give_mat(v);
         // Backward cascade, scaling each wavelet row by f(d); the wavelet
-        // buffers are dead after this, so scale them in place.
+        // buffers are dead after this, so scale them in place and donate
+        // them (and each retired `u`) back to the per-worker arenas.
         for (st, mut wav) in self.stages.iter().zip(wavs).rev() {
-            let fd: Vec<f64> = st.dvals.iter().map(|&d| dmap(d)).collect();
+            let mut fd = arena::take_vec(st.dvals.len());
+            for (f, &d) in fd.iter_mut().zip(&st.dvals) {
+                *f = dmap(d);
+            }
             scale_rows(&mut wav, &fd);
-            u = st.backward_mat_mt(&u, &wav, stage_threads);
+            arena::give_vec(fd);
+            let next = st.backward_mat_mt(&u, &wav, stage_threads);
+            arena::give_mat(std::mem::replace(&mut u, next));
+            arena::give_mat(wav);
         }
         u
     }

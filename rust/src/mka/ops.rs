@@ -222,9 +222,15 @@ fn spectral_apply_mat(
     f: impl Fn(f64) -> f64,
 ) -> Mat {
     let mut vt_x = gemm_tn(&eig.vectors, x);
-    let fvals: Vec<f64> = eig.values.iter().map(|&l| f(l)).collect();
+    let mut fvals = crate::par::arena::take_vec(eig.values.len());
+    for (fv, &l) in fvals.iter_mut().zip(&eig.values) {
+        *fv = f(l);
+    }
     scale_rows(&mut vt_x, &fvals);
-    gemm(&eig.vectors, &vt_x)
+    crate::par::arena::give_vec(fvals);
+    let out = gemm(&eig.vectors, &vt_x);
+    crate::par::arena::give_mat(vt_x);
+    out
 }
 
 /// |λ|^α · sign(λ) for odd behaviour on any stray negatives (psd clamping

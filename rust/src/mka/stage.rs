@@ -9,7 +9,7 @@
 use crate::compress::QFactor;
 use crate::la::blas::{gemm_mt, gemm_tn_mt};
 use crate::la::dense::Mat;
-use crate::par::SendPtr;
+use crate::par::{arena, SendPtr};
 
 /// Block-parallel rotation of a multi-RHS block engages above this many
 /// matrix elements (n_in × b).
@@ -71,8 +71,15 @@ impl Stage {
     ) -> (Vec<f64>, Vec<f64>) {
         debug_assert_eq!(v.len(), self.n_in);
         self.rotate_vec(v, scratch, false, threads);
-        let core = self.core_global.iter().map(|&i| v[i]).collect();
-        let wav = self.wavelet_global.iter().map(|&i| v[i]).collect();
+        // Arena-backed splits (every entry written by the gathers).
+        let mut core = arena::take_vec(self.core_global.len());
+        for (c, &i) in core.iter_mut().zip(&self.core_global) {
+            *c = v[i];
+        }
+        let mut wav = arena::take_vec(self.wavelet_global.len());
+        for (w, &i) in wav.iter_mut().zip(&self.wavelet_global) {
+            *w = v[i];
+        }
         (core, wav)
     }
 
@@ -92,7 +99,9 @@ impl Stage {
     ) -> Vec<f64> {
         debug_assert_eq!(core.len(), self.core_global.len());
         debug_assert_eq!(wav.len(), self.wavelet_global.len());
-        let mut v = vec![0.0; self.n_in];
+        // Arena scratch: core ∪ wavelet partition 0..n_in (check_valid),
+        // so the two scatters overwrite every entry.
+        let mut v = arena::take_vec(self.n_in);
         for (&g, &c) in self.core_global.iter().zip(core) {
             v[g] = c;
         }
@@ -118,10 +127,12 @@ impl Stage {
         let blocks = &self.blocks;
         crate::par::run_tasks(blocks.len(), threads, move |bi| {
             let b = &blocks[bi];
-            let mut local = Vec::new();
+            // Per-worker arena scratch instead of a fresh Vec per block.
+            let mut local = arena::take_vec(0);
             // SAFETY: blocks partition the coordinates (check_valid), so
             // tasks touch disjoint entries.
             unsafe { apply_block_vec_ptr(&b.q, &b.idx, vptr.ptr(), &mut local, transpose) };
+            arena::give_vec(local);
         });
     }
 
@@ -139,7 +150,7 @@ impl Stage {
     pub fn forward_mat_mt(&self, v: &mut Mat, threads: usize) -> (Mat, Mat) {
         debug_assert_eq!(v.rows, self.n_in);
         self.rotate_mat(v, false, threads);
-        (v.gather_rows(&self.core_global), v.gather_rows(&self.wavelet_global))
+        (gather_rows_arena(v, &self.core_global), gather_rows_arena(v, &self.wavelet_global))
     }
 
     /// Inverse of [`Stage::forward_mat`]: scatter the (core, wavelet) row
@@ -154,7 +165,9 @@ impl Stage {
         debug_assert_eq!(core.rows, self.core_global.len());
         debug_assert_eq!(wav.rows, self.wavelet_global.len());
         debug_assert_eq!(core.cols, wav.cols);
-        let mut v = Mat::zeros(self.n_in, core.cols);
+        // Arena scratch: the core/wavelet scatters below cover every row
+        // (the splits partition 0..n_in), so stale contents never leak.
+        let mut v = arena::take_mat(self.n_in, core.cols);
         for (a, &g) in self.core_global.iter().enumerate() {
             v.row_mut(g).copy_from_slice(core.row(a));
         }
@@ -214,6 +227,16 @@ impl Stage {
         }
         seen2.iter().all(|&s| s) && self.dvals.len() == self.wavelet_global.len()
     }
+}
+
+/// `Mat::gather_rows` into arena-recycled storage: every row of the
+/// output is written, so unspecified checkout contents never leak.
+fn gather_rows_arena(v: &Mat, idx: &[usize]) -> Mat {
+    let mut out = arena::take_mat(idx.len(), v.cols);
+    for (a, &g) in idx.iter().enumerate() {
+        out.row_mut(a).copy_from_slice(v.row(g));
+    }
+    out
 }
 
 /// Gather a block's subvector, apply the local rotation (or its transpose),
@@ -304,7 +327,8 @@ unsafe fn apply_block_mat_ptr(
         }
         QFactor::Dense(qm) => {
             let m = idx.len();
-            let mut sub = Mat::zeros(m, cols);
+            // Arena scratch, fully overwritten by the gather below.
+            let mut sub = arena::take_mat(m, cols);
             for (a, &i) in idx.iter().enumerate() {
                 let dst = sub.row_mut(a).as_mut_ptr();
                 std::ptr::copy_nonoverlapping(data.add(i * cols), dst, cols);
@@ -313,6 +337,8 @@ unsafe fn apply_block_mat_ptr(
             for (a, &i) in idx.iter().enumerate() {
                 std::ptr::copy_nonoverlapping(new.row(a).as_ptr(), data.add(i * cols), cols);
             }
+            arena::give_mat(sub);
+            arena::give_mat(new);
         }
     }
 }

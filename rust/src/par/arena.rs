@@ -1,0 +1,263 @@
+//! Per-worker scratch arena: grow-only, thread-local buffer reuse for the
+//! dense compute plane.
+//!
+//! Every hot path in the crate — panel packing in `la::blas`, the
+//! `Stage::rotate_vec` scratch, gram-assembly tiles, the cascade's
+//! per-stage `wavs` buffers — needs short-lived `Vec<f64>` scratch of
+//! roughly the same size on every call. Allocating it per call puts the
+//! allocator on the serving hot path; this module replaces that with a
+//! checkout/return protocol:
+//!
+//! * [`take_vec`] / [`take_zeroed`] check a buffer out of the calling
+//!   thread's pool (best-fit on capacity; contents of `take_vec` are
+//!   **unspecified** — stale data from a previous user, or zeros — so
+//!   callers must fully overwrite before reading).
+//! * [`give_vec`] returns a buffer to the pool of whichever thread calls
+//!   it (buffers migrate freely between threads; each pool is bounded).
+//! * [`take_mat`] / [`take_mat_zeroed`] / [`give_mat`] are the same
+//!   protocol for `Mat`-shaped scratch, and [`take_aligned`] hands out a
+//!   64-byte-aligned RAII slice for packed microkernel panels.
+//!
+//! The pools are **grow-only**: a checkout that no held buffer can
+//! satisfy grows (or allocates) one buffer and records the event in a
+//! global counter. In steady state — repeated predicts against a fitted
+//! model, repeated gemms of the same shape — every checkout is a hit and
+//! the dense plane performs **zero heap allocations**. The counters
+//! ([`checkouts`], [`grows`], [`grow_bytes`]) are monotonic and exposed
+//! through `metrics.compute` so that claim is observable in production
+//! and pinned by `rust/tests/arena_steady.rs`.
+//!
+//! Determinism: the arena only recycles storage; it never changes what
+//! values are computed, so the bit-determinism contract is untouched.
+
+use std::cell::RefCell;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use crate::la::dense::Mat;
+
+/// Max buffers held per thread; beyond this, returned buffers displace
+/// the smallest held one (or are dropped) so a burst of odd sizes can't
+/// pin unbounded memory. Sized above the cascade's end-of-solve donation
+/// burst (a few buffers per stage) so steady-state serving never cycles
+/// through drop-then-regrow.
+const MAX_HELD: usize = 32;
+
+/// 64-byte line / vector-register alignment, in f64 elements.
+const ALIGN_ELEMS: usize = 8;
+
+static CHECKOUTS: AtomicU64 = AtomicU64::new(0);
+static GROWS: AtomicU64 = AtomicU64::new(0);
+static GROW_BYTES: AtomicU64 = AtomicU64::new(0);
+
+thread_local! {
+    static POOL: RefCell<Vec<Vec<f64>>> = const { RefCell::new(Vec::new()) };
+}
+
+/// Total checkouts ([`take_vec`]/[`take_zeroed`]/[`take_aligned`] and the
+/// `Mat` variants) since process start. Monotonic.
+pub fn checkouts() -> u64 {
+    CHECKOUTS.load(Ordering::Relaxed)
+}
+
+/// Checkouts that no held buffer could satisfy (each one is a real heap
+/// allocation or reallocation). Flat across repeated same-shape work ⇒
+/// the arena path is allocation-free in steady state. Monotonic.
+pub fn grows() -> u64 {
+    GROWS.load(Ordering::Relaxed)
+}
+
+/// Bytes of new capacity acquired by grow events. Monotonic.
+pub fn grow_bytes() -> u64 {
+    GROW_BYTES.load(Ordering::Relaxed)
+}
+
+/// Check out a buffer with `len` elements. Contents are **unspecified**
+/// (stale or zero) — the caller must overwrite every element it reads.
+pub fn take_vec(len: usize) -> Vec<f64> {
+    CHECKOUTS.fetch_add(1, Ordering::Relaxed);
+    let mut v = POOL.with(|p| {
+        let mut pool = p.borrow_mut();
+        // Best fit: the smallest held buffer that satisfies the request,
+        // so small checkouts never strand a large buffer that a later
+        // large checkout would otherwise have to re-grow.
+        let fit = (0..pool.len())
+            .filter(|&i| pool[i].capacity() >= len)
+            .min_by_key(|&i| pool[i].capacity());
+        match fit {
+            Some(i) => pool.swap_remove(i),
+            None => {
+                // Nothing fits: grow the largest held buffer rather than
+                // accumulating ever more small ones.
+                match (0..pool.len()).max_by_key(|&i| pool[i].capacity()) {
+                    Some(i) => pool.swap_remove(i),
+                    None => Vec::new(),
+                }
+            }
+        }
+    });
+    if v.capacity() < len {
+        GROWS.fetch_add(1, Ordering::Relaxed);
+        GROW_BYTES.fetch_add(((len - v.capacity()) * 8) as u64, Ordering::Relaxed);
+    }
+    if v.len() < len {
+        v.resize(len, 0.0);
+    } else {
+        v.truncate(len);
+    }
+    v
+}
+
+/// Check out a buffer of `len` zeros.
+pub fn take_zeroed(len: usize) -> Vec<f64> {
+    let mut v = take_vec(len);
+    v.fill(0.0);
+    v
+}
+
+/// Return a buffer to the calling thread's pool for reuse.
+pub fn give_vec(v: Vec<f64>) {
+    if v.capacity() == 0 {
+        return;
+    }
+    POOL.with(|p| {
+        let mut pool = p.borrow_mut();
+        if pool.len() >= MAX_HELD {
+            // Displace the smallest held buffer if the newcomer is
+            // bigger; otherwise drop the newcomer.
+            if let Some(i) = (0..pool.len()).min_by_key(|&i| pool[i].capacity()) {
+                if pool[i].capacity() < v.capacity() {
+                    pool[i] = v;
+                }
+            }
+        } else {
+            pool.push(v);
+        }
+    });
+}
+
+/// Check out a `rows × cols` matrix with **unspecified contents** — the
+/// caller must write every element it reads.
+pub fn take_mat(rows: usize, cols: usize) -> Mat {
+    Mat::from_vec(rows, cols, take_vec(rows * cols))
+}
+
+/// Check out a `rows × cols` matrix of zeros.
+pub fn take_mat_zeroed(rows: usize, cols: usize) -> Mat {
+    Mat::from_vec(rows, cols, take_zeroed(rows * cols))
+}
+
+/// Return a matrix's storage to the pool.
+pub fn give_mat(m: Mat) {
+    give_vec(m.data);
+}
+
+/// A checked-out, 64-byte-aligned scratch slice; its storage returns to
+/// the pool on drop. Contents are unspecified at checkout.
+pub struct Scratch {
+    buf: Vec<f64>,
+    off: usize,
+    len: usize,
+}
+
+impl Scratch {
+    pub fn slice(&self) -> &[f64] {
+        &self.buf[self.off..self.off + self.len]
+    }
+
+    pub fn slice_mut(&mut self) -> &mut [f64] {
+        &mut self.buf[self.off..self.off + self.len]
+    }
+}
+
+impl Drop for Scratch {
+    fn drop(&mut self) {
+        give_vec(std::mem::take(&mut self.buf));
+    }
+}
+
+/// Check out `len` elements starting on a 64-byte boundary (cache-line /
+/// widest-vector alignment; the microkernels still use unaligned loads,
+/// so alignment is a cache courtesy, not a correctness requirement).
+pub fn take_aligned(len: usize) -> Scratch {
+    let buf = take_vec(len + ALIGN_ELEMS - 1);
+    let off = buf.as_ptr().align_offset(64 / std::mem::size_of::<f64>());
+    // align_offset may decline (returns usize::MAX under some const-eval
+    // contexts); fall back to an unaligned slice — always correct.
+    let off = if off < ALIGN_ELEMS { off } else { 0 };
+    Scratch { buf, off, len }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn take_give_roundtrip_reuses_capacity() {
+        // Drain influence from other tests in this binary: observe only
+        // deltas produced by this thread's own traffic.
+        let v = take_vec(4096);
+        let cap = v.capacity();
+        let ptr = v.as_ptr() as usize;
+        give_vec(v);
+        let g0 = grows();
+        let v2 = take_vec(4096);
+        assert_eq!(v2.capacity(), cap);
+        assert_eq!(v2.as_ptr() as usize, ptr, "same buffer must come back");
+        assert_eq!(grows(), g0, "a satisfiable checkout must not grow");
+        give_vec(v2);
+    }
+
+    #[test]
+    fn smaller_checkout_truncates_and_larger_zero_fills() {
+        let mut v = take_vec(64);
+        for x in v.iter_mut() {
+            *x = 7.0;
+        }
+        give_vec(v);
+        let small = take_vec(16);
+        assert_eq!(small.len(), 16);
+        give_vec(small);
+        let z = take_zeroed(32);
+        assert!(z.iter().all(|&x| x == 0.0));
+        give_vec(z);
+    }
+
+    #[test]
+    fn counters_are_monotonic() {
+        let c0 = checkouts();
+        let g0 = grow_bytes();
+        let v = take_vec(1 << 12);
+        give_vec(v);
+        assert!(checkouts() > c0);
+        assert!(grow_bytes() >= g0);
+    }
+
+    #[test]
+    fn aligned_scratch_is_aligned_and_sized() {
+        let mut s = take_aligned(37);
+        assert_eq!(s.slice().len(), 37);
+        assert_eq!(s.slice_mut().as_ptr() as usize % 64, 0);
+        s.slice_mut()[36] = 1.5;
+        assert_eq!(s.slice()[36], 1.5);
+    }
+
+    #[test]
+    fn mat_checkout_shapes() {
+        let m = take_mat_zeroed(5, 7);
+        assert_eq!((m.rows, m.cols), (5, 7));
+        assert!(m.data.iter().all(|&x| x == 0.0));
+        give_mat(m);
+        let m2 = take_mat(3, 4);
+        assert_eq!(m2.data.len(), 12);
+        give_mat(m2);
+    }
+
+    #[test]
+    fn pool_is_bounded() {
+        let held: Vec<Vec<f64>> = (0..2 * MAX_HELD).map(|i| take_vec(8 + i)).collect();
+        for v in held {
+            give_vec(v);
+        }
+        POOL.with(|p| assert!(p.borrow().len() <= MAX_HELD));
+    }
+}

@@ -12,7 +12,12 @@
 //! same accumulation sequence as the serial code. Results are therefore
 //! bit-for-bit identical at any thread count — `rust/tests/
 //! par_determinism.rs` enforces this across thread counts 1/2/4.
+//!
+//! The memory half of the plane is [`arena`]: per-thread grow-only
+//! scratch pools with a checkout/return protocol, so panel packing, gram
+//! tiles, and cascade buffers stop allocating in steady state.
 
+pub mod arena;
 pub mod pool;
 
 pub use pool::ThreadPool;
@@ -183,6 +188,8 @@ mod tests {
     }
 
     #[test]
+    // The global pool's workers outlive the test process's miri view.
+    #[cfg_attr(miri, ignore)]
     fn for_ranges_covers_everything_once() {
         let n = 1000;
         let mut hits = vec![0u8; n];

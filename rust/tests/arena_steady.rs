@@ -1,0 +1,97 @@
+//! Steady-state allocation discipline of the serving hot path.
+//!
+//! After warm-up rounds have sized the per-worker arenas, the
+//! cascade/gram pipeline must run entirely out of recycled scratch:
+//! `arena::grows()` stays flat while `arena::checkouts()` keeps rising.
+//! This is its own integration binary (own process) so no other test's
+//! allocations pollute the global counters, and it pins a single-thread
+//! pool so every checkout hits one thread-local arena deterministically.
+
+use mka_gp::data::synth::{gp_dataset, SynthSpec};
+use mka_gp::gp::mka_gp::MkaGp;
+use mka_gp::gp::GpModel;
+use mka_gp::kernels::{gram_sym_with, RbfKernel};
+use mka_gp::la::Mat;
+use mka_gp::mka::{factorize, MkaConfig};
+use mka_gp::par::arena;
+use mka_gp::util::Rng;
+
+fn randm(r: usize, c: usize, seed: u64) -> Mat {
+    let mut rng = Rng::new(seed);
+    Mat::from_fn(r, c, |_, _| rng.normal())
+}
+
+#[test]
+fn steady_state_cascade_and_gram_stop_growing_the_arena() {
+    mka_gp::par::set_threads(1);
+    let n = 260;
+    let x = randm(n, 2, 9);
+    let kern = RbfKernel::new(1.0);
+    let cfg = MkaConfig { d_core: 24, block_size: 48, n_threads: 1, ..MkaConfig::default() };
+    let k = gram_sym_with(&kern, &x, 1);
+    let f = factorize(&k, Some(&x), &cfg).unwrap().shifted(0.1);
+    arena::give_mat(k);
+
+    let round = |cols: usize| {
+        // One serving round: assemble a gram block and run a blocked
+        // cascade solve, donating every buffer we own back to the arena.
+        let g = gram_sym_with(&kern, &x, 1);
+        arena::give_mat(g);
+        let mut rhs = arena::take_mat_zeroed(n, cols);
+        for j in 0..cols {
+            rhs.set(j % n, j, 1.0);
+        }
+        let sol = f.solve_mat_par(&rhs, 1).unwrap();
+        let probe = sol.at(0, 0);
+        arena::give_mat(rhs);
+        arena::give_mat(sol);
+        probe
+    };
+
+    // Warm-up: size every buffer class the serving round checks out.
+    let p0 = round(5);
+    for _ in 0..3 {
+        round(5);
+    }
+
+    let grows_before = arena::grows();
+    let checkouts_before = arena::checkouts();
+    for _ in 0..4 {
+        // Recycled scratch must not leak state into results either.
+        assert_eq!(round(5).to_bits(), p0.to_bits());
+    }
+    assert!(
+        arena::checkouts() > checkouts_before,
+        "serving rounds must go through the arena (checkouts stuck at {checkouts_before})"
+    );
+    assert_eq!(
+        grows_before,
+        arena::grows(),
+        "steady-state serving must not grow the arena (grow_bytes now {})",
+        arena::grow_bytes()
+    );
+}
+
+#[test]
+fn predict_is_bit_stable_over_recycled_scratch() {
+    // Full predicts re-factorize the joint matrix (allocation is expected
+    // there); what the arena must guarantee is that buffer recycling
+    // never leaks stale state into results, and that the predict path
+    // actually rides the arena.
+    mka_gp::par::set_threads(1);
+    let data = gp_dataset(&SynthSpec::named("arena", 300, 2), 17);
+    let (tr, te) = data.split(0.9, 5);
+    let cfg = MkaConfig { d_core: 24, block_size: 48, n_threads: 1, ..MkaConfig::default() };
+    let model = MkaGp::fit(&tr, &RbfKernel::new(1.0), 0.1, &cfg).unwrap();
+
+    let c0 = arena::checkouts();
+    let first = model.predict(&te.x);
+    assert!(arena::checkouts() > c0, "predict must check scratch out of the arena");
+    for _ in 0..2 {
+        let p = model.predict(&te.x);
+        for i in 0..te.n() {
+            assert_eq!(p.mean[i].to_bits(), first.mean[i].to_bits());
+            assert_eq!(p.var[i].to_bits(), first.var[i].to_bits());
+        }
+    }
+}

@@ -1,0 +1,248 @@
+//! Bitwise contract of the packed/register-blocked dense microkernels.
+//!
+//! The blas rewrite vectorizes over the output column index j, so every
+//! output element keeps one serial fused multiply-add chain over the full
+//! depth k. That makes the result bit-identical across the Scalar / Avx2 /
+//! Avx512 dispatch levels AND identical to the plain `mul_add` reference
+//! chain below — which is what these tests pin, over shapes that straddle
+//! every panel/register boundary (lane−1, lane, lane+1 for both the 8- and
+//! 16-wide panels, plus 1, 3 and a deep 257).
+
+use mka_gp::la::blas::{
+    available_levels, gemm_acc, gemm_acc_level, gemm_baseline, gemm_mt, gemm_nt, gemm_nt_level,
+    gemm_tn, gemm_tn_level, simd_level, syrk_aat, syrk_aat_level, syrk_ata, syrk_ata_level,
+    SimdLevel,
+};
+use mka_gp::la::Mat;
+use mka_gp::util::Rng;
+
+fn randm(r: usize, c: usize, seed: u64) -> Mat {
+    let mut rng = Rng::new(seed);
+    Mat::from_fn(r, c, |_, _| rng.normal())
+}
+
+/// The canonical per-element chain: fold alpha into the left operand with
+/// one multiply, then one fused multiply-add per depth step, ascending k,
+/// accumulated onto the existing C entry. Every kernel path must reproduce
+/// these exact bits.
+fn ref_gemm_acc(alpha: f64, a: &Mat, b: &Mat, c: &mut Mat) {
+    if alpha == 0.0 {
+        return;
+    }
+    for i in 0..a.rows {
+        for j in 0..b.cols {
+            let mut s = 0.0f64;
+            for k in 0..a.cols {
+                let l = alpha * a.at(i, k);
+                s = l.mul_add(b.at(k, j), s);
+            }
+            let v = c.at(i, j) + s;
+            c.set(i, j, v);
+        }
+    }
+}
+
+/// Reference for Aᵀ B (left scalar is the raw A entry — no alpha fold).
+fn ref_gemm_tn(a: &Mat, b: &Mat) -> Mat {
+    let mut c = Mat::zeros(a.cols, b.cols);
+    for i in 0..a.cols {
+        for j in 0..b.cols {
+            let mut s = 0.0f64;
+            for k in 0..a.rows {
+                s = a.at(k, i).mul_add(b.at(k, j), s);
+            }
+            c.set(i, j, s);
+        }
+    }
+    c
+}
+
+/// Reference for A Bᵀ.
+fn ref_gemm_nt(a: &Mat, b: &Mat) -> Mat {
+    let mut c = Mat::zeros(a.rows, b.rows);
+    for i in 0..a.rows {
+        for j in 0..b.rows {
+            let mut s = 0.0f64;
+            for k in 0..a.cols {
+                s = a.at(i, k).mul_add(b.at(j, k), s);
+            }
+            c.set(i, j, s);
+        }
+    }
+    c
+}
+
+/// Shapes that straddle every panel boundary: 1/3 (degenerate), 7/8/9
+/// (Avx2 panel edge), 15/16/17 (Avx512 panel edge), 257 (deep/wide edge).
+const DIMS: [usize; 9] = [1, 3, 7, 8, 9, 15, 16, 17, 257];
+
+#[test]
+fn gemm_acc_bitwise_matches_reference_all_levels_all_shapes() {
+    let levels = available_levels();
+    let mut seed = 100;
+    for &m in &DIMS {
+        for &k in &DIMS {
+            for &n in &DIMS {
+                // Keep the cube affordable: skip combos with two 257 dims.
+                if [m, k, n].iter().filter(|&&d| d == 257).count() > 1 {
+                    continue;
+                }
+                seed += 1;
+                let a = randm(m, k, seed);
+                let b = randm(k, n, seed + 7000);
+                let c0 = randm(m, n, seed + 14_000);
+                let mut want = c0.clone();
+                ref_gemm_acc(1.3, &a, &b, &mut want);
+                for &level in &levels {
+                    let mut c = c0.clone();
+                    gemm_acc_level(level, 1.3, &a, &b, &mut c);
+                    assert_eq!(c.data, want.data, "{level:?} {m}x{k}x{n}");
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn alpha_zero_is_bitwise_noop_and_negative_alpha_matches() {
+    for (m, k, n) in [(4, 5, 8), (8, 8, 8), (3, 257, 9), (9, 16, 17)] {
+        let a = randm(m, k, 1);
+        let b = randm(k, n, 2);
+        let c0 = randm(m, n, 3);
+        for &level in &available_levels() {
+            let mut c = c0.clone();
+            gemm_acc_level(level, 0.0, &a, &b, &mut c);
+            assert_eq!(c.data, c0.data, "alpha=0 must not touch C ({level:?})");
+            let mut c = c0.clone();
+            let mut want = c0.clone();
+            gemm_acc_level(level, -0.7, &a, &b, &mut c);
+            ref_gemm_acc(-0.7, &a, &b, &mut want);
+            assert_eq!(c.data, want.data, "alpha=-0.7 ({level:?}) {m}x{k}x{n}");
+        }
+    }
+}
+
+#[test]
+fn repeated_accumulation_onto_same_target_matches() {
+    let a = randm(9, 17, 11);
+    let b = randm(17, 15, 12);
+    let c0 = randm(9, 15, 13);
+    let mut want = c0.clone();
+    ref_gemm_acc(0.5, &a, &b, &mut want);
+    ref_gemm_acc(0.5, &a, &b, &mut want);
+    for &level in &available_levels() {
+        let mut c = c0.clone();
+        gemm_acc_level(level, 0.5, &a, &b, &mut c);
+        gemm_acc_level(level, 0.5, &a, &b, &mut c);
+        assert_eq!(c.data, want.data, "double accumulate ({level:?})");
+    }
+}
+
+#[test]
+fn shared_operand_gemm_is_supported() {
+    // A used as both operands (aliased reads are fine; only C is written).
+    let a = randm(17, 17, 21);
+    let mut want = Mat::zeros(17, 17);
+    ref_gemm_acc(1.0, &a, &a, &mut want);
+    let mut c = Mat::zeros(17, 17);
+    gemm_acc(1.0, &a, &a, &mut c);
+    assert_eq!(c.data, want.data);
+}
+
+#[test]
+fn tn_nt_bitwise_match_reference_across_levels() {
+    for (r, c1, c2) in [(7, 9, 17), (16, 8, 15), (257, 9, 8), (3, 1, 1)] {
+        let a = randm(r, c1, 31);
+        let b = randm(r, c2, 32);
+        let want_tn = ref_gemm_tn(&a, &b);
+        let at = randm(c1, r, 33);
+        let bt = randm(c2, r, 34);
+        let want_nt = ref_gemm_nt(&at, &bt);
+        for &level in &available_levels() {
+            assert_eq!(gemm_tn_level(level, &a, &b).data, want_tn.data, "tn {level:?}");
+            assert_eq!(gemm_nt_level(level, &at, &bt).data, want_nt.data, "nt {level:?}");
+        }
+    }
+}
+
+#[test]
+fn syrk_bitwise_equals_its_gemm_twin_across_levels() {
+    for (r, c) in [(9, 17), (17, 9), (16, 16), (257, 7)] {
+        let a = randm(r, c, 41);
+        for &level in &available_levels() {
+            let ata = syrk_ata_level(level, &a);
+            assert_eq!(ata.data, gemm_tn_level(level, &a, &a).data, "ata {level:?}");
+            let aat = syrk_aat_level(level, &a);
+            assert_eq!(aat.data, gemm_nt_level(level, &a, &a).data, "aat {level:?}");
+        }
+    }
+}
+
+#[test]
+fn threads_and_dispatch_agree_with_reference() {
+    // Big enough to clear the banding threshold; odd on every edge.
+    let a = randm(131, 97, 51);
+    let b = randm(97, 139, 52);
+    let mut want = Mat::zeros(131, 139);
+    ref_gemm_acc(1.0, &a, &b, &mut want);
+    for t in [1, 2, 4] {
+        assert_eq!(gemm_mt(&a, &b, t).data, want.data, "threads={t}");
+    }
+    // The ambient entry points resolve to some available level and still
+    // produce the reference bits.
+    assert!(available_levels().contains(&simd_level()));
+    assert_eq!(gemm_tn(&a, &b).data, ref_gemm_tn(&a, &b).data);
+    let bt = randm(139, 97, 53);
+    assert_eq!(gemm_nt(&a, &bt).data, ref_gemm_nt(&a, &bt).data);
+    assert_eq!(syrk_ata(&a).data, gemm_tn(&a, &a).data);
+    assert_eq!(syrk_aat(&a).data, gemm_nt(&a, &a).data);
+}
+
+#[test]
+fn zero_rows_are_skipped_without_touching_output() {
+    // Whole-panel zero skip: rows of A that are entirely zero leave their
+    // C rows bitwise untouched even under accumulate with alpha != 1.
+    let mut a = randm(12, 33, 61);
+    for i in [0, 5, 11] {
+        for v in a.row_mut(i) {
+            *v = 0.0;
+        }
+    }
+    let b = randm(33, 19, 62);
+    let c0 = randm(12, 19, 63);
+    let mut want = c0.clone();
+    ref_gemm_acc(2.5, &a, &b, &mut want);
+    for &level in &available_levels() {
+        let mut c = c0.clone();
+        gemm_acc_level(level, 2.5, &a, &b, &mut c);
+        assert_eq!(c.data, want.data, "{level:?}");
+        for i in [0usize, 5, 11] {
+            assert_eq!(c.row(i), c0.row(i), "zero row {i} must be untouched");
+        }
+    }
+}
+
+#[test]
+fn scalar_level_is_always_available_and_forced_scalar_respects_env() {
+    let levels = available_levels();
+    assert!(levels.contains(&SimdLevel::Scalar));
+    // When CI forces the scalar fallback, the ambient dispatch must obey.
+    if std::env::var("MKA_FORCE_SCALAR").map(|v| !v.is_empty() && v != "0").unwrap_or(false) {
+        assert_eq!(simd_level(), SimdLevel::Scalar);
+    }
+}
+
+#[test]
+fn baseline_kernel_still_matches_new_kernels_numerically() {
+    // The retained pre-rewrite kernel (bench yardstick) differs in
+    // summation order, so compare with a tolerance, not bits.
+    let a = randm(64, 48, 71);
+    let b = randm(48, 72, 72);
+    let new = gemm_mt(&a, &b, 1);
+    let old = gemm_baseline(&a, &b);
+    let mut worst = 0.0f64;
+    for (x, y) in new.data.iter().zip(&old.data) {
+        worst = worst.max((x - y).abs());
+    }
+    assert!(worst < 1e-10, "baseline drift {worst}");
+}

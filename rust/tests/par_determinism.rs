@@ -59,6 +59,42 @@ fn gemm_family_bit_identical_across_thread_counts() {
 }
 
 #[test]
+fn gemm_family_bit_identical_across_simd_levels_and_threads() {
+    // The dispatch tier is the second wall-clock-only knob next to the
+    // thread count: every available level, crossed with every thread
+    // count, must reproduce the scalar serial bits exactly (j-lane
+    // vectorization keeps one serial fma chain per output element).
+    use mka_gp::la::blas::{
+        available_levels, gemm_acc_level, gemm_nt_level, gemm_tn_level, syrk_aat_level,
+        syrk_ata_level, SimdLevel,
+    };
+    let a = randm(180, 150, 61);
+    let b = randm(150, 160, 62);
+    let a_sq = randm(170, 180, 63);
+    let mut c_base = Mat::zeros(180, 160);
+    gemm_acc_level(SimdLevel::Scalar, 1.0, &a, &b, &mut c_base);
+    let tn = gemm_tn_level(SimdLevel::Scalar, &a_sq, &a_sq);
+    let nt = gemm_nt_level(SimdLevel::Scalar, &a, &a);
+    let ata = syrk_ata_level(SimdLevel::Scalar, &a_sq);
+    let aat = syrk_aat_level(SimdLevel::Scalar, &a_sq);
+    for &level in &available_levels() {
+        let mut c = Mat::zeros(180, 160);
+        gemm_acc_level(level, 1.0, &a, &b, &mut c);
+        assert_eq!(c_base.data, c.data, "gemm_acc {level:?}");
+        assert_eq!(tn.data, gemm_tn_level(level, &a_sq, &a_sq).data, "tn {level:?}");
+        assert_eq!(nt.data, gemm_nt_level(level, &a, &a).data, "nt {level:?}");
+        assert_eq!(ata.data, syrk_ata_level(level, &a_sq).data, "ata {level:?}");
+        assert_eq!(aat.data, syrk_aat_level(level, &a_sq).data, "aat {level:?}");
+    }
+    // Threaded entry points dispatch at the ambient level; their bits must
+    // sit in the same equivalence class.
+    for t in [1, 2, 4] {
+        assert_eq!(c_base.data, gemm_mt(&a, &b, t).data, "gemm level x t={t}");
+        assert_eq!(ata.data, syrk_ata_mt(&a_sq, t).data, "ata level x t={t}");
+    }
+}
+
+#[test]
 fn gram_assembly_bit_identical_across_thread_counts() {
     let x = randm(200, 3, 6);
     let y = randm(170, 3, 7);
