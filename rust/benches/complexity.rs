@@ -238,6 +238,7 @@ fn run_json_bench(args: &Args) {
             }
             lat.sort_by(|a, b| a.total_cmp(b));
             let predict_p50 = mka_gp::la::stats::quantile_sorted(&lat, 0.5);
+            let predict_p95 = mka_gp::la::stats::quantile_sorted(&lat, 0.95);
             let predict_p99 = mka_gp::la::stats::quantile_sorted(&lat, 0.99);
 
             let (f0, s0, p0) = *base.get_or_insert((fact_s, solve_s, predict_p50));
@@ -249,6 +250,7 @@ fn run_json_bench(args: &Args) {
                 .with("solve_mat_s", Json::Num(solve_s))
                 .with("predict_s", Json::Num(predict_s))
                 .with("predict_p50_s", Json::Num(predict_p50))
+                .with("predict_p95_s", Json::Num(predict_p95))
                 .with("predict_p99_s", Json::Num(predict_p99))
                 .with("factorize_speedup", Json::Num(f0 / fact_s.max(1e-12)))
                 .with("solve_speedup", Json::Num(s0 / solve_s.max(1e-12)))

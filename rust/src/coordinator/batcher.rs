@@ -20,11 +20,18 @@ use super::metrics::Metrics;
 use crate::error::{Error, Result};
 use crate::gp::Prediction;
 use crate::la::dense::Mat;
+use crate::obs;
 
 struct Pending {
     model: String,
     x: Mat,
     resp: mpsc::Sender<Result<Prediction>>,
+    /// Span context of the submitting request (inactive when untraced):
+    /// the flusher thread re-enters it so the batched predict's spans
+    /// parent back to the request that crossed the batching boundary.
+    ctx: obs::SpanCtx,
+    /// When the request entered the queue (set only when traced).
+    enqueued: Option<std::time::Instant>,
 }
 
 #[derive(Default)]
@@ -70,13 +77,21 @@ impl PredictBatcher {
             let _ = tx.send(Err(Error::Coordinator("batcher shut down".into())));
         } else if q.items.len() >= self.queue_max {
             self.metrics.incr("predict_rejected", 1);
+            obs::log!(
+                Warn,
+                "coordinator.batcher",
+                { "pending" => q.items.len(), "bound" => self.queue_max, "model" => model },
+                "predict queue full; rejecting with busy"
+            );
             let _ = tx.send(Err(Error::Busy(format!(
                 "predict queue full ({} pending, bound {}); retry later",
                 q.items.len(),
                 self.queue_max
             ))));
         } else {
-            q.items.push(Pending { model: model.to_string(), x, resp: tx });
+            let ctx = obs::current_ctx();
+            let enqueued = ctx.is_active().then(std::time::Instant::now);
+            q.items.push(Pending { model: model.to_string(), x, resp: tx, ctx, enqueued });
             cv.notify_one();
         }
         rx
@@ -182,7 +197,18 @@ fn flusher(
                 xall.set_block(off, 0, &p.x);
                 off += p.x.rows;
             }
-            let pred = metrics.time("predict_secs", || model.predict(&xall));
+            // Parent the batched predict back to the first traced
+            // submitter in the group (a batch may carry several traces;
+            // the earliest wins). The guard must drop before the
+            // responses go out: a reply releases the submitter, which
+            // may finish its trace while a late span push would be lost.
+            let pred = {
+                let _obs = ok
+                    .iter()
+                    .find(|p| p.ctx.is_active())
+                    .map(|p| obs::enter_job(&p.ctx, "batch.predict", p.enqueued));
+                metrics.time("predict_secs", || model.predict(&xall))
+            };
             metrics.incr("predictions", total as u64);
             let mut off = 0;
             for p in ok {

@@ -52,6 +52,16 @@ pub struct ServiceConfig {
     /// Clustering method for the shard partition
     /// (`kmeans` | `bisect` | `affinity`).
     pub shard_assign: String,
+    /// Stream every finished trace to this file in Chrome trace-event
+    /// JSON (load in `chrome://tracing` / `ui.perfetto.dev`). Setting it
+    /// also turns on tracing for every request, opt-out per request with
+    /// `"trace": false`. None = per-request opt-in only.
+    pub trace_out: Option<PathBuf>,
+    /// How many finished traces the in-memory ring keeps for the `trace`
+    /// op.
+    pub trace_ring: usize,
+    /// How many structured events the log ring keeps for the `logs` op.
+    pub log_ring: usize,
 }
 
 impl Default for ServiceConfig {
@@ -76,6 +86,9 @@ impl Default for ServiceConfig {
             train_cache_factors: 4,
             default_shards: 1,
             shard_assign: "kmeans".into(),
+            trace_out: None,
+            trace_ring: 32,
+            log_ring: 256,
         }
     }
 }
@@ -107,6 +120,12 @@ impl ServiceConfig {
                 "train_cache_factors" => self.train_cache_factors = parse(k, v)?,
                 "default_shards" | "shards" => self.default_shards = parse(k, v)?,
                 "shard_assign" => self.shard_assign = v.clone(),
+                "trace_out" | "trace-out" => {
+                    self.trace_out =
+                        if v.is_empty() || v == "none" { None } else { Some(PathBuf::from(v)) }
+                }
+                "trace_ring" => self.trace_ring = parse(k, v)?,
+                "log_ring" => self.log_ring = parse(k, v)?,
                 _ => {} // unknown keys ignored (forward compatible)
             }
         }
@@ -166,6 +185,9 @@ impl ServiceConfig {
                 self.shard_assign
             )));
         }
+        if self.trace_ring == 0 || self.log_ring == 0 {
+            return Err(Error::Config("trace_ring and log_ring must be >= 1".into()));
+        }
         Ok(())
     }
 
@@ -214,6 +236,15 @@ impl ServiceConfig {
             .with("batch_queue_max", Json::Num(self.batch_queue_max as f64))
             .with("default_shards", Json::Num(self.default_shards as f64))
             .with("shard_assign", Json::Str(self.shard_assign.clone()))
+            .with(
+                "trace_out",
+                match &self.trace_out {
+                    Some(p) => Json::Str(p.display().to_string()),
+                    None => Json::Null,
+                },
+            )
+            .with("trace_ring", Json::Num(self.trace_ring as f64))
+            .with("log_ring", Json::Num(self.log_ring as f64))
     }
 }
 
@@ -241,8 +272,16 @@ mod tests {
         kv.insert("train_starts".to_string(), "2".to_string());
         kv.insert("train_cache_factors".to_string(), "8".to_string());
         kv.insert("batch_queue_max".to_string(), "16".to_string());
+        kv.insert("trace-out".to_string(), "/tmp/trace.json".to_string());
+        kv.insert("trace_ring".to_string(), "8".to_string());
         kv.insert("unknown_key".to_string(), "ignored".to_string());
         c.apply(&kv).unwrap();
+        assert_eq!(c.trace_out, Some(PathBuf::from("/tmp/trace.json")));
+        assert_eq!(c.trace_ring, 8);
+        let mut kvt = BTreeMap::new();
+        kvt.insert("trace_out".to_string(), "none".to_string());
+        c.apply(&kvt).unwrap();
+        assert_eq!(c.trace_out, None);
         assert_eq!(c.port, 9999);
         assert_eq!(c.gamma, 0.7);
         assert_eq!(c.train_max_evals, 25);

@@ -2,7 +2,6 @@
 //! exported as JSON through the `metrics` protocol op.
 
 use std::collections::BTreeMap;
-use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 
 use crate::la::stats::quantile_sorted;
@@ -11,7 +10,9 @@ use crate::util::json::Json;
 /// Registry of counters and histograms. Cheap to share behind an `Arc`.
 #[derive(Default)]
 pub struct Metrics {
-    counters: Mutex<BTreeMap<String, AtomicU64>>,
+    // Plain u64 under the map's own Mutex: every access already takes the
+    // lock, so per-entry atomics bought nothing but indirection.
+    counters: Mutex<BTreeMap<String, u64>>,
     histograms: Mutex<BTreeMap<String, Vec<f64>>>,
 }
 
@@ -23,13 +24,18 @@ impl Metrics {
     /// Increment a counter by `delta`.
     pub fn incr(&self, name: &str, delta: u64) {
         let mut c = self.counters.lock().unwrap();
-        c.entry(name.to_string())
-            .or_insert_with(|| AtomicU64::new(0))
-            .fetch_add(delta, Ordering::Relaxed);
+        *c.entry(name.to_string()).or_insert(0) += delta;
     }
 
-    /// Record one observation (e.g. latency seconds).
+    /// Record one observation (e.g. latency seconds). Non-finite values
+    /// are never admitted to a histogram — they would poison every
+    /// quantile downstream — and are flagged on the
+    /// `observations_non_finite` counter instead.
     pub fn observe(&self, name: &str, value: f64) {
+        if !value.is_finite() {
+            self.incr("observations_non_finite", 1);
+            return;
+        }
         let mut h = self.histograms.lock().unwrap();
         let v = h.entry(name.to_string()).or_default();
         // Bound memory: keep a sliding window of the most recent 10k.
@@ -48,20 +54,15 @@ impl Metrics {
     }
 
     pub fn counter(&self, name: &str) -> u64 {
-        self.counters
-            .lock()
-            .unwrap()
-            .get(name)
-            .map(|c| c.load(Ordering::Relaxed))
-            .unwrap_or(0)
+        self.counters.lock().unwrap().get(name).copied().unwrap_or(0)
     }
 
     /// Snapshot everything as JSON: counters verbatim, histograms as
     /// {count, mean, p50, p95, p99, max}.
     pub fn snapshot(&self) -> Json {
         let mut counters = Json::obj();
-        for (k, v) in self.counters.lock().unwrap().iter() {
-            counters.set(k, Json::Num(v.load(Ordering::Relaxed) as f64));
+        for (k, &v) in self.counters.lock().unwrap().iter() {
+            counters.set(k, Json::Num(v as f64));
         }
         let mut hists = Json::obj();
         for (k, v) in self.histograms.lock().unwrap().iter() {
@@ -69,7 +70,9 @@ impl Metrics {
                 continue;
             }
             let mut sorted = v.clone();
-            sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            // total_cmp: snapshot must never panic, whatever was observed
+            // (observe() filters non-finite, but stay panic-free anyway).
+            sorted.sort_by(f64::total_cmp);
             let mean = sorted.iter().sum::<f64>() / sorted.len() as f64;
             hists.set(
                 k,
@@ -120,6 +123,25 @@ mod tests {
         assert_eq!(out, 7);
         let snap = m.snapshot();
         assert!(snap.get("histograms").unwrap().get("op").is_some());
+    }
+
+    /// NaN/±∞ observations must neither crash `snapshot` (the old
+    /// `partial_cmp().unwrap()` sort panicked on NaN) nor skew quantiles:
+    /// they are dropped at `observe` and tallied on a counter.
+    #[test]
+    fn non_finite_observations_are_flagged_not_recorded() {
+        let m = Metrics::new();
+        m.observe("lat", 1.0);
+        m.observe("lat", f64::NAN);
+        m.observe("lat", f64::INFINITY);
+        m.observe("lat", f64::NEG_INFINITY);
+        m.observe("lat", 3.0);
+        let snap = m.snapshot(); // must not panic
+        let lat = snap.get("histograms").unwrap().get("lat").unwrap();
+        assert_eq!(lat.num_field("count"), Some(2.0));
+        assert_eq!(lat.num_field("max"), Some(3.0));
+        assert!(lat.num_field("p99").unwrap().is_finite());
+        assert_eq!(m.counter("observations_non_finite"), 3);
     }
 
     #[test]

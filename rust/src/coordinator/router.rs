@@ -28,6 +28,17 @@
 //!                                      job, no refactorization)
 //!   {"op": "models"} | {"op": "drop_model", "model": "m1"}
 //!   {"op": "metrics"} | {"op": "config"}
+//!   {"op": "trace", "tail": 8}       — last-N finished request traces
+//!                                      from the bounded ring; any request
+//!                                      with `"trace": true` echoes its
+//!                                      own span tree inline
+//!   {"op": "logs", "level": "warn", "tail": 50}
+//!                                    — structured event log (bounded ring)
+//!   {"op": "diagnose", "model": "m1"}
+//!                                    — numerical health from held factor
+//!                                      state (per-stage compression,
+//!                                      shifted-spectrum condition, route
+//!                                      shares); never refactorizes
 
 use std::sync::Arc;
 use std::time::Duration;
@@ -68,6 +79,9 @@ pub const OPS: &[&str] = &[
     "drop_model",
     "metrics",
     "config",
+    "trace",
+    "logs",
+    "diagnose",
 ];
 
 /// Shared coordinator state + dispatch.
@@ -88,6 +102,22 @@ impl Router {
         // Size the per-training-run factor cache (σ²-independent factor
         // builds memoized per length scale).
         crate::train::cache::set_default_capacity(config.train_cache_factors);
+        // Observability plane: ring capacities, and the Chrome trace-event
+        // sink (which implies trace-all — a sink with nothing flowing into
+        // it would be a confusing no-op).
+        crate::obs::set_trace_capacity(config.trace_ring);
+        crate::obs::set_log_capacity(config.log_ring);
+        if let Some(path) = &config.trace_out {
+            match crate::obs::set_trace_out(path) {
+                Ok(()) => crate::obs::set_trace_all(true),
+                Err(e) => crate::obs::log!(
+                    Warn,
+                    "coordinator.router",
+                    { "path" => path.display() },
+                    "cannot open trace-out sink: {e}"
+                ),
+            }
+        }
         let metrics = Arc::new(Metrics::new());
         let registry = ModelRegistry::new();
         let batcher = PredictBatcher::start(
@@ -106,6 +136,14 @@ impl Router {
     pub fn handle(&self, req: &Json) -> Json {
         self.metrics.incr("requests", 1);
         let op = req.str_field("op").unwrap_or("");
+        // Request-scoped tracing: `"trace": true` on any request (or the
+        // global trace-all switch from `--trace-out`, opt-out with
+        // `"trace": false`). The ring-reading introspection ops never
+        // trace themselves — inspecting the ring must not grow it.
+        let introspective = matches!(op, "trace" | "logs");
+        let want_trace = !introspective
+            && req.get("trace").and_then(|v| v.as_bool()).unwrap_or_else(crate::obs::trace_all);
+        let trace_guard = want_trace.then(|| crate::obs::start_request(&format!("op.{op}")));
         // Per-op latency histograms for the serving verbs (successful
         // requests only — validation failures would drag p50 toward 0).
         let timed = matches!(op, "fit" | "train" | "predict" | "retune");
@@ -218,12 +256,22 @@ impl Router {
                 Ok(snap)
             }
             "config" => Ok(self.config.to_json()),
+            "trace" => self.handle_trace(req),
+            "logs" => self.handle_logs(req),
+            "diagnose" => self.handle_diagnose(req),
             other => Err(Error::Protocol(format!("unknown op {other:?} (supported: {OPS:?})"))),
         };
         match out {
             Ok(mut j) => {
                 if timed {
                     self.metrics.observe(&format!("op.{op}_secs"), op_timer.elapsed_secs());
+                }
+                // Echo the finished span tree on a traced request. (On the
+                // error path below the guard just drops: the trace still
+                // lands on the ring and the Chrome sink for the `trace`
+                // op, it is not echoed.)
+                if let Some(g) = trace_guard {
+                    j.set("trace", crate::obs::trace_tree_json(&g.finish()));
                 }
                 j.set("ok", Json::Bool(true));
                 j
@@ -518,6 +566,64 @@ impl Router {
         Ok(Json::obj()
             .with("model", Json::Str(name.to_string()))
             .with("sigma2", Json::Num(sigma2)))
+    }
+
+    /// Last-N finished request traces (newest last) from the bounded ring.
+    fn handle_trace(&self, req: &Json) -> Result<Json> {
+        let tail = match req.get("tail") {
+            Some(v) => v.as_usize().ok_or_else(|| {
+                Error::Protocol("trace: tail must be a non-negative integer".into())
+            })?,
+            None => 8,
+        };
+        let traces: Vec<Json> =
+            crate::obs::recent_traces(tail).iter().map(|t| crate::obs::trace_tree_json(t)).collect();
+        Ok(Json::obj()
+            .with("traces", Json::Arr(traces))
+            .with("ring_capacity", Json::Num(crate::obs::trace_capacity() as f64)))
+    }
+
+    /// Tail of the structured event log at (or above) a severity level.
+    fn handle_logs(&self, req: &Json) -> Result<Json> {
+        let min = match req.str_field("level") {
+            Some(s) => crate::obs::Level::parse(s).ok_or_else(|| {
+                Error::Protocol(format!("logs: unknown level {s:?} (debug | info | warn | error)"))
+            })?,
+            None => crate::obs::Level::Debug,
+        };
+        let tail = match req.get("tail") {
+            Some(v) => v.as_usize().ok_or_else(|| {
+                Error::Protocol("logs: tail must be a non-negative integer".into())
+            })?,
+            None => 50,
+        };
+        let events: Vec<Json> =
+            crate::obs::recent_events(min, tail).iter().map(crate::obs::event_json).collect();
+        Ok(Json::obj()
+            .with("events", Json::Arr(events))
+            .with("level", Json::Str(min.as_str().into()))
+            .with("ring_capacity", Json::Num(crate::obs::log_capacity() as f64)))
+    }
+
+    /// Numerical-health report for a registry model, strictly from state
+    /// the model already holds ([`crate::gp::GpModel::diagnose`] —
+    /// guaranteed to never fit or refactorize anything).
+    fn handle_diagnose(&self, req: &Json) -> Result<Json> {
+        let name = req
+            .str_field("model")
+            .ok_or_else(|| Error::Protocol("diagnose: missing model".into()))?;
+        let model = self
+            .registry
+            .get(name)
+            .ok_or_else(|| Error::Coordinator(format!("no model {name}")))?;
+        let diag = model.diagnose().ok_or_else(|| {
+            Error::Protocol(format!(
+                "diagnose: model {name:?} ({}) reports no diagnostics; \
+                 MKA and sharded-MKA models do",
+                model.name()
+            ))
+        })?;
+        Ok(Json::obj().with("model", Json::Str(name.to_string())).with("diagnose", diag))
     }
 }
 
@@ -930,6 +1036,112 @@ mod tests {
         assert!(!sf.as_arr().unwrap().is_empty());
         let model = r.registry.get("mst").expect("fleet published");
         assert!(model.info().shards >= 2);
+    }
+
+    /// Tracing is strictly observational: a traced predict answers with
+    /// bit-identical values plus a span tree whose root is the op and
+    /// whose descendants reach the routed shard predicts; the `trace` op
+    /// replays the same tree from the ring afterwards.
+    #[test]
+    fn traced_predict_echoes_span_tree_without_changing_bits() {
+        let r = router();
+        let mut req = fit_req("mtr", "mka", 90, false);
+        req.set("shards", Json::Num(3.0));
+        assert_eq!(r.handle(&req).get("ok"), Some(&Json::Bool(true)));
+        let pred = |traced: bool| {
+            let mut p = Json::obj()
+                .with("op", Json::Str("predict".into()))
+                .with("model", Json::Str("mtr".into()))
+                .with(
+                    "x",
+                    Json::Arr(vec![
+                        Json::from_f64_slice(&[0.2, -0.1]),
+                        Json::from_f64_slice(&[-0.4, 0.3]),
+                    ]),
+                );
+            if traced {
+                p.set("trace", Json::Bool(true));
+            }
+            r.handle(&p)
+        };
+        let plain = pred(false);
+        let traced = pred(true);
+        assert_eq!(plain.get("ok"), Some(&Json::Bool(true)), "{plain:?}");
+        assert!(plain.get("trace").is_none(), "untraced predicts carry no tree");
+        // Identical values traced vs untraced.
+        assert_eq!(plain.get("mean"), traced.get("mean"));
+        assert_eq!(plain.get("var"), traced.get("var"));
+        // Span tree: root op.predict with descendants down to the shards.
+        let tree = traced.get("trace").expect("span tree echoed");
+        assert!(tree.num_field("total_us").is_some());
+        let root = tree.get("root").unwrap();
+        assert_eq!(root.str_field("name"), Some("op.predict"));
+        fn names(n: &Json, out: &mut Vec<String>) {
+            out.push(n.str_field("name").unwrap_or("").to_string());
+            if let Some(Json::Arr(ch)) = n.get("children") {
+                for c in ch {
+                    names(c, out);
+                }
+            }
+        }
+        let mut all = Vec::new();
+        names(root, &mut all);
+        assert!(all.iter().any(|n| n.starts_with("sharded.predict")), "{all:?}");
+        assert!(all.iter().any(|n| n.starts_with("shard ")), "{all:?}");
+        // The trace op replays it from the ring.
+        let out = r.handle(&Json::parse(r#"{"op":"trace","tail":4}"#).unwrap());
+        assert_eq!(out.get("ok"), Some(&Json::Bool(true)));
+        let traces = out.get("traces").unwrap().as_arr().unwrap();
+        assert!(traces
+            .iter()
+            .any(|t| t.get("root").and_then(|n| n.str_field("name")) == Some("op.predict")));
+    }
+
+    /// The three introspection ops: `diagnose` reports held factor state
+    /// (never refactorizing), `logs` filters by level with typed errors
+    /// for unknown levels, and malformed `trace` tails are rejected.
+    #[test]
+    fn trace_logs_and_diagnose_ops() {
+        let r = router();
+        assert_eq!(r.handle(&fit_req("md", "mka", 70, false)).get("ok"), Some(&Json::Bool(true)));
+        let d = r.handle(&Json::parse(r#"{"op":"diagnose","model":"md"}"#).unwrap());
+        assert_eq!(d.get("ok"), Some(&Json::Bool(true)), "{d:?}");
+        assert_eq!(d.get("diagnose").unwrap().str_field("kind"), Some("mka"));
+        // Sharded fit forces every shard factor: full spectrum health,
+        // and diagnosing must not add a single factorization.
+        let mut req = fit_req("mds", "mka", 90, false);
+        req.set("shards", Json::Num(3.0));
+        assert_eq!(r.handle(&req).get("ok"), Some(&Json::Bool(true)));
+        let before = crate::mka::factorize_count();
+        let d = r.handle(&Json::parse(r#"{"op":"diagnose","model":"mds"}"#).unwrap());
+        assert_eq!(crate::mka::factorize_count(), before, "diagnose must not refactorize");
+        let diag = d.get("diagnose").unwrap();
+        assert_eq!(diag.str_field("kind"), Some("sharded"));
+        let shards = diag.get("shards").unwrap().as_arr().unwrap();
+        assert!(shards.len() >= 2);
+        let factor = shards[0].get("model").unwrap().get("factor").unwrap();
+        assert!(factor.num_field("condition").unwrap() >= 1.0);
+        assert!(factor.num_field("overall_compression").unwrap() > 0.0);
+        // Models without diagnostics, unknown models, missing fields.
+        assert_eq!(r.handle(&fit_req("mf", "full", 60, false)).get("ok"), Some(&Json::Bool(true)));
+        for bad in [
+            r#"{"op":"diagnose","model":"mf"}"#,
+            r#"{"op":"diagnose","model":"ghost"}"#,
+            r#"{"op":"diagnose"}"#,
+            r#"{"op":"logs","level":"loud"}"#,
+            r#"{"op":"trace","tail":"many"}"#,
+        ] {
+            assert_eq!(
+                r.handle(&Json::parse(bad).unwrap()).get("ok"),
+                Some(&Json::Bool(false)),
+                "{bad}"
+            );
+        }
+        let logs = r.handle(&Json::parse(r#"{"op":"logs","level":"warn","tail":10}"#).unwrap());
+        assert_eq!(logs.get("ok"), Some(&Json::Bool(true)));
+        assert_eq!(logs.str_field("level"), Some("warn"));
+        assert!(logs.get("events").unwrap().as_arr().is_some());
+        assert!(logs.num_field("ring_capacity").unwrap() >= 1.0);
     }
 
     #[test]

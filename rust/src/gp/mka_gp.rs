@@ -27,7 +27,8 @@
 //! [`MkaGp::set_noise`] re-tunes a fitted model — `log_marginal` at the
 //! new σ² is pure spectrum arithmetic — without any refactorization.
 
-use std::sync::OnceLock;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, OnceLock};
 
 use super::{GpModel, ModelInfo, Prediction};
 use crate::data::dataset::Dataset;
@@ -38,7 +39,9 @@ use crate::la::blas::dot;
 use crate::la::dense::Mat;
 use crate::la::lu::Lu;
 use crate::mka::{factorize, MkaConfig, MkaFactor};
+use crate::obs;
 use crate::par::arena;
+use crate::util::json::Json;
 
 /// MKA-based GP regressor (transductive: the joint factorization is built
 /// per prediction batch over the train/test kernel; the train-only factor
@@ -54,6 +57,11 @@ pub struct MkaGp {
     /// this. A failure is stored as its message so it is sticky (the
     /// factorization is deterministic — retrying cannot succeed).
     train_factor: OnceLock<std::result::Result<MkaFactor, String>>,
+    /// How many predictive variances the σ² floor has clamped over this
+    /// model's lifetime (shared across [`MkaGp::retuned`] copies so the
+    /// `diagnose` op sees one counter per logical model). Observational
+    /// only — never read on the value path.
+    floor_hits: Arc<AtomicU64>,
 }
 
 impl MkaGp {
@@ -76,6 +84,7 @@ impl MkaGp {
             config: config.clone(),
             gram: None,
             train_factor: OnceLock::new(),
+            floor_hits: Arc::new(AtomicU64::new(0)),
         })
     }
 
@@ -134,6 +143,7 @@ impl MkaGp {
             config: self.config.clone(),
             gram: self.gram.clone(),
             train_factor: OnceLock::new(),
+            floor_hits: Arc::clone(&self.floor_hits),
         };
         if let Some(slot) = self.train_factor.get() {
             let _ = m.train_factor.set(slot.clone());
@@ -148,6 +158,7 @@ impl MkaGp {
     pub fn factorize_joint(&self, x_test: &Mat) -> Result<(MkaFactor, Mat)> {
         let n = self.train.n();
         let p = x_test.rows;
+        let _sp = obs::span!("gp.factorize_joint n={n} p={p}");
         // Assemble the joint point set and kernel. The joint coordinates
         // come from the worker arena: the two set_blocks cover every row.
         let mut xj = arena::take_mat(n + p, self.train.x.cols);
@@ -204,10 +215,17 @@ impl GpModel for MkaGp {
     fn predict(&self, x_test: &Mat) -> Prediction {
         let n = self.train.n();
         let p = x_test.rows;
+        let _sp = obs::span!("gp.predict n={n} p={p}");
         let (f, kstar) = match self.factorize_joint(x_test) {
             Ok(v) => v,
-            Err(_) => {
+            Err(e) => {
                 // Degenerate fallback: predict the prior.
+                obs::log!(
+                    Warn,
+                    "gp.mka",
+                    { "n" => n, "p" => p },
+                    "joint factorization failed, serving the prior: {e}"
+                );
                 return Prediction {
                     mean: vec![0.0; p],
                     var: vec![1.0 + self.sigma2; p],
@@ -236,10 +254,19 @@ impl GpModel for MkaGp {
         for j in 0..p {
             rhs.set(n + j, j + 1, 1.0);
         }
-        let sol = match f.solve_mat_par(&rhs, self.config.n_threads) {
-            Ok(s) => s,
-            Err(_) => {
-                return Prediction { mean: vec![0.0; p], var: vec![1.0 + self.sigma2; p] };
+        let sol = {
+            let _sp = obs::span!("gp.solve rhs={}x{}", n + p, p + 1);
+            match f.solve_mat_par(&rhs, self.config.n_threads) {
+                Ok(s) => s,
+                Err(e) => {
+                    obs::log!(
+                        Warn,
+                        "gp.mka",
+                        { "n" => n, "p" => p },
+                        "cascade solve failed, serving the prior: {e}"
+                    );
+                    return Prediction { mean: vec![0.0; p], var: vec![1.0 + self.sigma2; p] };
+                }
             }
         };
         arena::give_mat(rhs);
@@ -256,9 +283,15 @@ impl GpModel for MkaGp {
 
         let lu = match Lu::new(&d_block) {
             Ok(lu) => lu,
-            Err(_) => {
+            Err(e) => {
                 // D numerically singular — fall back to the naive
                 // (inconsistent) estimator f̂ = K_*ᵀ [𝒦̃⁻¹(y;0)]_train.
+                obs::log!(
+                    Warn,
+                    "gp.mka",
+                    { "n" => n, "p" => p },
+                    "D block singular, naive-estimator fallback: {e}"
+                );
                 let ay: Vec<f64> = (0..n).map(|i| sol.at(i, 0)).collect();
                 let mean = (0..p).map(|j| dot(&kstar.col(j), &ay)).collect();
                 return Prediction { mean, var: vec![1.0 + self.sigma2; p] };
@@ -279,6 +312,10 @@ impl GpModel for MkaGp {
         // noise variance itself is the tight floor against LU roundoff —
         // predictive variance can never undercut the observation noise.
         let dinv = lu.inverse();
+        let clamped = (0..p).filter(|&j| dinv.at(j, j) < self.sigma2).count();
+        if clamped > 0 {
+            self.floor_hits.fetch_add(clamped as u64, Ordering::Relaxed);
+        }
         let var: Vec<f64> =
             (0..p).map(|j| dinv.at(j, j).max(self.sigma2)).collect();
 
@@ -302,6 +339,30 @@ impl GpModel for MkaGp {
             shards: 1,
             shard_sizes: Vec::new(),
         }
+    }
+
+    fn diagnose(&self) -> Option<Json> {
+        // Strictly from held state: `.get()` never forces the lazy train
+        // factorization (forcing would bump `mka::factorize_count` behind
+        // the caller's back — diagnostics must not change what work ran).
+        let factor = match self.train_factor.get() {
+            Some(Ok(f)) => f.shifted(self.sigma2).health().to_json(),
+            Some(Err(m)) => Json::obj().with("error", Json::Str(m.clone())),
+            None => Json::Null,
+        };
+        Some(
+            Json::obj()
+                .with("kind", Json::Str("mka".into()))
+                .with("method", Json::Str(self.name()))
+                .with("n", Json::Num(self.train.n() as f64))
+                .with("dim", Json::Num(self.train.dim() as f64))
+                .with("sigma2", Json::Num(self.sigma2))
+                .with(
+                    "variance_floor_hits",
+                    Json::Num(self.floor_hits.load(Ordering::Relaxed) as f64),
+                )
+                .with("factor", factor),
+        )
     }
 }
 
@@ -490,6 +551,39 @@ mod tests {
             assert!((ps.mean[i] - pp.mean[i]).abs() < 1e-9, "mean[{i}]");
             assert!((ps.var[i] - pp.var[i]).abs() < 1e-9, "var[{i}]");
         }
+    }
+
+    /// `diagnose` reports only what is already held: before anything
+    /// forces the train factor it says so (`factor: null`), afterwards it
+    /// carries the shifted-spectrum health — and calling it never triggers
+    /// a factorization either way.
+    #[test]
+    fn diagnose_never_forces_the_train_factor() {
+        use crate::mka::factorize_count;
+        let data = gp_dataset(&SynthSpec::named("t", 80, 2), 12);
+        let mka = MkaGp::fit(&data, &RbfKernel::new(1.0), 0.1, &config(12)).unwrap();
+        let before = factorize_count();
+        let d = mka.diagnose().expect("MKA always reports");
+        assert_eq!(factorize_count(), before, "diagnose must not factorize");
+        assert!(matches!(d.get("factor"), Some(Json::Null)));
+        assert_eq!(d.str_field("kind"), Some("mka"));
+        assert_eq!(d.num_field("n"), Some(80.0));
+        assert_eq!(d.num_field("variance_floor_hits"), Some(0.0));
+        // Force the train factor through normal use, then re-diagnose.
+        mka.log_marginal().unwrap();
+        let after_lml = factorize_count();
+        let d = mka.diagnose().unwrap();
+        assert_eq!(factorize_count(), after_lml, "diagnose must not refactorize");
+        let f = d.get("factor").expect("factor health present");
+        assert_eq!(f.num_field("n"), Some(80.0));
+        assert!(f.num_field("condition").unwrap() >= 1.0);
+        assert!(f.num_field("lambda_min").unwrap() >= 0.1 - 1e-12, "σ² shift floors λ_min");
+        // A retuned copy shares state: still no new factorization.
+        let re = mka.retuned(0.3).unwrap();
+        let dr = re.diagnose().unwrap();
+        assert_eq!(factorize_count(), after_lml);
+        assert_eq!(dr.num_field("sigma2"), Some(0.3));
+        assert!(dr.get("factor").unwrap().num_field("lambda_min").unwrap() >= 0.3 - 1e-12);
     }
 
     #[test]

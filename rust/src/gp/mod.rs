@@ -22,6 +22,7 @@ pub mod ridge;
 pub mod sharded;
 
 use crate::la::dense::Mat;
+use crate::util::json::Json;
 
 /// Posterior prediction: mean and (predictive, noise-inclusive) variance
 /// per test point.
@@ -99,6 +100,15 @@ pub trait GpModel: Send + Sync {
     /// only; models that retain their training set override it.
     fn info(&self) -> ModelInfo {
         ModelInfo::basic(self.name())
+    }
+
+    /// Structured numerical-health diagnostics — the payload behind the
+    /// serving plane's `diagnose` op. Implementations must report from
+    /// **already-held** state only (per-stage compression, shifted
+    /// spectrum extremes, counters): never fit, refit or refactorize.
+    /// `None` means the method has nothing to report (the default).
+    fn diagnose(&self) -> Option<Json> {
+        None
     }
 }
 

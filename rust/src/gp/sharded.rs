@@ -34,6 +34,7 @@
 //! id order — never completion order.
 
 use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
 
 use super::{GpModel, ModelInfo, Prediction};
 use crate::cluster::{cluster_rows, ClusterMethod};
@@ -43,7 +44,9 @@ use crate::gp::mka_gp::MkaGp;
 use crate::kernels::Kernel;
 use crate::la::dense::Mat;
 use crate::mka::MkaConfig;
+use crate::obs;
 use crate::par::{self, SendPtr};
+use crate::util::json::Json;
 use crate::util::Rng;
 
 /// How many nearest shard centroids a test point consults by default.
@@ -106,6 +109,13 @@ pub struct ShardedGp {
     /// Per-shard factorization wall time from `fit`, in shard-id order
     /// (the coordinator's `shard.fit_secs` histogram feed).
     fit_secs: Vec<f64>,
+    /// Per-shard (point, shard) routing decisions over this model's
+    /// lifetime, shard-id order; shared across [`ShardedGp::retuned`]
+    /// copies so the `diagnose` op sees one tally per logical fleet.
+    route_tally: Arc<Vec<AtomicU64>>,
+    /// How many recombinations degenerated from rBCM to the
+    /// product-of-experts fallback (also warn-logged, once per batch).
+    poe_fallbacks: Arc<AtomicU64>,
 }
 
 impl ShardedGp {
@@ -122,6 +132,7 @@ impl ShardedGp {
     ) -> Result<ShardedGp> {
         let parts = shard_partition(&train.x, n_shards, assign, config.seed)?;
         let k = parts.len();
+        let _sp = obs::span!("sharded.fit n={} k={k}", train.n());
         let mut shards = Vec::with_capacity(k);
         for members in &parts {
             let sub = train.subset(members);
@@ -149,6 +160,7 @@ impl ShardedGp {
             let errs = SendPtr::new(errors.as_mut_ptr());
             let fleet = &shards;
             par::run_tasks(k, k, |s| {
+                let _sp = obs::span!("shard {s} fit n={}", fleet[s].n);
                 let t0 = std::time::Instant::now();
                 let msg = fleet[s].model.train_factor().err().map(|e| e.to_string());
                 // SAFETY: task s writes only slots s; run_tasks blocks
@@ -174,6 +186,8 @@ impl ShardedGp {
             n_total: train.n(),
             dim: train.dim(),
             fit_secs,
+            route_tally: Arc::new((0..k).map(|_| AtomicU64::new(0)).collect()),
+            poe_fallbacks: Arc::new(AtomicU64::new(0)),
         })
     }
 
@@ -226,6 +240,8 @@ impl ShardedGp {
             n_total: self.n_total,
             dim: self.dim,
             fit_secs: self.fit_secs.clone(),
+            route_tally: Arc::clone(&self.route_tally),
+            poe_fallbacks: Arc::clone(&self.poe_fallbacks),
         })
     }
 
@@ -259,15 +275,25 @@ impl GpModel for ShardedGp {
             return Prediction { mean: Vec::new(), var: Vec::new() };
         }
 
+        let _sp = obs::span!("sharded.predict p={p} k={k}");
+
         // Route every point, then gather each shard's sub-batch (test
         // indices in ascending order — the cursor walk below relies on it).
-        let routes: Vec<Vec<usize>> = (0..p).map(|t| self.route(x_test.row(t))).collect();
+        let routes: Vec<Vec<usize>> = {
+            let _sp = obs::span!("route p={p}");
+            (0..p).map(|t| self.route(x_test.row(t))).collect()
+        };
         let hits: u64 = routes.iter().map(|r| r.len() as u64).sum();
         ROUTE_HITS.fetch_add(hits, Ordering::Relaxed);
         let mut per_shard: Vec<Vec<usize>> = vec![Vec::new(); k];
         for (t, r) in routes.iter().enumerate() {
             for &s in r {
                 per_shard[s].push(t);
+            }
+        }
+        for (s, idx) in per_shard.iter().enumerate() {
+            if !idx.is_empty() {
+                self.route_tally[s].fetch_add(idx.len() as u64, Ordering::Relaxed);
             }
         }
 
@@ -282,6 +308,7 @@ impl GpModel for ShardedGp {
                 let out = if idx.is_empty() {
                     None
                 } else {
+                    let _sp = obs::span!("shard {s} predict b={}", idx.len());
                     Some(self.shards[s].model.predict(&x_test.gather_rows(idx)))
                 };
                 // SAFETY: task s writes only slot s; run_tasks blocks
@@ -291,6 +318,8 @@ impl GpModel for ShardedGp {
         }
 
         // Recombine serially, experts in shard-id order per point.
+        let _sp_rec = obs::span!("recombine p={p}");
+        let mut poe = 0u64;
         let mut cursor = vec![0usize; k];
         let mut mean = Vec::with_capacity(p);
         let mut var = Vec::with_capacity(p);
@@ -326,9 +355,19 @@ impl GpModel for ShardedGp {
             } else {
                 // Degenerate BCM precision: product-of-experts mean with a
                 // harmonic-mean (conservative) variance.
+                poe += 1;
                 mean.push(wmean / prec);
                 var.push((experts.len() as f64 / prec).max(self.sigma2));
             }
+        }
+        if poe > 0 {
+            self.poe_fallbacks.fetch_add(poe, Ordering::Relaxed);
+            obs::log!(
+                Warn,
+                "gp.sharded",
+                { "points" => poe, "batch" => p },
+                "rBCM precision degenerated; product-of-experts fallback"
+            );
         }
         Prediction { mean, var }
     }
@@ -350,6 +389,47 @@ impl GpModel for ShardedGp {
             shards: self.shards.len(),
             shard_sizes: self.shard_sizes(),
         }
+    }
+
+    fn diagnose(&self) -> Option<Json> {
+        // Aggregates held state only: per-shard health comes from each
+        // MkaGp's already-computed factor (ShardedGp::fit forces them all),
+        // never from a fresh factorization.
+        let total: u64 = self.route_tally.iter().map(|h| h.load(Ordering::Relaxed)).sum();
+        let shards: Vec<Json> = self
+            .shards
+            .iter()
+            .enumerate()
+            .map(|(s, sh)| {
+                let hits = self.route_tally[s].load(Ordering::Relaxed);
+                let share = if total > 0 { hits as f64 / total as f64 } else { 0.0 };
+                let mut j = Json::obj()
+                    .with("shard", Json::Num(s as f64))
+                    .with("n", Json::Num(sh.n as f64))
+                    .with("fit_secs", Json::Num(self.fit_secs[s]))
+                    .with("route_hits", Json::Num(hits as f64))
+                    .with("route_share", Json::Num(share));
+                if let Some(d) = sh.model.diagnose() {
+                    j = j.with("model", d);
+                }
+                j
+            })
+            .collect();
+        Some(
+            Json::obj()
+                .with("kind", Json::Str("sharded".into()))
+                .with("method", Json::Str(self.name()))
+                .with("n", Json::Num(self.n_total as f64))
+                .with("dim", Json::Num(self.dim as f64))
+                .with("sigma2", Json::Num(self.sigma2))
+                .with("route_experts", Json::Num(self.route_experts as f64))
+                .with("route_hits_total", Json::Num(total as f64))
+                .with(
+                    "poe_fallbacks",
+                    Json::Num(self.poe_fallbacks.load(Ordering::Relaxed) as f64),
+                )
+                .with("shards", Json::Arr(shards)),
+        )
     }
 }
 
@@ -451,6 +531,41 @@ mod tests {
         assert_eq!(info.shards, fleet.n_shards());
         assert_eq!(info.shard_sizes, fleet.shard_sizes());
         assert!(info.method.starts_with("Sharded-MKA"));
+    }
+
+    /// Fleet `diagnose` carries per-shard sizes, route-hit shares, and the
+    /// shifted-spectrum health of every shard's factor — all from state
+    /// `fit`/`predict` already hold (the factorize counter must not move).
+    #[test]
+    fn diagnose_reports_fleet_health_without_refactorizing() {
+        use crate::mka::factorize_count;
+        let data = gp_dataset(&SynthSpec::named("sharddiag", 160, 2), 13);
+        let (tr, te) = data.split(0.85, 4);
+        let fleet =
+            ShardedGp::fit(&tr, &RbfKernel::new(1.0), 0.1, &config(12), 3, ClusterMethod::KMeans)
+                .unwrap();
+        fleet.predict(&te.x);
+        let before = factorize_count();
+        let d = fleet.diagnose().expect("sharded always reports");
+        assert_eq!(factorize_count(), before, "diagnose must not refactorize");
+        assert_eq!(d.str_field("kind"), Some("sharded"));
+        assert_eq!(d.num_field("n"), Some(tr.n() as f64));
+        assert!(d.num_field("route_hits_total").unwrap() > 0.0);
+        let shards = match d.get("shards") {
+            Some(Json::Arr(a)) => a,
+            other => panic!("shards array missing: {other:?}"),
+        };
+        assert_eq!(shards.len(), fleet.n_shards());
+        let mut share = 0.0;
+        for sj in shards {
+            share += sj.num_field("route_share").unwrap();
+            assert!(sj.num_field("n").unwrap() > 0.0);
+            // fit forces every shard factor, so health must be present
+            let f = sj.get("model").unwrap().get("factor").unwrap();
+            assert!(f.num_field("condition").unwrap() >= 1.0);
+            assert!(f.num_field("lambda_min").unwrap() >= 0.1 - 1e-12);
+        }
+        assert!((share - 1.0).abs() < 1e-9, "route shares sum to 1, got {share}");
     }
 
     #[test]

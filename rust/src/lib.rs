@@ -21,7 +21,11 @@
 //! The layer order is `la → par → kernels → cluster/compress → mka →
 //! gp/baselines → train → coordinator` — `docs/ARCHITECTURE.md` maps it
 //! in full (including where each paper equation lives) and
-//! `docs/PROTOCOL.md` is the executable coordinator op reference.
+//! `docs/PROTOCOL.md` is the executable coordinator op reference. The
+//! [`obs`] plane (request-scoped spans, structured event log,
+//! numerical-health diagnostics) threads through every layer but is
+//! strictly observational — tracing on or off never changes a bit of
+//! any result.
 //!
 //! Paper-notation anchors: the telescoping factor K̃ of eq. 6 is
 //! [`mka::MkaFactor`] (stages: [`mka::Stage`], core size:
@@ -47,6 +51,7 @@
 
 pub mod error;
 pub mod util;
+pub mod obs;
 pub mod par;
 pub mod la;
 pub mod kernels;

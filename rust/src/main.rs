@@ -54,6 +54,7 @@ fn print_usage() {
          USAGE: mka-gp <subcommand> [--options]\n\
          \n\
          serve       --port 7470 --workers 2 --config cfg.json --artifacts artifacts\n\
+                     --trace-out trace.json (Chrome trace-event stream; implies trace-all)\n\
          fit         --data file.csv --method mka|full|sor|fitc|pitc|meka --k 32\n\
          train       --data file.csv | --synth N [--dim D] --method mka --k 32\n\
                      --selection mll|mll-grad|cv [--ard] --max-evals 60\n\

@@ -33,6 +33,7 @@ use crate::la::blas::{axpy, gemm, gemv, scale_rows};
 use crate::la::dense::Mat;
 use crate::la::evd::SymEig;
 use crate::par::arena;
+use crate::util::json::Json;
 
 /// Process-wide count of *logical* orthogonal cascades (one full
 /// forward+backward sweep through every stage). A blocked apply carrying
@@ -305,18 +306,24 @@ impl MkaFactor {
         let mut v = arena::take_mat(z.rows, z.cols);
         v.data.copy_from_slice(&z.data);
         let mut wavs: Vec<Mat> = Vec::with_capacity(self.stages.len());
-        for st in self.stages.iter() {
+        for (si, st) in self.stages.iter().enumerate() {
+            let _sp = crate::obs::span!("stage {si} fwd b={}", z.cols);
             let (core, wav) = st.forward_mat_mt(&mut v, stage_threads);
             wavs.push(wav);
             arena::give_mat(std::mem::replace(&mut v, core));
         }
         // Core action on the whole block.
-        let mut u = core_op(&v);
+        let mut u = {
+            let _sp = crate::obs::span!("core {0}x{0} b={1}", self.core.rows, z.cols);
+            core_op(&v)
+        };
         arena::give_mat(v);
         // Backward cascade, scaling each wavelet row by f(d); the wavelet
         // buffers are dead after this, so scale them in place and donate
         // them (and each retired `u`) back to the per-worker arenas.
-        for (st, mut wav) in self.stages.iter().zip(wavs).rev() {
+        let n_stages = self.stages.len();
+        for (ri, (st, mut wav)) in self.stages.iter().zip(wavs).rev().enumerate() {
+            let _sp = crate::obs::span!("stage {} bwd b={}", n_stages - 1 - ri, z.cols);
             let mut fd = arena::take_vec(st.dvals.len());
             for (f, &d) in fd.iter_mut().zip(&st.dvals) {
                 *f = dmap(d);
@@ -366,6 +373,128 @@ impl MkaFactor {
             dim = st.c();
         }
         dim == self.core.rows && self.core.is_square()
+    }
+
+    /// Numerical-health report of this (shifted) factor, computed from
+    /// **held state only**: per-stage dimensions/compression plus the
+    /// explicit shifted spectrum extremes (Proposition 7: core
+    /// eigenvalues ∪ wavelet diagonal, every value + shift). May lazily
+    /// trigger the core EVD (the d³ step shared by every shifted view) —
+    /// never a refactorization; [`factorize_count`] is unchanged.
+    pub fn health(&self) -> FactorHealth {
+        let stages: Vec<StageHealth> = self
+            .stages
+            .iter()
+            .enumerate()
+            .map(|(i, st)| StageHealth {
+                stage: i,
+                n_in: st.n_in,
+                n_out: st.c(),
+                wavelets: st.dvals.len(),
+                compression: st.compression(),
+            })
+            .collect();
+        let mut lambda_min = f64::INFINITY;
+        let mut lambda_max = f64::NEG_INFINITY;
+        let spectrum = self
+            .eig()
+            .values
+            .iter()
+            .map(|&v| v + self.shift)
+            .chain(self.all_dvals());
+        for v in spectrum {
+            lambda_min = lambda_min.min(v);
+            lambda_max = lambda_max.max(v);
+        }
+        let condition = if lambda_min > 0.0 { lambda_max / lambda_min } else { f64::INFINITY };
+        FactorHealth {
+            n: self.n,
+            d_core: self.d_core(),
+            n_stages: self.n_stages(),
+            shift: self.shift,
+            stored_reals: self.stored_reals(),
+            lambda_min,
+            lambda_max,
+            condition,
+            stages,
+        }
+    }
+}
+
+/// Dimensions and compression of one cascade stage, for diagnostics.
+#[derive(Clone, Debug)]
+pub struct StageHealth {
+    /// Stage index (0 = outermost).
+    pub stage: usize,
+    /// Rows entering the stage.
+    pub n_in: usize,
+    /// Core rows leaving the stage.
+    pub n_out: usize,
+    /// Wavelet (diagonal) rows split off.
+    pub wavelets: usize,
+    /// `n_out / n_in` — the realized per-stage γ.
+    pub compression: f64,
+}
+
+/// Snapshot of an [`MkaFactor`]'s numerical health (the coordinator's
+/// `diagnose` payload). See [`MkaFactor::health`].
+#[derive(Clone, Debug)]
+pub struct FactorHealth {
+    /// Ambient dimension n.
+    pub n: usize,
+    /// Final core size.
+    pub d_core: usize,
+    /// Number of cascade stages.
+    pub n_stages: usize,
+    /// Diagonal noise shift σ² of the reporting view.
+    pub shift: f64,
+    /// Stored reals (Proposition 3/5 accounting).
+    pub stored_reals: usize,
+    /// Smallest shifted spectral value (core eigenvalues ∪ wavelet
+    /// diagonal, + shift).
+    pub lambda_min: f64,
+    /// Largest shifted spectral value.
+    pub lambda_max: f64,
+    /// `lambda_max / lambda_min`, or +∞ when λ_min ≤ 0 (singular /
+    /// indefinite under roundoff).
+    pub condition: f64,
+    /// Per-stage dimensions, outermost first.
+    pub stages: Vec<StageHealth>,
+}
+
+impl FactorHealth {
+    /// Serialize for the `diagnose` op. Non-finite numbers (a +∞
+    /// condition) serialize as JSON `null` per the crate's JSON rules.
+    pub fn to_json(&self) -> Json {
+        Json::obj()
+            .with("n", Json::Num(self.n as f64))
+            .with("d_core", Json::Num(self.d_core as f64))
+            .with("n_stages", Json::Num(self.n_stages as f64))
+            .with("shift", Json::Num(self.shift))
+            .with("stored_reals", Json::Num(self.stored_reals as f64))
+            .with(
+                "overall_compression",
+                Json::Num(self.stored_reals as f64 / ((self.n * self.n).max(1) as f64)),
+            )
+            .with("lambda_min", Json::Num(self.lambda_min))
+            .with("lambda_max", Json::Num(self.lambda_max))
+            .with("condition", Json::Num(self.condition))
+            .with(
+                "stages",
+                Json::Arr(
+                    self.stages
+                        .iter()
+                        .map(|s| {
+                            Json::obj()
+                                .with("stage", Json::Num(s.stage as f64))
+                                .with("n_in", Json::Num(s.n_in as f64))
+                                .with("n_out", Json::Num(s.n_out as f64))
+                                .with("wavelets", Json::Num(s.wavelets as f64))
+                                .with("compression", Json::Num(s.compression))
+                        })
+                        .collect(),
+                ),
+            )
     }
 }
 
@@ -542,5 +671,34 @@ mod tests {
         // all_dvals reads through the shift.
         assert_eq!(fs.all_dvals(), vec![0.7 + s2, 0.9 + s2]);
         assert_eq!(f.all_dvals(), vec![0.7, 0.9]);
+    }
+
+    #[test]
+    fn health_reports_shifted_spectrum_without_refactorize() {
+        let f = tiny_factor();
+        let s2 = 0.5;
+        let before = factorize_count();
+        let h = f.shifted(s2).health();
+        assert_eq!(factorize_count(), before, "health must not factorize");
+        assert_eq!(h.n, 4);
+        assert_eq!(h.d_core, 2);
+        assert_eq!(h.n_stages, 1);
+        assert_eq!(h.shift, s2);
+        assert_eq!(h.stages.len(), 1);
+        assert_eq!(h.stages[0].n_in, 4);
+        assert_eq!(h.stages[0].n_out, 2);
+        assert_eq!(h.stages[0].wavelets, 2);
+        assert!((h.stages[0].compression - 0.5).abs() < 1e-15);
+        // Spectrum = eig(core) ∪ dvals, all + σ². Core [[2.0,0.3],[0.3,1.5]]
+        // has eigenvalues 1.75 ± sqrt(0.0625 + 0.09).
+        let disc = (0.0625f64 + 0.09).sqrt();
+        let expect_min = (1.75 - disc + s2).min(0.7 + s2);
+        let expect_max = (1.75 + disc + s2).max(0.9 + s2);
+        assert!((h.lambda_min - expect_min).abs() < 1e-12, "λ_min {}", h.lambda_min);
+        assert!((h.lambda_max - expect_max).abs() < 1e-12, "λ_max {}", h.lambda_max);
+        assert!((h.condition - expect_max / expect_min).abs() < 1e-9);
+        let rendered = h.to_json().dump();
+        assert!(rendered.contains("\"condition\""));
+        assert!(rendered.contains("\"stages\""));
     }
 }

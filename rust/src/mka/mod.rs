@@ -28,7 +28,7 @@ pub mod ops;
 pub mod parallel;
 pub mod stage;
 
-pub use factor::{cascade_count, factorize_count, MkaFactor};
+pub use factor::{cascade_count, factorize_count, FactorHealth, MkaFactor, StageHealth};
 pub use stage::{BlockFactor, Stage};
 
 use crate::cluster::{cluster_rows, ClusterMethod};
@@ -138,6 +138,7 @@ pub fn factorize(k: &Mat, x: Option<&Mat>, config: &MkaConfig) -> Result<MkaFact
     }
     factor::record_factorize();
     let n = k.rows;
+    let _sp = crate::obs::span!("mka.factorize n={n}");
     let mut rng = Rng::new(config.seed);
     let compressor = config.compressor.build();
     let mut kc = k.clone();
@@ -149,6 +150,7 @@ pub fn factorize(k: &Mat, x: Option<&Mat>, config: &MkaConfig) -> Result<MkaFact
 
     while kc.rows > config.d_core && stages.len() < config.max_stages {
         let n_cur = kc.rows;
+        let _stage_sp = crate::obs::span!("factorize.stage {} n={n_cur}", stages.len());
         let t_stage = crate::util::Timer::start();
         // ---- 1. cluster --------------------------------------------------
         let clustering = if stages.is_empty() {

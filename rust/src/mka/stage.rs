@@ -53,6 +53,12 @@ impl Stage {
         self.core_global.len()
     }
 
+    /// Realized per-stage compression ratio γ_ℓ = c_ℓ / n_{ℓ-1} (the
+    /// `diagnose` op reports one per stage).
+    pub fn compression(&self) -> f64 {
+        self.c() as f64 / self.n_in.max(1) as f64
+    }
+
     /// Apply Q̄_ℓ to a stage-input vector in place (v ← Q̄ v), then split
     /// into (core, wavelet-coefficients).
     pub fn forward(&self, v: &mut [f64], scratch: &mut Vec<f64>) -> (Vec<f64>, Vec<f64>) {

@@ -1,0 +1,147 @@
+//! Chrome trace-event streaming exporter.
+//!
+//! When `ServiceConfig.trace_out` (CLI `--trace-out file.json`) is set,
+//! every completed trace appends its spans as complete (`"ph":"X"`)
+//! events in the Chrome trace-event JSON array format. The file is
+//! opened with `[` and intentionally never closed — both
+//! `chrome://tracing` and [ui.perfetto.dev](https://ui.perfetto.dev)
+//! accept the unterminated array, which is what makes streaming from a
+//! live server possible. Thread names map to stable small `tid`s via
+//! `"ph":"M"` metadata events, so the flamegraph groups lanes by pool
+//! worker.
+
+use std::collections::BTreeMap;
+use std::fs::File;
+use std::io::{BufWriter, Write};
+use std::path::Path;
+use std::sync::Mutex;
+
+use super::tracer::Trace;
+use crate::util::json::Json;
+
+struct ChromeOut {
+    w: BufWriter<File>,
+    wrote_any: bool,
+    tids: BTreeMap<String, u64>,
+}
+
+static OUT: Mutex<Option<ChromeOut>> = Mutex::new(None);
+
+/// Open (truncating) `path` as the streaming trace-event sink. Replaces
+/// any previously configured sink.
+pub fn set_trace_out(path: &Path) -> std::io::Result<()> {
+    let f = File::create(path)?;
+    let mut w = BufWriter::new(f);
+    w.write_all(b"[\n")?;
+    w.flush()?;
+    *OUT.lock().unwrap() = Some(ChromeOut { w, wrote_any: false, tids: BTreeMap::new() });
+    Ok(())
+}
+
+/// Is a trace-event sink configured?
+pub fn trace_out_active() -> bool {
+    OUT.lock().unwrap().is_some()
+}
+
+/// Stop exporting (flushes and drops the writer; the file stays valid
+/// for the viewers).
+pub fn clear_trace_out() {
+    *OUT.lock().unwrap() = None;
+}
+
+fn write_event(out: &mut ChromeOut, ev: &Json) -> std::io::Result<()> {
+    if out.wrote_any {
+        out.w.write_all(b",\n")?;
+    }
+    out.wrote_any = true;
+    out.w.write_all(ev.dump().as_bytes())
+}
+
+/// Append one completed trace to the sink (no-op when none configured).
+/// On any I/O error the sink is dropped and a warn event is logged —
+/// export failure must never take serving down.
+pub(crate) fn export(trace: &Trace) {
+    let mut guard = OUT.lock().unwrap();
+    let Some(out) = guard.as_mut() else { return };
+    let mut failed = false;
+    for s in &trace.spans {
+        let tid = match out.tids.get(&s.thread) {
+            Some(&t) => t,
+            None => {
+                let t = out.tids.len() as u64 + 1;
+                out.tids.insert(s.thread.clone(), t);
+                let meta = Json::obj()
+                    .with("name", Json::Str("thread_name".into()))
+                    .with("ph", Json::Str("M".into()))
+                    .with("pid", Json::Num(1.0))
+                    .with("tid", Json::Num(t as f64))
+                    .with("args", Json::obj().with("name", Json::Str(s.thread.clone())));
+                if write_event(out, &meta).is_err() {
+                    failed = true;
+                }
+                t
+            }
+        };
+        let mut args = Json::obj().with("trace_id", Json::Num(trace.id as f64));
+        if s.queue_us > 0 {
+            args = args.with("queue_us", Json::Num(s.queue_us as f64));
+        }
+        let ev = Json::obj()
+            .with("name", Json::Str(s.name.clone()))
+            .with("cat", Json::Str("obs".into()))
+            .with("ph", Json::Str("X".into()))
+            .with("ts", Json::Num((trace.start_epoch_us + s.start_us) as f64))
+            .with("dur", Json::Num(s.dur_us.max(1) as f64))
+            .with("pid", Json::Num(1.0))
+            .with("tid", Json::Num(tid as f64))
+            .with("args", args);
+        if write_event(out, &ev).is_err() {
+            failed = true;
+            break;
+        }
+    }
+    if !failed {
+        failed = out.w.flush().is_err();
+    }
+    if failed {
+        *guard = None;
+        drop(guard);
+        crate::obs::log!(Warn, "obs.chrome", "trace-event export failed; trace_out disabled");
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::start_request;
+
+    #[test]
+    #[cfg_attr(miri, ignore)] // touches the real filesystem
+    fn exports_flamegraph_loadable_events() {
+        let path = std::env::temp_dir().join(format!("mka_obs_chrome_{}.json", std::process::id()));
+        set_trace_out(&path).unwrap();
+        let req = start_request("chrome-unit");
+        {
+            let _s = crate::obs::span!("exported-span");
+        }
+        req.finish();
+        clear_trace_out();
+        let body = std::fs::read_to_string(&path).unwrap();
+        let _ = std::fs::remove_file(&path);
+        assert!(body.starts_with("[\n"));
+        assert!(body.contains("\"ph\":\"X\""));
+        assert!(body.contains("\"name\":\"exported-span\""));
+        assert!(body.contains("\"thread_name\""));
+        // Each event line after the opening bracket must parse as JSON.
+        let mut parsed = 0;
+        for line in body.lines().skip(1) {
+            let line = line.trim_end_matches(',');
+            if line.is_empty() {
+                continue;
+            }
+            Json::parse(line).unwrap();
+            parsed += 1;
+        }
+        assert!(parsed >= 2);
+    }
+}

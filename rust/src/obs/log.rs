@@ -1,0 +1,211 @@
+//! Leveled structured event log on a bounded ring.
+//!
+//! `obs::log!` events carry a level, a `target` (the subsystem, e.g.
+//! `"gp.sharded"`), a formatted message and optional key/value fields.
+//! They land on one process-wide ring of bounded capacity
+//! (`ServiceConfig.log_ring`) and are drained — non-destructively — by
+//! the coordinator's `{"op":"logs"}`. The intended use is *rare, telling
+//! events*: silent-fallback sites (rBCM→PoE degeneration, predict prior
+//! fallbacks, factor-cache displacement, busy rejections), not per-item
+//! chatter.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Mutex, OnceLock};
+
+use crate::util::json::Json;
+
+/// Event severity. Ordered: `Debug < Info < Warn < Error`.
+#[derive(Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Debug)]
+pub enum Level {
+    /// High-volume diagnostics (probe-trace engagement, cache traffic).
+    Debug = 0,
+    /// Normal lifecycle events.
+    Info = 1,
+    /// Degraded-but-serving: silent fallbacks, displacement, rejection.
+    Warn = 2,
+    /// Failed requests and internal errors.
+    Error = 3,
+}
+
+impl Level {
+    /// Parse a protocol-level string (`"debug" | "info" | "warn" |
+    /// "warning" | "error"`), case-insensitive.
+    pub fn parse(s: &str) -> Option<Level> {
+        match s.to_ascii_lowercase().as_str() {
+            "debug" => Some(Level::Debug),
+            "info" => Some(Level::Info),
+            "warn" | "warning" => Some(Level::Warn),
+            "error" => Some(Level::Error),
+            _ => None,
+        }
+    }
+
+    /// Canonical lowercase name.
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Level::Debug => "debug",
+            Level::Info => "info",
+            Level::Warn => "warn",
+            Level::Error => "error",
+        }
+    }
+}
+
+/// One logged event.
+#[derive(Clone, Debug)]
+pub struct Event {
+    /// Process-wide monotone sequence number (1-based).
+    pub seq: u64,
+    /// µs since the process observability epoch.
+    pub us: u64,
+    /// Severity.
+    pub level: Level,
+    /// Emitting subsystem, e.g. `"coordinator.batcher"`.
+    pub target: &'static str,
+    /// Formatted message.
+    pub message: String,
+    /// Structured key/value fields.
+    pub fields: Vec<(&'static str, String)>,
+}
+
+static NEXT_SEQ: AtomicU64 = AtomicU64::new(1);
+static LOG_CAP: AtomicUsize = AtomicUsize::new(256);
+/// Minimum recorded level, as a `Level` discriminant.
+static MIN_LEVEL: AtomicUsize = AtomicUsize::new(Level::Debug as usize);
+static EVENTS: OnceLock<Mutex<VecDeque<Event>>> = OnceLock::new();
+
+fn ring() -> &'static Mutex<VecDeque<Event>> {
+    EVENTS.get_or_init(|| Mutex::new(VecDeque::new()))
+}
+
+/// Would an event at `level` be recorded? The `log!` macro checks this
+/// before formatting anything.
+#[inline]
+pub fn log_enabled(level: Level) -> bool {
+    level as usize >= MIN_LEVEL.load(Ordering::Relaxed)
+}
+
+/// Set the minimum recorded level (events below it are not even
+/// formatted).
+pub fn set_log_level(level: Level) {
+    MIN_LEVEL.store(level as usize, Ordering::Relaxed);
+}
+
+/// Set the event-ring capacity (values below 1 clamp to 1).
+pub fn set_log_capacity(n: usize) {
+    LOG_CAP.store(n.max(1), Ordering::Relaxed);
+}
+
+/// Current event-ring capacity.
+pub fn log_capacity() -> usize {
+    LOG_CAP.load(Ordering::Relaxed).max(1)
+}
+
+/// Total events ever recorded (for tests; survives ring displacement).
+pub fn log_seq() -> u64 {
+    NEXT_SEQ.load(Ordering::Relaxed) - 1
+}
+
+/// Record one event. Call through [`crate::obs::log!`], which gates on
+/// [`log_enabled`] first.
+pub fn push_event(
+    level: Level,
+    target: &'static str,
+    message: String,
+    fields: Vec<(&'static str, String)>,
+) {
+    let ev = Event {
+        seq: NEXT_SEQ.fetch_add(1, Ordering::Relaxed),
+        us: super::tracer::epoch_us(),
+        level,
+        target,
+        message,
+        fields,
+    };
+    let mut r = ring().lock().unwrap();
+    let cap = log_capacity();
+    while r.len() >= cap {
+        r.pop_front();
+    }
+    r.push_back(ev);
+}
+
+/// The last `tail` events at or above `min`, oldest first. Reading does
+/// not consume the ring.
+pub fn recent_events(min: Level, tail: usize) -> Vec<Event> {
+    let r = ring().lock().unwrap();
+    let matching: Vec<Event> = r.iter().filter(|e| e.level >= min).cloned().collect();
+    let skip = matching.len().saturating_sub(tail);
+    matching.into_iter().skip(skip).collect()
+}
+
+/// Serialize one event for the `logs` op.
+pub fn event_json(e: &Event) -> Json {
+    let mut fields = Json::obj();
+    for (k, v) in &e.fields {
+        fields = fields.with(*k, Json::Str(v.clone()));
+    }
+    Json::obj()
+        .with("seq", Json::Num(e.seq as f64))
+        .with("us", Json::Num(e.us as f64))
+        .with("level", Json::Str(e.level.as_str().to_string()))
+        .with("target", Json::Str(e.target.to_string()))
+        .with("message", Json::Str(e.message.clone()))
+        .with("fields", fields)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn levels_order_and_parse() {
+        assert!(Level::Debug < Level::Info && Level::Info < Level::Warn);
+        assert_eq!(Level::parse("WARN"), Some(Level::Warn));
+        assert_eq!(Level::parse("warning"), Some(Level::Warn));
+        assert_eq!(Level::parse("loud"), None);
+        assert_eq!(Level::Error.as_str(), "error");
+    }
+
+    #[test]
+    fn ring_is_bounded_and_keeps_newest() {
+        let cap = log_capacity();
+        let mut last_seq = 0;
+        for i in 0..cap + 50 {
+            crate::obs::log!(Info, "obs.test", {"i" => i}, "bound probe {i}");
+            last_seq = log_seq();
+        }
+        let all = recent_events(Level::Debug, usize::MAX);
+        assert!(all.len() <= cap);
+        assert!(all.iter().any(|e| e.seq == last_seq));
+        // Oldest-first ordering.
+        for w in all.windows(2) {
+            assert!(w[0].seq < w[1].seq);
+        }
+    }
+
+    #[test]
+    fn level_filter_and_fields() {
+        crate::obs::log!(Warn, "obs.test", {"shard" => 3, "experts" => 2}, "degenerate {}", "bcm");
+        let warns = recent_events(Level::Warn, usize::MAX);
+        let ev = warns.iter().rev().find(|e| e.target == "obs.test").unwrap();
+        assert_eq!(ev.level, Level::Warn);
+        assert_eq!(ev.message, "degenerate bcm");
+        assert!(ev.fields.iter().any(|(k, v)| *k == "shard" && v == "3"));
+        assert!(warns.iter().all(|e| e.level >= Level::Warn));
+        let rendered = event_json(ev).dump();
+        assert!(rendered.contains("\"level\":\"warn\""));
+        assert!(rendered.contains("\"shard\":\"3\""));
+    }
+
+    #[test]
+    fn tail_takes_newest() {
+        for i in 0..10 {
+            crate::obs::log!(Debug, "obs.tail", "tail probe {i}");
+        }
+        let tail = recent_events(Level::Debug, 3);
+        assert_eq!(tail.len(), 3);
+        assert!(tail[2].seq >= tail[0].seq + 2);
+    }
+}

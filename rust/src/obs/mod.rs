@@ -1,0 +1,89 @@
+//! Observability plane: request-scoped tracing, structured event log,
+//! and Chrome trace-event export.
+//!
+//! Three rules shape everything here:
+//!
+//! 1. **One load when off.** Every instrumentation point begins with a
+//!    single relaxed atomic load ([`tracing_possible`] /
+//!    [`log_enabled`]); when it says "off", no name is formatted, no
+//!    thread-local is touched, no lock is taken.
+//! 2. **Strictly off the value path.** Spans and events *observe* —
+//!    they never feed anything back into a computation, so every
+//!    solve/predict/train is bit-for-bit identical with tracing on or
+//!    off (`tests/par_determinism.rs` pins this).
+//! 3. **Bounded everywhere.** Completed traces and log events live on
+//!    rings of fixed capacity ([`set_trace_capacity`] /
+//!    [`set_log_capacity`]), and a single trace stores at most a fixed
+//!    number of spans; a hot server cannot grow without bound.
+//!
+//! Span contexts propagate across the [`crate::par`] pool: the
+//! submitting thread's [`SpanCtx`] is captured at enqueue and installed
+//! around each job on the worker ([`enter_job`]), so worker-executed
+//! work parents to its submitting span and carries its queue-wait time.
+
+pub mod chrome;
+pub mod log;
+pub mod tracer;
+
+pub use chrome::{clear_trace_out, set_trace_out, trace_out_active};
+pub use log::{
+    event_json, log_capacity, log_enabled, log_seq, push_event, recent_events, set_log_capacity,
+    set_log_level, Event, Level,
+};
+pub use tracer::{
+    current_ctx, enter_job, recent_traces, set_trace_all, set_trace_capacity, start_request,
+    trace_all, trace_capacity, trace_tree_json, tracing_possible, JobGuard, RequestGuard, SpanCtx,
+    SpanGuard, SpanRecord, Trace,
+};
+
+// The macros are exported at crate root (`#[macro_export]`) under
+// collision-safe names; re-export them here so call sites read
+// `obs::span!(...)` / `obs::log!(...)`.
+pub use crate::{obs_log as log, obs_span as span};
+
+/// Open a hierarchical timed span named by a format string. Returns a
+/// guard; the span closes when the guard drops. When no trace is live
+/// the cost is one relaxed atomic load and the format is never
+/// evaluated.
+///
+/// ```ignore
+/// let _sp = obs::span!("stage {i} fwd b={cols}");
+/// ```
+#[macro_export]
+macro_rules! obs_span {
+    ($($arg:tt)*) => {
+        if $crate::obs::tracing_possible() {
+            $crate::obs::SpanGuard::begin_with(|| format!($($arg)*))
+        } else {
+            $crate::obs::SpanGuard::disabled()
+        }
+    };
+}
+
+/// Record a leveled structured event: `obs::log!(Warn, "target",
+/// {"key" => value, ...}, "message {fmt}")` — the field block is
+/// optional. Nothing is formatted when the level is below the recording
+/// threshold.
+#[macro_export]
+macro_rules! obs_log {
+    ($lvl:ident, $target:expr, { $($k:literal => $v:expr),* $(,)? }, $($arg:tt)*) => {
+        if $crate::obs::log_enabled($crate::obs::Level::$lvl) {
+            $crate::obs::push_event(
+                $crate::obs::Level::$lvl,
+                $target,
+                format!($($arg)*),
+                vec![$(($k, format!("{}", $v))),*],
+            );
+        }
+    };
+    ($lvl:ident, $target:expr, $($arg:tt)*) => {
+        if $crate::obs::log_enabled($crate::obs::Level::$lvl) {
+            $crate::obs::push_event(
+                $crate::obs::Level::$lvl,
+                $target,
+                format!($($arg)*),
+                Vec::new(),
+            );
+        }
+    };
+}

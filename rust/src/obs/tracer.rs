@@ -1,0 +1,552 @@
+//! Request-scoped hierarchical spans.
+//!
+//! A trace is born when the router sees a request that asked for one
+//! ([`start_request`]), lives as an `Arc<TraceInner>` carried in a
+//! thread-local [`SpanCtx`], and dies into an immutable [`Trace`] pushed
+//! onto a bounded ring ([`recent_traces`]) and, if configured, streamed
+//! to a Chrome trace-event file (`chrome.rs`).
+//!
+//! The fast path is the whole design: `obs::span!` first does one
+//! relaxed atomic load ([`tracing_possible`]) and, when no trace is
+//! live anywhere in the process, neither formats its name nor touches
+//! thread-local state. Span guards record *observations only* — they
+//! never feed anything back into the computation, which is why the
+//! bit-determinism contract (`tests/par_determinism.rs`) holds with
+//! tracing on or off.
+
+use std::cell::RefCell;
+use std::collections::{BTreeMap, BTreeSet, VecDeque};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+use std::time::Instant;
+
+use crate::util::json::Json;
+
+/// Number of live (unfinished) traces in the process. The `span!` gate:
+/// zero means every guard constructor is a no-op.
+static ACTIVE_TRACES: AtomicU64 = AtomicU64::new(0);
+
+/// When set (e.g. `--trace-out` on the CLI), the router traces every
+/// request instead of only those with `"trace": true`.
+static TRACE_ALL: AtomicU64 = AtomicU64::new(0);
+
+static NEXT_TRACE_ID: AtomicU64 = AtomicU64::new(1);
+
+/// Completed-trace ring capacity (`ServiceConfig.trace_ring`).
+static TRACE_CAP: AtomicUsize = AtomicUsize::new(32);
+
+/// Hard per-trace span bound: beyond this, spans are counted as dropped
+/// rather than stored, so a pathological request cannot hold unbounded
+/// memory.
+const MAX_SPANS_PER_TRACE: usize = 4096;
+
+static TRACES: OnceLock<Mutex<VecDeque<Arc<Trace>>>> = OnceLock::new();
+
+fn trace_ring() -> &'static Mutex<VecDeque<Arc<Trace>>> {
+    TRACES.get_or_init(|| Mutex::new(VecDeque::new()))
+}
+
+static EPOCH: OnceLock<Instant> = OnceLock::new();
+
+/// Process observability epoch: a fixed `Instant` all traces and log
+/// events are timestamped against, so successive traces lay out on one
+/// timeline in the Chrome export.
+pub(crate) fn epoch() -> Instant {
+    *EPOCH.get_or_init(Instant::now)
+}
+
+pub(crate) fn epoch_us() -> u64 {
+    Instant::now().saturating_duration_since(epoch()).as_micros() as u64
+}
+
+/// `true` while at least one trace is live anywhere in the process.
+/// This is the single relaxed load the disabled path pays.
+#[inline]
+pub fn tracing_possible() -> bool {
+    ACTIVE_TRACES.load(Ordering::Relaxed) != 0
+}
+
+/// Should the router trace every request (set when `trace_out` is
+/// configured)?
+pub fn trace_all() -> bool {
+    TRACE_ALL.load(Ordering::Relaxed) != 0
+}
+
+/// Toggle tracing of every request (normally driven by
+/// `ServiceConfig.trace_out`).
+pub fn set_trace_all(on: bool) {
+    TRACE_ALL.store(u64::from(on), Ordering::Relaxed);
+}
+
+/// Set the completed-trace ring capacity (values below 1 clamp to 1).
+pub fn set_trace_capacity(n: usize) {
+    TRACE_CAP.store(n.max(1), Ordering::Relaxed);
+}
+
+/// Current completed-trace ring capacity.
+pub fn trace_capacity() -> usize {
+    TRACE_CAP.load(Ordering::Relaxed).max(1)
+}
+
+fn thread_name() -> String {
+    std::thread::current().name().unwrap_or("unnamed").to_string()
+}
+
+/// One closed span, as stored on its trace.
+#[derive(Clone, Debug)]
+pub struct SpanRecord {
+    /// Span id, unique within the trace; the root span is id 1.
+    pub id: u64,
+    /// Parent span id (0 for the root).
+    pub parent: u64,
+    /// Human-readable name, e.g. `stage 2 fwd b=9`.
+    pub name: String,
+    /// Start, µs since the trace began.
+    pub start_us: u64,
+    /// Wall-clock duration in µs.
+    pub dur_us: u64,
+    /// Name of the thread the span closed on.
+    pub thread: String,
+    /// For pool jobs: µs spent queued before execution began (0 elsewhere).
+    pub queue_us: u64,
+}
+
+struct TraceState {
+    spans: Vec<SpanRecord>,
+    dropped: u64,
+    closed: bool,
+}
+
+/// Shared mutable core of a live trace.
+struct TraceInner {
+    id: u64,
+    name: String,
+    t0: Instant,
+    start_epoch_us: u64,
+    next_span: AtomicU64,
+    state: Mutex<TraceState>,
+}
+
+impl TraceInner {
+    fn now_us(&self) -> u64 {
+        Instant::now().saturating_duration_since(self.t0).as_micros() as u64
+    }
+
+    fn push(&self, rec: SpanRecord) {
+        let mut st = self.state.lock().unwrap();
+        if st.closed {
+            return; // a straggler job outlived the request; drop its span
+        }
+        if st.spans.len() >= MAX_SPANS_PER_TRACE {
+            st.dropped += 1;
+        } else {
+            st.spans.push(rec);
+        }
+    }
+}
+
+/// A completed, immutable trace.
+#[derive(Debug)]
+pub struct Trace {
+    /// Process-unique trace id.
+    pub id: u64,
+    /// Root name (the protocol op).
+    pub name: String,
+    /// Total request wall time in µs.
+    pub total_us: u64,
+    /// Trace start, µs since the process observability epoch.
+    pub start_epoch_us: u64,
+    /// All recorded spans (root included), sorted by start time.
+    pub spans: Vec<SpanRecord>,
+    /// Spans discarded because the per-trace bound was hit.
+    pub dropped: u64,
+}
+
+/// The propagation token: which trace (if any) the current thread is
+/// inside, and which span is its cursor. Cheap to clone (`Option<Arc>` +
+/// `u64`); captured by the `par` pool at submit time and re-installed on
+/// the worker around each job.
+#[derive(Clone, Default)]
+pub struct SpanCtx {
+    inner: Option<Arc<TraceInner>>,
+    span: u64,
+}
+
+impl SpanCtx {
+    /// Is there a live trace behind this context?
+    pub fn is_active(&self) -> bool {
+        self.inner.is_some()
+    }
+}
+
+thread_local! {
+    static CURRENT: RefCell<SpanCtx> = RefCell::new(SpanCtx::default());
+}
+
+/// Snapshot the calling thread's span context (inactive when no trace is
+/// live — the common case costs one atomic load).
+pub fn current_ctx() -> SpanCtx {
+    if !tracing_possible() {
+        return SpanCtx::default();
+    }
+    CURRENT.with(|c| c.borrow().clone())
+}
+
+/// RAII guard for one span. Construct through [`crate::obs::span!`]; the
+/// span closes (and is recorded) when the guard drops.
+pub struct SpanGuard {
+    trace: Option<Arc<TraceInner>>,
+    id: u64,
+    prev: u64,
+    name: String,
+    start_us: u64,
+    start: Option<Instant>,
+    queue_us: u64,
+}
+
+impl SpanGuard {
+    /// The no-op guard: nothing recorded, nothing restored.
+    pub fn disabled() -> SpanGuard {
+        SpanGuard {
+            trace: None,
+            id: 0,
+            prev: 0,
+            name: String::new(),
+            start_us: 0,
+            start: None,
+            queue_us: 0,
+        }
+    }
+
+    /// Open a span under the thread's current context. `name` is only
+    /// invoked when a trace is actually live on this thread, so the
+    /// disabled path never formats.
+    pub fn begin_with<F: FnOnce() -> String>(name: F) -> SpanGuard {
+        CURRENT.with(|c| {
+            let mut cur = c.borrow_mut();
+            let Some(tr) = cur.inner.clone() else {
+                return SpanGuard::disabled();
+            };
+            let id = tr.next_span.fetch_add(1, Ordering::Relaxed);
+            let prev = cur.span;
+            cur.span = id;
+            drop(cur);
+            let start_us = tr.now_us();
+            SpanGuard {
+                trace: Some(tr),
+                id,
+                prev,
+                name: name(),
+                start_us,
+                start: Some(Instant::now()),
+                queue_us: 0,
+            }
+        })
+    }
+
+    /// Record pool-queue wait time on this span (µs).
+    pub fn set_queue_us(&mut self, us: u64) {
+        self.queue_us = us;
+    }
+}
+
+impl Drop for SpanGuard {
+    fn drop(&mut self) {
+        let Some(tr) = self.trace.take() else { return };
+        CURRENT.with(|c| {
+            let mut cur = c.borrow_mut();
+            if cur.span == self.id {
+                cur.span = self.prev;
+            }
+        });
+        let dur_us = self.start.map(|s| s.elapsed().as_micros() as u64).unwrap_or(0);
+        tr.push(SpanRecord {
+            id: self.id,
+            parent: self.prev,
+            name: std::mem::take(&mut self.name),
+            start_us: self.start_us,
+            dur_us,
+            thread: thread_name(),
+            queue_us: self.queue_us,
+        });
+    }
+}
+
+/// Guard installing a foreign [`SpanCtx`] on the current thread for the
+/// duration of a pool job (or batched request), with a span named
+/// `name` parented to the submitter's cursor span. Restores the
+/// thread's previous context on drop.
+pub struct JobGuard {
+    prev: Option<SpanCtx>,
+    span: Option<SpanGuard>,
+}
+
+/// Enter `ctx` on the calling thread. No-op (and allocation-free) when
+/// `ctx` is inactive. `enqueued` is the submit-time instant, measured
+/// into the span's `queue_us`.
+pub fn enter_job(ctx: &SpanCtx, name: &'static str, enqueued: Option<Instant>) -> JobGuard {
+    if !ctx.is_active() {
+        return JobGuard { prev: None, span: None };
+    }
+    let prev = CURRENT.with(|c| std::mem::replace(&mut *c.borrow_mut(), ctx.clone()));
+    let mut span = SpanGuard::begin_with(|| name.to_string());
+    if let Some(enq) = enqueued {
+        span.set_queue_us(enq.elapsed().as_micros() as u64);
+    }
+    JobGuard { prev: Some(prev), span: Some(span) }
+}
+
+impl Drop for JobGuard {
+    fn drop(&mut self) {
+        // Close the span while the job's ctx is still installed, then
+        // restore whatever the thread had before.
+        self.span.take();
+        if let Some(prev) = self.prev.take() {
+            CURRENT.with(|c| *c.borrow_mut() = prev);
+        }
+    }
+}
+
+/// Root guard for one traced request. Dropping (or [`finish`ing]) the
+/// guard closes the root span, freezes the trace, pushes it on the ring
+/// and streams it to the Chrome exporter.
+///
+/// [`finish`ing]: RequestGuard::finish
+pub struct RequestGuard {
+    trace: Arc<TraceInner>,
+    prev: SpanCtx,
+    start: Instant,
+    done: bool,
+}
+
+/// Begin a traced request named `name` (the protocol op) rooted on the
+/// calling thread.
+pub fn start_request(name: &str) -> RequestGuard {
+    ACTIVE_TRACES.fetch_add(1, Ordering::Relaxed);
+    let id = NEXT_TRACE_ID.fetch_add(1, Ordering::Relaxed);
+    let start_epoch_us = epoch_us();
+    let t0 = Instant::now();
+    let tr = Arc::new(TraceInner {
+        id,
+        name: name.to_string(),
+        t0,
+        start_epoch_us,
+        next_span: AtomicU64::new(2), // root is span 1
+        state: Mutex::new(TraceState { spans: Vec::new(), dropped: 0, closed: false }),
+    });
+    let prev = CURRENT.with(|c| {
+        std::mem::replace(&mut *c.borrow_mut(), SpanCtx { inner: Some(Arc::clone(&tr)), span: 1 })
+    });
+    RequestGuard { trace: tr, prev, start: t0, done: false }
+}
+
+impl RequestGuard {
+    /// Close the trace and return it (also lands on the ring and the
+    /// Chrome exporter).
+    pub fn finish(mut self) -> Arc<Trace> {
+        self.do_finish()
+    }
+
+    fn do_finish(&mut self) -> Arc<Trace> {
+        self.done = true;
+        CURRENT.with(|c| *c.borrow_mut() = std::mem::take(&mut self.prev));
+        let total_us = (self.start.elapsed().as_micros() as u64).max(1);
+        let (mut spans, dropped) = {
+            let mut st = self.trace.state.lock().unwrap();
+            st.closed = true;
+            (std::mem::take(&mut st.spans), st.dropped)
+        };
+        spans.push(SpanRecord {
+            id: 1,
+            parent: 0,
+            name: self.trace.name.clone(),
+            start_us: 0,
+            dur_us: total_us,
+            thread: thread_name(),
+            queue_us: 0,
+        });
+        spans.sort_by_key(|s| (s.start_us, s.id));
+        let trace = Arc::new(Trace {
+            id: self.trace.id,
+            name: self.trace.name.clone(),
+            total_us,
+            start_epoch_us: self.trace.start_epoch_us,
+            spans,
+            dropped,
+        });
+        {
+            let mut ring = trace_ring().lock().unwrap();
+            let cap = trace_capacity();
+            while ring.len() >= cap {
+                ring.pop_front();
+            }
+            ring.push_back(Arc::clone(&trace));
+        }
+        super::chrome::export(&trace);
+        ACTIVE_TRACES.fetch_sub(1, Ordering::Relaxed);
+        trace
+    }
+}
+
+impl Drop for RequestGuard {
+    fn drop(&mut self) {
+        if !self.done {
+            let _ = self.do_finish();
+        }
+    }
+}
+
+/// The last `tail` completed traces, oldest first.
+pub fn recent_traces(tail: usize) -> Vec<Arc<Trace>> {
+    let ring = trace_ring().lock().unwrap();
+    let skip = ring.len().saturating_sub(tail);
+    ring.iter().skip(skip).cloned().collect()
+}
+
+fn span_node(s: &SpanRecord, children: &BTreeMap<u64, Vec<&SpanRecord>>) -> Json {
+    let kids = children.get(&s.id).map(Vec::as_slice).unwrap_or(&[]);
+    let child_us: u64 = kids.iter().map(|k| k.dur_us).sum();
+    let mut j = Json::obj()
+        .with("span_id", Json::Num(s.id as f64))
+        .with("name", Json::Str(s.name.clone()))
+        .with("wall_us", Json::Num(s.dur_us as f64))
+        .with("self_us", Json::Num(s.dur_us.saturating_sub(child_us) as f64))
+        .with("child_us", Json::Num(child_us as f64))
+        .with("start_us", Json::Num(s.start_us as f64))
+        .with("thread", Json::Str(s.thread.clone()));
+    if s.queue_us > 0 {
+        j = j.with("queue_us", Json::Num(s.queue_us as f64));
+    }
+    j.with("children", Json::Arr(kids.iter().map(|k| span_node(k, children)).collect()))
+}
+
+/// Render a completed trace as a span *tree* (the `"trace"` echo and the
+/// `trace` op payload): per span its name, wall µs, self vs child µs,
+/// executing thread and pool-queue wait.
+pub fn trace_tree_json(t: &Trace) -> Json {
+    let ids: BTreeSet<u64> = t.spans.iter().map(|s| s.id).collect();
+    let mut children: BTreeMap<u64, Vec<&SpanRecord>> = BTreeMap::new();
+    let mut root: Option<&SpanRecord> = None;
+    for s in &t.spans {
+        if s.id == 1 {
+            root = Some(s);
+        } else {
+            // Re-parent orphans (parent span dropped at the bound) to root.
+            let parent = if ids.contains(&s.parent) && s.parent != s.id { s.parent } else { 1 };
+            children.entry(parent).or_default().push(s);
+        }
+    }
+    for v in children.values_mut() {
+        v.sort_by_key(|s| (s.start_us, s.id));
+    }
+    let mut j = Json::obj()
+        .with("trace_id", Json::Num(t.id as f64))
+        .with("name", Json::Str(t.name.clone()))
+        .with("total_us", Json::Num(t.total_us as f64))
+        .with("n_spans", Json::Num(t.spans.len() as f64));
+    if t.dropped > 0 {
+        j = j.with("dropped_spans", Json::Num(t.dropped as f64));
+    }
+    match root {
+        Some(r) => j.with("root", span_node(r, &children)),
+        None => j.with("root", Json::Null),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disabled_span_is_a_noop() {
+        // No trace live on this thread: the guard must record nothing
+        // and the thread ctx must stay inactive.
+        assert!(!current_ctx().is_active());
+        let g = crate::obs::span!("never formatted {}", 1 / 1);
+        drop(g);
+        assert!(!current_ctx().is_active());
+    }
+
+    #[test]
+    fn span_tree_parents_and_self_time() {
+        let req = start_request("unit-op");
+        {
+            let _a = crate::obs::span!("outer");
+            let _b = crate::obs::span!("inner {}", 42);
+        }
+        let trace = req.finish();
+        assert!(!current_ctx().is_active(), "ctx restored after finish");
+        assert_eq!(trace.spans.len(), 3);
+        let root = trace.spans.iter().find(|s| s.id == 1).unwrap();
+        assert_eq!(root.parent, 0);
+        assert_eq!(root.name, "unit-op");
+        let outer = trace.spans.iter().find(|s| s.name == "outer").unwrap();
+        let inner = trace.spans.iter().find(|s| s.name == "inner 42").unwrap();
+        assert_eq!(outer.parent, 1);
+        assert_eq!(inner.parent, outer.id);
+
+        let tree = trace_tree_json(&trace);
+        let rendered = tree.dump();
+        assert!(rendered.contains("\"name\":\"unit-op\""));
+        assert!(rendered.contains("\"name\":\"inner 42\""));
+    }
+
+    #[test]
+    fn ctx_propagates_across_threads() {
+        let req = start_request("xthread");
+        let parent_span = crate::obs::span!("submit");
+        let ctx = current_ctx();
+        assert!(ctx.is_active());
+        let enq = Instant::now();
+        let h = std::thread::Builder::new()
+            .name("obs-test-worker".into())
+            .spawn(move || {
+                let _g = enter_job(&ctx, "pool.job", Some(enq));
+                let _s = crate::obs::span!("worker-work");
+            })
+            .unwrap();
+        h.join().unwrap();
+        drop(parent_span);
+        let trace = req.finish();
+        let submit = trace.spans.iter().find(|s| s.name == "submit").unwrap();
+        let job = trace.spans.iter().find(|s| s.name == "pool.job").unwrap();
+        let work = trace.spans.iter().find(|s| s.name == "worker-work").unwrap();
+        assert_eq!(job.parent, submit.id, "pool job parents to submitting span");
+        assert_eq!(work.parent, job.id);
+        assert_eq!(job.thread, "obs-test-worker");
+    }
+
+    #[test]
+    fn trace_ring_is_bounded() {
+        let cap = trace_capacity();
+        let mut last_id = 0;
+        for i in 0..cap + 5 {
+            let r = start_request(&format!("ring-{i}"));
+            last_id = r.finish().id;
+        }
+        // Other tests may be adding traces concurrently; the bound and
+        // the presence of our newest trace are the stable assertions.
+        let recent = recent_traces(usize::MAX);
+        assert!(recent.len() <= cap);
+        assert!(recent.iter().any(|t| t.id == last_id));
+    }
+
+    #[test]
+    fn nested_requests_restore_outer_ctx() {
+        let outer = start_request("outer-req");
+        let outer_ctx = current_ctx();
+        {
+            let inner = start_request("inner-req");
+            assert!(current_ctx().is_active());
+            inner.finish();
+        }
+        // Back on the outer trace, not deactivated.
+        let back = current_ctx();
+        assert!(back.is_active());
+        assert!(Arc::ptr_eq(
+            outer_ctx.inner.as_ref().unwrap(),
+            back.inner.as_ref().unwrap()
+        ));
+        outer.finish();
+    }
+}

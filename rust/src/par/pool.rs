@@ -114,7 +114,13 @@ impl ThreadPool {
     /// Fire-and-forget job. Panics in `f` are swallowed (they must not
     /// kill a worker); use `run_all` when failure matters.
     pub fn spawn(&self, f: impl FnOnce() + Send + 'static) {
+        // Carry the submitter's span context so a traced caller sees its
+        // detached work too; inactive (the common case) this is one
+        // atomic load and an Option::None clone.
+        let ctx = crate::obs::current_ctx();
+        let enq = ctx.is_active().then(std::time::Instant::now);
         let job: Job = Box::new(move || {
+            let _obs = crate::obs::enter_job(&ctx, "pool.job", enq);
             let _ = catch_unwind(AssertUnwindSafe(f));
         });
         let mut q = self.shared.queue.lock().unwrap();
@@ -139,12 +145,25 @@ impl ThreadPool {
             return;
         }
         let batch = Arc::new(Batch::new(n));
+        // Span propagation: capture the submitter's context once; each
+        // job re-installs it on its executing thread (worker or helping
+        // submitter) under a "pool.job" span carrying the queue wait.
+        // When no trace is live this is one atomic load per batch.
+        let ctx = crate::obs::current_ctx();
         {
             let mut q = self.shared.queue.lock().unwrap();
             for task in tasks {
                 let b = Arc::clone(&batch);
+                let ctx = ctx.clone();
+                let enq = ctx.is_active().then(std::time::Instant::now);
                 let job: Box<dyn FnOnce() + Send + 'env> = Box::new(move || {
-                    let result = catch_unwind(AssertUnwindSafe(task));
+                    let result = {
+                        // Close the job span before `complete`: the batch
+                        // latch can release the submitter (and the trace
+                        // root) the moment the last task completes.
+                        let _obs = crate::obs::enter_job(&ctx, "pool.job", enq);
+                        catch_unwind(AssertUnwindSafe(task))
+                    };
                     b.complete(result.err());
                 });
                 // SAFETY: `run_all` does not return until `remaining == 0`,
@@ -362,6 +381,30 @@ mod tests {
         assert_eq!(pool.n_workers(), 3);
         pool.ensure_workers(2); // never shrinks
         assert_eq!(pool.n_workers(), 3);
+    }
+
+    #[test]
+    fn jobs_parent_to_submitting_span() {
+        let pool = ThreadPool::new(2);
+        let req = crate::obs::start_request("pool-trace");
+        {
+            let _submit = crate::obs::span!("submit-batch");
+            let tasks: Vec<Box<dyn FnOnce() + Send + '_>> = (0..4)
+                .map(|_| {
+                    let b: Box<dyn FnOnce() + Send + '_> = Box::new(|| {});
+                    b
+                })
+                .collect();
+            pool.run_all(tasks);
+        }
+        let trace = req.finish();
+        let submit = trace.spans.iter().find(|s| s.name == "submit-batch").unwrap();
+        let jobs: Vec<_> = trace.spans.iter().filter(|s| s.name == "pool.job").collect();
+        assert_eq!(jobs.len(), 4, "every pool job records a span");
+        assert!(
+            jobs.iter().all(|j| j.parent == submit.id),
+            "worker-executed jobs parent to the submitting span"
+        );
     }
 
     #[test]

@@ -310,7 +310,9 @@ fn get_or_build<T>(
         return Ok(Arc::clone(&slot.entry));
     }
     if s.slots.len() >= cap {
-        // Evict the least-recently-used slot.
+        // Evict the least-recently-used slot. A displaced factor costs a
+        // full refactorization if its lengthscale comes back, so thrash
+        // here is worth a warning.
         let lru = s
             .slots
             .iter()
@@ -318,6 +320,12 @@ fn get_or_build<T>(
             .min_by_key(|(_, sl)| sl.tick)
             .map(|(i, _)| i)
             .expect("non-empty at capacity");
+        crate::obs::log!(
+            Warn,
+            "train.cache",
+            { "capacity" => cap },
+            "factor cache full: displacing LRU entry — refit cost returns if its ℓ is revisited"
+        );
         s.slots.remove(lru);
     }
     s.slots.push(Slot { key, entry: Arc::clone(&built), tick });

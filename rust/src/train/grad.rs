@@ -543,6 +543,12 @@ fn mll_grad_mka_at_scope(
     let probes = match mode {
         TraceMode::Probes(p) => {
             let p = p.max(1);
+            crate::obs::log!(
+                Debug,
+                "train.grad",
+                { "probes" => p, "n" => n },
+                "trace terms via Hutchinson probes (stochastic, not exact)"
+            );
             let mut rng = Rng::new(probe_seed);
             let z = Mat::from_fn(n, p, |_, _| {
                 if rng.next_u64() & 1 == 0 {

@@ -175,6 +175,7 @@ pub fn select_hyperparams(
     k: usize,
     seed: u64,
 ) -> Result<TrainReport> {
+    let _sp = crate::obs::span!("train.select {} n={}", method.label(), data.n());
     let t = Timer::start();
     match selection {
         ModelSelection::GridCv { folds } => {
@@ -457,6 +458,8 @@ pub fn train_model_sharded(
     if n_shards <= 1 {
         return train_model(method, data, selection, k, seed);
     }
+    let _sp =
+        crate::obs::span!("train.model_sharded {} n={} k={n_shards}", method.label(), data.n());
     let t = Timer::start();
     let mut report =
         select_hyperparams_sharded(method, data, selection, k, seed, n_shards, assign)?;
@@ -494,11 +497,15 @@ pub fn train_model(
     k: usize,
     seed: u64,
 ) -> Result<(Box<dyn GpModel>, TrainReport)> {
+    let _sp = crate::obs::span!("train.model {} n={}", method.label(), data.n());
     let t = Timer::start();
     let mut report = select_hyperparams(method, data, selection, k, seed)?;
-    let model = match &report.lengthscales {
-        Some(ells) => fit_model_ard(method, data, ells, report.best.sigma2, k, seed)?,
-        None => fit_model(method, data, report.best, k, seed)?,
+    let model = {
+        let _sp = crate::obs::span!("train.final_fit");
+        match &report.lengthscales {
+            Some(ells) => fit_model_ard(method, data, ells, report.best.sigma2, k, seed)?,
+            None => fit_model(method, data, report.best, k, seed)?,
+        }
     };
     report.train_secs = t.elapsed_secs();
     Ok((model, report))

@@ -1,0 +1,298 @@
+//! End-to-end exercises of the observability plane.
+//!
+//! Four properties, each pinned against the real serving stack:
+//!
+//! 1. **Tracing is a pure observer** — fit, predict and hyperparameter
+//!    training produce bit-identical values with a live request trace
+//!    installed (the thread-count analogue lives in
+//!    `par_determinism.rs`).
+//! 2. **Span trees reach stage depth** — a traced sharded predict
+//!    records the full chain router op → fleet → pool job → shard
+//!    expert → cascade stage, with parents intact across the pool.
+//! 3. **Rings stay bounded** — traces and events never outgrow their
+//!    configured capacities no matter how many are pushed.
+//! 4. **The coordinator round-trips** — over a real TCP connection with
+//!    a Chrome trace-event sink attached: traced vs untraced predicts
+//!    agree exactly, `trace`/`logs`/`diagnose` answer, `diagnose` does
+//!    not refactorize, and the sink file is viewer-loadable.
+
+use std::sync::Arc;
+
+use mka_gp::cluster::ClusterMethod;
+use mka_gp::coordinator::{Client, Router, Server, ServiceConfig};
+use mka_gp::data::synth::{gp_dataset, SynthSpec};
+use mka_gp::experiments::methods::Method;
+use mka_gp::gp::mka_gp::MkaGp;
+use mka_gp::gp::sharded::ShardedGp;
+use mka_gp::gp::GpModel;
+use mka_gp::kernels::RbfKernel;
+use mka_gp::mka::MkaConfig;
+use mka_gp::obs;
+use mka_gp::train::{select_hyperparams, ModelSelection, OptimBudget};
+use mka_gp::util::Json;
+
+fn small_cfg(n_threads: usize) -> MkaConfig {
+    MkaConfig { d_core: 16, block_size: 32, n_threads, ..MkaConfig::default() }
+}
+
+#[test]
+fn tracing_changes_no_bits_in_fit_predict_train() {
+    let data = gp_dataset(&SynthSpec::named("obs-bits", 200, 2), 21);
+    let (tr, te) = data.split(0.85, 4);
+    let kern = RbfKernel::new(1.0);
+    let cfg = small_cfg(2);
+
+    let base_model = MkaGp::fit(&tr, &kern, 0.1, &cfg).unwrap();
+    let base_pred = base_model.predict(&te.x);
+    let base_mll = base_model.log_marginal().unwrap();
+
+    let guard = obs::start_request("op.fit+predict");
+    let traced_model = MkaGp::fit(&tr, &kern, 0.1, &cfg).unwrap();
+    let traced_pred = traced_model.predict(&te.x);
+    let traced_mll = traced_model.log_marginal().unwrap();
+    let trace = guard.finish();
+
+    assert_eq!(base_mll.to_bits(), traced_mll.to_bits(), "log marginal moved under tracing");
+    for i in 0..te.n() {
+        assert_eq!(base_pred.mean[i].to_bits(), traced_pred.mean[i].to_bits(), "mean[{i}]");
+        assert_eq!(base_pred.var[i].to_bits(), traced_pred.var[i].to_bits(), "var[{i}]");
+    }
+    // ... and the trace actually saw the work it observed.
+    assert!(
+        trace.spans.iter().any(|s| s.name.starts_with("gp.predict")),
+        "no gp.predict span recorded"
+    );
+    assert!(
+        trace.spans.iter().any(|s| s.name.starts_with("mka.factorize")),
+        "no mka.factorize span recorded"
+    );
+
+    // Hyperparameter training: the evidence search (multi-start
+    // Nelder-Mead over the cached factor plane) selects bit-identical
+    // hyperparameters traced vs untraced.
+    let small = gp_dataset(&SynthSpec::named("obs-train", 70, 2), 9);
+    let sel =
+        ModelSelection::Mll { budget: OptimBudget { max_evals: 10, n_starts: 2, tol: 1e-6 } };
+    let plain = select_hyperparams(Method::Mka, &small, &sel, 10, 5).unwrap();
+    let tguard = obs::start_request("op.train");
+    let traced = select_hyperparams(Method::Mka, &small, &sel, 10, 5).unwrap();
+    let ttrace = tguard.finish();
+    assert_eq!(plain.best.lengthscale.to_bits(), traced.best.lengthscale.to_bits());
+    assert_eq!(plain.best.sigma2.to_bits(), traced.best.sigma2.to_bits());
+    assert_eq!(plain.best_mll.unwrap().to_bits(), traced.best_mll.unwrap().to_bits());
+    assert_eq!(plain.evals, traced.evals);
+    assert!(
+        ttrace.spans.iter().any(|s| s.name.starts_with("train.select")),
+        "no train.select span recorded"
+    );
+}
+
+/// A traced sharded predict must record the whole chain
+/// `op → sharded.predict → pool.job → shard k predict → gp.predict →
+/// stage i fwd` with parent links intact across the pool hand-off.
+#[test]
+fn sharded_predict_trace_reaches_stage_depth() {
+    let data = gp_dataset(&SynthSpec::named("obs-depth", 260, 2), 33);
+    let (tr, te) = data.split(0.9, 7);
+    // Small blocks so each ~117-point shard factorizes through >= 1
+    // compression stage (stage spans exist to find).
+    let cfg = MkaConfig { d_core: 12, block_size: 32, n_threads: 2, ..MkaConfig::default() };
+    let fleet =
+        ShardedGp::fit(&tr, &RbfKernel::new(1.0), 0.1, &cfg, 2, ClusterMethod::KMeans).unwrap();
+
+    let guard = obs::start_request("op.predict");
+    let _ = fleet.predict(&te.x);
+    let trace = guard.finish();
+
+    let by_id: std::collections::HashMap<u64, &obs::SpanRecord> =
+        trace.spans.iter().map(|s| (s.id, s)).collect();
+    let depth_of = |s: &obs::SpanRecord| {
+        let mut d = 1;
+        let mut cur = s;
+        while cur.parent != 0 {
+            cur = by_id[&cur.parent];
+            d += 1;
+        }
+        d
+    };
+
+    let root = trace.spans.iter().find(|s| s.id == 1).expect("root span");
+    assert_eq!(root.name, "op.predict");
+    for name in ["sharded.predict", "shard ", "gp.predict"] {
+        assert!(
+            trace.spans.iter().any(|s| s.name.starts_with(name)),
+            "no span named {name}* in {:?}",
+            trace.spans.iter().map(|s| &s.name).collect::<Vec<_>>()
+        );
+    }
+    let stage = trace
+        .spans
+        .iter()
+        .filter(|s| s.name.starts_with("stage ") && s.name.contains("fwd"))
+        .max_by_key(|s| depth_of(s))
+        .expect("no cascade stage span recorded");
+    assert!(
+        depth_of(stage) >= 4,
+        "stage span too shallow (depth {}): the pool hand-off lost its parent",
+        depth_of(stage)
+    );
+
+    // The rendered tree carries self/child wall-time at every node.
+    let tree = obs::trace_tree_json(&trace);
+    let root_node = tree.get("root").expect("tree root");
+    for key in ["wall_us", "self_us", "child_us"] {
+        assert!(root_node.num_field(key).is_some(), "tree root missing {key}");
+    }
+    assert!(tree.num_field("n_spans").unwrap() >= 6.0);
+}
+
+/// Both observability rings are hard-bounded: pushing far past capacity
+/// never grows them beyond it. (Capacity is a process-global other tests
+/// may also set; bound against the max of before/after reads.)
+#[test]
+fn trace_and_event_rings_stay_bounded() {
+    let trace_cap = obs::trace_capacity();
+    for i in 0..trace_cap + 5 {
+        let g = obs::start_request(&format!("ring-probe-{i}"));
+        drop(g);
+    }
+    let cap_now = obs::trace_capacity().max(trace_cap);
+    assert!(
+        obs::recent_traces(usize::MAX).len() <= cap_now,
+        "trace ring exceeded capacity {cap_now}"
+    );
+
+    let log_cap = obs::log_capacity();
+    for i in 0..log_cap + 10 {
+        obs::log!(Info, "obs.integration", { "i" => i }, "ring bound probe {i}");
+    }
+    let cap_now = obs::log_capacity().max(log_cap);
+    let events = obs::recent_events(obs::Level::Debug, usize::MAX);
+    assert!(events.len() <= cap_now, "event ring exceeded capacity {cap_now}");
+    assert!(
+        events.iter().any(|e| e.target == "obs.integration"),
+        "own events displaced entirely from a ring larger than the push count"
+    );
+}
+
+fn fit_req(model: &str, n: usize, shards: usize) -> Json {
+    let data = gp_dataset(&SynthSpec::named("obs-tcp", n, 1), 3);
+    let x: Vec<Json> = (0..n).map(|i| Json::from_f64_slice(data.x.row(i))).collect();
+    Json::obj()
+        .with("op", Json::Str("fit".into()))
+        .with("model", Json::Str(model.into()))
+        .with("method", Json::Str("mka".into()))
+        .with("shards", Json::Num(shards as f64))
+        .with("x", Json::Arr(x))
+        .with("y", Json::from_f64_slice(&data.y))
+        .with(
+            "params",
+            Json::obj()
+                .with("lengthscale", Json::Num(1.0))
+                .with("sigma2", Json::Num(0.1))
+                .with("k", Json::Num(8.0)),
+        )
+}
+
+fn predict_req(model: &str, trace: Option<bool>) -> Json {
+    let mut j = Json::obj()
+        .with("op", Json::Str("predict".into()))
+        .with("model", Json::Str(model.into()))
+        .with(
+            "x",
+            Json::Arr(vec![
+                Json::from_f64_slice(&[0.1]),
+                Json::from_f64_slice(&[0.9]),
+                Json::from_f64_slice(&[1.7]),
+            ]),
+        );
+    if let Some(t) = trace {
+        j.set("trace", Json::Bool(t));
+    }
+    j
+}
+
+/// Full smoke over a real socket: server with a Chrome trace-event sink
+/// (`trace_out` implies trace-all), sharded fit, traced and untraced
+/// predicts with zero value diff, then the three introspection ops —
+/// and `diagnose` must not trigger a single new factorization.
+#[test]
+fn tcp_round_trip_with_trace_out_sink() {
+    let sink =
+        std::env::temp_dir().join(format!("mka_obs_integration_{}.json", std::process::id()));
+    let cfg = ServiceConfig {
+        batch_window_ms: 0,
+        n_workers: 1,
+        trace_out: Some(sink.clone()),
+        trace_ring: 16,
+        log_ring: 64,
+        ..Default::default()
+    };
+    let router = Arc::new(Router::new(cfg));
+    let server = Server::start(router, "127.0.0.1", 0).unwrap();
+    let mut client = Client::connect(&server.addr().to_string()).unwrap();
+
+    let resp = client.call(&fit_req("obs-fleet", 80, 2)).unwrap();
+    assert_eq!(resp.get("ok"), Some(&Json::Bool(true)), "fit failed: {resp:?}");
+
+    // trace-all is on (trace_out), so opt *out* explicitly for the
+    // baseline; the traced response must match it value-for-value.
+    let plain = client.call(&predict_req("obs-fleet", Some(false))).unwrap();
+    assert_eq!(plain.get("ok"), Some(&Json::Bool(true)), "{plain:?}");
+    assert!(plain.get("trace").is_none(), "trace echoed despite opt-out");
+    let traced = client.call(&predict_req("obs-fleet", Some(true))).unwrap();
+    assert_eq!(traced.get("ok"), Some(&Json::Bool(true)), "{traced:?}");
+    assert_eq!(plain.get("mean"), traced.get("mean"), "tracing changed the mean");
+    assert_eq!(plain.get("var"), traced.get("var"), "tracing changed the variance");
+    let tree = traced.get("trace").expect("traced predict echoes its span tree");
+    assert_eq!(tree.get("root").unwrap().str_field("name"), Some("op.predict"));
+    assert!(tree.num_field("n_spans").unwrap() >= 1.0);
+
+    // The ring op replays finished traces.
+    let ring = client.call(&Json::parse(r#"{"op":"trace","tail":16}"#).unwrap()).unwrap();
+    assert_eq!(ring.get("ok"), Some(&Json::Bool(true)), "{ring:?}");
+    assert!(!ring.get("traces").unwrap().as_arr().unwrap().is_empty());
+    assert_eq!(ring.num_field("ring_capacity"), Some(16.0));
+
+    let logs = client.call(&Json::parse(r#"{"op":"logs","level":"debug"}"#).unwrap()).unwrap();
+    assert_eq!(logs.get("ok"), Some(&Json::Bool(true)), "{logs:?}");
+    assert_eq!(logs.str_field("level"), Some("debug"));
+
+    // diagnose: full numerical-health report, zero refactorizations.
+    let before = mka_gp::mka::factorize_count();
+    let diag =
+        client.call(&Json::parse(r#"{"op":"diagnose","model":"obs-fleet"}"#).unwrap()).unwrap();
+    assert_eq!(diag.get("ok"), Some(&Json::Bool(true)), "{diag:?}");
+    assert_eq!(mka_gp::mka::factorize_count(), before, "diagnose refactorized");
+    let d = diag.get("diagnose").unwrap();
+    assert_eq!(d.str_field("kind"), Some("sharded"));
+    let shards = d.get("shards").unwrap().as_arr().unwrap();
+    assert!(shards.len() >= 2, "effective shard count collapsed: {d:?}");
+    for s in shards {
+        let factor = s.get("model").unwrap().get("factor").unwrap();
+        assert!(factor.num_field("condition").unwrap() >= 1.0);
+        assert!(factor.num_field("lambda_min").unwrap() > 0.0);
+    }
+
+    // Unsupported / unknown targets come back as typed errors.
+    let bad = client.call(&Json::parse(r#"{"op":"diagnose","model":"ghost"}"#).unwrap()).unwrap();
+    assert_eq!(bad.get("ok"), Some(&Json::Bool(false)));
+
+    drop(client);
+    drop(server);
+    // Detach the sink (and the implied trace-all) before inspecting the
+    // file, so later tests in this process run un-traced.
+    obs::clear_trace_out();
+    obs::set_trace_all(false);
+
+    let body = std::fs::read_to_string(&sink).unwrap();
+    let _ = std::fs::remove_file(&sink);
+    assert!(body.starts_with("[\n"), "not a streaming trace-event array");
+    assert!(body.contains("\"ph\":\"X\""), "no complete events exported");
+    for line in body.lines().skip(1) {
+        let line = line.trim_end_matches(',');
+        if !line.is_empty() {
+            Json::parse(line).unwrap_or_else(|e| panic!("unparseable event line ({e:?}): {line}"));
+        }
+    }
+}

@@ -220,6 +220,37 @@ fn predict_bit_identical_across_thread_counts() {
     }
 }
 
+/// Tracing is strictly an observer: with a live request trace installed
+/// (spans recording through fit, factorize, cascade and the pool
+/// hand-off), predictions reproduce the untraced bits exactly at every
+/// thread count — and the trace really did record the cascade.
+#[test]
+fn traced_predict_bit_identical_to_untraced() {
+    let data = gp_dataset(&SynthSpec::named("obs-det", 360, 2), 13);
+    let (tr, te) = data.split(0.88, 3);
+    let kern = RbfKernel::new(1.0);
+    let cfg = |t: usize| MkaConfig {
+        d_core: 24,
+        block_size: 48,
+        n_threads: t,
+        ..MkaConfig::default()
+    };
+    for t in [1, 2, 4] {
+        let base = MkaGp::fit(&tr, &kern, 0.1, &cfg(t)).unwrap().predict(&te.x);
+        let guard = mka_gp::obs::start_request("op.predict");
+        let traced = MkaGp::fit(&tr, &kern, 0.1, &cfg(t)).unwrap().predict(&te.x);
+        let trace = guard.finish();
+        assert!(
+            trace.spans.iter().any(|s| s.name.starts_with("gp.predict")),
+            "t={t}: trace recorded no gp.predict span"
+        );
+        for i in 0..te.n() {
+            assert_eq!(base.mean[i].to_bits(), traced.mean[i].to_bits(), "mean[{i}] t={t}");
+            assert_eq!(base.var[i].to_bits(), traced.var[i].to_bits(), "var[{i}] t={t}");
+        }
+    }
+}
+
 /// Cached-factor evidence training is bit-identical at any pool size:
 /// the per-run `FactorCache` stores deterministic σ²-independent halves,
 /// so the hit/miss interleaving of concurrent Nelder–Mead starts cannot
