@@ -6,7 +6,8 @@
 //!
 //! `--json` mode benches the sharded serving plane instead: fit, predict
 //! and retune wall time vs shard count, asserting sharded predictions are
-//! bit-identical at every thread count, written to `BENCH_shard.json`:
+//! bit-identical at every thread count, plus the streaming plane's
+//! observe-vs-refit wall-time gap, written to `BENCH_shard.json`:
 //!
 //!     cargo bench --bench coordinator_perf -- --json \
 //!         [--n 960] [--shards 1,2,4] [--threads 1,2,4] [--k 24] \
@@ -19,6 +20,7 @@ use mka_gp::coordinator::{Client, Router, Server, ServiceConfig};
 use mka_gp::data::synth::{gp_dataset, SynthSpec};
 use mka_gp::experiments::methods::mka_config_for;
 use mka_gp::gp::sharded::ShardedGp;
+use mka_gp::gp::{ObservePath, ObservePolicy};
 use mka_gp::prelude::*;
 use mka_gp::util::Timer;
 
@@ -154,7 +156,8 @@ fn main() {
 
 /// `--json` mode: the sharded serving plane's scaling trajectory — fit,
 /// predict and retune wall time vs shard count, with bit-determinism
-/// asserts across thread counts — written to `BENCH_shard.json`.
+/// asserts across thread counts — plus the streaming plane's
+/// observe-vs-refit wall-time comparison, written to `BENCH_shard.json`.
 fn run_shard_json_bench(args: &Args) {
     let n = args.get_usize("n", 960);
     let shard_counts = args.get_usize_list("shards", &[1, 2, 4]);
@@ -262,6 +265,45 @@ fn run_shard_json_bench(args: &Args) {
         }
     }
 
+    // Streaming economics: appending one held-out batch through the
+    // incremental observe path vs absorbing the same batch through a
+    // drift-forced full refit — the wall-time gap the observe plane
+    // exists for, recorded into the trajectory alongside the shard sweep.
+    mka_gp::par::set_threads(threads_list.last().copied().unwrap_or(1));
+    let base = MkaGp::fit(&tr, &kern, 0.1, &cfg).expect("observe base fit");
+    base.log_marginal().expect("warm factor"); // build the factor outside both timers
+    let b = 16.min(te.n());
+    let xb = te.x.block(0, b, 0, te.x.cols);
+    let yb = te.y[..b].to_vec();
+    let t_obs = Timer::start();
+    let (_inc, rep_inc) = base.observed(&xb, &yb, &ObservePolicy::default()).expect("observe");
+    let observe_s = t_obs.elapsed_secs();
+    assert_eq!(rep_inc.path, ObservePath::Incremental, "default policy must extend in place");
+    let forced = ObservePolicy { drift_threshold: 1e-12, ..ObservePolicy::default() };
+    let t_ref = Timer::start();
+    let (_refit, rep_ref) = base.observed(&xb, &yb, &forced).expect("forced refit");
+    let refit_s = t_ref.elapsed_secs();
+    assert_eq!(rep_ref.path, ObservePath::Refit, "zero drift threshold must force a refit");
+    let stats = rep_inc.stats.as_ref().expect("incremental path carries extend stats");
+    println!(
+        "observe batch={b} (n={}): incremental {} ({}/{} stages rebuilt) vs refit {} ({:.1}x)",
+        tr.n(),
+        fmt_secs(observe_s),
+        stats.stages_rebuilt,
+        stats.stages_total,
+        fmt_secs(refit_s),
+        refit_s / observe_s.max(1e-12)
+    );
+    let observe = Json::obj()
+        .with("batch", Json::Num(b as f64))
+        .with("n_base", Json::Num(tr.n() as f64))
+        .with("observe_s", Json::Num(observe_s))
+        .with("refit_s", Json::Num(refit_s))
+        .with("refit_over_observe", Json::Num(refit_s / observe_s.max(1e-12)))
+        .with("stages_rebuilt", Json::Num(stats.stages_rebuilt as f64))
+        .with("stages_total", Json::Num(stats.stages_total as f64))
+        .with("blocks_reused", Json::Num(stats.blocks_reused as f64));
+
     let doc = Json::obj()
         .with("bench", Json::Str("shard_plane".into()))
         .with(
@@ -270,6 +312,7 @@ fn run_shard_json_bench(args: &Args) {
         )
         .with("n", Json::Num(n as f64))
         .with("k", Json::Num(k as f64))
+        .with("observe", observe)
         .with("results", Json::Arr(results));
     std::fs::write(&out_path, doc.dump_pretty()).expect("write bench json");
     println!("wrote {out_path}");

@@ -15,14 +15,17 @@
 //! `--json` mode writes the machine-readable `BENCH_train.json`
 //! trajectory (MLL evals/sec, train wall time, shift-reuse economics —
 //! `train_refactorize_per_eval` and `retune_ms` vs `fit_ms` — vs
-//! n × threads), asserting along the way that the evidence value is
-//! bit-identical at every thread count:
+//! n × threads, plus the served `train.*` histograms with their
+//! p50/p95/p99 from a burst of coordinator `train` ops), asserting along
+//! the way that the evidence value is bit-identical at every thread
+//! count:
 //!
 //!     cargo bench --bench train_bench -- --json \
 //!         [--sizes 512,1024,2048] [--threads 1,2,4] [--k 32] \
 //!         [--max-evals 12] [--out ../BENCH_train.json]
 
 use mka_gp::bench::{bench_budget, fmt_secs, Table};
+use mka_gp::coordinator::{Router, ServiceConfig};
 use mka_gp::data::synth::{gp_dataset, SynthSpec};
 use mka_gp::experiments::methods::{mka_config_for, Method};
 use mka_gp::gp::cv::HyperParams;
@@ -214,6 +217,12 @@ fn run_json_bench(args: &Args) {
         }
     }
 
+    // Served-plane percentiles: the trajectory's per-run wall times above
+    // are single samples — the p50/p95/p99 view comes from the
+    // coordinator's own `train.*` histograms after a burst of `train` ops.
+    let smallest = sizes.iter().copied().min().unwrap_or(256);
+    let hists = served_train_histograms(smallest, k, max_evals);
+
     let doc = Json::obj()
         .with("bench", Json::Str("train_plane".into()))
         .with(
@@ -222,7 +231,57 @@ fn run_json_bench(args: &Args) {
         )
         .with("k", Json::Num(k as f64))
         .with("max_evals", Json::Num(max_evals as f64))
+        .with("train_histograms", hists)
         .with("results", Json::Arr(results));
     std::fs::write(&out_path, doc.dump_pretty()).expect("write bench json");
     println!("wrote {out_path}");
+}
+
+/// Drive a burst of synchronous `{"op":"train"}` requests through a live
+/// router and return its `train.{secs,evals,factorizations,best_mll}` and
+/// `op.train_secs` histograms (count/mean/p50/p95/p99/max), so the
+/// trajectory carries the train plane's percentile view — the same shape
+/// the `metrics` op serves in production — next to the per-run wall times.
+fn served_train_histograms(n: usize, k: usize, max_evals: usize) -> Json {
+    let cfg = ServiceConfig { port: 0, n_workers: 2, batch_window_ms: 0, ..Default::default() };
+    let router = Router::new(cfg);
+    let data = gp_dataset(&SynthSpec::named("tb-hist", n, 2), 9);
+    let x = Json::Arr((0..data.n()).map(|i| Json::from_f64_slice(data.x.row(i))).collect());
+    let y = Json::from_f64_slice(&data.y);
+    let reps = 6usize;
+    for rep in 0..reps {
+        let req = Json::obj()
+            .with("op", Json::Str("train".into()))
+            .with("model", Json::Str(format!("tb-hist-{rep}")))
+            .with("method", Json::Str("mka".into()))
+            .with("x", x.clone())
+            .with("y", y.clone())
+            .with("selection", Json::Str("mll".into()))
+            .with(
+                "budget",
+                Json::obj()
+                    .with("max_evals", Json::Num(max_evals.min(6) as f64))
+                    .with("n_starts", Json::Num(1.0))
+                    .with("tol", Json::Num(1e-3)),
+            )
+            .with("params", Json::obj().with("k", Json::Num(k.min(12) as f64)))
+            .with("async", Json::Bool(false));
+        let resp = router.handle(&req);
+        assert_eq!(resp.get("ok"), Some(&Json::Bool(true)), "served train failed: {resp:?}");
+    }
+    let mut out = std::collections::BTreeMap::new();
+    let snap = router.metrics.snapshot();
+    if let Some(Json::Obj(hists)) = snap.get("histograms") {
+        for (name, h) in hists {
+            if name.starts_with("train.") || name == "op.train_secs" {
+                out.insert(name.clone(), h.clone());
+            }
+        }
+    }
+    assert!(
+        out.contains_key("train.secs") && out.contains_key("op.train_secs"),
+        "served train burst must populate train.secs and op.train_secs histograms"
+    );
+    println!("served train histograms (n={n}, {reps} train ops): {} series", out.len());
+    Json::Obj(out)
 }

@@ -62,6 +62,20 @@ pub struct ServiceConfig {
     pub trace_ring: usize,
     /// How many structured events the log ring keeps for the `logs` op.
     pub log_ring: usize,
+    /// Streaming observe drift gate: force a windowed refit when the
+    /// pre-update model's mean standardized squared residual on the
+    /// incoming batch exceeds this (≈1 when calibrated).
+    pub observe_drift_threshold: f64,
+    /// Streaming observe compression gate: refit when the extended
+    /// factor's core has grown past this multiple of the configured
+    /// `d_core`.
+    pub observe_max_core_growth: f64,
+    /// Refit window for the streaming observe fallback: keep only the
+    /// most recent this-many training points (0 = keep everything).
+    pub observe_window: usize,
+    /// Floor for recurring refresh periods: `refresh` requests asking for
+    /// a shorter `every_ms` are clamped up to this.
+    pub refresh_min_interval_ms: u64,
 }
 
 impl Default for ServiceConfig {
@@ -89,6 +103,10 @@ impl Default for ServiceConfig {
             trace_out: None,
             trace_ring: 32,
             log_ring: 256,
+            observe_drift_threshold: 16.0,
+            observe_max_core_growth: 4.0,
+            observe_window: 0,
+            refresh_min_interval_ms: 1000,
         }
     }
 }
@@ -126,6 +144,10 @@ impl ServiceConfig {
                 }
                 "trace_ring" => self.trace_ring = parse(k, v)?,
                 "log_ring" => self.log_ring = parse(k, v)?,
+                "observe_drift_threshold" => self.observe_drift_threshold = parse(k, v)?,
+                "observe_max_core_growth" => self.observe_max_core_growth = parse(k, v)?,
+                "observe_window" => self.observe_window = parse(k, v)?,
+                "refresh_min_interval_ms" => self.refresh_min_interval_ms = parse(k, v)?,
                 _ => {} // unknown keys ignored (forward compatible)
             }
         }
@@ -188,7 +210,18 @@ impl ServiceConfig {
         if self.trace_ring == 0 || self.log_ring == 0 {
             return Err(Error::Config("trace_ring and log_ring must be >= 1".into()));
         }
+        self.observe_policy().validate()?;
         Ok(())
+    }
+
+    /// The streaming-observe gates implied by the service defaults;
+    /// per-request fields on the `observe` op override them.
+    pub fn observe_policy(&self) -> crate::gp::ObservePolicy {
+        crate::gp::ObservePolicy {
+            drift_threshold: self.observe_drift_threshold,
+            max_core_growth: self.observe_max_core_growth,
+            window: self.observe_window,
+        }
     }
 
     /// The shard-partition clustering method implied by `shard_assign`.
@@ -245,6 +278,10 @@ impl ServiceConfig {
             )
             .with("trace_ring", Json::Num(self.trace_ring as f64))
             .with("log_ring", Json::Num(self.log_ring as f64))
+            .with("observe_drift_threshold", Json::Num(self.observe_drift_threshold))
+            .with("observe_max_core_growth", Json::Num(self.observe_max_core_growth))
+            .with("observe_window", Json::Num(self.observe_window as f64))
+            .with("refresh_min_interval_ms", Json::Num(self.refresh_min_interval_ms as f64))
     }
 }
 
@@ -293,6 +330,33 @@ mod tests {
         let mut kv3 = BTreeMap::new();
         kv3.insert("batch_queue_max".to_string(), "0".to_string());
         assert!(c.apply(&kv3).is_err());
+    }
+
+    #[test]
+    fn observe_knobs_layer_and_validate() {
+        let mut c = ServiceConfig::default();
+        assert_eq!(c.observe_policy().drift_threshold, 16.0);
+        let mut kv = BTreeMap::new();
+        kv.insert("observe_drift_threshold".to_string(), "2.5".to_string());
+        kv.insert("observe_max_core_growth".to_string(), "8".to_string());
+        kv.insert("observe_window".to_string(), "512".to_string());
+        kv.insert("refresh_min_interval_ms".to_string(), "50".to_string());
+        c.apply(&kv).unwrap();
+        let p = c.observe_policy();
+        assert_eq!(p.drift_threshold, 2.5);
+        assert_eq!(p.max_core_growth, 8.0);
+        assert_eq!(p.window, 512);
+        assert_eq!(c.refresh_min_interval_ms, 50);
+        let j = c.to_json();
+        assert_eq!(j.num_field("observe_drift_threshold"), Some(2.5));
+        assert_eq!(j.usize_field("observe_window"), Some(512));
+        // gate thresholds must stay meaningful
+        let mut bad = BTreeMap::new();
+        bad.insert("observe_drift_threshold".to_string(), "0".to_string());
+        assert!(c.clone().apply(&bad).is_err());
+        let mut bad2 = BTreeMap::new();
+        bad2.insert("observe_max_core_growth".to_string(), "0.5".to_string());
+        assert!(c.apply(&bad2).is_err());
     }
 
     #[test]

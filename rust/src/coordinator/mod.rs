@@ -2,14 +2,16 @@
 //! library: a JSON-over-TCP request [`server`], a request [`router`], an
 //! async fit [`jobs`] store over a [`pool`] of workers, a dynamic
 //! prediction [`batcher`] (concurrent predicts against one model share a
-//! single joint-kernel factorization), a [`metrics`] registry and a
-//! layered [`config`] system.
+//! single joint-kernel factorization), a recurring [`refresh`] scheduler
+//! for streaming models, a [`metrics`] registry and a layered [`config`]
+//! system.
 
 pub mod batcher;
 pub mod config;
 pub mod jobs;
 pub mod metrics;
 pub mod pool;
+pub mod refresh;
 pub mod router;
 pub mod server;
 
@@ -18,5 +20,6 @@ pub use config::ServiceConfig;
 pub use jobs::{JobState, JobStore, ModelRegistry};
 pub use metrics::Metrics;
 pub use pool::WorkerPool;
+pub use refresh::RefreshScheduler;
 pub use router::Router;
 pub use server::{Client, Server};

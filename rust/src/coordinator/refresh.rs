@@ -1,0 +1,321 @@
+//! Recurring background refresh: re-fit registered models on a schedule.
+//!
+//! The streaming observe path keeps a model current cheaply, but its
+//! incremental extensions are approximations — after enough of them the
+//! factorization drifts from what a fresh fit would build. The
+//! [`RefreshScheduler`] closes that gap: a `refresh` request registers a
+//! per-model period, and a tick thread fires a re-fit job through the
+//! existing [`JobStore`]/[`WorkerPool`] machinery whenever one is due.
+//! Refits call the model's own [`GpModel::refreshed`] hook (a
+//! from-scratch fit of its currently-held training set) and republish
+//! atomically, so serving never pauses: readers keep the old `Arc` until
+//! the swap.
+//!
+//! Scheduling guarantees:
+//!
+//! * at most one refresh per model is in flight at a time (a slow refit
+//!   never stacks up behind itself);
+//! * periods are clamped up to the configured
+//!   `refresh_min_interval_ms` floor;
+//! * a policy whose model has vanished from the registry is dropped
+//!   with a warn event rather than firing forever.
+//!
+//! [`GpModel::refreshed`]: crate::gp::GpModel::refreshed
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use crate::coordinator::jobs::{JobState, JobStore, ModelRegistry};
+use crate::coordinator::metrics::Metrics;
+use crate::coordinator::pool::WorkerPool;
+use crate::obs;
+use crate::util::json::Json;
+
+/// One model's refresh policy.
+struct Policy {
+    every_ms: u64,
+    next_due: Instant,
+    /// Set while a refresh job for this model is queued or running.
+    inflight: Arc<AtomicBool>,
+    /// Completed + in-flight fires since the policy was registered.
+    fires: u64,
+}
+
+struct Inner {
+    policies: Mutex<BTreeMap<String, Policy>>,
+    stop: AtomicBool,
+    registry: ModelRegistry,
+    jobs: Arc<JobStore>,
+    pool: Arc<WorkerPool>,
+    metrics: Arc<Metrics>,
+    min_interval_ms: u64,
+}
+
+/// Background scheduler for recurring model re-fit jobs.
+pub struct RefreshScheduler {
+    inner: Arc<Inner>,
+    handle: Option<JoinHandle<()>>,
+}
+
+impl RefreshScheduler {
+    /// Start the tick thread. `min_interval_ms` is the floor every
+    /// scheduled period is clamped up to (and also bounds how stale a
+    /// due policy can go unnoticed: ticks run every ~10 ms).
+    pub fn new(
+        registry: ModelRegistry,
+        jobs: Arc<JobStore>,
+        pool: Arc<WorkerPool>,
+        metrics: Arc<Metrics>,
+        min_interval_ms: u64,
+    ) -> RefreshScheduler {
+        let inner = Arc::new(Inner {
+            policies: Mutex::new(BTreeMap::new()),
+            stop: AtomicBool::new(false),
+            registry,
+            jobs,
+            pool,
+            metrics,
+            min_interval_ms: min_interval_ms.max(1),
+        });
+        let tick = Arc::clone(&inner);
+        let handle = std::thread::Builder::new()
+            .name("mka-refresh".into())
+            .spawn(move || run_ticks(&tick))
+            .ok();
+        RefreshScheduler { inner, handle }
+    }
+
+    /// Register (or replace) a recurring refresh for `model`, returning
+    /// the effective period after clamping to the configured floor. The
+    /// first fire happens one period from now.
+    pub fn schedule(&self, model: &str, every_ms: u64) -> u64 {
+        let every = every_ms.max(self.inner.min_interval_ms);
+        let mut p = self.inner.policies.lock().unwrap();
+        let existing_inflight = p.get(model).map(|old| Arc::clone(&old.inflight));
+        p.insert(
+            model.to_string(),
+            Policy {
+                every_ms: every,
+                next_due: Instant::now() + Duration::from_millis(every),
+                inflight: existing_inflight.unwrap_or_else(|| Arc::new(AtomicBool::new(false))),
+                fires: 0,
+            },
+        );
+        every
+    }
+
+    /// Drop `model`'s refresh policy. Returns whether one existed. An
+    /// already-running refresh job finishes normally; it just never
+    /// fires again.
+    pub fn cancel(&self, model: &str) -> bool {
+        self.inner.policies.lock().unwrap().remove(model).is_some()
+    }
+
+    /// The registered policies, for the `refresh` op's list form.
+    pub fn policies_json(&self) -> Json {
+        let p = self.inner.policies.lock().unwrap();
+        let mut arr = Vec::with_capacity(p.len());
+        for (name, pol) in p.iter() {
+            arr.push(
+                Json::obj()
+                    .with("model", Json::Str(name.clone()))
+                    .with("every_ms", Json::Num(pol.every_ms as f64))
+                    .with("fires", Json::Num(pol.fires as f64))
+                    .with("inflight", Json::Bool(pol.inflight.load(Ordering::SeqCst))),
+            );
+        }
+        Json::Arr(arr)
+    }
+
+    /// Number of registered policies.
+    pub fn len(&self) -> usize {
+        self.inner.policies.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+impl Drop for RefreshScheduler {
+    fn drop(&mut self) {
+        self.inner.stop.store(true, Ordering::SeqCst);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+/// The tick loop: scan for due policies, fire refresh jobs, sleep.
+fn run_ticks(inner: &Arc<Inner>) {
+    while !inner.stop.load(Ordering::SeqCst) {
+        let due: Vec<(String, Arc<AtomicBool>)> = {
+            let mut p = inner.policies.lock().unwrap();
+            let now = Instant::now();
+            let mut fired = Vec::new();
+            for (name, pol) in p.iter_mut() {
+                if now >= pol.next_due && !pol.inflight.load(Ordering::SeqCst) {
+                    pol.inflight.store(true, Ordering::SeqCst);
+                    pol.next_due = now + Duration::from_millis(pol.every_ms);
+                    pol.fires += 1;
+                    fired.push((name.clone(), Arc::clone(&pol.inflight)));
+                }
+            }
+            fired
+        };
+        for (name, inflight) in due {
+            fire(inner, name, inflight);
+        }
+        std::thread::sleep(Duration::from_millis(10));
+    }
+}
+
+/// Submit one refresh job for `name` through the job store + pool.
+fn fire(inner: &Arc<Inner>, name: String, inflight: Arc<AtomicBool>) {
+    let job_id = inner.jobs.create(&name);
+    inner.jobs.set_detail(
+        job_id,
+        Json::obj()
+            .with("kind", Json::Str("refresh".into()))
+            .with("model", Json::Str(name.clone())),
+    );
+    let scoped = Arc::clone(inner);
+    let submitted = inner.pool.submit(move || {
+        let _g = obs::span!("refresh.job model={name}");
+        scoped.jobs.set_state(job_id, JobState::Running);
+        let started = Instant::now();
+        let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            refresh_once(&scoped, &name)
+        }));
+        let secs = started.elapsed().as_secs_f64();
+        match outcome {
+            Ok(Ok(())) => {
+                scoped.metrics.incr("refreshes", 1);
+                scoped.metrics.observe("refresh.secs", secs);
+                scoped.jobs.set_state(job_id, JobState::Done { fit_secs: secs });
+            }
+            Ok(Err(msg)) => {
+                scoped.metrics.incr("refresh_errors", 1);
+                scoped.jobs.set_state(job_id, JobState::Failed { error: msg });
+            }
+            Err(panic) => {
+                let label = crate::coordinator::router::panic_label(panic);
+                scoped.metrics.incr("refresh_errors", 1);
+                scoped.jobs.set_state(job_id, JobState::Failed { error: label });
+            }
+        }
+        inflight.store(false, Ordering::SeqCst);
+    });
+    if !submitted {
+        inner.metrics.incr("refresh_errors", 1);
+        inner.jobs.set_state(job_id, JobState::Failed { error: "worker pool closed".into() });
+        inflight.store(false, Ordering::SeqCst);
+    }
+}
+
+/// One refresh: look the model up, re-fit via its `refreshed` hook,
+/// republish. A missing or refresh-incapable model drops its policy.
+fn refresh_once(inner: &Arc<Inner>, name: &str) -> std::result::Result<(), String> {
+    let Some(model) = inner.registry.get(name) else {
+        inner.policies.lock().unwrap().remove(name);
+        obs::log!(
+            Warn,
+            "coordinator.refresh",
+            { "model" => name },
+            "refresh policy dropped: model no longer registered"
+        );
+        return Err(format!("model {name:?} no longer registered; policy dropped"));
+    };
+    match model.refreshed() {
+        Some(Ok(fresh)) => {
+            inner.registry.publish(name, Arc::from(fresh));
+            Ok(())
+        }
+        Some(Err(e)) => Err(format!("refresh failed: {e}")),
+        None => {
+            inner.policies.lock().unwrap().remove(name);
+            obs::log!(
+                Warn,
+                "coordinator.refresh",
+                { "model" => name },
+                "refresh policy dropped: model does not support refresh"
+            );
+            Err(format!("model {name:?} does not support refresh; policy dropped"))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::Dataset;
+    use crate::gp::mka_gp::MkaGp;
+    use crate::kernels::RbfKernel;
+    use crate::la::dense::Mat;
+    use crate::mka::MkaConfig;
+
+    fn toy_model() -> Arc<dyn crate::gp::GpModel> {
+        let n = 48;
+        let x = Mat::from_fn(n, 2, |i, j| ((i * 7 + j * 3) % 13) as f64 / 13.0);
+        let y: Vec<f64> = (0..n).map(|i| (i as f64 * 0.37).sin()).collect();
+        let data = Dataset::new("toy", x, y);
+        let cfg = MkaConfig { d_core: 8, block_size: 16, n_threads: 1, ..MkaConfig::default() };
+        let gp = MkaGp::fit(&data, &RbfKernel::new(0.8), 1e-2, &cfg).unwrap();
+        Arc::new(gp)
+    }
+
+    fn rig(min_ms: u64) -> (RefreshScheduler, ModelRegistry, Arc<Metrics>) {
+        let registry = ModelRegistry::new();
+        let jobs = Arc::new(JobStore::new());
+        let pool = Arc::new(WorkerPool::new(1));
+        let metrics = Arc::new(Metrics::new());
+        let s = RefreshScheduler::new(registry.clone(), jobs, pool, Arc::clone(&metrics), min_ms);
+        (s, registry, metrics)
+    }
+
+    fn wait_for(mut cond: impl FnMut() -> bool) -> bool {
+        for _ in 0..400 {
+            if cond() {
+                return true;
+            }
+            std::thread::sleep(Duration::from_millis(10));
+        }
+        false
+    }
+
+    #[test]
+    fn recurring_refresh_republishes() {
+        let (s, registry, metrics) = rig(20);
+        registry.publish("m", toy_model());
+        // sub-floor request is clamped up
+        assert_eq!(s.schedule("m", 1), 20);
+        assert!(
+            wait_for(|| metrics.counter("refreshes") >= 2),
+            "refresh never fired twice: refreshes={} errors={}",
+            metrics.counter("refreshes"),
+            metrics.counter("refresh_errors")
+        );
+        assert!(registry.get("m").is_some(), "model must stay published");
+        let listed = s.policies_json();
+        let arr = listed.as_arr().unwrap();
+        assert_eq!(arr.len(), 1);
+        assert_eq!(arr[0].str_field("model"), Some("m"));
+        assert!(arr[0].usize_field("fires").unwrap() >= 2);
+        assert!(s.cancel("m"));
+        assert!(!s.cancel("m"));
+        assert!(s.is_empty());
+    }
+
+    #[test]
+    fn missing_model_drops_its_policy() {
+        let (s, _registry, metrics) = rig(20);
+        s.schedule("ghost", 1);
+        assert!(
+            wait_for(|| metrics.counter("refresh_errors") >= 1 && s.is_empty()),
+            "vanished model must drop its policy"
+        );
+    }
+}

@@ -39,6 +39,20 @@
 //!                                      state (per-stage compression,
 //!                                      shifted-spectrum condition, route
 //!                                      shares); never refactorizes
+//!   {"op": "observe", "model": "m1", "x": [[...]...], "y": [...],
+//!    "drift_threshold": 16.0, "max_core_growth": 4.0, "window": 0}
+//!                                    — streaming append: extend the
+//!                                      stored factorization incrementally
+//!                                      (untouched stages shared, not
+//!                                      rebuilt) unless a drift or
+//!                                      core-growth gate forces a windowed
+//!                                      full re-fit; gate knobs default
+//!                                      from the service config
+//!   {"op": "refresh", "model": "m1", "every_ms": 60000}
+//!                                    — recurring background re-fit jobs
+//!                                      through the job store; "every_ms"
+//!                                      0 cancels, omitting "model" lists
+//!                                      the registered policies
 
 use std::sync::Arc;
 use std::time::Duration;
@@ -48,6 +62,7 @@ use super::config::ServiceConfig;
 use super::jobs::{JobState, JobStore, ModelRegistry};
 use super::metrics::Metrics;
 use super::pool::WorkerPool;
+use super::refresh::RefreshScheduler;
 use crate::cluster::ClusterMethod;
 use crate::data::dataset::Dataset;
 use crate::error::{Error, Result};
@@ -82,6 +97,8 @@ pub const OPS: &[&str] = &[
     "trace",
     "logs",
     "diagnose",
+    "observe",
+    "refresh",
 ];
 
 /// Shared coordinator state + dispatch.
@@ -90,7 +107,8 @@ pub struct Router {
     pub metrics: Arc<Metrics>,
     pub registry: ModelRegistry,
     pub jobs: Arc<JobStore>,
-    pool: WorkerPool,
+    pub refresh: RefreshScheduler,
+    pool: Arc<WorkerPool>,
     batcher: PredictBatcher,
 }
 
@@ -127,8 +145,18 @@ impl Router {
             config.max_batch,
             config.batch_queue_max,
         );
-        let pool = WorkerPool::new(config.n_workers);
-        Router { config, metrics, registry, jobs: Arc::new(JobStore::new()), pool, batcher }
+        let pool = Arc::new(WorkerPool::new(config.n_workers));
+        let jobs = Arc::new(JobStore::new());
+        // Recurring re-fit jobs ride the same job store + worker pool as
+        // async fits, so `job` polling and panic containment are shared.
+        let refresh = RefreshScheduler::new(
+            registry.clone(),
+            Arc::clone(&jobs),
+            Arc::clone(&pool),
+            Arc::clone(&metrics),
+            config.refresh_min_interval_ms,
+        );
+        Router { config, metrics, registry, jobs, refresh, pool, batcher }
     }
 
     /// Handle one request; never panics — protocol errors become
@@ -146,7 +174,7 @@ impl Router {
         let trace_guard = want_trace.then(|| crate::obs::start_request(&format!("op.{op}")));
         // Per-op latency histograms for the serving verbs (successful
         // requests only — validation failures would drag p50 toward 0).
-        let timed = matches!(op, "fit" | "train" | "predict" | "retune");
+        let timed = matches!(op, "fit" | "train" | "predict" | "retune" | "observe");
         let op_timer = Timer::start();
         let out = match op {
             "ping" => Ok(Json::obj().with("pong", Json::Bool(true))),
@@ -226,6 +254,14 @@ impl Router {
                         .with(
                             "simd_level",
                             Json::Str(format!("{:?}", crate::la::simd_level())),
+                        )
+                        .with(
+                            "stage_rebuilds",
+                            Json::Num(crate::mka::stage_rebuild_count() as f64),
+                        )
+                        .with(
+                            "stage_reuses",
+                            Json::Num(crate::mka::stage_reuse_count() as f64),
                         ),
                 );
                 // Shard topology across the registry: fleet count, total
@@ -259,6 +295,8 @@ impl Router {
             "trace" => self.handle_trace(req),
             "logs" => self.handle_logs(req),
             "diagnose" => self.handle_diagnose(req),
+            "observe" => self.handle_observe(req),
+            "refresh" => self.handle_refresh(req),
             other => Err(Error::Protocol(format!("unknown op {other:?} (supported: {OPS:?})"))),
         };
         match out {
@@ -625,6 +663,108 @@ impl Router {
         })?;
         Ok(Json::obj().with("model", Json::Str(name.to_string())).with("diagnose", diag))
     }
+
+    /// Streaming append through [`crate::gp::GpModel::observe`]: the
+    /// model extends its stored factorization with the batch (untouched
+    /// stages Arc-shared, not rebuilt) unless a drift or core-growth
+    /// gate forces a windowed full re-fit; either way the updated model
+    /// is republished atomically and the response reports which path was
+    /// taken with stage-reuse accounting. Gate knobs default from the
+    /// service config and can be overridden per request.
+    fn handle_observe(&self, req: &Json) -> Result<Json> {
+        let name = req
+            .str_field("model")
+            .ok_or_else(|| Error::Protocol("observe: missing model".into()))?;
+        let x = parse_matrix(
+            req.get("x").ok_or_else(|| Error::Protocol("observe: missing x".into()))?,
+        )?;
+        let y = req
+            .get("y")
+            .and_then(|v| v.f64_array())
+            .ok_or_else(|| Error::Protocol("observe: missing y".into()))?;
+        if x.rows != y.len() || x.rows == 0 {
+            return Err(Error::Protocol("observe: x/y shape mismatch".into()));
+        }
+        let mut policy = self.config.observe_policy();
+        if let Some(v) = req.get("drift_threshold") {
+            policy.drift_threshold = v.as_f64().ok_or_else(|| {
+                Error::Protocol("observe: drift_threshold must be a number".into())
+            })?;
+        }
+        if let Some(v) = req.get("max_core_growth") {
+            policy.max_core_growth = v.as_f64().ok_or_else(|| {
+                Error::Protocol("observe: max_core_growth must be a number".into())
+            })?;
+        }
+        if let Some(v) = req.get("window") {
+            policy.window = v.as_usize().ok_or_else(|| {
+                Error::Protocol("observe: window must be a non-negative integer".into())
+            })?;
+        }
+        policy.validate().map_err(|e| Error::Protocol(format!("{e}")))?;
+        let model = self
+            .registry
+            .get(name)
+            .ok_or_else(|| Error::Coordinator(format!("no model {name}")))?;
+        let t = Timer::start();
+        let update = model.observe(&x, &y, &policy).ok_or_else(|| {
+            Error::Protocol(format!(
+                "observe: model {name:?} ({}) does not support streaming observation; \
+                 use fit/train to rebuild it with the new points",
+                model.name()
+            ))
+        })??;
+        self.registry.publish(name, update.model.into());
+        self.metrics.incr("observes", 1);
+        self.metrics.observe("observe.appended", x.rows as f64);
+        if update.report.str_field("path") == Some("refit") {
+            self.metrics.incr("observe_refits", 1);
+        }
+        Ok(Json::obj()
+            .with("model", Json::Str(name.to_string()))
+            .with("observe", update.report)
+            .with("observe_secs", Json::Num(t.elapsed_secs())))
+    }
+
+    /// Refresh-policy management for the background scheduler: with
+    /// `"model"` and a positive `"every_ms"` registers (or replaces) a
+    /// recurring re-fit, `"every_ms": 0` cancels, and a bare request
+    /// lists the registered policies.
+    fn handle_refresh(&self, req: &Json) -> Result<Json> {
+        let Some(name) = req.str_field("model") else {
+            if req.get("every_ms").is_some() {
+                return Err(Error::Protocol("refresh: missing model".into()));
+            }
+            return Ok(Json::obj().with("policies", self.refresh.policies_json()));
+        };
+        let every_ms = req
+            .get("every_ms")
+            .ok_or_else(|| Error::Protocol("refresh: missing every_ms (0 cancels)".into()))?
+            .as_usize()
+            .ok_or_else(|| {
+                Error::Protocol("refresh: every_ms must be a non-negative integer".into())
+            })? as u64;
+        if every_ms == 0 {
+            let cancelled = self.refresh.cancel(name);
+            return Ok(Json::obj()
+                .with("model", Json::Str(name.to_string()))
+                .with("cancelled", Json::Bool(cancelled)));
+        }
+        let model = self
+            .registry
+            .get(name)
+            .ok_or_else(|| Error::Coordinator(format!("no model {name}")))?;
+        if !model.can_refresh() {
+            return Err(Error::Protocol(format!(
+                "refresh: model {name:?} ({}) does not support background refresh",
+                model.name()
+            )));
+        }
+        let effective = self.refresh.schedule(name, every_ms);
+        Ok(Json::obj()
+            .with("model", Json::Str(name.to_string()))
+            .with("every_ms", Json::Num(effective as f64)))
+    }
 }
 
 /// The fit op's model constructor: unsharded requests go through the
@@ -658,7 +798,7 @@ fn fit_op_model(
 }
 
 /// Human-readable label for a contained job panic.
-fn panic_label(p: Box<dyn std::any::Any + Send>) -> String {
+pub(crate) fn panic_label(p: Box<dyn std::any::Any + Send>) -> String {
     if let Some(s) = p.downcast_ref::<&str>() {
         format!("job panicked: {s}")
     } else if let Some(s) = p.downcast_ref::<String>() {
@@ -1142,6 +1282,132 @@ mod tests {
         assert_eq!(logs.str_field("level"), Some("warn"));
         assert!(logs.get("events").unwrap().as_arr().is_some());
         assert!(logs.num_field("ring_capacity").unwrap() >= 1.0);
+    }
+
+    /// The observe op appends through the protocol: the model grows by
+    /// the batch, stays servable, and the response reports the path
+    /// taken with stage-reuse accounting; malformed batches and
+    /// incapable models get typed errors.
+    #[test]
+    fn observe_op_appends_and_republishes() {
+        let r = router();
+        assert_eq!(r.handle(&fit_req("mo", "mka", 80, false)).get("ok"), Some(&Json::Bool(true)));
+        let obs = Json::obj()
+            .with("op", Json::Str("observe".into()))
+            .with("model", Json::Str("mo".into()))
+            .with(
+                "x",
+                Json::Arr(vec![
+                    Json::from_f64_slice(&[0.3, 0.1]),
+                    Json::from_f64_slice(&[-0.2, 0.4]),
+                ]),
+            )
+            .with("y", Json::from_f64_slice(&[0.1, -0.3]));
+        let out = r.handle(&obs);
+        assert_eq!(out.get("ok"), Some(&Json::Bool(true)), "{out:?}");
+        let rep = out.get("observe").expect("observe report");
+        assert!(matches!(rep.str_field("path"), Some("incremental") | Some("refit")));
+        assert_eq!(rep.usize_field("appended"), Some(2));
+        assert_eq!(rep.usize_field("n_total"), Some(82));
+        assert_eq!(r.registry.get("mo").unwrap().info().n, 82);
+        assert!(r.metrics.counter("observes") >= 1);
+        // the grown model still serves predictions
+        let pred = Json::obj()
+            .with("op", Json::Str("predict".into()))
+            .with("model", Json::Str("mo".into()))
+            .with("x", Json::Arr(vec![Json::from_f64_slice(&[0.0, 0.0])]));
+        assert_eq!(r.handle(&pred).get("ok"), Some(&Json::Bool(true)));
+        // an absurd drift override forces the refit path + counter
+        let mut forced = obs.clone();
+        forced.set("drift_threshold", Json::Num(1e-12));
+        let out = r.handle(&forced);
+        assert_eq!(out.get("ok"), Some(&Json::Bool(true)), "{out:?}");
+        assert_eq!(out.get("observe").unwrap().str_field("path"), Some("refit"));
+        assert!(r.metrics.counter("observe_refits") >= 1);
+        // typed failures: bad shapes, bad knobs, wrong model kinds
+        let full = r.handle(&fit_req("mfull2", "full", 60, false));
+        assert_eq!(full.get("ok"), Some(&Json::Bool(true)));
+        let mut wrong = obs.clone();
+        wrong.set("model", Json::Str("mfull2".into()));
+        let out = r.handle(&wrong);
+        assert_eq!(out.get("ok"), Some(&Json::Bool(false)));
+        assert!(out.str_field("error").unwrap().contains("streaming"));
+        for bad in [
+            r#"{"op":"observe","model":"mo"}"#,
+            r#"{"op":"observe","model":"mo","x":[[1,2]],"y":[1,2]}"#,
+            r#"{"op":"observe","model":"ghost","x":[[1,2]],"y":[1]}"#,
+            r#"{"op":"observe","model":"mo","x":[[1,2]],"y":[1],"drift_threshold":"big"}"#,
+            r#"{"op":"observe","model":"mo","x":[[1,2]],"y":[1],"window":-3}"#,
+        ] {
+            assert_eq!(
+                r.handle(&Json::parse(bad).unwrap()).get("ok"),
+                Some(&Json::Bool(false)),
+                "{bad}"
+            );
+        }
+        // the op is timed: a latency histogram appears on success
+        let snap = r.handle(&Json::parse(r#"{"op":"metrics"}"#).unwrap());
+        assert!(snap.get("histograms").unwrap().get("op.observe_secs").is_some());
+        let compute = snap.get("compute").unwrap();
+        assert!(compute.num_field("stage_rebuilds").is_some());
+        assert!(compute.num_field("stage_reuses").is_some());
+    }
+
+    /// Refresh-policy lifecycle through the protocol: schedule (with the
+    /// floor clamp), list, fire at least once through the job store, and
+    /// cancel; scheduling for absent or refresh-incapable models fails
+    /// with typed errors.
+    #[test]
+    fn refresh_op_schedules_fires_and_cancels() {
+        let cfg = ServiceConfig {
+            batch_window_ms: 0,
+            n_workers: 2,
+            refresh_min_interval_ms: 30,
+            ..Default::default()
+        };
+        let r = Router::new(cfg);
+        assert_eq!(r.handle(&fit_req("mrf", "mka", 60, false)).get("ok"), Some(&Json::Bool(true)));
+        // sub-floor period clamps up to the configured minimum
+        let out = r.handle(&Json::parse(r#"{"op":"refresh","model":"mrf","every_ms":1}"#).unwrap());
+        assert_eq!(out.get("ok"), Some(&Json::Bool(true)), "{out:?}");
+        assert_eq!(out.usize_field("every_ms"), Some(30));
+        // listed
+        let out = r.handle(&Json::parse(r#"{"op":"refresh"}"#).unwrap());
+        let pols = out.get("policies").unwrap().as_arr().unwrap();
+        assert_eq!(pols.len(), 1);
+        assert_eq!(pols[0].str_field("model"), Some("mrf"));
+        // fires through the shared job store + pool
+        let mut fired = false;
+        for _ in 0..200 {
+            if r.metrics.counter("refreshes") >= 1 {
+                fired = true;
+                break;
+            }
+            std::thread::sleep(std::time::Duration::from_millis(10));
+        }
+        assert!(fired, "refresh never fired: errors={}", r.metrics.counter("refresh_errors"));
+        assert!(r.registry.get("mrf").is_some(), "model stays published across refreshes");
+        // cancel is idempotent and reported
+        let out = r.handle(&Json::parse(r#"{"op":"refresh","model":"mrf","every_ms":0}"#).unwrap());
+        assert_eq!(out.get("cancelled"), Some(&Json::Bool(true)));
+        let out = r.handle(&Json::parse(r#"{"op":"refresh","model":"mrf","every_ms":0}"#).unwrap());
+        assert_eq!(out.get("cancelled"), Some(&Json::Bool(false)));
+        // typed failures
+        let full = r.handle(&fit_req("mfull3", "full", 60, false));
+        assert_eq!(full.get("ok"), Some(&Json::Bool(true)));
+        for bad in [
+            r#"{"op":"refresh","model":"ghost","every_ms":100}"#,
+            r#"{"op":"refresh","model":"mfull3","every_ms":100}"#,
+            r#"{"op":"refresh","model":"mrf"}"#,
+            r#"{"op":"refresh","model":"mrf","every_ms":"fast"}"#,
+            r#"{"op":"refresh","every_ms":100}"#,
+        ] {
+            assert_eq!(
+                r.handle(&Json::parse(bad).unwrap()).get("ok"),
+                Some(&Json::Bool(false)),
+                "{bad}"
+            );
+        }
     }
 
     #[test]

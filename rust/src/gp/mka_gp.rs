@@ -30,7 +30,9 @@
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, OnceLock};
 
-use super::{GpModel, ModelInfo, Prediction};
+use super::{
+    GpModel, ModelInfo, ObservePath, ObservePolicy, ObserveReport, ObserveUpdate, Prediction,
+};
 use crate::data::dataset::Dataset;
 use crate::error::{Error, Result};
 use crate::kernels::gram::GramBuilder;
@@ -38,7 +40,7 @@ use crate::kernels::Kernel;
 use crate::la::blas::dot;
 use crate::la::dense::Mat;
 use crate::la::lu::Lu;
-use crate::mka::{factorize, MkaConfig, MkaFactor};
+use crate::mka::{extend_factorize, factorize, MkaConfig, MkaFactor};
 use crate::obs;
 use crate::par::arena;
 use crate::util::json::Json;
@@ -209,6 +211,224 @@ impl MkaGp {
         let n = self.train.n() as f64;
         Ok(-0.5 * quad - 0.5 * f.logdet()? - 0.5 * n * (2.0 * std::f64::consts::PI).ln())
     }
+
+    /// Streaming append: a copy of this model extended with the batch
+    /// `(xb, yb)` — incrementally when the gates allow it, through a
+    /// windowed full re-fit otherwise — plus the [`ObserveReport`] saying
+    /// which path ran and what it reused.
+    ///
+    /// The incremental path extends the stored train factor with
+    /// [`crate::mka::extend_factorize`]: every old block's rotation is
+    /// replayed verbatim (so the old×old reconstruction is bit-identical
+    /// and untouched stages are shared, never refactorized), new points are
+    /// compressed among themselves under their nearest old cluster, and σ²
+    /// stays the usual [`MkaFactor::shifted`] view. Because `predict` is
+    /// transductive (per-batch joint factorization over the *stored*
+    /// training set), predictions after an incremental observe are
+    /// identical to a fresh fit on the concatenated data; the extension's
+    /// approximation surfaces only in `log_marginal`/`diagnose`, which is
+    /// exactly what the two gates guard:
+    ///
+    /// 1. **drift** — mean standardized squared residual of the current
+    ///    model on the incoming batch exceeds `policy.drift_threshold`;
+    /// 2. **core growth** — the extended factor's final core has grown past
+    ///    `policy.max_core_growth × d_core` (the identity ride-through has
+    ///    stopped compressing).
+    pub fn observed(
+        &self,
+        xb: &Mat,
+        yb: &[f64],
+        policy: &ObservePolicy,
+    ) -> Result<(MkaGp, ObserveReport)> {
+        policy.validate()?;
+        let b = xb.rows;
+        let n = self.train.n();
+        if b == 0 {
+            return Err(Error::Data("observe: empty batch".into()));
+        }
+        if yb.len() != b {
+            return Err(Error::Data(format!(
+                "observe: x has {b} rows but y has {} entries",
+                yb.len()
+            )));
+        }
+        if xb.cols != self.train.dim() {
+            return Err(Error::Data(format!(
+                "observe: batch dim {} != training dim {}",
+                xb.cols,
+                self.train.dim()
+            )));
+        }
+        for i in 0..b {
+            if !(xb.row(i).iter().all(|v| v.is_finite()) && yb[i].is_finite()) {
+                return Err(Error::Data(format!(
+                    "observe: non-finite value in batch row {i}"
+                )));
+            }
+        }
+        let _sp = obs::span!("gp.observe n={n} b={b}");
+
+        // Gate 1: predictive drift of the CURRENT model on the incoming
+        // batch, through the stored train factor (k* solves only — no
+        // joint factorization, no new `factorize_count`). The statistic
+        // is mean((y−μ̂)²/σ̂²) with σ̂² ≥ σ², so it is well-defined for any
+        // batch size, b = 1 included.
+        let drift = self.batch_drift(xb, yb)?;
+        if drift > policy.drift_threshold {
+            let reason = format!(
+                "predictive drift {drift:.3} exceeds threshold {}",
+                policy.drift_threshold
+            );
+            let m = self.refit_windowed(self.extended_dataset(xb, yb), policy, &reason)?;
+            let n_total = m.train.n();
+            return Ok((
+                m,
+                ObserveReport {
+                    path: ObservePath::Refit,
+                    reason: Some(reason),
+                    appended: b,
+                    n_total,
+                    drift,
+                    stats: None,
+                },
+            ));
+        }
+
+        // Incremental extension of the stored (noise-free) train factor.
+        let ext = self.extended_dataset(xb, yb);
+        let kj = match &self.gram {
+            Some(g) => g.build_sym(&ext.x),
+            None => self.kernel.gram_sym(&ext.x),
+        };
+        let (f, stats) = extend_factorize(self.train_factor()?, &kj, &self.config)?;
+
+        // Gate 2: compression degradation. New coords ride the deeper
+        // stages uncompressed, so the final core grows with every observe;
+        // past the budget the factor has stopped being multiresolution.
+        let growth = f.d_core() as f64 / self.config.d_core.max(1) as f64;
+        if growth > policy.max_core_growth {
+            let reason = format!(
+                "core growth ×{growth:.2} exceeds budget ×{}",
+                policy.max_core_growth
+            );
+            let m = self.refit_windowed(ext, policy, &reason)?;
+            let n_total = m.train.n();
+            return Ok((
+                m,
+                ObserveReport {
+                    path: ObservePath::Refit,
+                    reason: Some(reason),
+                    appended: b,
+                    n_total,
+                    drift,
+                    stats: None,
+                },
+            ));
+        }
+
+        let n_total = ext.n();
+        let m = MkaGp {
+            train: ext,
+            kernel: self.kernel.boxed_clone(),
+            sigma2: self.sigma2,
+            config: self.config.clone(),
+            gram: self.gram.clone(),
+            train_factor: OnceLock::new(),
+            floor_hits: Arc::clone(&self.floor_hits),
+        };
+        let _ = m.train_factor.set(Ok(f));
+        Ok((
+            m,
+            ObserveReport {
+                path: ObservePath::Incremental,
+                reason: None,
+                appended: b,
+                n_total,
+                drift,
+                stats: Some(stats),
+            },
+        ))
+    }
+
+    /// Background refresh: a from-scratch refit on the currently-held
+    /// training set (factor forced eagerly, so the returned model serves
+    /// `log_marginal`/`diagnose` without lazy work) — what the recurring
+    /// refresh scheduler runs.
+    pub fn refreshed_model(&self) -> Result<MkaGp> {
+        let mut m = MkaGp::fit(&self.train, self.kernel.as_ref(), self.sigma2, &self.config)?;
+        if let Some(g) = &self.gram {
+            m = m.with_gram_builder(g.clone());
+        }
+        m.train_factor()?;
+        Ok(m)
+    }
+
+    /// Mean standardized squared residual of this model on `(xb, yb)`:
+    /// mean((y − μ̂)²/σ̂²) with μ̂, σ̂² from the stored train factor (σ̂²
+    /// floored at σ², so the statistic never blows up). ≈ 1 when the model
+    /// is calibrated for the batch.
+    fn batch_drift(&self, xb: &Mat, yb: &[f64]) -> Result<f64> {
+        let f = self.train_factor()?.shifted(self.sigma2);
+        let alpha = f.solve(&self.train.y)?;
+        let n = self.train.n();
+        let b = xb.rows;
+        let mut kstar = Mat::zeros(n, b);
+        for j in 0..b {
+            let ks = self.kernel.cross(xb.row(j), &self.train.x);
+            for (i, v) in ks.iter().enumerate() {
+                kstar.set(i, j, *v);
+            }
+        }
+        let sol = f.solve_mat_par(&kstar, self.config.n_threads)?;
+        let mut acc = 0.0;
+        for j in 0..b {
+            let ks = kstar.col(j);
+            let mu = dot(&ks, &alpha);
+            let var = (self.kernel.eval(xb.row(j), xb.row(j)) + self.sigma2
+                - dot(&ks, &sol.col(j)))
+            .max(self.sigma2);
+            let r = yb[j] - mu;
+            acc += r * r / var;
+        }
+        Ok(acc / b as f64)
+    }
+
+    /// The training set with the batch appended (new points at the tail —
+    /// the index convention `extend_factorize` relies on).
+    fn extended_dataset(&self, xb: &Mat, yb: &[f64]) -> Dataset {
+        let n = self.train.n();
+        let mut x = Mat::zeros(n + xb.rows, self.train.dim());
+        x.set_block(0, 0, &self.train.x);
+        x.set_block(n, 0, xb);
+        let mut y = self.train.y.clone();
+        y.extend_from_slice(yb);
+        Dataset::new(self.train.name.clone(), x, y)
+    }
+
+    /// The gated fallback: full re-fit on `ext`, optionally windowed to the
+    /// most recent `policy.window` points, factor forced eagerly so the
+    /// result is byte-for-byte a fresh fit.
+    fn refit_windowed(&self, ext: Dataset, policy: &ObservePolicy, reason: &str) -> Result<MkaGp> {
+        let kept = if policy.window > 0 && policy.window < ext.n() {
+            let lo = ext.n() - policy.window;
+            let idx: Vec<usize> = (lo..ext.n()).collect();
+            ext.subset(&idx)
+        } else {
+            ext
+        };
+        obs::log!(
+            Warn,
+            "gp.observe",
+            { "n" => kept.n(), "window" => policy.window },
+            "drift gate forced a windowed refit: {reason}"
+        );
+        let mut m = MkaGp::fit(&kept, self.kernel.as_ref(), self.sigma2, &self.config)?;
+        if let Some(g) = &self.gram {
+            m = m.with_gram_builder(g.clone());
+        }
+        m.train_factor()?;
+        Ok(m)
+    }
 }
 
 impl GpModel for MkaGp {
@@ -363,6 +583,26 @@ impl GpModel for MkaGp {
                 )
                 .with("factor", factor),
         )
+    }
+
+    fn observe(
+        &self,
+        x: &Mat,
+        y: &[f64],
+        policy: &ObservePolicy,
+    ) -> Option<Result<ObserveUpdate>> {
+        Some(self.observed(x, y, policy).map(|(m, rep)| ObserveUpdate {
+            model: Box::new(m),
+            report: rep.to_json(),
+        }))
+    }
+
+    fn can_refresh(&self) -> bool {
+        true
+    }
+
+    fn refreshed(&self) -> Option<Result<Box<dyn GpModel>>> {
+        Some(self.refreshed_model().map(|m| Box::new(m) as Box<dyn GpModel>))
     }
 }
 
@@ -584,6 +824,159 @@ mod tests {
         assert_eq!(factorize_count(), after_lml);
         assert_eq!(dr.num_field("sigma2"), Some(0.3));
         assert!(dr.get("factor").unwrap().num_field("lambda_min").unwrap() >= 0.3 - 1e-12);
+    }
+
+    /// The incremental observe path must (a) not refactorize anything when
+    /// the train factor is already built, (b) reuse stages provably, and
+    /// (c) predict exactly like a fresh fit on the concatenated data —
+    /// `predict` is transductive, so the equivalence is bitwise.
+    #[test]
+    fn incremental_observe_matches_fresh_fit_predictions() {
+        let data = gp_dataset(&SynthSpec::named("t", 128, 2), 21);
+        let (base, newer) = data.split(0.875, 0); // 112 old + 16 new
+        let kern = RbfKernel::new(1.0);
+        let cfg = MkaConfig { d_core: 12, block_size: 32, ..MkaConfig::default() };
+        let mka = MkaGp::fit(&base, &kern, 0.1, &cfg).unwrap();
+        mka.train_factor().unwrap(); // pre-build: observe must add nothing
+        let (obs, rep) = mka
+            .observed(&newer.x, &newer.y, &ObservePolicy::default())
+            .unwrap();
+        // (strict factorize_count accounting lives in the dedicated
+        // observe_equivalence suite, where tests serialize on a mutex —
+        // the lib binary runs tests concurrently, so global counters are
+        // only monotone here)
+        assert_eq!(rep.path, ObservePath::Incremental);
+        assert_eq!(rep.appended, newer.n());
+        assert_eq!(rep.n_total, base.n() + newer.n());
+        let stats = rep.stats.expect("incremental path reports stage stats");
+        assert!(stats.stages_rebuilt < stats.stages_total, "some stages must be reused");
+        assert!(stats.stages_reused >= 1);
+        // fresh fit on the concatenated data: identical predictions
+        let mut ext = base.clone();
+        let mut x = Mat::zeros(base.n() + newer.n(), base.dim());
+        x.set_block(0, 0, &base.x);
+        x.set_block(base.n(), 0, &newer.x);
+        ext.x = x;
+        ext.y.extend_from_slice(&newer.y);
+        let fresh = MkaGp::fit(&ext, &kern, 0.1, &cfg).unwrap();
+        let te = gp_dataset(&SynthSpec::named("q", 24, 2), 22);
+        let po = obs.predict(&te.x);
+        let pf = fresh.predict(&te.x);
+        for i in 0..te.n() {
+            assert_eq!(po.mean[i].to_bits(), pf.mean[i].to_bits(), "mean[{i}]");
+            assert_eq!(po.var[i].to_bits(), pf.var[i].to_bits(), "var[{i}]");
+        }
+        // the extended factor serves the evidence without lazy work
+        assert!(obs.log_marginal().unwrap().is_finite());
+    }
+
+    /// Far-off-manifold targets trip the drift gate; the refit path is a
+    /// genuine fresh fit (EXACT equivalence) and warns through obs.
+    #[test]
+    fn drift_gate_refit_is_exactly_a_fresh_fit() {
+        let data = gp_dataset(&SynthSpec::named("t", 100, 2), 23);
+        let (base, newer) = data.split(0.9, 1);
+        let kern = RbfKernel::new(1.0);
+        let cfg = MkaConfig { d_core: 12, block_size: 32, ..MkaConfig::default() };
+        let mka = MkaGp::fit(&base, &kern, 0.1, &cfg).unwrap();
+        let wild: Vec<f64> = newer.y.iter().map(|v| v + 500.0).collect();
+        let (obs, rep) = mka
+            .observed(&newer.x, &wild, &ObservePolicy::default())
+            .unwrap();
+        assert_eq!(rep.path, ObservePath::Refit);
+        assert!(rep.drift > 16.0, "drift {}", rep.drift);
+        assert!(rep.reason.unwrap().contains("drift"));
+        assert!(rep.stats.is_none());
+        let mut ext = base.clone();
+        let mut x = Mat::zeros(base.n() + newer.n(), base.dim());
+        x.set_block(0, 0, &base.x);
+        x.set_block(base.n(), 0, &newer.x);
+        ext.x = x;
+        ext.y.extend_from_slice(&wild);
+        let fresh = MkaGp::fit(&ext, &kern, 0.1, &cfg).unwrap();
+        let te = gp_dataset(&SynthSpec::named("q", 16, 2), 24);
+        let po = obs.predict(&te.x);
+        let pf = fresh.predict(&te.x);
+        for i in 0..te.n() {
+            assert_eq!(po.mean[i].to_bits(), pf.mean[i].to_bits(), "mean[{i}]");
+            assert_eq!(po.var[i].to_bits(), pf.var[i].to_bits(), "var[{i}]");
+        }
+        // evidence too: both route through an eagerly-built train factor
+        let lo = obs.log_marginal().unwrap();
+        let lf = fresh.log_marginal().unwrap();
+        assert_eq!(lo.to_bits(), lf.to_bits());
+    }
+
+    /// `window` caps the refit training set at the most recent points.
+    #[test]
+    fn windowed_refit_keeps_the_tail() {
+        let data = gp_dataset(&SynthSpec::named("t", 90, 2), 25);
+        let (base, newer) = data.split(0.9, 2);
+        let mka =
+            MkaGp::fit(&base, &RbfKernel::new(1.0), 0.1, &config(12)).unwrap();
+        let pol = ObservePolicy { drift_threshold: 1e-9, window: 40, ..ObservePolicy::default() };
+        let (obs, rep) = mka.observed(&newer.x, &newer.y, &pol).unwrap();
+        assert_eq!(rep.path, ObservePath::Refit);
+        assert_eq!(rep.n_total, 40, "window caps the refit set");
+        assert_eq!(obs.info().n, 40);
+        // the newest points survive the window: last batch y values present
+        let kept = &obs.train.y[40 - newer.n()..];
+        assert_eq!(kept, &newer.y[..]);
+    }
+
+    /// A large batch under a tight core-growth budget trips gate 2.
+    #[test]
+    fn core_growth_gate_forces_refit() {
+        let data = gp_dataset(&SynthSpec::named("t", 96, 2), 26);
+        let (base, newer) = data.split(0.5, 3); // 48 old, 48 new
+        let cfg = MkaConfig { d_core: 8, block_size: 24, ..MkaConfig::default() };
+        let mka = MkaGp::fit(&base, &RbfKernel::new(1.0), 0.1, &cfg).unwrap();
+        let pol = ObservePolicy { max_core_growth: 1.5, ..ObservePolicy::default() };
+        let (_, rep) = mka.observed(&newer.x, &newer.y, &pol).unwrap();
+        assert_eq!(rep.path, ObservePath::Refit);
+        assert!(rep.reason.unwrap().contains("core growth"));
+    }
+
+    #[test]
+    fn observe_rejects_malformed_batches() {
+        let data = gp_dataset(&SynthSpec::named("t", 60, 2), 27);
+        let mka = MkaGp::fit(&data, &RbfKernel::new(1.0), 0.1, &config(12)).unwrap();
+        let pol = ObservePolicy::default();
+        assert!(mka.observed(&Mat::zeros(0, 2), &[], &pol).is_err());
+        assert!(mka.observed(&Mat::zeros(2, 2), &[1.0], &pol).is_err());
+        assert!(mka.observed(&Mat::zeros(2, 3), &[1.0, 2.0], &pol).is_err());
+        let mut bad = Mat::zeros(1, 2);
+        bad.set(0, 0, f64::NAN);
+        assert!(mka.observed(&bad, &[1.0], &pol).is_err());
+        assert!(mka.observed(&Mat::zeros(1, 2), &[f64::INFINITY], &pol).is_err());
+        let badpol = ObservePolicy { drift_threshold: 0.0, ..ObservePolicy::default() };
+        assert!(mka.observed(&Mat::zeros(1, 2), &[1.0], &badpol).is_err());
+        // trait hook surfaces the same path
+        let up = mka
+            .observe(&data.x.gather_rows(&[0]), &[data.y[0]], &pol)
+            .expect("MKA supports observe")
+            .unwrap();
+        assert_eq!(up.report.str_field("path"), Some("incremental"));
+        assert!(up.model.info().n == data.n() + 1);
+    }
+
+    #[test]
+    fn refreshed_model_is_a_fresh_fit() {
+        use crate::mka::factorize_count;
+        let data = gp_dataset(&SynthSpec::named("t", 70, 2), 28);
+        let mka = MkaGp::fit(&data, &RbfKernel::new(1.0), 0.1, &config(12)).unwrap();
+        let before = factorize_count();
+        let re = mka.refreshed_model().unwrap();
+        assert!(factorize_count() > before, "refresh factorizes eagerly");
+        let te = gp_dataset(&SynthSpec::named("q", 12, 2), 29);
+        let p0 = mka.predict(&te.x);
+        let p1 = re.predict(&te.x);
+        for i in 0..te.n() {
+            assert_eq!(p0.mean[i].to_bits(), p1.mean[i].to_bits());
+        }
+        // trait hook
+        let boxed = mka.refreshed().expect("supported").unwrap();
+        assert_eq!(boxed.info().n, data.n());
     }
 
     #[test]

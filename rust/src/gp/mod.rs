@@ -21,7 +21,9 @@ pub mod mka_gp;
 pub mod ridge;
 pub mod sharded;
 
+use crate::error::{Error, Result};
 use crate::la::dense::Mat;
+use crate::mka::ExtendStats;
 use crate::util::json::Json;
 
 /// Posterior prediction: mean and (predictive, noise-inclusive) variance
@@ -76,6 +78,113 @@ impl ModelInfo {
     }
 }
 
+/// When the streaming observe path abandons the incremental factor
+/// extension and falls back to a windowed full re-fit.
+#[derive(Clone, Debug)]
+pub struct ObservePolicy {
+    /// Predictive-drift gate: refit when the mean standardized squared
+    /// residual of the current model's predictions on the incoming batch
+    /// — mean((y − μ̂)²/σ̂²), ≈ 1 when calibrated — exceeds this.
+    pub drift_threshold: f64,
+    /// Compression-degradation gate: refit when the extended factor's
+    /// final core has grown past `max_core_growth × d_core`.
+    pub max_core_growth: f64,
+    /// Refit window: keep only the most recent `window` training points
+    /// on the refit path (`0` = keep everything).
+    pub window: usize,
+}
+
+impl Default for ObservePolicy {
+    fn default() -> Self {
+        ObservePolicy { drift_threshold: 16.0, max_core_growth: 4.0, window: 0 }
+    }
+}
+
+impl ObservePolicy {
+    pub fn validate(&self) -> Result<()> {
+        if !(self.drift_threshold.is_finite() && self.drift_threshold > 0.0) {
+            return Err(Error::Config(format!(
+                "observe: drift_threshold must be finite and > 0, got {}",
+                self.drift_threshold
+            )));
+        }
+        if !(self.max_core_growth.is_finite() && self.max_core_growth >= 1.0) {
+            return Err(Error::Config(format!(
+                "observe: max_core_growth must be finite and >= 1, got {}",
+                self.max_core_growth
+            )));
+        }
+        Ok(())
+    }
+}
+
+/// Which route one observe call took.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ObservePath {
+    /// The existing factor was extended in place (stages reused).
+    Incremental,
+    /// A drift gate fired and forced a windowed full re-fit.
+    Refit,
+}
+
+impl ObservePath {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            ObservePath::Incremental => "incremental",
+            ObservePath::Refit => "refit",
+        }
+    }
+}
+
+/// What one observe call did — the exact record behind the coordinator's
+/// `observe` response and the equivalence tests' assertions.
+#[derive(Clone, Debug)]
+pub struct ObserveReport {
+    /// Incremental extension or gated refit.
+    pub path: ObservePath,
+    /// Why the drift gate fired (refit path only).
+    pub reason: Option<String>,
+    /// Points appended by this call.
+    pub appended: usize,
+    /// Training-set size after the update.
+    pub n_total: usize,
+    /// Mean standardized squared residual of the pre-update model on the
+    /// incoming batch (the drift-gate statistic).
+    pub drift: f64,
+    /// Stage accounting of the incremental extension (None on refit).
+    pub stats: Option<ExtendStats>,
+}
+
+impl ObserveReport {
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj()
+            .with("path", Json::Str(self.path.as_str().into()))
+            .with("appended", Json::Num(self.appended as f64))
+            .with("n_total", Json::Num(self.n_total as f64))
+            .with("drift", Json::Num(self.drift));
+        if let Some(r) = &self.reason {
+            j = j.with("reason", Json::Str(r.clone()));
+        }
+        if let Some(s) = &self.stats {
+            j = j
+                .with("stages_total", Json::Num(s.stages_total as f64))
+                .with("stages_rebuilt", Json::Num(s.stages_rebuilt as f64))
+                .with("stages_reused", Json::Num(s.stages_reused as f64))
+                .with("blocks_reused", Json::Num(s.blocks_reused as f64))
+                .with("blocks_touched", Json::Num(s.blocks_touched as f64))
+                .with("core_growth", Json::Num(s.core_growth as f64));
+        }
+        j
+    }
+}
+
+/// An updated model plus the structured record of how it was produced —
+/// what [`GpModel::observe`] hands the serving plane to republish.
+pub struct ObserveUpdate {
+    pub model: Box<dyn GpModel>,
+    pub report: Json,
+}
+
 /// A fitted GP regression model.
 pub trait GpModel: Send + Sync {
     /// Predict mean and variance at the rows of `x_test`.
@@ -108,6 +217,34 @@ pub trait GpModel: Send + Sync {
     /// spectrum extremes, counters): never fit, refit or refactorize.
     /// `None` means the method has nothing to report (the default).
     fn diagnose(&self) -> Option<Json> {
+        None
+    }
+
+    /// Streaming update: append the batch `(x, y)` and return the updated
+    /// model plus a structured report of which path (incremental extension
+    /// vs gated windowed refit) was taken. `None` means the method does not
+    /// support streaming observation (the default) — the serving plane
+    /// reports a typed error instead of silently refitting.
+    fn observe(
+        &self,
+        _x: &Mat,
+        _y: &[f64],
+        _policy: &ObservePolicy,
+    ) -> Option<Result<ObserveUpdate>> {
+        None
+    }
+
+    /// Cheap capability probe for [`GpModel::refreshed`] — lets the
+    /// serving plane reject a refresh policy synchronously without
+    /// running (and discarding) an actual refit.
+    fn can_refresh(&self) -> bool {
+        false
+    }
+
+    /// Background refresh: a from-scratch refit of this model on its
+    /// currently-held training set, for the recurring refresh scheduler.
+    /// `None` means unsupported (the default).
+    fn refreshed(&self) -> Option<Result<Box<dyn GpModel>>> {
         None
     }
 }

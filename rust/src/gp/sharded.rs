@@ -36,7 +36,9 @@
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 
-use super::{GpModel, ModelInfo, Prediction};
+use super::{
+    GpModel, ModelInfo, ObservePath, ObservePolicy, ObserveReport, ObserveUpdate, Prediction,
+};
 use crate::cluster::{cluster_rows, ClusterMethod};
 use crate::data::dataset::Dataset;
 use crate::error::{Error, Result};
@@ -245,6 +247,141 @@ impl ShardedGp {
         })
     }
 
+    /// Streaming append across the fleet: every new point goes to its
+    /// nearest centroid's shard (ties toward the lower shard id — the same
+    /// determinism contract as predict routing), each touched shard runs
+    /// [`MkaGp::observed`] on its sub-batch, and every untouched shard is
+    /// carried over by Arc-sharing its factor (a same-σ² retune — zero
+    /// refactorization). Touched shards' centroids take the running-mean
+    /// update. Returns the new fleet plus per-shard reports in shard-id
+    /// order.
+    pub fn observed(
+        &self,
+        xb: &Mat,
+        yb: &[f64],
+        policy: &ObservePolicy,
+    ) -> Result<(ShardedGp, Vec<(usize, ObserveReport)>)> {
+        policy.validate()?;
+        let b = xb.rows;
+        let k = self.shards.len();
+        if b == 0 {
+            return Err(Error::Data("observe: empty batch".into()));
+        }
+        if yb.len() != b {
+            return Err(Error::Data(format!(
+                "observe: x has {b} rows but y has {} entries",
+                yb.len()
+            )));
+        }
+        if xb.cols != self.dim {
+            return Err(Error::Data(format!(
+                "observe: batch dim {} != training dim {}",
+                xb.cols, self.dim
+            )));
+        }
+        let _sp = obs::span!("sharded.observe b={b} k={k}");
+
+        // Each new point joins its single nearest shard (serial and
+        // deterministic; unlike predict routing there is no multi-expert
+        // fan-out — a training point lives in exactly one shard).
+        let mut groups: Vec<Vec<usize>> = vec![Vec::new(); k];
+        for j in 0..b {
+            let xt = xb.row(j);
+            let mut best = 0usize;
+            let mut best_d = f64::INFINITY;
+            for (s, sh) in self.shards.iter().enumerate() {
+                let d = sqdist(xt, &sh.centroid);
+                if d < best_d {
+                    best_d = d;
+                    best = s;
+                }
+            }
+            groups[best].push(j);
+        }
+
+        let mut shards = Vec::with_capacity(k);
+        let mut reports = Vec::new();
+        for (s, sh) in self.shards.iter().enumerate() {
+            if groups[s].is_empty() {
+                // Untouched: a same-σ² retune Arc-shares the train factor.
+                shards.push(Shard {
+                    centroid: sh.centroid.clone(),
+                    model: sh.model.retuned(self.sigma2)?,
+                    n: sh.n,
+                });
+                continue;
+            }
+            let idx = &groups[s];
+            let xs = xb.gather_rows(idx);
+            let ys: Vec<f64> = idx.iter().map(|&j| yb[j]).collect();
+            let (model, rep) = sh
+                .model
+                .observed(&xs, &ys, policy)
+                .map_err(|e| Error::Runtime(format!("observe: shard {s}: {e}")))?;
+            // Running-mean centroid update keeps future routing honest.
+            let cnt = idx.len() as f64;
+            let n_old = sh.n as f64;
+            let centroid: Vec<f64> = sh
+                .centroid
+                .iter()
+                .enumerate()
+                .map(|(c, v)| {
+                    let sum_new: f64 = idx.iter().map(|&j| xb.at(j, c)).sum();
+                    (v * n_old + sum_new) / (n_old + cnt)
+                })
+                .collect();
+            // A windowed refit may shrink the shard below n + |batch|, so
+            // take the size from the refreshed model, not arithmetic.
+            let n = model.info().n;
+            shards.push(Shard { centroid, model, n });
+            reports.push((s, rep));
+        }
+
+        let n_total = shards.iter().map(|sh| sh.n).sum();
+        Ok((
+            ShardedGp {
+                shards,
+                kernel: self.kernel.boxed_clone(),
+                sigma2: self.sigma2,
+                config: self.config.clone(),
+                route_experts: self.route_experts,
+                n_total,
+                dim: self.dim,
+                fit_secs: self.fit_secs.clone(),
+                route_tally: Arc::clone(&self.route_tally),
+                poe_fallbacks: Arc::clone(&self.poe_fallbacks),
+            },
+            reports,
+        ))
+    }
+
+    /// Background refresh: every shard refit from scratch on its currently
+    /// held points (factors forced eagerly), topology and routing state
+    /// carried over — what the recurring refresh scheduler runs.
+    pub fn refreshed_fleet(&self) -> Result<ShardedGp> {
+        let _sp = obs::span!("sharded.refresh k={}", self.shards.len());
+        let mut shards = Vec::with_capacity(self.shards.len());
+        for (s, sh) in self.shards.iter().enumerate() {
+            let model = sh
+                .model
+                .refreshed_model()
+                .map_err(|e| Error::Runtime(format!("refresh: shard {s}: {e}")))?;
+            shards.push(Shard { centroid: sh.centroid.clone(), model, n: sh.n });
+        }
+        Ok(ShardedGp {
+            shards,
+            kernel: self.kernel.boxed_clone(),
+            sigma2: self.sigma2,
+            config: self.config.clone(),
+            route_experts: self.route_experts,
+            n_total: self.n_total,
+            dim: self.dim,
+            fit_secs: self.fit_secs.clone(),
+            route_tally: Arc::clone(&self.route_tally),
+            poe_fallbacks: Arc::clone(&self.poe_fallbacks),
+        })
+    }
+
     /// The experts consulted for test point `xt`: the `route_experts`
     /// nearest centroids, distance ties broken toward the lower shard id,
     /// returned **in shard-id order** so downstream reductions are
@@ -431,6 +568,45 @@ impl GpModel for ShardedGp {
                 .with("shards", Json::Arr(shards)),
         )
     }
+
+    fn observe(
+        &self,
+        x: &Mat,
+        y: &[f64],
+        policy: &ObservePolicy,
+    ) -> Option<Result<ObserveUpdate>> {
+        Some(self.observed(x, y, policy).map(|(fleet, reports)| {
+            let any_refit =
+                reports.iter().any(|(_, r)| r.path == ObservePath::Refit);
+            let entries: Vec<Json> = reports
+                .iter()
+                .map(|(s, r)| r.to_json().with("shard", Json::Num(*s as f64)))
+                .collect();
+            let report = Json::obj()
+                .with("kind", Json::Str("sharded".into()))
+                .with(
+                    "path",
+                    Json::Str(
+                        if any_refit { ObservePath::Refit } else { ObservePath::Incremental }
+                            .as_str()
+                            .into(),
+                    ),
+                )
+                .with("appended", Json::Num(x.rows as f64))
+                .with("n_total", Json::Num(fleet.n_total as f64))
+                .with("shards_touched", Json::Num(entries.len() as f64))
+                .with("shards", Json::Arr(entries));
+            ObserveUpdate { model: Box::new(fleet), report }
+        }))
+    }
+
+    fn can_refresh(&self) -> bool {
+        true
+    }
+
+    fn refreshed(&self) -> Option<Result<Box<dyn GpModel>>> {
+        Some(self.refreshed_fleet().map(|f| Box::new(f) as Box<dyn GpModel>))
+    }
 }
 
 #[cfg(test)]
@@ -566,6 +742,97 @@ mod tests {
             assert!(f.num_field("lambda_min").unwrap() >= 0.1 - 1e-12);
         }
         assert!((share - 1.0).abs() < 1e-9, "route shares sum to 1, got {share}");
+    }
+
+    /// Observe routes each new point to its nearest shard, extends only
+    /// those shards, and carries every other shard over untouched.
+    #[test]
+    fn observe_touches_only_the_routed_shards() {
+        let data = gp_dataset(&SynthSpec::named("shardobs", 180, 2), 15);
+        let (base, newer) = data.split(0.9, 5);
+        let fleet =
+            ShardedGp::fit(&base, &RbfKernel::new(1.0), 0.1, &config(12), 3, ClusterMethod::KMeans)
+                .unwrap();
+        let k = fleet.n_shards();
+        let (next, reports) = fleet
+            .observed(&newer.x, &newer.y, &ObservePolicy::default())
+            .unwrap();
+        assert!(!reports.is_empty() && reports.len() <= k);
+        assert_eq!(next.n_shards(), k, "observe never changes the topology");
+        let appended: usize = reports.iter().map(|(_, r)| r.appended).sum();
+        assert_eq!(appended, newer.n(), "every new point lands in exactly one shard");
+        assert_eq!(next.info().n, base.n() + newer.n());
+        assert_eq!(next.shard_sizes().iter().sum::<usize>(), next.info().n);
+        // untouched shards keep their exact size
+        let touched: Vec<usize> = reports.iter().map(|(s, _)| *s).collect();
+        for s in 0..k {
+            if !touched.contains(&s) {
+                assert_eq!(next.shard_sizes()[s], fleet.shard_sizes()[s]);
+            }
+        }
+        // the grown fleet still serves sane predictions
+        let te = gp_dataset(&SynthSpec::named("shardobs-te", 20, 2), 16);
+        let pred = next.predict(&te.x);
+        for i in 0..te.n() {
+            assert!(pred.mean[i].is_finite());
+            assert!(pred.var[i] >= 0.1 - 1e-12);
+        }
+    }
+
+    /// The trait hook aggregates per-shard reports under one envelope.
+    #[test]
+    fn observe_trait_reports_per_shard() {
+        let data = gp_dataset(&SynthSpec::named("shardobs2", 140, 2), 17);
+        let (base, newer) = data.split(0.9, 6);
+        let fleet =
+            ShardedGp::fit(&base, &RbfKernel::new(1.0), 0.1, &config(12), 2, ClusterMethod::KMeans)
+                .unwrap();
+        let up = fleet
+            .observe(&newer.x, &newer.y, &ObservePolicy::default())
+            .expect("sharded supports observe")
+            .unwrap();
+        assert_eq!(up.report.str_field("kind"), Some("sharded"));
+        assert_eq!(up.report.num_field("appended"), Some(newer.n() as f64));
+        assert_eq!(up.report.num_field("n_total"), Some((base.n() + newer.n()) as f64));
+        let touched = up.report.num_field("shards_touched").unwrap() as usize;
+        let shards = match up.report.get("shards") {
+            Some(Json::Arr(a)) => a,
+            other => panic!("shards array missing: {other:?}"),
+        };
+        assert_eq!(shards.len(), touched);
+        for sj in shards {
+            assert!(sj.num_field("shard").is_some());
+            assert!(sj.str_field("path").is_some());
+        }
+        assert_eq!(up.model.info().n, base.n() + newer.n());
+        // malformed batches are typed errors, not panics
+        assert!(fleet
+            .observe(&Mat::zeros(2, 5), &[1.0, 2.0], &ObservePolicy::default())
+            .unwrap()
+            .is_err());
+    }
+
+    /// Refresh refits every shard in place: same topology, and (refit
+    /// being deterministic on unchanged data) bit-identical predictions.
+    #[test]
+    fn refreshed_fleet_preserves_behavior() {
+        let data = gp_dataset(&SynthSpec::named("shardref", 150, 2), 19);
+        let (tr, te) = data.split(0.85, 7);
+        let fleet =
+            ShardedGp::fit(&tr, &RbfKernel::new(1.0), 0.1, &config(12), 3, ClusterMethod::KMeans)
+                .unwrap();
+        let re = fleet.refreshed_fleet().unwrap();
+        assert_eq!(re.n_shards(), fleet.n_shards());
+        assert_eq!(re.shard_sizes(), fleet.shard_sizes());
+        let p0 = fleet.predict(&te.x);
+        let p1 = re.predict(&te.x);
+        for i in 0..te.n() {
+            assert_eq!(p0.mean[i].to_bits(), p1.mean[i].to_bits(), "mean[{i}]");
+            assert_eq!(p0.var[i].to_bits(), p1.var[i].to_bits(), "var[{i}]");
+        }
+        // trait hook
+        let boxed = fleet.refreshed().expect("supported").unwrap();
+        assert_eq!(boxed.info().n, tr.n());
     }
 
     #[test]

@@ -51,6 +51,18 @@ static CASCADES: AtomicU64 = AtomicU64::new(0);
 /// Sits next to [`cascade_count`] as the training plane's cost gauge.
 static FACTORIZES: AtomicU64 = AtomicU64::new(0);
 
+/// Process-wide count of stages the incremental extend path
+/// ([`super::update::extend_factorize`]) rebuilt — i.e. stages where
+/// fresh compression work ran for appended points. Together with
+/// [`STAGE_REUSES`] this is the observable contract behind the streaming
+/// observe plane: an incremental update must reuse strictly more stages
+/// than it rebuilds, and must never bump [`FACTORIZES`].
+static STAGE_REBUILDS: AtomicU64 = AtomicU64::new(0);
+
+/// Process-wide count of stages the incremental extend path carried over
+/// by replaying their stored rotations verbatim (no compressor ran).
+static STAGE_REUSES: AtomicU64 = AtomicU64::new(0);
+
 /// Total orthogonal cascades executed by this process so far.
 pub fn cascade_count() -> u64 {
     CASCADES.load(Ordering::Relaxed)
@@ -61,9 +73,29 @@ pub fn factorize_count() -> u64 {
     FACTORIZES.load(Ordering::Relaxed)
 }
 
+/// Total stages rebuilt (fresh compression) by incremental extends.
+pub fn stage_rebuild_count() -> u64 {
+    STAGE_REBUILDS.load(Ordering::Relaxed)
+}
+
+/// Total stages reused (rotations replayed) by incremental extends.
+pub fn stage_reuse_count() -> u64 {
+    STAGE_REUSES.load(Ordering::Relaxed)
+}
+
 /// Bumped by [`super::factorize`] once per factorization run.
 pub(crate) fn record_factorize() {
     FACTORIZES.fetch_add(1, Ordering::Relaxed);
+}
+
+/// Bumped by [`super::update::extend_factorize`] per stage it rebuilt.
+pub(crate) fn record_stage_rebuilds(n: u64) {
+    STAGE_REBUILDS.fetch_add(n, Ordering::Relaxed);
+}
+
+/// Bumped by [`super::update::extend_factorize`] per stage it reused.
+pub(crate) fn record_stage_reuses(n: u64) {
+    STAGE_REUSES.fetch_add(n, Ordering::Relaxed);
 }
 
 /// Below this many columns a parallel split would be all overhead.

@@ -27,9 +27,14 @@ pub mod factor;
 pub mod ops;
 pub mod parallel;
 pub mod stage;
+pub mod update;
 
-pub use factor::{cascade_count, factorize_count, FactorHealth, MkaFactor, StageHealth};
+pub use factor::{
+    cascade_count, factorize_count, stage_rebuild_count, stage_reuse_count, FactorHealth,
+    MkaFactor, StageHealth,
+};
 pub use stage::{BlockFactor, Stage};
+pub use update::{extend_factorize, ExtendStats};
 
 use crate::cluster::{cluster_rows, ClusterMethod};
 use crate::compress::{Compression, CompressorKind, QFactor};

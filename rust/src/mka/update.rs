@@ -1,0 +1,371 @@
+//! Incremental extension of an existing MKA factor — the streaming
+//! observe plane's factorization step.
+//!
+//! [`extend_factorize`] appends `b` new points to a factorized kernel
+//! without rerunning Algorithm 1 from scratch. The telescoping structure
+//! makes this cheap and *locally exact*:
+//!
+//! * Every stored rotation acts on a fixed index set, and appended points
+//!   occupy fresh trailing indices at every level — so existing block
+//!   rotations are **replayed verbatim** (never recomputed), and the
+//!   old×old entries of every level matrix come out bit-identical to the
+//!   original factorization. Stored wavelet diagonals therefore stay
+//!   exact and are carried over untouched.
+//! * At stage 0 each appended point is assigned to its nearest existing
+//!   cluster by mean kernel affinity; the new points of each touched
+//!   cluster form one *new* block, compressed among themselves with the
+//!   configured compressor. This is the only fresh compression work —
+//!   the per-call [`ExtendStats`] and the process-wide
+//!   [`super::stage_rebuild_count`] / [`super::stage_reuse_count`]
+//!   counters account for it.
+//! * At deeper stages the surviving new core coordinates ride through as
+//!   one appended identity (all-core) block, so they reach the final
+//!   core exactly. The core grows by the stage-0 core count per extend;
+//!   callers bound the growth with a drift gate
+//!   ([`crate::gp::ObservePolicy`]) and fall back to a full refit.
+//!
+//! The result is a genuine [`MkaFactor`] of the extended gram (valid
+//! partitions at every stage, spsd by the same Proposition 1 clamp), and
+//! [`extend_factorize`] never bumps [`super::factorize_count`] — the σ²
+//! shift view keeps re-tunes free exactly as on the fresh-fit path.
+
+use super::factor::{record_stage_rebuilds, record_stage_reuses, MkaFactor};
+use super::stage::{BlockFactor, Stage};
+use super::{apply_stage_rotations, parallel, MkaConfig};
+use crate::compress::{Compression, QFactor};
+use crate::error::{Error, Result};
+use crate::la::dense::Mat;
+use crate::util::Rng;
+
+/// Seed salt for the extend path's block compressions, so an extend never
+/// replays the RNG stream of the original factorization.
+const EXTEND_SEED_SALT: u64 = 0x4f42_5345;
+
+/// Per-call accounting of one [`extend_factorize`] run. Process-wide
+/// counters only support lower-bound assertions in concurrent test
+/// binaries; this struct is the exact record.
+#[derive(Clone, Debug, Default)]
+pub struct ExtendStats {
+    /// Points appended by this call.
+    pub appended: usize,
+    /// Stages in the factor (unchanged by an extend).
+    pub stages_total: usize,
+    /// Stages where fresh compression work ran (new non-identity blocks).
+    pub stages_rebuilt: usize,
+    /// Stages carried over by replaying stored rotations verbatim.
+    pub stages_reused: usize,
+    /// Existing blocks whose rotations were replayed unchanged.
+    pub blocks_reused: usize,
+    /// Stage-0 clusters that received new points (new blocks appended).
+    pub blocks_touched: usize,
+    /// Core rows added relative to the source factor.
+    pub core_growth: usize,
+}
+
+/// Extend `old` (a factor of the leading `old.n`×`old.n` principal block
+/// of `kj`) to a factor of the full extended gram `kj`. The appended
+/// points must occupy the trailing rows/columns of `kj`; `kj` is
+/// noise-free, exactly like [`super::factorize`]'s input — σ² stays a
+/// free [`MkaFactor::shifted`] re-tune of the result (the source shift is
+/// carried over).
+pub fn extend_factorize(
+    old: &MkaFactor,
+    kj: &Mat,
+    config: &MkaConfig,
+) -> Result<(MkaFactor, ExtendStats)> {
+    config.validate()?;
+    if !kj.is_square() {
+        return Err(Error::Linalg("extend_factorize needs a square matrix".into()));
+    }
+    if kj.rows <= old.n {
+        return Err(Error::Data(format!(
+            "extend_factorize: extended gram has {} rows but the factor already covers {}",
+            kj.rows, old.n
+        )));
+    }
+    if kj.asymmetry() > 1e-6 * kj.max_abs().max(1.0) {
+        return Err(Error::Linalg("extend_factorize needs a symmetric matrix".into()));
+    }
+    let n_ext = kj.rows;
+    let b = n_ext - old.n;
+    let _sp = crate::obs::span!("mka.extend n={} b={b}", old.n);
+    let compressor = config.compressor.build();
+    let mut kc = kj.clone();
+    kc.symmetrize();
+    let mut stats =
+        ExtendStats { appended: b, stages_total: old.stages.len(), ..ExtendStats::default() };
+    let mut stages: Vec<Stage> = Vec::with_capacity(old.stages.len());
+    // New coordinates entering the current level; they always sit at the
+    // trailing positions st.n_in.. of the extended level matrix.
+    let mut incoming = b;
+
+    for (li, st) in old.stages.iter().enumerate() {
+        let m = st.n_in;
+        let n_cur = m + incoming;
+        debug_assert_eq!(kc.rows, n_cur);
+
+        // ---- group incoming coordinates into new blocks ------------------
+        let new_comps: Vec<(Vec<usize>, Compression)> = if li == 0 {
+            // Nearest existing cluster by mean |K| affinity against the
+            // block's members (ties → lower block id, deterministic).
+            let mut groups: Vec<Vec<usize>> = vec![Vec::new(); st.blocks.len()];
+            for j in m..n_cur {
+                let mut best = 0usize;
+                let mut best_aff = f64::NEG_INFINITY;
+                for (bi, blk) in st.blocks.iter().enumerate() {
+                    let s: f64 = blk.idx.iter().map(|&i| kc.at(j, i).abs()).sum();
+                    let aff = s / blk.idx.len().max(1) as f64;
+                    if aff > best_aff {
+                        best_aff = aff;
+                        best = bi;
+                    }
+                }
+                groups[best].push(j);
+            }
+            stats.blocks_touched = groups.iter().filter(|g| !g.is_empty()).count();
+            let work: Vec<(Vec<usize>, usize, u64)> = groups
+                .into_iter()
+                .enumerate()
+                .filter(|(_, g)| !g.is_empty())
+                .map(|(bi, g)| {
+                    let c = (((g.len() as f64) * config.gamma).round() as usize).clamp(1, g.len());
+                    (g, c, config.seed ^ EXTEND_SEED_SALT ^ ((li as u64) << 32) ^ bi as u64)
+                })
+                .collect();
+            let kc_ref = &kc;
+            let compressor = &compressor;
+            parallel::par_map(work, config.n_threads, move |_, (idx, c_target, seed)| {
+                let comp = if c_target >= idx.len() {
+                    Compression::identity(idx.len())
+                } else {
+                    let a = kc_ref.gather(&idx, &idx);
+                    let mut brng = Rng::new(seed);
+                    compressor.compress(&a, c_target, &mut brng)
+                };
+                debug_assert!(comp.is_valid_for(idx.len()));
+                (idx, comp)
+            })
+        } else {
+            // Deeper levels: surviving new core coordinates ride through
+            // as one identity all-core block.
+            vec![((m..n_cur).collect(), Compression::identity(incoming))]
+        };
+
+        let rebuilt = new_comps.iter().any(|(_, c)| !matches!(c.q, QFactor::Identity));
+        if rebuilt {
+            stats.stages_rebuilt += 1;
+        } else {
+            stats.stages_reused += 1;
+        }
+        stats.blocks_reused += st.blocks.len();
+
+        // ---- replay stored rotations, then apply the new ones ------------
+        // apply_stage_rotations only reads the orthogonal factor of each
+        // entry, so replayed blocks carry empty core/wavelet splits.
+        let mut comps: Vec<(Vec<usize>, Compression)> = st
+            .blocks
+            .iter()
+            .map(|bf| {
+                (
+                    bf.idx.clone(),
+                    Compression {
+                        q: bf.q.clone(),
+                        core_local: Vec::new(),
+                        wavelet_local: Vec::new(),
+                    },
+                )
+            })
+            .collect();
+        comps.extend(new_comps.iter().cloned());
+        apply_stage_rotations(&mut kc, &comps, config.n_threads);
+
+        // ---- split: stored old splits + the new blocks' splits -----------
+        let mut core_global = st.core_global.clone();
+        let mut wavelet_global = st.wavelet_global.clone();
+        // Stored dvals are exact for the extended matrix too (new blocks
+        // never mix old coordinates), so they carry over untouched; only
+        // newly retired wavelets read the rotated diagonal, under the same
+        // Proposition 1 clamp as a fresh factorization.
+        let mut dvals = st.dvals.clone();
+        let max_diag = kc.diagonal().iter().fold(0.0f64, |mx, &v| mx.max(v.abs())).max(1e-300);
+        let floor = config.diag_floor * max_diag;
+        let mut blocks: Vec<BlockFactor> = st.blocks.clone();
+        for (idx, comp) in new_comps {
+            for &c in &comp.core_local {
+                core_global.push(idx[c]);
+            }
+            for &w in &comp.wavelet_local {
+                let g = idx[w];
+                wavelet_global.push(g);
+                dvals.push(kc.at(g, g).max(floor));
+            }
+            blocks.push(BlockFactor { idx, q: comp.q });
+        }
+
+        let next = kc.gather(&core_global, &core_global);
+        incoming = core_global.len() - st.core_global.len();
+        stages.push(Stage { n_in: n_cur, blocks, core_global, wavelet_global, dvals });
+        kc = next;
+        kc.symmetrize();
+    }
+
+    record_stage_rebuilds(stats.stages_rebuilt as u64);
+    record_stage_reuses(stats.stages_reused as u64);
+    stats.core_growth = kc.rows.saturating_sub(old.core.rows);
+    let f = MkaFactor::new(n_ext, stages, kc).with_threads(config.n_threads).shifted(old.shift);
+    debug_assert!(f.check_valid());
+    Ok((f, stats))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::ClusterMethod;
+    use crate::kernels::{Kernel, RbfKernel};
+    use crate::mka::{factorize, factorize_count};
+
+    fn points(n: usize, d: usize, seed: u64) -> Mat {
+        let mut rng = Rng::new(seed);
+        Mat::from_fn(n, d, |_, _| rng.normal())
+    }
+
+    fn cfg(d_core: usize, block: usize) -> MkaConfig {
+        MkaConfig {
+            d_core,
+            block_size: block,
+            n_threads: 2,
+            cluster_method: ClusterMethod::Bisect,
+            ..MkaConfig::default()
+        }
+    }
+
+    fn split_factor(n: usize, b: usize, d_core: usize, block: usize) -> (Mat, MkaFactor, Mat) {
+        let x = points(n + b, 3, 17);
+        let kj = RbfKernel::new(1.0).gram_sym(&x);
+        let kold = kj.gather(&(0..n).collect::<Vec<_>>(), &(0..n).collect::<Vec<_>>());
+        let xold = x.gather_rows(&(0..n).collect::<Vec<_>>());
+        let old = factorize(&kold, Some(&xold), &cfg(d_core, block)).unwrap();
+        (kj, old, kold)
+    }
+
+    #[test]
+    fn extend_produces_valid_factor_without_factorizing() {
+        let (kj, old, _) = split_factor(96, 8, 16, 32);
+        let before = factorize_count();
+        let (f, stats) = extend_factorize(&old, &kj, &cfg(16, 32)).unwrap();
+        assert_eq!(factorize_count(), before, "extend must not count as a factorization");
+        assert_eq!(f.n, 104);
+        assert!(f.check_valid());
+        assert_eq!(stats.appended, 8);
+        assert_eq!(stats.stages_total, old.n_stages());
+        assert_eq!(stats.stages_rebuilt + stats.stages_reused, stats.stages_total);
+        // the acceptance contract: rebuilds strictly below the stage count
+        assert!(old.n_stages() >= 2, "fixture must be multi-stage");
+        assert!(
+            stats.stages_rebuilt < stats.stages_total,
+            "rebuilt {} of {} stages",
+            stats.stages_rebuilt,
+            stats.stages_total
+        );
+        assert!(stats.blocks_reused > 0);
+        assert!(stats.blocks_touched >= 1);
+        assert_eq!(f.d_core(), old.d_core() + stats.core_growth);
+    }
+
+    #[test]
+    fn old_block_reconstruction_is_preserved_exactly() {
+        // New blocks never mix old coordinates, so the extended factor's
+        // reconstruction restricted to the old points is the old one.
+        let (kj, old, _) = split_factor(80, 6, 16, 27);
+        let (f, _) = extend_factorize(&old, &kj, &cfg(16, 27)).unwrap();
+        let dense_old = old.to_dense();
+        let dense_ext = f.to_dense();
+        for i in 0..80 {
+            for j in 0..80 {
+                assert!(
+                    (dense_ext.at(i, j) - dense_old.at(i, j)).abs() < 1e-12,
+                    "({i},{j}): {} vs {}",
+                    dense_ext.at(i, j),
+                    dense_old.at(i, j)
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn extended_approximation_quality_tracks_fresh() {
+        let (kj, old, _) = split_factor(90, 10, 20, 30);
+        let c = cfg(20, 30);
+        let (f, _) = extend_factorize(&old, &kj, &c).unwrap();
+        let rel = f.to_dense().sub(&kj).frob_norm() / kj.frob_norm();
+        let x = points(100, 3, 17);
+        let fresh = factorize(&kj, Some(&x), &c).unwrap();
+        let rel_fresh = fresh.to_dense().sub(&kj).frob_norm() / kj.frob_norm();
+        // The extend keeps more core than a fresh run, so it should stay
+        // within a modest factor of (often better than) the fresh error.
+        assert!(rel < (2.0 * rel_fresh).max(0.35), "extend rel {rel} vs fresh {rel_fresh}");
+    }
+
+    #[test]
+    fn deterministic_and_thread_invariant() {
+        let (kj, old, _) = split_factor(72, 5, 12, 24);
+        let (f1, s1) = extend_factorize(&old, &kj, &cfg(12, 24)).unwrap();
+        let (f2, _) = extend_factorize(&old, &kj, &cfg(12, 24)).unwrap();
+        let c4 = MkaConfig { n_threads: 4, ..cfg(12, 24) };
+        let (f4, s4) = extend_factorize(&old, &kj, &c4).unwrap();
+        let d1 = f1.to_dense();
+        assert_eq!(
+            d1.data.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            f2.to_dense().data.iter().map(|v| v.to_bits()).collect::<Vec<_>>()
+        );
+        assert_eq!(
+            d1.data.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            f4.to_dense().data.iter().map(|v| v.to_bits()).collect::<Vec<_>>()
+        );
+        assert_eq!(s1.stages_rebuilt, s4.stages_rebuilt);
+        assert_eq!(s1.core_growth, s4.core_growth);
+    }
+
+    #[test]
+    fn stageless_factor_extends_to_stageless() {
+        // n ≤ d_core: the factor is its own core; the extension too.
+        let x = points(24, 2, 3);
+        let kj = RbfKernel::new(1.0).gram_sym(&x);
+        let idx: Vec<usize> = (0..20).collect();
+        let kold = kj.gather(&idx, &idx);
+        let old = factorize(&kold, None, &cfg(32, 16)).unwrap();
+        assert_eq!(old.n_stages(), 0);
+        let (f, stats) = extend_factorize(&old, &kj, &cfg(32, 16)).unwrap();
+        assert_eq!(f.n_stages(), 0);
+        assert_eq!(f.d_core(), 24);
+        assert_eq!(stats.stages_total, 0);
+        assert!(f.to_dense().sub(&kj).max_abs() < 1e-10);
+    }
+
+    #[test]
+    fn shift_carries_over_and_rejects_bad_inputs() {
+        let (kj, old, _) = split_factor(60, 4, 12, 20);
+        let shifted = old.shifted(0.3);
+        let (f, _) = extend_factorize(&shifted, &kj, &cfg(12, 20)).unwrap();
+        assert_eq!(f.shift, 0.3);
+        // too-small gram, rectangular and asymmetric inputs are typed errors
+        assert!(extend_factorize(&old, &kj.gather(&[0, 1], &[0, 1]), &cfg(12, 20)).is_err());
+        assert!(extend_factorize(&old, &Mat::zeros(70, 64), &cfg(12, 20)).is_err());
+        let mut asym = kj.clone();
+        asym.set(0, 1, asym.at(0, 1) + 1.0);
+        assert!(extend_factorize(&old, &asym, &cfg(12, 20)).is_err());
+    }
+
+    #[test]
+    fn counters_account_for_reuse() {
+        use crate::mka::{stage_rebuild_count, stage_reuse_count};
+        let (kj, old, _) = split_factor(96, 8, 16, 32);
+        let before_rebuild = stage_rebuild_count();
+        let before_reuse = stage_reuse_count();
+        let (_, stats) = extend_factorize(&old, &kj, &cfg(16, 32)).unwrap();
+        // Concurrent tests may also bump these: lower bounds only.
+        assert!(stage_rebuild_count() >= before_rebuild + stats.stages_rebuilt as u64);
+        assert!(stage_reuse_count() >= before_reuse + stats.stages_reused as u64);
+        assert!(stats.stages_reused >= 1, "deeper stages must be reused");
+    }
+}

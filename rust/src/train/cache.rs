@@ -259,6 +259,33 @@ impl FactorCache {
     ) -> Result<Arc<NystromEntry>> {
         get_or_build(&self.nystrom, self.cap, &self.hits, &self.misses, scope, ells, build)
     }
+
+    /// Drop every entry (both families) whose key starts with `prefix`,
+    /// returning how many were removed. Keys are `[scope…, ℓ bits…]`, and
+    /// sharded training tags its scopes `[shard_id, scope…]`
+    /// (`train::mll::shard_scope`), so `invalidate_scope(&[s])` evicts
+    /// exactly shard `s`'s factors — the streaming observe plane calls
+    /// this when new points land in a shard, since every cached factor
+    /// for that shard was built from a dataset that no longer exists.
+    /// An empty prefix clears the cache. Entries still borrowed through
+    /// an `Arc` stay alive until the borrower drops them; they are only
+    /// unreachable for future lookups.
+    pub fn invalidate_scope(&self, prefix: &[u64]) -> usize {
+        let mut removed = 0;
+        {
+            let mut s = self.mka.lock().unwrap();
+            let before = s.slots.len();
+            s.slots.retain(|sl| !sl.key.starts_with(prefix));
+            removed += before - s.slots.len();
+        }
+        {
+            let mut s = self.nystrom.lock().unwrap();
+            let before = s.slots.len();
+            s.slots.retain(|sl| !sl.key.starts_with(prefix));
+            removed += before - s.slots.len();
+        }
+        removed
+    }
 }
 
 fn key_bits(scope: &[u64], ells: &[f64]) -> Vec<u64> {
@@ -442,6 +469,41 @@ mod tests {
         let ok = c.mka(&[], &[1.0], || Ok(entry(1.0)));
         assert!(ok.is_ok());
         assert_eq!(c.misses(), 2);
+    }
+
+    /// Scoped invalidation removes exactly the prefixed entries: shard
+    /// 1's factors go, shard 2's still hit — what the observe plane needs
+    /// when a streaming batch lands in one shard of a training run.
+    #[test]
+    fn invalidate_scope_evicts_only_the_prefix() {
+        let c = FactorCache::new(8);
+        // shard-tagged scopes, as sharded training builds them
+        let _ = c.mka(&[1, 16, 7], &[1.0], || Ok(entry(1.0))).unwrap();
+        let _ = c.mka(&[1, 16, 7], &[2.0], || Ok(entry(2.0))).unwrap();
+        let _ = c.mka(&[2, 16, 7], &[1.0], || Ok(entry(3.0))).unwrap();
+        assert_eq!(c.invalidate_scope(&[1]), 2);
+        // shard 2 still hits...
+        let _ = c.mka(&[2, 16, 7], &[1.0], || panic!("shard 2 untouched")).unwrap();
+        // ...shard 1 rebuilds
+        let mut rebuilt = false;
+        let _ = c
+            .mka(&[1, 16, 7], &[1.0], || {
+                rebuilt = true;
+                Ok(entry(1.0))
+            })
+            .unwrap();
+        assert!(rebuilt, "invalidated shard must rebuild");
+        // idempotent; empty prefix clears everything
+        assert_eq!(c.invalidate_scope(&[99]), 0);
+        assert!(c.invalidate_scope(&[]) >= 2);
+        let mut again = false;
+        let _ = c
+            .mka(&[2, 16, 7], &[1.0], || {
+                again = true;
+                Ok(entry(3.0))
+            })
+            .unwrap();
+        assert!(again, "full clear must evict shard 2 too");
     }
 
     #[test]

@@ -1,0 +1,124 @@
+//! Shared fixtures for the integration suites: synthetic datasets, MKA
+//! test configs, request builders, router/TCP bring-up and the job-poll
+//! loop — the pieces previously duplicated across `gp_integration.rs`,
+//! `sharded.rs`, `train_integration.rs` and `obs_integration.rs`.
+//!
+//! Each suite pulls this in with `mod common;`; unused helpers per
+//! binary are expected, hence the file-level `allow(dead_code)`.
+#![allow(dead_code)]
+
+use std::sync::Arc;
+
+use mka_gp::coordinator::{Client, JobState, Router, Server, ServiceConfig};
+use mka_gp::data::synth::{gp_dataset, SynthSpec};
+use mka_gp::data::Dataset;
+use mka_gp::mka::MkaConfig;
+use mka_gp::util::Json;
+
+/// Relative tolerance for compressed-vs-exact agreement (log-marginals,
+/// evidence values) shared by the equivalence suites.
+pub const REL_TOL: f64 = 0.10;
+
+/// Default noise level the integration fixtures fit at.
+pub const SIGMA2: f64 = 0.1;
+
+/// A smooth synthetic GP dataset by (name, n, dim, seed) — the one-line
+/// wrapper every suite was writing by hand.
+pub fn synth(name: &str, n: usize, dim: usize, seed: u64) -> Dataset {
+    gp_dataset(&SynthSpec::named(name, n, dim), seed)
+}
+
+/// Small MKA config for fast integration fits; `n_threads: 0` keeps the
+/// global pool setting.
+pub fn small_cfg(n_threads: usize) -> MkaConfig {
+    MkaConfig { d_core: 16, block_size: 32, n_threads, ..MkaConfig::default() }
+}
+
+/// A router wired for tests: zero batching window (predicts dispatch
+/// immediately) and a small worker pool.
+pub fn test_router() -> Router {
+    Router::new(test_config())
+}
+
+pub fn test_config() -> ServiceConfig {
+    ServiceConfig { port: 0, batch_window_ms: 0, n_workers: 2, ..Default::default() }
+}
+
+/// Router behind a real TCP socket on an ephemeral port, plus a
+/// connected client. Drop order (client, then server) closes cleanly.
+pub fn tcp_rig(cfg: ServiceConfig) -> (Server, Client, Arc<Router>) {
+    let router = Arc::new(Router::new(cfg));
+    let server = Server::start(Arc::clone(&router), "127.0.0.1", 0).unwrap();
+    let client = Client::connect(&server.addr().to_string()).unwrap();
+    (server, client, router)
+}
+
+/// A `fit` request for `data` with the standard test hyperparameters.
+/// Callers layer extras (`"shards"`, `"async"`) with `.with(...)`.
+pub fn fit_json(model: &str, method: &str, data: &Dataset, k: usize) -> Json {
+    Json::obj()
+        .with("op", Json::Str("fit".into()))
+        .with("model", Json::Str(model.into()))
+        .with("method", Json::Str(method.into()))
+        .with("x", matrix_json(data))
+        .with("y", Json::from_f64_slice(&data.y))
+        .with(
+            "params",
+            Json::obj()
+                .with("lengthscale", Json::Num(1.0))
+                .with("sigma2", Json::Num(SIGMA2))
+                .with("k", Json::Num(k as f64)),
+        )
+}
+
+/// A `predict` request at the given test rows.
+pub fn predict_json(model: &str, rows: &[&[f64]]) -> Json {
+    Json::obj()
+        .with("op", Json::Str("predict".into()))
+        .with("model", Json::Str(model.into()))
+        .with("x", Json::Arr(rows.iter().map(|r| Json::from_f64_slice(r)).collect()))
+}
+
+/// An `observe` request appending `(xb, yb)` to a served model.
+pub fn observe_json(model: &str, xb: &[&[f64]], yb: &[f64]) -> Json {
+    Json::obj()
+        .with("op", Json::Str("observe".into()))
+        .with("model", Json::Str(model.into()))
+        .with("x", Json::Arr(xb.iter().map(|r| Json::from_f64_slice(r)).collect()))
+        .with("y", Json::from_f64_slice(yb))
+}
+
+/// The dataset's design matrix as protocol JSON (`[[...]...]`).
+pub fn matrix_json(data: &Dataset) -> Json {
+    Json::Arr((0..data.n()).map(|i| Json::from_f64_slice(data.x.row(i))).collect())
+}
+
+/// Poll an async job to completion through the `job` op, panicking on
+/// failure or timeout; returns the terminal `job` response (with any
+/// detail the job attached).
+pub fn poll_job_done(r: &Router, job_id: u64) -> Json {
+    for _ in 0..600 {
+        let poll = r.handle(
+            &Json::obj()
+                .with("op", Json::Str("job".into()))
+                .with("job_id", Json::Num(job_id as f64)),
+        );
+        match poll.str_field("state") {
+            Some("done") => return poll,
+            Some("failed") => panic!("job {job_id} failed: {poll:?}"),
+            _ => std::thread::sleep(std::time::Duration::from_millis(25)),
+        }
+    }
+    panic!("job {job_id} never finished");
+}
+
+/// Assert a router response succeeded, with the full response in the
+/// panic message when it did not.
+pub fn assert_ok(resp: &Json) {
+    assert_eq!(resp.get("ok"), Some(&Json::Bool(true)), "{resp:?}");
+}
+
+/// The raw job state, for tests asserting non-terminal phases.
+pub fn job_state(r: &Router, job_id: u64) -> JobState {
+    r.jobs.get(job_id).expect("job exists").1
+}

@@ -10,6 +10,9 @@ use mka_gp::gp::full::FullGp;
 use mka_gp::gp::GpModel;
 use mka_gp::kernels::RbfKernel;
 
+mod common;
+use common::{small_cfg, synth, SIGMA2};
+
 #[test]
 fn all_six_methods_on_all_catalog_datasets() {
     // Subsampled catalog: every method must produce finite, non-degenerate
@@ -63,7 +66,7 @@ fn paper_ordering_on_broad_spectrum_data() {
 #[test]
 fn cv_then_fit_pipeline() {
     // The §5 protocol end to end: CV grid → best hp → final fit → sane SMSE.
-    let data = gp_dataset(&SynthSpec::named("cvp", 240, 2), 31);
+    let data = synth("cvp", 240, 2, 31);
     let (tr, te) = data.split(0.9, 1);
     let grid = default_grid(2);
     let out = grid_search(&tr, 3, &grid, 5, |t, vx, hp| {
@@ -125,21 +128,15 @@ fn figure2_flatness_shape() {
 fn variance_calibration_on_heldout() {
     // Predictive z-scores (y−μ)/σ must have roughly unit scale for the
     // calibrated methods (Full, MKA).
-    let data = gp_dataset(&SynthSpec::named("cal", 300, 2), 51);
+    let data = synth("cal", 300, 2, 51);
     let (tr, te) = data.split(0.9, 1);
     let kern = RbfKernel::new(0.5);
+    let cfg = mka_gp::mka::MkaConfig { d_core: 32, block_size: 80, ..small_cfg(0) };
     for (name, pred) in [
-        ("full", FullGp::fit(&tr, &kern, 0.1).unwrap().predict(&te.x)),
+        ("full", FullGp::fit(&tr, &kern, SIGMA2).unwrap().predict(&te.x)),
         (
             "mka",
-            mka_gp::gp::mka_gp::MkaGp::fit(
-                &tr,
-                &kern,
-                0.1,
-                &mka_gp::mka::MkaConfig { d_core: 32, block_size: 80, ..Default::default() },
-            )
-            .unwrap()
-            .predict(&te.x),
+            mka_gp::gp::mka_gp::MkaGp::fit(&tr, &kern, SIGMA2, &cfg).unwrap().predict(&te.x),
         ),
     ] {
         let z2: f64 = te

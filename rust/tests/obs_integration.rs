@@ -16,10 +16,8 @@
 //!    agree exactly, `trace`/`logs`/`diagnose` answer, `diagnose` does
 //!    not refactorize, and the sink file is viewer-loadable.
 
-use std::sync::Arc;
-
 use mka_gp::cluster::ClusterMethod;
-use mka_gp::coordinator::{Client, Router, Server, ServiceConfig};
+use mka_gp::coordinator::ServiceConfig;
 use mka_gp::data::synth::{gp_dataset, SynthSpec};
 use mka_gp::experiments::methods::Method;
 use mka_gp::gp::mka_gp::MkaGp;
@@ -31,9 +29,8 @@ use mka_gp::obs;
 use mka_gp::train::{select_hyperparams, ModelSelection, OptimBudget};
 use mka_gp::util::Json;
 
-fn small_cfg(n_threads: usize) -> MkaConfig {
-    MkaConfig { d_core: 16, block_size: 32, n_threads, ..MkaConfig::default() }
-}
+mod common;
+use common::{fit_json, small_cfg, synth, tcp_rig};
 
 #[test]
 fn tracing_changes_no_bits_in_fit_predict_train() {
@@ -176,36 +173,12 @@ fn trace_and_event_rings_stay_bounded() {
 }
 
 fn fit_req(model: &str, n: usize, shards: usize) -> Json {
-    let data = gp_dataset(&SynthSpec::named("obs-tcp", n, 1), 3);
-    let x: Vec<Json> = (0..n).map(|i| Json::from_f64_slice(data.x.row(i))).collect();
-    Json::obj()
-        .with("op", Json::Str("fit".into()))
-        .with("model", Json::Str(model.into()))
-        .with("method", Json::Str("mka".into()))
-        .with("shards", Json::Num(shards as f64))
-        .with("x", Json::Arr(x))
-        .with("y", Json::from_f64_slice(&data.y))
-        .with(
-            "params",
-            Json::obj()
-                .with("lengthscale", Json::Num(1.0))
-                .with("sigma2", Json::Num(0.1))
-                .with("k", Json::Num(8.0)),
-        )
+    let data = synth("obs-tcp", n, 1, 3);
+    fit_json(model, "mka", &data, 8).with("shards", Json::Num(shards as f64))
 }
 
 fn predict_req(model: &str, trace: Option<bool>) -> Json {
-    let mut j = Json::obj()
-        .with("op", Json::Str("predict".into()))
-        .with("model", Json::Str(model.into()))
-        .with(
-            "x",
-            Json::Arr(vec![
-                Json::from_f64_slice(&[0.1]),
-                Json::from_f64_slice(&[0.9]),
-                Json::from_f64_slice(&[1.7]),
-            ]),
-        );
+    let mut j = common::predict_json(model, &[&[0.1], &[0.9], &[1.7]]);
     if let Some(t) = trace {
         j.set("trace", Json::Bool(t));
     }
@@ -228,9 +201,7 @@ fn tcp_round_trip_with_trace_out_sink() {
         log_ring: 64,
         ..Default::default()
     };
-    let router = Arc::new(Router::new(cfg));
-    let server = Server::start(router, "127.0.0.1", 0).unwrap();
-    let mut client = Client::connect(&server.addr().to_string()).unwrap();
+    let (server, mut client, _router) = tcp_rig(cfg);
 
     let resp = client.call(&fit_req("obs-fleet", 80, 2)).unwrap();
     assert_eq!(resp.get("ok"), Some(&Json::Bool(true)), "fit failed: {resp:?}");

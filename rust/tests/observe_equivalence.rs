@@ -1,0 +1,266 @@
+//! Refit-equivalence pins for the streaming observe plane.
+//!
+//! Four contracts, each against a fresh `fit` on the concatenated data:
+//!
+//! 1. **Incremental tracking** — `observe(batch)` serves predictions
+//!    within tight relative tolerance of a fresh fit on all points, and
+//!    its (approximate) evidence stays within the compression tolerance.
+//! 2. **Gated refit is exact** — when the drift gate forces the windowed
+//!    full re-fit, the updated model is *bit-identical* to a fresh fit:
+//!    same prediction bits, same log-marginal bits.
+//! 3. **Thread determinism** — the whole observe pipeline (fit → extend
+//!    → predict) produces bit-identical results at 1, 2 and 4 threads.
+//! 4. **Stage-reuse accounting** — the incremental path performs zero
+//!    new full factorizations (`factorize_count` is flat across it) and
+//!    rebuilds strictly fewer stages than the factor holds, with the
+//!    process-wide stage counters moving by exactly the per-call stats.
+//!
+//! The assertion surface includes process-global counters, so every
+//! test serializes on one lock — unlike the lib unit tests, which must
+//! tolerate concurrent factorizations and only pin per-call stats.
+
+use std::sync::Mutex;
+
+use mka_gp::data::Dataset;
+use mka_gp::gp::mka_gp::MkaGp;
+use mka_gp::gp::{GpModel, ObservePath, ObservePolicy};
+use mka_gp::kernels::RbfKernel;
+use mka_gp::la::dense::Mat;
+use mka_gp::mka::{factorize_count, stage_rebuild_count, stage_reuse_count, MkaConfig};
+
+mod common;
+use common::{synth, REL_TOL, SIGMA2};
+
+static LOCK: Mutex<()> = Mutex::new(());
+
+/// Serialize counter-sensitive tests; survive a poisoned lock (a failed
+/// test must not cascade into spurious failures of the rest).
+fn lock() -> std::sync::MutexGuard<'static, ()> {
+    LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// Small config with several compression stages so stage reuse is
+/// observable; serial so bitwise claims are about the math, not a pool.
+fn cfg(n_threads: usize) -> MkaConfig {
+    MkaConfig { d_core: 12, block_size: 32, n_threads, ..MkaConfig::default() }
+}
+
+/// Split the last `b` rows off as the streaming batch.
+fn split_tail(data: &Dataset, b: usize) -> (Dataset, Mat, Vec<f64>) {
+    let n = data.n() - b;
+    let head: Vec<usize> = (0..n).collect();
+    let tail: Vec<usize> = (n..data.n()).collect();
+    let older = Dataset::new(data.name.clone(), data.x.gather_rows(&head), data.y[..n].to_vec());
+    (older, data.x.gather_rows(&tail), data.y[n..].to_vec())
+}
+
+/// The dataset a fresh fit on "all points" sees: old rows then the
+/// batch, in arrival order — the same convention `observe` appends in.
+fn concat(older: &Dataset, xb: &Mat, yb: &[f64]) -> Dataset {
+    let n = older.n();
+    let mut x = Mat::zeros(n + xb.rows, older.dim());
+    x.set_block(0, 0, &older.x);
+    x.set_block(n, 0, xb);
+    let mut y = older.y.clone();
+    y.extend_from_slice(yb);
+    Dataset::new(older.name.clone(), x, y)
+}
+
+fn test_grid(dim: usize) -> Mat {
+    Mat::from_fn(9, dim, |i, j| -0.8 + 0.2 * i as f64 + 0.05 * j as f64)
+}
+
+fn assert_rel_close(a: &[f64], b: &[f64], tol: f64, what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: length mismatch");
+    for i in 0..a.len() {
+        let denom = b[i].abs().max(1e-9);
+        assert!(
+            (a[i] - b[i]).abs() <= tol * denom,
+            "{what}[{i}]: {} vs {} (rel tol {tol})",
+            a[i],
+            b[i]
+        );
+    }
+}
+
+fn assert_bits_equal(a: &[f64], b: &[f64], what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: length mismatch");
+    for i in 0..a.len() {
+        assert_eq!(a[i].to_bits(), b[i].to_bits(), "{what}[{i}]: {} vs {}", a[i], b[i]);
+    }
+}
+
+/// Contract 1 + 4: incremental observe tracks a fresh fit on all points
+/// and does it without a single new full factorization — untouched
+/// stages are shared, and rebuilds stay strictly below the stage count.
+#[test]
+fn incremental_observe_tracks_fresh_fit_without_refactorizing() {
+    let _g = lock();
+    let data = synth("oe-inc", 144, 2, 5);
+    let (older, xb, yb) = split_tail(&data, 16);
+    let c = cfg(1);
+    let base = MkaGp::fit(&older, &RbfKernel::new(0.8), SIGMA2, &c).unwrap();
+    // Force the training factor now so the deltas below isolate the
+    // observe call itself.
+    assert!(base.log_marginal().unwrap().is_finite());
+
+    let fx_before = factorize_count();
+    let rebuilds_before = stage_rebuild_count();
+    let reuses_before = stage_reuse_count();
+    let (obs, report) = base.observed(&xb, &yb, &ObservePolicy::default()).unwrap();
+
+    // Accounting: the incremental path never runs a full factorization…
+    assert_eq!(report.path, ObservePath::Incremental, "drift gate fired on smooth data");
+    assert_eq!(
+        factorize_count(),
+        fx_before,
+        "incremental observe must extend the stored factor, not refactorize"
+    );
+    // …and shares every untouched stage instead of rebuilding it.
+    let stats = report.stats.expect("incremental path reports extend stats");
+    assert_eq!(stats.appended, 16);
+    assert!(
+        stats.stages_rebuilt < stats.stages_total,
+        "every stage rebuilt ({} of {}) — nothing was shared",
+        stats.stages_rebuilt,
+        stats.stages_total
+    );
+    assert!(stats.stages_reused >= 1, "no stage reused");
+    assert!(stats.blocks_reused >= 1, "no block reused at stage 0");
+    // The process-wide counters moved by exactly this call's stats.
+    assert_eq!(stage_rebuild_count() - rebuilds_before, stats.stages_rebuilt as u64);
+    assert_eq!(stage_reuse_count() - reuses_before, stats.stages_reused as u64);
+
+    // Equivalence: predictions track a fresh fit on all points tightly
+    // (the stored training set is identical, so the transductive
+    // predict path sees the same joint gram)…
+    let fresh = MkaGp::fit(&concat(&older, &xb, &yb), &RbfKernel::new(0.8), SIGMA2, &c).unwrap();
+    let xt = test_grid(older.dim());
+    let po = obs.predict(&xt);
+    let pf = fresh.predict(&xt);
+    assert_rel_close(&po.mean, &pf.mean, 1e-9, "mean");
+    assert_rel_close(&po.var, &pf.var, 1e-9, "var");
+    // …and the extended factor's evidence stays within the compression
+    // tolerance of the fresh factor's.
+    let lo = obs.log_marginal().unwrap();
+    let lf = fresh.log_marginal().unwrap();
+    assert!(
+        (lo - lf).abs() <= REL_TOL * lf.abs().max(1.0),
+        "extended-factor evidence {lo} drifted from fresh {lf}"
+    );
+}
+
+/// Contract 2: when the drift gate fires (forced here with a tiny
+/// threshold), the fallback is *exactly* a fresh fit — bit-identical
+/// predictions and bit-identical log-marginal.
+#[test]
+fn gated_refit_is_bitwise_a_fresh_fit() {
+    let _g = lock();
+    let data = synth("oe-refit", 120, 2, 9);
+    let (older, xb, yb) = split_tail(&data, 12);
+    let c = cfg(1);
+    let base = MkaGp::fit(&older, &RbfKernel::new(0.8), SIGMA2, &c).unwrap();
+    let policy = ObservePolicy { drift_threshold: 1e-12, ..ObservePolicy::default() };
+    let (obs, report) = base.observed(&xb, &yb, &policy).unwrap();
+    assert_eq!(report.path, ObservePath::Refit);
+    assert!(report.reason.as_deref().unwrap_or("").contains("drift"), "{:?}", report.reason);
+    assert!(report.stats.is_none(), "refit path must not claim stage reuse");
+
+    let fresh = MkaGp::fit(&concat(&older, &xb, &yb), &RbfKernel::new(0.8), SIGMA2, &c).unwrap();
+    let xt = test_grid(older.dim());
+    let po = obs.predict(&xt);
+    let pf = fresh.predict(&xt);
+    assert_bits_equal(&po.mean, &pf.mean, "mean");
+    assert_bits_equal(&po.var, &pf.var, "var");
+    assert_eq!(
+        obs.log_marginal().unwrap().to_bits(),
+        fresh.log_marginal().unwrap().to_bits(),
+        "gated refit evidence must be bitwise the fresh fit's"
+    );
+}
+
+/// Contract 2, windowed: with a window the gated refit keeps exactly
+/// the most recent points and is bitwise a fresh fit on that window.
+#[test]
+fn windowed_refit_is_bitwise_a_fresh_fit_on_the_window() {
+    let _g = lock();
+    let data = synth("oe-win", 128, 2, 13);
+    let (older, xb, yb) = split_tail(&data, 8);
+    let c = cfg(1);
+    let base = MkaGp::fit(&older, &RbfKernel::new(0.8), SIGMA2, &c).unwrap();
+    let window = 48;
+    let policy = ObservePolicy { drift_threshold: 1e-12, window, ..ObservePolicy::default() };
+    let (obs, report) = base.observed(&xb, &yb, &policy).unwrap();
+    assert_eq!(report.path, ObservePath::Refit);
+    assert_eq!(report.n_total, window, "window not applied");
+
+    // The window is the tail of (older ++ batch).
+    let all = concat(&older, &xb, &yb);
+    let keep: Vec<usize> = (all.n() - window..all.n()).collect();
+    let tail_y = all.y[all.n() - window..].to_vec();
+    let windowed = Dataset::new(all.name.clone(), all.x.gather_rows(&keep), tail_y);
+    let fresh = MkaGp::fit(&windowed, &RbfKernel::new(0.8), SIGMA2, &c).unwrap();
+    let xt = test_grid(older.dim());
+    let po = obs.predict(&xt);
+    let pf = fresh.predict(&xt);
+    assert_bits_equal(&po.mean, &pf.mean, "mean");
+    assert_bits_equal(&po.var, &pf.var, "var");
+}
+
+/// Contract 3: the full streaming pipeline is bit-deterministic across
+/// thread counts — fit, observe (incremental path), predict and the
+/// reported stage accounting all agree at 1, 2 and 4 threads.
+#[test]
+fn observe_pipeline_bit_deterministic_across_threads() {
+    let _g = lock();
+    let data = synth("oe-det", 160, 2, 17);
+    let run = |threads: usize| {
+        mka_gp::par::set_threads(threads);
+        let (older, xb, yb) = split_tail(&data, 12);
+        // Fixed task split (n_threads 2) executed on global pools of
+        // different sizes — the same recipe as the sharded suite.
+        let c = cfg(2);
+        let base = MkaGp::fit(&older, &RbfKernel::new(0.8), SIGMA2, &c).unwrap();
+        let (obs, report) = base.observed(&xb, &yb, &ObservePolicy::default()).unwrap();
+        let p = obs.predict(&test_grid(older.dim()));
+        let bits: Vec<u64> = p.mean.iter().chain(p.var.iter()).map(|v| v.to_bits()).collect();
+        let stats = report.stats.map(|s| (s.stages_rebuilt, s.stages_reused, s.blocks_touched));
+        (report.path, stats, bits, obs.log_marginal().unwrap().to_bits())
+    };
+    let serial = run(1);
+    let two = run(2);
+    let four = run(4);
+    assert_eq!(serial, two, "2-thread observe diverged from serial");
+    assert_eq!(serial, four, "4-thread observe diverged from serial");
+    assert_eq!(serial.0, ObservePath::Incremental);
+    mka_gp::par::set_threads(1);
+}
+
+/// Streaming batches accumulate: repeated observes keep tracking a
+/// fresh fit on everything seen so far, batch after batch.
+#[test]
+fn repeated_observes_accumulate() {
+    let _g = lock();
+    let data = synth("oe-seq", 152, 2, 21);
+    let (older, xb, yb) = split_tail(&data, 24);
+    let c = cfg(1);
+    let mut model = MkaGp::fit(&older, &RbfKernel::new(0.8), SIGMA2, &c).unwrap();
+    let mut seen = older.clone();
+    // three batches of 8, streamed one at a time
+    for chunk in 0..3 {
+        let idx: Vec<usize> = (chunk * 8..(chunk + 1) * 8).collect();
+        let xc = xb.gather_rows(&idx);
+        let yc: Vec<f64> = idx.iter().map(|&i| yb[i]).collect();
+        let (next, report) = model.observed(&xc, &yc, &ObservePolicy::default()).unwrap();
+        assert_eq!(report.appended, 8);
+        seen = concat(&seen, &xc, &yc);
+        assert_eq!(report.n_total, seen.n());
+        model = next;
+    }
+    let fresh = MkaGp::fit(&seen, &RbfKernel::new(0.8), SIGMA2, &c).unwrap();
+    let xt = test_grid(older.dim());
+    let pm = model.predict(&xt);
+    let pf = fresh.predict(&xt);
+    assert_rel_close(&pm.mean, &pf.mean, 1e-9, "mean");
+    assert_rel_close(&pm.var, &pf.var, 1e-9, "var");
+}

@@ -1,0 +1,282 @@
+//! Seeded protocol fuzz over every router op family.
+//!
+//! Each of the router's advertised ops gets 1024 randomized requests
+//! built by mutating a valid skeleton: dropped fields, wrong-typed
+//! values, boundary numbers (±1e308, 5e-324, −0.0, 2⁵³), boundary-size
+//! matrices (0×0 up to 64×3), mangled/truncated op names and junk
+//! fields. The contracts under fuzz:
+//!
+//! - every response carries an `ok` bool — the router never panics;
+//! - every failure is typed (non-empty `error` string);
+//! - the `errors` counter moves by exactly the number of non-`busy`
+//!   failures (`Busy` is shed load, not an error);
+//! - no poisoned state: after the storm, a clean fit → predict round
+//!   trip and the metrics plane still work.
+//!
+//! A second test drives the wire layer: skeleton bodies truncated at
+//! every prefix and randomly byte-spliced must never panic the JSON
+//! parser, and whatever still parses must get a typed answer.
+//!
+//! Generators follow the `properties.rs` idiom: hand-rolled, seeded
+//! per family, with the family and iteration printed on failure so any
+//! counterexample replays deterministically.
+
+use std::panic::{catch_unwind, AssertUnwindSafe};
+
+use mka_gp::coordinator::router::OPS;
+use mka_gp::coordinator::Router;
+use mka_gp::util::{Json, Rng};
+
+mod common;
+use common::{assert_ok, fit_json, observe_json, predict_json, synth, test_config};
+
+const PER_FAMILY: usize = 1024;
+
+/// Boundary numerics: signed zero, subnormal, max finite, 2⁵³.
+const NUMS: &[f64] =
+    &[0.0, -0.0, 1.0, -1.0, 0.5, -7.5, 1e-12, 1e12, 1e308, -1e308, 5e-324, 9007199254740992.0];
+
+fn fuzz_router() -> Router {
+    let mut cfg = test_config();
+    // An accidentally-valid fuzzed `refresh` schedule must never fire
+    // mid-test: push the interval floor out past the test's lifetime.
+    cfg.refresh_min_interval_ms = 3_600_000;
+    Router::new(cfg)
+}
+
+fn word(rng: &mut Rng) -> String {
+    (0..rng.below(9)).map(|_| (b'a' + rng.below(26) as u8) as char).collect()
+}
+
+fn random_json(rng: &mut Rng, depth: usize) -> Json {
+    match if depth == 0 { rng.below(4) } else { rng.below(6) } {
+        0 => Json::Null,
+        1 => Json::Bool(rng.below(2) == 0),
+        2 => Json::Num(NUMS[rng.below(NUMS.len())]),
+        3 => Json::Str(word(rng)),
+        4 => Json::Arr((0..rng.below(5)).map(|_| random_json(rng, depth - 1)).collect()),
+        _ => {
+            let mut o = Json::obj();
+            for _ in 0..rng.below(5) {
+                o.set(&word(rng), random_json(rng, depth - 1));
+            }
+            o
+        }
+    }
+}
+
+/// Protocol fields the mutator targets with wrong-typed values.
+const FIELDS: &[&str] = &[
+    "op",
+    "model",
+    "method",
+    "x",
+    "y",
+    "params",
+    "sigma2",
+    "lengthscale",
+    "k",
+    "shards",
+    "async",
+    "job_id",
+    "selection",
+    "budget",
+    "ard",
+    "every_ms",
+    "window",
+    "drift_threshold",
+    "max_core_growth",
+    "n",
+    "level",
+];
+
+/// One valid request skeleton per advertised op (coverage pinned by
+/// `fuzz_skeletons_cover_every_advertised_op`). Kept tiny so requests
+/// that survive mutation intact stay cheap to actually execute.
+fn skeletons() -> Vec<(&'static str, Json)> {
+    let data = synth("fz", 8, 1, 7);
+    let op = |name: &str| Json::obj().with("op", Json::Str(name.into()));
+    let mut train = fit_json("fz-t", "mka", &data, 2);
+    train.set("op", Json::Str("train".into()));
+    train.set("selection", Json::Str("mll".into()));
+    train.set(
+        "budget",
+        Json::obj().with("max_evals", Json::Num(2.0)).with("n_starts", Json::Num(1.0)),
+    );
+    vec![
+        ("ping", op("ping")),
+        ("fit", fit_json("fz", "mka", &data, 2)),
+        ("train", train),
+        ("job", op("job").with("job_id", Json::Num(1.0))),
+        ("predict", predict_json("fz", &[&[0.25], &[0.75]])),
+        (
+            "retune",
+            op("retune").with("model", Json::Str("fz".into())).with("sigma2", Json::Num(0.2)),
+        ),
+        ("models", op("models")),
+        ("drop_model", op("drop_model").with("model", Json::Str("ghost".into()))),
+        ("metrics", op("metrics")),
+        ("config", op("config")),
+        ("trace", op("trace")),
+        ("logs", op("logs").with("n", Json::Num(4.0))),
+        ("diagnose", op("diagnose").with("model", Json::Str("fz".into()))),
+        ("observe", observe_json("fz", &[&[0.3]], &[0.1])),
+        (
+            "refresh",
+            op("refresh").with("model", Json::Str("fz".into())).with("every_ms", Json::Num(0.0)),
+        ),
+    ]
+}
+
+/// Apply one random corruption to a request object.
+fn mutate(req: &mut Json, rng: &mut Rng) {
+    let Json::Obj(map) = req else { unreachable!("skeletons are objects") };
+    match rng.below(6) {
+        // drop a field — body truncated at the field level
+        0 => {
+            let keys: Vec<String> = map.keys().cloned().collect();
+            if !keys.is_empty() {
+                map.remove(&keys[rng.below(keys.len())]);
+            }
+        }
+        // wrong-typed / garbage value on a known protocol field
+        1 | 2 => {
+            let f = FIELDS[rng.below(FIELDS.len())];
+            map.insert(f.into(), random_json(rng, 2));
+        }
+        // boundary-size matrix / vector payloads (empty, ragged-prone)
+        3 => {
+            let rows = [0usize, 1, 2, 64][rng.below(4)];
+            let cols = [0usize, 1, 3][rng.below(3)];
+            let m = Json::Arr(
+                (0..rows)
+                    .map(|_| Json::Arr((0..cols).map(|_| Json::Num(rng.normal())).collect()))
+                    .collect(),
+            );
+            map.insert(if rng.below(2) == 0 { "x" } else { "y" }.to_string(), m);
+        }
+        // mangle the op itself: random word, number, or truncated name
+        4 => {
+            let cur = match map.get("op") {
+                Some(Json::Str(s)) => s.clone(),
+                _ => String::new(),
+            };
+            let newop = match rng.below(3) {
+                0 => Json::Str(word(rng)),
+                1 => Json::Num(NUMS[rng.below(NUMS.len())]),
+                _ => Json::Str(cur[..rng.below(cur.len() + 1)].to_string()),
+            };
+            map.insert("op".into(), newop);
+        }
+        // pile on junk fields the router must ignore or reject
+        _ => {
+            for _ in 0..1 + rng.below(3) {
+                map.insert(word(rng), random_json(rng, 1));
+            }
+        }
+    }
+}
+
+/// The fuzz families and the router's advertised op list must stay in
+/// lockstep — adding an op without fuzz coverage fails here.
+#[test]
+fn fuzz_skeletons_cover_every_advertised_op() {
+    let families: Vec<&str> = skeletons().iter().map(|(f, _)| *f).collect();
+    assert_eq!(families, OPS.to_vec());
+}
+
+#[test]
+fn fuzz_every_op_family_yields_typed_errors_and_no_poisoned_state() {
+    let router = fuzz_router();
+    // A live model gives the deep paths (predict, observe, retune,
+    // diagnose) something to actually hit when a mutation leaves the
+    // request valid.
+    assert_ok(&router.handle(&fit_json("fz", "mka", &synth("fz", 8, 1, 7), 2)));
+    let errors_before = router.metrics.counter("errors");
+    let mut failures = 0u64;
+    let mut busy = 0u64;
+    for (fi, (family, skel)) in skeletons().into_iter().enumerate() {
+        let mut rng = Rng::new(0xf022 + 7919 * fi as u64);
+        for it in 0..PER_FAMILY {
+            let mut req = skel.clone();
+            for _ in 0..1 + rng.below(3) {
+                mutate(&mut req, &mut rng);
+            }
+            let resp = catch_unwind(AssertUnwindSafe(|| router.handle(&req)))
+                .unwrap_or_else(|_| panic!("{family}[{it}]: router panicked on {req:?}"));
+            match resp.get("ok") {
+                Some(Json::Bool(true)) => {}
+                Some(Json::Bool(false)) => {
+                    let msg = resp.str_field("error").unwrap_or("");
+                    assert!(!msg.is_empty(), "{family}[{it}]: untyped failure for {req:?}");
+                    if resp.get("busy") == Some(&Json::Bool(true)) {
+                        busy += 1;
+                    } else {
+                        failures += 1;
+                    }
+                }
+                other => panic!("{family}[{it}]: no ok field ({other:?}) for {req:?}"),
+            }
+        }
+    }
+    // The errors counter saw exactly the non-busy failures — nothing
+    // double-counted, nothing swallowed, shed load excluded.
+    assert_eq!(
+        router.metrics.counter("errors") - errors_before,
+        failures,
+        "errors counter out of sync (busy responses: {busy})"
+    );
+    assert!(failures > 0, "fuzz produced no failures — the mutator is broken");
+
+    // No poisoned state: a clean fit → predict round trip still works…
+    let data = synth("post-fuzz", 64, 1, 11);
+    assert_ok(&router.handle(&fit_json("pf", "mka", &data, 8)));
+    let resp = router.handle(&predict_json("pf", &[&[0.2], &[0.8]]));
+    assert_ok(&resp);
+    let mean = resp.get("mean").unwrap().f64_array().unwrap();
+    assert_eq!(mean.len(), 2);
+    assert!(mean.iter().all(|m| m.is_finite()), "post-fuzz predict mean {mean:?}");
+    // …and so do the streaming and introspection planes.
+    assert_ok(&router.handle(&observe_json("pf", &[&[0.5]], &[0.0])));
+    assert_ok(&router.handle(&Json::obj().with("op", Json::Str("metrics".into()))));
+}
+
+/// Wire-layer fuzz: truncated and byte-spliced request bodies must
+/// never panic the parser, and any body that still parses must get a
+/// typed response from the router.
+#[test]
+fn truncated_and_spliced_wire_bodies_never_panic() {
+    let router = fuzz_router();
+    let mut rng = Rng::new(0x7c0de);
+    let mut still_parsed = 0usize;
+    for (family, skel) in skeletons() {
+        let dump = skel.dump();
+        // every prefix of the body — the "connection died mid-write" shape
+        for cut in 0..dump.len() {
+            let piece = &dump[..cut];
+            let parsed = catch_unwind(|| Json::parse(piece).ok())
+                .unwrap_or_else(|_| panic!("{family}: parser panicked on prefix {cut}"));
+            if let Some(j) = parsed {
+                let r = router.handle(&j);
+                assert!(r.get("ok").is_some(), "{family}: prefix {cut} got no ok field");
+            }
+        }
+        // random single-byte splices — framing bytes into the middle
+        for it in 0..64 {
+            let mut bytes = dump.clone().into_bytes();
+            let i = rng.below(bytes.len());
+            bytes[i] = b"{}[],:\"0x"[rng.below(9)];
+            let Ok(text) = String::from_utf8(bytes) else { continue };
+            let parsed = catch_unwind(AssertUnwindSafe(|| Json::parse(&text).ok()))
+                .unwrap_or_else(|_| panic!("{family}[{it}]: parser panicked on {text:?}"));
+            if let Some(j) = parsed {
+                still_parsed += 1;
+                let r = router.handle(&j);
+                assert!(r.get("ok").is_some(), "{family}[{it}]: spliced body got no ok field");
+            }
+        }
+    }
+    // Some splices must survive parsing, or the router half of this
+    // test never executed.
+    assert!(still_parsed > 0, "no spliced body parsed — splice generator too destructive");
+}

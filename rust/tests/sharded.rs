@@ -6,8 +6,6 @@
 use std::sync::Arc;
 
 use mka_gp::cluster::ClusterMethod;
-use mka_gp::coordinator::{Router, ServiceConfig};
-use mka_gp::data::synth::{gp_dataset, SynthSpec};
 use mka_gp::experiments::methods::mka_config_for;
 use mka_gp::gp::mka_gp::MkaGp;
 use mka_gp::gp::sharded::ShardedGp;
@@ -15,29 +13,15 @@ use mka_gp::gp::GpModel;
 use mka_gp::kernels::RbfKernel;
 use mka_gp::util::Json;
 
-fn fit_json(model: &str, method: &str, data: &mka_gp::data::Dataset, k: usize) -> Json {
-    let x: Vec<Json> = (0..data.n()).map(|i| Json::from_f64_slice(data.x.row(i))).collect();
-    Json::obj()
-        .with("op", Json::Str("fit".into()))
-        .with("model", Json::Str(model.into()))
-        .with("method", Json::Str(method.into()))
-        .with("x", Json::Arr(x))
-        .with("y", Json::from_f64_slice(&data.y))
-        .with(
-            "params",
-            Json::obj()
-                .with("lengthscale", Json::Num(0.9))
-                .with("sigma2", Json::Num(0.1))
-                .with("k", Json::Num(k as f64)),
-        )
-}
+mod common;
+use common::{assert_ok, fit_json, predict_json, synth, test_router};
 
 /// The single-expert passthrough: a 1-shard fleet built through the
 /// serving-plane entry points is bit-identical to a plain `MkaGp` on the
 /// same config (the acceptance gate for the refactor being a refactor).
 #[test]
 fn one_shard_fleet_is_bit_identical_to_plain_mka() {
-    let data = gp_dataset(&SynthSpec::named("sh-one", 160, 3), 11);
+    let data = synth("sh-one", 160, 3, 11);
     let (tr, te) = data.split(0.9, 2);
     let kern = RbfKernel::new(1.1);
     let cfg = mka_config_for(16, tr.n(), 7);
@@ -56,7 +40,7 @@ fn one_shard_fleet_is_bit_identical_to_plain_mka() {
 /// k shards produces bit-identical posteriors at 1, 2 and 4 threads.
 #[test]
 fn sharded_fit_predict_bit_deterministic_across_threads() {
-    let data = gp_dataset(&SynthSpec::named("sh-det", 200, 2), 13);
+    let data = synth("sh-det", 200, 2, 13);
     let (tr, te) = data.split(0.9, 3);
     let kern = RbfKernel::new(0.9);
     let cfg = mka_config_for(12, tr.n(), 5);
@@ -83,13 +67,12 @@ fn sharded_fit_predict_bit_deterministic_across_threads() {
 /// `models`, routed predict, O(shards) retune, shard metrics.
 #[test]
 fn router_shards_lifecycle() {
-    let cfg = ServiceConfig { port: 0, n_workers: 1, ..Default::default() };
-    let router = Arc::new(Router::new(cfg));
-    let data = gp_dataset(&SynthSpec::named("sh-life", 120, 2), 17);
+    let router = Arc::new(test_router());
+    let data = synth("sh-life", 120, 2, 17);
     let (tr, te) = data.split(0.9, 4);
 
     let resp = router.handle(&fit_json("fleet", "mka", &tr, 12).with("shards", Json::Num(3.0)));
-    assert_eq!(resp.get("ok"), Some(&Json::Bool(true)), "{resp:?}");
+    assert_ok(&resp);
     assert!(resp.usize_field("shards").unwrap_or(0) >= 2, "{resp:?}");
 
     let resp = router.handle(&Json::obj().with("op", Json::Str("models".into())));
@@ -102,14 +85,9 @@ fn router_shards_lifecycle() {
     let sizes = entry.get("shard_sizes").unwrap().f64_array().unwrap();
     assert_eq!(sizes.iter().sum::<f64>() as usize, tr.n());
 
-    let x: Vec<Json> = (0..te.n()).map(|i| Json::from_f64_slice(te.x.row(i))).collect();
-    let resp = router.handle(
-        &Json::obj()
-            .with("op", Json::Str("predict".into()))
-            .with("model", Json::Str("fleet".into()))
-            .with("x", Json::Arr(x)),
-    );
-    assert_eq!(resp.get("ok"), Some(&Json::Bool(true)), "{resp:?}");
+    let rows: Vec<&[f64]> = (0..te.n()).map(|i| te.x.row(i)).collect();
+    let resp = router.handle(&predict_json("fleet", &rows));
+    assert_ok(&resp);
     assert_eq!(resp.get("mean").unwrap().f64_array().unwrap().len(), te.n());
 
     let resp = router.handle(
@@ -130,9 +108,8 @@ fn router_shards_lifecycle() {
 /// points, and shards on a non-MKA method are all refused up front.
 #[test]
 fn shard_errors_are_typed() {
-    let cfg = ServiceConfig { port: 0, n_workers: 1, ..Default::default() };
-    let router = Arc::new(Router::new(cfg));
-    let data = gp_dataset(&SynthSpec::named("sh-err", 60, 2), 19);
+    let router = Arc::new(test_router());
+    let data = synth("sh-err", 60, 2, 19);
 
     let resp = router.handle(&fit_json("z", "mka", &data, 8).with("shards", Json::Num(0.0)));
     assert_eq!(resp.get("ok"), Some(&Json::Bool(false)));
@@ -169,7 +146,7 @@ fn sharded_train_reports_per_shard_factorizations() {
     use mka_gp::experiments::methods::Method;
     use mka_gp::train::{ModelSelection, OptimBudget};
 
-    let data = gp_dataset(&SynthSpec::named("sh-train", 140, 2), 23);
+    let data = synth("sh-train", 140, 2, 23);
     let sel = ModelSelection::Mll {
         budget: OptimBudget { max_evals: 10, n_starts: 1, tol: 1e-4 },
     };

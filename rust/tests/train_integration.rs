@@ -10,7 +10,7 @@
 //!   answers `predict`.
 
 use mka_gp::baselines::nystrom::{select_landmarks, LandmarkMethod, NystromBlocks};
-use mka_gp::coordinator::{JobState, Router, ServiceConfig};
+use mka_gp::coordinator::JobState;
 use mka_gp::data::dataset::Dataset;
 use mka_gp::data::synth::{gp_dataset, gp_prior_draw, latent_features, SynthSpec};
 use mka_gp::experiments::methods::Method;
@@ -26,6 +26,9 @@ use mka_gp::train::{
     SearchBox,
 };
 use mka_gp::util::{Json, Rng};
+
+mod common;
+use common::{assert_ok, matrix_json, poll_job_done, predict_json, synth, test_router};
 
 /// Dense reference evidence: −½yᵀC⁻¹y − ½ log det C − (n/2) log 2π.
 fn dense_mll(c: &Mat, y: &[f64]) -> f64 {
@@ -228,16 +231,13 @@ fn coordinator_ard_train_job_lifecycle() {
     // "selection": "mll-grad", "ard": true learns per-dimension length
     // scales, surfaces them in the job detail, and publishes a serving
     // model fitted with the ARD kernel.
-    let cfg = ServiceConfig { batch_window_ms: 0, n_workers: 2, ..Default::default() };
-    let r = Router::new(cfg);
-    let data = gp_dataset(&SynthSpec::named("coord-ard", 90, 2), 8);
-    let n = data.n();
-    let x: Vec<Json> = (0..n).map(|i| Json::from_f64_slice(data.x.row(i))).collect();
+    let r = test_router();
+    let data = synth("coord-ard", 90, 2, 8);
     let req = Json::obj()
         .with("op", Json::Str("train".into()))
         .with("model", Json::Str("m-ard".into()))
         .with("method", Json::Str("sor".into()))
-        .with("x", Json::Arr(x))
+        .with("x", matrix_json(&data))
         .with("y", Json::from_f64_slice(&data.y))
         .with("selection", Json::Str("mll-grad".into()))
         .with("ard", Json::Bool(true))
@@ -247,26 +247,10 @@ fn coordinator_ard_train_job_lifecycle() {
         )
         .with("params", Json::obj().with("k", Json::Num(10.0)));
     let resp = r.handle(&req);
-    assert_eq!(resp.get("ok"), Some(&Json::Bool(true)), "{resp:?}");
+    assert_ok(&resp);
     let job_id = resp.usize_field("job_id").expect("job_id") as u64;
 
-    let mut done_json = None;
-    for _ in 0..600 {
-        let poll = r.handle(
-            &Json::obj()
-                .with("op", Json::Str("job".into()))
-                .with("job_id", Json::Num(job_id as f64)),
-        );
-        match poll.str_field("state") {
-            Some("done") => {
-                done_json = Some(poll);
-                break;
-            }
-            Some("failed") => panic!("ARD train job failed: {poll:?}"),
-            _ => std::thread::sleep(std::time::Duration::from_millis(25)),
-        }
-    }
-    let done = done_json.expect("ARD train job never finished");
+    let done = poll_job_done(&r, job_id);
     let train = done.get("train").expect("train detail");
     assert_eq!(train.str_field("selection"), Some("mll-grad"));
     let ells = train.get("lengthscales").expect("per-dimension scales").f64_array().unwrap();
@@ -274,28 +258,20 @@ fn coordinator_ard_train_job_lifecycle() {
     assert!(ells.iter().all(|l| l.is_finite() && *l > 0.0));
     assert!(train.num_field("best_mll").unwrap().is_finite());
 
-    let pred = r.handle(
-        &Json::obj()
-            .with("op", Json::Str("predict".into()))
-            .with("model", Json::Str("m-ard".into()))
-            .with("x", Json::Arr(vec![Json::from_f64_slice(&[0.2, -0.1])])),
-    );
-    assert_eq!(pred.get("ok"), Some(&Json::Bool(true)), "{pred:?}");
+    let pred = r.handle(&predict_json("m-ard", &[&[0.2, -0.1]]));
+    assert_ok(&pred);
     assert_eq!(pred.get("mean").unwrap().f64_array().unwrap().len(), 1);
 }
 
 #[test]
 fn coordinator_train_job_lifecycle() {
-    let cfg = ServiceConfig { batch_window_ms: 0, n_workers: 2, ..Default::default() };
-    let r = Router::new(cfg);
-    let data = gp_dataset(&SynthSpec::named("coord", 120, 2), 2);
-    let n = data.n();
-    let x: Vec<Json> = (0..n).map(|i| Json::from_f64_slice(data.x.row(i))).collect();
+    let r = test_router();
+    let data = synth("coord", 120, 2, 2);
     let req = Json::obj()
         .with("op", Json::Str("train".into()))
         .with("model", Json::Str("m-train".into()))
         .with("method", Json::Str("mka".into()))
-        .with("x", Json::Arr(x))
+        .with("x", matrix_json(&data))
         .with("y", Json::from_f64_slice(&data.y))
         .with("selection", Json::Str("mll".into()))
         .with(
@@ -306,7 +282,7 @@ fn coordinator_train_job_lifecycle() {
 
     // Async by default: a job id comes back immediately, before Done.
     let resp = r.handle(&req);
-    assert_eq!(resp.get("ok"), Some(&Json::Bool(true)), "{resp:?}");
+    assert_ok(&resp);
     let job_id = resp.usize_field("job_id").expect("job_id") as u64;
     let first = r.jobs.get(job_id).unwrap().1;
     assert!(
@@ -315,23 +291,7 @@ fn coordinator_train_job_lifecycle() {
     );
 
     // Poll through the job op until done.
-    let mut done_json = None;
-    for _ in 0..600 {
-        let poll = r.handle(
-            &Json::obj()
-                .with("op", Json::Str("job".into()))
-                .with("job_id", Json::Num(job_id as f64)),
-        );
-        match poll.str_field("state") {
-            Some("done") => {
-                done_json = Some(poll);
-                break;
-            }
-            Some("failed") => panic!("train job failed: {poll:?}"),
-            _ => std::thread::sleep(std::time::Duration::from_millis(25)),
-        }
-    }
-    let done = done_json.expect("train job never finished");
+    let done = poll_job_done(&r, job_id);
 
     // The job report carries the optimization result and trace.
     let train = done.get("train").expect("train detail");
@@ -348,18 +308,8 @@ fn coordinator_train_job_lifecycle() {
     }
 
     // The optimized model serves predictions.
-    let pred_req = Json::obj()
-        .with("op", Json::Str("predict".into()))
-        .with("model", Json::Str("m-train".into()))
-        .with(
-            "x",
-            Json::Arr(vec![
-                Json::from_f64_slice(&[0.1, -0.3]),
-                Json::from_f64_slice(&[0.5, 0.2]),
-            ]),
-        );
-    let pred = r.handle(&pred_req);
-    assert_eq!(pred.get("ok"), Some(&Json::Bool(true)), "{pred:?}");
+    let pred = r.handle(&predict_json("m-train", &[&[0.1, -0.3], &[0.5, 0.2]]));
+    assert_ok(&pred);
     assert_eq!(pred.get("mean").unwrap().f64_array().unwrap().len(), 2);
 
     // Metrics surface the training plane.
