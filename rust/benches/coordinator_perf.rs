@@ -7,7 +7,9 @@
 //! `--json` mode benches the sharded serving plane instead: fit, predict
 //! and retune wall time vs shard count, asserting sharded predictions are
 //! bit-identical at every thread count, plus the streaming plane's
-//! observe-vs-refit wall-time gap, written to `BENCH_shard.json`:
+//! observe-vs-refit wall-time gap and the predict-path cache's
+//! repeat-test-set burst (cold vs hot p50/p99, hit rate, factorization
+//! delta, tiled-assembly savings), written to `BENCH_shard.json`:
 //!
 //!     cargo bench --bench coordinator_perf -- --json \
 //!         [--n 960] [--shards 1,2,4] [--threads 1,2,4] [--k 24] \
@@ -304,6 +306,73 @@ fn run_shard_json_bench(args: &Args) {
         .with("stages_total", Json::Num(stats.stages_total as f64))
         .with("blocks_reused", Json::Num(stats.blocks_reused as f64));
 
+    // Predict-path latency plane: a repeat-test-set serving burst.
+    // Request 1 is cold (one joint factorization + full gram assembly);
+    // every later identical request must hit the joint-factor cache —
+    // zero factorizations, bitwise-identical output — and the hot p50
+    // must beat the cold wall strictly.
+    let model = MkaGp::fit(&tr, &kern, 0.1, &cfg).expect("cache bench fit");
+    let rounds = 32usize;
+    let f0 = mka_gp::mka::factorize_count();
+    let t_cold = Timer::start();
+    let cold = model.predict(&te.x);
+    let cold_s = t_cold.elapsed_secs();
+    let cold_factorizes = mka_gp::mka::factorize_count() - f0;
+    let f0 = mka_gp::mka::factorize_count();
+    let mut hot = Vec::with_capacity(rounds);
+    for _ in 0..rounds {
+        let t_hot = Timer::start();
+        let again = model.predict(&te.x);
+        hot.push(t_hot.elapsed_secs());
+        let same = cold.mean.iter().zip(&again.mean).all(|(a, b)| a.to_bits() == b.to_bits())
+            && cold.var.iter().zip(&again.var).all(|(a, b)| a.to_bits() == b.to_bits());
+        assert!(same, "cache hit must be bitwise identical to the cold predict");
+    }
+    let hot_factorizes = mka_gp::mka::factorize_count() - f0;
+    assert_eq!(hot_factorizes, 0, "warm repeat predicts must not factorize");
+    hot.sort_by(|a, b| a.total_cmp(b));
+    let hot_p50 = mka_gp::la::stats::quantile_sorted(&hot, 0.5);
+    let hot_p99 = mka_gp::la::stats::quantile_sorted(&hot, 0.99);
+    assert!(hot_p50 < cold_s, "hot p50 ({hot_p50}s) must beat the cold predict ({cold_s}s)");
+    let cache = model.predict_cache();
+    let hit_rate = cache.hits() as f64 / (cache.hits() + cache.misses()).max(1) as f64;
+    // Assembly savings: a model whose train factor already exists keeps
+    // the memoized train×train gram, so its first (cold) predict only
+    // assembles the cross and test tiles instead of the full (n+p)²
+    // joint gram. Same single factorization either way — the wall-time
+    // delta is the tile reuse.
+    let memo = MkaGp::fit(&tr, &kern, 0.1, &cfg).expect("memo bench fit");
+    memo.log_marginal().expect("train factor"); // memoizes the train gram
+    let t_tiled = Timer::start();
+    let tiled_pred = memo.predict(&te.x);
+    let tiled_s = t_tiled.elapsed_secs();
+    let same_cold = cold.mean.iter().zip(&tiled_pred.mean).all(|(a, b)| a.to_bits() == b.to_bits());
+    assert!(same_cold, "tiled joint assembly must match the full rebuild bitwise");
+    println!(
+        "predict cache burst p={} rounds={rounds}: cold {} ({cold_factorizes} factorize) | hot p50 {} p99 {} (0 factorize, hit rate {:.2}) | speedup {:.1}x | tiled cold assembly {} ({:.2}x vs full)",
+        te.n(),
+        fmt_secs(cold_s),
+        fmt_secs(hot_p50),
+        fmt_secs(hot_p99),
+        hit_rate,
+        cold_s / hot_p50.max(1e-12),
+        fmt_secs(tiled_s),
+        cold_s / tiled_s.max(1e-12)
+    );
+    let predict_cache = Json::obj()
+        .with("p", Json::Num(te.n() as f64))
+        .with("rounds", Json::Num(rounds as f64))
+        .with("cold_s", Json::Num(cold_s))
+        .with("hot_p50_s", Json::Num(hot_p50))
+        .with("hot_p99_s", Json::Num(hot_p99))
+        .with("cold_over_hot_p50", Json::Num(cold_s / hot_p50.max(1e-12)))
+        .with("cold_factorizes", Json::Num(cold_factorizes as f64))
+        .with("hot_factorizes", Json::Num(hot_factorizes as f64))
+        .with("hit_rate", Json::Num(hit_rate))
+        .with("cold_tiled_assembly_s", Json::Num(tiled_s))
+        .with("assembly_saving", Json::Num(cold_s / tiled_s.max(1e-12)))
+        .with("bitwise_identical", Json::Bool(true));
+
     let doc = Json::obj()
         .with("bench", Json::Str("shard_plane".into()))
         .with(
@@ -313,6 +382,7 @@ fn run_shard_json_bench(args: &Args) {
         .with("n", Json::Num(n as f64))
         .with("k", Json::Num(k as f64))
         .with("observe", observe)
+        .with("predict_cache", predict_cache)
         .with("results", Json::Arr(results));
     std::fs::write(&out_path, doc.dump_pretty()).expect("write bench json");
     println!("wrote {out_path}");

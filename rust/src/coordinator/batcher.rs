@@ -5,15 +5,25 @@
 //! factorizes the joint train/test kernel once per *batch*, so b requests
 //! of p points each cost one factorization instead of b.
 //!
+//! Batching windows are **per model**: every submission is stamped with a
+//! deadline (`enqueue time + its model's window`, the service default
+//! unless a `"batch_window_ms"` override was registered at fit time) and
+//! the flusher parks until the earliest deadline, draining exactly the
+//! ripe items. A latency-sensitive model can run a zero window while a
+//! throughput-oriented one on the same service accumulates larger
+//! batches.
+//!
 //! The queue is **bounded** (`ServiceConfig.batch_queue_max`): a
 //! submission that would grow the pending set past the bound is rejected
 //! immediately with [`Error::Busy`] — the router surfaces it as a typed
-//! `"busy": true` response — instead of queueing unbounded work behind a
-//! slow model and amplifying the overload.
+//! `"busy": true` response with the current queue depth and a
+//! depth-scaled `retry_after_ms` — instead of queueing unbounded work
+//! behind a slow model and amplifying the overload.
 
+use std::collections::BTreeMap;
 use std::sync::mpsc;
 use std::sync::{Arc, Condvar, Mutex};
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use super::jobs::ModelRegistry;
 use super::metrics::Metrics;
@@ -30,8 +40,12 @@ struct Pending {
     /// the flusher thread re-enters it so the batched predict's spans
     /// parent back to the request that crossed the batching boundary.
     ctx: obs::SpanCtx,
-    /// When the request entered the queue (set only when traced).
-    enqueued: Option<std::time::Instant>,
+    /// When the request entered the queue. Always recorded — the
+    /// `op.predict_queue_secs` histogram needs it whether or not the
+    /// request is traced.
+    enqueued: Instant,
+    /// When this item must flush: `enqueued + window_for(model)`.
+    deadline: Instant,
 }
 
 #[derive(Default)]
@@ -45,6 +59,12 @@ pub struct PredictBatcher {
     queue: Arc<(Mutex<Queue>, Condvar)>,
     metrics: Arc<Metrics>,
     queue_max: usize,
+    /// Service-wide batching window, used for models without an override.
+    default_window: Duration,
+    /// Per-model window overrides (`"batch_window_ms"` at fit time).
+    /// Consulted once per submission to stamp the item's deadline, so a
+    /// change applies to future submissions, never to parked items.
+    windows: Mutex<BTreeMap<String, Duration>>,
     worker: Option<std::thread::JoinHandle<()>>,
 }
 
@@ -61,9 +81,40 @@ impl PredictBatcher {
         let m2 = Arc::clone(&metrics);
         let worker = std::thread::Builder::new()
             .name("predict-batcher".into())
-            .spawn(move || flusher(q2, registry, m2, window, max_batch))
+            .spawn(move || flusher(q2, registry, m2, max_batch))
             .expect("spawn batcher");
-        PredictBatcher { queue, metrics, queue_max: queue_max.max(1), worker: Some(worker) }
+        PredictBatcher {
+            queue,
+            metrics,
+            queue_max: queue_max.max(1),
+            default_window: window,
+            windows: Mutex::new(BTreeMap::new()),
+            worker: Some(worker),
+        }
+    }
+
+    /// Install a per-model batching window, overriding the service
+    /// default for that model's future submissions.
+    pub fn set_model_window(&self, model: &str, window: Duration) {
+        self.windows.lock().unwrap().insert(model.to_string(), window);
+    }
+
+    /// Drop a model's window override (back to the service default).
+    /// Idempotent; called when the model is dropped or re-fit without one.
+    pub fn clear_model_window(&self, model: &str) {
+        self.windows.lock().unwrap().remove(model);
+    }
+
+    /// The batching window in effect for `model`.
+    pub fn window_for(&self, model: &str) -> Duration {
+        self.windows.lock().unwrap().get(model).copied().unwrap_or(self.default_window)
+    }
+
+    /// Requests currently parked in the queue. Admission control reads
+    /// this to scale `retry_after_ms` on busy responses.
+    pub fn queue_depth(&self) -> usize {
+        let (lock, _) = &*self.queue;
+        lock.lock().unwrap().items.len()
     }
 
     /// Enqueue a prediction; the result arrives on the returned receiver.
@@ -71,6 +122,7 @@ impl PredictBatcher {
     /// immediately with [`Error::Busy`] (backpressure) rather than queued.
     pub fn submit(&self, model: &str, x: Mat) -> mpsc::Receiver<Result<Prediction>> {
         let (tx, rx) = mpsc::channel();
+        let window = self.window_for(model);
         let (lock, cv) = &*self.queue;
         let mut q = lock.lock().unwrap();
         if q.shutdown {
@@ -90,8 +142,15 @@ impl PredictBatcher {
             ))));
         } else {
             let ctx = obs::current_ctx();
-            let enqueued = ctx.is_active().then(std::time::Instant::now);
-            q.items.push(Pending { model: model.to_string(), x, resp: tx, ctx, enqueued });
+            let enqueued = Instant::now();
+            q.items.push(Pending {
+                model: model.to_string(),
+                x,
+                resp: tx,
+                ctx,
+                enqueued,
+                deadline: enqueued + window,
+            });
             cv.notify_one();
         }
         rx
@@ -122,45 +181,57 @@ fn flusher(
     queue: Arc<(Mutex<Queue>, Condvar)>,
     registry: ModelRegistry,
     metrics: Arc<Metrics>,
-    window: Duration,
     max_batch: usize,
 ) {
     let (lock, cv) = &*queue;
     loop {
-        // Wait for work.
-        let mut q = lock.lock().unwrap();
-        while q.items.is_empty() && !q.shutdown {
-            q = cv.wait(q).unwrap();
-        }
-        if q.shutdown && q.items.is_empty() {
-            return;
-        }
-        drop(q);
-        // Batching window: let more requests accumulate. Waiting on the
-        // condvar (not a plain sleep) lets Drop cut the window short —
-        // shutdown used to stall a full `window` before the flusher
-        // noticed the flag.
-        if !window.is_zero() {
-            let deadline = std::time::Instant::now() + window;
-            let mut q = lock.lock().unwrap();
-            while !q.shutdown {
-                let now = std::time::Instant::now();
-                if now >= deadline {
-                    break;
-                }
-                q = cv.wait_timeout(q, deadline - now).unwrap().0;
-            }
-        }
+        // Park until something is ripe: the earliest deadline among the
+        // queued items governs the wait, and a new submission (whose
+        // window may be shorter) re-notifies so the wait is recomputed.
         let drained: Vec<Pending> = {
             let mut q = lock.lock().unwrap();
-            let take = q.items.len().min(max_batch);
-            q.items.drain(..take).collect()
+            loop {
+                if q.shutdown {
+                    if q.items.is_empty() {
+                        return;
+                    }
+                    // Shutdown flushes everything still parked, windows
+                    // ignored — Drop must not stall out a batching window.
+                    let take = q.items.len().min(max_batch);
+                    break q.items.drain(..take).collect();
+                }
+                if q.items.is_empty() {
+                    q = cv.wait(q).unwrap();
+                    continue;
+                }
+                let now = Instant::now();
+                let next = q.items.iter().map(|p| p.deadline).min().unwrap();
+                if next > now {
+                    q = cv.wait_timeout(q, next - now).unwrap().0;
+                    continue;
+                }
+                // Drain the ripe items in arrival order, up to max_batch;
+                // items still inside their window stay parked. Leftover
+                // ripe items (a burst past max_batch) flush on the next
+                // iteration without waiting a new window.
+                let mut ripe = Vec::new();
+                let mut i = 0;
+                while i < q.items.len() && ripe.len() < max_batch {
+                    if q.items[i].deadline <= now {
+                        ripe.push(q.items.remove(i));
+                    } else {
+                        i += 1;
+                    }
+                }
+                break ripe;
+            }
         };
-        if drained.is_empty() {
-            continue;
-        }
+        // Non-empty by construction (both break arms drain >= 1 item).
         metrics.incr("batches", 1);
         metrics.observe("batch_size", drained.len() as f64);
+        for p in &drained {
+            metrics.observe("op.predict_queue_secs", p.enqueued.elapsed().as_secs_f64());
+        }
 
         // Group by model.
         let mut groups: std::collections::BTreeMap<String, Vec<Pending>> = Default::default();
@@ -202,13 +273,30 @@ fn flusher(
             // the earliest wins). The guard must drop before the
             // responses go out: a reply releases the submitter, which
             // may finish its trace while a late span push would be lost.
+            let hits0 = crate::gp::predict_cache::predict_cache_hits();
+            let misses0 = crate::gp::predict_cache::predict_cache_misses();
+            let t = crate::util::timer::Timer::start();
             let pred = {
                 let _obs = ok
                     .iter()
                     .find(|p| p.ctx.is_active())
-                    .map(|p| obs::enter_job(&p.ctx, "batch.predict", p.enqueued));
-                metrics.time("predict_secs", || model.predict(&xall))
+                    .map(|p| obs::enter_job(&p.ctx, "batch.predict", Some(p.enqueued)));
+                model.predict(&xall)
             };
+            let secs = t.elapsed_secs();
+            metrics.observe("predict_secs", secs);
+            // Split served latency by joint-factor cache outcome so the
+            // hot path is visible as its own histogram. The counters are
+            // process-global (concurrent fits elsewhere can blur a
+            // delta), so a batch that looks neither purely cached nor
+            // cold lands only in the combined histogram.
+            let dh = crate::gp::predict_cache::predict_cache_hits().wrapping_sub(hits0);
+            let dm = crate::gp::predict_cache::predict_cache_misses().wrapping_sub(misses0);
+            if dm == 0 && dh > 0 {
+                metrics.observe("op.predict_cached_secs", secs);
+            } else if dm > 0 {
+                metrics.observe("op.predict_cold_secs", secs);
+            }
             metrics.incr("predictions", total as u64);
             let mut off = 0;
             for p in ok {
@@ -247,24 +335,34 @@ mod tests {
     }
 
     fn setup(window_ms: u64) -> (PredictBatcher, Arc<Mutex<Vec<usize>>>) {
-        setup_bounded(window_ms, 1024)
+        let (b, calls, _) = setup_metrics(window_ms, 1024);
+        (b, calls)
     }
 
     fn setup_bounded(
         window_ms: u64,
         queue_max: usize,
     ) -> (PredictBatcher, Arc<Mutex<Vec<usize>>>) {
+        let (b, calls, _) = setup_metrics(window_ms, queue_max);
+        (b, calls)
+    }
+
+    fn setup_metrics(
+        window_ms: u64,
+        queue_max: usize,
+    ) -> (PredictBatcher, Arc<Mutex<Vec<usize>>>, Arc<Metrics>) {
         let reg = ModelRegistry::new();
         let calls = Arc::new(Mutex::new(Vec::new()));
         reg.publish("m", Arc::new(RecordingModel { calls: Arc::clone(&calls) }));
+        let metrics = Arc::new(Metrics::new());
         let b = PredictBatcher::start(
             reg,
-            Arc::new(Metrics::new()),
+            Arc::clone(&metrics),
             Duration::from_millis(window_ms),
             64,
             queue_max,
         );
-        (b, calls)
+        (b, calls, metrics)
     }
 
     #[test]
@@ -322,6 +420,7 @@ mod tests {
         let (b, calls) = setup_bounded(10_000, 2);
         let rx1 = b.submit("m", Mat::from_rows(&[&[1.0, 1.0]]));
         let rx2 = b.submit("m", Mat::from_rows(&[&[2.0, 2.0]]));
+        assert_eq!(b.queue_depth(), 2);
         // Third submission exceeds the bound: rejected without waiting.
         let rx3 = b.submit("m", Mat::from_rows(&[&[3.0, 3.0]]));
         match rx3.recv().expect("rejection must be delivered") {
@@ -351,9 +450,9 @@ mod tests {
         let window_ms = 5_000;
         let (b, calls) = setup(window_ms);
         let rx = b.submit("m", Mat::from_rows(&[&[2.0, 3.0]]));
-        // Give the flusher a moment to enter the batching window.
+        // Give the flusher a moment to park on the item's deadline.
         std::thread::sleep(Duration::from_millis(50));
-        let t0 = std::time::Instant::now();
+        let t0 = Instant::now();
         drop(b); // join()s the flusher
         let waited = t0.elapsed();
         assert!(
@@ -363,5 +462,65 @@ mod tests {
         let pred = rx.recv().expect("response channel closed").expect("predict failed");
         assert_eq!(pred.mean, vec![5.0]);
         assert_eq!(calls.lock().unwrap().len(), 1);
+    }
+
+    /// Regression: queue wait used to be recorded only for traced
+    /// requests. A plain untraced predict must land in the
+    /// `op.predict_queue_secs` histogram.
+    #[test]
+    fn queue_wait_recorded_without_tracing() {
+        let (b, _, m) = setup_metrics(5, 1024);
+        b.predict("m", Mat::from_rows(&[&[1.0, 1.0]])).unwrap();
+        b.predict("m", Mat::from_rows(&[&[2.0, 2.0]])).unwrap();
+        let p50 = m.quantile("op.predict_queue_secs", 0.5).expect("queue-wait histogram");
+        // The 5ms batching window bounds the wait from below (modulo
+        // scheduler slop it cannot be hugely above it either, but only
+        // the lower bound is deterministic enough to assert).
+        assert!(p50 >= 0.0);
+        assert!(m.quantile("op.predict_queue_secs", 0.99).is_some());
+    }
+
+    /// A per-model window override beats the service default for that
+    /// model's future submissions, and clearing it restores the default.
+    #[test]
+    fn per_model_window_overrides_default() {
+        // Service default parks items effectively forever; the override
+        // drops this model to an immediate flush.
+        let (b, calls, _) = setup_metrics(60_000, 1024);
+        b.set_model_window("m", Duration::ZERO);
+        let pred = b.predict("m", Mat::from_rows(&[&[1.0, 2.0]])).unwrap();
+        assert_eq!(pred.mean, vec![3.0]);
+        assert_eq!(calls.lock().unwrap().len(), 1);
+        // Clearing restores the default: the item stays parked.
+        b.clear_model_window("m");
+        let rx = b.submit("m", Mat::from_rows(&[&[1.0, 1.0]]));
+        std::thread::sleep(Duration::from_millis(80));
+        assert_eq!(b.queue_depth(), 1, "default window must hold the item");
+        drop(b); // shutdown flushes it
+        assert_eq!(rx.recv().unwrap().unwrap().mean, vec![2.0]);
+    }
+
+    /// Deadlines are per item: a ripe short-window item flushes past an
+    /// unripe long-window one queued ahead of it, which stays parked.
+    #[test]
+    fn ripe_items_flush_past_unripe_ones() {
+        let reg = ModelRegistry::new();
+        let calls = Arc::new(Mutex::new(Vec::new()));
+        reg.publish("fast", Arc::new(RecordingModel { calls: Arc::clone(&calls) }));
+        reg.publish("slow", Arc::new(RecordingModel { calls: Arc::clone(&calls) }));
+        let b = PredictBatcher::start(
+            reg,
+            Arc::new(Metrics::new()),
+            Duration::from_millis(60_000),
+            64,
+            1024,
+        );
+        b.set_model_window("fast", Duration::ZERO);
+        let rx_slow = b.submit("slow", Mat::from_rows(&[&[5.0, 5.0]]));
+        let pred = b.predict("fast", Mat::from_rows(&[&[1.0, 2.0]])).unwrap();
+        assert_eq!(pred.mean, vec![3.0]);
+        assert_eq!(b.queue_depth(), 1, "slow item must still be parked in its window");
+        drop(b); // shutdown flushes the parked item
+        assert_eq!(rx_slow.recv().unwrap().unwrap().mean, vec![10.0]);
     }
 }

@@ -46,6 +46,11 @@ pub struct ServiceConfig {
     /// MKA factorizations, Nyström blocks — kept per length scale so
     /// σ²-only optimizer moves cost zero factorizations. 0 disables.
     pub train_cache_factors: usize,
+    /// Per-model predict-cache capacity: how many (test set → noise-free
+    /// joint factor) entries each served MKA model keeps, so repeat
+    /// test sets cost zero factorizations and σ²-only retunes stay hot.
+    /// 0 disables caching.
+    pub predict_cache_entries: usize,
     /// Default shard count for `fit`/`train` requests that don't carry a
     /// top-level `"shards"` field. 1 = unsharded serving (the default).
     pub default_shards: usize,
@@ -98,6 +103,7 @@ impl Default for ServiceConfig {
             train_max_evals: 60,
             train_starts: 3,
             train_cache_factors: 4,
+            predict_cache_entries: 8,
             default_shards: 1,
             shard_assign: "kmeans".into(),
             trace_out: None,
@@ -136,6 +142,7 @@ impl ServiceConfig {
                 "train_max_evals" => self.train_max_evals = parse(k, v)?,
                 "train_starts" => self.train_starts = parse(k, v)?,
                 "train_cache_factors" => self.train_cache_factors = parse(k, v)?,
+                "predict_cache_entries" => self.predict_cache_entries = parse(k, v)?,
                 "default_shards" | "shards" => self.default_shards = parse(k, v)?,
                 "shard_assign" => self.shard_assign = v.clone(),
                 "trace_out" | "trace-out" => {
@@ -266,6 +273,7 @@ impl ServiceConfig {
             .with("train_max_evals", Json::Num(self.train_max_evals as f64))
             .with("train_starts", Json::Num(self.train_starts as f64))
             .with("train_cache_factors", Json::Num(self.train_cache_factors as f64))
+            .with("predict_cache_entries", Json::Num(self.predict_cache_entries as f64))
             .with("batch_queue_max", Json::Num(self.batch_queue_max as f64))
             .with("default_shards", Json::Num(self.default_shards as f64))
             .with("shard_assign", Json::Str(self.shard_assign.clone()))
@@ -308,6 +316,7 @@ mod tests {
         kv.insert("train_max_evals".to_string(), "25".to_string());
         kv.insert("train_starts".to_string(), "2".to_string());
         kv.insert("train_cache_factors".to_string(), "8".to_string());
+        kv.insert("predict_cache_entries".to_string(), "12".to_string());
         kv.insert("batch_queue_max".to_string(), "16".to_string());
         kv.insert("trace-out".to_string(), "/tmp/trace.json".to_string());
         kv.insert("trace_ring".to_string(), "8".to_string());
@@ -324,6 +333,7 @@ mod tests {
         assert_eq!(c.train_max_evals, 25);
         assert_eq!(c.train_starts, 2);
         assert_eq!(c.train_cache_factors, 8);
+        assert_eq!(c.predict_cache_entries, 12);
         assert_eq!(c.batch_queue_max, 16);
         assert_eq!(c.mka_config().compressor, CompressorKind::Spca);
         // a queue bound of zero would deadlock every predict — rejected

@@ -57,6 +57,20 @@ impl Metrics {
         self.counters.lock().unwrap().get(name).copied().unwrap_or(0)
     }
 
+    /// The `q`-quantile of a histogram's current window, or None when
+    /// nothing has been observed — what depth-aware admission control
+    /// reads (`predict_secs` p50) to scale `retry_after_ms`.
+    pub fn quantile(&self, name: &str, q: f64) -> Option<f64> {
+        let h = self.histograms.lock().unwrap();
+        let v = h.get(name)?;
+        if v.is_empty() {
+            return None;
+        }
+        let mut sorted = v.clone();
+        sorted.sort_by(f64::total_cmp);
+        Some(quantile_sorted(&sorted, q))
+    }
+
     /// Snapshot everything as JSON: counters verbatim, histograms as
     /// {count, mean, p50, p95, p99, max}.
     pub fn snapshot(&self) -> Json {
@@ -114,6 +128,17 @@ mod tests {
         assert!((lat.num_field("p50").unwrap() - 50.5).abs() < 1.0);
         assert!((lat.num_field("p99").unwrap() - 99.0).abs() < 1.5);
         assert_eq!(lat.num_field("max"), Some(100.0));
+    }
+
+    #[test]
+    fn quantile_reads_the_window() {
+        let m = Metrics::new();
+        assert_eq!(m.quantile("lat", 0.5), None);
+        for i in 1..=100 {
+            m.observe("lat", i as f64);
+        }
+        assert!((m.quantile("lat", 0.5).unwrap() - 50.5).abs() < 1.0);
+        assert!(m.quantile("lat", 0.99).unwrap() > 95.0);
     }
 
     #[test]

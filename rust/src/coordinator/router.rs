@@ -5,11 +5,15 @@
 //!   {"op": "ping"}
 //!   {"op": "fit", "model": "m1", "method": "mka", "x": [[...]...],
 //!    "y": [...], "params": {"lengthscale": 1.0, "sigma2": 0.1, "k": 32},
-//!    "shards": 4, "async": true}
+//!    "shards": 4, "batch_window_ms": 0, "async": true}
 //!                                    — "shards" > 1 (MKA only; default
 //!                                      from `ServiceConfig.default_shards`)
 //!                                      partitions the training rows and
-//!                                      serves a routed ShardedGp fleet
+//!                                      serves a routed ShardedGp fleet;
+//!                                      "batch_window_ms" installs a
+//!                                      per-model batching window
+//!                                      (omitting it reverts to the
+//!                                      service default)
 //!   {"op": "train", "model": "m1", "method": "mka", "x": [[...]...],
 //!    "y": [...], "selection": "mll"|"mll-grad"|"cv", "ard": false,
 //!    "budget": {"max_evals": 60, "n_starts": 3, "tol": 1e-5, "folds": 5},
@@ -120,6 +124,9 @@ impl Router {
         // Size the per-training-run factor cache (σ²-independent factor
         // builds memoized per length scale).
         crate::train::cache::set_default_capacity(config.train_cache_factors);
+        // Size the per-model joint-factor cache on the predict path
+        // (noise-free joint factors keyed by model + test-set identity).
+        crate::gp::predict_cache::set_default_capacity(config.predict_cache_entries);
         // Observability plane: ring capacities, and the Chrome trace-event
         // sink (which implies trace-all — a sink with nothing flowing into
         // it would be a confusing no-op).
@@ -219,6 +226,9 @@ impl Router {
             }
             "drop_model" => {
                 let name = req.str_field("model").unwrap_or("");
+                // A dropped model's batching-window override must not
+                // leak onto a future model fit under the same name.
+                self.batcher.clear_model_window(name);
                 Ok(Json::obj().with("dropped", Json::Bool(self.registry.remove(name))))
             }
             "metrics" => {
@@ -238,6 +248,18 @@ impl Router {
                         .with(
                             "factor_cache_misses",
                             Json::Num(crate::train::cache::factor_cache_misses() as f64),
+                        )
+                        .with(
+                            "predict_cache_hits",
+                            Json::Num(crate::gp::predict_cache::predict_cache_hits() as f64),
+                        )
+                        .with(
+                            "predict_cache_misses",
+                            Json::Num(crate::gp::predict_cache::predict_cache_misses() as f64),
+                        )
+                        .with(
+                            "predict_cache_evictions",
+                            Json::Num(crate::gp::predict_cache::predict_cache_evictions() as f64),
                         )
                         .with("pool_threads", Json::Num(crate::par::threads() as f64))
                         .with("pool_workers", Json::Num(crate::par::pool_workers() as f64))
@@ -329,13 +351,21 @@ impl Router {
                     .with("error", Json::Str(format!("{e}")));
                 if busy {
                     j.set("busy", Json::Bool(true));
-                    // Backoff hint derived from the batching window: one
-                    // window from now the batcher has drained at least one
-                    // full batch from the bounded queue.
-                    j.set(
-                        "retry_after_ms",
-                        Json::Num(self.config.batch_window_ms.max(1) as f64),
-                    );
+                    // Depth-aware backoff hint: clearing the backlog takes
+                    // ceil(depth / max_batch) flush rounds of roughly the
+                    // observed batch-predict p50 each, floored by one
+                    // batching window. Before any predict has completed
+                    // (no p50 yet) the window alone is the hint.
+                    let depth = self.batcher.queue_depth();
+                    let max_batch = self.config.max_batch.max(1);
+                    let rounds = ((depth + max_batch - 1) / max_batch) as f64;
+                    let p50 = self.metrics.quantile("predict_secs", 0.5).unwrap_or(0.0);
+                    let retry = (rounds * p50 * 1000.0)
+                        .ceil()
+                        .max(self.config.batch_window_ms as f64)
+                        .max(1.0);
+                    j.set("retry_after_ms", Json::Num(retry));
+                    j.set("depth", Json::Num(depth as f64));
                 }
                 j
             }
@@ -389,6 +419,20 @@ impl Router {
         let shards = self.parse_shards(req, "fit", method)?;
         let assign = self.config.shard_assign_method();
         let is_async = req.get("async").and_then(|v| v.as_bool()).unwrap_or(false);
+
+        // Per-model batching window: registered against the name as soon
+        // as the fit is accepted (an async fit's predicts queue behind
+        // the publish anyway), omitted field reverts a re-fit to the
+        // service default.
+        match req.get("batch_window_ms") {
+            Some(v) => {
+                let ms = v.as_usize().ok_or_else(|| {
+                    Error::Protocol("fit: batch_window_ms must be a non-negative integer".into())
+                })? as u64;
+                self.batcher.set_model_window(&name, Duration::from_millis(ms));
+            }
+            None => self.batcher.clear_model_window(&name),
+        }
 
         if is_async {
             let job_id = self.jobs.create(&name);
@@ -1410,6 +1454,62 @@ mod tests {
         }
     }
 
+    /// A fit-time `"batch_window_ms"` override governs that model's
+    /// predicts (here: an immediate flush despite a minute-long service
+    /// default), malformed values are typed errors, and dropping the
+    /// model clears the override.
+    #[test]
+    fn fit_time_batch_window_overrides_service_default() {
+        let cfg = ServiceConfig { batch_window_ms: 60_000, n_workers: 2, ..Default::default() };
+        let r = Router::new(cfg);
+        let mut req = fit_req("mw", "sor", 60, false);
+        req.set("batch_window_ms", Json::Num(0.0));
+        assert_eq!(r.handle(&req).get("ok"), Some(&Json::Bool(true)));
+        assert_eq!(r.batcher.window_for("mw"), Duration::ZERO);
+        let pred = Json::obj()
+            .with("op", Json::Str("predict".into()))
+            .with("model", Json::Str("mw".into()))
+            .with("x", Json::Arr(vec![Json::from_f64_slice(&[0.1, 0.2])]));
+        let out = r.handle(&pred);
+        assert_eq!(out.get("ok"), Some(&Json::Bool(true)), "{out:?}");
+        let mut bad = fit_req("mw2", "sor", 60, false);
+        bad.set("batch_window_ms", Json::Str("fast".into()));
+        assert_eq!(r.handle(&bad).get("ok"), Some(&Json::Bool(false)));
+        let drop_req = Json::parse(r#"{"op":"drop_model","model":"mw"}"#).unwrap();
+        assert_eq!(r.handle(&drop_req).get("ok"), Some(&Json::Bool(true)));
+        assert_eq!(r.batcher.window_for("mw"), Duration::from_millis(60_000));
+    }
+
+    /// A busy rejection reports the queue depth it was rejected at and a
+    /// depth-aware `retry_after_ms` floored by the batching window; shed
+    /// load stays out of the `errors` counter.
+    #[test]
+    fn busy_response_carries_depth_and_scaled_retry() {
+        let cfg = ServiceConfig {
+            batch_window_ms: 60_000,
+            batch_queue_max: 1,
+            n_workers: 2,
+            ..Default::default()
+        };
+        let r = Router::new(cfg);
+        assert_eq!(r.handle(&fit_req("mb", "sor", 60, false)).get("ok"), Some(&Json::Bool(true)));
+        // Park one request inside its (long) batching window via the raw
+        // batcher handle so the queue sits exactly at the bound.
+        let rx = r.batcher.submit("mb", Mat::from_rows(&[&[0.1, 0.2]]));
+        let pred = Json::obj()
+            .with("op", Json::Str("predict".into()))
+            .with("model", Json::Str("mb".into()))
+            .with("x", Json::Arr(vec![Json::from_f64_slice(&[0.3, 0.4])]));
+        let out = r.handle(&pred);
+        assert_eq!(out.get("ok"), Some(&Json::Bool(false)));
+        assert_eq!(out.get("busy"), Some(&Json::Bool(true)));
+        assert_eq!(out.num_field("depth"), Some(1.0));
+        assert!(out.num_field("retry_after_ms").unwrap() >= 60_000.0, "{out:?}");
+        assert_eq!(r.metrics.counter("errors"), 0, "busy is shed load, not an error");
+        drop(r); // shutdown flushes the parked request
+        assert!(rx.recv().unwrap().is_ok());
+    }
+
     #[test]
     fn metrics_surface_compute_plane() {
         let r = router();
@@ -1427,6 +1527,12 @@ mod tests {
         assert!(compute.num_field("factorizes").unwrap_or(0.0) >= 1.0);
         assert!(compute.num_field("factor_cache_hits").is_some());
         assert!(compute.num_field("factor_cache_misses").is_some());
+        // The predict above went through the joint-factor cache: at
+        // least one (process-global) miss, and all three counters are
+        // surfaced for hit-rate dashboards.
+        assert!(compute.num_field("predict_cache_hits").is_some());
+        assert!(compute.num_field("predict_cache_misses").unwrap_or(0.0) >= 1.0);
+        assert!(compute.num_field("predict_cache_evictions").is_some());
         assert!(compute.num_field("pool_threads").unwrap_or(0.0) >= 1.0);
         assert!(compute.num_field("pool_jobs").is_some());
         assert!(compute.num_field("pool_workers").is_some());

@@ -30,6 +30,7 @@
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, OnceLock};
 
+use super::predict_cache::{data_fingerprint, JointEntry, PredictCache};
 use super::{
     GpModel, ModelInfo, ObservePath, ObservePolicy, ObserveReport, ObserveUpdate, Prediction,
 };
@@ -64,6 +65,22 @@ pub struct MkaGp {
     /// `diagnose` op sees one counter per logical model). Observational
     /// only — never read on the value path.
     floor_hits: Arc<AtomicU64>,
+    /// Bounded LRU over noise-free joint factorizations, keyed on the
+    /// model fingerprint + exact test-set bits. Shared across
+    /// [`MkaGp::retuned`] copies (σ² is a shift view, so a retune keeps
+    /// every entry hot); `observed`/refit/refresh build a fresh cache —
+    /// the training set changed, so every held entry is stale.
+    predict_cache: Arc<PredictCache>,
+    /// The n×n noise-free train gram, memoized off the first assembly
+    /// that builds it so later joint assemblies only compute the
+    /// train×test and test×test tiles. Pure kernel evaluations — the
+    /// memoized block is bit-identical to what a full joint assembly
+    /// would recompute. Shared across `retuned` copies.
+    train_gram: OnceLock<Arc<Mat>>,
+    /// Lazily computed model fingerprint (training-set identity, kernel
+    /// hyperparameter bits, MKA config scope) — the cache scope. σ² is
+    /// deliberately absent.
+    cache_scope: OnceLock<Vec<u64>>,
 }
 
 impl MkaGp {
@@ -87,6 +104,9 @@ impl MkaGp {
             gram: None,
             train_factor: OnceLock::new(),
             floor_hits: Arc::new(AtomicU64::new(0)),
+            predict_cache: Arc::new(PredictCache::with_default_capacity()),
+            train_gram: OnceLock::new(),
+            cache_scope: OnceLock::new(),
         })
     }
 
@@ -108,7 +128,11 @@ impl MkaGp {
                 Some(g) => g.build_sym(&self.train.x),
                 None => self.kernel.gram_sym(&self.train.x),
             };
-            factorize(&k, Some(&self.train.x), &self.config).map_err(|e| e.to_string())
+            let f = factorize(&k, Some(&self.train.x), &self.config).map_err(|e| e.to_string());
+            // The n×n block was just evaluated — memoize it so joint
+            // assemblies skip the train×train tile entirely.
+            let _ = self.train_gram.set(Arc::new(k));
+            f
         });
         slot.as_ref().map_err(|m| Error::Linalg(m.clone()))
     }
@@ -146,9 +170,18 @@ impl MkaGp {
             gram: self.gram.clone(),
             train_factor: OnceLock::new(),
             floor_hits: Arc::clone(&self.floor_hits),
+            // σ² is a shift view over cached (noise-free) joint factors,
+            // so the retuned copy serves the SAME cache: a retune
+            // republish never invalidates a hot entry.
+            predict_cache: Arc::clone(&self.predict_cache),
+            train_gram: OnceLock::new(),
+            cache_scope: OnceLock::new(),
         };
         if let Some(slot) = self.train_factor.get() {
             let _ = m.train_factor.set(slot.clone());
+        }
+        if let Some(g) = self.train_gram.get() {
+            let _ = m.train_gram.set(Arc::clone(g));
         }
         m.set_noise(sigma2)?;
         Ok(m)
@@ -156,20 +189,9 @@ impl MkaGp {
 
     /// Factorize the joint train/test kernel (exposed for diagnostics).
     /// The factorization itself is noise-free; the returned factor is the
-    /// σ²-shifted view.
+    /// σ²-shifted view. This always builds — [`MkaGp::predict`] goes
+    /// through the cached [`MkaGp::joint_entry`] path instead.
     pub fn factorize_joint(&self, x_test: &Mat) -> Result<(MkaFactor, Mat)> {
-        let n = self.train.n();
-        let p = x_test.rows;
-        let _sp = obs::span!("gp.factorize_joint n={n} p={p}");
-        // Assemble the joint point set and kernel. The joint coordinates
-        // come from the worker arena: the two set_blocks cover every row.
-        let mut xj = arena::take_mat(n + p, self.train.x.cols);
-        xj.set_block(0, 0, &self.train.x);
-        xj.set_block(n, 0, x_test);
-        let kj = match &self.gram {
-            Some(g) => g.build_sym(&xj),
-            None => self.kernel.gram_sym(&xj),
-        };
         // σ² on the whole joint diagonal, as a shift view. The paper's 𝒦
         // puts σ² on the train block only; by the block-inverse identity
         // A − B D⁻¹ C = (K + σ²I)⁻¹ *independently of the test block*, so
@@ -179,17 +201,122 @@ impl MkaGp {
         // default (shift-invariant) pivot rules this is exactly
         // `factorize(𝒦_noise-free + σ²I)` at the cost of factorizing the
         // noise-free matrix once; see `mka::factor` for the SPCA caveat.
-        let f = factorize(&kj, Some(&xj), &self.config)?.shifted(self.sigma2);
+        let (f, kstar) = self.joint_noise_free(x_test)?;
+        Ok((f.shifted(self.sigma2), kstar))
+    }
+
+    /// Assemble and factorize the **noise-free** joint train/test kernel
+    /// — the quantity the predict cache stores. When the n×n train gram
+    /// is already memoized, only the train×test and test×test tiles are
+    /// freshly evaluated; each gram entry is an independent function of
+    /// its point pair, so tiled assembly is bit-identical to a full
+    /// joint rebuild.
+    fn joint_noise_free(&self, x_test: &Mat) -> Result<(MkaFactor, Mat)> {
+        let n = self.train.n();
+        let p = x_test.rows;
+        let _sp = obs::span!("gp.factorize_joint n={n} p={p}");
+        // Joint coordinates from the worker arena: the two set_blocks
+        // cover every row.
+        let mut xj = arena::take_mat(n + p, self.train.x.cols);
+        xj.set_block(0, 0, &self.train.x);
+        xj.set_block(n, 0, x_test);
+        let kj = match self.train_gram.get() {
+            Some(ktr) => {
+                let _sp = obs::span!("gp.joint_tiles n={n} p={p}");
+                let mut kj = arena::take_mat(n + p, n + p);
+                kj.set_block(0, 0, ktr.as_ref());
+                let kcross = match &self.gram {
+                    Some(g) => g.build(&self.train.x, x_test),
+                    None => self.kernel.gram(&self.train.x, x_test),
+                };
+                for i in 0..n {
+                    kj.row_mut(i)[n..n + p].copy_from_slice(kcross.row(i));
+                }
+                for j in 0..p {
+                    for i in 0..n {
+                        kj.set(n + j, i, kcross.at(i, j));
+                    }
+                }
+                let ktest = match &self.gram {
+                    Some(g) => g.build_sym(x_test),
+                    None => self.kernel.gram_sym(x_test),
+                };
+                kj.set_block(n, n, &ktest);
+                arena::give_mat(kcross);
+                arena::give_mat(ktest);
+                kj
+            }
+            None => {
+                let kj = match &self.gram {
+                    Some(g) => g.build_sym(&xj),
+                    None => self.kernel.gram_sym(&xj),
+                };
+                // Memoize the train×train block off this assembly (free:
+                // the entries were just evaluated) so later joint builds
+                // skip the O(n²) tile.
+                let mut ktr = Mat::zeros(n, n);
+                for i in 0..n {
+                    ktr.row_mut(i).copy_from_slice(&kj.row(i)[..n]);
+                }
+                let _ = self.train_gram.set(Arc::new(ktr));
+                kj
+            }
+        };
+        let f = factorize(&kj, Some(&xj), &self.config)?;
         // K_* block (n×p) for the mean formula (off-diagonal — the shift
-        // never touches it). Copied into an arena buffer so the joint gram
-        // and coordinates can be donated back immediately.
-        let mut kstar = arena::take_mat(n, p);
+        // never touches it). Copied out so the joint gram and coordinates
+        // can be donated back immediately. NOT arena-backed: cached
+        // entries outlive any worker scope.
+        let mut kstar = Mat::zeros(n, p);
         for i in 0..n {
             kstar.row_mut(i).copy_from_slice(&kj.row(i)[n..n + p]);
         }
         arena::give_mat(kj);
         arena::give_mat(xj);
         Ok((f, kstar))
+    }
+
+    /// The model fingerprint the predict cache scopes entries under:
+    /// training-set identity (n, dim, exact data bits), kernel
+    /// hyperparameter bits and the MKA config scope. σ² is deliberately
+    /// absent — entries are noise-free and served through `shifted`.
+    fn scope(&self) -> &[u64] {
+        self.cache_scope.get_or_init(|| {
+            let mut s = Vec::with_capacity(16);
+            s.push(self.train.n() as u64);
+            s.push(self.train.dim() as u64);
+            s.push(data_fingerprint(&self.train.x, &self.train.y));
+            s.extend(self.kernel.fingerprint());
+            s.extend(crate::train::mll::mka_scope(&self.config));
+            s
+        })
+    }
+
+    /// The cached joint factorization for `x_test` (built on miss).
+    /// Returns the **noise-free** entry plus whether this lookup hit —
+    /// consumers apply [`MkaFactor::shifted`] at the point of use.
+    fn joint_entry(&self, x_test: &Mat) -> Result<(Arc<JointEntry>, bool)> {
+        let (entry, hit) = self.predict_cache.get_or_build(self.scope(), x_test, || {
+            let (factor, kstar) = self.joint_noise_free(x_test)?;
+            Ok(JointEntry { x_test: x_test.clone(), factor, kstar })
+        })?;
+        if hit {
+            let p = x_test.rows;
+            let _sp = obs::span!("gp.predict_cache_hit p={p}");
+            obs::log!(
+                Debug,
+                "gp.predict_cache",
+                { "n" => self.train.n(), "p" => p },
+                "joint factor served from cache — zero factorizations"
+            );
+        }
+        Ok((entry, hit))
+    }
+
+    /// This model's joint-factor predict cache (shared across `retuned`
+    /// copies; fresh after any training-set change).
+    pub fn predict_cache(&self) -> &PredictCache {
+        &self.predict_cache
     }
 
     pub fn d_core(&self) -> usize {
@@ -335,6 +462,14 @@ impl MkaGp {
             gram: self.gram.clone(),
             train_factor: OnceLock::new(),
             floor_hits: Arc::clone(&self.floor_hits),
+            // The training set changed: every cached joint factor (and
+            // the memoized train gram) is stale. The updated model gets
+            // fresh, empty instances; the republish drops the old Arc —
+            // the scope-precise invalidation the sharded fleet rides
+            // (untouched shards go through `retuned` and keep theirs).
+            predict_cache: Arc::new(PredictCache::with_default_capacity()),
+            train_gram: OnceLock::new(),
+            cache_scope: OnceLock::new(),
         };
         let _ = m.train_factor.set(Ok(f));
         Ok((
@@ -436,7 +571,7 @@ impl GpModel for MkaGp {
         let n = self.train.n();
         let p = x_test.rows;
         let _sp = obs::span!("gp.predict n={n} p={p}");
-        let (f, kstar) = match self.factorize_joint(x_test) {
+        let (entry, _hit) = match self.joint_entry(x_test) {
             Ok(v) => v,
             Err(e) => {
                 // Degenerate fallback: predict the prior.
@@ -452,6 +587,10 @@ impl GpModel for MkaGp {
                 };
             }
         };
+        // The cached factor is noise-free; σ² enters here as the O(1)
+        // shift view — which is why a retune republish keeps entries hot.
+        let f = entry.factor.shifted(self.sigma2);
+        let kstar = &entry.kstar;
 
         // 𝒦⁻¹ (y; 0) → C y (test part). With the blocked-inverse identity
         // C = −D K_*ᵀ (K+σ²I)⁻¹, the GP mean is recovered as
@@ -519,7 +658,7 @@ impl GpModel for MkaGp {
         };
         arena::give_mat(sol);
         arena::give_mat(d_block);
-        arena::give_mat(kstar);
+        // `kstar` lives in the cache entry — never donated to the arena.
 
         // Mean: f̂ = −D⁻¹ (C y).
         let w = lu.solve(&cy);
@@ -580,6 +719,18 @@ impl GpModel for MkaGp {
                 .with(
                     "variance_floor_hits",
                     Json::Num(self.floor_hits.load(Ordering::Relaxed) as f64),
+                )
+                .with(
+                    "predict_cache",
+                    Json::obj()
+                        .with("capacity", Json::Num(self.predict_cache.capacity() as f64))
+                        .with("entries", Json::Num(self.predict_cache.len() as f64))
+                        .with("hits", Json::Num(self.predict_cache.hits() as f64))
+                        .with("misses", Json::Num(self.predict_cache.misses() as f64))
+                        .with(
+                            "evictions",
+                            Json::Num(self.predict_cache.evictions() as f64),
+                        ),
                 )
                 .with("factor", factor),
         )
@@ -985,5 +1136,130 @@ mod tests {
         let mka = MkaGp::fit(&data, &RbfKernel::new(1.0), 0.1, &config(8)).unwrap();
         assert_eq!(mka.name(), "MKA(d=8)");
         assert_eq!(mka.d_core(), 8);
+    }
+
+    /// Repeat predicts against the same test set hit the joint-factor
+    /// cache (instance miss counter pinned at 1 — each miss is exactly
+    /// one joint factorization) and the served bits are identical to the
+    /// cold path. Process-global `factorize_count` accounting lives in
+    /// the dedicated tests/predict_cache.rs suite, where tests serialize.
+    #[test]
+    fn repeat_predict_hits_cache_bitwise() {
+        let data = gp_dataset(&SynthSpec::named("t", 120, 2), 31);
+        let (tr, te) = data.split(0.85, 8);
+        let mka = MkaGp::fit(&tr, &RbfKernel::new(1.0), 0.1, &config(16)).unwrap();
+        let cold = mka.predict(&te.x);
+        assert_eq!(
+            (mka.predict_cache().hits(), mka.predict_cache().misses()),
+            (0, 1)
+        );
+        for round in 0..3 {
+            let hot = mka.predict(&te.x);
+            for i in 0..te.n() {
+                assert_eq!(hot.mean[i].to_bits(), cold.mean[i].to_bits(), "mean[{i}] r{round}");
+                assert_eq!(hot.var[i].to_bits(), cold.var[i].to_bits(), "var[{i}] r{round}");
+            }
+        }
+        assert_eq!(
+            (mka.predict_cache().hits(), mka.predict_cache().misses()),
+            (3, 1),
+            "repeat test sets must not refactorize"
+        );
+        // a different test set misses (and does not disturb the old entry)
+        let te2 = gp_dataset(&SynthSpec::named("q", 10, 2), 32);
+        let _ = mka.predict(&te2.x);
+        assert_eq!(mka.predict_cache().misses(), 2);
+        let _ = mka.predict(&te.x);
+        assert_eq!(mka.predict_cache().hits(), 4);
+    }
+
+    /// `retuned` shares the predict cache: after a σ²-only retune the
+    /// first predict against a warm test set is already a hit, and its
+    /// bits equal a fresh fit at the new σ² — the cached noise-free
+    /// factor plus `shifted` IS the cold path.
+    #[test]
+    fn retune_keeps_predict_cache_hot() {
+        let data = gp_dataset(&SynthSpec::named("t", 110, 2), 33);
+        let (tr, te) = data.split(0.85, 9);
+        let kern = RbfKernel::new(1.0);
+        let mka = MkaGp::fit(&tr, &kern, 0.1, &config(16)).unwrap();
+        let _ = mka.predict(&te.x); // warm the cache at σ²=0.1
+        let re = mka.retuned(0.3).unwrap();
+        let hits_before = re.predict_cache().hits();
+        let pr = re.predict(&te.x);
+        assert_eq!(re.predict_cache().hits(), hits_before + 1, "retune must not invalidate");
+        let fresh = MkaGp::fit(&tr, &kern, 0.3, &config(16)).unwrap();
+        let pf = fresh.predict(&te.x);
+        for i in 0..te.n() {
+            assert_eq!(pr.mean[i].to_bits(), pf.mean[i].to_bits(), "mean[{i}]");
+            assert_eq!(pr.var[i].to_bits(), pf.var[i].to_bits(), "var[{i}]");
+        }
+    }
+
+    /// `observed` changes the training set, so the updated model starts
+    /// with a fresh, empty cache — while the pre-update model keeps its
+    /// entries (the sharded fleet's untouched shards ride exactly this).
+    #[test]
+    fn observe_gets_a_fresh_cache() {
+        let data = gp_dataset(&SynthSpec::named("t", 100, 2), 34);
+        let (base, newer) = data.split(0.9, 4);
+        let te = gp_dataset(&SynthSpec::named("q", 12, 2), 35);
+        let mka = MkaGp::fit(&base, &RbfKernel::new(1.0), 0.1, &config(12)).unwrap();
+        let _ = mka.predict(&te.x);
+        assert_eq!(mka.predict_cache().len(), 1);
+        let (obs, _) = mka
+            .observed(&newer.x, &newer.y, &ObservePolicy::default())
+            .unwrap();
+        assert_eq!(obs.predict_cache().len(), 0, "stale entries must not survive observe");
+        assert_eq!(mka.predict_cache().len(), 1, "the old model keeps its entries");
+        // the updated model's first predict is a miss, then hits
+        let _ = obs.predict(&te.x);
+        let _ = obs.predict(&te.x);
+        assert_eq!((obs.predict_cache().hits(), obs.predict_cache().misses()), (1, 1));
+    }
+
+    /// Tiled joint assembly (memoized train gram + fresh cross/test
+    /// tiles) must be bit-identical to the full joint rebuild: force the
+    /// train factor (which memoizes the train gram) on one model, leave
+    /// the other cold, and compare predict bits.
+    #[test]
+    fn tiled_joint_assembly_matches_full_rebuild_bitwise() {
+        let data = gp_dataset(&SynthSpec::named("t", 130, 2), 36);
+        let (tr, te) = data.split(0.85, 10);
+        let kern = RbfKernel::new(0.9);
+        let tiled = MkaGp::fit(&tr, &kern, 0.1, &config(16)).unwrap();
+        tiled.train_factor().unwrap(); // memoizes the n×n train gram
+        assert!(tiled.train_gram.get().is_some());
+        let full = MkaGp::fit(&tr, &kern, 0.1, &config(16)).unwrap();
+        assert!(full.train_gram.get().is_none());
+        let pt = tiled.predict(&te.x);
+        let pf = full.predict(&te.x);
+        for i in 0..te.n() {
+            assert_eq!(pt.mean[i].to_bits(), pf.mean[i].to_bits(), "mean[{i}]");
+            assert_eq!(pt.var[i].to_bits(), pf.var[i].to_bits(), "var[{i}]");
+        }
+        // the cold model memoized its train gram off the joint assembly
+        assert!(full.train_gram.get().is_some());
+    }
+
+    /// `diagnose` carries the predict-cache section, and reading it
+    /// never builds anything.
+    #[test]
+    fn diagnose_reports_predict_cache() {
+        let data = gp_dataset(&SynthSpec::named("t", 60, 2), 37);
+        let (tr, te) = data.split(0.8, 11);
+        let mka = MkaGp::fit(&tr, &RbfKernel::new(1.0), 0.1, &config(12)).unwrap();
+        let d = mka.diagnose().unwrap();
+        let pc = d.get("predict_cache").expect("section present");
+        assert_eq!(pc.num_field("entries"), Some(0.0));
+        assert_eq!(pc.num_field("misses"), Some(0.0));
+        let _ = mka.predict(&te.x);
+        let _ = mka.predict(&te.x);
+        let pc = mka.diagnose().unwrap();
+        let pc = pc.get("predict_cache").unwrap();
+        assert_eq!(pc.num_field("entries"), Some(1.0));
+        assert_eq!(pc.num_field("hits"), Some(1.0));
+        assert_eq!(pc.num_field("misses"), Some(1.0));
+        assert_eq!(pc.num_field("evictions"), Some(0.0));
     }
 }

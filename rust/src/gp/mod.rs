@@ -18,6 +18,7 @@ pub mod cv;
 pub mod full;
 pub mod metrics;
 pub mod mka_gp;
+pub mod predict_cache;
 pub mod ridge;
 pub mod sharded;
 

@@ -1,0 +1,480 @@
+//! Bounded LRU over **noise-free** joint train/test factorizations — the
+//! predict-path twin of `train::cache::FactorCache`.
+//!
+//! `MkaGp::predict` is transductive: every batch factorizes the joint
+//! (n+p)² train/test gram (§4.1), which makes the factorization — MKA's
+//! one expensive step — a *per-request* cost under serving traffic. But
+//! the joint factor is a pure function of (training set, kernel
+//! hyperparameters, MKA config, test set): dashboards, grids and
+//! replayed queries re-ask the same test set against the same model, so
+//! the factor can be built once and served many times. This module keys
+//! that reuse on
+//!
+//! * a caller-supplied **scope** — the model fingerprint: training-set
+//!   identity (n, dim, data-bit hash), kernel hyperparameter bits
+//!   ([`crate::kernels::Kernel::fingerprint`]) and the MKA config scope
+//!   (the `train::mll::mka_scope` idiom) — and
+//! * the **test-set fingerprint** — shape plus an FNV-1a hash over the
+//!   exact f64 bit patterns of `x_test`.
+//!
+//! σ² is deliberately **absent** from the key: entries hold the
+//! noise-free factor (shift 0) and consumers take
+//! [`crate::mka::MkaFactor::shifted`] at the point of use, so a σ²-only
+//! `retune` republish keeps every entry hot (exact under the default
+//! shift-invariant pivot rules — see `mka::factor` for the SPCA /
+//! MaxCorrelation caveat, the same scoping as the train-side cache).
+//!
+//! Determinism: a 64-bit hash can collide, and serving the wrong factor
+//! would violate the bit-determinism contract silently — so every entry
+//! stores its full `x_test` and a lookup only hits when the stored bits
+//! match the query **exactly**. A hit therefore returns precisely what a
+//! rebuild would produce (entries are bit-deterministic functions of
+//! their key, fixed seeds all the way down), and cache-hit predictions
+//! are bitwise identical to the cold path. Racing builders follow the
+//! train-cache protocol: build outside the lock, first insert wins, the
+//! duplicate (bit-identical) build is dropped.
+
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::error::Result;
+use crate::la::dense::Mat;
+use crate::mka::MkaFactor;
+
+/// Process-wide traffic gauges, surfaced by the coordinator's `metrics`
+/// op as `compute.predict_cache_{hits,misses,evictions}`.
+static HITS: AtomicU64 = AtomicU64::new(0);
+static MISSES: AtomicU64 = AtomicU64::new(0);
+static EVICTIONS: AtomicU64 = AtomicU64::new(0);
+
+/// Total predict-cache hits (joint factorizations *not* re-run) across
+/// every model in this process.
+pub fn predict_cache_hits() -> u64 {
+    HITS.load(Ordering::Relaxed)
+}
+
+/// Total predict-cache misses (joint factorizations built) in this
+/// process.
+pub fn predict_cache_misses() -> u64 {
+    MISSES.load(Ordering::Relaxed)
+}
+
+/// Total entries displaced by the LRU bound (capacity pressure, not
+/// invalidation) in this process.
+pub fn predict_cache_evictions() -> u64 {
+    EVICTIONS.load(Ordering::Relaxed)
+}
+
+/// Default per-model capacity; `ServiceConfig.predict_cache_entries`
+/// overrides it at router construction (0 disables caching). Same
+/// process-wide last-writer-wins pattern as
+/// `train::cache::set_default_capacity`.
+static DEFAULT_CAPACITY: AtomicUsize = AtomicUsize::new(8);
+
+/// Set the process-wide default capacity new caches are created with.
+pub fn set_default_capacity(cap: usize) {
+    DEFAULT_CAPACITY.store(cap, Ordering::Relaxed);
+}
+
+/// The current process-wide default capacity.
+pub fn default_capacity() -> usize {
+    DEFAULT_CAPACITY.load(Ordering::Relaxed)
+}
+
+/// FNV-1a over a stream of u64 words — deterministic, allocation-free,
+/// and stable across platforms (explicit wrapping arithmetic).
+fn fnv1a_words(words: impl Iterator<Item = u64>) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for w in words {
+        for shift in [0u32, 8, 16, 24, 32, 40, 48, 56] {
+            h ^= (w >> shift) & 0xff;
+            h = h.wrapping_mul(0x0000_0100_0000_01b3);
+        }
+    }
+    h
+}
+
+/// The test-set fingerprint: shape plus the FNV-1a hash of the exact
+/// f64 bit patterns. Collisions are possible (64-bit hash) and are
+/// handled by the stored-matrix equality check on lookup.
+pub fn mat_fingerprint(m: &Mat) -> [u64; 3] {
+    [m.rows as u64, m.cols as u64, fnv1a_words(m.data.iter().map(|v| v.to_bits()))]
+}
+
+/// FNV-1a hash of a training set's exact bits — one word of the model
+/// fingerprint (scope), so two models over different data can never
+/// share an entry even if a cache instance were shared between them.
+pub fn data_fingerprint(x: &Mat, y: &[f64]) -> u64 {
+    fnv1a_words(
+        x.data
+            .iter()
+            .map(|v| v.to_bits())
+            .chain(y.iter().map(|v| v.to_bits())),
+    )
+}
+
+/// Exact bitwise equality of two matrices (shape + every f64 bit
+/// pattern). Plain `==` is not enough: it treats `-0.0 == 0.0` and
+/// `NaN != NaN`, either of which would let a hit diverge from the bits
+/// the cold path serves.
+fn bits_equal(a: &Mat, b: &Mat) -> bool {
+    a.rows == b.rows
+        && a.cols == b.cols
+        && a.data.iter().zip(&b.data).all(|(x, y)| x.to_bits() == y.to_bits())
+}
+
+/// One cached joint factorization: the **noise-free** joint factor
+/// (shift 0 — consumers take `shifted(σ²)`), the n×p `K_*` block the
+/// mean formula needs, and the exact test matrix the entry was built
+/// for (the collision guard).
+pub struct JointEntry {
+    /// The test inputs this entry answers — compared bit-for-bit on
+    /// every lookup.
+    pub x_test: Mat,
+    /// Noise-free joint factorization of [[K, K_*], [K_*ᵀ, K_test]].
+    pub factor: MkaFactor,
+    /// The n×p train×test covariance block.
+    pub kstar: Mat,
+}
+
+struct Slot {
+    key: Vec<u64>,
+    entry: Arc<JointEntry>,
+    tick: u64,
+}
+
+#[derive(Default)]
+struct Store {
+    slots: Vec<Slot>,
+    tick: u64,
+}
+
+/// A bounded LRU of [`JointEntry`]s. One instance per logical model:
+/// `MkaGp::retuned` shares the instance (`Arc`) so σ²-only republishes
+/// keep entries hot, while `observed`/refit/refresh paths build a fresh
+/// instance — the training set changed, so every held entry is stale.
+pub struct PredictCache {
+    cap: usize,
+    hits: AtomicU64,
+    misses: AtomicU64,
+    evictions: AtomicU64,
+    store: Mutex<Store>,
+}
+
+impl PredictCache {
+    /// A cache holding at most `cap` entries. `cap = 0` disables
+    /// storage: every lookup builds, nothing is kept — but builds still
+    /// count as instance misses so hit-rate reporting stays truthful.
+    /// The process-wide gauges skip disabled caches.
+    pub fn new(cap: usize) -> PredictCache {
+        PredictCache {
+            cap,
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+            evictions: AtomicU64::new(0),
+            store: Mutex::new(Store::default()),
+        }
+    }
+
+    /// A cache sized by the service-configurable process default.
+    pub fn with_default_capacity() -> PredictCache {
+        PredictCache::new(default_capacity())
+    }
+
+    /// A cache that never stores anything.
+    pub fn disabled() -> PredictCache {
+        PredictCache::new(0)
+    }
+
+    /// Capacity this instance was created with.
+    pub fn capacity(&self) -> usize {
+        self.cap
+    }
+
+    /// Entries currently held.
+    pub fn len(&self) -> usize {
+        self.store.lock().unwrap().slots.len()
+    }
+
+    /// True when no entries are held.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Hits observed by this instance (pollution-free, unlike the
+    /// process gauges).
+    pub fn hits(&self) -> u64 {
+        self.hits.load(Ordering::Relaxed)
+    }
+
+    /// Misses (= joint factorizations built) through this instance.
+    pub fn misses(&self) -> u64 {
+        self.misses.load(Ordering::Relaxed)
+    }
+
+    /// Entries this instance displaced under capacity pressure.
+    pub fn evictions(&self) -> u64 {
+        self.evictions.load(Ordering::Relaxed)
+    }
+
+    /// The joint entry for (`scope`, `x_test`), building it with
+    /// `build` on a miss. Returns the entry plus whether this lookup
+    /// was a hit. `scope` must encode everything besides the test set
+    /// that determines the factor (the model fingerprint); a hit
+    /// additionally requires the stored test matrix to equal `x_test`
+    /// bit-for-bit — a fingerprint collision is served as a miss, never
+    /// as the wrong factor.
+    pub fn get_or_build(
+        &self,
+        scope: &[u64],
+        x_test: &Mat,
+        build: impl FnOnce() -> Result<JointEntry>,
+    ) -> Result<(Arc<JointEntry>, bool)> {
+        if self.cap == 0 {
+            self.misses.fetch_add(1, Ordering::Relaxed);
+            return build().map(|e| (Arc::new(e), false));
+        }
+        let key = key_bits(scope, x_test);
+        {
+            let mut s = self.store.lock().unwrap();
+            s.tick += 1;
+            let tick = s.tick;
+            if let Some(slot) = s.slots.iter_mut().find(|sl| sl.key == key) {
+                if bits_equal(&slot.entry.x_test, x_test) {
+                    slot.tick = tick;
+                    self.hits.fetch_add(1, Ordering::Relaxed);
+                    HITS.fetch_add(1, Ordering::Relaxed);
+                    return Ok((Arc::clone(&slot.entry), true));
+                }
+                // Fingerprint collision: same key, different test bits.
+                // Fall through to a build; the insert below replaces the
+                // colliding slot (lookups always verify bits, so the
+                // replaced entry could never have answered this query).
+            }
+        }
+        // Build OUTSIDE the lock: concurrent predicts against other test
+        // sets must not serialize on this factorization. A failed build
+        // is not cached — the error propagates and a later lookup
+        // retries.
+        self.misses.fetch_add(1, Ordering::Relaxed);
+        MISSES.fetch_add(1, Ordering::Relaxed);
+        let built = Arc::new(build()?);
+        let mut s = self.store.lock().unwrap();
+        s.tick += 1;
+        let tick = s.tick;
+        if let Some(slot) = s.slots.iter_mut().find(|sl| sl.key == key) {
+            if bits_equal(&slot.entry.x_test, x_test) {
+                // Another thread built the same (bit-identical) entry
+                // first; keep the stored one and drop the duplicate.
+                slot.tick = tick;
+                return Ok((Arc::clone(&slot.entry), false));
+            }
+            // Collision slot: replace it (counted as an eviction — the
+            // old entry is displaced, not invalid).
+            self.evictions.fetch_add(1, Ordering::Relaxed);
+            EVICTIONS.fetch_add(1, Ordering::Relaxed);
+            slot.entry = Arc::clone(&built);
+            slot.tick = tick;
+            return Ok((built, false));
+        }
+        if s.slots.len() >= self.cap {
+            let lru = s
+                .slots
+                .iter()
+                .enumerate()
+                .min_by_key(|(_, sl)| sl.tick)
+                .map(|(i, _)| i)
+                .expect("non-empty at capacity");
+            crate::obs::log!(
+                Warn,
+                "gp.predict_cache",
+                { "capacity" => self.cap },
+                "predict cache full: displacing LRU joint factor — a repeat of its test set refactorizes"
+            );
+            self.evictions.fetch_add(1, Ordering::Relaxed);
+            EVICTIONS.fetch_add(1, Ordering::Relaxed);
+            s.slots.remove(lru);
+        }
+        s.slots.push(Slot { key, entry: Arc::clone(&built), tick });
+        Ok((built, false))
+    }
+
+    /// Drop every entry whose key starts with `prefix`, returning how
+    /// many were removed — the PR-9 `FactorCache::invalidate_scope`
+    /// pattern. Keys are `[scope…, test fingerprint…]`, so a prefix of
+    /// the model fingerprint evicts exactly that model's entries; an
+    /// empty prefix clears the cache. Entries still borrowed through an
+    /// `Arc` stay alive until the borrower drops them; they are only
+    /// unreachable for future lookups.
+    pub fn invalidate_scope(&self, prefix: &[u64]) -> usize {
+        let mut s = self.store.lock().unwrap();
+        let before = s.slots.len();
+        s.slots.retain(|sl| !sl.key.starts_with(prefix));
+        before - s.slots.len()
+    }
+}
+
+fn key_bits(scope: &[u64], x_test: &Mat) -> Vec<u64> {
+    let fp = mat_fingerprint(x_test);
+    scope.iter().copied().chain(fp.iter().copied()).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn entry(v: f64, x_test: &Mat) -> JointEntry {
+        JointEntry {
+            x_test: x_test.clone(),
+            factor: MkaFactor::new(1, vec![], Mat::from_rows(&[&[v]])),
+            kstar: Mat::zeros(1, x_test.rows),
+        }
+    }
+
+    fn xt(v: f64) -> Mat {
+        Mat::from_rows(&[&[v]])
+    }
+
+    #[test]
+    fn hit_and_miss_accounting() {
+        let c = PredictCache::new(4);
+        let x = xt(1.0);
+        let (a, hit) = c.get_or_build(&[7], &x, || Ok(entry(1.0, &x))).unwrap();
+        assert!(!hit);
+        assert_eq!((c.hits(), c.misses()), (0, 1));
+        let (b, hit) = c.get_or_build(&[7], &x, || panic!("must not rebuild on a hit")).unwrap();
+        assert!(hit);
+        assert_eq!((c.hits(), c.misses()), (1, 1));
+        assert!(Arc::ptr_eq(&a, &b), "hit must return the stored entry");
+        // a different test set is a different key
+        let x2 = xt(2.0);
+        let (_, hit) = c.get_or_build(&[7], &x2, || Ok(entry(2.0, &x2))).unwrap();
+        assert!(!hit);
+        assert_eq!((c.hits(), c.misses()), (1, 2));
+    }
+
+    #[test]
+    fn scope_isolates_entries() {
+        let c = PredictCache::new(4);
+        let x = xt(1.0);
+        let _ = c.get_or_build(&[1, 5], &x, || Ok(entry(1.0, &x))).unwrap();
+        let mut rebuilt = false;
+        let _ = c
+            .get_or_build(&[2, 5], &x, || {
+                rebuilt = true;
+                Ok(entry(2.0, &x))
+            })
+            .unwrap();
+        assert!(rebuilt, "same test set, different scope must not collide");
+        let (_, hit) = c.get_or_build(&[1, 5], &x, || panic!("scoped hit expected")).unwrap();
+        assert!(hit);
+    }
+
+    #[test]
+    fn signed_zero_and_shape_are_part_of_the_identity() {
+        let c = PredictCache::new(4);
+        let pos = xt(0.0);
+        let neg = xt(-0.0);
+        let _ = c.get_or_build(&[], &pos, || Ok(entry(1.0, &pos))).unwrap();
+        // -0.0 == 0.0 numerically, but the bits differ: must be a miss.
+        let (_, hit) = c.get_or_build(&[], &neg, || Ok(entry(2.0, &neg))).unwrap();
+        assert!(!hit, "-0.0 must not hit a 0.0 entry");
+        // 1×2 and 2×1 with the same data bits are different test sets.
+        let wide = Mat::from_vec(1, 2, vec![3.0, 4.0]);
+        let tall = Mat::from_vec(2, 1, vec![3.0, 4.0]);
+        let _ = c.get_or_build(&[], &wide, || Ok(entry(3.0, &wide))).unwrap();
+        let (_, hit) = c.get_or_build(&[], &tall, || Ok(entry(4.0, &tall))).unwrap();
+        assert!(!hit, "shape is part of the fingerprint");
+    }
+
+    #[test]
+    fn lru_evicts_least_recently_used_and_counts() {
+        let c = PredictCache::new(2);
+        let (x1, x2, x3) = (xt(1.0), xt(2.0), xt(3.0));
+        let _ = c.get_or_build(&[], &x1, || Ok(entry(1.0, &x1))).unwrap();
+        let _ = c.get_or_build(&[], &x2, || Ok(entry(2.0, &x2))).unwrap();
+        assert_eq!(c.evictions(), 0);
+        // touch x1 so x2 becomes LRU, then insert a third
+        let _ = c.get_or_build(&[], &x1, || panic!("hit")).unwrap();
+        let _ = c.get_or_build(&[], &x3, || Ok(entry(3.0, &x3))).unwrap();
+        assert_eq!(c.evictions(), 1, "one displacement at capacity");
+        assert_eq!(c.len(), 2);
+        let _ = c.get_or_build(&[], &x1, || panic!("x1 must still be cached")).unwrap();
+        let mut rebuilt = false;
+        let _ = c
+            .get_or_build(&[], &x2, || {
+                rebuilt = true;
+                Ok(entry(2.0, &x2))
+            })
+            .unwrap();
+        assert!(rebuilt, "x2 must have been evicted");
+    }
+
+    #[test]
+    fn disabled_cache_always_builds_and_counts_misses() {
+        let c = PredictCache::disabled();
+        let x = xt(1.0);
+        let mut builds = 0;
+        for _ in 0..3 {
+            let (_, hit) = c
+                .get_or_build(&[], &x, || {
+                    builds += 1;
+                    Ok(entry(1.0, &x))
+                })
+                .unwrap();
+            assert!(!hit);
+        }
+        assert_eq!(builds, 3);
+        assert_eq!((c.hits(), c.misses(), c.len()), (0, 3, 0));
+    }
+
+    #[test]
+    fn build_errors_are_not_cached() {
+        let c = PredictCache::new(2);
+        let x = xt(1.0);
+        let err = c.get_or_build(&[], &x, || Err(crate::error::Error::Linalg("boom".into())));
+        assert!(err.is_err());
+        let ok = c.get_or_build(&[], &x, || Ok(entry(1.0, &x)));
+        assert!(ok.is_ok());
+        assert_eq!(c.misses(), 2);
+    }
+
+    #[test]
+    fn invalidate_scope_evicts_only_the_prefix() {
+        let c = PredictCache::new(8);
+        let (xa, xb) = (xt(1.0), xt(2.0));
+        let _ = c.get_or_build(&[1, 9], &xa, || Ok(entry(1.0, &xa))).unwrap();
+        let _ = c.get_or_build(&[1, 9], &xb, || Ok(entry(2.0, &xb))).unwrap();
+        let _ = c.get_or_build(&[2, 9], &xa, || Ok(entry(3.0, &xa))).unwrap();
+        assert_eq!(c.invalidate_scope(&[1]), 2);
+        // scope 2 still hits…
+        let (_, hit) = c.get_or_build(&[2, 9], &xa, || panic!("scope 2 untouched")).unwrap();
+        assert!(hit);
+        // …scope 1 rebuilds
+        let mut rebuilt = false;
+        let _ = c
+            .get_or_build(&[1, 9], &xa, || {
+                rebuilt = true;
+                Ok(entry(1.0, &xa))
+            })
+            .unwrap();
+        assert!(rebuilt);
+        assert_eq!(c.invalidate_scope(&[99]), 0);
+        assert!(c.invalidate_scope(&[]) >= 2);
+        assert!(c.is_empty());
+    }
+
+    #[test]
+    fn fingerprints_are_deterministic_and_shape_sensitive() {
+        let a = Mat::from_vec(2, 2, vec![1.0, 2.0, 3.0, 4.0]);
+        let b = Mat::from_vec(2, 2, vec![1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(mat_fingerprint(&a), mat_fingerprint(&b));
+        let wide = Mat::from_vec(1, 4, vec![1.0, 2.0, 3.0, 4.0]);
+        assert_ne!(mat_fingerprint(&a), mat_fingerprint(&wide));
+        assert_ne!(
+            data_fingerprint(&a, &[1.0]),
+            data_fingerprint(&a, &[2.0]),
+            "targets are part of the training identity"
+        );
+    }
+}

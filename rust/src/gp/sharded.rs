@@ -552,6 +552,18 @@ impl GpModel for ShardedGp {
                 j
             })
             .collect();
+        // Fleet-wide predict-cache traffic: per-shard instance counters
+        // summed in shard-id order (each shard's own section sits under
+        // its `model` entry). Untouched-shard carry-over Arc-shares the
+        // cache, so these survive observe/retune republishes.
+        let (mut pc_entries, mut pc_hits, mut pc_misses, mut pc_evictions) = (0, 0, 0, 0);
+        for sh in &self.shards {
+            let pc = sh.model.predict_cache();
+            pc_entries += pc.len() as u64;
+            pc_hits += pc.hits();
+            pc_misses += pc.misses();
+            pc_evictions += pc.evictions();
+        }
         Some(
             Json::obj()
                 .with("kind", Json::Str("sharded".into()))
@@ -564,6 +576,14 @@ impl GpModel for ShardedGp {
                 .with(
                     "poe_fallbacks",
                     Json::Num(self.poe_fallbacks.load(Ordering::Relaxed) as f64),
+                )
+                .with(
+                    "predict_cache",
+                    Json::obj()
+                        .with("entries", Json::Num(pc_entries as f64))
+                        .with("hits", Json::Num(pc_hits as f64))
+                        .with("misses", Json::Num(pc_misses as f64))
+                        .with("evictions", Json::Num(pc_evictions as f64)),
                 )
                 .with("shards", Json::Arr(shards)),
         )
@@ -833,6 +853,60 @@ mod tests {
         // trait hook
         let boxed = fleet.refreshed().expect("supported").unwrap();
         assert_eq!(boxed.info().n, tr.n());
+    }
+
+    /// Observe invalidates exactly the touched shards' predict caches:
+    /// untouched shards are carried by `retuned` (Arc-shared cache, still
+    /// hot), touched shards get a fresh model with an empty cache.
+    #[test]
+    fn observe_invalidates_only_touched_shard_caches() {
+        let data = gp_dataset(&SynthSpec::named("shardpc", 180, 2), 41);
+        let (base, _) = data.split(0.9, 8);
+        let fleet =
+            ShardedGp::fit(&base, &RbfKernel::new(1.0), 0.1, &config(12), 3, ClusterMethod::KMeans)
+                .unwrap();
+        let k = fleet.n_shards();
+        // Warm every shard's cache: route each test point to 1 expert so
+        // per-shard sub-batches are stable, then repeat the predict.
+        let fleet = fleet.with_route_experts(1);
+        let te = gp_dataset(&SynthSpec::named("shardpc-te", 24, 2), 42);
+        fleet.predict(&te.x);
+        fleet.predict(&te.x);
+        let warm: Vec<usize> =
+            fleet.shards.iter().map(|sh| sh.model.predict_cache().len()).collect();
+        assert!(warm.iter().sum::<usize>() > 0, "warmup must cache joint factors");
+        // One new point lands in exactly one shard.
+        let xb = base.x.gather_rows(&[0]);
+        let (next, reports) = fleet
+            .observed(&xb, &[base.y[0]], &ObservePolicy::default())
+            .unwrap();
+        assert_eq!(reports.len(), 1, "a single point touches a single shard");
+        let touched = reports[0].0;
+        for s in 0..k {
+            let len = next.shards[s].model.predict_cache().len();
+            if s == touched {
+                assert_eq!(len, 0, "touched shard {s} must start cold");
+            } else {
+                assert_eq!(len, warm[s], "untouched shard {s} must keep its entries");
+            }
+        }
+        // A σ²-only retune keeps every shard hot.
+        let re = next.retuned(0.25).unwrap();
+        for s in 0..k {
+            assert_eq!(
+                re.shards[s].model.predict_cache().len(),
+                next.shards[s].model.predict_cache().len(),
+                "retune must not invalidate shard {s}"
+            );
+        }
+        // fleet diagnose aggregates the same counters
+        let d = fleet.diagnose().unwrap();
+        let pc = d.get("predict_cache").expect("aggregate section");
+        assert_eq!(
+            pc.num_field("entries"),
+            Some(warm.iter().sum::<usize>() as f64)
+        );
+        assert!(pc.num_field("hits").unwrap() >= 1.0);
     }
 
     #[test]

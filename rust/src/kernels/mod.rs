@@ -27,6 +27,18 @@ pub trait Kernel: Send + Sync {
     /// Human-readable name for logs and manifests.
     fn name(&self) -> String;
 
+    /// Cache-key words identifying this kernel *and* its hyperparameter
+    /// bits — one component of the predict-cache model fingerprint
+    /// (`gp::predict_cache`). Two kernels whose grams can differ on any
+    /// input must fingerprint differently. The default hashes the
+    /// display name (which embeds the parameters for every kernel
+    /// here); the hot serving kernels override with their exact
+    /// parameter bits so the fingerprint is collision-free, not just
+    /// collision-resistant.
+    fn fingerprint(&self) -> Vec<u64> {
+        vec![fnv1a_bytes(self.name().as_bytes())]
+    }
+
     /// Clone into a box (object-safe clone).
     fn boxed_clone(&self) -> Box<dyn Kernel>;
 
@@ -53,6 +65,17 @@ impl Clone for Box<dyn Kernel> {
     fn clone(&self) -> Self {
         self.boxed_clone()
     }
+}
+
+/// FNV-1a over raw bytes — the default [`Kernel::fingerprint`] hash
+/// (deterministic, std-only, stable across platforms).
+pub(crate) fn fnv1a_bytes(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
 }
 
 /// Gram assembly engages the pool above this many output entries (kernel
@@ -187,6 +210,13 @@ impl Kernel for RbfKernel {
         format!("rbf(l={}, sf2={})", self.lengthscale, self.signal_var)
     }
 
+    fn fingerprint(&self) -> Vec<u64> {
+        // Family tag + exact parameter bits: collision-free by
+        // construction (the tag keeps an RBF from ever sharing a scope
+        // with a one-dimensional ARD at the same ℓ).
+        vec![1, self.lengthscale.to_bits(), self.signal_var.to_bits()]
+    }
+
     fn boxed_clone(&self) -> Box<dyn Kernel> {
         Box::new(self.clone())
     }
@@ -285,6 +315,14 @@ impl Kernel for ArdRbfKernel {
 
     fn name(&self) -> String {
         format!("ard-rbf(l={:?}, sf2={})", self.lengthscales, self.signal_var)
+    }
+
+    fn fingerprint(&self) -> Vec<u64> {
+        let mut fp = Vec::with_capacity(2 + self.lengthscales.len());
+        fp.push(2);
+        fp.push(self.signal_var.to_bits());
+        fp.extend(self.lengthscales.iter().map(|l| l.to_bits()));
+        fp
     }
 
     fn boxed_clone(&self) -> Box<dyn Kernel> {
@@ -593,5 +631,35 @@ mod tests {
     fn by_name_lookup() {
         assert!(kernel_by_name("laplace", 1.0).name().starts_with("laplace"));
         assert!(kernel_by_name("rbf", 2.0).name().starts_with("rbf"));
+    }
+
+    /// Fingerprints separate kernels whose grams can differ — across
+    /// hyperparameters, across families, and (for ARD) across per-dim
+    /// length-scale vectors — and are stable for equal kernels.
+    #[test]
+    fn fingerprints_separate_kernels() {
+        let a = RbfKernel::new(1.0);
+        let b = RbfKernel::new(1.0);
+        assert_eq!(a.fingerprint(), b.fingerprint());
+        assert_ne!(a.fingerprint(), RbfKernel::new(1.5).fingerprint());
+        assert_ne!(
+            a.fingerprint(),
+            RbfKernel::with_signal(1.0, 2.0).fingerprint()
+        );
+        // family tags keep an RBF and a 1-D ARD at the same ℓ apart
+        assert_ne!(a.fingerprint(), ArdRbfKernel::isotropic(1.0, 1).fingerprint());
+        assert_ne!(
+            ArdRbfKernel::new(vec![1.0, 2.0]).fingerprint(),
+            ArdRbfKernel::new(vec![2.0, 1.0]).fingerprint()
+        );
+        // default (name-hash) path: distinct kernels, distinct words
+        assert_ne!(
+            LaplaceKernel::new(1.0).fingerprint(),
+            Matern32Kernel::new(1.0).fingerprint()
+        );
+        assert_ne!(
+            LaplaceKernel::new(1.0).fingerprint(),
+            LaplaceKernel::new(2.0).fingerprint()
+        );
     }
 }

@@ -1,0 +1,203 @@
+//! Predict-path joint-factor cache, end to end: bitwise hit/cold
+//! equivalence across thread counts, zero factorizations on warm repeat
+//! test sets, retune keeping entries hot, observe invalidating exactly
+//! the touched shard, and LRU eviction accounting that reconciles with
+//! the served metrics.
+
+mod common;
+
+use std::sync::Mutex;
+
+use common::*;
+use mka_gp::gp::mka_gp::MkaGp;
+use mka_gp::gp::GpModel;
+use mka_gp::kernels::RbfKernel;
+use mka_gp::util::Json;
+
+/// Serializes the suite: these tests assert on process-global tallies
+/// (`mka::factorize_count`, the cache counters) that concurrent test
+/// threads in this binary would otherwise perturb.
+static GLOBAL: Mutex<()> = Mutex::new(());
+
+fn guard() -> std::sync::MutexGuard<'static, ()> {
+    GLOBAL.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+fn bits_eq(a: &[f64], b: &[f64]) -> bool {
+    a.len() == b.len() && a.iter().zip(b).all(|(x, y)| x.to_bits() == y.to_bits())
+}
+
+/// A cache hit serves exactly the bits the cold path computed — at 1, 2
+/// and 4 factorization threads — and the instance counters account for
+/// every lookup.
+#[test]
+fn cache_hit_is_bitwise_identical_across_thread_counts() {
+    let _g = guard();
+    let tr = synth("pc-threads", 140, 2, 7);
+    let te = synth("pc-threads-test", 9, 2, 8);
+    for threads in [1usize, 2, 4] {
+        let cfg = small_cfg(threads);
+        let model = MkaGp::fit(&tr, &RbfKernel::new(0.9), SIGMA2, &cfg).unwrap();
+        let cold = model.predict(&te.x);
+        for _ in 0..2 {
+            let hot = model.predict(&te.x);
+            assert!(bits_eq(&cold.mean, &hot.mean), "mean drifted at {threads} threads");
+            assert!(bits_eq(&cold.var, &hot.var), "var drifted at {threads} threads");
+        }
+        assert_eq!(model.predict_cache().misses(), 1, "{threads} threads");
+        assert_eq!(model.predict_cache().hits(), 2, "{threads} threads");
+    }
+}
+
+/// Repeat-test-set serving through the protocol: after the first
+/// (cold) predict, identical requests add zero factorizations and
+/// answer with identical JSON.
+#[test]
+fn repeat_predicts_add_zero_factorizations() {
+    let _g = guard();
+    let r = test_router();
+    let data = synth("pc-flat", 120, 2, 3);
+    assert_ok(&r.handle(&fit_json("pf", "mka", &data, 16)));
+    let rows: Vec<&[f64]> = vec![&[0.1, -0.2], &[0.5, 0.4], &[-0.3, 0.0]];
+    let first = r.handle(&predict_json("pf", &rows));
+    assert_ok(&first);
+    let before = mka_gp::mka::factorize_count();
+    for _ in 0..5 {
+        let again = r.handle(&predict_json("pf", &rows));
+        assert_ok(&again);
+        assert_eq!(again.get("mean"), first.get("mean"));
+        assert_eq!(again.get("var"), first.get("var"));
+    }
+    assert_eq!(mka_gp::mka::factorize_count(), before, "warm predicts must not factorize");
+}
+
+/// A σ²-only retune republishes with the cache still hot: the first
+/// predict after `{"op":"retune"}` is a hit (no factorization), visible
+/// through the diagnose section.
+#[test]
+fn retune_keeps_cache_entries_hot() {
+    let _g = guard();
+    let r = test_router();
+    let data = synth("pc-retune", 110, 2, 5);
+    assert_ok(&r.handle(&fit_json("pr", "mka", &data, 16)));
+    let rows: Vec<&[f64]> = vec![&[0.2, 0.1], &[-0.4, 0.3]];
+    assert_ok(&r.handle(&predict_json("pr", &rows)));
+    let retune = Json::obj()
+        .with("op", Json::Str("retune".into()))
+        .with("model", Json::Str("pr".into()))
+        .with("sigma2", Json::Num(0.23));
+    assert_ok(&r.handle(&retune));
+    let before = mka_gp::mka::factorize_count();
+    assert_ok(&r.handle(&predict_json("pr", &rows)));
+    assert_eq!(
+        mka_gp::mka::factorize_count(),
+        before,
+        "retuned model must serve from the shared cache"
+    );
+    let d = r.handle(&Json::parse(r#"{"op":"diagnose","model":"pr"}"#).unwrap());
+    assert_ok(&d);
+    let pc = d.get("diagnose").unwrap().get("predict_cache").expect("predict_cache section");
+    assert_eq!(pc.num_field("entries"), Some(1.0));
+    assert!(pc.num_field("hits").unwrap() >= 1.0, "{pc:?}");
+}
+
+/// Observe on a sharded fleet invalidates exactly the touched shard's
+/// cache entries; untouched shards keep theirs (Arc-shared through the
+/// carry-over), all read per shard from the diagnose tree.
+#[test]
+fn observe_invalidates_exactly_the_touched_shard() {
+    let _g = guard();
+    let r = test_router();
+    let data = synth("pc-shard", 150, 2, 11);
+    assert_ok(&r.handle(&fit_json("ps", "mka", &data, 16).with("shards", Json::Num(3.0))));
+    // Warm the routed shards with a spread of training rows.
+    let rows: Vec<&[f64]> = (0..12).map(|i| data.x.row(i)).collect();
+    assert_ok(&r.handle(&predict_json("ps", &rows)));
+    let per_shard = |d: &Json| -> Vec<(usize, f64)> {
+        d.get("diagnose")
+            .unwrap()
+            .get("shards")
+            .unwrap()
+            .as_arr()
+            .unwrap()
+            .iter()
+            .map(|s| {
+                (
+                    s.num_field("shard").unwrap() as usize,
+                    s.get("model")
+                        .unwrap()
+                        .get("predict_cache")
+                        .expect("per-shard predict_cache")
+                        .num_field("entries")
+                        .unwrap(),
+                )
+            })
+            .collect()
+    };
+    let diag = |r: &mka_gp::coordinator::Router| {
+        r.handle(&Json::parse(r#"{"op":"diagnose","model":"ps"}"#).unwrap())
+    };
+    let warm = per_shard(&diag(&r));
+    assert!(warm.iter().map(|(_, n)| n).sum::<f64>() >= 1.0, "warmup populated no shard cache");
+    let out = r.handle(&observe_json("ps", &[&[0.05, -0.02]], &[0.3]));
+    assert_ok(&out);
+    let rep = out.get("observe").unwrap();
+    assert_eq!(rep.num_field("shards_touched"), Some(1.0));
+    let touched =
+        rep.get("shards").unwrap().as_arr().unwrap()[0].num_field("shard").unwrap() as usize;
+    let after = per_shard(&diag(&r));
+    for ((s, warm_n), (s2, after_n)) in warm.iter().zip(&after) {
+        assert_eq!(s, s2);
+        if *s == touched {
+            assert_eq!(*after_n, 0.0, "touched shard {s} must drop its entries");
+        } else {
+            assert_eq!(after_n, warm_n, "untouched shard {s} must keep its entries");
+        }
+    }
+}
+
+/// Overflowing the bounded cache evicts LRU entries whose count
+/// reconciles exactly with the instance misses (`entries + evictions ==
+/// misses`), and the service metrics surface the same traffic plus the
+/// cached/cold/queue-wait latency histograms.
+#[test]
+fn lru_eviction_accounting_reconciles_with_metrics() {
+    let _g = guard();
+    let r = test_router();
+    let data = synth("pc-lru", 100, 2, 13);
+    assert_ok(&r.handle(&fit_json("pl", "mka", &data, 16)));
+    // 10 distinct single-row test sets overflow the 8-entry default.
+    for i in 0..10 {
+        let row = [i as f64 * 0.07, -0.1];
+        let rows: Vec<&[f64]> = vec![&row];
+        assert_ok(&r.handle(&predict_json("pl", &rows)));
+    }
+    // Repeating the most recent test set is a hit.
+    let row = [9.0 * 0.07, -0.1];
+    let rows: Vec<&[f64]> = vec![&row];
+    assert_ok(&r.handle(&predict_json("pl", &rows)));
+    let d = r.handle(&Json::parse(r#"{"op":"diagnose","model":"pl"}"#).unwrap());
+    assert_ok(&d);
+    let pc = d.get("diagnose").unwrap().get("predict_cache").unwrap();
+    assert_eq!(pc.num_field("capacity"), Some(8.0));
+    assert_eq!(pc.num_field("entries"), Some(8.0));
+    assert_eq!(pc.num_field("misses"), Some(10.0));
+    assert_eq!(pc.num_field("evictions"), Some(2.0));
+    assert_eq!(pc.num_field("hits"), Some(1.0));
+    // Conservation: every miss either still resides or was evicted.
+    assert_eq!(
+        pc.num_field("entries").unwrap() + pc.num_field("evictions").unwrap(),
+        pc.num_field("misses").unwrap()
+    );
+    // Service-level counters cover the instance tallies, and the batcher
+    // split the served latencies by cache outcome.
+    let m = r.handle(&Json::parse(r#"{"op":"metrics"}"#).unwrap());
+    let compute = m.get("compute").unwrap();
+    assert!(compute.num_field("predict_cache_misses").unwrap() >= 10.0);
+    assert!(compute.num_field("predict_cache_hits").unwrap() >= 1.0);
+    assert!(compute.num_field("predict_cache_evictions").unwrap() >= 2.0);
+    let hists = m.get("histograms").unwrap();
+    assert!(hists.get("op.predict_queue_secs").is_some(), "queue wait always recorded");
+    assert!(hists.get("op.predict_cold_secs").is_some(), "misses land in the cold histogram");
+    assert!(hists.get("op.predict_cached_secs").is_some(), "the hit lands in the cached histogram");
+}

@@ -77,6 +77,7 @@ const FIELDS: &[&str] = &[
     "lengthscale",
     "k",
     "shards",
+    "batch_window_ms",
     "async",
     "job_id",
     "selection",
@@ -105,7 +106,7 @@ fn skeletons() -> Vec<(&'static str, Json)> {
     );
     vec![
         ("ping", op("ping")),
-        ("fit", fit_json("fz", "mka", &data, 2)),
+        ("fit", fit_json("fz", "mka", &data, 2).with("batch_window_ms", Json::Num(0.0))),
         ("train", train),
         ("job", op("job").with("job_id", Json::Num(1.0))),
         ("predict", predict_json("fz", &[&[0.25], &[0.75]])),
@@ -210,6 +211,16 @@ fn fuzz_every_op_family_yields_typed_errors_and_no_poisoned_state() {
                     let msg = resp.str_field("error").unwrap_or("");
                     assert!(!msg.is_empty(), "{family}[{it}]: untyped failure for {req:?}");
                     if resp.get("busy") == Some(&Json::Bool(true)) {
+                        // Busy responses have a fixed shape: a backoff
+                        // hint and the queue depth they were shed at.
+                        assert!(
+                            resp.num_field("retry_after_ms").unwrap_or(0.0) >= 1.0,
+                            "{family}[{it}]: busy without retry_after_ms: {resp:?}"
+                        );
+                        assert!(
+                            resp.num_field("depth").is_some(),
+                            "{family}[{it}]: busy without depth: {resp:?}"
+                        );
                         busy += 1;
                     } else {
                         failures += 1;
